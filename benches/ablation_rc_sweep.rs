@@ -1,0 +1,83 @@
+//! Extension ablation (beyond the paper's tables): recycle-bin size sweep
+//! and batch-width scaling.
+//!
+//! RC_size is HAE's main decode-stage knob (paper Table 5 sets 56/128
+//! per task without justification). The sweep shows the trade-off: small
+//! bins approach greedy H2O (frequent flushes, more decisions), large bins
+//! approach no-eviction (bigger caches, slower steps but fewer decisions).
+//! The batch section checks the continuous batcher scales decode
+//! throughput across compiled batch widths.
+
+use hae_serve::cache::PolicyKind;
+use hae_serve::harness::*;
+use hae_serve::workload::RequestBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n(6);
+    let rt = load_runtime()?;
+    let meta = rt.meta().clone();
+    let batches = rt.manifest.shapes.decode_batches.clone();
+    let grammar = load_grammar(&artifact_dir());
+    drop(rt);
+
+    let mut builder = RequestBuilder::new(&meta, &grammar, 909);
+    let requests: Vec<_> = (0..n).map(|_| builder.story(3, 12, 160)).collect();
+
+    let mut table = Table::new(
+        &format!("RC_size sweep — HAE decode stage, {} story episodes", n),
+        &["RC_size", "s/sample", "Top1-agree", "mean live KV KiB", "Decisions"],
+    );
+    for rc in [4usize, 8, 16, 24, 48, 96] {
+        let kind = PolicyKind::parse(&format!("hae:rc={}", rc)).unwrap();
+        let mut engine = engine_for(kind.clone(), 1, false)?;
+        let run = run_policy(&mut engine, requests.clone())?;
+        let k = run.finished.len() as f64;
+        let mean_kv: f64 = run
+            .finished
+            .iter()
+            .map(|ar| ar.stats.mean_kv_bytes() / 1024.0)
+            .sum::<f64>()
+            / k;
+        let decisions: u64 = run.finished.iter().map(|ar| ar.stats.decisions).sum::<u64>()
+            / run.finished.len() as u64;
+        let fids = fidelity_vs_full(kind, &requests[..2])?;
+        let f = mean_fidelity(&fids);
+        table.row(vec![
+            format!("{}", rc),
+            f3(run.wall_s / k),
+            pct(f.top1_agreement),
+            f2(mean_kv),
+            format!("{}", decisions),
+        ]);
+    }
+    table.print();
+
+    let mut t2 = Table::new(
+        "Batch-width scaling — HAE, story workload",
+        &["batch", "wall s", "tok/s", "mean step cap"],
+    );
+    for &b in &batches {
+        let mut engine = engine_for(PolicyKind::hae_default(), b, false)?;
+        engine.rt.warmup(&[b])?;
+        let reqs: Vec<_> = (0..b * 3)
+            .map(|_| {
+                let mut bb = RequestBuilder::new(&meta, &grammar, 1000 + b as u64);
+                bb.story(3, 12, 120)
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let (finished, reports) = engine.run_batched(reqs)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let toks: usize = finished.iter().map(|ar| ar.generated.len()).sum();
+        let mean_cap: f64 = reports.iter().map(|r| r.capacity as f64).sum::<f64>()
+            / reports.len().max(1) as f64;
+        t2.row(vec![
+            format!("{}", b),
+            f3(wall),
+            f2(toks as f64 / wall),
+            f2(mean_cap),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Paper Fig. 5 (+ §4.4) — broadcast coverage: do layer-0 DAP eviction
+//! decisions coincide with per-layer decisions?
+//!
+//! For a sweep of r thresholds, computes each layer's own DAP evict set
+//! from that layer's column statistics and reports
+//! |evict₀ ∩ evict_l| / |evict₀|. The paper finds ≥80–90% coverage at the
+//! chosen threshold, justifying index broadcasting.
+
+use hae_serve::cache::hae::Hae;
+use hae_serve::harness::*;
+use hae_serve::model::vocab;
+use hae_serve::workload::{RequestBuilder, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n(30);
+    let rt = load_runtime()?;
+    let meta = rt.meta().clone();
+    let grammar = load_grammar(&artifact_dir());
+    let mut builder = RequestBuilder::new(&meta, &grammar, 707);
+
+    let bucket = *rt.manifest.shapes.analysis_buckets.first().unwrap();
+    // r sweep around the calibrated default (uniform share = 1/16); the
+    // paper sweeps 0.001/0.0012/0.0015/0.002 around its 576-token share.
+    let r_values = [0.04f32, 0.05, 0.0625, 0.08];
+    let alpha = 0.1f32;
+
+    // coverage[r][layer] accumulators
+    let mut cov = vec![vec![0.0f64; meta.n_layers]; r_values.len()];
+    let mut cov_n = vec![vec![0usize; meta.n_layers]; r_values.len()];
+
+    for i in 0..n {
+        let kind = if i % 2 == 0 { WorkloadKind::Understanding } else { WorkloadKind::Mixed };
+        let req = builder.make(kind);
+        if req.prompt_len() > bucket {
+            continue;
+        }
+        let mut ids = req.ids.clone();
+        ids.resize(bucket, vocab::PAD);
+        let mut patches = req.patches.clone();
+        patches.resize(bucket * meta.patch_dim, 0.0);
+        let mut isv: Vec<f32> =
+            req.is_vision.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        isv.resize(bucket, 0.0);
+        let (out, _) = rt.analysis(bucket, &ids, &patches, &isv, req.prompt_len())?;
+        let mut is_vision = req.is_vision.clone();
+        is_vision.resize(bucket, false);
+
+        for (ri, &r) in r_values.iter().enumerate() {
+            let evict0: std::collections::BTreeSet<usize> = Hae::dap_evict_set(
+                out.layer_colsum(0),
+                out.layer_colmax(0),
+                &is_vision,
+                req.prompt_len(),
+                r,
+                alpha,
+                None,
+            )
+            .into_iter()
+            .collect();
+            if evict0.is_empty() {
+                continue;
+            }
+            for l in 0..meta.n_layers {
+                let evict_l: std::collections::BTreeSet<usize> = Hae::dap_evict_set(
+                    out.layer_colsum(l),
+                    out.layer_colmax(l),
+                    &is_vision,
+                    req.prompt_len(),
+                    r,
+                    alpha,
+                    None,
+                )
+                .into_iter()
+                .collect();
+                let inter = evict0.intersection(&evict_l).count();
+                cov[ri][l] += inter as f64 / evict0.len() as f64;
+                cov_n[ri][l] += 1;
+            }
+        }
+    }
+
+    let mut headers: Vec<String> = vec!["r".to_string()];
+    headers.extend((0..meta.n_layers).map(|l| format!("layer {}", l)));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!("Fig. 5 — layer-0 eviction coverage at other layers ({} samples)", n),
+        &header_refs,
+    );
+    for (ri, &r) in r_values.iter().enumerate() {
+        let mut row = vec![format!("{}", r)];
+        for l in 0..meta.n_layers {
+            let c = if cov_n[ri][l] == 0 { 0.0 } else { cov[ri][l] / cov_n[ri][l] as f64 };
+            row.push(pct(c));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!("\npaper shape: coverage ≥80% at every layer for well-chosen r \
+              (paper: 90.43% average at its best threshold) — broadcasting \
+              layer-0 indices is safe. Layer 0 column is 100% by definition.");
+    Ok(())
+}

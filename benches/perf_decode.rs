@@ -1,0 +1,97 @@
+//! §Perf — decode hot-path breakdown.
+//!
+//! Measures per-step time split into host-side batch assembly (coordinator),
+//! host→device upload, PJRT execute and device→host readback, per capacity
+//! bucket and batch width. This is the profile that drives the EXPERIMENTS.md
+//! §Perf iteration log.
+
+use std::time::Instant;
+
+use hae_serve::cache::PolicyKind;
+use hae_serve::harness::*;
+use hae_serve::workload::RequestBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let steps = bench_n(200);
+    let rt = load_runtime()?;
+    let meta = rt.meta().clone();
+    let caps = rt.manifest.shapes.decode_capacities.clone();
+    let batches = rt.manifest.shapes.decode_batches.clone();
+    let grammar = load_grammar(&artifact_dir());
+    drop(rt);
+
+    let mut table = Table::new(
+        &format!("decode step breakdown ({} steps per cell)", steps),
+        &["batch", "capacity", "assemble µs", "upload µs", "execute µs",
+          "download µs", "host-post µs", "step µs", "tok/s"],
+    );
+
+    for &b in &batches {
+        for &c in &caps {
+            let mut engine = engine_for(PolicyKind::Full, b, false)?;
+            engine.rt.warmup(&[b])?;
+            // build b requests whose caches sit just under capacity bucket c
+            let prev_cap = caps.iter().filter(|&&x| x < c).max().copied().unwrap_or(0);
+            let target_len = (prev_cap + c) / 2; // mid-bucket
+            let mut builder = RequestBuilder::new(&meta, &grammar, 4242);
+            let mut lanes = Vec::new();
+            for _ in 0..b {
+                let mut req = builder.story(3, 12, 500);
+                req.min_new_tokens = 480;
+                let mut ar = engine.prefill(req)?;
+                // grow the cache to the target length
+                while ar.slab.len() < target_len && !ar.done {
+                    let mut ls = [&mut ar];
+                    engine.decode_step(&mut ls)?;
+                }
+                lanes.push(ar);
+            }
+            // measure steady-state steps, evicting back to target each step
+            // so the bucket stays fixed
+            let mut assemble = 0.0;
+            let mut upload = 0.0;
+            let mut execute = 0.0;
+            let mut download = 0.0;
+            let mut host_post = 0.0;
+            let t_all = Instant::now();
+            let mut done_steps = 0;
+            for _ in 0..steps {
+                for ar in lanes.iter_mut() {
+                    if ar.slab.len() > target_len {
+                        let extra: Vec<usize> =
+                            (0..ar.slab.len() - target_len).collect();
+                        ar.slab.evict(&extra);
+                    }
+                    ar.done = false;
+                }
+                let mut refs: Vec<&mut _> = lanes.iter_mut().collect();
+                let t0 = Instant::now();
+                let rep = engine.decode_step(&mut refs)?;
+                let step_total = t0.elapsed().as_secs_f64();
+                // StepReport: coord_s covers assemble+post; timing covers PJRT
+                assemble += rep.coord_s; // assembly + host post-processing
+                let (u, e, d) = engine.last_timing();
+                upload += u;
+                execute += e;
+                download += d;
+                host_post += step_total - rep.coord_s - (u + e + d);
+                done_steps += 1;
+            }
+            let wall = t_all.elapsed().as_secs_f64();
+            let n = done_steps as f64;
+            table.row(vec![
+                format!("{}", b),
+                format!("{}", c),
+                format!("{:.0}", assemble / n * 1e6),
+                format!("{:.0}", upload / n * 1e6),
+                format!("{:.0}", execute / n * 1e6),
+                format!("{:.0}", download / n * 1e6),
+                format!("{:.0}", host_post / n * 1e6),
+                format!("{:.0}", wall / n * 1e6),
+                format!("{:.0}", (b as f64) * n / wall),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Paper Table 4 — video understanding (TGIF/MSVD/MSRVT stand-in).
+//!
+//! Multi-frame QA where the question references the LAST frame, so a
+//! policy that indiscriminately prunes visual tokens across frames loses
+//! the referent. Expected shape: HAE within a fraction of a point of the
+//! best baseline (paper: HAE 57.8 avg vs MustDrop 58.1 vs Video-LLaVA
+//! 58.2 full).
+
+use hae_serve::cache::{PolicyKind, PAPER_RETAIN_RATIO};
+use hae_serve::harness::*;
+use hae_serve::workload::RequestBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n(32);
+    let rt = load_runtime()?;
+    let meta = rt.meta().clone();
+    let grammar = load_grammar(&artifact_dir());
+    drop(rt);
+
+    // 4-frame "videos" (64 visual tokens per request)
+    let mut builder = RequestBuilder::new(&meta, &grammar, 404);
+    let requests: Vec<_> = (0..n).map(|_| builder.video(4)).collect();
+
+    let policies: Vec<PolicyKind> = vec![
+        PolicyKind::Full,
+        PolicyKind::SparseVlm { retain_ratio: PAPER_RETAIN_RATIO },
+        PolicyKind::FastV { retain_ratio: PAPER_RETAIN_RATIO },
+        PolicyKind::parse("mustdrop").unwrap(),
+        PolicyKind::hae_default(),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 4 — video QA, {} samples × 4 frames", n),
+        &["Method", "Acc", "Top1-agree", "meanKL", "VisKept", "ms/req"],
+    );
+
+    for kind in policies {
+        let mut engine = engine_for(kind.clone(), 1, false)?;
+        let run = run_policy(&mut engine, requests.clone())?;
+        let acc = answer_accuracy(&run.finished);
+        let fids = fidelity_vs_full(kind.clone(), &requests)?;
+        let f = mean_fidelity(&fids);
+        let vis_kept: f64 = run
+            .finished
+            .iter()
+            .map(|ar| (ar.stats.vision_tokens - ar.stats.pruned_at_prefill) as f64)
+            .sum::<f64>()
+            / run.finished.len() as f64;
+        table.row(vec![
+            run.label,
+            pct(acc),
+            pct(f.top1_agreement),
+            f4(f.mean_kl),
+            f2(vis_kept),
+            f2(run.wall_s * 1000.0 / n as f64),
+        ]);
+    }
+    table.print();
+    println!("\npaper shape: HAE within ~0.5pt of the best compression \
+              baseline; adaptive thresholds preserve the referenced frame's \
+              informative patches.");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Theorem 2.1 / Corollary 2.1 — executable theory checks on real traces.
+//!
+//! * Thm 2.1: fit the decay rate λ from measured per-step slot scores on
+//!   story runs, compute the k bound for a sweep of ε, and verify the
+//!   worst-case loss relation.
+//! * Cor 2.1: run the same story requests under DDES (HAE decode stage)
+//!   and greedy (H2O) with teacher forcing on the same scripts, and compare
+//!   realized eviction losses — DDES ≤ greedy is the corollary's claim.
+
+use hae_serve::attention::decay_rate_fit;
+use hae_serve::cache::PolicyKind;
+use hae_serve::harness::*;
+use hae_serve::theory;
+use hae_serve::workload::RequestBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n(6);
+    let rt = load_runtime()?;
+    let meta = rt.meta().clone();
+    let grammar = load_grammar(&artifact_dir());
+    drop(rt);
+
+    let mut builder = RequestBuilder::new(&meta, &grammar, 808);
+    let requests: Vec<_> = (0..n).map(|_| builder.story(3, 12, 120)).collect();
+
+    // reference scripts + per-step score traces (greedy full cache)
+    let mut reference = engine_for(PolicyKind::Full, 1, false)?;
+    reference.cfg.capture_scores = true;
+    let mut scripts = Vec::new();
+    for req in &requests {
+        let ar = reference.generate(req.clone())?;
+        scripts.push((ar.generated.clone(), ar.score_trace));
+    }
+
+    // --- decay-rate fit (Thm 2.1 input) --------------------------------
+    // mean last_score over the cache as a function of step on full-cache
+    // runs approximates S(t): each slot's per-step mass dilutes as the
+    // context grows.
+    let mut series = Vec::new();
+    {
+        let mut engine = engine_for(PolicyKind::Full, 1, false)?;
+        let mut ar = engine.prefill(requests[0].clone())?;
+        while !ar.done {
+            let mean_last: f64 = ar
+                .slab
+                .meta()
+                .iter()
+                .map(|m| m.last_score as f64)
+                .sum::<f64>()
+                / ar.slab.len().max(1) as f64;
+            if ar.stats.steps > 0 {
+                series.push(mean_last);
+            }
+            let mut lanes = [&mut ar];
+            engine.decode_step(&mut lanes)?;
+        }
+    }
+    let lambda = decay_rate_fit(&series);
+    println!("fitted decay rate λ = {:.4} over {} steps", lambda, series.len());
+
+    let attn_max = series.iter().cloned().fold(0.0f64, f64::max);
+    let mut t1 = Table::new(
+        "Theorem 2.1 — eviction threshold k(ε) under the fitted decay model",
+        &["ε", "k bound", "worst-case loss at k", "< ε?"],
+    );
+    for eps in [0.01, 0.005, 0.001, 0.0005] {
+        match theory::integrity_bound(eps, attn_max, lambda) {
+            Some(k) => {
+                let loss = theory::worst_case_loss(attn_max, lambda, k.ceil());
+                t1.row(vec![
+                    format!("{}", eps),
+                    f2(k),
+                    format!("{:.6}", loss),
+                    format!("{}", loss <= eps + 1e-12),
+                ]);
+            }
+            None => t1.row(vec![
+                format!("{}", eps),
+                "vacuous".into(),
+                "-".into(),
+                "true".into(),
+            ]),
+        }
+    }
+    t1.print();
+
+    // --- Corollary 2.1: DDES vs greedy realized loss --------------------
+    let mut t2 = Table::new(
+        "Corollary 2.1 — per-eviction FORWARD loss (mass the victim would \
+         still have received, from the full-cache trace): DDES vs greedy",
+        &["episode", "DDES fwd", "greedy fwd", "DDES ≤ greedy", "DDES evicts", "greedy evicts"],
+    );
+    let mut holds = 0usize;
+    for (i, (req, (script, ref_trace))) in requests.iter().zip(&scripts).enumerate() {
+        let mut ddes_engine =
+            engine_for(PolicyKind::parse("hae:stage=decode").unwrap(), 1, false)?;
+        let ddes = ddes_engine.generate_forced(req.clone(), script)?;
+        let mut greedy_engine = engine_for(PolicyKind::parse("h2o").unwrap(), 1, false)?;
+        let greedy = greedy_engine.generate_forced(req.clone(), script)?;
+        // forward loss: what the evicted positions would have earned had
+        // they stayed — Corollary 2.1's ε_i (eviction without urgency
+        // picks tokens whose future relevance is lower)
+        let dl = theory::forward_loss(&ddes.evictions, ref_trace);
+        let gl = theory::forward_loss(&greedy.evictions, ref_trace);
+        let dn = ddes.evictions.iter().map(|e| e.victims.len()).sum::<usize>().max(1);
+        let gn = greedy.evictions.iter().map(|e| e.victims.len()).sum::<usize>().max(1);
+        let (dpt, gpt) = (dl / dn as f64, gl / gn as f64);
+        if dpt <= gpt + 1e-9 {
+            holds += 1;
+        }
+        t2.row(vec![
+            format!("{}", i),
+            format!("{:.5}", dpt),
+            format!("{:.5}", gpt),
+            format!("{}", dpt <= gpt + 1e-9),
+            format!("{}", dn),
+            format!("{}", gn),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\nCorollary 2.1 (forward loss) holds on {}/{} episodes. Note: measured \
+         by *backward* cumulative score DDES victims are slightly warmer than \
+         greedy's (they keep accumulating while marked) — the bin's benefit is \
+         precisely that the extra observation time selects tokens with lower \
+         FUTURE relevance.",
+        holds, n
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Multimodal QA under aggressive cache pressure — the paper's Table 1
+//! scenario as a runnable demo.
+//!
+//! Sweeps DAP aggressiveness (r, α) on the image-QA workload and prints
+//! accuracy vs visual tokens kept, showing the adaptive-threshold behaviour
+//! that distinguishes HAE from fixed-budget pruning: the retained count
+//! varies per sample, tracking how concentrated each image's information
+//! actually is.
+//!
+//!     cargo run --release --offline --example multimodal_qa
+
+use anyhow::Result;
+use hae_serve::cache::PolicyKind;
+use hae_serve::harness::{answer_accuracy, artifact_dir, engine_for, load_grammar, run_policy, Table};
+use hae_serve::runtime::Runtime;
+use hae_serve::workload::{RequestBuilder, WorkloadKind};
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(&artifact_dir())?;
+    let meta = rt.meta().clone();
+    let grammar = load_grammar(&artifact_dir());
+    drop(rt);
+    let n = 30;
+    let requests =
+        RequestBuilder::new(&meta, &grammar, 77).make_batch(WorkloadKind::Understanding, n);
+
+    let mut table = Table::new(
+        "DAP aggressiveness sweep — image QA",
+        &["policy", "accuracy", "mean visual kept (of 16)", "min", "max"],
+    );
+    for spec in [
+        "full",
+        "hae:rrel=0.4,alpha=0.03",
+        "hae:rrel=0.6,alpha=0.05",
+        "hae:rrel=1.0,alpha=0.1",
+        "hae:rrel=1.5,alpha=0.2",
+        "fastv:ratio=0.33",
+        "fastv:ratio=0.125",
+    ] {
+        let kind = PolicyKind::parse(spec).unwrap();
+        let mut engine = engine_for(kind, 1, false)?;
+        let run = run_policy(&mut engine, requests.clone())?;
+        let kept: Vec<usize> = run
+            .finished
+            .iter()
+            .map(|ar| ar.stats.vision_tokens - ar.stats.pruned_at_prefill)
+            .collect();
+        let mean = kept.iter().sum::<usize>() as f64 / kept.len() as f64;
+        table.row(vec![
+            spec.to_string(),
+            format!("{:.1}%", 100.0 * answer_accuracy(&run.finished)),
+            format!("{:.2}", mean),
+            format!("{}", kept.iter().min().unwrap()),
+            format!("{}", kept.iter().max().unwrap()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nNote the min/max spread under HAE: retention adapts per image \
+         (Definition 1's dynamic |V^p|), unlike FastV's fixed budget."
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts, serve one multimodal QA request and
+//! one story request under HAE, and print what happened.
+//!
+//!     make artifacts && cargo run --release --offline --example quickstart
+
+use anyhow::Result;
+use hae_serve::cache::PolicyKind;
+use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::model::vocab;
+use hae_serve::runtime::Runtime;
+use hae_serve::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
+
+fn main() -> Result<()> {
+    let artifact_dir = std::path::Path::new("artifacts");
+    let rt = Runtime::load(artifact_dir)?;
+    println!(
+        "loaded TinyMM: {} layers, d_model {}, vocab {} ({} weights)",
+        rt.meta().n_layers,
+        rt.meta().d_model,
+        rt.meta().vocab,
+        rt.manifest.weights.len()
+    );
+
+    let grammar = StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
+    let meta = rt.meta().clone();
+    let mut builder = RequestBuilder::new(&meta, &grammar, 42);
+    let qa = builder.make(WorkloadKind::Understanding);
+    let story = builder.story(3, 12, 64);
+
+    let cfg = EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() };
+    let mut engine = Engine::new(rt, cfg)?;
+
+    println!("\n=== understanding request ===");
+    let expected = qa.expected_answer.unwrap();
+    let done = engine.generate(qa)?;
+    println!(
+        "prompt {} tokens ({} vision) → pruned {} at prefill (DAP)",
+        done.stats.prompt_tokens, done.stats.vision_tokens, done.stats.pruned_at_prefill
+    );
+    // generated[0] is the ANS_MARK scaffold token; [1] is the answer,
+    // produced through the DAP-pruned cache
+    let answer = done.generated.get(1).copied().unwrap_or(vocab::PAD);
+    println!(
+        "model answered '{}' (expected '{}') — {}",
+        vocab::describe(answer),
+        vocab::describe(expected),
+        if answer == expected { "CORRECT" } else { "wrong" }
+    );
+
+    println!("\n=== story request ===");
+    let done = engine.generate(story)?;
+    let text: Vec<String> = done.generated.iter().map(|&t| vocab::describe(t)).collect();
+    println!(
+        "generated {} tokens in {:.3}s prefill + {:.3}s decode ({} decode evictions, peak KV {} KiB)",
+        done.generated.len(),
+        done.stats.prefill_s,
+        done.stats.decode_s,
+        done.stats.evicted_at_decode,
+        done.stats.peak_kv_bytes / 1024
+    );
+    println!("story: {}", text.join(" "));
+    Ok(())
+}

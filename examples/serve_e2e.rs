@@ -1,0 +1,116 @@
+//! End-to-end serving driver (the DESIGN.md §validation run): starts the
+//! JSON-lines TCP server with the HAE policy, drives a mixed client
+//! workload over real sockets from several concurrent client threads, and
+//! reports per-request latency percentiles and aggregate throughput —
+//! proving all three layers compose: rust coordinator → PJRT executables →
+//! AOT-compiled JAX/Pallas graphs.
+//!
+//!     cargo run --release --offline --example serve_e2e
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+use hae_serve::cache::PolicyKind;
+use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::harness::{artifact_dir, load_grammar};
+use hae_serve::runtime::Runtime;
+use hae_serve::server::{client_request, serve, ServerConfig};
+use hae_serve::util::json::Json;
+use hae_serve::util::stats::percentile;
+
+const ADDR: &str = "127.0.0.1:8491";
+
+fn main() -> Result<()> {
+    // server thread — the PJRT client is !Send, so the engine is
+    // constructed inside the thread that owns it
+    let server = std::thread::spawn(move || {
+        let rt = Runtime::load(&artifact_dir()).expect("artifacts built?");
+        let engine = Engine::new(
+            rt,
+            EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
+        )
+        .unwrap();
+        let cfg = ServerConfig { addr: ADDR.into(), queue_depth: 64 };
+        let _ = serve(engine, cfg, load_grammar(&artifact_dir()));
+    });
+    // wait for the listener
+    for _ in 0..100 {
+        if std::net::TcpStream::connect(ADDR).is_ok() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    let n_clients = 4;
+    let per_client = 8;
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for c in 0..n_clients {
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            for i in 0..per_client {
+                let kind = match (c + i) % 3 {
+                    0 => "qa",
+                    1 => "mixed",
+                    _ => "story",
+                };
+                let payload = format!(
+                    r#"{{"id": {}, "kind": "{}", "max_new": 48}}"#,
+                    c * 100 + i,
+                    kind
+                );
+                let t = Instant::now();
+                let resp = client_request(ADDR, &payload).unwrap_or_default();
+                tx.send((t.elapsed().as_secs_f64(), resp)).unwrap();
+            }
+        });
+    }
+    drop(tx);
+
+    let mut latencies = Vec::new();
+    let mut steps = 0usize;
+    let mut pruned = 0usize;
+    let mut evicted = 0usize;
+    let mut errors = 0usize;
+    for (lat, resp) in rx {
+        latencies.push(lat);
+        match Json::parse(&resp) {
+            Ok(j) if j.get("error").is_none() => {
+                steps += j.get("steps").and_then(|v| v.as_usize()).unwrap_or(0);
+                pruned += j.get("pruned").and_then(|v| v.as_usize()).unwrap_or(0);
+                evicted += j.get("evicted").and_then(|v| v.as_usize()).unwrap_or(0);
+            }
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let _ = client_request(ADDR, "shutdown");
+    let _ = server.join();
+
+    let n = latencies.len();
+    println!("\n=== serve_e2e: {} requests over {} client threads ===", n, n_clients);
+    println!(
+        "wall {:.2}s | {:.2} req/s | {:.1} decode tok/s | errors {}",
+        wall,
+        n as f64 / wall,
+        steps as f64 / wall,
+        errors
+    );
+    println!(
+        "latency p50 {:.0} ms | p95 {:.0} ms | max {:.0} ms",
+        percentile(&latencies, 0.5) * 1000.0,
+        percentile(&latencies, 0.95) * 1000.0,
+        percentile(&latencies, 1.0) * 1000.0
+    );
+    println!(
+        "HAE activity: {} prompt tokens pruned (DAP), {} cache slots evicted (DDES)",
+        pruned, evicted
+    );
+    assert_eq!(errors, 0, "all requests must succeed");
+    assert_eq!(n, n_clients * per_client);
+    println!("serve_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX model + AOT lowering).
+
+Never imported at serving time — rust loads the emitted HLO artifacts via
+PJRT. See DESIGN.md §2.
+"""

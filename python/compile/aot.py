@@ -1,0 +1,207 @@
+"""AOT entry point — trains TinyMM and lowers all graph variants to HLO text.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits, into the artifacts directory:
+  weights.npz       — cached trained parameters (skip retraining when fresh)
+  weights.bin       — flat little-endian f32 in model.WEIGHT_NAMES order
+  manifest.json     — model config + weight table + artifact table (the
+                      contract the rust runtime validates at startup)
+  prefill_s{S}.hlo.txt
+  decode_b{B}_c{C}.hlo.txt
+  analysis_s{S}.hlo.txt
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax≥0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import MODEL, ARTIFACTS, manifest_dict
+from . import model as M
+from . import train as T
+
+SEED = 7
+TRAIN_STEPS = int(os.environ.get("HAE_TRAIN_STEPS", "300"))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_specs():
+    return [jax.ShapeDtypeStruct(shape, jnp.float32)
+            for shape in M.weight_shapes().values()]
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources — invalidates cached artifacts."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def get_params(out_dir: str, verbose=True):
+    cache = os.path.join(out_dir, "weights.npz")
+    if os.path.exists(cache):
+        z = np.load(cache)
+        if z.get("fingerprint_steps") == TRAIN_STEPS and all(
+                n in z for n in M.WEIGHT_NAMES):
+            if verbose:
+                print("aot: reusing cached weights.npz", flush=True)
+            return {n: jnp.asarray(z[n]) for n in M.WEIGHT_NAMES}
+    if verbose:
+        print(f"aot: training TinyMM for {TRAIN_STEPS} steps…", flush=True)
+    params, loss, _ = T.train(steps=TRAIN_STEPS, seed=SEED, verbose=verbose)
+    acc = T.qa_accuracy(params)
+    if verbose:
+        print(f"aot: final loss {loss:.4f}, QA answer accuracy {acc:.2%}",
+              flush=True)
+    np.savez(cache, fingerprint_steps=TRAIN_STEPS,
+             **{n: np.asarray(params[n]) for n in M.WEIGHT_NAMES})
+    return params
+
+
+def dump_weights(params, out_dir: str):
+    """weights.bin: flat f32 LE in WEIGHT_NAMES order; returns table entries."""
+    entries = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name in M.WEIGHT_NAMES:
+            arr = np.ascontiguousarray(np.asarray(params[name], np.float32))
+            f.write(arr.tobytes())
+            entries.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "numel": int(arr.size),
+            })
+            offset += arr.size * 4
+    return entries
+
+
+def lower_all(out_dir: str, verbose=True):
+    cfg = MODEL
+    art = ARTIFACTS
+    wspecs = weight_specs()
+    table = []
+
+    def emit(name, fn, extra_specs):
+        t0 = time.time()
+        # keep_unused=True: the weight-buffer list is a fixed ABI shared by
+        # all executables — decode doesn't use w_patch/b_patch but must
+        # still accept them.
+        lowered = jax.jit(fn, keep_unused=True).lower(*wspecs, *extra_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"aot: {name}.hlo.txt  ({len(text)/1e6:.2f} MB, "
+                  f"{time.time()-t0:.1f}s)", flush=True)
+        return path
+
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    for s in art.prefill_buckets:
+        specs = [
+            jax.ShapeDtypeStruct((s,), i32),                     # ids
+            jax.ShapeDtypeStruct((s, cfg.patch_dim), f32),       # patches
+            jax.ShapeDtypeStruct((s,), f32),                     # is_vision
+            jax.ShapeDtypeStruct((), i32),                       # n_tokens
+        ]
+        emit(f"prefill_s{s}", M.prefill_fn(cfg), specs)
+        table.append({"name": f"prefill_s{s}", "kind": "prefill", "bucket": s})
+
+    for b in art.decode_batches:
+        for c in art.decode_capacities:
+            specs = [
+                jax.ShapeDtypeStruct((b,), i32),                 # token
+                jax.ShapeDtypeStruct((b,), i32),                 # pos
+                jax.ShapeDtypeStruct(
+                    (b, cfg.n_layers, c, cfg.n_heads, cfg.d_head), f32),  # K
+                jax.ShapeDtypeStruct(
+                    (b, cfg.n_layers, c, cfg.n_heads, cfg.d_head), f32),  # V
+                jax.ShapeDtypeStruct((b,), i32),                 # length
+            ]
+            emit(f"decode_b{b}_c{c}", M.decode_fn(cfg), specs)
+            table.append({"name": f"decode_b{b}_c{c}", "kind": "decode",
+                          "batch": b, "capacity": c})
+
+    for s in art.analysis_buckets:
+        specs = [
+            jax.ShapeDtypeStruct((s,), i32),
+            jax.ShapeDtypeStruct((s, cfg.patch_dim), f32),
+            jax.ShapeDtypeStruct((s,), f32),
+            jax.ShapeDtypeStruct((), i32),
+        ]
+        emit(f"analysis_s{s}", M.prefill_fn(cfg, collect_layers=True), specs)
+        table.append({"name": f"analysis_s{s}", "kind": "analysis", "bucket": s})
+
+    return table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    verbose = not args.quiet
+
+    fp = source_fingerprint()
+    stamp = os.path.join(out_dir, "fingerprint.txt")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(stamp) and os.path.exists(manifest_path):
+        if open(stamp).read().strip() == fp:
+            print("aot: artifacts up to date (fingerprint match); nothing to do")
+            return
+
+    params = get_params(out_dir, verbose)
+    weight_entries = dump_weights(params, out_dir)
+
+    # Export the story grammar so the rust workload generator samples from
+    # the exact distribution the model was trained on (data contract).
+    from . import data as D
+    trans = np.ascontiguousarray(D.story_transition(), np.float32)
+    with open(os.path.join(out_dir, "grammar.bin"), "wb") as f:
+        f.write(trans.tobytes())
+
+    artifact_table = lower_all(out_dir, verbose)
+
+    manifest = manifest_dict(weight_entries, SEED, TRAIN_STEPS)
+    manifest["artifact_table"] = artifact_table
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"aot: wrote {len(artifact_table)} HLO artifacts + weights "
+          f"({sum(e['numel'] for e in weight_entries)} params) to {out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

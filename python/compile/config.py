@@ -1,0 +1,75 @@
+"""Shared model / artifact configuration for the TinyMM multimodal LM.
+
+This is the single source of truth for the shapes baked into the AOT
+artifacts. `aot.py` serialises it into `artifacts/manifest.json`, which the
+rust runtime reads at startup — the two sides never have to agree by
+convention alone.
+
+TinyMM is the stand-in for LLaVA-1.5 / Phi3.5-Vision in this reproduction
+(see DESIGN.md §3): a small decoder-only transformer with a learned patch
+projector in front, trained briefly at artifact-build time on a synthetic
+multimodal corpus so that its attention maps exhibit the heterogeneous
+visual/text sparsity the HAE paper exploits.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    d_mlp: int = 256
+    patch_dim: int = 32          # raw feature dim of one image patch
+    n_patches: int = 16          # visual tokens per image
+    max_pos: int = 640           # positional table size (>= decode capacity)
+    # Which layer's attention feeds the DAP statistics. The paper reads its
+    # "first layer" of a 32-layer LLM; at TinyMM's 4-layer depth layer 0 is
+    # still positional and the first semantically structured attention is
+    # layer 1 (DESIGN.md §Hardware-Adaptation).
+    dap_layer: int = 1
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.d_head
+
+
+@dataclass(frozen=True)
+class ArtifactConfig:
+    """Static shapes compiled into the PJRT executables."""
+
+    prefill_buckets: List[int] = field(default_factory=lambda: [64, 128, 256])
+    decode_batches: List[int] = field(default_factory=lambda: [1, 4])
+    # decode-time KV capacity buckets; the scheduler picks the smallest
+    # bucket that fits the live cache length (eviction → smaller bucket →
+    # faster step — the serving-side payoff of HAE)
+    decode_capacities: List[int] = field(default_factory=lambda: [128, 256, 384, 512])
+    analysis_buckets: List[int] = field(default_factory=lambda: [128, 256])
+    cache_capacity: int = 512    # max decode-time KV slots per request (C)
+
+    # special token ids (must match rust/src/model/tokenizer.rs)
+    pad_id: int = 0
+    bos_id: int = 1
+    eos_id: int = 2
+    img_id: int = 3              # placeholder id at vision positions
+
+
+MODEL = ModelConfig()
+ARTIFACTS = ArtifactConfig()
+
+# Sparsity threshold used by the paper for Fig. 3 (Appendix Eq. 7).
+SPARSITY_EPS = 1e-4
+
+
+def manifest_dict(weight_entries, seed: int, train_steps: int) -> dict:
+    return {
+        "model": asdict(MODEL),
+        "artifacts": asdict(ARTIFACTS),
+        "seed": seed,
+        "train_steps": train_steps,
+        "weights": weight_entries,
+    }

@@ -1,0 +1,172 @@
+"""Synthetic multimodal corpus for training TinyMM at artifact-build time.
+
+This is the stand-in for the proprietary/benchmark data the paper uses
+(LLaVA eval suites, MMMU, Seed-Story) — see DESIGN.md §3. It is engineered
+so that a briefly-trained model develops exactly the attention structure HAE
+exploits:
+
+* "images" are 16-patch feature grids where only 2–4 patches carry the class
+  signal (a color×shape prototype) and the rest are background noise —
+  text→vision attention therefore concentrates on few columns (high visual
+  sparsity, paper Fig. 3);
+* QA samples force answer positions to consult the informative patches;
+* story samples have local n-gram text structure with sporadic references to
+  the image class, keeping long-range text attention diffuse relative to
+  visual attention (paper Fig. 2 variance gap).
+
+The rust workload generator (rust/src/workload/) re-implements the same
+construction with the same token-id layout so serving-time requests come
+from the distribution the model was trained on. Keep the two in sync — the
+layout constants below are mirrored in rust/src/model/vocab.rs.
+"""
+
+import numpy as np
+
+from .config import MODEL, ARTIFACTS
+
+# --- token-id layout (mirror of rust/src/model/vocab.rs) -------------------
+PAD, BOS, EOS, IMG = 0, 1, 2, 3
+Q_COLOR, Q_SHAPE = 8, 9          # question-type tokens
+ANS_MARK = 10                    # "A:" marker
+STORY_MARK = 11                  # story-segment marker
+COLOR_BASE = 16                  # 8 color words: 16..23
+SHAPE_BASE = 24                  # 8 shape words: 24..31
+STORY_BASE = 64                  # 160 story words: 64..223
+N_COLORS, N_SHAPES = 8, 8
+N_STORY_WORDS = 160
+
+N_PATCHES = MODEL.n_patches
+PATCH_DIM = MODEL.patch_dim
+SIGNAL_GAIN = 3.0                # prototype amplitude vs unit noise
+
+
+def class_prototype(color: int, shape: int) -> np.ndarray:
+    """Deterministic patch-space prototype for a (color, shape) class."""
+    proto = np.zeros(PATCH_DIM, np.float32)
+    proto[color] = SIGNAL_GAIN
+    proto[N_COLORS + shape] = SIGNAL_GAIN
+    # a couple of correlated dims so the projector has something to learn
+    proto[16 + (color * N_SHAPES + shape) % 8] = SIGNAL_GAIN / 2
+    return proto
+
+
+def make_image(rng: np.random.Generator, color: int, shape: int):
+    """16 patches, 2–4 informative; returns (patches[NP,PD], informative mask)."""
+    patches = rng.standard_normal((N_PATCHES, PATCH_DIM)).astype(np.float32) * 0.5
+    n_info = int(rng.integers(2, 5))
+    info_idx = rng.choice(N_PATCHES, size=n_info, replace=False)
+    proto = class_prototype(color, shape)
+    for i in info_idx:
+        patches[i] += proto + rng.standard_normal(PATCH_DIM).astype(np.float32) * 0.2
+    mask = np.zeros(N_PATCHES, bool)
+    mask[info_idx] = True
+    return patches, mask
+
+
+def _story_transition(rng: np.random.Generator):
+    """Order-1 markov chain over the story vocabulary, sparse rows."""
+    trans = np.zeros((N_STORY_WORDS, N_STORY_WORDS), np.float32)
+    for i in range(N_STORY_WORDS):
+        nxt = rng.choice(N_STORY_WORDS, size=6, replace=False)
+        probs = rng.dirichlet(np.ones(6)).astype(np.float32)
+        trans[i, nxt] = probs
+    return trans
+
+
+_STORY_TRANS = None
+
+
+def story_transition() -> np.ndarray:
+    """Global story grammar — fixed seed so python and rust agree."""
+    global _STORY_TRANS
+    if _STORY_TRANS is None:
+        _STORY_TRANS = _story_transition(np.random.default_rng(1234))
+    return _STORY_TRANS
+
+
+def qa_sample(rng: np.random.Generator, seq_len: int):
+    """[BOS][IMG×16][Q_attr][ANS][answer][EOS] padded to seq_len."""
+    color = int(rng.integers(N_COLORS))
+    shape = int(rng.integers(N_SHAPES))
+    patches, _ = make_image(rng, color, shape)
+    ask_color = bool(rng.integers(2))
+    q_tok = Q_COLOR if ask_color else Q_SHAPE
+    a_tok = (COLOR_BASE + color) if ask_color else (SHAPE_BASE + shape)
+
+    ids = np.full(seq_len, PAD, np.int32)
+    pat = np.zeros((seq_len, PATCH_DIM), np.float32)
+    isv = np.zeros(seq_len, np.float32)
+    loss_w = np.zeros(seq_len, np.float32)
+
+    i = 0
+    ids[i] = BOS; i += 1
+    ids[i:i + N_PATCHES] = IMG
+    pat[i:i + N_PATCHES] = patches
+    isv[i:i + N_PATCHES] = 1.0
+    i += N_PATCHES
+    ids[i] = q_tok; i += 1
+    ids[i] = ANS_MARK
+    loss_w[i] = 1.0               # predict the scaffold token from Q
+    i += 1
+    ids[i] = a_tok
+    loss_w[i] = 1.0               # predict the answer token
+    i += 1
+    ids[i] = EOS
+    loss_w[i] = 1.0
+    i += 1
+    return ids, pat, isv, loss_w, i
+
+
+def story_sample(rng: np.random.Generator, seq_len: int, n_segments: int = 3,
+                 seg_text: int = 14):
+    """[BOS] ([IMG×16][STORY][w…])×n padded to seq_len; loss on story text."""
+    trans = story_transition()
+    ids = np.full(seq_len, PAD, np.int32)
+    pat = np.zeros((seq_len, PATCH_DIM), np.float32)
+    isv = np.zeros(seq_len, np.float32)
+    loss_w = np.zeros(seq_len, np.float32)
+
+    i = 0
+    ids[i] = BOS; i += 1
+    for _ in range(n_segments):
+        if i + N_PATCHES + 1 + seg_text >= seq_len:
+            break
+        color = int(rng.integers(N_COLORS))
+        shape = int(rng.integers(N_SHAPES))
+        patches, _ = make_image(rng, color, shape)
+        ids[i:i + N_PATCHES] = IMG
+        pat[i:i + N_PATCHES] = patches
+        isv[i:i + N_PATCHES] = 1.0
+        i += N_PATCHES
+        ids[i] = STORY_MARK
+        loss_w[i] = 1.0           # predict the segment marker from the image
+        i += 1
+        # first two words reference the image class (cross-modal link)
+        ids[i] = COLOR_BASE + color; loss_w[i] = 1.0; i += 1
+        ids[i] = SHAPE_BASE + shape; loss_w[i] = 1.0; i += 1
+        w = int(rng.integers(N_STORY_WORDS))
+        for _ in range(seg_text - 2):
+            ids[i] = STORY_BASE + w
+            loss_w[i] = 1.0
+            i += 1
+            w = int(rng.choice(N_STORY_WORDS, p=trans[w]))
+    if i < seq_len:
+        ids[i] = EOS
+        loss_w[i] = 1.0
+        i += 1
+    return ids, pat, isv, loss_w, i
+
+
+def batch(rng: np.random.Generator, n: int, seq_len: int, story_frac: float = 0.5):
+    """Mixed training batch: (ids[N,S], patches[N,S,PD], isv[N,S], loss_w[N,S])."""
+    ids = np.zeros((n, seq_len), np.int32)
+    pat = np.zeros((n, seq_len, PATCH_DIM), np.float32)
+    isv = np.zeros((n, seq_len), np.float32)
+    lw = np.zeros((n, seq_len), np.float32)
+    for j in range(n):
+        if rng.random() < story_frac:
+            s = story_sample(rng, seq_len)
+        else:
+            s = qa_sample(rng, seq_len)
+        ids[j], pat[j], isv[j], lw[j] = s[0], s[1], s[2], s[3]
+    return ids, pat, isv, lw

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts)."""
+
+from . import attention, dap, ref  # noqa: F401

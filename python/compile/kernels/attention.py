@@ -1,0 +1,171 @@
+"""L1 — Pallas fused prefill attention kernel.
+
+The prefill attention (S² work over mixed vision+text sequences) is the
+compute hot-spot of the serving stack; HAE additionally needs the post-
+softmax probabilities of layer 0 to compute the DAP statistics (paper
+Eqs. 1/3), so the kernel emits both the attention output and the
+probability block.
+
+Hardware adaptation (DESIGN.md §2): the paper's CUDA implementation stages
+K/V through shared memory per threadblock; here the BlockSpec index maps
+express the HBM→VMEM schedule instead. The grid iterates (head, q-block);
+each step holds one [Bq, Dh] query tile plus the full [S, Dh] K/V panels for
+that head in VMEM — at the largest bucket (S=256, Dh=32, f32) that is
+  Q tile   64·32·4   =   8 KiB
+  K panel 256·32·4   =  32 KiB
+  V panel 256·32·4   =  32 KiB
+  mask    64·256·4   =  64 KiB
+  probs   64·256·4   =  64 KiB
+  out      64·32·4   =   8 KiB
+≈ 208 KiB « 16 MiB VMEM, and the two matmuls are MXU-shaped ([64,32]×[32,S]
+and [64,S]×[S,32] — the contraction dims are multiples of 8×128 packing for
+f32 on real TPU; on this CPU target the kernel runs under interpret=True).
+
+The kernel MUST be lowered with interpret=True: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Query rows processed per grid step. 64 divides every prefill bucket
+# (64/128/256) and keeps the probs tile at 64 KiB.
+DEFAULT_BLOCK_Q = 64
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, p_ref, *, scale):
+    """One (head, q-block) grid step.
+
+    q_ref:    [Bq, Dh]   query tile for this head / q block
+    k_ref:    [S, Dh]    full key panel for this head
+    v_ref:    [S, Dh]    full value panel for this head
+    mask_ref: [Bq, S]    additive mask tile (shared across heads)
+    o_ref:    [Bq, Dh]   output tile
+    p_ref:    [Bq, S]    probability tile
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask_ref[...]
+    # numerically-stable softmax on the row axis
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z
+    p_ref[...] = p
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def attention(q, k, v, mask, *, block_q: int = DEFAULT_BLOCK_Q):
+    """Fused multi-head prefill attention.
+
+    Args:
+      q, k, v: [H, S, Dh] float32
+      mask:    [S, S] additive mask (0 visible / -1e9 hidden); carries both
+               causality and pad-validity, so the kernel itself is
+               mask-agnostic.
+      block_q: query tile height; must divide S.
+
+    Returns:
+      out:   [H, S, Dh]
+      probs: [H, S, S]
+    """
+    h, s, dh = q.shape
+    if s % block_q != 0:
+        # shapes are static at trace time, so plain python control flow is fine
+        block_q = s
+    scale = 1.0 / (dh ** 0.5)
+    grid = (h, s // block_q)
+
+    kernel = functools.partial(_attention_kernel, scale=scale)
+    out, probs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((None, s, dh), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((None, s, dh), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((block_q, s), lambda hh, qq: (qq, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((None, block_q, s), lambda hh, qq: (hh, qq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, s, s), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask)
+    return out, probs
+
+
+def _decode_attention_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, p_ref, *, scale):
+    """One (batch, head) grid step of single-token decode attention.
+
+    q_ref:     [Dh]     query vector
+    k_ref:     [C, Dh]  key cache panel
+    v_ref:     [C, Dh]  value cache panel
+    valid_ref: [C]      1.0 where slot attendable
+    o_ref:     [Dh]
+    p_ref:     [C]
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    valid = valid_ref[...]
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid > 0, scores, jnp.float32(-1e9))
+    m = jnp.max(scores)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e)
+    p_ref[...] = p
+    o_ref[...] = jnp.dot(p, v_ref[...], preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, valid):
+    """Batched single-token decode attention (see ref.decode_attention_ref).
+
+    Args:
+      q:       [B, H, Dh]
+      k_cache: [B, C, H, Dh]
+      v_cache: [B, C, H, Dh]
+      valid:   [B, C] float32
+
+    Returns:
+      out:   [B, H, Dh]
+      probs: [B, H, C]
+    """
+    b, hh, dh = q.shape
+    c = k_cache.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    # reorder caches head-major so each grid step reads a contiguous panel
+    k_hm = jnp.transpose(k_cache, (0, 2, 1, 3))  # [B, H, C, Dh]
+    v_hm = jnp.transpose(v_cache, (0, 2, 1, 3))
+
+    kernel = functools.partial(_decode_attention_kernel, scale=scale)
+    out, probs = pl.pallas_call(
+        kernel,
+        grid=(b, hh),
+        in_specs=[
+            pl.BlockSpec((None, None, dh), lambda bb, h2: (bb, h2, 0)),
+            pl.BlockSpec((None, None, c, dh), lambda bb, h2: (bb, h2, 0, 0)),
+            pl.BlockSpec((None, None, c, dh), lambda bb, h2: (bb, h2, 0, 0)),
+            pl.BlockSpec((None, c), lambda bb, h2: (bb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, dh), lambda bb, h2: (bb, h2, 0)),
+            pl.BlockSpec((None, None, c), lambda bb, h2: (bb, h2, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, hh, c), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k_hm, v_hm, valid)
+    return out, probs

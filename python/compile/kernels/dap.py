@@ -1,0 +1,78 @@
+"""L1 — Pallas DAP statistic kernel (paper Eqs. 1 and 3).
+
+Reduces a layer's attention probabilities to the two per-column statistics
+Dual-Attention Pruning needs:
+
+  colsum_j = Σ_i w_i · P̄[i, j]      (Eq. 1 — global text→key attention mass)
+  colmax_j = max_{i: w_i>0} P̄[i, j] (Eq. 3 — strongest individual text link)
+
+where P̄ is the head-averaged probability matrix and w is the text-row
+weight vector (1.0 at valid text query rows). Evaluating the reductions
+in-kernel means the [H, S, S] probability tensor never has to leave the
+device for the policy decision — only the two [S] vectors do.
+
+Grid: one step per key-column block; each step reduces over all heads and
+all query rows. VMEM per step at S=256, block=128: probs slab
+H·S·block·4 = 4·256·128·4 = 512 KiB — comfortably inside VMEM and the
+reduction is a pure VPU workload (no MXU needed).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_C = 128
+
+
+def _dap_kernel(p_ref, w_ref, sum_ref, max_ref, *, n_heads):
+    """One column-block grid step.
+
+    p_ref:   [H, S, Bc]  probability slab (all heads, all rows, Bc columns)
+    w_ref:   [S]         text-row weights
+    sum_ref: [Bc]
+    max_ref: [Bc]
+    """
+    p = p_ref[...]                      # [H, S, Bc]
+    w = w_ref[...]                      # [S]
+    pbar = jnp.sum(p, axis=0) / jnp.float32(n_heads)   # [S, Bc]
+    sum_ref[...] = jnp.dot(w, pbar, preferred_element_type=jnp.float32)
+    masked = pbar * (w[:, None] > 0)
+    max_ref[...] = jnp.max(masked, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def dap_stats(probs, row_weight, *, block_c: int = DEFAULT_BLOCK_C):
+    """DAP column statistics from one layer's attention probabilities.
+
+    Args:
+      probs:      [H, S, S] float32 attention probabilities
+      row_weight: [S] float32 (1.0 at valid text query rows)
+      block_c:    key-column tile width; must divide S.
+
+    Returns:
+      colsum: [S], colmax: [S]  (see ref.dap_stats_ref)
+    """
+    h, s, _ = probs.shape
+    if s % block_c != 0:
+        block_c = s
+    kernel = functools.partial(_dap_kernel, n_heads=h)
+    colsum, colmax = pl.pallas_call(
+        kernel,
+        grid=(s // block_c,),
+        in_specs=[
+            pl.BlockSpec((h, s, block_c), lambda cc: (0, 0, cc)),
+            pl.BlockSpec((s,), lambda cc: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_c,), lambda cc: (cc,)),
+            pl.BlockSpec((block_c,), lambda cc: (cc,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(probs, row_weight)
+    return colsum, colmax

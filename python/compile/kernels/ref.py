@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts allclose between kernel and
+oracle — this is the core L1 correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, mask):
+    """Multi-head attention over a full (prefill) sequence.
+
+    Args:
+      q, k, v: [H, S, Dh] float32
+      mask:    [S, S] additive mask (0 for visible, large negative otherwise)
+
+    Returns:
+      out:   [H, S, Dh]
+      probs: [H, S, S] post-softmax attention probabilities
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    scores = scores + mask[None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", probs, v)
+    return out, probs
+
+
+def dap_stats_ref(probs, row_weight):
+    """DAP statistics (paper Eqs. 1 and 3) from layer attention probs.
+
+    Head-averaged attention matrix P̄[i, j]; for each column (key) j:
+      colsum_j = Σ_i w_i · P̄[i, j]   — Eq. 1 global text→key mass
+      colmax_j = max_{i : w_i > 0} P̄[i, j]   — Eq. 3 individual max
+
+    Args:
+      probs:      [H, S, S] attention probabilities (query i, key j)
+      row_weight: [S] float32 — 1.0 for valid *text* query rows, else 0.0
+
+    Returns:
+      colsum: [S], colmax: [S]
+    """
+    pbar = jnp.mean(probs, axis=0)                       # [S, S]
+    colsum = jnp.einsum("i,ij->j", row_weight, pbar)     # [S]
+    colmax = jnp.max(pbar * (row_weight[:, None] > 0), axis=0)
+    return colsum, colmax
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """Single-token batched decode attention.
+
+    Args:
+      q:        [B, H, Dh]
+      k_cache:  [B, C, H, Dh]
+      v_cache:  [B, C, H, Dh]
+      valid:    [B, C] float32 — 1.0 where the cache slot is attendable
+
+    Returns:
+      out:    [B, H, Dh]
+      probs:  [B, H, C]
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhd,bchd->bhc", q, k_cache) / jnp.sqrt(jnp.float32(dh))
+    neg = jnp.float32(-1e9)
+    scores = jnp.where(valid[:, None, :] > 0, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows can't happen in practice (the new token always
+    # attends to itself) but guard against NaN for the property tests:
+    probs = jnp.where(jnp.sum(valid, axis=-1)[:, None, None] > 0, probs, 0.0)
+    out = jnp.einsum("bhc,bchd->bhd", probs, v_cache)
+    return out, probs
+
+
+def sparsity_rates_ref(probs, is_vision, valid, eps):
+    """Paper Appendix Eq. 7 — threshold sparsity of one layer's attention.
+
+    Computed over the valid causal region only (entries at or below the
+    diagonal with both query and key valid), split into overall / visual-key
+    / text-key components as in Fig. 3.
+
+    Args:
+      probs:     [H, S, S]
+      is_vision: [S] float32 — 1.0 at vision token positions
+      valid:     [S] float32 — 1.0 at valid (non-pad) positions
+      eps:       scalar threshold
+
+    Returns:
+      [3] float32 — (overall, visual, text) sparsity rates.
+    """
+    s = probs.shape[-1]
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    region = causal * valid[:, None] * valid[None, :]          # [S, S]
+    pbar = jnp.mean(probs, axis=0)
+    small = (pbar <= eps).astype(jnp.float32) * region
+
+    def rate(col_mask):
+        denom = jnp.sum(region * col_mask[None, :])
+        num = jnp.sum(small * col_mask[None, :])
+        return jnp.where(denom > 0, num / denom, 0.0)
+
+    overall = rate(valid)
+    visual = rate(is_vision * valid)
+    text = rate((1.0 - is_vision) * valid)
+    return jnp.stack([overall, visual, text])

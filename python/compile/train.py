@@ -1,0 +1,94 @@
+"""Short artifact-build-time training loop for TinyMM.
+
+Trains the tiny multimodal transformer on the synthetic corpus (data.py) for
+a few hundred Adam steps — just enough for structured, sparse attention maps
+to emerge (the property HAE relies on). Runs once inside `make artifacts`;
+the resulting weights are cached in artifacts/weights.npz. Optax is not
+assumed to exist in the image, so Adam is hand-rolled.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .config import MODEL
+from .model import init_weights, train_forward
+
+
+def loss_fn(params, ids, patches, isv, loss_w):
+    """Next-token cross-entropy, weighted by loss_w at *target* positions."""
+    logits = train_forward(params, ids, patches, isv)      # [N,S,V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)     # predict t+1 from t
+    tgt = ids[:, 1:]
+    w = loss_w[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_step(params, grads, state, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1.0 - b1 ** t)
+    vhat_scale = 1.0 / (1.0 - b2 ** t)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+@jax.jit
+def _update(params, opt, ids, patches, isv, lw):
+    loss, grads = jax.value_and_grad(loss_fn)(params, ids, patches, isv, lw)
+    params, opt = adam_step(params, grads, opt)
+    return params, opt, loss
+
+
+def train(steps: int = 300, batch_size: int = 16, seq_len: int = 96,
+          seed: int = 7, log_every: int = 50, verbose: bool = True):
+    """Returns (params dict, final loss, loss history)."""
+    rng = np.random.default_rng(seed)
+    params = init_weights(jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    history = []
+    t0 = time.time()
+    loss = None
+    for step in range(steps):
+        ids, pat, isv, lw = data.batch(rng, batch_size, seq_len)
+        params, opt, loss = _update(params, opt, jnp.asarray(ids),
+                                    jnp.asarray(pat), jnp.asarray(isv),
+                                    jnp.asarray(lw))
+        if step % log_every == 0 or step == steps - 1:
+            lv = float(loss)
+            history.append((step, lv))
+            if verbose:
+                print(f"  train step {step:4d}  loss {lv:.4f}  "
+                      f"({time.time() - t0:.1f}s)", flush=True)
+    return params, float(loss), history
+
+
+def qa_accuracy(params, n: int = 64, seq_len: int = 32, seed: int = 99) -> float:
+    """Sanity metric: greedy answer-token accuracy on held-out QA samples."""
+    rng = np.random.default_rng(seed)
+    correct = 0
+    ids, pat, isv, lw = data.batch(rng, n, seq_len, story_frac=0.0)
+    logits = train_forward(params, jnp.asarray(ids), jnp.asarray(pat),
+                           jnp.asarray(isv))
+    logits = np.asarray(logits)
+    for j in range(n):
+        # answer position = first loss-weighted position; model predicts it
+        # from the previous position's logits
+        apos = int(np.argmax(lw[j] > 0))
+        pred = int(np.argmax(logits[j, apos - 1]))
+        if pred == int(ids[j, apos]):
+            correct += 1
+    return correct / n

@@ -1,0 +1,83 @@
+"""AOT path: HLO text emission and artifact/manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.config import MODEL, ARTIFACTS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_emission_small_graph():
+    """Any jitted graph lowers to parseable HLO text (the interchange
+    format — serialized protos are rejected by xla_extension 0.5.1)."""
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_weight_specs_contiguous():
+    shapes = M.weight_shapes()
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert total == 745_344  # the TinyMM parameter count
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_config():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["model"]["d_model"] == MODEL.d_model
+    assert man["model"]["vocab"] == MODEL.vocab
+    assert man["model"]["dap_layer"] == MODEL.dap_layer
+    assert man["artifacts"]["prefill_buckets"] == ARTIFACTS.prefill_buckets
+    names = [w["name"] for w in man["weights"]]
+    assert names == M.WEIGHT_NAMES
+    # offsets contiguous
+    off = 0
+    for w in man["weights"]:
+        assert w["offset"] == off
+        off += w["numel"] * 4
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_artifact_files_exist_and_parse():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for entry in man["artifact_table"]:
+        path = os.path.join(ART, entry["name"] + ".hlo.txt")
+        assert os.path.exists(path), path
+        head = open(path).read(200)
+        assert head.startswith("HloModule"), path
+    # weights.bin sized per manifest
+    total = sum(w["numel"] for w in man["weights"])
+    assert os.path.getsize(os.path.join(ART, "weights.bin")) == total * 4
+    # grammar exported
+    g = np.fromfile(os.path.join(ART, "grammar.bin"), np.float32)
+    from compile import data as D
+    assert g.size == D.N_STORY_WORDS ** 2
+    np.testing.assert_allclose(
+        g.reshape(D.N_STORY_WORDS, -1).sum(1), 1.0, atol=1e-4)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "weights.npz")),
+                    reason="artifacts not built")
+def test_cached_weights_answer_qa():
+    """The shipped weights must actually solve the synthetic QA task."""
+    from compile import train as T
+    z = np.load(os.path.join(ART, "weights.npz"))
+    params = {n: jnp.asarray(z[n]) for n in M.WEIGHT_NAMES}
+    acc = T.qa_accuracy(params, n=32)
+    assert acc >= 0.9, f"QA accuracy {acc}"

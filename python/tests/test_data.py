@@ -1,0 +1,82 @@
+"""Synthetic corpus contracts (the layout rust mirrors)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+
+settings.register_profile("data", deadline=None, max_examples=20)
+settings.load_profile("data")
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_qa_sample_layout(seed):
+    rng = np.random.default_rng(seed)
+    ids, pat, isv, lw, used = D.qa_sample(rng, 64)
+    assert ids[0] == D.BOS
+    assert np.all(ids[1:17] == D.IMG)
+    assert np.all(isv[1:17] == 1.0)
+    assert ids[17] in (D.Q_COLOR, D.Q_SHAPE)
+    assert ids[18] == D.ANS_MARK
+    answer = ids[19]
+    if ids[17] == D.Q_COLOR:
+        assert D.COLOR_BASE <= answer < D.COLOR_BASE + D.N_COLORS
+    else:
+        assert D.SHAPE_BASE <= answer < D.SHAPE_BASE + D.N_SHAPES
+    assert ids[20] == D.EOS
+    assert used == 21
+    # patches zero at text positions
+    assert np.all(pat[0] == 0) and np.all(pat[17:] == 0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_story_sample_layout(seed):
+    rng = np.random.default_rng(seed)
+    ids, pat, isv, lw, used = D.story_sample(rng, 96)
+    assert ids[0] == D.BOS
+    # every image block is followed by STORY_MARK, color, shape
+    i = 1
+    segments = 0
+    while i + D.N_PATCHES + 3 < used and ids[i] == D.IMG:
+        assert np.all(ids[i:i + D.N_PATCHES] == D.IMG)
+        j = i + D.N_PATCHES
+        assert ids[j] == D.STORY_MARK
+        assert D.COLOR_BASE <= ids[j + 1] < D.COLOR_BASE + D.N_COLORS
+        assert D.SHAPE_BASE <= ids[j + 2] < D.SHAPE_BASE + D.N_SHAPES
+        segments += 1
+        # skip to the next image block
+        i = j + 1
+        while i < used and ids[i] != D.IMG and ids[i] != D.EOS:
+            i += 1
+    assert segments >= 1
+
+
+def test_story_transition_is_stochastic_and_sparse():
+    t = D.story_transition()
+    np.testing.assert_allclose(t.sum(1), 1.0, atol=1e-5)
+    assert np.all((t > 0).sum(1) <= 6)
+    # deterministic across calls
+    t2 = D.story_transition()
+    assert t is t2 or np.array_equal(t, t2)
+
+
+def test_informative_patches_carry_signal():
+    rng = np.random.default_rng(0)
+    patches, mask = D.make_image(rng, 3, 5)
+    proto = D.class_prototype(3, 5)
+    info = patches[mask]
+    back = patches[~mask]
+    # informative patches correlate with the prototype, background doesn't
+    info_dot = np.abs(info @ proto).mean()
+    back_dot = np.abs(back @ proto).mean()
+    assert info_dot > 3 * back_dot
+
+
+def test_batch_shapes():
+    rng = np.random.default_rng(1)
+    ids, pat, isv, lw = D.batch(rng, 6, 96)
+    assert ids.shape == (6, 96)
+    assert pat.shape == (6, 96, D.PATCH_DIM)
+    assert isv.shape == (6, 96)
+    assert lw.shape == (6, 96)
+    assert np.all((lw == 0) | (lw == 1))

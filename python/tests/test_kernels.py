@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; assert_allclose against ref.py is THE kernel
+correctness signal (interpret=True execution, same lowering the AOT
+artifacts embed).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import dap as dap_k
+from compile.kernels import ref as kref
+
+settings.register_profile("kernels", deadline=None, max_examples=12)
+settings.load_profile("kernels")
+
+
+def causal_mask(s, valid_n=None):
+    m = np.tril(np.ones((s, s), np.float32))
+    if valid_n is not None:
+        m[:, valid_n:] = 0.0
+    return jnp.asarray(np.where(m > 0, 0.0, -1e9).astype(np.float32))
+
+
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 32, 64, 128]),
+    dh=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(h, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    mask = causal_mask(s)
+    o1, p1 = attn_k.attention(q, k, v, mask)
+    o2, p2 = kref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-6)
+
+
+@given(
+    s=st.sampled_from([16, 64, 128]),
+    valid_frac=st.floats(0.2, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_with_padding_mask(s, valid_frac, seed):
+    rng = np.random.default_rng(seed)
+    h, dh = 2, 8
+    n_valid = max(1, int(s * valid_frac))
+    q = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    mask = causal_mask(s, n_valid)
+    o1, p1 = attn_k.attention(q, k, v, mask)
+    # pad keys receive zero probability at valid query rows
+    p = np.asarray(p1)
+    assert np.all(p[:, :n_valid, n_valid:] < 1e-12)
+    # valid rows are proper distributions
+    np.testing.assert_allclose(p[:, :n_valid].sum(-1), 1.0, atol=1e-5)
+    o2, _ = kref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@given(
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dap_stats_matches_ref(h, s, seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((h, s, s)).astype(np.float32)
+    probs = jnp.asarray(jax.nn.softmax(jnp.asarray(logits), axis=-1))
+    w = jnp.asarray((rng.random(s) > 0.4).astype(np.float32))
+    s1, m1 = dap_k.dap_stats(probs, w)
+    s2, m2 = kref.dap_stats_ref(probs, w)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-6)
+
+
+def test_dap_stats_zero_weight_rows():
+    """All-zero text weights → zero column stats (no NaNs)."""
+    h, s = 2, 32
+    probs = jnp.full((h, s, s), 1.0 / s, jnp.float32)
+    w = jnp.zeros(s, jnp.float32)
+    cs, cm = dap_k.dap_stats(probs, w)
+    assert np.allclose(np.asarray(cs), 0.0)
+    assert np.allclose(np.asarray(cm), 0.0)
+
+
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    c=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    h, dh = 4, 16
+    q = jnp.asarray(rng.standard_normal((b, h, dh)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, c, h, dh)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, c, h, dh)), jnp.float32)
+    lengths = rng.integers(1, c + 1, size=b)
+    valid = jnp.asarray(
+        (np.arange(c)[None, :] < lengths[:, None]).astype(np.float32))
+    o1, p1 = attn_k.decode_attention(q, kc, vc, valid)
+    o2, p2 = kref.decode_attention_ref(q, kc, vc, valid)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-6)
+
+
+def test_attention_probs_are_causal_distributions():
+    rng = np.random.default_rng(0)
+    h, s, dh = 2, 64, 8
+    q = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    _, p = attn_k.attention(q, k, v, causal_mask(s))
+    p = np.asarray(p)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+    for i in range(s):
+        assert np.all(p[:, i, i + 1:] < 1e-12), f"row {i} leaks future keys"
+
+
+@pytest.mark.parametrize("block_q", [16, 32, 64])
+def test_attention_block_size_invariance(block_q):
+    """The BlockSpec tile height must not change the numerics."""
+    rng = np.random.default_rng(7)
+    h, s, dh = 2, 64, 8
+    q = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((h, s, dh)), jnp.float32)
+    mask = causal_mask(s)
+    o_ref, _ = kref.attention_ref(q, k, v, mask)
+    o, _ = attn_k.attention(q, k, v, mask, block_q=block_q)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)

@@ -1,0 +1,140 @@
+"""L2 contracts: shapes, prefill/decode consistency, training sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile.config import MODEL
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_weights(jax.random.PRNGKey(0))
+
+
+def make_inputs(rng, s, n):
+    ids, pat, isv, lw, used = D.qa_sample(rng, s)
+    return (jnp.asarray(ids), jnp.asarray(pat), jnp.asarray(isv), jnp.int32(used))
+
+
+def test_weight_shapes_cover_all_names():
+    shapes = M.weight_shapes()
+    assert list(shapes.keys()) == M.WEIGHT_NAMES
+    assert shapes["embed"] == (MODEL.vocab, MODEL.d_model)
+    assert shapes["wq"] == (MODEL.n_layers, MODEL.d_model, MODEL.d_attn)
+
+
+def test_prefill_output_shapes(params):
+    s = 64
+    rng = np.random.default_rng(1)
+    fn = M.prefill_fn(use_pallas=False)
+    ids, pat, isv, n = make_inputs(rng, s, 20)
+    logits, k, v, dsum, dmax = fn(*M.params_tuple(params), ids, pat, isv, n)
+    assert logits.shape == (MODEL.vocab,)
+    assert k.shape == (MODEL.n_layers, s, MODEL.n_heads, MODEL.d_head)
+    assert v.shape == k.shape
+    assert dsum.shape == (s,)
+    assert dmax.shape == (s,)
+    assert not np.any(np.isnan(np.asarray(logits)))
+
+
+def test_prefill_pallas_matches_jnp(params):
+    """The pallas-kernel prefill and the pure-jnp prefill agree — the L2
+    integration of the L1 kernel is numerically transparent."""
+    s = 64
+    rng = np.random.default_rng(2)
+    args = make_inputs(rng, s, 19)
+    out_p = M.prefill_fn(use_pallas=True)(*M.params_tuple(params), *args)
+    out_j = M.prefill_fn(use_pallas=False)(*M.params_tuple(params), *args)
+    for a, b, name in zip(out_p, out_j, ["logits", "k", "v", "dap_sum", "dap_max"]):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=2e-4, err_msg=name)
+
+
+def test_decode_consistent_with_prefill(params):
+    """Running prefill over [t0..tn] must equal prefill over [t0..tn-1]
+    followed by one decode step of tn (same logits)."""
+    s = 64
+    rng = np.random.default_rng(3)
+    ids, pat, isv, lw, used = D.qa_sample(rng, s)
+    full = M.prefill_fn(use_pallas=False)(
+        *M.params_tuple(params), jnp.asarray(ids), jnp.asarray(pat),
+        jnp.asarray(isv), jnp.int32(used))
+    logits_full = np.asarray(full[0])
+
+    # prefill without the last token
+    part = M.prefill_fn(use_pallas=False)(
+        *M.params_tuple(params), jnp.asarray(ids), jnp.asarray(pat),
+        jnp.asarray(isv), jnp.int32(used - 1))
+    _, k, v, _, _ = part
+    # build decode cache [1, L, C, H, Dh] from the first used-1 slots
+    c = 128
+    kc = np.zeros((1, MODEL.n_layers, c, MODEL.n_heads, MODEL.d_head), np.float32)
+    vc = np.zeros_like(kc)
+    kc[0, :, : used - 1] = np.asarray(k)[:, : used - 1]
+    vc[0, :, : used - 1] = np.asarray(v)[:, : used - 1]
+
+    dec = M.decode_fn()(
+        *M.params_tuple(params),
+        jnp.asarray([ids[used - 1]], jnp.int32),
+        jnp.asarray([used - 1], jnp.int32),
+        jnp.asarray(kc),
+        jnp.asarray(vc),
+        jnp.asarray([used - 1], jnp.int32),
+    )
+    logits_dec = np.asarray(dec[0])[0]
+    np.testing.assert_allclose(logits_dec, logits_full, atol=1e-3)
+
+
+def test_decode_attention_scores_are_distributions(params):
+    rng = np.random.default_rng(4)
+    b, c = 2, 128
+    kc = rng.standard_normal(
+        (b, MODEL.n_layers, c, MODEL.n_heads, MODEL.d_head)).astype(np.float32)
+    vc = rng.standard_normal(kc.shape).astype(np.float32)
+    lengths = np.asarray([10, 60], np.int32)
+    out = M.decode_fn()(
+        *M.params_tuple(params),
+        jnp.asarray([5, 7], jnp.int32),
+        jnp.asarray([10, 60], jnp.int32),
+        jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(lengths),
+    )
+    logits, k_new, v_new, attn_mean, attn_peak, self_mean = out
+    attn_mean = np.asarray(attn_mean)
+    attn_peak = np.asarray(attn_peak)
+    self_mean = np.asarray(self_mean)
+    # mean cache mass + mean self mass = 1 per lane (means of distributions)
+    total = attn_mean.sum(-1) + self_mean
+    np.testing.assert_allclose(total, 1.0, atol=1e-5)
+    # peak (max over heads) dominates the head-mean everywhere
+    assert np.all(attn_peak >= attn_mean - 1e-7)
+    # no attention mass past the live length
+    assert np.all(attn_mean[0, 10:] < 1e-9)
+    assert np.all(attn_mean[1, 60:] < 1e-9)
+    assert k_new.shape == (2, MODEL.n_layers, MODEL.n_heads, MODEL.d_head)
+
+
+def test_analysis_outputs(params):
+    s = 128
+    rng = np.random.default_rng(5)
+    ids, pat, isv, lw, used = D.story_sample(rng, s)
+    out = M.prefill_fn(use_pallas=False, collect_layers=True)(
+        *M.params_tuple(params), jnp.asarray(ids), jnp.asarray(pat),
+        jnp.asarray(isv), jnp.int32(used))
+    assert len(out) == 9
+    sparsity = np.asarray(out[5])
+    assert sparsity.shape == (MODEL.n_layers, 3)
+    assert np.all(sparsity >= 0.0) and np.all(sparsity <= 1.0)
+    probs0 = np.asarray(out[8])
+    assert probs0.shape == (MODEL.n_heads, s, s)
+
+
+def test_short_training_reduces_loss():
+    from compile import train as T
+    params, loss, hist = T.train(steps=8, batch_size=8, seq_len=64,
+                                 log_every=4, verbose=False)
+    assert hist[0][1] > loss, f"loss should drop: {hist[0][1]} -> {loss}"
+    assert np.isfinite(loss)

@@ -1,0 +1,8 @@
+//! Attention-statistics substrate: the observation machinery behind the
+//! paper's Figs. 2/3/5 and the decay-model fit Theorem 2.1 needs.
+
+pub mod stats;
+
+pub use stats::{
+    cumulative_variance_split, decay_rate_fit, sparsity_from_probs, VarianceSplit,
+};

@@ -1,0 +1,157 @@
+//! Host-side attention statistics.
+//!
+//! The analysis executable already reduces per-layer sparsity and DAP
+//! column statistics in-graph; this module adds the cross-sample
+//! aggregations the figures plot (variance of cumulative scores split by
+//! modality, Fig. 2) and the exponential decay-rate fit λ that
+//! Theorem 2.1's bound consumes.
+
+use crate::util::stats::{linear_fit, variance};
+
+/// Fig. 2: variance of cumulative attention scores, split by token
+/// modality, pooled across samples.
+#[derive(Debug, Clone, Default)]
+pub struct VarianceSplit {
+    pub visual_var: f64,
+    pub text_var: f64,
+    pub visual_mean: f64,
+    pub text_mean: f64,
+    pub n_visual: usize,
+    pub n_text: usize,
+}
+
+/// `colsum` is a layer's per-column cumulative attention (analysis
+/// artifact); pool scores by modality and compute variances.
+pub fn cumulative_variance_split(
+    samples: &[(Vec<f32>, Vec<bool>, usize)], // (colsum, is_vision, n_tokens)
+) -> VarianceSplit {
+    let mut vis = Vec::new();
+    let mut txt = Vec::new();
+    for (colsum, is_vision, n_tokens) in samples {
+        for i in 0..*n_tokens {
+            if is_vision[i] {
+                vis.push(colsum[i] as f64);
+            } else {
+                txt.push(colsum[i] as f64);
+            }
+        }
+    }
+    VarianceSplit {
+        visual_var: variance(&vis),
+        text_var: variance(&txt),
+        visual_mean: crate::util::stats::mean(&vis),
+        text_mean: crate::util::stats::mean(&txt),
+        n_visual: vis.len(),
+        n_text: txt.len(),
+    }
+}
+
+/// Sparsity rate of a probability matrix region (paper Eq. 7), computed
+/// host-side from the analysis artifact's layer-0 probs. `probs` is
+/// `[H, S, S]`; only the causal, valid region is counted.
+pub fn sparsity_from_probs(
+    probs: &[f32],
+    n_heads: usize,
+    s: usize,
+    is_vision: &[bool],
+    n_tokens: usize,
+    eps: f32,
+) -> (f64, f64, f64) {
+    let mut counts = [0u64; 3]; // overall, visual, text (small entries)
+    let mut totals = [0u64; 3];
+    for i in 0..n_tokens {
+        for j in 0..=i.min(n_tokens - 1) {
+            // head-mean
+            let mut p = 0.0f32;
+            for h in 0..n_heads {
+                p += probs[(h * s + i) * s + j];
+            }
+            p /= n_heads as f32;
+            let small = p <= eps;
+            totals[0] += 1;
+            if small {
+                counts[0] += 1;
+            }
+            let m = if is_vision[j] { 1 } else { 2 };
+            totals[m] += 1;
+            if small {
+                counts[m] += 1;
+            }
+        }
+    }
+    let rate = |c: u64, t: u64| if t == 0 { 0.0 } else { c as f64 / t as f64 };
+    (
+        rate(counts[0], totals[0]),
+        rate(counts[1], totals[1]),
+        rate(counts[2], totals[2]),
+    )
+}
+
+/// Fit the exponential decay rate λ of per-step attention scores:
+/// S(t) = S₀·(1−λ)^t  ⇒  ln S(t) linear in t with slope ln(1−λ).
+///
+/// `score_series` is a sequence of per-step scores for one slot (or a mean
+/// over slots). Returns λ ∈ [0, 1).
+pub fn decay_rate_fit(score_series: &[f64]) -> f64 {
+    let pts: Vec<(f64, f64)> = score_series
+        .iter()
+        .enumerate()
+        .filter(|(_, &s)| s > 1e-12)
+        .map(|(t, &s)| (t as f64, s.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (slope, _) = linear_fit(&xs, &ys);
+    // slope = ln(1 - λ)
+    (1.0 - slope.exp()).clamp(0.0, 0.999_999)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variance_split_separates_modalities() {
+        // visual scores tightly clustered, text scores spread
+        let colsum = vec![0.1, 0.1, 0.1, 0.0, 0.5, 1.0];
+        let is_vision = vec![true, true, true, false, false, false];
+        let v = cumulative_variance_split(&[(colsum, is_vision, 6)]);
+        assert!(v.text_var > v.visual_var);
+        assert_eq!(v.n_visual, 3);
+        assert_eq!(v.n_text, 3);
+    }
+
+    #[test]
+    fn decay_fit_recovers_lambda() {
+        let lambda = 0.2f64;
+        let series: Vec<f64> = (0..20).map(|t| 0.9 * (1.0 - lambda).powi(t)).collect();
+        let fit = decay_rate_fit(&series);
+        assert!((fit - lambda).abs() < 1e-6, "fit {}", fit);
+    }
+
+    #[test]
+    fn decay_fit_handles_flat() {
+        let series = vec![0.5; 10];
+        let fit = decay_rate_fit(&series);
+        assert!(fit.abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparsity_counts_causal_region() {
+        // 1 head, s=2, both tokens valid text; probs row0=[1,0], row1=[0.5,0.5]
+        let probs = vec![1.0, 0.0, 0.5, 0.5];
+        let (overall, vis, txt) =
+            sparsity_from_probs(&probs, 1, 2, &[false, false], 2, 1e-4);
+        // causal entries: (0,0)=1, (1,0)=0.5, (1,1)=0.5 → none small
+        assert_eq!(overall, 0.0);
+        assert_eq!(vis, 0.0);
+        assert_eq!(txt, 0.0);
+        let (overall, _, _) =
+            sparsity_from_probs(&probs, 1, 2, &[false, false], 2, 0.6);
+        // entries ≤ 0.6: the two 0.5s → 2/3
+        assert!((overall - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

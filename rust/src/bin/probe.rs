@@ -1,0 +1,20 @@
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let client = xla::PjRtClient::cpu()?;
+    for path in ["/tmp/probe_nt.hlo.txt", "/tmp/probe_t.hlo.txt"] {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+        let y = xla::Literal::vec1(&[10f32, 20., 30., 40.]).reshape(&[2, 2])?;
+        let out = exe.execute::<xla::Literal>(&[x, y])?;
+        println!("{path}: outer={} inner={}", out.len(), out[0].len());
+        for (i, b) in out[0].iter().enumerate() {
+            println!("  out[{i}] shape={:?}", b.on_device_shape()?);
+        }
+        // try execute_b with buffer inputs
+        let xb = client.buffer_from_host_buffer::<f32>(&[1., 2., 3., 4.], &[2, 2], None)?;
+        let yb = client.buffer_from_host_buffer::<f32>(&[10., 20., 30., 40.], &[2, 2], None)?;
+        let out2 = exe.execute_b::<xla::PjRtBuffer>(&[xb, yb])?;
+        println!("  execute_b inner={}", out2[0].len());
+    }
+    Ok(())
+}

@@ -1,0 +1,728 @@
+//! Baseline eviction/compression policies the paper compares against.
+//!
+//! Each is a faithful *mechanism* reproduction at the granularity this
+//! runtime supports (whole-token slots shared across layers — the same
+//! granularity HAE itself uses). Where the original method needs machinery
+//! this substrate cannot express (per-layer ratios, per-head cache masks,
+//! trained gates), the closest behaviour-preserving approximation is used
+//! and noted on the struct — these are the substitutions DESIGN.md §3
+//! documents.
+
+use crate::cache::slab::Modality;
+
+use super::policy::{
+    lowest_score_slots, DecodeCtx, EvictionPolicy, PrefillCtx, PrefillDecision,
+    StepDecision, DEFAULT_RECENT_PROTECT,
+};
+
+// ---------------------------------------------------------------------------
+// Full cache (no eviction)
+// ---------------------------------------------------------------------------
+
+/// Upper-bound reference: keeps everything; only the engine's hard
+/// capacity fallback can ever evict (sliding-window oldest-first).
+pub struct FullCache;
+
+impl EvictionPolicy for FullCache {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        PrefillDecision::retain_all(ctx.n_tokens)
+    }
+
+    fn post_step(&mut self, _ctx: &DecodeCtx) -> StepDecision {
+        StepDecision::keep()
+    }
+
+    fn capacity_fallback(&mut self, ctx: &DecodeCtx, need: usize) -> Vec<usize> {
+        // sliding window: drop the oldest slots
+        (0..need.min(ctx.slab.len())).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FastV (Chen et al. 2024a)
+// ---------------------------------------------------------------------------
+
+/// FastV prunes a fixed fraction of visual tokens after the early layers,
+/// ranked by attention received. Here the rank signal is the layer-0
+/// text→vision mass (same signal the real method reads at its pruning
+/// layer) and the prune is applied at prefill hand-off. No decode-stage
+/// eviction.
+pub struct FastV {
+    /// fraction of visual tokens to retain (paper Table 1 uses 192/576 = ⅓)
+    pub retain_ratio: f32,
+}
+
+impl EvictionPolicy for FastV {
+    fn name(&self) -> &'static str {
+        "fastv"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        let vision = ctx.vision_slots();
+        let keep_n = ((vision.len() as f32 * self.retain_ratio).round() as usize)
+            .clamp(1, vision.len());
+        let mut ranked = vision.clone();
+        ranked.sort_by(|&a, &b| ctx.dap_sum[b].partial_cmp(&ctx.dap_sum[a]).unwrap());
+        let kept: std::collections::BTreeSet<usize> =
+            ranked.into_iter().take(keep_n).collect();
+        PrefillDecision::retain(
+            (0..ctx.n_tokens)
+                .filter(|i| !ctx.is_vision[*i] || kept.contains(i))
+                .collect(),
+        )
+    }
+
+    fn post_step(&mut self, _ctx: &DecodeCtx) -> StepDecision {
+        StepDecision::keep()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SparseVLM (Zhang et al. 2024)
+// ---------------------------------------------------------------------------
+
+/// Text-guided visual sparsification with token recycling: retain the
+/// top-k visual tokens by text relevance and *recycle* the pruned ones by
+/// merging their KV (mean) into the lowest-ranked retained token instead of
+/// discarding the mass outright. (The original applies rank-based per-layer
+/// ratios; the broadcast substrate applies one global ratio.)
+pub struct SparseVlm {
+    pub retain_ratio: f32,
+}
+
+impl EvictionPolicy for SparseVlm {
+    fn name(&self) -> &'static str {
+        "sparsevlm"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        let vision = ctx.vision_slots();
+        let keep_n = ((vision.len() as f32 * self.retain_ratio).round() as usize)
+            .clamp(1, vision.len());
+        let mut ranked = vision.clone();
+        ranked.sort_by(|&a, &b| ctx.dap_sum[b].partial_cmp(&ctx.dap_sum[a]).unwrap());
+        let kept: Vec<usize> = ranked[..keep_n].to_vec();
+        let dropped: Vec<usize> = ranked[keep_n..].to_vec();
+
+        let mut k = ctx.k.to_vec();
+        let mut v = ctx.v.to_vec();
+        if !dropped.is_empty() {
+            // recycle: average the dropped tokens' KV into the weakest kept
+            // token (rank keep_n-1)
+            let sink = *kept.last().unwrap();
+            let row = ctx.meta.n_heads * ctx.meta.d_head;
+            let w_old = 1.0 / (dropped.len() + 1) as f32;
+            for l in 0..ctx.meta.n_layers {
+                let sink_off = (l * ctx.bucket + sink) * row;
+                for d in 0..row {
+                    let mut acc_k = k[sink_off + d];
+                    let mut acc_v = v[sink_off + d];
+                    for &j in &dropped {
+                        let off = (l * ctx.bucket + j) * row;
+                        acc_k += ctx.k[off + d];
+                        acc_v += ctx.v[off + d];
+                    }
+                    k[sink_off + d] = acc_k * w_old;
+                    v[sink_off + d] = acc_v * w_old;
+                }
+            }
+        }
+
+        let kept_set: std::collections::BTreeSet<usize> = kept.into_iter().collect();
+        let retain: Vec<usize> = (0..ctx.n_tokens)
+            .filter(|i| !ctx.is_vision[*i] || kept_set.contains(i))
+            .collect();
+        PrefillDecision { retain, kv_override: Some((k, v)) }
+    }
+
+    fn post_step(&mut self, _ctx: &DecodeCtx) -> StepDecision {
+        StepDecision::keep()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ToMe (Bolya et al. 2023)
+// ---------------------------------------------------------------------------
+
+/// Token Merging: repeatedly merge the most similar pair of visual tokens
+/// (cosine similarity of their layer-0 keys) until only
+/// `retain_ratio · |V|` remain. Merged KV rows are averaged — information
+/// is pooled rather than discarded, which is why ToMe degrades differently
+/// from pruning baselines.
+pub struct ToMe {
+    pub retain_ratio: f32,
+}
+
+impl ToMe {
+    fn key_vec<'a>(ctx: &'a PrefillCtx, slot: usize) -> &'a [f32] {
+        let row = ctx.meta.n_heads * ctx.meta.d_head;
+        let off = slot * row; // layer 0
+        &ctx.k[off..off + row]
+    }
+
+    fn cosine(a: &[f32], b: &[f32]) -> f32 {
+        let mut dot = 0.0;
+        let mut na = 0.0;
+        let mut nb = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            dot += x * y;
+            na += x * x;
+            nb += y * y;
+        }
+        dot / (na.sqrt() * nb.sqrt() + 1e-9)
+    }
+}
+
+impl EvictionPolicy for ToMe {
+    fn name(&self) -> &'static str {
+        "tome"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        let vision = ctx.vision_slots();
+        let target = ((vision.len() as f32 * self.retain_ratio).round() as usize)
+            .clamp(1, vision.len());
+        // groups[i] = members merged into representative vision[i]
+        let mut alive: Vec<usize> = vision.clone();
+        let mut members: std::collections::BTreeMap<usize, Vec<usize>> =
+            vision.iter().map(|&s| (s, vec![s])).collect();
+        while alive.len() > target {
+            // greedy closest pair on layer-0 keys (O(n²) — |V| is small)
+            let mut best = (0usize, 1usize, f32::NEG_INFINITY);
+            for i in 0..alive.len() {
+                for j in (i + 1)..alive.len() {
+                    let sim = Self::cosine(
+                        Self::key_vec(ctx, alive[i]),
+                        Self::key_vec(ctx, alive[j]),
+                    );
+                    if sim > best.2 {
+                        best = (i, j, sim);
+                    }
+                }
+            }
+            let (i, j, _) = best;
+            let (keep_slot, drop_slot) = (alive[i], alive[j]);
+            let moved = members.remove(&drop_slot).unwrap();
+            members.get_mut(&keep_slot).unwrap().extend(moved);
+            alive.remove(j);
+        }
+
+        // average each group's KV rows into the representative slot
+        let mut k = ctx.k.to_vec();
+        let mut v = ctx.v.to_vec();
+        let row = ctx.meta.n_heads * ctx.meta.d_head;
+        for (&rep, group) in &members {
+            if group.len() == 1 {
+                continue;
+            }
+            let w = 1.0 / group.len() as f32;
+            for l in 0..ctx.meta.n_layers {
+                let rep_off = (l * ctx.bucket + rep) * row;
+                for d in 0..row {
+                    let mut acc_k = 0.0;
+                    let mut acc_v = 0.0;
+                    for &g in group {
+                        let off = (l * ctx.bucket + g) * row;
+                        acc_k += ctx.k[off + d];
+                        acc_v += ctx.v[off + d];
+                    }
+                    k[rep_off + d] = acc_k * w;
+                    v[rep_off + d] = acc_v * w;
+                }
+            }
+        }
+
+        let alive_set: std::collections::BTreeSet<usize> = alive.into_iter().collect();
+        let retain: Vec<usize> = (0..ctx.n_tokens)
+            .filter(|i| !ctx.is_vision[*i] || alive_set.contains(i))
+            .collect();
+        PrefillDecision { retain, kv_override: Some((k, v)) }
+    }
+
+    fn post_step(&mut self, _ctx: &DecodeCtx) -> StepDecision {
+        StepDecision::keep()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MustDrop (Liu et al. 2024b)
+// ---------------------------------------------------------------------------
+
+/// Multi-stage vision-token dropping: (1) merge near-duplicate *adjacent*
+/// visual tokens (the vision-encoding spatial-merge stage), (2) drop
+/// low-text-relevance visual tokens by global threshold — crucially
+/// *without* HAE's Eq. 3 individual-max rescue, the gap Table 1 exposes —
+/// and (3) an output-aware decode stage that evicts only visual tokens.
+pub struct MustDrop {
+    /// global relevance threshold as an absolute fraction of the total
+    /// visual mass; values < 0 mean "uniform share 1/|V|" (scale-invariant)
+    pub r: f32,
+    /// cosine similarity above which adjacent visual tokens merge
+    pub merge_sim: f32,
+    /// decode-stage budget (None = post-prefill length)
+    pub budget: Option<usize>,
+    decisions: u64,
+}
+
+impl MustDrop {
+    pub fn new(r: f32, merge_sim: f32, budget: Option<usize>) -> Self {
+        MustDrop { r, merge_sim, budget, decisions: 0 }
+    }
+}
+
+impl EvictionPolicy for MustDrop {
+    fn name(&self) -> &'static str {
+        "mustdrop"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        let vision = ctx.vision_slots();
+        let row = ctx.meta.n_heads * ctx.meta.d_head;
+
+        // stage 1: merge adjacent near-duplicates (drop the later twin)
+        let mut merged_away: std::collections::BTreeSet<usize> =
+            std::collections::BTreeSet::new();
+        let mut k = ctx.k.to_vec();
+        let mut v = ctx.v.to_vec();
+        for w in vision.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if merged_away.contains(&a) {
+                continue;
+            }
+            let sim = ToMe::cosine(
+                &ctx.k[a * row..a * row + row],
+                &ctx.k[b * row..b * row + row],
+            );
+            if sim > self.merge_sim {
+                merged_away.insert(b);
+                for l in 0..ctx.meta.n_layers {
+                    let ao = (l * ctx.bucket + a) * row;
+                    let bo = (l * ctx.bucket + b) * row;
+                    for d in 0..row {
+                        k[ao + d] = 0.5 * (ctx.k[ao + d] + ctx.k[bo + d]);
+                        v[ao + d] = 0.5 * (ctx.v[ao + d] + ctx.v[bo + d]);
+                    }
+                }
+            }
+        }
+
+        // stage 2: global-threshold drop (no individual-max rescue)
+        let total: f32 = vision.iter().map(|&i| ctx.dap_sum[i]).sum();
+        let r_abs =
+            if self.r < 0.0 { 1.0 / vision.len().max(1) as f32 } else { self.r };
+        let threshold = r_abs * total;
+        let retain: Vec<usize> = (0..ctx.n_tokens)
+            .filter(|&i| {
+                if !ctx.is_vision[i] {
+                    return true;
+                }
+                if merged_away.contains(&i) {
+                    return false;
+                }
+                ctx.dap_sum[i] >= threshold
+            })
+            .collect();
+        PrefillDecision { retain, kv_override: Some((k, v)) }
+    }
+
+    fn post_step(&mut self, ctx: &DecodeCtx) -> StepDecision {
+        // stage 3: output-aware — evict lowest-scored *visual* tokens when
+        // over budget (greedy, per step)
+        let budget = self.budget.unwrap_or(ctx.prefill_len).min(ctx.capacity_limit - 1);
+        let len = ctx.slab.len();
+        if len <= budget {
+            return StepDecision::keep();
+        }
+        self.decisions += 1;
+        let mut vis: Vec<usize> = (0..len)
+            .filter(|&i| ctx.slab.meta()[i].modality == Modality::Vision)
+            .collect();
+        vis.sort_by(|&a, &b| {
+            ctx.slab.meta()[a]
+                .cum_score
+                .partial_cmp(&ctx.slab.meta()[b].cum_score)
+                .unwrap()
+        });
+        let mut evict: Vec<usize> = vis.into_iter().take(len - budget).collect();
+        if evict.is_empty() {
+            // no visual tokens left — fall back to global lowest
+            evict = lowest_score_slots(ctx.slab, len - budget, DEFAULT_RECENT_PROTECT);
+        }
+        evict.sort_unstable();
+        StepDecision { mark: Vec::new(), evict }
+    }
+
+    fn decision_count(&self) -> u64 {
+        self.decisions
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SnapKV (Li et al. 2024c)
+// ---------------------------------------------------------------------------
+
+/// SnapKV compresses the prompt cache once at the end of prefill: an
+/// observation window (the last `window` prompt tokens) votes for the
+/// important prefix positions; top-k voted positions plus the window are
+/// kept. The vote signal here is the layer-0 attention mass (dap_sum
+/// includes exactly the text-query votes). Decode-stage: H2O-style budget
+/// maintenance.
+pub struct SnapKv {
+    pub budget: usize,
+    pub window: usize,
+    decisions: u64,
+}
+
+impl SnapKv {
+    pub fn new(budget: usize, window: usize) -> Self {
+        SnapKv { budget, window, decisions: 0 }
+    }
+}
+
+impl EvictionPolicy for SnapKv {
+    fn name(&self) -> &'static str {
+        "snapkv"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        let n = ctx.n_tokens;
+        if n <= self.budget {
+            return PrefillDecision::retain_all(n);
+        }
+        self.decisions += 1;
+        let window_start = n.saturating_sub(self.window);
+        let mut prefix: Vec<usize> = (0..window_start).collect();
+        prefix.sort_by(|&a, &b| ctx.dap_sum[b].partial_cmp(&ctx.dap_sum[a]).unwrap());
+        let keep_prefix = self.budget.saturating_sub(n - window_start);
+        let mut retain: Vec<usize> = prefix.into_iter().take(keep_prefix).collect();
+        retain.extend(window_start..n);
+        PrefillDecision::retain(retain)
+    }
+
+    fn post_step(&mut self, ctx: &DecodeCtx) -> StepDecision {
+        let len = ctx.slab.len();
+        let budget = self.budget.min(ctx.capacity_limit - 1);
+        if len <= budget {
+            return StepDecision::keep();
+        }
+        self.decisions += 1;
+        StepDecision {
+            mark: Vec::new(),
+            evict: lowest_score_slots(ctx.slab, len - budget, self.window.min(len / 2)),
+        }
+    }
+
+    fn decision_count(&self) -> u64 {
+        self.decisions
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AdaKV (Feng et al. 2024)
+// ---------------------------------------------------------------------------
+
+/// AdaKV allocates the eviction budget adaptively across heads. This
+/// runtime's slots span all heads, so the *allocation* is expressed in the
+/// scoring instead: a slot survives on its best-head evidence
+/// (`cum_peak`), blended with the mean — heads that concentrate attention
+/// protect their tokens, which is the budget-shifting effect AdaKV's
+/// per-head allocation produces. Noted substitution (DESIGN.md §3).
+pub struct AdaKv {
+    pub budget: Option<usize>,
+    pub recent: usize,
+    /// blend factor: 0 = pure mean (H2O), 1 = pure peak
+    pub peak_weight: f32,
+    decisions: u64,
+}
+
+impl AdaKv {
+    pub fn new(budget: Option<usize>, recent: usize, peak_weight: f32) -> Self {
+        AdaKv { budget, recent, peak_weight, decisions: 0 }
+    }
+}
+
+impl EvictionPolicy for AdaKv {
+    fn name(&self) -> &'static str {
+        "adakv"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        PrefillDecision::retain_all(ctx.n_tokens)
+    }
+
+    fn post_step(&mut self, ctx: &DecodeCtx) -> StepDecision {
+        let budget = self.budget.unwrap_or(ctx.prefill_len).min(ctx.capacity_limit - 1);
+        let len = ctx.slab.len();
+        if len <= budget {
+            return StepDecision::keep();
+        }
+        self.decisions += 1;
+        let evictable = len.saturating_sub(self.recent);
+        let w = self.peak_weight;
+        let mut idx: Vec<usize> = (0..evictable).collect();
+        let score = |i: usize| {
+            let m = &ctx.slab.meta()[i];
+            (1.0 - w) * m.cum_score + w * m.cum_peak
+        };
+        idx.sort_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap().then(a.cmp(&b)));
+        let mut evict: Vec<usize> = idx.into_iter().take(len - budget).collect();
+        evict.sort_unstable();
+        StepDecision { mark: Vec::new(), evict }
+    }
+
+    fn decision_count(&self) -> u64 {
+        self.decisions
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamingLLM-style sliding window (ablation extra)
+// ---------------------------------------------------------------------------
+
+/// Attention-sink sliding window: keep the first `sinks` slots and the
+/// most recent `window` slots; evict everything in between. Not a paper
+/// baseline, but a useful lower-anchor ablation for the benches.
+pub struct SlidingWindow {
+    pub sinks: usize,
+    pub window: usize,
+}
+
+impl EvictionPolicy for SlidingWindow {
+    fn name(&self) -> &'static str {
+        "window"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        PrefillDecision::retain_all(ctx.n_tokens)
+    }
+
+    fn post_step(&mut self, ctx: &DecodeCtx) -> StepDecision {
+        let len = ctx.slab.len();
+        let keep = self.sinks + self.window;
+        if len <= keep {
+            return StepDecision::keep();
+        }
+        let evict: Vec<usize> = (self.sinks..len - self.window).collect();
+        StepDecision { mark: Vec::new(), evict }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random eviction (sanity anchor)
+// ---------------------------------------------------------------------------
+
+/// Evicts uniformly random unprotected slots when over budget. Any
+/// score-guided policy must beat this.
+pub struct RandomEvict {
+    pub budget: Option<usize>,
+    pub rng: crate::util::rng::Rng,
+}
+
+impl EvictionPolicy for RandomEvict {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        PrefillDecision::retain_all(ctx.n_tokens)
+    }
+
+    fn post_step(&mut self, ctx: &DecodeCtx) -> StepDecision {
+        let budget = self.budget.unwrap_or(ctx.prefill_len).min(ctx.capacity_limit - 1);
+        let len = ctx.slab.len();
+        if len <= budget {
+            return StepDecision::keep();
+        }
+        let need = len - budget;
+        let evictable = len.saturating_sub(DEFAULT_RECENT_PROTECT);
+        let mut evict = self.rng.choose_k(evictable, need);
+        evict.sort_unstable();
+        evict.dedup();
+        StepDecision { mark: Vec::new(), evict }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::slab::{KvSlab, Modality};
+    use crate::model::ModelMeta;
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 2,
+            d_mlp: 8,
+            patch_dim: 4,
+            n_patches: 4,
+            max_pos: 64,
+            dap_layer: 1,
+        }
+    }
+
+    fn prefill_ctx_fixture<'a>(
+        m: &'a ModelMeta,
+        dap_sum: &'a [f32],
+        dap_max: &'a [f32],
+        is_vision: &'a [bool],
+        k: &'a [f32],
+        v: &'a [f32],
+        bucket: usize,
+    ) -> PrefillCtx<'a> {
+        PrefillCtx {
+            dap_sum,
+            dap_max,
+            is_vision,
+            n_tokens: is_vision.len(),
+            k,
+            v,
+            bucket,
+            meta: m,
+        }
+    }
+
+    #[test]
+    fn fastv_keeps_top_ratio() {
+        let m = tiny_meta();
+        let bucket = 6;
+        let row = m.n_heads * m.d_head;
+        let k = vec![0.0f32; m.n_layers * bucket * row];
+        let v = k.clone();
+        let is_vision = [true, true, true, true, false, false];
+        let dap_sum = [0.4, 0.1, 0.3, 0.2, 0.0, 0.0];
+        let dap_max = [0.0; 6];
+        let ctx = prefill_ctx_fixture(&m, &dap_sum, &dap_max, &is_vision, &k, &v, bucket);
+        let mut p = FastV { retain_ratio: 0.5 };
+        let d = p.prefill(&ctx);
+        // top-2 vision by dap_sum = slots 0, 2; all text kept
+        assert_eq!(d.retain, vec![0, 2, 4, 5]);
+    }
+
+    #[test]
+    fn sparsevlm_recycles_mass() {
+        let m = tiny_meta();
+        let bucket = 4;
+        let row = m.n_heads * m.d_head;
+        let mut k = vec![0.0f32; m.n_layers * bucket * row];
+        // distinct values per slot in layer 0
+        for slot in 0..bucket {
+            for d in 0..row {
+                k[slot * row + d] = slot as f32 + 1.0;
+            }
+        }
+        let v = k.clone();
+        let is_vision = [true, true, true, false];
+        let dap_sum = [0.5, 0.3, 0.1, 0.0];
+        let dap_max = [0.0; 4];
+        let ctx = prefill_ctx_fixture(&m, &dap_sum, &dap_max, &is_vision, &k, &v, bucket);
+        let mut p = SparseVlm { retain_ratio: 0.67 };
+        let d = p.prefill(&ctx);
+        assert_eq!(d.retain, vec![0, 1, 3]);
+        let (nk, _) = d.kv_override.unwrap();
+        // sink = slot 1 (weakest kept); merged with dropped slot 2:
+        // (2 + 3) / 2 = 2.5 in layer 0
+        assert!((nk[1 * row] - 2.5).abs() < 1e-6);
+        // untouched slot keeps its value
+        assert!((nk[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tome_merges_most_similar() {
+        let m = tiny_meta();
+        let bucket = 4;
+        let row = m.n_heads * m.d_head;
+        let mut k = vec![0.0f32; m.n_layers * bucket * row];
+        // slots 0,1 identical keys; slot 2 orthogonal
+        for d in 0..row {
+            k[d] = 1.0;
+            k[row + d] = 1.0;
+        }
+        k[2 * row] = -1.0;
+        let v = k.clone();
+        let is_vision = [true, true, true, false];
+        let dap = [0.0f32; 4];
+        let ctx = prefill_ctx_fixture(&m, &dap, &dap, &is_vision, &k, &v, bucket);
+        let mut p = ToMe { retain_ratio: 0.67 };
+        let d = p.prefill(&ctx);
+        // 3 vision → 2: slots 0 and 1 merge; retained vision = {0, 2}
+        assert_eq!(d.retain, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn snapkv_keeps_window_and_heavy() {
+        let m = tiny_meta();
+        let bucket = 8;
+        let k = vec![0.0f32; m.n_layers * bucket * (m.n_heads * m.d_head)];
+        let v = k.clone();
+        let is_vision = [false; 8];
+        let dap_sum = [0.9, 0.1, 0.8, 0.2, 0.1, 0.1, 0.1, 0.1];
+        let dap_max = [0.0; 8];
+        let ctx = prefill_ctx_fixture(&m, &dap_sum, &dap_max, &is_vision, &k, &v, bucket);
+        let mut p = SnapKv::new(4, 2);
+        let d = p.prefill(&ctx);
+        // window = {6, 7}; top-2 voted prefix = {0, 2}
+        assert_eq!(d.retain, vec![0, 2, 6, 7]);
+    }
+
+    #[test]
+    fn mustdrop_decode_evicts_vision_first() {
+        let m = tiny_meta();
+        let mut slab = KvSlab::new(&m, 32);
+        let row = vec![0.0f32; m.n_layers * m.n_heads * m.d_head];
+        slab.append(&row, &row, 0, Modality::Text, 0.01);
+        slab.append(&row, &row, 1, Modality::Vision, 0.02);
+        slab.append(&row, &row, 2, Modality::Vision, 0.5);
+        slab.append(&row, &row, 3, Modality::Text, 0.9);
+        let mut p = MustDrop::new(0.0, 2.0, Some(3));
+        let ctx = DecodeCtx { slab: &slab, step: 0, prefill_len: 3, capacity_limit: 31 };
+        let d = p.post_step(&ctx);
+        // over budget by 1 → evict lowest-scored VISION slot (1), even
+        // though text slot 0 has a lower score
+        assert_eq!(d.evict, vec![1]);
+    }
+
+    #[test]
+    fn sliding_window_keeps_sinks() {
+        let m = tiny_meta();
+        let mut slab = KvSlab::new(&m, 32);
+        let row = vec![0.0f32; m.n_layers * m.n_heads * m.d_head];
+        for i in 0..10 {
+            slab.append(&row, &row, i, Modality::Text, 0.0);
+        }
+        let mut p = SlidingWindow { sinks: 2, window: 3 };
+        let ctx = DecodeCtx { slab: &slab, step: 0, prefill_len: 5, capacity_limit: 31 };
+        let d = p.post_step(&ctx);
+        assert_eq!(d.evict, vec![2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn adakv_peak_protects() {
+        let m = tiny_meta();
+        let mut slab = KvSlab::new(&m, 32);
+        let row = vec![0.0f32; m.n_layers * m.n_heads * m.d_head];
+        for i in 0..6 {
+            slab.append(&row, &row, i, Modality::Text, 0.0);
+        }
+        // slot 0: low mean, HIGH peak (one head loves it)
+        // slot 1: low mean, low peak
+        slab.meta_mut()[0].cum_score = 0.1;
+        slab.meta_mut()[0].cum_peak = 0.9;
+        slab.meta_mut()[1].cum_score = 0.1;
+        slab.meta_mut()[1].cum_peak = 0.1;
+        for i in 2..6 {
+            slab.meta_mut()[i].cum_score = 0.8;
+            slab.meta_mut()[i].cum_peak = 0.8;
+        }
+        let mut p = AdaKv::new(Some(5), 0, 0.5);
+        let ctx = DecodeCtx { slab: &slab, step: 0, prefill_len: 5, capacity_limit: 31 };
+        let d = p.post_step(&ctx);
+        assert_eq!(d.evict, vec![1], "peak evidence must protect slot 0");
+    }
+}

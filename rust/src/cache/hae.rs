@@ -1,0 +1,334 @@
+//! Hierarchical Adaptive Eviction — the paper's contribution.
+//!
+//! **DAP (Dual-Attention Pruning, §2.2.1)** runs at prefill: a vision slot
+//! j is evicted iff BOTH
+//!   * its global text→vision mass is below the adaptive threshold:
+//!     `A_j < r · Σ_{j∈V} A_j`           (Eq. 2, complement), and
+//!   * its strongest individual text link is weak:
+//!     `max_i A_{i,j} < α`               (Eq. 3).
+//!
+//! The decision is computed once from layer-0 statistics and broadcast to
+//! all layers — in this runtime the slab physically shares slots across
+//! layers, so the broadcast is structural (a slot eviction removes the
+//! token's KV in every layer at once), exactly the storage-uniformity
+//! advantage claimed in §1. The per-layer coverage the broadcast relies on
+//! (paper Fig. 5) is reproduced by `benches/fig5_broadcast.rs`.
+//!
+//! **DDES (Dynamic Decoding Eviction Strategy, §2.2.2)** runs at decode:
+//! instead of H2O's greedy per-step eviction, the lowest-cumulative-score
+//! slot is *marked* into a recycle bin each step once the cache exceeds its
+//! post-prefill length `l`; when the bin holds `rc_size` entries they are
+//! flushed all at once (Definition 2: `l ≤ |S2| < l + D`). Marked slots
+//! remain attendable until flushed — the property behind Corollary 2.1's
+//! tighter error bound, tested in rust/tests/theory.rs.
+
+use super::policy::{
+    lowest_unmarked_slots, DecodeCtx, EvictionPolicy, PrefillCtx, PrefillDecision,
+    StepDecision, DEFAULT_RECENT_PROTECT,
+};
+
+#[derive(Debug, Clone)]
+pub struct HaeConfig {
+    /// Eq. 2 threshold r on the global attention mass, as an *absolute*
+    /// fraction of the total visual mass (the paper's formulation, tuned
+    /// for a fixed |V| = 576). None = use `r_rel` instead.
+    pub r: Option<f32>,
+    /// Eq. 2 threshold as a multiple of the uniform share 1/|V| — the
+    /// |V|-invariant generalization this repo defaults to (1.0 reproduces
+    /// the paper's operating point at every image count; DESIGN.md §3).
+    pub r_rel: f32,
+    /// Eq. 3 absolute threshold α on the max individual text link
+    pub alpha: f32,
+    /// recycle-bin size D (paper Table 5 "RC_size")
+    pub rc_size: usize,
+    /// never evict the most recent N slots
+    pub recent_protect: usize,
+    /// Definition 1: at most this many vision tokens may be evicted
+    /// (None = no cap, the common configuration)
+    pub max_evict: Option<usize>,
+    /// enable the prefill stage (ablation: HAE-Decoding only)
+    pub prefill_stage: bool,
+    /// enable the decode stage (ablation: HAE-Pre-filling only)
+    pub decode_stage: bool,
+}
+
+impl Default for HaeConfig {
+    fn default() -> Self {
+        // Scale-equivalent of paper Appendix Table 5 (r = α = 0.0015,
+        // RC_size = 56 at 576 visual tokens / 512 max-new): r tracks the
+        // uniform share 1/|V|, see cache/mod.rs HaeParams::default.
+        HaeConfig {
+            r: None,
+            r_rel: 0.6,
+            alpha: 0.05,
+            rc_size: 24,
+            recent_protect: DEFAULT_RECENT_PROTECT,
+            max_evict: None,
+            prefill_stage: true,
+            decode_stage: true,
+        }
+    }
+}
+
+pub struct Hae {
+    cfg: HaeConfig,
+    decisions: u64,
+}
+
+impl Hae {
+    pub fn new(cfg: HaeConfig) -> Self {
+        Hae { cfg, decisions: 0 }
+    }
+
+    /// Pure DAP decision from layer statistics — exposed separately so the
+    /// Fig. 5 broadcast-coverage bench can evaluate it per layer.
+    ///
+    /// Returns the *evicted* vision slot indices.
+    pub fn dap_evict_set(
+        colsum: &[f32],
+        colmax: &[f32],
+        is_vision: &[bool],
+        n_tokens: usize,
+        r: f32,
+        alpha: f32,
+        max_evict: Option<usize>,
+    ) -> Vec<usize> {
+        let vision: Vec<usize> = (0..n_tokens).filter(|&i| is_vision[i]).collect();
+        let total: f32 = vision.iter().map(|&i| colsum[i]).sum();
+        let threshold = r * total;
+        // Text evidence is causal: only text queries *after* column j can
+        // have scored it. A vision token with no posterior text rows has
+        // zero evidence either way — abstain rather than evict (this keeps
+        // trailing images, e.g. the final frame a continuation must
+        // caption, out of DAP's reach).
+        let mut text_after = vec![0usize; n_tokens + 1];
+        for i in (0..n_tokens).rev() {
+            text_after[i] = text_after[i + 1] + usize::from(!is_vision[i]);
+        }
+        let mut evict: Vec<usize> = vision
+            .into_iter()
+            .filter(|&j| {
+                text_after[j + 1] > 0 && colsum[j] < threshold && colmax[j] < alpha
+            })
+            .collect();
+        if let Some(cap) = max_evict {
+            if evict.len() > cap {
+                // keep the weakest `cap` evictions (lowest global mass)
+                evict.sort_by(|&a, &b| colsum[a].partial_cmp(&colsum[b]).unwrap());
+                evict.truncate(cap);
+                evict.sort_unstable();
+            }
+        }
+        evict
+    }
+}
+
+impl EvictionPolicy for Hae {
+    fn name(&self) -> &'static str {
+        "hae"
+    }
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision {
+        if !self.cfg.prefill_stage {
+            return PrefillDecision::retain_all(ctx.n_tokens);
+        }
+        self.decisions += 1; // one DAP decision, broadcast to all layers
+        let n_vision = ctx.vision_slots().len().max(1);
+        let r_abs = self.cfg.r.unwrap_or(self.cfg.r_rel / n_vision as f32);
+        let evict = Self::dap_evict_set(
+            ctx.dap_sum,
+            ctx.dap_max,
+            ctx.is_vision,
+            ctx.n_tokens,
+            r_abs,
+            self.cfg.alpha,
+            self.cfg.max_evict,
+        );
+        let mut drop = vec![false; ctx.n_tokens];
+        for &j in &evict {
+            drop[j] = true;
+        }
+        PrefillDecision::retain((0..ctx.n_tokens).filter(|&i| !drop[i]).collect())
+    }
+
+    fn post_step(&mut self, ctx: &DecodeCtx) -> StepDecision {
+        if !self.cfg.decode_stage {
+            return StepDecision::keep();
+        }
+        let mut d = StepDecision::keep();
+        let len = ctx.slab.len();
+        // Definition 2(2): once the cache has grown past `l`, mark the
+        // lowest-cumulative-score unmarked slot (Eq. 4/5 criterion — the
+        // slab's cum_score *is* Sc: per-step softmax mass plus the β
+        // history accumulated since entry).
+        if len > ctx.prefill_len {
+            d.mark = lowest_unmarked_slots(ctx.slab, 1, self.cfg.recent_protect);
+        }
+        // Recycle-bin flush: bin full (or the hard capacity wall forces an
+        // early flush). Eviction happens all at once — the single sort per
+        // flush, vs H2O's sort per step.
+        let marked_now = ctx.slab.marked_count() + d.mark.len();
+        if marked_now >= self.cfg.rc_size || len + 1 >= ctx.capacity_limit {
+            self.decisions += 1;
+            let mut evict = ctx.slab.marked_slots();
+            evict.extend(d.mark.iter().copied());
+            evict.sort_unstable();
+            evict.dedup();
+            d.mark.clear();
+            d.evict = evict;
+        }
+        d
+    }
+
+    fn decision_count(&self) -> u64 {
+        self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::slab::{KvSlab, Modality};
+    use crate::model::ModelMeta;
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 1,
+            d_head: 2,
+            d_mlp: 8,
+            patch_dim: 4,
+            n_patches: 4,
+            max_pos: 64,
+            dap_layer: 1,
+        }
+    }
+
+    #[test]
+    fn dap_requires_both_criteria() {
+        let is_vision = vec![true, true, true, false];
+        // slot 0: low sum, low max  -> evict
+        // slot 1: low sum, HIGH max -> keep (Eq. 3 rescue)
+        // slot 2: high sum, low max -> keep (Eq. 2)
+        let colsum = vec![0.001, 0.001, 0.9, 0.5];
+        let colmax = vec![0.0001, 0.9, 0.0001, 0.5];
+        let evict =
+            Hae::dap_evict_set(&colsum, &colmax, &is_vision, 4, 0.01, 0.001, None);
+        assert_eq!(evict, vec![0]);
+    }
+
+    #[test]
+    fn dap_never_touches_text() {
+        let is_vision = vec![false, false, false];
+        let colsum = vec![0.0, 0.0, 0.0];
+        let colmax = vec![0.0, 0.0, 0.0];
+        let evict = Hae::dap_evict_set(&colsum, &colmax, &is_vision, 3, 0.5, 0.5, None);
+        assert!(evict.is_empty());
+    }
+
+    #[test]
+    fn dap_max_evict_cap() {
+        // trailing text token provides the causal evidence rows
+        let is_vision = vec![true, true, true, true, true, false];
+        let colsum = vec![0.01, 0.02, 0.03, 0.04, 10.0, 0.0];
+        let colmax = vec![0.0; 6];
+        let evict =
+            Hae::dap_evict_set(&colsum, &colmax, &is_vision, 6, 0.05, 1.0, Some(2));
+        // weakest two of the four candidates
+        assert_eq!(evict, vec![0, 1]);
+    }
+
+    #[test]
+    fn dap_abstains_without_text_evidence() {
+        // no text after the vision tokens → nothing may be evicted
+        let is_vision = vec![false, true, true, true];
+        let colsum = vec![0.5, 0.0, 0.0, 0.0];
+        let colmax = vec![0.0; 4];
+        let evict = Hae::dap_evict_set(&colsum, &colmax, &is_vision, 4, 0.9, 0.9, None);
+        assert!(evict.is_empty(), "trailing images must be kept");
+    }
+
+    #[test]
+    fn ddes_marks_then_flushes() {
+        let m = tiny_meta();
+        let mut slab = KvSlab::new(&m, 32);
+        for i in 0..10 {
+            slab.append(&[0.0, 0.0], &[0.0, 0.0], i, Modality::Text, i as f32 * 0.1);
+        }
+        let mut hae = Hae::new(HaeConfig {
+            rc_size: 3,
+            recent_protect: 2,
+            ..HaeConfig::default()
+        });
+        let prefill_len = 6;
+        let mut marked_total = 0;
+        for step in 0..3 {
+            let ctx = DecodeCtx { slab: &slab, step, prefill_len, capacity_limit: 31 };
+            let d = hae.post_step(&ctx);
+            if !d.evict.is_empty() {
+                // flush happens exactly when the 3rd mark lands
+                assert_eq!(step, 2);
+                assert_eq!(d.evict.len(), 3);
+                assert!(d.mark.is_empty());
+                slab.evict(&d.evict);
+                marked_total += 3;
+            } else {
+                assert_eq!(d.mark.len(), 1);
+                for &i in &d.mark {
+                    slab.meta_mut()[i].marked = true;
+                }
+            }
+        }
+        assert_eq!(marked_total, 3);
+        assert_eq!(slab.len(), 7);
+        assert_eq!(slab.marked_count(), 0);
+    }
+
+    #[test]
+    fn ddes_idle_below_prefill_len() {
+        let m = tiny_meta();
+        let mut slab = KvSlab::new(&m, 32);
+        for i in 0..5 {
+            slab.append(&[0.0, 0.0], &[0.0, 0.0], i, Modality::Text, 0.1);
+        }
+        let mut hae = Hae::new(HaeConfig::default());
+        let ctx = DecodeCtx { slab: &slab, step: 0, prefill_len: 5, capacity_limit: 31 };
+        let d = hae.post_step(&ctx);
+        assert!(d.mark.is_empty() && d.evict.is_empty());
+    }
+
+    #[test]
+    fn stage_toggles() {
+        let mut pre_only = Hae::new(HaeConfig {
+            decode_stage: false,
+            ..HaeConfig::default()
+        });
+        let m = tiny_meta();
+        let mut slab = KvSlab::new(&m, 32);
+        for i in 0..20 {
+            slab.append(&[0.0, 0.0], &[0.0, 0.0], i, Modality::Text, 0.1);
+        }
+        let ctx = DecodeCtx { slab: &slab, step: 0, prefill_len: 4, capacity_limit: 31 };
+        let d = pre_only.post_step(&ctx);
+        assert!(d.mark.is_empty() && d.evict.is_empty());
+
+        let mut dec_only = Hae::new(HaeConfig {
+            prefill_stage: false,
+            ..HaeConfig::default()
+        });
+        let pctx = PrefillCtx {
+            dap_sum: &[0.0; 4],
+            dap_max: &[0.0; 4],
+            is_vision: &[true, true, false, false],
+            n_tokens: 4,
+            k: &[],
+            v: &[],
+            bucket: 4,
+            meta: &m,
+        };
+        let pd = dec_only.prefill(&pctx);
+        assert_eq!(pd.retain.len(), 4);
+    }
+}

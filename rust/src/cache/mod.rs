@@ -1,0 +1,235 @@
+//! KV-cache management: the host-owned slab store, the eviction-policy
+//! interface, HAE (the paper's contribution) and every baseline policy the
+//! evaluation compares against.
+
+pub mod baselines;
+pub mod h2o;
+pub mod hae;
+pub mod policy;
+pub mod slab;
+
+pub use hae::{Hae, HaeConfig};
+pub use policy::{
+    DecodeCtx, EvictionPolicy, PrefillCtx, PrefillDecision, StepDecision,
+};
+pub use slab::{KvSlab, Modality, SlotMeta};
+
+use crate::util::rng::Rng;
+
+/// Retain ratio corresponding to the paper's headline setting
+/// (192 of 576 visual tokens).
+pub const PAPER_RETAIN_RATIO: f32 = 192.0 / 576.0;
+
+/// Which eviction policy to run — the engine-facing configuration surface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    Full,
+    Hae(HaeParams),
+    H2o { budget: Option<usize>, recent: usize },
+    SnapKv { budget: usize, window: usize },
+    AdaKv { budget: Option<usize>, recent: usize, peak_weight: f32 },
+    MustDrop { r: f32, merge_sim: f32, budget: Option<usize> },
+    FastV { retain_ratio: f32 },
+    SparseVlm { retain_ratio: f32 },
+    ToMe { retain_ratio: f32 },
+    Window { sinks: usize, window: usize },
+    Random { budget: Option<usize>, seed: u64 },
+}
+
+/// HAE hyper-parameters (paper Appendix Table 5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HaeParams {
+    /// absolute Eq. 2 threshold (None → use r_rel)
+    pub r: Option<f32>,
+    /// threshold as a multiple of the uniform share 1/|V|
+    pub r_rel: f32,
+    pub alpha: f32,
+    pub rc_size: usize,
+    pub prefill_stage: bool,
+    pub decode_stage: bool,
+}
+
+impl Default for HaeParams {
+    fn default() -> Self {
+        // Paper Table 5 uses r = α = 0.0015 with 576 visual tokens — r sits
+        // at ≈0.9× the uniform share 1/|V|. TinyMM images have 16 visual
+        // tokens, so the scale-equivalent defaults are r = 1/16 = 0.0625
+        // and α = 0.1 (calibrated to reproduce the paper's ~2/3 visual
+        // eviction rate; see DESIGN.md §3 and benches/fig5_broadcast.rs).
+        // Calibrated knee of the accuracy/KV trade-off at TinyMM scale
+        // (benches/table1 sweeps the curve; rrel=1.0/α=0.1 reproduces the
+        // paper's ~2/3 visual eviction rate at higher fidelity cost).
+        HaeParams {
+            r: None,
+            r_rel: 0.6,
+            alpha: 0.05,
+            rc_size: 24,
+            prefill_stage: true,
+            decode_stage: true,
+        }
+    }
+}
+
+impl PolicyKind {
+    pub fn hae_default() -> Self {
+        PolicyKind::Hae(HaeParams::default())
+    }
+
+    /// Parse a policy spec string, e.g. `hae`, `hae:r=0.002,rc=64`,
+    /// `h2o:budget=200`, `fastv:ratio=0.33`. Used by the CLI and the bench
+    /// harnesses.
+    pub fn parse(spec: &str) -> Result<PolicyKind, String> {
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, r),
+            None => (spec, ""),
+        };
+        let mut kv = std::collections::BTreeMap::new();
+        for pair in rest.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("bad param '{}' in '{}'", pair, spec))?;
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let f =
+            |k: &str, d: f32| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+        let u = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+        let opt_u = |k: &str| kv.get(k).and_then(|v| v.parse().ok());
+        Ok(match name {
+            "full" => PolicyKind::Full,
+            "hae" => PolicyKind::Hae(HaeParams {
+                r: kv.get("r").and_then(|v| v.parse().ok()),
+                r_rel: f("rrel", 0.6),
+                alpha: f("alpha", 0.05),
+                rc_size: u("rc", 24),
+                prefill_stage: kv.get("stage").map_or(true, |s| s != "decode"),
+                decode_stage: kv.get("stage").map_or(true, |s| s != "prefill"),
+            }),
+            "h2o" => PolicyKind::H2o { budget: opt_u("budget"), recent: u("recent", 16) },
+            "snapkv" => PolicyKind::SnapKv { budget: u("budget", 192), window: u("window", 16) },
+            "adakv" => PolicyKind::AdaKv {
+                budget: opt_u("budget"),
+                recent: u("recent", 16),
+                peak_weight: f("peak", 0.5),
+            },
+            "mustdrop" => PolicyKind::MustDrop {
+                r: f("r", -1.0), // <0 → relative uniform-share threshold
+                merge_sim: f("sim", 0.95),
+                budget: opt_u("budget"),
+            },
+            "fastv" => PolicyKind::FastV { retain_ratio: f("ratio", PAPER_RETAIN_RATIO) },
+            "sparsevlm" => {
+                PolicyKind::SparseVlm { retain_ratio: f("ratio", PAPER_RETAIN_RATIO) }
+            }
+            "tome" => PolicyKind::ToMe { retain_ratio: f("ratio", PAPER_RETAIN_RATIO) },
+            "window" => PolicyKind::Window { sinks: u("sinks", 4), window: u("window", 64) },
+            "random" => PolicyKind::Random { budget: opt_u("budget"), seed: u("seed", 17) as u64 },
+            other => return Err(format!("unknown policy '{}'", other)),
+        })
+    }
+
+    pub fn build(&self) -> Box<dyn EvictionPolicy> {
+        match self.clone() {
+            PolicyKind::Full => Box::new(baselines::FullCache),
+            PolicyKind::Hae(p) => Box::new(Hae::new(HaeConfig {
+                r: p.r,
+                r_rel: p.r_rel,
+                alpha: p.alpha,
+                rc_size: p.rc_size,
+                prefill_stage: p.prefill_stage,
+                decode_stage: p.decode_stage,
+                ..HaeConfig::default()
+            })),
+            PolicyKind::H2o { budget, recent } => {
+                Box::new(h2o::H2o::new(h2o::H2oConfig { budget, recent }))
+            }
+            PolicyKind::SnapKv { budget, window } => {
+                Box::new(baselines::SnapKv::new(budget, window))
+            }
+            PolicyKind::AdaKv { budget, recent, peak_weight } => {
+                Box::new(baselines::AdaKv::new(budget, recent, peak_weight))
+            }
+            PolicyKind::MustDrop { r, merge_sim, budget } => {
+                Box::new(baselines::MustDrop::new(r, merge_sim, budget))
+            }
+            PolicyKind::FastV { retain_ratio } => {
+                Box::new(baselines::FastV { retain_ratio })
+            }
+            PolicyKind::SparseVlm { retain_ratio } => {
+                Box::new(baselines::SparseVlm { retain_ratio })
+            }
+            PolicyKind::ToMe { retain_ratio } => Box::new(baselines::ToMe { retain_ratio }),
+            PolicyKind::Window { sinks, window } => {
+                Box::new(baselines::SlidingWindow { sinks, window })
+            }
+            PolicyKind::Random { budget, seed } => {
+                Box::new(baselines::RandomEvict { budget, rng: Rng::new(seed) })
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::Full => "Full Cache".into(),
+            PolicyKind::Hae(p) => {
+                match (p.prefill_stage, p.decode_stage) {
+                    (true, true) => "HAE (All Stage)".into(),
+                    (true, false) => "HAE (Pre-filling)".into(),
+                    (false, true) => "HAE (Decoding)".into(),
+                    (false, false) => "HAE (disabled)".into(),
+                }
+            }
+            PolicyKind::H2o { .. } => "H2O".into(),
+            PolicyKind::SnapKv { .. } => "SnapKV".into(),
+            PolicyKind::AdaKv { .. } => "AdaKV".into(),
+            PolicyKind::MustDrop { .. } => "MustDrop".into(),
+            PolicyKind::FastV { .. } => "FastV".into(),
+            PolicyKind::SparseVlm { .. } => "SparseVLM".into(),
+            PolicyKind::ToMe { .. } => "ToMe".into(),
+            PolicyKind::Window { .. } => "SlidingWindow".into(),
+            PolicyKind::Random { .. } => "Random".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(PolicyKind::parse("full").unwrap(), PolicyKind::Full);
+        match PolicyKind::parse("hae:r=0.002,rc=64").unwrap() {
+            PolicyKind::Hae(p) => {
+                assert_eq!(p.r, Some(0.002));
+                assert_eq!(p.rc_size, 64);
+                assert!(p.prefill_stage && p.decode_stage);
+            }
+            other => panic!("{:?}", other),
+        }
+        match PolicyKind::parse("hae:stage=prefill").unwrap() {
+            PolicyKind::Hae(p) => {
+                assert!(p.prefill_stage && !p.decode_stage);
+            }
+            other => panic!("{:?}", other),
+        }
+        match PolicyKind::parse("h2o:budget=200").unwrap() {
+            PolicyKind::H2o { budget, .. } => assert_eq!(budget, Some(200)),
+            other => panic!("{:?}", other),
+        }
+        assert!(PolicyKind::parse("bogus").is_err());
+        assert!(PolicyKind::parse("hae:r0.002").is_err());
+    }
+
+    #[test]
+    fn build_all() {
+        for spec in [
+            "full", "hae", "h2o", "snapkv", "adakv", "mustdrop", "fastv",
+            "sparsevlm", "tome", "window", "random",
+        ] {
+            let kind = PolicyKind::parse(spec).unwrap();
+            let p = kind.build();
+            assert!(!p.name().is_empty());
+            assert!(!kind.label().is_empty());
+        }
+    }
+}

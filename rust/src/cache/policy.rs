@@ -1,0 +1,218 @@
+//! Eviction-policy interface shared by HAE and every baseline.
+//!
+//! A policy participates at two points of a request's lifetime, mirroring
+//! the paper's two stages:
+//!
+//! * **prefill** — after the prompt's KV and layer-0 DAP statistics are
+//!   available, the policy decides which prompt slots enter the cache
+//!   (and may rewrite KV rows, e.g. ToMe-style merging);
+//! * **post_step** — after every decode step (scores already accumulated
+//!   into the slab), the policy may *mark* slots (DDES recycle bin —
+//!   marked slots stay attendable) and/or *evict* slots immediately.
+//!
+//! The engine enforces the hard capacity limit: if a step would overflow
+//! the largest bucket it calls `capacity_fallback`, whose default evicts
+//! the lowest-cumulative-score unprotected slot (never the last
+//! `recent_protect` slots).
+
+use crate::model::ModelMeta;
+
+use super::slab::KvSlab;
+
+/// Inputs available to a prefill-stage decision.
+pub struct PrefillCtx<'a> {
+    /// Eq. 1 — layer-0 text→key attention mass per prompt slot
+    pub dap_sum: &'a [f32],
+    /// Eq. 3 — layer-0 max text→key attention per prompt slot
+    pub dap_max: &'a [f32],
+    pub is_vision: &'a [bool],
+    /// valid prompt length (≤ bucket)
+    pub n_tokens: usize,
+    /// `[L, S, H, Dh]` prompt KV (read-only; baselines may derive merges)
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub bucket: usize,
+    pub meta: &'a ModelMeta,
+}
+
+impl<'a> PrefillCtx<'a> {
+    /// Indices of valid vision slots.
+    pub fn vision_slots(&self) -> Vec<usize> {
+        (0..self.n_tokens).filter(|&i| self.is_vision[i]).collect()
+    }
+
+    /// Total Eq. 1 mass over vision slots (the denominator of Eq. 2).
+    pub fn vision_mass(&self) -> f32 {
+        self.vision_slots().iter().map(|&i| self.dap_sum[i]).sum()
+    }
+}
+
+/// Result of a prefill-stage decision.
+pub struct PrefillDecision {
+    /// prompt slot indices to retain, ascending
+    pub retain: Vec<usize>,
+    /// optional rewritten KV slabs `[L, S, H, Dh]` (token-merging baselines)
+    pub kv_override: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl PrefillDecision {
+    pub fn retain_all(n: usize) -> Self {
+        PrefillDecision { retain: (0..n).collect(), kv_override: None }
+    }
+
+    pub fn retain(mut idx: Vec<usize>) -> Self {
+        idx.sort_unstable();
+        idx.dedup();
+        PrefillDecision { retain: idx, kv_override: None }
+    }
+}
+
+/// Inputs available after each decode step.
+pub struct DecodeCtx<'a> {
+    pub slab: &'a KvSlab,
+    /// decode step index within this request (0 = first generated token)
+    pub step: usize,
+    /// live length right after prefill injection (the paper's `l`)
+    pub prefill_len: usize,
+    /// hard limit on live length (largest capacity bucket − 1)
+    pub capacity_limit: usize,
+}
+
+/// What to do after a step.
+#[derive(Debug, Default, Clone)]
+pub struct StepDecision {
+    /// slots to mark into the recycle bin (stay attendable)
+    pub mark: Vec<usize>,
+    /// slots to evict right now
+    pub evict: Vec<usize>,
+}
+
+impl StepDecision {
+    pub fn keep() -> Self {
+        StepDecision::default()
+    }
+}
+
+pub trait EvictionPolicy {
+    fn name(&self) -> &'static str;
+
+    fn prefill(&mut self, ctx: &PrefillCtx) -> PrefillDecision;
+
+    fn post_step(&mut self, ctx: &DecodeCtx) -> StepDecision;
+
+    /// Emergency eviction when the live length hits the hard capacity
+    /// limit and `post_step` freed nothing. Must return ≥ `need` slots.
+    fn capacity_fallback(&mut self, ctx: &DecodeCtx, need: usize) -> Vec<usize> {
+        lowest_score_slots(ctx.slab, need, DEFAULT_RECENT_PROTECT)
+    }
+
+    /// Number of decode-eviction decision computations performed so far
+    /// (the paper's Table 3 argument: H2O sorts every step, DDES amortises).
+    fn decision_count(&self) -> u64 {
+        0
+    }
+}
+
+/// Protect this many most-recent slots from eviction by default (all
+/// policies keep a small recency window, following H2O's recent-token half).
+pub const DEFAULT_RECENT_PROTECT: usize = 8;
+
+/// Indices of the `n` lowest-cumulative-score slots, excluding the last
+/// `protect` slots. Ascending index order.
+pub fn lowest_score_slots(slab: &KvSlab, n: usize, protect: usize) -> Vec<usize> {
+    let len = slab.len();
+    let evictable = len.saturating_sub(protect);
+    let mut idx: Vec<usize> = (0..evictable).collect();
+    idx.sort_by(|&a, &b| {
+        slab.meta()[a]
+            .cum_score
+            .partial_cmp(&slab.meta()[b].cum_score)
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(n);
+    idx.sort_unstable();
+    idx
+}
+
+/// Same, but restricted to unmarked slots (DDES marking pass).
+pub fn lowest_unmarked_slots(slab: &KvSlab, n: usize, protect: usize) -> Vec<usize> {
+    let len = slab.len();
+    let evictable = len.saturating_sub(protect);
+    let mut idx: Vec<usize> = (0..evictable)
+        .filter(|&i| !slab.meta()[i].marked)
+        .collect();
+    idx.sort_by(|&a, &b| {
+        slab.meta()[a]
+            .cum_score
+            .partial_cmp(&slab.meta()[b].cum_score)
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(n);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::slab::Modality;
+    use crate::model::ModelMeta;
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 1,
+            d_head: 2,
+            d_mlp: 8,
+            patch_dim: 4,
+            n_patches: 4,
+            max_pos: 64,
+            dap_layer: 1,
+        }
+    }
+
+    fn slab_with_scores(scores: &[f32]) -> KvSlab {
+        let m = tiny_meta();
+        let mut s = KvSlab::new(&m, 32);
+        for (i, &sc) in scores.iter().enumerate() {
+            s.append(&[0.0, 0.0], &[0.0, 0.0], i as i32, Modality::Text, sc);
+        }
+        s
+    }
+
+    #[test]
+    fn lowest_scores_respect_protection() {
+        let s = slab_with_scores(&[0.5, 0.1, 0.9, 0.05, 0.3]);
+        // protect last 2 slots (indices 3, 4) — lowest among 0..3 is idx 1
+        let picks = lowest_score_slots(&s, 1, 2);
+        assert_eq!(picks, vec![1]);
+        // without protection the global lowest (idx 3) wins
+        let picks = lowest_score_slots(&s, 1, 0);
+        assert_eq!(picks, vec![3]);
+    }
+
+    #[test]
+    fn lowest_returns_ascending() {
+        let s = slab_with_scores(&[0.9, 0.1, 0.8, 0.2, 0.7, 0.3]);
+        let picks = lowest_score_slots(&s, 3, 0);
+        assert_eq!(picks, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn unmarked_filter() {
+        let mut s = slab_with_scores(&[0.1, 0.2, 0.3, 0.4]);
+        s.meta_mut()[0].marked = true;
+        let picks = lowest_unmarked_slots(&s, 1, 0);
+        assert_eq!(picks, vec![1]);
+    }
+
+    #[test]
+    fn prefill_decision_sorts() {
+        let d = PrefillDecision::retain(vec![5, 1, 3, 1]);
+        assert_eq!(d.retain, vec![1, 3, 5]);
+    }
+}

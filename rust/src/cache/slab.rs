@@ -1,0 +1,403 @@
+//! Host-owned per-request KV slab.
+//!
+//! Layout is layer-major `[L, CAP, H, Dh]` (matching the decode executable's
+//! cache input) with a fixed physical capacity; the first `len` slots of
+//! every layer are live. Each live slot carries metadata: original sequence
+//! position, modality, cumulative attention score (the β(C_j) term of paper
+//! Eq. 5) and a recycle-bin mark (DDES). Eviction = compaction: retained
+//! slots are copied down in order, so slot index i always addresses the
+//! same token across K, V and metadata — the slab-integrity property
+//! tested in tests/cache_props.rs.
+
+use crate::model::ModelMeta;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Modality {
+    Vision,
+    Text,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SlotMeta {
+    /// original (global) sequence position of this token
+    pub position: i32,
+    pub modality: Modality,
+    /// cumulative attention mass received since entering the cache
+    /// (layer/head mean — the β(C_j) term of Eq. 5)
+    pub cum_score: f32,
+    /// cumulative max-over-heads attention mass (AdaKV-style adaptive
+    /// scoring input; see cache/baselines.rs)
+    pub cum_peak: f32,
+    /// attention mass received in the most recent step
+    pub last_score: f32,
+    /// DDES recycle-bin mark (still attendable until flushed)
+    pub marked: bool,
+    /// decode steps survived in the cache
+    pub age: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct KvSlab {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    meta: Vec<SlotMeta>,
+    /// physical slots per layer
+    cap: usize,
+    /// floats per slot per layer (H * Dh)
+    row: usize,
+    n_layers: usize,
+}
+
+impl KvSlab {
+    pub fn new(m: &ModelMeta, cap: usize) -> Self {
+        let row = m.n_heads * m.d_head;
+        KvSlab {
+            k: vec![0.0; m.n_layers * cap * row],
+            v: vec![0.0; m.n_layers * cap * row],
+            meta: Vec::with_capacity(cap),
+            cap,
+            row,
+            n_layers: m.n_layers,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn meta(&self) -> &[SlotMeta] {
+        &self.meta
+    }
+
+    pub fn meta_mut(&mut self) -> &mut [SlotMeta] {
+        &mut self.meta
+    }
+
+    /// Live KV bytes (the paper's "KV Cache (MB)" accounting).
+    pub fn kv_bytes(&self) -> usize {
+        self.meta.len() * 2 * self.n_layers * self.row * 4
+    }
+
+    fn slot_offset(&self, layer: usize, slot: usize) -> usize {
+        (layer * self.cap + slot) * self.row
+    }
+
+    /// Append one token's KV. `k_row`/`v_row` are `[L, H, Dh]` (layer-major,
+    /// as returned by the decode executable for one lane).
+    pub fn append(
+        &mut self,
+        k_row: &[f32],
+        v_row: &[f32],
+        position: i32,
+        modality: Modality,
+        init_score: f32,
+    ) -> usize {
+        assert!(self.meta.len() < self.cap, "slab full");
+        assert_eq!(k_row.len(), self.n_layers * self.row);
+        let slot = self.meta.len();
+        for l in 0..self.n_layers {
+            let dst = self.slot_offset(l, slot);
+            let src = l * self.row;
+            self.k[dst..dst + self.row].copy_from_slice(&k_row[src..src + self.row]);
+            self.v[dst..dst + self.row].copy_from_slice(&v_row[src..src + self.row]);
+        }
+        self.meta.push(SlotMeta {
+            position,
+            modality,
+            cum_score: init_score,
+            cum_peak: init_score,
+            last_score: init_score,
+            marked: false,
+            age: 0,
+        });
+        slot
+    }
+
+    /// Bulk-load retained prompt tokens from a prefill output.
+    ///
+    /// `k_src`/`v_src` are `[L, S, H, Dh]` (bucket-major, as emitted by the
+    /// prefill executable); `retain` lists prompt slot indices to keep (in
+    /// ascending order); `modality[i]`/`scores[i]` describe prompt slot i.
+    pub fn inject_prefill(
+        &mut self,
+        k_src: &[f32],
+        v_src: &[f32],
+        bucket: usize,
+        retain: &[usize],
+        modality: &[Modality],
+        scores: &[f32],
+    ) {
+        assert!(self.meta.is_empty(), "inject into non-empty slab");
+        assert!(retain.len() < self.cap, "prefill larger than slab capacity");
+        for (dst_slot, &src_slot) in retain.iter().enumerate() {
+            for l in 0..self.n_layers {
+                let src = (l * bucket + src_slot) * self.row;
+                let dst = self.slot_offset(l, dst_slot);
+                self.k[dst..dst + self.row].copy_from_slice(&k_src[src..src + self.row]);
+                self.v[dst..dst + self.row].copy_from_slice(&v_src[src..src + self.row]);
+            }
+            self.meta.push(SlotMeta {
+                position: src_slot as i32,
+                modality: modality[src_slot],
+                cum_score: scores[src_slot],
+                cum_peak: scores[src_slot],
+                last_score: scores[src_slot],
+                marked: false,
+                age: 0,
+            });
+        }
+    }
+
+    /// Accumulate this step's attention mass into slot scores and ages.
+    /// `mean[i]` is the layer/head-mean mass on slot i, `peak[i]` the
+    /// max-over-heads mass (may be the same slice when peak tracking is
+    /// not needed).
+    pub fn add_scores(&mut self, mean: &[f32], peak: &[f32]) {
+        for (i, m) in self.meta.iter_mut().enumerate() {
+            let s = mean.get(i).copied().unwrap_or(0.0);
+            m.cum_score += s;
+            m.cum_peak += peak.get(i).copied().unwrap_or(s);
+            m.last_score = s;
+            m.age += 1;
+        }
+    }
+
+    /// Keep exactly the slots in `retain` (ascending, deduped), dropping
+    /// the rest. Returns the number of evicted slots.
+    pub fn compact(&mut self, retain: &[usize]) -> usize {
+        debug_assert!(retain.windows(2).all(|w| w[0] < w[1]), "retain must be ascending");
+        let evicted = self.meta.len() - retain.len();
+        if evicted == 0 {
+            return 0;
+        }
+        for (dst_slot, &src_slot) in retain.iter().enumerate() {
+            if dst_slot == src_slot {
+                continue;
+            }
+            for l in 0..self.n_layers {
+                let src = self.slot_offset(l, src_slot);
+                let dst = self.slot_offset(l, dst_slot);
+                let (a, b) = if src > dst { (dst, src) } else { (src, dst) };
+                // non-overlapping because row-sized chunks at distinct slots
+                let _ = (a, b);
+                self.k.copy_within(src..src + self.row, dst);
+                self.v.copy_within(src..src + self.row, dst);
+            }
+            self.meta[dst_slot] = self.meta[src_slot];
+        }
+        self.meta.truncate(retain.len());
+        evicted
+    }
+
+    /// Evict the given slots (any order, deduped internally).
+    pub fn evict(&mut self, evict: &[usize]) -> usize {
+        if evict.is_empty() {
+            return 0;
+        }
+        let mut drop_mask = vec![false; self.meta.len()];
+        for &i in evict {
+            if i < drop_mask.len() {
+                drop_mask[i] = true;
+            }
+        }
+        let retain: Vec<usize> =
+            (0..self.meta.len()).filter(|&i| !drop_mask[i]).collect();
+        self.compact(&retain)
+    }
+
+    /// Copy this slab's live region into a batched decode input at the
+    /// given lane. `dst_k`/`dst_v` are `[B, L, C, H, Dh]`; `cap_c` is the
+    /// batch buffer's capacity bucket (≥ self.len()).
+    pub fn copy_into_lane(
+        &self,
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+        lane: usize,
+        cap_c: usize,
+    ) {
+        let len = self.meta.len();
+        assert!(len <= cap_c, "lane cache {} > bucket {}", len, cap_c);
+        for l in 0..self.n_layers {
+            let src = self.slot_offset(l, 0);
+            let dst = ((lane * self.n_layers + l) * cap_c) * self.row;
+            let n = len * self.row;
+            dst_k[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
+            dst_v[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
+        }
+    }
+
+    /// Raw K row of one slot in one layer (test/diagnostic use).
+    pub fn k_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.slot_offset(layer, slot);
+        &self.k[o..o + self.row]
+    }
+
+    pub fn v_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.slot_offset(layer, slot);
+        &self.v[o..o + self.row]
+    }
+
+    /// Count of marked (recycle-bin) slots.
+    pub fn marked_count(&self) -> usize {
+        self.meta.iter().filter(|m| m.marked).count()
+    }
+
+    /// Indices of marked slots, ascending.
+    pub fn marked_slots(&self) -> Vec<usize> {
+        self.meta
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.marked)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 2,
+            d_mlp: 8,
+            patch_dim: 4,
+            n_patches: 4,
+            max_pos: 64,
+            dap_layer: 1,
+        }
+    }
+
+    fn row_of(val: f32, m: &ModelMeta) -> Vec<f32> {
+        vec![val; m.n_layers * m.n_heads * m.d_head]
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let m = tiny_meta();
+        let mut s = KvSlab::new(&m, 8);
+        for i in 0..5 {
+            s.append(&row_of(i as f32, &m), &row_of(-(i as f32), &m), i as i32,
+                     Modality::Text, 0.1);
+        }
+        assert_eq!(s.len(), 5);
+        for i in 0..5 {
+            assert_eq!(s.k_row(0, i)[0], i as f32);
+            assert_eq!(s.k_row(1, i)[0], i as f32);
+            assert_eq!(s.v_row(0, i)[0], -(i as f32));
+            assert_eq!(s.meta()[i].position, i as i32);
+        }
+    }
+
+    #[test]
+    fn compact_preserves_order_and_data() {
+        let m = tiny_meta();
+        let mut s = KvSlab::new(&m, 8);
+        for i in 0..6 {
+            s.append(&row_of(i as f32, &m), &row_of(i as f32, &m), i as i32,
+                     Modality::Text, 0.0);
+        }
+        let evicted = s.compact(&[0, 2, 5]);
+        assert_eq!(evicted, 3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.k_row(0, 0)[0], 0.0);
+        assert_eq!(s.k_row(0, 1)[0], 2.0);
+        assert_eq!(s.k_row(1, 2)[0], 5.0);
+        assert_eq!(s.meta()[1].position, 2);
+    }
+
+    #[test]
+    fn evict_any_order() {
+        let m = tiny_meta();
+        let mut s = KvSlab::new(&m, 8);
+        for i in 0..6 {
+            s.append(&row_of(i as f32, &m), &row_of(i as f32, &m), i as i32,
+                     Modality::Vision, 0.0);
+        }
+        s.evict(&[4, 1, 1]);
+        assert_eq!(s.len(), 4);
+        let positions: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
+        assert_eq!(positions, vec![0, 2, 3, 5]);
+    }
+
+    #[test]
+    fn inject_prefill_gathers() {
+        let m = tiny_meta();
+        let bucket = 4;
+        let row = m.n_heads * m.d_head;
+        // k_src [L, S, H*Dh]: value = layer*100 + slot
+        let mut k_src = vec![0.0f32; m.n_layers * bucket * row];
+        for l in 0..m.n_layers {
+            for sslot in 0..bucket {
+                let base = (l * bucket + sslot) * row;
+                for x in &mut k_src[base..base + row] {
+                    *x = (l * 100 + sslot) as f32;
+                }
+            }
+        }
+        let v_src = k_src.clone();
+        let mut s = KvSlab::new(&m, 8);
+        let modality = vec![Modality::Vision, Modality::Vision, Modality::Text, Modality::Text];
+        let scores = vec![0.1, 0.2, 0.3, 0.4];
+        s.inject_prefill(&k_src, &v_src, bucket, &[1, 3], &modality, &scores);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.k_row(0, 0)[0], 1.0);
+        assert_eq!(s.k_row(1, 0)[0], 101.0);
+        assert_eq!(s.k_row(0, 1)[0], 3.0);
+        assert_eq!(s.meta()[0].modality, Modality::Vision);
+        assert_eq!(s.meta()[1].position, 3);
+        assert!((s.meta()[1].cum_score - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn copy_into_lane_layout() {
+        let m = tiny_meta();
+        let row = m.n_heads * m.d_head;
+        let mut s = KvSlab::new(&m, 8);
+        for i in 0..3 {
+            s.append(&row_of(i as f32 + 1.0, &m), &row_of(0.0, &m), i as i32,
+                     Modality::Text, 0.0);
+        }
+        let (b, c) = (2, 4);
+        let mut dst_k = vec![0.0f32; b * m.n_layers * c * row];
+        let mut dst_v = dst_k.clone();
+        s.copy_into_lane(&mut dst_k, &mut dst_v, 1, c);
+        // lane 0 untouched
+        assert!(dst_k[..m.n_layers * c * row].iter().all(|&x| x == 0.0));
+        // lane 1, layer 0, slot 1 = 2.0
+        let off = (1 * m.n_layers + 0) * c * row + 1 * row;
+        assert_eq!(dst_k[off], 2.0);
+    }
+
+    #[test]
+    fn kv_bytes_counts_live_only() {
+        let m = tiny_meta();
+        let mut s = KvSlab::new(&m, 8);
+        assert_eq!(s.kv_bytes(), 0);
+        s.append(&row_of(0.0, &m), &row_of(0.0, &m), 0, Modality::Text, 0.0);
+        assert_eq!(s.kv_bytes(), 2 * m.n_layers * m.n_heads * m.d_head * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "slab full")]
+    fn append_past_capacity_panics() {
+        let m = tiny_meta();
+        let mut s = KvSlab::new(&m, 2);
+        for i in 0..3 {
+            s.append(&row_of(0.0, &m), &row_of(0.0, &m), i, Modality::Text, 0.0);
+        }
+    }
+}

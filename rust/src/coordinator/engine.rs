@@ -1,0 +1,506 @@
+//! The serving engine: prefill → continuous-batched decode with
+//! policy-driven KV eviction.
+//!
+//! The engine is the leader loop of the L3 coordinator. It owns the PJRT
+//! runtime, assembles batched decode inputs from per-request host slabs,
+//! samples tokens, feeds attention scores back into the policies and
+//! applies their eviction decisions. Capacity bucketing (DESIGN.md §2)
+//! happens here: each decode step runs on the smallest compiled capacity
+//! that fits the longest live cache in the batch — the mechanism by which
+//! eviction buys wall-clock speed in a static-shape runtime.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::{DecodeCtx, KvSlab, Modality, PolicyKind, PrefillCtx};
+use crate::model::vocab;
+use crate::runtime::{Runtime, StepTiming};
+use crate::util::rng::Rng;
+use crate::util::stats::argmax;
+use crate::workload::Request;
+
+use super::request_state::{ActiveRequest, EvictionEvent, RequestStats};
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub policy: PolicyKind,
+    /// 0.0 = greedy
+    pub temperature: f32,
+    /// sample from the top-k logits when temperature > 0
+    pub top_k: usize,
+    pub seed: u64,
+    /// keep per-step logits on each request (fidelity eval; memory-heavy)
+    pub capture_logits: bool,
+    /// keep per-step (position, score) snapshots (theory harness)
+    pub capture_scores: bool,
+    /// decode batch width (must be one of the compiled batch sizes)
+    pub batch: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            temperature: 0.0,
+            top_k: 8,
+            seed: 1,
+            capture_logits: false,
+            capture_scores: false,
+            batch: 1,
+        }
+    }
+}
+
+/// Aggregate timing of one batched decode step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepReport {
+    pub capacity: usize,
+    pub lanes: usize,
+    pub pjrt_s: f64,
+    pub coord_s: f64,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: EngineConfig,
+    rng: Rng,
+    /// scratch batch buffers, reused across steps (hot-path allocation
+    /// avoidance; sized for the largest capacity bucket)
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+    /// component timing of the most recent decode step (perf harness)
+    last_timing: StepTiming,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Engine> {
+        if !rt.manifest.shapes.decode_batches.contains(&cfg.batch) {
+            bail!(
+                "batch {} not compiled (available: {:?})",
+                cfg.batch,
+                rt.manifest.shapes.decode_batches
+            );
+        }
+        let m = rt.meta();
+        let cap = rt.manifest.shapes.cache_capacity;
+        let n = cfg.batch * m.n_layers * cap * m.n_heads * m.d_head;
+        let rng = Rng::new(cfg.seed);
+        Ok(Engine {
+            rt,
+            cfg,
+            rng,
+            scratch_k: vec![0.0; n],
+            scratch_v: vec![0.0; n],
+            last_timing: StepTiming::default(),
+        })
+    }
+
+    /// (upload, execute, download) seconds of the most recent decode step.
+    pub fn last_timing(&self) -> (f64, f64, f64) {
+        (self.last_timing.upload_s, self.last_timing.execute_s, self.last_timing.download_s)
+    }
+
+    /// Hard limit on live slots (one below the largest compiled capacity —
+    /// the incoming token always needs a free slot).
+    pub fn capacity_limit(&self) -> usize {
+        self.rt.manifest.shapes.cache_capacity - 1
+    }
+
+    // ------------------------------------------------------------------
+    // prefill
+    // ------------------------------------------------------------------
+
+    /// Run prefill for a request and admit it with a fresh policy instance.
+    pub fn prefill(&mut self, req: Request) -> Result<ActiveRequest> {
+        let t_start = Instant::now();
+        let m = self.rt.meta().clone();
+        let n = req.prompt_len();
+        let bucket = self
+            .rt
+            .manifest
+            .prefill_bucket(n)
+            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds largest bucket", n))?;
+
+        // pad to bucket
+        let mut ids = req.ids.clone();
+        ids.resize(bucket, vocab::PAD);
+        let mut patches = req.patches.clone();
+        patches.resize(bucket * m.patch_dim, 0.0);
+        let mut is_vision_f: Vec<f32> =
+            req.is_vision.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        is_vision_f.resize(bucket, 0.0);
+
+        let (out, timing) = self.rt.prefill(bucket, &ids, &patches, &is_vision_f, n)?;
+
+        let t_coord = Instant::now();
+        let mut policy = self.cfg.policy.build();
+        let mut is_vision = req.is_vision.clone();
+        is_vision.resize(bucket, false);
+        let pctx = PrefillCtx {
+            dap_sum: &out.dap_sum,
+            dap_max: &out.dap_max,
+            is_vision: &is_vision,
+            n_tokens: n,
+            k: &out.k,
+            v: &out.v,
+            bucket,
+            meta: &m,
+        };
+        let decision = policy.prefill(&pctx);
+        if decision.retain.len() >= self.rt.manifest.shapes.cache_capacity {
+            bail!("prefill retain set exceeds cache capacity");
+        }
+
+        let modality: Vec<Modality> = is_vision
+            .iter()
+            .map(|&b| if b { Modality::Vision } else { Modality::Text })
+            .collect();
+        let mut slab = KvSlab::new(&m, self.rt.manifest.shapes.cache_capacity);
+        match &decision.kv_override {
+            Some((k, v)) => slab.inject_prefill(
+                k,
+                v,
+                bucket,
+                &decision.retain,
+                &modality,
+                &out.dap_sum,
+            ),
+            None => slab.inject_prefill(
+                &out.k,
+                &out.v,
+                bucket,
+                &decision.retain,
+                &modality,
+                &out.dap_sum,
+            ),
+        }
+
+        let prefill_len = slab.len();
+        let first_token = self.sample(&out.logits);
+        let mut stats = RequestStats {
+            prefill_s: timing.total_s(),
+            prompt_tokens: n,
+            vision_tokens: req.n_vision(),
+            pruned_at_prefill: n - prefill_len,
+            peak_kv_bytes: slab.kv_bytes(),
+            ..RequestStats::default()
+        };
+        stats.coord_s += t_coord.elapsed().as_secs_f64();
+        stats.decisions = policy.decision_count();
+        let _ = t_start;
+
+        let mut ar = ActiveRequest {
+            pos: n as i32,
+            pending_token: first_token,
+            req,
+            slab,
+            policy,
+            generated: Vec::new(),
+            prefill_len,
+            done: false,
+            forced: None,
+            logits_trace: Vec::new(),
+            score_trace: Vec::new(),
+            evictions: Vec::new(),
+            stats,
+        };
+        if self.cfg.capture_logits {
+            ar.logits_trace.push(out.logits.clone());
+        }
+        // teacher-forcing replaces the sampled first token too (set by
+        // generate_forced below before any decode step runs)
+        ar.generated.push(first_token);
+        self.check_done(&mut ar);
+        Ok(ar)
+    }
+
+    // ------------------------------------------------------------------
+    // decode
+    // ------------------------------------------------------------------
+
+    /// One batched decode step over up to `cfg.batch` unfinished lanes.
+    pub fn decode_step(&mut self, lanes: &mut [&mut ActiveRequest]) -> Result<StepReport> {
+        let b = self.cfg.batch;
+        if lanes.len() > b {
+            bail!("{} lanes > batch width {}", lanes.len(), b);
+        }
+        let live: Vec<usize> =
+            (0..lanes.len()).filter(|&i| !lanes[i].done).collect();
+        if live.is_empty() {
+            return Ok(StepReport::default());
+        }
+        let m = self.rt.meta().clone();
+        let t0 = Instant::now();
+
+        // capacity bucket: smallest compiled C strictly above the longest
+        // live cache in the batch
+        let max_len = live.iter().map(|&i| lanes[i].slab.len()).max().unwrap();
+        let capacity = self
+            .rt
+            .manifest
+            .capacity_bucket(max_len)
+            .ok_or_else(|| anyhow!("cache length {} exceeds all buckets", max_len))?;
+
+        let row = m.n_heads * m.d_head;
+        let slab_n = b * m.n_layers * capacity * row;
+        // scratch regions beyond each lane's live length are NOT zeroed:
+        // stale floats are finite and the decode graph masks slots ≥ len
+        // before the softmax, so skipping the clear saves a full
+        // buffer-sized memset per step (§Perf opt 1).
+
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut lengths = vec![0i32; b];
+        for (lane, &i) in live.iter().enumerate() {
+            let ar = &lanes[i];
+            tokens[lane] = ar.pending_token;
+            positions[lane] = ar.pos;
+            lengths[lane] = ar.slab.len() as i32;
+            ar.slab.copy_into_lane(
+                &mut self.scratch_k[..slab_n],
+                &mut self.scratch_v[..slab_n],
+                lane,
+                capacity,
+            );
+        }
+        let assemble_s = t0.elapsed().as_secs_f64();
+
+        let (out, timing) = self.rt.decode(
+            b,
+            capacity,
+            &tokens,
+            &positions,
+            &self.scratch_k[..slab_n],
+            &self.scratch_v[..slab_n],
+            &lengths,
+        )?;
+
+        self.last_timing = timing;
+        let t1 = Instant::now();
+        for (lane, &i) in live.iter().enumerate() {
+            let ar = &mut lanes[i];
+            let step = ar.generated.len() - 1; // index of the token just processed
+
+            // 1. append the processed token's KV
+            let k_new = out.lane_kv(&m, &out.k_new, lane).to_vec();
+            let v_new = out.lane_kv(&m, &out.v_new, lane).to_vec();
+            let self_score = out.lane_self_score(lane);
+            let modality = Modality::Text; // generated tokens are text
+            ar.slab.append(&k_new, &v_new, ar.pos, modality, self_score);
+            ar.pos += 1;
+
+            // 2. accumulate this step's attention mass (mean + peak,
+            // already reduced in-graph — §Perf opt 2)
+            ar.slab.add_scores(out.lane_mean(lane), out.lane_peak(lane));
+            if self.cfg.capture_scores {
+                let snap: Vec<(i32, f32)> = ar
+                    .slab
+                    .meta()
+                    .iter()
+                    .enumerate()
+                    .map(|(c, sm)| (sm.position, out.lane_mean(lane)[c]))
+                    .collect();
+                ar.score_trace.push(snap);
+            }
+
+            // 3. policy decision
+            let ctx = DecodeCtx {
+                slab: &ar.slab,
+                step,
+                prefill_len: ar.prefill_len,
+                capacity_limit: self.rt.manifest.shapes.cache_capacity - 1,
+            };
+            let decision = ar.policy.post_step(&ctx);
+            for &s in &decision.mark {
+                ar.slab.meta_mut()[s].marked = true;
+            }
+            if !decision.evict.is_empty() {
+                let victims: Vec<(i32, f32, bool)> = decision
+                    .evict
+                    .iter()
+                    .map(|&s| {
+                        let sm = &ar.slab.meta()[s];
+                        (sm.position, sm.cum_score, sm.marked)
+                    })
+                    .collect();
+                ar.evictions.push(EvictionEvent { step, victims });
+                ar.stats.evicted_at_decode += ar.slab.evict(&decision.evict);
+            }
+            // hard capacity fallback
+            let limit = self.rt.manifest.shapes.cache_capacity - 1;
+            if ar.slab.len() >= limit {
+                let need = ar.slab.len() + 1 - limit;
+                let ctx = DecodeCtx {
+                    slab: &ar.slab,
+                    step,
+                    prefill_len: ar.prefill_len,
+                    capacity_limit: limit,
+                };
+                let force = ar.policy.capacity_fallback(&ctx, need);
+                let victims: Vec<(i32, f32, bool)> = force
+                    .iter()
+                    .map(|&s| {
+                        let sm = &ar.slab.meta()[s];
+                        (sm.position, sm.cum_score, sm.marked)
+                    })
+                    .collect();
+                ar.evictions.push(EvictionEvent { step, victims });
+                ar.stats.evicted_at_decode += ar.slab.evict(&force);
+            }
+
+            // 4. next token
+            let logits = out.lane_logits(&m, lane);
+            if self.cfg.capture_logits {
+                ar.logits_trace.push(logits.to_vec());
+            }
+            let next = match &ar.forced {
+                Some(script) if ar.generated.len() < script.len() => {
+                    script[ar.generated.len()]
+                }
+                _ => self.sample(logits),
+            };
+            ar.pending_token = next;
+            ar.generated.push(next);
+
+            // 5. accounting + termination
+            ar.stats.steps += 1;
+            ar.stats.decode_s += timing.total_s() / live.len() as f64;
+            ar.stats.decisions = ar.policy.decision_count();
+            ar.stats.peak_kv_bytes = ar.stats.peak_kv_bytes.max(ar.slab.kv_bytes());
+            ar.stats.kv_byte_steps += ar.slab.kv_bytes() as u64;
+            self.check_done(ar);
+        }
+        let coord_s = assemble_s + t1.elapsed().as_secs_f64();
+        for &i in &live {
+            lanes[i].stats.coord_s += coord_s / live.len() as f64;
+        }
+        Ok(StepReport {
+            capacity,
+            lanes: live.len(),
+            pjrt_s: timing.total_s(),
+            coord_s,
+        })
+    }
+
+    /// Termination / continuation rules: hard stops are max_new_tokens and
+    /// the positional-table limit; EOS stops the request unless the
+    /// request's min_new_tokens floor hasn't been reached, in which case a
+    /// new story segment is started instead (the multi-segment generation
+    /// the paper's Seed-Story pipeline performs across turns).
+    fn check_done(&self, ar: &mut ActiveRequest) {
+        let m = self.rt.meta();
+        let last = *ar.generated.last().unwrap_or(&vocab::PAD);
+        if ar.generated.len() >= ar.req.max_new_tokens
+            || (ar.pos as usize) + 1 >= m.max_pos
+        {
+            ar.done = true;
+            return;
+        }
+        if last == vocab::EOS && ar.forced.is_none() {
+            if ar.generated.len() < ar.req.min_new_tokens {
+                let n = ar.generated.len();
+                ar.generated[n - 1] = vocab::STORY_MARK;
+                ar.pending_token = vocab::STORY_MARK;
+            } else {
+                ar.done = true;
+            }
+        }
+    }
+
+    fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.cfg.temperature <= 0.0 {
+            return argmax(logits) as i32;
+        }
+        let k = self.cfg.top_k.max(1).min(logits.len());
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(k);
+        let inv_t = 1.0 / self.cfg.temperature;
+        let weights: Vec<f64> = {
+            let mx = logits[idx[0]];
+            idx.iter().map(|&i| (((logits[i] - mx) * inv_t) as f64).exp()).collect()
+        };
+        idx[self.rng.weighted(&weights)] as i32
+    }
+
+    // ------------------------------------------------------------------
+    // convenience drivers
+    // ------------------------------------------------------------------
+
+    /// Generate a full completion for one request (batch lane 0 only).
+    pub fn generate(&mut self, req: Request) -> Result<ActiveRequest> {
+        let mut ar = self.prefill(req)?;
+        while !ar.done {
+            let mut lanes = [&mut ar];
+            self.decode_step(&mut lanes)?;
+        }
+        Ok(ar)
+    }
+
+    /// Generate with a teacher-forcing script (fidelity evaluation): the
+    /// fed tokens follow `script`, while logits/evictions evolve under this
+    /// engine's policy.
+    pub fn generate_forced(&mut self, req: Request, script: &[i32]) -> Result<ActiveRequest> {
+        let mut ar = self.prefill(req)?;
+        ar.forced = Some(script.to_vec());
+        if !script.is_empty() {
+            // replace the sampled first token so the trajectory matches
+            ar.generated[0] = script[0];
+            ar.pending_token = script[0];
+            ar.done = false;
+            self.check_done(&mut ar);
+        }
+        while !ar.done && ar.generated.len() < script.len() {
+            let mut lanes = [&mut ar];
+            self.decode_step(&mut lanes)?;
+        }
+        Ok(ar)
+    }
+
+    /// Run a set of requests to completion with continuous batching;
+    /// returns finished requests in completion order plus step reports.
+    pub fn run_batched(
+        &mut self,
+        requests: Vec<Request>,
+    ) -> Result<(Vec<ActiveRequest>, Vec<StepReport>)> {
+        let b = self.cfg.batch;
+        let mut queue: std::collections::VecDeque<Request> = requests.into();
+        let mut lanes: Vec<Option<ActiveRequest>> = (0..b).map(|_| None).collect();
+        let mut finished = Vec::new();
+        let mut reports = Vec::new();
+
+        loop {
+            // admit
+            for lane in lanes.iter_mut() {
+                if lane.is_none() {
+                    if let Some(req) = queue.pop_front() {
+                        let ar = self.prefill(req)?;
+                        if ar.done {
+                            finished.push(ar);
+                        } else {
+                            *lane = Some(ar);
+                        }
+                    }
+                }
+            }
+            let mut active: Vec<&mut ActiveRequest> =
+                lanes.iter_mut().filter_map(|l| l.as_mut()).collect();
+            if active.is_empty() {
+                if queue.is_empty() {
+                    break;
+                }
+                continue;
+            }
+            reports.push(self.decode_step(&mut active)?);
+            drop(active);
+            // retire
+            for lane in lanes.iter_mut() {
+                if lane.as_ref().map_or(false, |ar| ar.done) {
+                    finished.push(lane.take().unwrap());
+                }
+            }
+        }
+        Ok((finished, reports))
+    }
+}

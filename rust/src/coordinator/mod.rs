@@ -1,0 +1,9 @@
+//! L3 coordinator — the paper's system contribution as a serving runtime:
+//! request admission, continuous batching, capacity-bucketed decode
+//! scheduling and policy-driven KV management.
+
+pub mod engine;
+pub mod request_state;
+
+pub use engine::{Engine, EngineConfig, StepReport};
+pub use request_state::{ActiveRequest, EvictionEvent, RequestStats};

@@ -1,0 +1,85 @@
+//! Per-request serving state: the KV slab, the policy instance, the
+//! generation trace and the accounting the benches report.
+
+use crate::cache::{EvictionPolicy, KvSlab};
+use crate::workload::Request;
+
+/// One eviction event (theory instrumentation: Corollary 2.1 compares the
+/// realized eviction losses of DDES vs greedy).
+#[derive(Debug, Clone)]
+pub struct EvictionEvent {
+    /// decode step at which the eviction was applied
+    pub step: usize,
+    /// (original position, cumulative score at eviction, was marked earlier)
+    pub victims: Vec<(i32, f32, bool)>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RequestStats {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    /// host-side coordination time (everything outside PJRT calls)
+    pub coord_s: f64,
+    pub steps: usize,
+    pub prompt_tokens: usize,
+    pub vision_tokens: usize,
+    pub pruned_at_prefill: usize,
+    pub evicted_at_decode: usize,
+    /// peak live KV bytes over the request lifetime
+    pub peak_kv_bytes: usize,
+    /// sum over steps of live KV bytes (for mean occupancy)
+    pub kv_byte_steps: u64,
+    /// eviction-decision computations (sorts) the policy performed
+    pub decisions: u64,
+}
+
+impl RequestStats {
+    pub fn mean_kv_bytes(&self) -> f64 {
+        if self.steps == 0 {
+            self.peak_kv_bytes as f64
+        } else {
+            self.kv_byte_steps as f64 / self.steps as f64
+        }
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.prefill_s + self.decode_s
+    }
+}
+
+/// A request admitted into the engine.
+pub struct ActiveRequest {
+    pub req: Request,
+    pub slab: KvSlab,
+    pub policy: Box<dyn EvictionPolicy>,
+    /// tokens generated so far (excludes prompt)
+    pub generated: Vec<i32>,
+    /// next global position index (monotonic — survives eviction)
+    pub pos: i32,
+    /// live length right after prefill injection (the paper's `l`)
+    pub prefill_len: usize,
+    /// token to feed at the next decode step
+    pub pending_token: i32,
+    pub done: bool,
+    /// teacher-forcing script (fidelity eval): when set, pending tokens
+    /// come from here instead of sampling
+    pub forced: Option<Vec<i32>>,
+    /// per-step logits (kept only when the engine's capture_logits is on)
+    pub logits_trace: Vec<Vec<f32>>,
+    /// per-step (position, mean attention mass) snapshots (kept only when
+    /// capture_scores is on; theory forward-loss measurement)
+    pub score_trace: Vec<Vec<(i32, f32)>>,
+    pub evictions: Vec<EvictionEvent>,
+    pub stats: RequestStats,
+}
+
+impl ActiveRequest {
+    pub fn generated_len(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// true once the request has produced all it is going to produce
+    pub fn finished(&self) -> bool {
+        self.done
+    }
+}

@@ -1,0 +1,28 @@
+//! Evaluation metrics — the measurable stand-ins for the paper's benchmark
+//! scores (DESIGN.md §3).
+//!
+//! Eviction papers hold the model fixed and ask how much output quality a
+//! smaller cache costs, so the primary metrics are *fidelity to the
+//! full-cache model* under teacher forcing (top-1 agreement, logit KL) plus
+//! task accuracy on the QA families and degeneration statistics for long
+//! generation.
+
+pub mod fidelity;
+pub mod quality;
+
+pub use fidelity::{fidelity, Fidelity};
+pub use quality::{degeneration, Degeneration};
+
+/// KV-cache accounting in the units the paper's tables use.
+pub fn kv_mib(bytes: f64) -> f64 {
+    bytes / (1024.0 * 1024.0)
+}
+
+/// Scale a per-sample measurement the way Table 3 reports "KV Cache (MB)"
+/// (per-sample peak KV, averaged over samples).
+pub fn mean_peak_kv_mib(peaks: &[usize]) -> f64 {
+    if peaks.is_empty() {
+        return 0.0;
+    }
+    kv_mib(peaks.iter().map(|&b| b as f64).sum::<f64>() / peaks.len() as f64)
+}

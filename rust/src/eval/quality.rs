@@ -1,0 +1,124 @@
+//! Long-generation quality proxies (the Table 2 judge-score stand-ins).
+//!
+//! The paper scores story generations with an LLM judge on style /
+//! engagement / coherence. Offline, the measurable core of those judgments
+//! is (a) whether eviction made the text degenerate — repetition loops,
+//! collapsed vocabulary — and (b) whether the story still references its
+//! images. These map to:
+//!
+//! * `distinct_2` — bigram diversity (style/engagement proxy; higher = better)
+//! * `repetition_rate` — fraction of 4-token windows repeating an earlier
+//!   window (lower = better)
+//! * `grounding` — fraction of story segments mentioning their image's
+//!   color/shape words (coherence proxy)
+
+use std::collections::BTreeSet;
+
+use crate::model::vocab;
+use crate::workload::ImageClass;
+
+#[derive(Debug, Clone, Default)]
+pub struct Degeneration {
+    pub distinct_2: f64,
+    pub repetition_rate: f64,
+    pub grounding: f64,
+    pub tokens: usize,
+}
+
+/// Compute degeneration metrics over generated tokens. `images` are the
+/// prompt's image classes for the grounding check (may be empty).
+pub fn degeneration(tokens: &[i32], images: &[ImageClass]) -> Degeneration {
+    let n = tokens.len();
+    if n == 0 {
+        return Degeneration::default();
+    }
+
+    // distinct-2
+    let mut bigrams = BTreeSet::new();
+    let mut total_bi = 0usize;
+    for w in tokens.windows(2) {
+        bigrams.insert((w[0], w[1]));
+        total_bi += 1;
+    }
+    let distinct_2 = if total_bi == 0 {
+        1.0
+    } else {
+        bigrams.len() as f64 / total_bi as f64
+    };
+
+    // repetition: 4-gram windows seen before
+    let mut seen = BTreeSet::new();
+    let mut repeats = 0usize;
+    let mut windows = 0usize;
+    for w in tokens.windows(4) {
+        let key = (w[0], w[1], w[2], w[3]);
+        if !seen.insert(key) {
+            repeats += 1;
+        }
+        windows += 1;
+    }
+    let repetition_rate = if windows == 0 {
+        0.0
+    } else {
+        repeats as f64 / windows as f64
+    };
+
+    // grounding: does the text mention any prompt image's class words?
+    let grounding = if images.is_empty() {
+        0.0
+    } else {
+        let mentioned = images
+            .iter()
+            .filter(|img| {
+                tokens.iter().any(|&t| {
+                    t == vocab::color_token(img.color) || t == vocab::shape_token(img.shape)
+                })
+            })
+            .count();
+        mentioned as f64 / images.len() as f64
+    };
+
+    Degeneration { distinct_2, repetition_rate, grounding, tokens: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varied_text_scores_high_diversity() {
+        let toks: Vec<i32> = (64..128).collect();
+        let d = degeneration(&toks, &[]);
+        assert!((d.distinct_2 - 1.0).abs() < 1e-9);
+        assert_eq!(d.repetition_rate, 0.0);
+    }
+
+    #[test]
+    fn loops_detected() {
+        let toks: Vec<i32> = std::iter::repeat([64, 65, 66, 67])
+            .take(10)
+            .flatten()
+            .collect();
+        let d = degeneration(&toks, &[]);
+        assert!(d.repetition_rate > 0.7, "rate {}", d.repetition_rate);
+        assert!(d.distinct_2 < 0.2);
+    }
+
+    #[test]
+    fn grounding_counts_mentions() {
+        let imgs = [
+            ImageClass { color: 1, shape: 2 },
+            ImageClass { color: 3, shape: 4 },
+        ];
+        // mentions color 1 only
+        let toks = [vocab::color_token(1), 70, 71];
+        let d = degeneration(&toks, &imgs);
+        assert!((d.grounding - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_tokens() {
+        let d = degeneration(&[], &[]);
+        assert_eq!(d.tokens, 0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Shared infrastructure for the bench harnesses (benches/*.rs).
+//!
+//! criterion is unavailable offline, so each bench is a `harness = false`
+//! binary that uses these helpers: engine construction, the
+//! reference-vs-policy fidelity protocol, timing, and fixed-width table
+//! printing that mirrors the paper's table layout.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cache::PolicyKind;
+use crate::coordinator::{ActiveRequest, Engine, EngineConfig};
+use crate::eval::{fidelity, Fidelity};
+use crate::runtime::Runtime;
+use crate::workload::{Request, StoryGrammar};
+
+/// Artifact directory: $HAE_ARTIFACTS or ./artifacts.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var("HAE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Bench sample-count scale: $HAE_BENCH_N overrides the default.
+pub fn bench_n(default: usize) -> usize {
+    std::env::var("HAE_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn load_runtime() -> Result<Runtime> {
+    Runtime::load(&artifact_dir())
+}
+
+pub fn load_grammar(dir: &Path) -> StoryGrammar {
+    StoryGrammar::load(dir).unwrap_or_else(|_| StoryGrammar::uniform())
+}
+
+/// Build a fresh engine for a policy (each policy gets its own engine so
+/// executable compile time never leaks into another policy's measurement;
+/// call `engine.rt.warmup` before timing).
+pub fn engine_for(policy: PolicyKind, batch: usize, capture: bool) -> Result<Engine> {
+    let rt = load_runtime()?;
+    Engine::new(
+        rt,
+        EngineConfig {
+            policy,
+            batch,
+            capture_logits: capture,
+            capture_scores: false,
+            temperature: 0.0,
+            top_k: 8,
+            seed: 1,
+        },
+    )
+}
+
+/// Result of running one policy over a request set.
+pub struct PolicyRun {
+    pub label: String,
+    pub finished: Vec<ActiveRequest>,
+    pub wall_s: f64,
+}
+
+/// Run requests to completion (batch width from engine cfg), timed.
+pub fn run_policy(engine: &mut Engine, requests: Vec<Request>) -> Result<PolicyRun> {
+    engine.rt.warmup(&[engine.cfg.batch])?;
+    let label = engine.cfg.policy.label();
+    let t0 = Instant::now();
+    let (finished, _) = engine.run_batched(requests)?;
+    Ok(PolicyRun { label, finished, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// QA answer accuracy. The answer is the SECOND generated token: prompts
+/// end one token before the answer slot, so the first token (ANS_MARK /
+/// STORY_MARK) comes from prefill logits and the answer itself is produced
+/// through the policy-managed cache (see workload::requests).
+pub fn answer_accuracy(finished: &[ActiveRequest]) -> f64 {
+    let qa: Vec<&ActiveRequest> =
+        finished.iter().filter(|ar| ar.req.expected_answer.is_some()).collect();
+    if qa.is_empty() {
+        return 0.0;
+    }
+    let correct = qa
+        .iter()
+        .filter(|ar| ar.generated.get(1).copied() == ar.req.expected_answer)
+        .count();
+    correct as f64 / qa.len() as f64
+}
+
+/// Fidelity protocol: greedy full-cache reference scripts + teacher-forced
+/// policy replay over the same requests. Returns per-request fidelities.
+pub fn fidelity_vs_full(
+    policy: PolicyKind,
+    requests: &[Request],
+) -> Result<Vec<Fidelity>> {
+    let mut reference = engine_for(PolicyKind::Full, 1, true)?;
+    let mut scripts = Vec::new();
+    for req in requests {
+        let ar = reference.generate(req.clone())?;
+        scripts.push((ar.generated.clone(), ar.logits_trace));
+    }
+    let mut policy_engine = engine_for(policy, 1, true)?;
+    let mut out = Vec::new();
+    for (req, (script, ref_trace)) in requests.iter().zip(&scripts) {
+        let ar = policy_engine.generate_forced(req.clone(), script)?;
+        out.push(fidelity(ref_trace, &ar.logits_trace));
+    }
+    Ok(out)
+}
+
+pub fn mean_fidelity(fids: &[Fidelity]) -> Fidelity {
+    if fids.is_empty() {
+        return Fidelity::default();
+    }
+    Fidelity {
+        top1_agreement: fids.iter().map(|f| f.top1_agreement).sum::<f64>()
+            / fids.len() as f64,
+        mean_kl: fids.iter().map(|f| f.mean_kl).sum::<f64>() / fids.len() as f64,
+        p95_kl: fids.iter().map(|f| f.p95_kl).sum::<f64>() / fids.len() as f64,
+        steps: fids.iter().map(|f| f.steps).sum(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// table printing
+// ---------------------------------------------------------------------------
+
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n## {}", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2)));
+        }
+        println!("{}", sep);
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{:.3}", x)
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{:.4}", x)
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("demo", &["a", "bee"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["long cell".into(), "x".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn accuracy_counts_first_token() {
+        // empty set → 0
+        assert_eq!(answer_accuracy(&[]), 0.0);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.005), "1.00");
+        assert_eq!(pct(0.973), "97.3%");
+    }
+}

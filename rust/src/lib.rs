@@ -1,0 +1,19 @@
+//! hae-serve — Hierarchical Adaptive Eviction for KV-cache management in
+//! multimodal LLM serving.
+//!
+//! Rust + JAX + Pallas three-layer reproduction of Ma et al., "Hierarchical
+//! Adaptive Eviction for KV Cache Management in Multimodal Language Models"
+//! (2026). See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod attention;
+pub mod cache;
+pub mod coordinator;
+pub mod eval;
+pub mod harness;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod theory;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,224 @@
+//! hae-serve CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         — print manifest / model / artifact info
+//!   generate [--kind K] [--policy P] [--n N] [--temperature T] [--batch B]
+//!                                — run N requests end-to-end and report
+//!   serve [--addr A] [--policy P] [--batch B]
+//!                                — JSON-lines TCP server
+//!   analyze [--n N]              — print observation stats (Figs. 2/3 style)
+//!
+//! Policies: full | hae[:r=..,alpha=..,rc=..,stage=prefill|decode] | h2o |
+//!           snapkv | adakv | mustdrop | fastv | sparsevlm | tome | window |
+//!           random   (see cache::PolicyKind::parse)
+
+use anyhow::{anyhow, Result};
+use hae_serve::cache::PolicyKind;
+use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::harness;
+use hae_serve::model::vocab;
+use hae_serve::runtime::Runtime;
+use hae_serve::server::{serve, ServerConfig};
+use hae_serve::util::args::Args;
+use hae_serve::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
+
+const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
+  --artifacts DIR   artifact directory (default ./artifacts or $HAE_ARTIFACTS)
+  --policy SPEC     eviction policy (default hae)
+  --kind KIND       workload: qa|story|video|mixed (default story)
+  --n N             number of requests (default 4)
+  --batch B         decode batch width (default 1)
+  --temperature T   sampling temperature (default 0 = greedy)
+  --seed S          workload seed (default 42)
+  --addr A          serve: listen address (default 127.0.0.1:8472)
+  --verbose         generate: print full token streams";
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["verbose", "help"]);
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{}", USAGE);
+        return Ok(());
+    }
+
+    let artifact_dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(harness::artifact_dir);
+
+    match args.positional[0].as_str() {
+        "info" => info(&artifact_dir),
+        "generate" => generate(&artifact_dir, &args),
+        "serve" => run_server(&artifact_dir, &args),
+        "analyze" => analyze(&artifact_dir, &args),
+        other => Err(anyhow!("unknown subcommand '{}'\n{}", other, USAGE)),
+    }
+}
+
+fn build_engine(
+    artifact_dir: &std::path::Path,
+    args: &Args,
+) -> Result<(Engine, StoryGrammar)> {
+    let rt = Runtime::load(artifact_dir)?;
+    let policy = PolicyKind::parse(args.get_or("policy", "hae"))
+        .map_err(|e| anyhow!(e))?;
+    let cfg = EngineConfig {
+        policy,
+        temperature: args.f32("temperature", 0.0),
+        top_k: args.usize("top-k", 8),
+        seed: args.u64("engine-seed", 1),
+        capture_logits: false,
+        capture_scores: false,
+        batch: args.usize("batch", 1),
+    };
+    let grammar =
+        StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
+    Ok((Engine::new(rt, cfg)?, grammar))
+}
+
+fn info(artifact_dir: &std::path::Path) -> Result<()> {
+    let rt = Runtime::load(artifact_dir)?;
+    let m = rt.meta();
+    let sh = &rt.manifest.shapes;
+    println!("artifact dir : {}", artifact_dir.display());
+    println!(
+        "model        : TinyMM — {} layers, d_model {}, {}×{} heads, vocab {}, mlp {}",
+        m.n_layers, m.d_model, m.n_heads, m.d_head, m.vocab, m.d_mlp
+    );
+    println!(
+        "vision       : {} patches × {} dims per image",
+        m.n_patches, m.patch_dim
+    );
+    println!(
+        "weights      : {} tensors, {} params, trained {} steps (seed {})",
+        rt.manifest.weights.len(),
+        rt.manifest.weights.iter().map(|w| w.numel).sum::<usize>(),
+        rt.manifest.train_steps,
+        rt.manifest.seed,
+    );
+    println!("prefill      : buckets {:?}", sh.prefill_buckets);
+    println!(
+        "decode       : batches {:?} × capacities {:?}",
+        sh.decode_batches, sh.decode_capacities
+    );
+    println!("analysis     : buckets {:?}", sh.analysis_buckets);
+    println!(
+        "kv per token : {} bytes (f32, K+V, all layers)",
+        m.kv_bytes_per_token()
+    );
+    Ok(())
+}
+
+fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
+    let (mut engine, grammar) = build_engine(artifact_dir, args)?;
+    let meta = engine.rt.meta().clone();
+    let kind = WorkloadKind::parse(args.get_or("kind", "story"))
+        .ok_or_else(|| anyhow!("unknown kind"))?;
+    let n = args.usize("n", 4);
+    let seed = args.u64("seed", 42);
+    let verbose = args.flag("verbose");
+
+    let requests = RequestBuilder::new(&meta, &grammar, seed).make_batch(kind, n);
+    engine.rt.warmup(&[engine.cfg.batch])?;
+    let t0 = std::time::Instant::now();
+    let (finished, reports) = engine.run_batched(requests)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut total_tokens = 0usize;
+    let mut correct = 0usize;
+    let mut qa = 0usize;
+    for ar in &finished {
+        total_tokens += ar.generated.len();
+        if let Some(exp) = ar.req.expected_answer {
+            qa += 1;
+            if ar.generated.get(1) == Some(&exp) {
+                correct += 1;
+            }
+        }
+        if verbose {
+            let text: Vec<String> =
+                ar.generated.iter().map(|&t| vocab::describe(t)).collect();
+            println!(
+                "req {} [{:?}] pruned {} evicted {} peak_kv {} KiB:\n  {}",
+                ar.req.id,
+                ar.req.kind,
+                ar.stats.pruned_at_prefill,
+                ar.stats.evicted_at_decode,
+                ar.stats.peak_kv_bytes / 1024,
+                text.join(" ")
+            );
+        }
+    }
+    let pjrt: f64 = reports.iter().map(|r| r.pjrt_s).sum();
+    let coord: f64 = reports.iter().map(|r| r.coord_s).sum();
+    println!(
+        "policy {} | {} requests | {:.2}s wall | {:.1} tok/s | {:.0}% PJRT / {:.0}% coordinator",
+        engine.cfg.policy.label(),
+        finished.len(),
+        wall,
+        total_tokens as f64 / wall,
+        100.0 * pjrt / wall,
+        100.0 * coord / wall,
+    );
+    if qa > 0 {
+        println!(
+            "QA accuracy: {}/{} = {:.1}%",
+            correct,
+            qa,
+            100.0 * correct as f64 / qa as f64
+        );
+    }
+    Ok(())
+}
+
+fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
+    let (engine, grammar) = build_engine(artifact_dir, args)?;
+    let cfg = ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
+        queue_depth: args.usize("queue", 64),
+    };
+    serve(engine, cfg, grammar)
+}
+
+fn analyze(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
+    let rt = Runtime::load(artifact_dir)?;
+    let meta = rt.meta().clone();
+    let grammar =
+        StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
+    let mut builder = RequestBuilder::new(&meta, &grammar, args.u64("seed", 42));
+    let n = args.usize("n", 20);
+    let bucket = *rt.manifest.shapes.analysis_buckets.first().unwrap();
+
+    let mut acc = vec![[0.0f64; 3]; meta.n_layers];
+    let mut count = 0;
+    for _ in 0..n {
+        let req = builder.make(WorkloadKind::Understanding);
+        let mut ids = req.ids.clone();
+        ids.resize(bucket, vocab::PAD);
+        let mut patches = req.patches.clone();
+        patches.resize(bucket * meta.patch_dim, 0.0);
+        let mut isv: Vec<f32> =
+            req.is_vision.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        isv.resize(bucket, 0.0);
+        let (out, _) = rt.analysis(bucket, &ids, &patches, &isv, req.prompt_len())?;
+        for l in 0..meta.n_layers {
+            let (o, v, t) = out.layer_sparsity(l);
+            acc[l][0] += o as f64;
+            acc[l][1] += v as f64;
+            acc[l][2] += t as f64;
+        }
+        count += 1;
+    }
+    println!("attention sparsity over {} QA samples (relative ε):", count);
+    println!("{:<8}{:>10}{:>10}{:>10}", "layer", "overall", "visual", "text");
+    for (l, a) in acc.iter().enumerate() {
+        println!(
+            "{:<8}{:>9.1}%{:>9.1}%{:>9.1}%",
+            l,
+            100.0 * a[0] / count as f64,
+            100.0 * a[1] / count as f64,
+            100.0 * a[2] / count as f64
+        );
+    }
+    Ok(())
+}

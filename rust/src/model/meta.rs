@@ -1,0 +1,262 @@
+//! Model/artifact metadata parsed from artifacts/manifest.json.
+//!
+//! The manifest is the contract between the python compile path and the
+//! rust runtime: model dimensions, the weight table (name/shape/offset into
+//! weights.bin) and the artifact table (which HLO files exist at which
+//! static shapes). `Manifest::load` validates internal consistency so shape
+//! mismatches fail loudly at startup instead of inside PJRT.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_mlp: usize,
+    pub patch_dim: usize,
+    pub n_patches: usize,
+    pub max_pos: usize,
+    /// layer whose attention feeds the DAP statistics (manifest "dap_layer")
+    pub dap_layer: usize,
+}
+
+impl ModelMeta {
+    pub fn d_attn(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    /// Bytes of one KV entry (K+V for one token across all layers), f32.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_heads * self.d_head * 4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactShapes {
+    pub prefill_buckets: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub decode_capacities: Vec<usize>,
+    pub analysis_buckets: Vec<usize>,
+    pub cache_capacity: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub shapes: ArtifactShapes,
+    pub weights: Vec<WeightEntry>,
+    pub seed: u64,
+    pub train_steps: usize,
+}
+
+fn usize_field(j: &Json, path: &[&str]) -> Result<usize> {
+    j.path(path)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("manifest missing field {:?}", path))
+}
+
+fn usize_list(j: &Json, path: &[&str]) -> Result<Vec<usize>> {
+    let arr = j
+        .path(path)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing list {:?}", path))?;
+    arr.iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("non-integer in {:?}", path)))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let model = ModelMeta {
+            vocab: usize_field(&j, &["model", "vocab"])?,
+            d_model: usize_field(&j, &["model", "d_model"])?,
+            n_layers: usize_field(&j, &["model", "n_layers"])?,
+            n_heads: usize_field(&j, &["model", "n_heads"])?,
+            d_head: usize_field(&j, &["model", "d_head"])?,
+            d_mlp: usize_field(&j, &["model", "d_mlp"])?,
+            patch_dim: usize_field(&j, &["model", "patch_dim"])?,
+            n_patches: usize_field(&j, &["model", "n_patches"])?,
+            max_pos: usize_field(&j, &["model", "max_pos"])?,
+            dap_layer: j.path(&["model", "dap_layer"]).and_then(|v| v.as_usize()).unwrap_or(0),
+        };
+
+        let shapes = ArtifactShapes {
+            prefill_buckets: usize_list(&j, &["artifacts", "prefill_buckets"])?,
+            decode_batches: usize_list(&j, &["artifacts", "decode_batches"])?,
+            decode_capacities: usize_list(&j, &["artifacts", "decode_capacities"])?,
+            analysis_buckets: usize_list(&j, &["artifacts", "analysis_buckets"])?,
+            cache_capacity: usize_field(&j, &["artifacts", "cache_capacity"])?,
+        };
+
+        let weights_json = j
+            .get("weights")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing weights table"))?;
+        let mut weights = Vec::with_capacity(weights_json.len());
+        for w in weights_json {
+            let name = w
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("weight entry missing name"))?
+                .to_string();
+            let shape = w
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("weight {} missing shape", name))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect::<Vec<_>>();
+            let offset = usize_field(w, &["offset"])?;
+            let numel = usize_field(w, &["numel"])?;
+            if shape.iter().product::<usize>() != numel {
+                bail!("weight {}: shape {:?} != numel {}", name, shape, numel);
+            }
+            weights.push(WeightEntry { name, shape, offset, numel });
+        }
+
+        // offsets must be contiguous and ascending
+        let mut expected = 0usize;
+        for w in &weights {
+            if w.offset != expected {
+                bail!("weight {} at offset {} (expected {})", w.name, w.offset, expected);
+            }
+            expected += w.numel * 4;
+        }
+
+        let seed = j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+        let train_steps =
+            j.get("train_steps").and_then(|v| v.as_usize()).unwrap_or(0);
+
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            shapes,
+            weights,
+            seed,
+            train_steps,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.shapes.decode_capacities.is_empty() {
+            bail!("no decode capacities in manifest");
+        }
+        let mut caps = self.shapes.decode_capacities.clone();
+        caps.sort_unstable();
+        if caps != self.shapes.decode_capacities {
+            bail!("decode capacities must be sorted ascending");
+        }
+        if *caps.last().unwrap() != self.shapes.cache_capacity {
+            bail!("largest decode capacity must equal cache_capacity");
+        }
+        if self.model.max_pos < self.shapes.cache_capacity {
+            bail!("positional table smaller than cache capacity");
+        }
+        let total: usize = self.weights.iter().map(|w| w.numel).sum();
+        let bin = self.dir.join("weights.bin");
+        if let Ok(md) = std::fs::metadata(&bin) {
+            if md.len() as usize != total * 4 {
+                bail!(
+                    "weights.bin size {} != manifest total {} bytes",
+                    md.len(),
+                    total * 4
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{}.hlo.txt", name))
+    }
+
+    /// Smallest prefill bucket that fits `n` tokens.
+    pub fn prefill_bucket(&self, n: usize) -> Option<usize> {
+        self.shapes.prefill_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Smallest decode capacity bucket that fits `len` live slots
+    /// (strictly greater, because the new token needs a free slot).
+    pub fn capacity_bucket(&self, len: usize) -> Option<usize> {
+        self.shapes.decode_capacities.iter().copied().find(|&c| c > len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = match repo_artifacts() {
+            Some(m) => m,
+            None => return, // artifacts not built in this environment
+        };
+        assert!(m.model.vocab >= 256);
+        assert_eq!(m.model.d_attn(), m.model.n_heads * m.model.d_head);
+        assert!(!m.weights.is_empty());
+        assert_eq!(m.weights[0].offset, 0);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = match repo_artifacts() {
+            Some(m) => m,
+            None => return,
+        };
+        let smallest = m.shapes.prefill_buckets[0];
+        assert_eq!(m.prefill_bucket(1), Some(smallest));
+        assert_eq!(m.prefill_bucket(smallest), Some(smallest));
+        assert!(m.prefill_bucket(100_000).is_none());
+        // capacity bucket must strictly exceed live length
+        let c0 = m.shapes.decode_capacities[0];
+        assert_eq!(m.capacity_bucket(c0 - 1), Some(c0));
+        assert!(m.capacity_bucket(c0).unwrap() > c0);
+    }
+
+    #[test]
+    fn kv_accounting() {
+        let meta = ModelMeta {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            d_mlp: 256,
+            patch_dim: 32,
+            n_patches: 16,
+            max_pos: 640,
+            dap_layer: 1,
+        };
+        // 2 (K+V) * 4 layers * 4 heads * 32 dh * 4 bytes
+        assert_eq!(meta.kv_bytes_per_token(), 4096);
+    }
+}

@@ -1,0 +1,7 @@
+//! Model metadata and vocabulary (the rust mirror of the python compile
+//! path's contracts).
+
+pub mod meta;
+pub mod vocab;
+
+pub use meta::{ArtifactShapes, Manifest, ModelMeta, WeightEntry};

@@ -1,0 +1,98 @@
+//! Token-id layout of the TinyMM synthetic vocabulary.
+//!
+//! MUST stay in sync with python/compile/data.py — the model was trained on
+//! this layout, and the rust workload generators emit it at serving time.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const IMG: i32 = 3;
+
+pub const Q_COLOR: i32 = 8;
+pub const Q_SHAPE: i32 = 9;
+pub const ANS_MARK: i32 = 10;
+pub const STORY_MARK: i32 = 11;
+
+pub const COLOR_BASE: i32 = 16;
+pub const SHAPE_BASE: i32 = 24;
+pub const STORY_BASE: i32 = 64;
+
+pub const N_COLORS: usize = 8;
+pub const N_SHAPES: usize = 8;
+pub const N_STORY_WORDS: usize = 160;
+
+pub fn color_token(color: usize) -> i32 {
+    debug_assert!(color < N_COLORS);
+    COLOR_BASE + color as i32
+}
+
+pub fn shape_token(shape: usize) -> i32 {
+    debug_assert!(shape < N_SHAPES);
+    SHAPE_BASE + shape as i32
+}
+
+pub fn story_token(word: usize) -> i32 {
+    debug_assert!(word < N_STORY_WORDS);
+    STORY_BASE + word as i32
+}
+
+pub fn is_color_token(t: i32) -> bool {
+    (COLOR_BASE..COLOR_BASE + N_COLORS as i32).contains(&t)
+}
+
+pub fn is_shape_token(t: i32) -> bool {
+    (SHAPE_BASE..SHAPE_BASE + N_SHAPES as i32).contains(&t)
+}
+
+pub fn is_story_token(t: i32) -> bool {
+    (STORY_BASE..STORY_BASE + N_STORY_WORDS as i32).contains(&t)
+}
+
+/// Human-readable rendering for logs/examples.
+pub fn describe(t: i32) -> String {
+    const COLORS: [&str; 8] =
+        ["red", "blue", "green", "yellow", "purple", "orange", "black", "white"];
+    const SHAPES: [&str; 8] =
+        ["circle", "square", "triangle", "star", "hex", "ring", "cross", "wave"];
+    match t {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        EOS => "<eos>".into(),
+        IMG => "<img>".into(),
+        Q_COLOR => "Q:color".into(),
+        Q_SHAPE => "Q:shape".into(),
+        ANS_MARK => "A:".into(),
+        STORY_MARK => "<story>".into(),
+        t if is_color_token(t) => COLORS[(t - COLOR_BASE) as usize].into(),
+        t if is_shape_token(t) => SHAPES[(t - SHAPE_BASE) as usize].into(),
+        t if is_story_token(t) => format!("w{}", t - STORY_BASE),
+        t => format!("tok{}", t),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_disjoint() {
+        for c in 0..N_COLORS {
+            assert!(is_color_token(color_token(c)));
+            assert!(!is_shape_token(color_token(c)));
+            assert!(!is_story_token(color_token(c)));
+        }
+        for s in 0..N_SHAPES {
+            assert!(is_shape_token(shape_token(s)));
+        }
+        for w in [0, 1, N_STORY_WORDS - 1] {
+            assert!(is_story_token(story_token(w)));
+        }
+    }
+
+    #[test]
+    fn describe_total() {
+        for t in 0..512 {
+            assert!(!describe(t).is_empty());
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Runtime — loads AOT HLO artifacts and executes them via PJRT.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO text →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! Weights are uploaded once at startup and stay device-resident as
+//! `PjRtBuffer`s; per-step tensors (token ids, KV caches) are uploaded per
+//! call — see DESIGN.md §2 for why caches are host-owned.
+//!
+//! Executables are compiled lazily on first use and cached, so binaries
+//! that only ever decode at batch 1 never pay for the batch-4 variants.
+
+pub mod outputs;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::{Manifest, ModelMeta};
+pub use outputs::{AnalysisOut, DecodeOut, PrefillOut};
+
+/// Wall-clock accounting for one executable call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTiming {
+    /// host→device uploads (seconds)
+    pub upload_s: f64,
+    /// PJRT execute (seconds)
+    pub execute_s: f64,
+    /// device→host readback + unpacking (seconds)
+    pub download_s: f64,
+}
+
+impl StepTiming {
+    pub fn total_s(&self) -> f64 {
+        self.upload_s + self.execute_s + self.download_s
+    }
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    weights: Vec<PjRtBuffer>,
+    prefill: RefCell<BTreeMap<usize, PjRtLoadedExecutable>>,
+    decode: RefCell<BTreeMap<(usize, usize), PjRtLoadedExecutable>>,
+    analysis: RefCell<BTreeMap<usize, PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Load manifest + weights and initialise the PJRT CPU client.
+    pub fn load(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let weights = upload_weights(&client, &manifest)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            weights,
+            prefill: RefCell::new(BTreeMap::new()),
+            decode: RefCell::new(BTreeMap::new()),
+            analysis: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.manifest.model
+    }
+
+    fn compile(&self, name: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.hlo_path(name);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", name))
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    fn run(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        step_args: Vec<PjRtBuffer>,
+    ) -> Result<(Vec<Literal>, StepTiming)> {
+        let mut timing = StepTiming::default();
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.extend(step_args.iter());
+        let t0 = Instant::now();
+        let out = exe.execute_b::<&PjRtBuffer>(&args)?;
+        timing.execute_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        timing.download_s = t1.elapsed().as_secs_f64();
+        Ok((parts, timing))
+    }
+
+    /// Run one prefill over `ids/patches/is_vision` (padded to `bucket`).
+    ///
+    /// `n_tokens` is the number of valid positions (≤ bucket).
+    pub fn prefill(
+        &self,
+        bucket: usize,
+        ids: &[i32],
+        patches: &[f32],
+        is_vision: &[f32],
+        n_tokens: usize,
+    ) -> Result<(PrefillOut, StepTiming)> {
+        let m = self.meta();
+        if ids.len() != bucket || is_vision.len() != bucket {
+            bail!("prefill args not padded to bucket {}", bucket);
+        }
+        if patches.len() != bucket * m.patch_dim {
+            bail!("patches len {} != {}", patches.len(), bucket * m.patch_dim);
+        }
+        if !self.prefill.borrow().contains_key(&bucket) {
+            if !self.manifest.shapes.prefill_buckets.contains(&bucket) {
+                bail!("no prefill artifact for bucket {}", bucket);
+            }
+            let exe = self.compile(&format!("prefill_s{}", bucket))?;
+            self.prefill.borrow_mut().insert(bucket, exe);
+        }
+        let t0 = Instant::now();
+        let args = vec![
+            self.buf_i32(ids, &[bucket])?,
+            self.buf_f32(patches, &[bucket, m.patch_dim])?,
+            self.buf_f32(is_vision, &[bucket])?,
+            self.buf_i32(&[n_tokens as i32], &[])?,
+        ];
+        let upload_s = t0.elapsed().as_secs_f64();
+        let cache = self.prefill.borrow();
+        let exe = cache.get(&bucket).unwrap();
+        let (parts, mut timing) = self.run(exe, args)?;
+        timing.upload_s = upload_s;
+        let out = PrefillOut::from_literals(parts, m, bucket)?;
+        Ok((out, timing))
+    }
+
+    /// Run one batched decode step at (batch, capacity).
+    ///
+    /// `k_cache`/`v_cache` are `[B, L, C, H, Dh]` host slabs; `lengths[b]`
+    /// live slots per lane. Lanes past the live batch can carry anything —
+    /// set their length to 0 and token/pos to 0.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        batch: usize,
+        capacity: usize,
+        tokens: &[i32],
+        positions: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        lengths: &[i32],
+    ) -> Result<(DecodeOut, StepTiming)> {
+        let m = self.meta();
+        let slab = m.n_layers * capacity * m.n_heads * m.d_head;
+        if tokens.len() != batch || positions.len() != batch || lengths.len() != batch {
+            bail!("decode scalar args must have len {}", batch);
+        }
+        if k_cache.len() != batch * slab || v_cache.len() != batch * slab {
+            bail!(
+                "decode cache len {} != {} (B{} C{})",
+                k_cache.len(),
+                batch * slab,
+                batch,
+                capacity
+            );
+        }
+        for (b, &l) in lengths.iter().enumerate() {
+            if l as usize >= capacity {
+                bail!("lane {}: length {} must be < capacity {}", b, l, capacity);
+            }
+        }
+        let key = (batch, capacity);
+        if !self.decode.borrow().contains_key(&key) {
+            if !self.manifest.shapes.decode_batches.contains(&batch)
+                || !self.manifest.shapes.decode_capacities.contains(&capacity)
+            {
+                bail!("no decode artifact for batch {} capacity {}", batch, capacity);
+            }
+            let exe = self.compile(&format!("decode_b{}_c{}", batch, capacity))?;
+            self.decode.borrow_mut().insert(key, exe);
+        }
+        let dims = [batch, m.n_layers, capacity, m.n_heads, m.d_head];
+        let t0 = Instant::now();
+        let args = vec![
+            self.buf_i32(tokens, &[batch])?,
+            self.buf_i32(positions, &[batch])?,
+            self.buf_f32(k_cache, &dims)?,
+            self.buf_f32(v_cache, &dims)?,
+            self.buf_i32(lengths, &[batch])?,
+        ];
+        let upload_s = t0.elapsed().as_secs_f64();
+        let cache = self.decode.borrow();
+        let exe = cache.get(&key).unwrap();
+        let (parts, mut timing) = self.run(exe, args)?;
+        timing.upload_s = upload_s;
+        let out = DecodeOut::from_literals(parts, m, batch, capacity)?;
+        Ok((out, timing))
+    }
+
+    /// Run the analysis (instrumented prefill) variant.
+    pub fn analysis(
+        &self,
+        bucket: usize,
+        ids: &[i32],
+        patches: &[f32],
+        is_vision: &[f32],
+        n_tokens: usize,
+    ) -> Result<(AnalysisOut, StepTiming)> {
+        let m = self.meta();
+        if !self.analysis.borrow().contains_key(&bucket) {
+            if !self.manifest.shapes.analysis_buckets.contains(&bucket) {
+                bail!("no analysis artifact for bucket {}", bucket);
+            }
+            let exe = self.compile(&format!("analysis_s{}", bucket))?;
+            self.analysis.borrow_mut().insert(bucket, exe);
+        }
+        let t0 = Instant::now();
+        let args = vec![
+            self.buf_i32(ids, &[bucket])?,
+            self.buf_f32(patches, &[bucket, m.patch_dim])?,
+            self.buf_f32(is_vision, &[bucket])?,
+            self.buf_i32(&[n_tokens as i32], &[])?,
+        ];
+        let upload_s = t0.elapsed().as_secs_f64();
+        let cache = self.analysis.borrow();
+        let exe = cache.get(&bucket).unwrap();
+        let (parts, mut timing) = self.run(exe, args)?;
+        timing.upload_s = upload_s;
+        let out = AnalysisOut::from_literals(parts, m, bucket)?;
+        Ok((out, timing))
+    }
+
+    /// Pre-compile a set of executables (used by the server to avoid
+    /// first-request latency spikes).
+    pub fn warmup(&self, batches: &[usize]) -> Result<()> {
+        for &b in &self.manifest.shapes.prefill_buckets.clone() {
+            if !self.prefill.borrow().contains_key(&b) {
+                let exe = self.compile(&format!("prefill_s{}", b))?;
+                self.prefill.borrow_mut().insert(b, exe);
+            }
+        }
+        for &bt in batches {
+            for &c in &self.manifest.shapes.decode_capacities.clone() {
+                let key = (bt, c);
+                if !self.decode.borrow().contains_key(&key) {
+                    let exe = self.compile(&format!("decode_b{}_c{}", bt, c))?;
+                    self.decode.borrow_mut().insert(key, exe);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn upload_weights(client: &PjRtClient, manifest: &Manifest) -> Result<Vec<PjRtBuffer>> {
+    let bin = manifest.dir.join("weights.bin");
+    let bytes = std::fs::read(&bin)
+        .with_context(|| format!("reading {} (run `make artifacts`)", bin.display()))?;
+    let floats: &[f32] = unsafe {
+        std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4)
+    };
+    let mut out = Vec::with_capacity(manifest.weights.len());
+    for w in &manifest.weights {
+        let start = w.offset / 4;
+        let data = &floats[start..start + w.numel];
+        let buf = client
+            .buffer_from_host_buffer::<f32>(data, &w.shape, None)
+            .with_context(|| format!("uploading weight {}", w.name))?;
+        out.push(buf);
+    }
+    Ok(out)
+}

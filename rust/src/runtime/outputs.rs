@@ -1,0 +1,184 @@
+//! Typed views over the tuple literals returned by the AOT executables.
+//!
+//! The output orders here mirror the return statements in
+//! python/compile/model.py — any change there must be reflected here (the
+//! shape checks below catch drift at the first call).
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::model::ModelMeta;
+
+fn take_f32(lit: &Literal, expect: usize, what: &str) -> Result<Vec<f32>> {
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != expect {
+        bail!("{}: got {} elements, expected {}", what, v.len(), expect);
+    }
+    Ok(v)
+}
+
+/// Prefill result: KV cache for the prompt + layer-0 DAP statistics.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// `[vocab]` — logits at the last valid position
+    pub logits: Vec<f32>,
+    /// `[L, S, H, Dh]` slot-major KV
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// `[S]` — Eq. 1 text→key attention mass per column (layer 0)
+    pub dap_sum: Vec<f32>,
+    /// `[S]` — Eq. 3 max text→key attention per column (layer 0)
+    pub dap_max: Vec<f32>,
+    pub bucket: usize,
+}
+
+impl PrefillOut {
+    pub fn from_literals(parts: Vec<Literal>, m: &ModelMeta, bucket: usize) -> Result<Self> {
+        if parts.len() != 5 {
+            bail!("prefill returned {} outputs, expected 5", parts.len());
+        }
+        let kv = m.n_layers * bucket * m.n_heads * m.d_head;
+        Ok(PrefillOut {
+            logits: take_f32(&parts[0], m.vocab, "prefill.logits")?,
+            k: take_f32(&parts[1], kv, "prefill.k")?,
+            v: take_f32(&parts[2], kv, "prefill.v")?,
+            dap_sum: take_f32(&parts[3], bucket, "prefill.dap_sum")?,
+            dap_max: take_f32(&parts[4], bucket, "prefill.dap_max")?,
+            bucket,
+        })
+    }
+
+    /// Copy one token's K (or V) row `[L, H, Dh]` out of the bucket-major
+    /// slab. `src` must be `self.k` or `self.v`.
+    pub fn token_kv(&self, src: &[f32], m: &ModelMeta, slot: usize) -> Vec<f32> {
+        let row = m.n_heads * m.d_head;
+        let mut out = Vec::with_capacity(m.n_layers * row);
+        for l in 0..m.n_layers {
+            let base = (l * self.bucket + slot) * row;
+            out.extend_from_slice(&src[base..base + row]);
+        }
+        out
+    }
+}
+
+/// One decode step for a batch.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// `[B, vocab]`
+    pub logits: Vec<f32>,
+    /// `[B, L, H, Dh]` — K/V of the token just processed
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+    /// `[B, C]` — layer/head-mean probability mass per cache slot
+    pub attn_mean: Vec<f32>,
+    /// `[B, C]` — max-over-heads of the layer-mean mass (AdaKV signal)
+    pub attn_peak: Vec<f32>,
+    /// `[B]` — mean mass on the new token itself
+    pub self_mean: Vec<f32>,
+    pub batch: usize,
+    pub capacity: usize,
+}
+
+impl DecodeOut {
+    pub fn from_literals(
+        parts: Vec<Literal>,
+        m: &ModelMeta,
+        batch: usize,
+        capacity: usize,
+    ) -> Result<Self> {
+        if parts.len() != 6 {
+            bail!("decode returned {} outputs, expected 6", parts.len());
+        }
+        let row = m.n_heads * m.d_head;
+        Ok(DecodeOut {
+            logits: take_f32(&parts[0], batch * m.vocab, "decode.logits")?,
+            k_new: take_f32(&parts[1], batch * m.n_layers * row, "decode.k_new")?,
+            v_new: take_f32(&parts[2], batch * m.n_layers * row, "decode.v_new")?,
+            attn_mean: take_f32(&parts[3], batch * capacity, "decode.attn_mean")?,
+            attn_peak: take_f32(&parts[4], batch * capacity, "decode.attn_peak")?,
+            self_mean: take_f32(&parts[5], batch, "decode.self_mean")?,
+            batch,
+            capacity,
+        })
+    }
+
+    pub fn lane_logits<'a>(&'a self, m: &ModelMeta, lane: usize) -> &'a [f32] {
+        &self.logits[lane * m.vocab..(lane + 1) * m.vocab]
+    }
+
+    /// `[L, H, Dh]` new-token K (or V) for one lane. `src` must be
+    /// `self.k_new` or `self.v_new`.
+    pub fn lane_kv<'a>(&'a self, m: &ModelMeta, src: &'a [f32], lane: usize) -> &'a [f32] {
+        let n = m.n_layers * m.n_heads * m.d_head;
+        &src[lane * n..(lane + 1) * n]
+    }
+
+    /// Layer/head-mean attention mass per cache slot for one lane.
+    pub fn lane_mean<'a>(&'a self, lane: usize) -> &'a [f32] {
+        &self.attn_mean[lane * self.capacity..(lane + 1) * self.capacity]
+    }
+
+    /// Max-over-heads mass per cache slot for one lane.
+    pub fn lane_peak<'a>(&'a self, lane: usize) -> &'a [f32] {
+        &self.attn_peak[lane * self.capacity..(lane + 1) * self.capacity]
+    }
+
+    /// Mean self-attention mass (initial score of the new slot).
+    pub fn lane_self_score(&self, lane: usize) -> f32 {
+        self.self_mean[lane]
+    }
+}
+
+/// Instrumented prefill (observation harnesses: Figs. 2/3/5).
+#[derive(Debug, Clone)]
+pub struct AnalysisOut {
+    pub logits: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub dap_sum: Vec<f32>,
+    pub dap_max: Vec<f32>,
+    /// `[L, 3]` — (overall, visual, text) sparsity per layer (Eq. 7)
+    pub sparsity: Vec<f32>,
+    /// `[L, S]` — per-layer DAP column sums
+    pub colsum: Vec<f32>,
+    /// `[L, S]` — per-layer DAP column maxes
+    pub colmax: Vec<f32>,
+    /// `[H, S, S]` — layer-0 attention probabilities
+    pub probs0: Vec<f32>,
+    pub bucket: usize,
+}
+
+impl AnalysisOut {
+    pub fn from_literals(parts: Vec<Literal>, m: &ModelMeta, bucket: usize) -> Result<Self> {
+        if parts.len() != 9 {
+            bail!("analysis returned {} outputs, expected 9", parts.len());
+        }
+        let kv = m.n_layers * bucket * m.n_heads * m.d_head;
+        Ok(AnalysisOut {
+            logits: take_f32(&parts[0], m.vocab, "analysis.logits")?,
+            k: take_f32(&parts[1], kv, "analysis.k")?,
+            v: take_f32(&parts[2], kv, "analysis.v")?,
+            dap_sum: take_f32(&parts[3], bucket, "analysis.dap_sum")?,
+            dap_max: take_f32(&parts[4], bucket, "analysis.dap_max")?,
+            sparsity: take_f32(&parts[5], m.n_layers * 3, "analysis.sparsity")?,
+            colsum: take_f32(&parts[6], m.n_layers * bucket, "analysis.colsum")?,
+            colmax: take_f32(&parts[7], m.n_layers * bucket, "analysis.colmax")?,
+            probs0: take_f32(&parts[8], m.n_heads * bucket * bucket, "analysis.probs0")?,
+            bucket,
+        })
+    }
+
+    /// (overall, visual, text) sparsity for a layer.
+    pub fn layer_sparsity(&self, layer: usize) -> (f32, f32, f32) {
+        let b = layer * 3;
+        (self.sparsity[b], self.sparsity[b + 1], self.sparsity[b + 2])
+    }
+
+    pub fn layer_colsum(&self, layer: usize) -> &[f32] {
+        &self.colsum[layer * self.bucket..(layer + 1) * self.bucket]
+    }
+
+    pub fn layer_colmax(&self, layer: usize) -> &[f32] {
+        &self.colmax[layer * self.bucket..(layer + 1) * self.bucket]
+    }
+}

@@ -1,0 +1,217 @@
+//! JSON-lines TCP front end.
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"id": 1, "kind": "story"|"qa"|"video"|"mixed",
+//!              "max_new": 64, "seed": 123}
+//!            (requests are synthesized server-side from the workload
+//!             generators — the "tokenizer + vision encoder" of this
+//!             system; an external-prompt variant would marshal patches,
+//!             which the JSON substrate supports but the demo doesn't need)
+//!   response: {"id": 1, "tokens": [...], "text": "...",
+//!              "prefill_ms": ..., "decode_ms": ..., "steps": N,
+//!              "pruned": N, "evicted": N, "peak_kv_kib": N}
+//!
+//! Architecture: acceptor threads feed a bounded channel into the single
+//! engine thread (the PJRT client is single-threaded by design); responses
+//! flow back through per-connection channels. This is the leader/worker
+//! split of DESIGN.md §2 at CPU scale.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::Engine;
+use crate::model::vocab;
+use crate::util::json::{num, obj, s, Json};
+use crate::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
+
+pub struct ServerConfig {
+    pub addr: String,
+    /// max queued requests before backpressure (connection blocks)
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:8472".into(), queue_depth: 64 }
+    }
+}
+
+struct Job {
+    line: String,
+    reply: mpsc::Sender<String>,
+}
+
+/// Parse one request line into a workload Request (synthesized).
+fn synthesize(
+    line: &str,
+    builder: &mut RequestBuilder,
+) -> Result<(i64, crate::workload::Request)> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad json: {}", e))?;
+    let id = j.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
+    let kind = j
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .and_then(WorkloadKind::parse)
+        .ok_or_else(|| anyhow!("missing/unknown kind"))?;
+    let mut req = builder.make(kind);
+    if let Some(mx) = j.get("max_new").and_then(|v| v.as_usize()) {
+        req.max_new_tokens = mx;
+        req.min_new_tokens = req.min_new_tokens.min(mx);
+    }
+    Ok((id, req))
+}
+
+fn respond(id: i64, ar: &crate::coordinator::ActiveRequest) -> String {
+    let text: Vec<String> = ar.generated.iter().map(|&t| vocab::describe(t)).collect();
+    obj(vec![
+        ("id", num(id as f64)),
+        (
+            "tokens",
+            Json::Arr(ar.generated.iter().map(|&t| num(t as f64)).collect()),
+        ),
+        ("text", s(&text.join(" "))),
+        ("prefill_ms", num(ar.stats.prefill_s * 1000.0)),
+        ("decode_ms", num(ar.stats.decode_s * 1000.0)),
+        ("steps", num(ar.stats.steps as f64)),
+        ("pruned", num(ar.stats.pruned_at_prefill as f64)),
+        ("evicted", num(ar.stats.evicted_at_decode as f64)),
+        ("peak_kv_kib", num(ar.stats.peak_kv_bytes as f64 / 1024.0)),
+    ])
+    .to_string_compact()
+}
+
+/// Run the server until `shutdown` (a line "shutdown" on any connection).
+/// Blocks the calling thread with the engine loop.
+pub fn serve(mut engine: Engine, cfg: ServerConfig, grammar: StoryGrammar) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    eprintln!("hae-serve listening on {}", cfg.addr);
+    let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
+    let shutdown = Arc::new(Mutex::new(false));
+
+    // acceptor thread
+    {
+        let tx = tx.clone();
+        let shutdown = shutdown.clone();
+        let listener = listener.try_clone()?;
+        std::thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                if *shutdown.lock().unwrap() {
+                    break;
+                }
+                let tx = tx.clone();
+                let shutdown = shutdown.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, tx, shutdown);
+                });
+            }
+        });
+    }
+
+    // engine loop (single-threaded PJRT owner)
+    let meta = engine.rt.meta().clone();
+    let mut builder = RequestBuilder::new(&meta, &grammar, 0xBEEF);
+    engine.rt.warmup(&[engine.cfg.batch])?;
+    loop {
+        let job = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        if job.line.trim() == "shutdown" {
+            *shutdown.lock().unwrap() = true;
+            let _ = job.reply.send("{\"ok\":true,\"shutdown\":true}".into());
+            break;
+        }
+        let reply = match synthesize(&job.line, &mut builder) {
+            Ok((id, req)) => match engine.generate(req) {
+                Ok(ar) => respond(id, &ar),
+                Err(e) => format!("{{\"error\":\"{}\"}}", e),
+            },
+            Err(e) => format!("{{\"error\":\"{}\"}}", e),
+        };
+        let _ = job.reply.send(reply);
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::SyncSender<Job>,
+    shutdown: Arc<Mutex<bool>>,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(Job { line, reply: rtx }).is_err() {
+            break;
+        }
+        match rrx.recv() {
+            Ok(resp) => {
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            Err(_) => break,
+        }
+        if *shutdown.lock().unwrap() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Blocking one-shot client used by examples and tests.
+pub fn client_request(addr: &str, payload: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(payload.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(line.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            d_mlp: 256,
+            patch_dim: 32,
+            n_patches: 16,
+            max_pos: 640,
+            dap_layer: 1,
+        }
+    }
+
+    #[test]
+    fn synthesize_parses_kinds() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 5);
+        let (id, req) =
+            synthesize(r#"{"id": 7, "kind": "qa"}"#, &mut b).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(req.kind, WorkloadKind::Understanding);
+        let (_, req) =
+            synthesize(r#"{"id": 1, "kind": "story", "max_new": 12}"#, &mut b).unwrap();
+        assert_eq!(req.max_new_tokens, 12);
+        assert!(synthesize(r#"{"kind": "nope"}"#, &mut b).is_err());
+        assert!(synthesize("not json", &mut b).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Executable forms of the paper's theoretical results.
+//!
+//! * Theorem 2.1 (Cache Information Integrity): under an exponential decay
+//!   model S(t) = S₀(1−λ)^t, the eviction threshold
+//!   k ≤ log(ε / Attn_max) / log(1−λ) keeps the total evicted loss < ε.
+//! * Corollary 2.1 (Error Upper Bound): the realized DDES loss is bounded
+//!   by the greedy (H2O) loss — the sum of the d lowest scores — because
+//!   deferring eviction lets scores keep accumulating evidence before the
+//!   decision is finalized.
+//!
+//! These are checked against *measured* traces in rust/tests/theory.rs and
+//! regenerated as a table by benches/theory_bounds.rs.
+
+use crate::coordinator::EvictionEvent;
+
+/// Theorem 2.1: maximum eviction threshold k for loss budget `eps`.
+///
+/// `attn_max` is the largest initial attention score among eviction
+/// candidates; `lambda` the fitted decay rate. Returns None when the bound
+/// is vacuous (eps ≥ attn_max, i.e. any k works) or undefined (λ = 0).
+pub fn integrity_bound(eps: f64, attn_max: f64, lambda: f64) -> Option<f64> {
+    if eps <= 0.0 || attn_max <= 0.0 || lambda <= 0.0 || lambda >= 1.0 {
+        return None;
+    }
+    if eps >= attn_max {
+        return None; // any k satisfies the bound
+    }
+    Some((eps / attn_max).ln() / (1.0 - lambda).ln())
+}
+
+/// Worst-case single-token loss after surviving k evictions under the
+/// decay model (the quantity Theorem 2.1 bounds by ε).
+pub fn worst_case_loss(attn_max: f64, lambda: f64, k: f64) -> f64 {
+    attn_max * (1.0 - lambda).powf(k)
+}
+
+/// Geometric-series total loss over k evictions spaced Δt = 1 apart
+/// (the theorem's Discussion paragraph).
+pub fn geometric_total_loss(attn_max: f64, lambda: f64, k: usize) -> f64 {
+    if lambda <= 0.0 {
+        return attn_max * k as f64;
+    }
+    let q = 1.0 - lambda;
+    attn_max * q * (1.0 - q.powi(k as i32)) / lambda
+}
+
+/// Realized eviction loss of a run: the sum of cumulative-at-eviction
+/// scores of every evicted slot (the Σ εᵢ of Corollary 2.1).
+pub fn realized_loss(events: &[EvictionEvent]) -> f64 {
+    events
+        .iter()
+        .flat_map(|e| e.victims.iter())
+        .map(|&(_, score, _)| score as f64)
+        .sum()
+}
+
+/// Greedy bound for a run that evicted `d` slots in total: the sum of the
+/// `d` lowest final scores available in `candidate_scores` (Low_d(S₁)).
+pub fn greedy_bound(candidate_scores: &[f32], d: usize) -> f64 {
+    let mut v: Vec<f32> = candidate_scores.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.iter().take(d).map(|&s| s as f64).sum()
+}
+
+/// Corollary 2.1 check on one trace: DDES realized loss ≤ greedy realized
+/// loss for the same number of evictions, where both are measured against
+/// the same score stream. Returns (ddes_loss, greedy_loss).
+pub fn corollary_check(
+    ddes_events: &[EvictionEvent],
+    greedy_events: &[EvictionEvent],
+) -> (f64, f64) {
+    (realized_loss(ddes_events), realized_loss(greedy_events))
+}
+
+/// Forward loss of an eviction schedule — the quantity Corollary 2.1
+/// actually bounds: the attention mass each evicted token *would have
+/// received* after its eviction step, measured on the full-cache reference
+/// trace (`ref_trace[step]` = (position, mean score) snapshots from a
+/// teacher-forced full-cache run of the same script).
+pub fn forward_loss(events: &[EvictionEvent], ref_trace: &[Vec<(i32, f32)>]) -> f64 {
+    let mut total = 0.0f64;
+    for e in events {
+        for &(pos, _, _) in &e.victims {
+            for snap in ref_trace.iter().skip(e.step + 1) {
+                if let Some(&(_, s)) = snap.iter().find(|&&(p, _)| p == pos) {
+                    total += s as f64;
+                }
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_monotone_in_eps() {
+        let k1 = integrity_bound(0.01, 1.0, 0.2).unwrap();
+        let k2 = integrity_bound(0.001, 1.0, 0.2).unwrap();
+        // smaller allowable loss → larger k (tokens must decay longer
+        // before eviction is safe)
+        assert!(k2 > k1);
+    }
+
+    #[test]
+    fn bound_consistency_with_worst_case() {
+        let (eps, amax, lambda) = (0.01, 0.8, 0.15);
+        let k = integrity_bound(eps, amax, lambda).unwrap();
+        // at exactly k the worst-case loss equals eps
+        let loss = worst_case_loss(amax, lambda, k);
+        assert!((loss - eps).abs() < 1e-9, "loss {}", loss);
+        // beyond k it is smaller
+        assert!(worst_case_loss(amax, lambda, k + 1.0) < eps);
+    }
+
+    #[test]
+    fn vacuous_and_undefined_cases() {
+        assert!(integrity_bound(1.0, 0.5, 0.2).is_none()); // eps ≥ attn_max
+        assert!(integrity_bound(0.01, 0.5, 0.0).is_none()); // λ = 0
+        assert!(integrity_bound(-1.0, 0.5, 0.2).is_none());
+    }
+
+    #[test]
+    fn geometric_total_bounded() {
+        let total = geometric_total_loss(0.5, 0.3, 50);
+        // closed form limit: amax·q/λ = 0.5·0.7/0.3
+        assert!(total <= 0.5 * 0.7 / 0.3 + 1e-9);
+    }
+
+    #[test]
+    fn greedy_bound_is_lowest_d() {
+        let scores = [0.5f32, 0.1, 0.9, 0.2];
+        assert!((greedy_bound(&scores, 2) - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn realized_loss_sums_victims() {
+        let events = vec![crate::coordinator::EvictionEvent {
+            step: 3,
+            victims: vec![(0, 0.25, true), (5, 0.5, true)],
+        }];
+        assert!((realized_loss(&events) - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! Hand-rolled substrates: JSON, PRNG, statistics, CLI args, property tests.
+//!
+//! The offline build has no serde/rand/clap/proptest, so the project carries
+//! small, tested implementations of exactly the pieces it needs
+//! (DESIGN.md §4).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,85 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `run_prop` drives a closure with a seeded Rng for N cases; on failure it
+//! reports the case seed so the exact input can be replayed. Generators are
+//! plain functions over `Rng` — no macro magic, but enough to express the
+//! coordinator/cache invariants in DESIGN.md §6 as randomized tests.
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `f` for `cfg.cases` random cases. `f` gets a per-case Rng and the
+/// case index; it should panic (assert) on property violation.
+pub fn run_prop<F: FnMut(&mut Rng, usize)>(name: &str, cfg: PropConfig, mut f: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{}' failed at case {} (replay seed {:#x})",
+                name, case, case_seed
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a vector of f32 scores in [0, scale).
+pub fn gen_scores(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * scale).collect()
+}
+
+/// Generate a random partition of `n` positions into vision/text
+/// (returns is_vision bools with at least one text token).
+pub fn gen_modality(rng: &mut Rng, n: usize) -> Vec<bool> {
+    let mut v: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+    if v.iter().all(|&b| b) && !v.is_empty() {
+        let i = rng.below(n);
+        v[i] = false;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        run_prop("counter", PropConfig { cases: 17, seed: 1 }, |_, _| {
+            count += 1;
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        run_prop("fails", PropConfig { cases: 5, seed: 2 }, |rng, _| {
+            assert!(rng.f64() < 0.5, "intentional");
+        });
+    }
+
+    #[test]
+    fn modality_has_text() {
+        run_prop("modality", PropConfig::default(), |rng, _| {
+            let n = 1 + rng.below(32);
+            let m = gen_modality(rng, n);
+            assert!(m.iter().any(|&b| !b));
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! Small numeric/statistics helpers shared by eval, attention and benches.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance (0.0 for len < 2).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// p in [0,1]; linear interpolation between order statistics.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Indices of the k smallest values (ties broken by lower index).
+pub fn argmin_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Indices of the k largest values (ties broken by lower index).
+pub fn argmax_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-sum-exp, numerically stable.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
+}
+
+/// Softmax into a new vector.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let lse = logsumexp(xs);
+    xs.iter().map(|x| (x - lse).exp()).collect()
+}
+
+/// KL(p_logits || q_logits) between two softmax distributions given logits.
+pub fn kl_from_logits(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    assert_eq!(p_logits.len(), q_logits.len());
+    let lp = logsumexp(p_logits);
+    let lq = logsumexp(q_logits);
+    let mut kl = 0.0f64;
+    for (a, b) in p_logits.iter().zip(q_logits) {
+        let p = (a - lp).exp() as f64;
+        if p > 0.0 {
+            kl += p * ((a - lp) as f64 - (b - lq) as f64);
+        }
+    }
+    kl.max(0.0)
+}
+
+/// Least-squares slope/intercept of y over x.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    if x.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        num += (xi - mx) * (yi - my);
+        den += (xi - mx) * (xi - mx);
+    }
+    let slope = if den > 0.0 { num / den } else { 0.0 };
+    (slope, my - slope * mx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+    }
+
+    #[test]
+    fn argmin_k_sorted() {
+        let xs = [3.0f32, 1.0, 2.0, 0.5];
+        assert_eq!(argmin_k(&xs, 2), vec![3, 1]);
+        assert_eq!(argmax_k(&xs, 1), vec![0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn kl_zero_on_identical() {
+        let l = [0.3f32, -1.0, 2.0];
+        assert!(kl_from_logits(&l, &l) < 1e-9);
+        assert!(kl_from_logits(&l, &[0.0, 0.0, 0.0]) > 0.0);
+    }
+
+    #[test]
+    fn fit_recovers_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (m, b) = linear_fit(&x, &y);
+        assert!((m - 2.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+    }
+}

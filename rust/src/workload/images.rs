@@ -1,0 +1,106 @@
+//! Synthetic image construction — exact mirror of python/compile/data.py's
+//! `class_prototype` / `make_image`.
+//!
+//! An "image" is `n_patches` feature vectors; 2–4 informative patches carry
+//! a (color, shape) class prototype over unit-scale background noise. The
+//! informative-patch sparsity is what gives vision tokens their
+//! concentrated attention columns (paper Fig. 3).
+
+use crate::model::vocab::{N_COLORS, N_SHAPES};
+use crate::util::rng::Rng;
+
+/// Must match python/compile/data.py SIGNAL_GAIN.
+pub const SIGNAL_GAIN: f32 = 3.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ImageClass {
+    pub color: usize,
+    pub shape: usize,
+}
+
+impl ImageClass {
+    pub fn random(rng: &mut Rng) -> ImageClass {
+        ImageClass { color: rng.below(N_COLORS), shape: rng.below(N_SHAPES) }
+    }
+}
+
+/// Deterministic patch-space prototype for a class (mirror of
+/// data.class_prototype).
+pub fn class_prototype(class: ImageClass, patch_dim: usize) -> Vec<f32> {
+    let mut proto = vec![0.0f32; patch_dim];
+    proto[class.color] = SIGNAL_GAIN;
+    proto[N_COLORS + class.shape] = SIGNAL_GAIN;
+    proto[16 + (class.color * N_SHAPES + class.shape) % 8] = SIGNAL_GAIN / 2.0;
+    proto
+}
+
+#[derive(Debug, Clone)]
+pub struct SyntheticImage {
+    pub class: ImageClass,
+    /// `[n_patches * patch_dim]`, patch-major
+    pub patches: Vec<f32>,
+    /// which patches carry the class signal
+    pub informative: Vec<bool>,
+}
+
+impl SyntheticImage {
+    pub fn generate(
+        rng: &mut Rng,
+        class: ImageClass,
+        n_patches: usize,
+        patch_dim: usize,
+    ) -> SyntheticImage {
+        let mut patches = vec![0.0f32; n_patches * patch_dim];
+        for x in &mut patches {
+            *x = rng.normal() as f32 * 0.5;
+        }
+        let n_info = rng.range(2, 5);
+        let info_idx = rng.choose_k(n_patches, n_info);
+        let proto = class_prototype(class, patch_dim);
+        let mut informative = vec![false; n_patches];
+        for &i in &info_idx {
+            informative[i] = true;
+            for d in 0..patch_dim {
+                patches[i * patch_dim + d] += proto[d] + rng.normal() as f32 * 0.2;
+            }
+        }
+        SyntheticImage { class, patches, informative }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototype_matches_python_layout() {
+        let p = class_prototype(ImageClass { color: 2, shape: 5 }, 32);
+        assert_eq!(p[2], SIGNAL_GAIN);
+        assert_eq!(p[8 + 5], SIGNAL_GAIN);
+        assert_eq!(p[16 + (2 * 8 + 5) % 8], SIGNAL_GAIN / 2.0);
+        assert_eq!(p.iter().filter(|&&x| x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn image_has_informative_patches() {
+        let mut rng = Rng::new(11);
+        let img = SyntheticImage::generate(
+            &mut rng,
+            ImageClass { color: 0, shape: 0 },
+            16,
+            32,
+        );
+        let n_info = img.informative.iter().filter(|&&b| b).count();
+        assert!((2..=4).contains(&n_info));
+        assert_eq!(img.patches.len(), 16 * 32);
+        // informative patches must carry visibly more energy at the class dims
+        let energy = |i: usize| img.patches[i * 32].abs();
+        let info_e: f32 = (0..16).filter(|&i| img.informative[i]).map(energy).sum();
+        let back_e: f32 = (0..16).filter(|&i| !img.informative[i]).map(energy).sum();
+        let n_back = 16 - n_info;
+        assert!(
+            info_e / n_info as f32 > back_e / n_back as f32,
+            "class-dim energy should concentrate in informative patches"
+        );
+    }
+}

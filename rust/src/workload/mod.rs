@@ -1,0 +1,99 @@
+//! Synthetic multimodal workload generators — the serving-time mirror of
+//! python/compile/data.py.
+//!
+//! Requests sample from the same distribution the model was trained on:
+//! identical token-id layout (model/vocab.rs), identical class-prototype
+//! construction, and — for story text — the *exact* transition matrix the
+//! trainer used (exported to artifacts/grammar.bin at build time).
+//!
+//! Three request families map to the paper's workloads (DESIGN.md §3):
+//! * `understanding` — single-image QA (Table 1/6 stand-in)
+//! * `story`         — multi-segment long generation (Table 2 / Seed-Story)
+//! * `video`         — multi-frame QA (Table 4: TGIF/MSVD/MSRVT stand-in)
+//! * `mixed`         — MMMU-like blend for the Table 3 ablation
+
+pub mod images;
+pub mod requests;
+
+pub use images::{ImageClass, SyntheticImage};
+pub use requests::{Request, RequestBuilder, WorkloadKind};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::vocab;
+
+/// Story-grammar transition matrix (row-stochastic, [W, W]).
+pub struct StoryGrammar {
+    trans: Vec<f32>,
+    n: usize,
+}
+
+impl StoryGrammar {
+    /// Load the build-time grammar from artifacts/grammar.bin.
+    pub fn load(artifact_dir: &Path) -> Result<StoryGrammar> {
+        let path = artifact_dir.join("grammar.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let n = vocab::N_STORY_WORDS;
+        if bytes.len() != n * n * 4 {
+            bail!("grammar.bin size {} != {}", bytes.len(), n * n * 4);
+        }
+        let trans: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(StoryGrammar { trans, n })
+    }
+
+    /// Uniform fallback when artifacts are absent (unit tests).
+    pub fn uniform() -> StoryGrammar {
+        let n = vocab::N_STORY_WORDS;
+        StoryGrammar { trans: vec![1.0 / n as f32; n * n], n }
+    }
+
+    pub fn row(&self, word: usize) -> &[f32] {
+        &self.trans[word * self.n..(word + 1) * self.n]
+    }
+
+    pub fn next_word(&self, word: usize, rng: &mut crate::util::rng::Rng) -> usize {
+        let row = self.row(word);
+        let weights: Vec<f64> = row.iter().map(|&w| w as f64).collect();
+        rng.weighted(&weights)
+    }
+
+    /// Greedy most-likely next word (used by quality proxies).
+    pub fn argmax_next(&self, word: usize) -> usize {
+        crate::util::stats::argmax(self.row(word))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn uniform_grammar_samples_in_range() {
+        let g = StoryGrammar::uniform();
+        let mut rng = Rng::new(9);
+        for w in [0, 5, 100] {
+            let next = g.next_word(w, &mut rng);
+            assert!(next < vocab::N_STORY_WORDS);
+        }
+    }
+
+    #[test]
+    fn loads_real_grammar_when_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if let Ok(g) = StoryGrammar::load(&dir) {
+            // rows should be (approximately) stochastic and sparse
+            let row = g.row(0);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "row sum {}", sum);
+            let nonzero = row.iter().filter(|&&x| x > 0.0).count();
+            assert!(nonzero <= 12, "grammar rows should be sparse");
+        }
+    }
+}

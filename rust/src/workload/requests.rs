@@ -1,0 +1,357 @@
+//! Request construction for the four workload families.
+//!
+//! A `Request` carries the fully-materialised prompt (token ids, patch
+//! features, modality mask) plus generation settings and — where the task
+//! has one — the ground-truth answer token for accuracy-style metrics.
+//!
+//! Note on the story family: the paper's Seed-Story pipeline feeds images
+//! group-by-group across turns; this runtime's decode executable only
+//! embeds vision at prefill, so a story request carries all of its images
+//! in the prompt and generates one long continuation (same KV-pressure
+//! profile; DESIGN.md §3).
+
+use crate::model::vocab::*;
+use crate::model::ModelMeta;
+use crate::util::rng::Rng;
+
+use super::images::{ImageClass, SyntheticImage};
+use super::StoryGrammar;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// single-image QA (Tables 1/6 stand-in)
+    Understanding,
+    /// multi-image long generation (Table 2 / Seed-Story stand-in)
+    Story,
+    /// multi-frame QA over a "video" (Table 4 stand-in)
+    Video,
+    /// MMMU-like mixed blend (Table 3 ablation)
+    Mixed,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s {
+            "understanding" | "qa" => Some(WorkloadKind::Understanding),
+            "story" => Some(WorkloadKind::Story),
+            "video" => Some(WorkloadKind::Video),
+            "mixed" | "mmmu" => Some(WorkloadKind::Mixed),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub kind: WorkloadKind,
+    pub ids: Vec<i32>,
+    /// `[prompt_len * patch_dim]` — zeros at text positions
+    pub patches: Vec<f32>,
+    pub is_vision: Vec<bool>,
+    pub max_new_tokens: usize,
+    /// keep generating past EOS until this many tokens exist (story
+    /// tasks: an EOS below the floor starts a new segment instead)
+    pub min_new_tokens: usize,
+    /// ground-truth answer token (QA families)
+    pub expected_answer: Option<i32>,
+    pub images: Vec<ImageClass>,
+}
+
+impl Request {
+    pub fn prompt_len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn n_vision(&self) -> usize {
+        self.is_vision.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Deterministic request factory.
+pub struct RequestBuilder<'a> {
+    meta: &'a ModelMeta,
+    grammar: &'a StoryGrammar,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl<'a> RequestBuilder<'a> {
+    pub fn new(meta: &'a ModelMeta, grammar: &'a StoryGrammar, seed: u64) -> Self {
+        RequestBuilder { meta, grammar, rng: Rng::new(seed), next_id: 0 }
+    }
+
+    fn push_image(
+        &mut self,
+        ids: &mut Vec<i32>,
+        patches: &mut Vec<f32>,
+        is_vision: &mut Vec<bool>,
+        class: ImageClass,
+    ) -> SyntheticImage {
+        let img = SyntheticImage::generate(
+            &mut self.rng,
+            class,
+            self.meta.n_patches,
+            self.meta.patch_dim,
+        );
+        for p in 0..self.meta.n_patches {
+            ids.push(IMG);
+            is_vision.push(true);
+            patches.extend_from_slice(
+                &img.patches[p * self.meta.patch_dim..(p + 1) * self.meta.patch_dim],
+            );
+        }
+        img
+    }
+
+    fn push_text(
+        &self,
+        ids: &mut Vec<i32>,
+        patches: &mut Vec<f32>,
+        is_vision: &mut Vec<bool>,
+        toks: &[i32],
+    ) {
+        for &t in toks {
+            ids.push(t);
+            is_vision.push(false);
+            patches.extend(std::iter::repeat(0.0).take(self.meta.patch_dim));
+        }
+    }
+
+    /// `[BOS][img][Q_attr][A:]` → expected answer = class word.
+    pub fn understanding(&mut self) -> Request {
+        let class = ImageClass::random(&mut self.rng);
+        let mut ids = Vec::new();
+        let mut patches = Vec::new();
+        let mut is_vision = Vec::new();
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[BOS]);
+        self.push_image(&mut ids, &mut patches, &mut is_vision, class);
+        let ask_color = self.rng.bool(0.5);
+        let q = if ask_color { Q_COLOR } else { Q_SHAPE };
+        let answer = if ask_color {
+            color_token(class.color)
+        } else {
+            shape_token(class.shape)
+        };
+        // prompt ends at the question token: the model emits ANS_MARK from
+        // the (always-full) prefill logits, then the answer itself through
+        // the *pruned* cache — so accuracy actually measures cache quality
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[q]);
+        self.next_id += 1;
+        Request {
+            id: self.next_id - 1,
+            kind: WorkloadKind::Understanding,
+            ids,
+            patches,
+            is_vision,
+            max_new_tokens: 4,
+            min_new_tokens: 0,
+            expected_answer: Some(answer),
+            images: vec![class],
+        }
+    }
+
+    /// `[BOS] ([img][STORY][color][shape][w…])×(n-1) [img][STORY]` →
+    /// long free generation continuing the last segment.
+    pub fn story(&mut self, n_images: usize, seg_text: usize, max_new: usize) -> Request {
+        let mut ids = Vec::new();
+        let mut patches = Vec::new();
+        let mut is_vision = Vec::new();
+        let mut images = Vec::new();
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[BOS]);
+        for seg in 0..n_images {
+            let class = ImageClass::random(&mut self.rng);
+            images.push(class);
+            self.push_image(&mut ids, &mut patches, &mut is_vision, class);
+            self.push_text(&mut ids, &mut patches, &mut is_vision, &[STORY_MARK]);
+            if seg + 1 == n_images {
+                break; // generation continues this segment
+            }
+            let mut toks = vec![color_token(class.color), shape_token(class.shape)];
+            let mut w = self.rng.below(N_STORY_WORDS);
+            for _ in 0..seg_text.saturating_sub(2) {
+                toks.push(story_token(w));
+                w = self.grammar.next_word(w, &mut self.rng);
+            }
+            self.push_text(&mut ids, &mut patches, &mut is_vision, &toks);
+        }
+        self.next_id += 1;
+        Request {
+            id: self.next_id - 1,
+            kind: WorkloadKind::Story,
+            ids,
+            patches,
+            is_vision,
+            max_new_tokens: max_new,
+            min_new_tokens: max_new * 3 / 4,
+            expected_answer: None,
+            images,
+        }
+    }
+
+    /// Multi-frame ("video") probe in the story format the model was
+    /// trained on: `[BOS] ([frame][STORY][color][shape][w..])×(F-1)
+    /// [frame][STORY]` — the model must caption the LAST frame, so the
+    /// expected first token is that frame's color word. A policy that
+    /// prunes the final frame's informative patches across the 4-frame
+    /// visual context fails this probe (the Table 4 stress).
+    pub fn video(&mut self, n_frames: usize) -> Request {
+        let mut ids = Vec::new();
+        let mut patches = Vec::new();
+        let mut is_vision = Vec::new();
+        let mut images = Vec::new();
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[BOS]);
+        for f in 0..n_frames {
+            let class = ImageClass::random(&mut self.rng);
+            images.push(class);
+            self.push_image(&mut ids, &mut patches, &mut is_vision, class);
+            if f + 1 == n_frames {
+                // prompt ends at the frame: STORY_MARK comes from prefill
+                // logits, the class word through the pruned cache
+                break;
+            }
+            self.push_text(&mut ids, &mut patches, &mut is_vision, &[STORY_MARK]);
+            let mut toks = vec![color_token(class.color), shape_token(class.shape)];
+            let mut w = self.rng.below(N_STORY_WORDS);
+            for _ in 0..4 {
+                toks.push(story_token(w));
+                w = self.grammar.next_word(w, &mut self.rng);
+            }
+            self.push_text(&mut ids, &mut patches, &mut is_vision, &toks);
+        }
+        let last = *images.last().expect("n_frames >= 1");
+        let answer = color_token(last.color);
+        self.next_id += 1;
+        Request {
+            id: self.next_id - 1,
+            kind: WorkloadKind::Video,
+            ids,
+            patches,
+            is_vision,
+            max_new_tokens: 4,
+            min_new_tokens: 0,
+            expected_answer: Some(answer),
+            images,
+        }
+    }
+
+    /// MMMU-like blend for Table 3: QA-style prompt with a story tail and
+    /// medium-length generation.
+    pub fn mixed(&mut self) -> Request {
+        if self.rng.bool(0.5) {
+            let mut r = self.story(2, 10, 48);
+            r.kind = WorkloadKind::Mixed;
+            r
+        } else {
+            let mut r = self.understanding();
+            r.kind = WorkloadKind::Mixed;
+            r.max_new_tokens = 16;
+            r
+        }
+    }
+
+    pub fn make(&mut self, kind: WorkloadKind) -> Request {
+        match kind {
+            WorkloadKind::Understanding => self.understanding(),
+            WorkloadKind::Story => self.story(3, 12, 160),
+            WorkloadKind::Video => self.video(4),
+            WorkloadKind::Mixed => self.mixed(),
+        }
+    }
+
+    pub fn make_batch(&mut self, kind: WorkloadKind, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.make(kind)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            d_mlp: 256,
+            patch_dim: 32,
+            n_patches: 16,
+            max_pos: 640,
+            dap_layer: 1,
+        }
+    }
+
+    #[test]
+    fn understanding_shape() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 1);
+        let r = b.understanding();
+        // BOS + 16 vision + Q
+        assert_eq!(r.prompt_len(), 18);
+        assert_eq!(r.n_vision(), 16);
+        assert_eq!(r.patches.len(), 18 * 32);
+        assert!(r.expected_answer.is_some());
+        let ans = r.expected_answer.unwrap();
+        assert!(is_color_token(ans) || is_shape_token(ans));
+        // modality mask consistent with ids
+        for (i, &isv) in r.is_vision.iter().enumerate() {
+            assert_eq!(isv, r.ids[i] == IMG);
+        }
+    }
+
+    #[test]
+    fn story_has_n_images_and_open_tail() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 2);
+        let r = b.story(3, 12, 100);
+        assert_eq!(r.images.len(), 3);
+        assert_eq!(r.n_vision(), 3 * 16);
+        assert_eq!(*r.ids.last().unwrap(), STORY_MARK);
+        assert_eq!(r.max_new_tokens, 100);
+    }
+
+    #[test]
+    fn video_answer_refers_to_last_frame() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 3);
+        let r = b.video(4);
+        assert_eq!(r.n_vision(), 64);
+        let last = *r.images.last().unwrap();
+        assert_eq!(r.expected_answer.unwrap(), color_token(last.color));
+        assert_eq!(*r.ids.last().unwrap(), IMG);
+    }
+
+    #[test]
+    fn ids_are_deterministic_per_seed() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let r1 = RequestBuilder::new(&m, &g, 42).make(WorkloadKind::Story);
+        let r2 = RequestBuilder::new(&m, &g, 42).make(WorkloadKind::Story);
+        assert_eq!(r1.ids, r2.ids);
+        assert_eq!(r1.patches, r2.patches);
+    }
+
+    #[test]
+    fn prompts_fit_largest_bucket() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 4);
+        for kind in [
+            WorkloadKind::Understanding,
+            WorkloadKind::Story,
+            WorkloadKind::Video,
+            WorkloadKind::Mixed,
+        ] {
+            for _ in 0..20 {
+                let r = b.make(kind);
+                assert!(r.prompt_len() <= 256, "{:?} prompt too long", kind);
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Property-based tests over the cache substrate and eviction policies
+//! (DESIGN.md §6 invariants). No PJRT required.
+
+use hae_serve::cache::policy::{DecodeCtx, EvictionPolicy, PrefillCtx};
+use hae_serve::cache::{KvSlab, Modality, PolicyKind};
+use hae_serve::model::ModelMeta;
+use hae_serve::util::prop::{gen_modality, run_prop, PropConfig};
+use hae_serve::util::rng::Rng;
+
+fn tiny_meta() -> ModelMeta {
+    ModelMeta {
+        vocab: 32,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 4,
+        d_mlp: 8,
+        patch_dim: 4,
+        n_patches: 4,
+        max_pos: 256,
+        dap_layer: 1,
+    }
+}
+
+fn fill_slab(rng: &mut Rng, m: &ModelMeta, n: usize, cap: usize) -> KvSlab {
+    let mut slab = KvSlab::new(m, cap);
+    let row = m.n_layers * m.n_heads * m.d_head;
+    for i in 0..n {
+        let k: Vec<f32> = (0..row).map(|_| rng.f32()).collect();
+        let v: Vec<f32> = (0..row).map(|_| rng.f32()).collect();
+        let modality = if rng.bool(0.4) { Modality::Vision } else { Modality::Text };
+        slab.append(&k, &v, i as i32, modality, rng.f32());
+    }
+    slab
+}
+
+/// Slab integrity: any eviction sequence leaves live slots equal to the
+/// inserted-and-not-evicted tokens, in original order, with KV intact.
+#[test]
+fn prop_slab_integrity_under_random_evictions() {
+    let m = tiny_meta();
+    run_prop("slab-integrity", PropConfig::default(), |rng, _| {
+        let n = 4 + rng.below(40);
+        let cap = n + 8;
+        let mut slab = fill_slab(rng, &m, n, cap);
+        // tag each slot's first K element so we can track identity
+        let tags: Vec<(i32, f32)> = (0..slab.len())
+            .map(|i| (slab.meta()[i].position, slab.k_row(0, i)[0]))
+            .collect();
+        let mut alive: Vec<usize> = (0..n).collect();
+        for _ in 0..3 {
+            if alive.len() <= 1 {
+                break;
+            }
+            let k = rng.below(alive.len().min(5));
+            let evict_now: Vec<usize> = rng.choose_k(slab.len(), k);
+            slab.evict(&evict_now);
+            // mirror on the model
+            let mut sorted = evict_now.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            for &e in sorted.iter().rev() {
+                alive.remove(e);
+            }
+            assert_eq!(slab.len(), alive.len());
+        }
+        for (slot, &orig) in alive.iter().enumerate() {
+            assert_eq!(slab.meta()[slot].position, tags[orig].0, "position preserved");
+            assert_eq!(slab.k_row(0, slot)[0], tags[orig].1, "KV row follows slot");
+        }
+        // positions strictly increasing (order preserved)
+        for w in slab.meta().windows(2) {
+            assert!(w[0].position < w[1].position);
+        }
+    });
+}
+
+/// Every decode policy keeps the cache within the hard capacity limit and
+/// only ever evicts/marks valid slots.
+#[test]
+fn prop_policies_respect_capacity_and_validity() {
+    let m = tiny_meta();
+    let specs = [
+        "full", "hae:rc=6", "h2o:budget=24", "snapkv:budget=24,window=4",
+        "adakv:budget=24", "mustdrop", "window:sinks=2,window=16", "random:budget=24",
+    ];
+    run_prop("policy-capacity", PropConfig { cases: 48, seed: 3 }, |rng, case| {
+        let spec = specs[case % specs.len()];
+        let mut policy = PolicyKind::parse(spec).unwrap().build();
+        let cap_limit = 40;
+        let prefill_len = 8 + rng.below(8);
+        let mut slab = fill_slab(rng, &m, prefill_len, cap_limit + 1);
+        let row = m.n_layers * m.n_heads * m.d_head;
+        for step in 0..80 {
+            // append one generated token
+            if slab.len() >= cap_limit {
+                let ctx = DecodeCtx { slab: &slab, step, prefill_len, capacity_limit: cap_limit };
+                let forced = policy.capacity_fallback(&ctx, slab.len() + 1 - cap_limit);
+                assert!(!forced.is_empty(), "{}: fallback must free space", spec);
+                slab.evict(&forced);
+            }
+            let k: Vec<f32> = (0..row).map(|_| rng.f32()).collect();
+            slab.append(&k, &k, (100 + step) as i32, Modality::Text, rng.f32());
+            let scores: Vec<f32> = (0..slab.len()).map(|_| rng.f32() * 0.1).collect();
+            slab.add_scores(&scores, &scores);
+            let ctx = DecodeCtx { slab: &slab, step, prefill_len, capacity_limit: cap_limit };
+            let d = policy.post_step(&ctx);
+            for &s in d.mark.iter().chain(d.evict.iter()) {
+                assert!(s < slab.len(), "{}: slot index in range", spec);
+            }
+            for &s in &d.mark {
+                slab.meta_mut()[s].marked = true;
+            }
+            slab.evict(&d.evict);
+            assert!(
+                slab.len() <= cap_limit,
+                "{}: len {} > capacity {}",
+                spec,
+                slab.len(),
+                cap_limit
+            );
+        }
+    });
+}
+
+/// DDES semantics: the number of marked slots never exceeds rc_size, and a
+/// flush always clears every mark.
+#[test]
+fn prop_ddes_bin_bounded_and_flushed() {
+    let m = tiny_meta();
+    run_prop("ddes-bin", PropConfig { cases: 64, seed: 5 }, |rng, _| {
+        let rc = 2 + rng.below(10);
+        let mut policy =
+            PolicyKind::parse(&format!("hae:rc={},stage=decode", rc)).unwrap().build();
+        let prefill_len = 6;
+        let mut slab = fill_slab(rng, &m, prefill_len, 128);
+        let row = m.n_layers * m.n_heads * m.d_head;
+        for step in 0..60 {
+            let k: Vec<f32> = (0..row).map(|_| rng.f32()).collect();
+            slab.append(&k, &k, (100 + step) as i32, Modality::Text, rng.f32());
+            let scores: Vec<f32> = (0..slab.len()).map(|_| rng.f32() * 0.1).collect();
+            slab.add_scores(&scores, &scores);
+            let ctx = DecodeCtx { slab: &slab, step, prefill_len, capacity_limit: 127 };
+            let d = policy.post_step(&ctx);
+            for &s in &d.mark {
+                slab.meta_mut()[s].marked = true;
+            }
+            if !d.evict.is_empty() {
+                // flush evicts at least the bin and resets all marks
+                slab.evict(&d.evict);
+                assert_eq!(slab.marked_count(), 0, "flush clears the bin");
+            }
+            assert!(slab.marked_count() < rc, "bin bounded by rc_size");
+        }
+    });
+}
+
+/// DAP prefill: evicted slots are always vision; retention is adaptive
+/// (both criteria must hold — planting one strong link rescues a token).
+#[test]
+fn prop_dap_only_evicts_weak_vision() {
+    let m = tiny_meta();
+    run_prop("dap-vision-only", PropConfig { cases: 64, seed: 7 }, |rng, _| {
+        let n = 8 + rng.below(24);
+        let is_vision = gen_modality(rng, n);
+        let dap_sum: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut dap_max: Vec<f32> = (0..n).map(|_| rng.f32() * 0.2).collect();
+        // rescue one random vision token with a strong individual link
+        if let Some(vi) = (0..n).find(|&i| is_vision[i]) {
+            dap_max[vi] = 0.9;
+        }
+        let mut policy = PolicyKind::parse("hae:stage=prefill").unwrap().build();
+        let k = vec![0.0f32; m.n_layers * n * m.n_heads * m.d_head];
+        let ctx = PrefillCtx {
+            dap_sum: &dap_sum,
+            dap_max: &dap_max,
+            is_vision: &is_vision,
+            n_tokens: n,
+            k: &k,
+            v: &k,
+            bucket: n,
+            meta: &m,
+        };
+        let d = policy.prefill(&ctx);
+        let retained: std::collections::BTreeSet<usize> = d.retain.iter().copied().collect();
+        for i in 0..n {
+            if !is_vision[i] {
+                assert!(retained.contains(&i), "text never evicted");
+            }
+            if dap_max[i] >= 0.9 {
+                assert!(retained.contains(&i), "strong-link token rescued (Eq. 3)");
+            }
+        }
+    });
+}

@@ -1,0 +1,188 @@
+//! Integration tests over the real runtime + artifacts: every policy runs
+//! end-to-end; the engine honours its contracts. Skipped (with a notice)
+//! when `make artifacts` hasn't been run.
+
+use hae_serve::cache::PolicyKind;
+use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::runtime::Runtime;
+use hae_serve::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine(policy: &str) -> Option<Engine> {
+    let rt = match Runtime::load(&artifact_dir()) {
+        Ok(rt) => rt,
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+    };
+    Some(
+        Engine::new(
+            rt,
+            EngineConfig {
+                policy: PolicyKind::parse(policy).unwrap(),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn every_policy_completes_mixed_requests() {
+    for spec in [
+        "full", "hae", "hae:stage=prefill", "hae:stage=decode", "h2o", "snapkv",
+        "adakv", "mustdrop", "fastv", "sparsevlm", "tome", "window", "random",
+    ] {
+        let Some(mut eng) = engine(spec) else { return };
+        let meta = eng.rt.meta().clone();
+        let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+        let mut b = RequestBuilder::new(&meta, &grammar, 11);
+        for kind in [WorkloadKind::Understanding, WorkloadKind::Story] {
+            let mut req = b.make(kind);
+            req.max_new_tokens = req.max_new_tokens.min(40);
+            req.min_new_tokens = req.min_new_tokens.min(30);
+            let ar = eng.generate(req).unwrap_or_else(|e| panic!("{}: {}", spec, e));
+            assert!(ar.done, "{}: finished", spec);
+            assert!(!ar.generated.is_empty(), "{}: produced tokens", spec);
+            assert!(
+                ar.slab.len() < eng.rt.manifest.shapes.cache_capacity,
+                "{}: capacity respected",
+                spec
+            );
+            // positions strictly increasing in the live cache
+            for w in ar.slab.meta().windows(2) {
+                assert!(w[0].position < w[1].position, "{}: slot order", spec);
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_determinism_across_runs() {
+    let Some(mut e1) = engine("hae") else { return };
+    let Some(mut e2) = engine("hae") else { return };
+    let meta = e1.rt.meta().clone();
+    let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+    let req1 = RequestBuilder::new(&meta, &grammar, 99).make(WorkloadKind::Story);
+    let req2 = RequestBuilder::new(&meta, &grammar, 99).make(WorkloadKind::Story);
+    let a = e1.generate(req1).unwrap();
+    let b = e2.generate(req2).unwrap();
+    assert_eq!(a.generated, b.generated, "greedy decode must be reproducible");
+    assert_eq!(a.stats.pruned_at_prefill, b.stats.pruned_at_prefill);
+    assert_eq!(a.stats.evicted_at_decode, b.stats.evicted_at_decode);
+}
+
+#[test]
+fn full_cache_teacher_forcing_is_exact() {
+    // replaying the full-cache script under the full-cache policy must
+    // reproduce identical logits — validates the fidelity protocol itself
+    let Some(mut reference) = engine("full") else { return };
+    reference.cfg.capture_logits = true;
+    let meta = reference.rt.meta().clone();
+    let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+    let mut b = RequestBuilder::new(&meta, &grammar, 5);
+    let mut req = b.make(WorkloadKind::Story);
+    req.max_new_tokens = 24;
+    req.min_new_tokens = 0;
+    let ar = reference.generate(req.clone()).unwrap();
+
+    let Some(mut replay) = engine("full") else { return };
+    replay.cfg.capture_logits = true;
+    let ar2 = replay.generate_forced(req, &ar.generated).unwrap();
+    assert_eq!(ar.generated, ar2.generated);
+    let f = hae_serve::eval::fidelity(&ar.logits_trace, &ar2.logits_trace);
+    assert_eq!(f.top1_agreement, 1.0);
+    assert!(f.mean_kl < 1e-6, "kl {}", f.mean_kl);
+}
+
+#[test]
+fn batched_equals_sequential_for_greedy_decode() {
+    // batch width must not change results: run the same two requests at
+    // batch 1 and batch 4 and compare token streams
+    let Some(mut e1) = engine("hae") else { return };
+    let meta = e1.rt.meta().clone();
+    let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+    let reqs = |seed| {
+        let mut b = RequestBuilder::new(&meta, &grammar, seed);
+        vec![b.make(WorkloadKind::Understanding), b.make(WorkloadKind::Understanding)]
+    };
+    let (seq, _) = e1.run_batched(reqs(17)).unwrap();
+
+    let rt = Runtime::load(&artifact_dir()).unwrap();
+    let mut e4 = Engine::new(
+        rt,
+        EngineConfig {
+            policy: PolicyKind::parse("hae").unwrap(),
+            batch: 4,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let (bat, _) = e4.run_batched(reqs(17)).unwrap();
+    let mut seq_tokens: Vec<_> = seq.iter().map(|a| (a.req.id, a.generated.clone())).collect();
+    let mut bat_tokens: Vec<_> = bat.iter().map(|a| (a.req.id, a.generated.clone())).collect();
+    seq_tokens.sort();
+    bat_tokens.sort();
+    assert_eq!(seq_tokens, bat_tokens, "batching must not change greedy output");
+}
+
+#[test]
+fn capacity_bucketing_shrinks_with_eviction() {
+    // a long story under HAE must run most decode steps in a smaller
+    // capacity bucket than the full-cache run
+    let Some(mut hae) = engine("hae:rc=8") else { return };
+    let meta = hae.rt.meta().clone();
+    let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+    let mut b = RequestBuilder::new(&meta, &grammar, 23);
+    let mut req = b.story(4, 14, 140);
+    req.min_new_tokens = 120;
+    let mut ar = hae.prefill(req.clone()).unwrap();
+    let mut hae_caps = Vec::new();
+    while !ar.done {
+        let mut lanes = [&mut ar];
+        let rep = hae.decode_step(&mut lanes).unwrap();
+        hae_caps.push(rep.capacity);
+    }
+
+    let Some(mut full) = engine("full") else { return };
+    let mut ar2 = full.prefill(req).unwrap();
+    let mut full_caps = Vec::new();
+    while !ar2.done {
+        let mut lanes = [&mut ar2];
+        let rep = full.decode_step(&mut lanes).unwrap();
+        full_caps.push(rep.capacity);
+    }
+    let mean = |v: &[usize]| v.iter().sum::<usize>() as f64 / v.len() as f64;
+    assert!(
+        mean(&hae_caps) < mean(&full_caps),
+        "hae mean capacity {} !< full {}",
+        mean(&hae_caps),
+        mean(&full_caps)
+    );
+}
+
+#[test]
+fn h2o_does_more_decisions_than_ddes() {
+    // the Table 3 mechanism: greedy sorts every over-budget step, the
+    // recycle bin amortises
+    let Some(mut ddes) = engine("hae:stage=decode,rc=16") else { return };
+    let meta = ddes.rt.meta().clone();
+    let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+    let mut b = RequestBuilder::new(&meta, &grammar, 31);
+    let mut req = b.story(3, 12, 120);
+    req.min_new_tokens = 100;
+    let a = ddes.generate(req.clone()).unwrap();
+
+    let Some(mut h2o) = engine("h2o") else { return };
+    let c = h2o.generate(req).unwrap();
+    assert!(
+        c.stats.decisions > 2 * a.stats.decisions,
+        "h2o {} decisions vs ddes {}",
+        c.stats.decisions,
+        a.stats.decisions
+    );
+}

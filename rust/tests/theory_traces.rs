@@ -1,0 +1,101 @@
+//! Theorem 2.1 / Corollary 2.1 checked on real decode traces (artifacts
+//! required; skipped otherwise).
+
+use hae_serve::attention::decay_rate_fit;
+use hae_serve::cache::PolicyKind;
+use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::runtime::Runtime;
+use hae_serve::theory;
+use hae_serve::workload::{RequestBuilder, StoryGrammar};
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine(policy: &str) -> Option<Engine> {
+    let rt = Runtime::load(&artifact_dir()).ok()?;
+    Some(
+        Engine::new(
+            rt,
+            EngineConfig {
+                policy: PolicyKind::parse(policy).unwrap(),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn decay_model_fits_measured_scores() {
+    let Some(mut eng) = engine("full") else { return };
+    let meta = eng.rt.meta().clone();
+    let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+    let mut b = RequestBuilder::new(&meta, &grammar, 41);
+    let mut req = b.story(3, 12, 100);
+    req.min_new_tokens = 80;
+    let mut ar = eng.prefill(req).unwrap();
+    let mut series = Vec::new();
+    while !ar.done {
+        let mean: f64 = ar
+            .slab
+            .meta()
+            .iter()
+            .map(|m| m.last_score as f64)
+            .sum::<f64>()
+            / ar.slab.len().max(1) as f64;
+        if ar.stats.steps > 0 {
+            series.push(mean);
+        }
+        let mut lanes = [&mut ar];
+        eng.decode_step(&mut lanes).unwrap();
+    }
+    // per-slot mean mass dilutes as the cache grows → positive decay rate
+    let lambda = decay_rate_fit(&series);
+    assert!(lambda > 0.0, "fitted λ = {}", lambda);
+    assert!(lambda < 0.5, "λ implausibly large: {}", lambda);
+    // Thm 2.1 internal consistency on the fitted model
+    let attn_max = series.iter().cloned().fold(0.0f64, f64::max);
+    let eps = attn_max / 10.0;
+    let k = theory::integrity_bound(eps, attn_max, lambda).expect("non-vacuous");
+    assert!(k > 0.0);
+    let loss = theory::worst_case_loss(attn_max, lambda, k);
+    assert!((loss - eps).abs() < 1e-9);
+}
+
+#[test]
+fn corollary_ddes_loss_le_greedy_on_traces() {
+    // teacher-forced identical scripts; compare per-eviction realized loss
+    let Some(mut reference) = engine("full") else { return };
+    let meta = reference.rt.meta().clone();
+    let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
+    let mut b = RequestBuilder::new(&meta, &grammar, 43);
+    let mut holds = 0;
+    let total = 3;
+    for _ in 0..total {
+        let mut req = b.story(3, 12, 100);
+        req.min_new_tokens = 90;
+        let script = reference.generate(req.clone()).unwrap().generated;
+
+        let mut ddes = engine("hae:stage=decode,rc=16").unwrap();
+        let a = ddes.generate_forced(req.clone(), &script).unwrap();
+        let mut greedy = engine("h2o").unwrap();
+        let c = greedy.generate_forced(req, &script).unwrap();
+
+        let dn: usize = a.evictions.iter().map(|e| e.victims.len()).sum();
+        let gn: usize = c.evictions.iter().map(|e| e.victims.len()).sum();
+        if dn == 0 || gn == 0 {
+            continue;
+        }
+        let (dl, gl) = theory::corollary_check(&a.evictions, &c.evictions);
+        if dl / dn as f64 <= gl / gn as f64 + 1e-9 {
+            holds += 1;
+        }
+    }
+    assert!(
+        holds * 3 >= total * 2,
+        "Corollary 2.1 held on only {}/{} traces",
+        holds,
+        total
+    );
+}
