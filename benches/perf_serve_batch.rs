@@ -1,0 +1,121 @@
+//! §Perf — serving throughput under concurrency: the continuous-batching
+//! scheduler vs the serial path, HAE vs Full Cache.
+//!
+//! For policy ∈ {hae, full} × batch ∈ {1 (serial), widest compiled} ×
+//! clients ∈ {1, 4, 8}: spin up a fresh server, drive `clients`
+//! concurrent connections each issuing `HAE_BENCH_N` (default 6)
+//! requests, and report requests/sec, p50/p95 latency, the widest batch
+//! any decode step actually ran at, and peak aggregate live KV. The
+//! batch=1 rows reproduce the seed's serial `engine.generate()` behaviour
+//! (one lane, one request at a time); the batch>1 rows show eviction
+//! converting into admission headroom and throughput.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use hae_serve::cache::PolicyKind;
+use hae_serve::harness::*;
+use hae_serve::scheduler::SchedPolicy;
+use hae_serve::server::client_request;
+use hae_serve::util::json::Json;
+use hae_serve::util::stats::percentile;
+
+/// Drive `clients` concurrent connections; returns (wall, latencies, errors).
+fn drive(addr: &str, clients: usize, per_client: usize) -> (f64, Vec<f64>, usize) {
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for c in 0..clients {
+        let tx = tx.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            for i in 0..per_client {
+                let kind = match (c + i) % 3 {
+                    0 => "qa",
+                    1 => "mixed",
+                    _ => "story",
+                };
+                let payload = format!(
+                    r#"{{"id": {}, "kind": "{}", "max_new": 32}}"#,
+                    c * 1000 + i,
+                    kind
+                );
+                let t = Instant::now();
+                let resp = client_request(&addr, &payload).unwrap_or_default();
+                let ok = Json::parse(&resp)
+                    .map(|j| j.get("error").is_none())
+                    .unwrap_or(false);
+                tx.send((t.elapsed().as_secs_f64(), ok)).unwrap();
+            }
+        });
+    }
+    drop(tx);
+    let mut lats = Vec::new();
+    let mut errors = 0usize;
+    for (lat, ok) in rx {
+        lats.push(lat);
+        if !ok {
+            errors += 1;
+        }
+    }
+    (t0.elapsed().as_secs_f64(), lats, errors)
+}
+
+fn main() -> anyhow::Result<()> {
+    let per_client = bench_n(6);
+    load_runtime()?; // fail fast (with the artifact hint) before spawning
+    let widest = widest_batch();
+    let batches: Vec<usize> = if widest > 1 { vec![1, widest] } else { vec![1] };
+
+    let mut table = Table::new(
+        &format!("serve throughput, {} requests per client", per_client),
+        &["policy", "batch", "clients", "req/s", "p50 ms", "p95 ms",
+          "max lanes", "peak KV KiB", "errors"],
+    );
+
+    let mut port = 8520u16;
+    for policy_spec in ["hae", "full"] {
+        for &batch in &batches {
+            for &clients in &[1usize, 4, 8] {
+                let addr = format!("127.0.0.1:{}", port);
+                port += 1;
+                let policy = PolicyKind::parse(policy_spec).unwrap();
+                let handle =
+                    spawn_server(addr.clone(), policy, batch, None, SchedPolicy::Fifo);
+                assert!(wait_listening(&addr), "server on {}", addr);
+                let (wall, lats, errors) = drive(&addr, clients, per_client);
+                let stats = client_request(&addr, r#"{"kind": "stats"}"#)
+                    .ok()
+                    .and_then(|r| Json::parse(&r).ok());
+                let _ = client_request(&addr, "shutdown");
+                let _ = handle.join();
+
+                let g = |k: &str| {
+                    stats
+                        .as_ref()
+                        .and_then(|j| j.get(k))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0)
+                };
+                table.row(vec![
+                    policy_spec.into(),
+                    format!("{}", batch),
+                    format!("{}", clients),
+                    f2(lats.len() as f64 / wall),
+                    format!("{:.0}", percentile(&lats, 0.5) * 1000.0),
+                    format!("{:.0}", percentile(&lats, 0.95) * 1000.0),
+                    format!("{:.0}", g("max_lanes_step")),
+                    format!("{:.0}", g("peak_live_kv_bytes") / 1024.0),
+                    format!("{}", errors),
+                ]);
+            }
+        }
+    }
+    table.print();
+    println!(
+        "\n(batch=1 rows are the serial seed path; batch={} rows share lanes\n\
+         via the scheduler — compare req/s at 8 clients, and peak KV for\n\
+         hae vs full to see eviction becoming admission headroom)",
+        widest
+    );
+    Ok(())
+}

@@ -1,9 +1,11 @@
 //! End-to-end serving driver (the DESIGN.md §validation run): starts the
-//! JSON-lines TCP server with the HAE policy, drives a mixed client
-//! workload over real sockets from several concurrent client threads, and
-//! reports per-request latency percentiles and aggregate throughput —
-//! proving all three layers compose: rust coordinator → PJRT executables →
-//! AOT-compiled JAX/Pallas graphs.
+//! JSON-lines TCP server with the HAE policy and the continuous-batching
+//! scheduler at the widest compiled batch, drives a mixed client workload
+//! over real sockets from several concurrent client threads, and reports
+//! per-request latency percentiles, aggregate throughput and the
+//! scheduler's own metrics — proving all three layers compose: rust
+//! scheduler/coordinator → PJRT executables → AOT-compiled JAX/Pallas
+//! graphs.
 //!
 //!     cargo run --release --offline --example serve_e2e
 //!
@@ -14,35 +16,24 @@ use std::time::Instant;
 
 use anyhow::Result;
 use hae_serve::cache::PolicyKind;
-use hae_serve::coordinator::{Engine, EngineConfig};
-use hae_serve::harness::{artifact_dir, load_grammar};
-use hae_serve::runtime::Runtime;
-use hae_serve::server::{client_request, serve, ServerConfig};
+use hae_serve::harness::{spawn_server, wait_listening, widest_batch};
+use hae_serve::scheduler::SchedPolicy;
+use hae_serve::server::client_request;
 use hae_serve::util::json::Json;
 use hae_serve::util::stats::percentile;
 
 const ADDR: &str = "127.0.0.1:8491";
 
 fn main() -> Result<()> {
-    // server thread — the PJRT client is !Send, so the engine is
-    // constructed inside the thread that owns it
-    let server = std::thread::spawn(move || {
-        let rt = Runtime::load(&artifact_dir()).expect("artifacts built?");
-        let engine = Engine::new(
-            rt,
-            EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
-        )
-        .unwrap();
-        let cfg = ServerConfig { addr: ADDR.into(), queue_depth: 64 };
-        let _ = serve(engine, cfg, load_grammar(&artifact_dir()));
-    });
-    // wait for the listener
-    for _ in 0..100 {
-        if std::net::TcpStream::connect(ADDR).is_ok() {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(50));
-    }
+    let batch = widest_batch();
+    let server = spawn_server(
+        ADDR.into(),
+        PolicyKind::hae_default(),
+        batch,
+        None,
+        SchedPolicy::Priority,
+    );
+    assert!(wait_listening(ADDR), "server came up");
 
     let n_clients = 4;
     let per_client = 8;
@@ -87,6 +78,9 @@ fn main() -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    let stats = client_request(ADDR, r#"{"kind": "stats"}"#)
+        .ok()
+        .and_then(|r| Json::parse(&r).ok());
     let _ = client_request(ADDR, "shutdown");
     let _ = server.join();
 
@@ -109,6 +103,17 @@ fn main() -> Result<()> {
         "HAE activity: {} prompt tokens pruned (DAP), {} cache slots evicted (DDES)",
         pruned, evicted
     );
+    if let Some(st) = stats {
+        let g = |k: &str| st.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!(
+            "scheduler: batch {} | max lanes/step {:.0} | ttft p50 {:.0} ms | peak KV {:.0} KiB of {:.0} KiB budget",
+            batch,
+            g("max_lanes_step"),
+            g("ttft_p50_ms"),
+            g("peak_live_kv_bytes") / 1024.0,
+            g("kv_budget") / 1024.0,
+        );
+    }
     assert_eq!(errors, 0, "all requests must succeed");
     assert_eq!(n, n_clients * per_client);
     println!("serve_e2e OK");

@@ -81,9 +81,15 @@ impl KvSlab {
         &mut self.meta
     }
 
+    /// Bytes of one live slot (K+V for one token across all layers) —
+    /// the accounting unit of the scheduler's KV-budget admission.
+    pub fn kv_bytes_per_slot(&self) -> usize {
+        2 * self.n_layers * self.row * 4
+    }
+
     /// Live KV bytes (the paper's "KV Cache (MB)" accounting).
     pub fn kv_bytes(&self) -> usize {
-        self.meta.len() * 2 * self.n_layers * self.row * 4
+        self.meta.len() * self.kv_bytes_per_slot()
     }
 
     fn slot_offset(&self, layer: usize, slot: usize) -> usize {
@@ -389,6 +395,8 @@ mod tests {
         assert_eq!(s.kv_bytes(), 0);
         s.append(&row_of(0.0, &m), &row_of(0.0, &m), 0, Modality::Text, 0.0);
         assert_eq!(s.kv_bytes(), 2 * m.n_layers * m.n_heads * m.d_head * 4);
+        assert_eq!(s.kv_bytes(), s.kv_bytes_per_slot());
+        assert_eq!(s.kv_bytes_per_slot(), m.kv_bytes_per_token());
     }
 
     #[test]

@@ -107,6 +107,13 @@ impl Engine {
         self.rt.manifest.shapes.cache_capacity - 1
     }
 
+    /// Most live KV the engine can physically hold: every decode lane at
+    /// the hard capacity limit. The scheduler's default (unconstrained)
+    /// KV budget; `--kv-budget` tightens it below this.
+    pub fn kv_budget_ceiling(&self) -> usize {
+        self.cfg.batch * self.capacity_limit() * self.rt.meta().kv_bytes_per_token()
+    }
+
     // ------------------------------------------------------------------
     // prefill
     // ------------------------------------------------------------------
@@ -458,6 +465,31 @@ impl Engine {
         Ok(ar)
     }
 
+    /// Lane lifecycle hook for schedulers: one batched decode step over a
+    /// slot map (None = free lane), draining lanes that finished during
+    /// the step. Returns the step report plus `(lane_index, request)` for
+    /// each retired lane, so callers tracking per-lane context (the
+    /// serving scheduler's reply channels) can pair them back up.
+    pub fn step_lanes(
+        &mut self,
+        lanes: &mut [Option<ActiveRequest>],
+    ) -> Result<(StepReport, Vec<(usize, ActiveRequest)>)> {
+        let mut active: Vec<&mut ActiveRequest> =
+            lanes.iter_mut().filter_map(|l| l.as_mut()).collect();
+        if active.is_empty() {
+            return Ok((StepReport::default(), Vec::new()));
+        }
+        let report = self.decode_step(&mut active)?;
+        drop(active);
+        let mut retired = Vec::new();
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if lane.as_ref().map_or(false, |ar| ar.done) {
+                retired.push((i, lane.take().unwrap()));
+            }
+        }
+        Ok((report, retired))
+    }
+
     /// Run a set of requests to completion with continuous batching;
     /// returns finished requests in completion order plus step reports.
     pub fn run_batched(
@@ -484,22 +516,15 @@ impl Engine {
                     }
                 }
             }
-            let mut active: Vec<&mut ActiveRequest> =
-                lanes.iter_mut().filter_map(|l| l.as_mut()).collect();
-            if active.is_empty() {
+            if lanes.iter().all(|l| l.is_none()) {
                 if queue.is_empty() {
                     break;
                 }
                 continue;
             }
-            reports.push(self.decode_step(&mut active)?);
-            drop(active);
-            // retire
-            for lane in lanes.iter_mut() {
-                if lane.as_ref().map_or(false, |ar| ar.done) {
-                    finished.push(lane.take().unwrap());
-                }
-            }
+            let (report, retired) = self.step_lanes(&mut lanes)?;
+            reports.push(report);
+            finished.extend(retired.into_iter().map(|(_, ar)| ar));
         }
         Ok((finished, reports))
     }

@@ -1,6 +1,12 @@
 //! L3 coordinator — the paper's system contribution as a serving runtime:
 //! request admission, continuous batching, capacity-bucketed decode
 //! scheduling and policy-driven KV management.
+//!
+//! The engine exposes lane-lifecycle hooks (`Engine::prefill`,
+//! `Engine::step_lanes`) consumed by two drivers: the in-process
+//! `Engine::run_batched` convenience loop, and the serving-scale
+//! `scheduler::Scheduler`, which adds KV-budget admission control and
+//! priority queueing in front of the same lanes.
 
 pub mod engine;
 pub mod request_state;

@@ -14,6 +14,8 @@ use crate::cache::PolicyKind;
 use crate::coordinator::{ActiveRequest, Engine, EngineConfig};
 use crate::eval::{fidelity, Fidelity};
 use crate::runtime::Runtime;
+use crate::scheduler::SchedPolicy;
+use crate::server::{serve, ServerConfig};
 use crate::workload::{Request, StoryGrammar};
 
 /// Artifact directory: $HAE_ARTIFACTS or ./artifacts.
@@ -56,6 +58,54 @@ pub fn engine_for(policy: PolicyKind, batch: usize, capture: bool) -> Result<Eng
             seed: 1,
         },
     )
+}
+
+/// Widest compiled decode batch (cheap manifest read, no PJRT), 1 when
+/// artifacts are absent.
+pub fn widest_batch() -> usize {
+    crate::model::Manifest::load(&artifact_dir())
+        .map(|m| m.shapes.decode_batches.iter().copied().max().unwrap_or(1))
+        .unwrap_or(1)
+}
+
+/// Spawn a serving thread with the given scheduler settings. The engine
+/// is constructed inside the thread — the PJRT client is not Send.
+pub fn spawn_server(
+    addr: String,
+    policy: PolicyKind,
+    batch: usize,
+    kv_budget: Option<usize>,
+    sched_policy: SchedPolicy,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let rt = Runtime::load(&artifact_dir()).expect("artifacts built?");
+        let engine = Engine::new(
+            rt,
+            EngineConfig { policy, batch, ..EngineConfig::default() },
+        )
+        .expect("engine for compiled batch");
+        let grammar = load_grammar(&artifact_dir());
+        let cfg = ServerConfig {
+            addr,
+            queue_depth: 64,
+            kv_budget,
+            sched_policy,
+        };
+        // surface bind/engine errors as a thread panic so callers see
+        // the root cause on join() instead of a silent dead server
+        serve(engine, cfg, grammar).expect("serve exited with error");
+    })
+}
+
+/// Poll until the server accepts connections (up to ~10 s).
+pub fn wait_listening(addr: &str) -> bool {
+    for _ in 0..400 {
+        if std::net::TcpStream::connect(addr).is_ok() {
+            return true;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    false
 }
 
 /// Result of running one policy over a request set.

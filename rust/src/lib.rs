@@ -13,6 +13,7 @@ pub mod eval;
 pub mod harness;
 pub mod model;
 pub mod runtime;
+pub mod scheduler;
 pub mod server;
 pub mod theory;
 pub mod util;

@@ -18,6 +18,7 @@ use hae_serve::coordinator::{Engine, EngineConfig};
 use hae_serve::harness;
 use hae_serve::model::vocab;
 use hae_serve::runtime::Runtime;
+use hae_serve::scheduler::{parse_kv_budget, SchedPolicy};
 use hae_serve::server::{serve, ServerConfig};
 use hae_serve::util::args::Args;
 use hae_serve::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
@@ -31,6 +32,10 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
   --temperature T   sampling temperature (default 0 = greedy)
   --seed S          workload seed (default 42)
   --addr A          serve: listen address (default 127.0.0.1:8472)
+  --queue N         serve: admission queue depth (default 64)
+  --kv-budget B     serve: aggregate live-KV budget in bytes; k/m/g
+                    suffixes are KiB/MiB/GiB (default: engine ceiling)
+  --sched-policy P  serve: fifo | priority (default fifo)
   --verbose         generate: print full token streams";
 
 fn main() -> Result<()> {
@@ -173,9 +178,20 @@ fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
 
 fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
     let (engine, grammar) = build_engine(artifact_dir, args)?;
+    let sched_policy = SchedPolicy::parse(args.get_or("sched-policy", "fifo"))
+        .ok_or_else(|| anyhow!("unknown --sched-policy (fifo|priority)"))?;
+    let kv_budget = match args.get("kv-budget") {
+        Some(spec) => Some(
+            parse_kv_budget(spec)
+                .ok_or_else(|| anyhow!("bad --kv-budget '{}'", spec))?,
+        ),
+        None => None,
+    };
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
         queue_depth: args.usize("queue", 64),
+        kv_budget,
+        sched_policy,
     };
     serve(engine, cfg, grammar)
 }

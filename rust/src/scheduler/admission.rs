@@ -1,0 +1,162 @@
+//! KV-budget admission control.
+//!
+//! The controller guards one invariant (checked every decode step by
+//! tests/scheduler_e2e.rs): **the sum of live slab `kv_bytes` across all
+//! decode lanes never exceeds the configured budget.**
+//!
+//! A lane's live KV can only grow by one slot per decode step (the token
+//! just processed) and the engine hard-caps it at `capacity_limit`, so a
+//! lane admitted with `g` tokens already generated out of `max_new` can
+//! never exceed
+//!
+//! ```text
+//! bound(lane) = min(live_slots + (max_new - g), capacity_limit) * kv_bytes_per_token
+//! ```
+//!
+//! Admitting a candidate only when `Σ bound(live lanes) + worst_case(candidate)`
+//! fits the budget therefore guarantees the invariant without ever
+//! re-checking mid-flight. Crucially `bound` is computed from the lane's
+//! *live* slot count: every slot an eviction policy reclaims lowers the
+//! aggregate bound immediately, which is exactly how HAE's eviction
+//! converts into admission headroom — a budget that fits N full-cache
+//! requests fits strictly more HAE requests.
+
+use crate::coordinator::ActiveRequest;
+use crate::workload::Request;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionController {
+    /// aggregate live-KV budget in bytes
+    pub kv_budget: usize,
+    /// bytes of one cache slot (K+V for one token across all layers)
+    pub kv_bytes_per_token: usize,
+    /// hard per-lane slot limit (cache_capacity - 1)
+    pub capacity_limit: usize,
+}
+
+impl AdmissionController {
+    /// Worst-case live KV of a not-yet-admitted request: the whole prompt
+    /// is retained at prefill, then one slot per generated token, capped
+    /// by the physical lane limit.
+    pub fn worst_case_bytes(&self, req: &Request) -> usize {
+        (req.prompt_len() + req.max_new_tokens).min(self.capacity_limit)
+            * self.kv_bytes_per_token
+    }
+
+    /// Upper bound on a live lane's KV at any future step (see module
+    /// docs). Non-increasing over the lane's lifetime; eviction lowers it.
+    pub fn lane_bound_bytes(&self, ar: &ActiveRequest) -> usize {
+        let remaining = ar.req.max_new_tokens.saturating_sub(ar.generated.len());
+        (ar.slab.len() + remaining).min(self.capacity_limit) * self.kv_bytes_per_token
+    }
+
+    /// Could this request ever be admitted on an idle system? Submissions
+    /// failing this are rejected immediately (they would wait forever).
+    pub fn fits_alone(&self, req: &Request) -> bool {
+        self.worst_case_bytes(req) <= self.kv_budget
+    }
+
+    /// Admission test given the summed bound of the currently-live lanes.
+    pub fn admits(&self, live_bound_bytes: usize, req: &Request) -> bool {
+        live_bound_bytes.saturating_add(self.worst_case_bytes(req)) <= self.kv_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{KvSlab, PolicyKind};
+    use crate::coordinator::RequestStats;
+    use crate::model::ModelMeta;
+    use crate::workload::WorkloadKind;
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 2,
+            d_mlp: 8,
+            patch_dim: 4,
+            n_patches: 4,
+            max_pos: 64,
+            dap_layer: 1,
+        }
+    }
+
+    fn req(prompt: usize, max_new: usize) -> Request {
+        Request {
+            id: 0,
+            kind: WorkloadKind::Story,
+            ids: vec![1; prompt],
+            patches: Vec::new(),
+            is_vision: vec![false; prompt],
+            max_new_tokens: max_new,
+            min_new_tokens: 0,
+            expected_answer: None,
+            images: Vec::new(),
+        }
+    }
+
+    fn ctl(budget_slots: usize) -> AdmissionController {
+        let per_tok = tiny_meta().kv_bytes_per_token();
+        AdmissionController {
+            kv_budget: budget_slots * per_tok,
+            kv_bytes_per_token: per_tok,
+            capacity_limit: 15,
+        }
+    }
+
+    #[test]
+    fn worst_case_clamps_at_capacity() {
+        let c = ctl(100);
+        assert_eq!(c.worst_case_bytes(&req(4, 4)), 8 * c.kv_bytes_per_token);
+        // 30 + 30 tokens can never exceed the 15-slot lane limit
+        assert_eq!(c.worst_case_bytes(&req(30, 30)), 15 * c.kv_bytes_per_token);
+    }
+
+    #[test]
+    fn admits_at_boundary_only() {
+        let c = ctl(10);
+        assert!(c.fits_alone(&req(6, 4)));
+        assert!(!c.fits_alone(&req(7, 4)));
+        // two slots of live bound already spoken for
+        assert!(c.admits(2 * c.kv_bytes_per_token, &req(4, 4)));
+        assert!(!c.admits(3 * c.kv_bytes_per_token, &req(4, 4)));
+    }
+
+    #[test]
+    fn lane_bound_shrinks_with_eviction_and_progress() {
+        let m = tiny_meta();
+        let c = ctl(100);
+        let mut slab = KvSlab::new(&m, 16);
+        let row = vec![0.0f32; m.n_layers * m.n_heads * m.d_head];
+        for i in 0..6 {
+            slab.append(&row, &row, i, crate::cache::Modality::Text, 0.0);
+        }
+        let mut ar = ActiveRequest {
+            req: req(6, 10),
+            slab,
+            policy: PolicyKind::Full.build(),
+            generated: vec![1, 2],
+            pos: 8,
+            prefill_len: 6,
+            pending_token: 2,
+            done: false,
+            forced: None,
+            logits_trace: Vec::new(),
+            score_trace: Vec::new(),
+            evictions: Vec::new(),
+            stats: RequestStats::default(),
+        };
+        // 6 live + 8 remaining of 10
+        assert_eq!(c.lane_bound_bytes(&ar), 14 * c.kv_bytes_per_token);
+        // eviction frees admission headroom immediately
+        ar.slab.evict(&[0, 1, 2]);
+        assert_eq!(c.lane_bound_bytes(&ar), 11 * c.kv_bytes_per_token);
+        // progress shrinks the bound too
+        ar.generated.extend([3, 4]);
+        assert_eq!(c.lane_bound_bytes(&ar), 9 * c.kv_bytes_per_token);
+    }
+}

@@ -1,0 +1,185 @@
+//! Serving metrics registry, exposed over the wire via the
+//! `{"kind": "stats"}` server request.
+//!
+//! Counters (submissions, completions, rejections), gauges (queue depth,
+//! live KV bytes) and small fixed-memory latency reservoirs (TTFT and
+//! end-to-end, ring-buffered so a long-lived server never grows). The
+//! lanes-occupied histogram is the direct evidence of continuous
+//! batching: `lanes_hist[k]` counts decode steps that ran with exactly
+//! `k` live lanes.
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::percentile;
+
+const RING_CAP: usize = 4096;
+
+/// Fixed-capacity latency reservoir (keeps the most recent samples).
+#[derive(Debug, Clone, Default)]
+struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Ring {
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % RING_CAP;
+        }
+    }
+
+    fn p(&self, q: f64) -> f64 {
+        percentile(&self.buf, q)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsRegistry {
+    pub kv_budget: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    /// requests that failed inside the engine (e.g. prompt too long)
+    pub failed: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_kv_budget: u64,
+    pub decode_steps: u64,
+    /// live KV bytes at the most recent decode step (gauge)
+    pub live_kv_bytes: usize,
+    /// max aggregate live KV observed at any decode step — the budget
+    /// invariant says this never exceeds `kv_budget`
+    pub peak_live_kv_bytes: usize,
+    pub peak_queue_depth: usize,
+    lanes_hist: Vec<u64>,
+    ttft_ms: Ring,
+    e2e_ms: Ring,
+}
+
+impl MetricsRegistry {
+    pub fn new(batch: usize, kv_budget: usize) -> Self {
+        MetricsRegistry {
+            kv_budget,
+            submitted: 0,
+            completed: 0,
+            failed: 0,
+            rejected_queue_full: 0,
+            rejected_kv_budget: 0,
+            decode_steps: 0,
+            live_kv_bytes: 0,
+            peak_live_kv_bytes: 0,
+            peak_queue_depth: 0,
+            lanes_hist: vec![0; batch + 1],
+            ttft_ms: Ring::default(),
+            e2e_ms: Ring::default(),
+        }
+    }
+
+    pub fn record_step(&mut self, lanes: usize, live_kv_bytes: usize) {
+        self.decode_steps += 1;
+        let k = lanes.min(self.lanes_hist.len().saturating_sub(1));
+        self.lanes_hist[k] += 1;
+        self.live_kv_bytes = live_kv_bytes;
+        self.peak_live_kv_bytes = self.peak_live_kv_bytes.max(live_kv_bytes);
+    }
+
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.peak_queue_depth = self.peak_queue_depth.max(depth);
+    }
+
+    /// Time-to-first-token: enqueue → prefill done (the first token
+    /// exists as soon as prefill logits are sampled).
+    pub fn record_ttft(&mut self, seconds: f64) {
+        self.ttft_ms.push(seconds * 1000.0);
+    }
+
+    pub fn record_e2e(&mut self, seconds: f64) {
+        self.e2e_ms.push(seconds * 1000.0);
+    }
+
+    /// Widest batch any decode step actually ran at.
+    pub fn max_lanes_step(&self) -> usize {
+        self.lanes_hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(k, _)| k)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn snapshot(&self, queue_depth: usize, lanes_occupied: usize) -> Json {
+        obj(vec![
+            ("kind", s("stats")),
+            ("queue_depth", num(queue_depth as f64)),
+            ("peak_queue_depth", num(self.peak_queue_depth as f64)),
+            ("lanes_occupied", num(lanes_occupied as f64)),
+            ("max_lanes_step", num(self.max_lanes_step() as f64)),
+            (
+                "lanes_hist",
+                Json::Arr(self.lanes_hist.iter().map(|&n| num(n as f64)).collect()),
+            ),
+            ("submitted", num(self.submitted as f64)),
+            ("completed", num(self.completed as f64)),
+            ("failed", num(self.failed as f64)),
+            ("rejected_queue_full", num(self.rejected_queue_full as f64)),
+            ("rejected_kv_budget", num(self.rejected_kv_budget as f64)),
+            ("decode_steps", num(self.decode_steps as f64)),
+            ("kv_budget", num(self.kv_budget as f64)),
+            ("live_kv_bytes", num(self.live_kv_bytes as f64)),
+            ("peak_live_kv_bytes", num(self.peak_live_kv_bytes as f64)),
+            ("ttft_p50_ms", num(self.ttft_ms.p(0.5))),
+            ("ttft_p95_ms", num(self.ttft_ms.p(0.95))),
+            ("e2e_p50_ms", num(self.e2e_ms.p(0.5))),
+            ("e2e_p95_ms", num(self.e2e_ms.p(0.95))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_and_peaks() {
+        let mut m = MetricsRegistry::new(4, 1000);
+        m.record_step(1, 100);
+        m.record_step(3, 700);
+        m.record_step(3, 400);
+        assert_eq!(m.decode_steps, 3);
+        assert_eq!(m.max_lanes_step(), 3);
+        assert_eq!(m.peak_live_kv_bytes, 700);
+        assert_eq!(m.live_kv_bytes, 400);
+    }
+
+    #[test]
+    fn snapshot_round_trips_as_json() {
+        let mut m = MetricsRegistry::new(2, 4096);
+        m.submitted = 5;
+        m.completed = 4;
+        m.record_step(2, 2048);
+        m.record_ttft(0.010);
+        m.record_e2e(0.100);
+        let j = m.snapshot(3, 1);
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("kind").and_then(|v| v.as_str()), Some("stats"));
+        assert_eq!(parsed.get("queue_depth").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(parsed.get("max_lanes_step").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            parsed.get("peak_live_kv_bytes").and_then(|v| v.as_usize()),
+            Some(2048)
+        );
+        assert!(parsed.get("ttft_p50_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ring_stays_bounded() {
+        let mut r = Ring::default();
+        for i in 0..(RING_CAP + 100) {
+            r.push(i as f64);
+        }
+        assert_eq!(r.buf.len(), RING_CAP);
+        // the oldest samples were overwritten
+        assert!(r.p(0.0) >= 100.0);
+    }
+}

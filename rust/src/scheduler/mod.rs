@@ -1,0 +1,384 @@
+//! Continuous-batching scheduler with KV-budget admission control — the
+//! serving-scale layer between the TCP front end and the engine.
+//!
+//! # Architecture
+//!
+//! The scheduler owns the engine's decode lanes (one slot per compiled
+//! batch position) plus an admission queue. Each `tick`:
+//!
+//! 1. **Backfill** — free lanes are filled from the queue, best candidate
+//!    first (`queue::SchedPolicy`: FIFO, or priority classes with
+//!    starvation-free aging), but only if the KV-budget admission test
+//!    passes (`admission::AdmissionController`). Admission runs prefill,
+//!    so a request joins the batch *mid-flight* — nobody waits for the
+//!    current batch to drain.
+//! 2. **Decode** — one batched `Engine::decode_step` over every live lane
+//!    (capacity-bucketed as before).
+//! 3. **Retire** — finished lanes become buffered outcomes (collected
+//!    with `take_outcomes`; the server replies per-connection) and their
+//!    slots become backfill targets on the next tick.
+//!
+//! # The admission invariant
+//!
+//! At every decode step, `Σ live slab kv_bytes ≤ kv_budget`. The
+//! controller admits a request only when the summed *future bound* of the
+//! live lanes plus the candidate's worst-case KV fits the budget (see
+//! admission.rs for the bound derivation). Because the bound is computed
+//! from live slot counts, **every slot the eviction policy reclaims is
+//! admission headroom**: under HAE the same budget admits more concurrent
+//! requests than Full Cache, which is how the paper's 41% per-request KV
+//! reduction compounds into serving throughput
+//! (benches/perf_serve_batch.rs measures exactly this).
+//!
+//! Metrics (queue depth, TTFT, lanes-occupied histogram, rejections,
+//! aggregate KV bytes) live in `metrics::MetricsRegistry` and are served
+//! by the `{"kind": "stats"}` request.
+
+pub mod admission;
+pub mod metrics;
+pub mod queue;
+
+pub use admission::AdmissionController;
+pub use metrics::MetricsRegistry;
+pub use queue::{class_of, AdmissionQueue, QueuedJob, SchedPolicy};
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{ActiveRequest, Engine, StepReport};
+use crate::util::json::Json;
+use crate::workload::Request;
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// aggregate live-KV budget in bytes
+    pub kv_budget: usize,
+    pub policy: SchedPolicy,
+    /// max jobs waiting for admission before rejection
+    pub queue_depth: usize,
+    /// scheduler ticks per priority-class promotion (queue aging)
+    pub aging_ticks: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            kv_budget: usize::MAX,
+            policy: SchedPolicy::Fifo,
+            queue_depth: 64,
+            aging_ticks: 256,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    QueueFull,
+    KvBudget,
+}
+
+impl RejectReason {
+    pub fn message(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "admission queue full",
+            RejectReason::KvBudget => "kv budget exceeded: request can never fit",
+        }
+    }
+}
+
+/// A request leaving the scheduler, tagged with the caller's context.
+pub enum SchedOutcome<T> {
+    Done { tag: T, ar: Box<ActiveRequest> },
+    Failed { tag: T, error: String },
+}
+
+struct LaneTag<T> {
+    tag: T,
+    enqueued_at: Instant,
+}
+
+pub struct Scheduler<T> {
+    cfg: SchedulerConfig,
+    admission: AdmissionController,
+    queue: AdmissionQueue<T>,
+    /// decode lanes, indexed to match `tags` (None = free slot)
+    lanes: Vec<Option<ActiveRequest>>,
+    tags: Vec<Option<LaneTag<T>>>,
+    /// outcomes produced but not yet collected via `take_outcomes` —
+    /// buffered on self so a fatal tick error cannot drop replies that
+    /// backfill already finished
+    ready: Vec<SchedOutcome<T>>,
+    pub metrics: MetricsRegistry,
+    tick_no: u64,
+}
+
+impl<T> Scheduler<T> {
+    pub fn new(
+        cfg: SchedulerConfig,
+        batch: usize,
+        kv_bytes_per_token: usize,
+        capacity_limit: usize,
+    ) -> Self {
+        let admission = AdmissionController {
+            kv_budget: cfg.kv_budget,
+            kv_bytes_per_token,
+            capacity_limit,
+        };
+        let queue = AdmissionQueue::new(cfg.policy, cfg.queue_depth, cfg.aging_ticks);
+        let metrics = MetricsRegistry::new(batch, cfg.kv_budget);
+        Scheduler {
+            cfg,
+            admission,
+            queue,
+            lanes: (0..batch).map(|_| None).collect(),
+            tags: (0..batch).map(|_| None).collect(),
+            ready: Vec::new(),
+            metrics,
+            tick_no: 0,
+        }
+    }
+
+    /// Derive lane count and admission constants from a built engine.
+    pub fn for_engine(cfg: SchedulerConfig, engine: &Engine) -> Self {
+        Self::new(
+            cfg,
+            engine.cfg.batch,
+            engine.rt.meta().kv_bytes_per_token(),
+            engine.capacity_limit(),
+        )
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn lanes_occupied(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Anything queued or mid-flight?
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.lanes.iter().any(|l| l.is_some())
+    }
+
+    pub fn stats_json(&self) -> Json {
+        self.metrics.snapshot(self.queue.len(), self.lanes_occupied())
+    }
+
+    /// Enqueue a request. `Err` hands the tag back with the reject reason
+    /// so the caller can reply immediately; rejection (rather than
+    /// blocking) keeps the engine thread responsive under overload.
+    pub fn submit(&mut self, tag: T, req: Request) -> Result<(), (T, RejectReason)> {
+        self.metrics.submitted += 1;
+        if !self.admission.fits_alone(&req) {
+            self.metrics.rejected_kv_budget += 1;
+            return Err((tag, RejectReason::KvBudget));
+        }
+        match self.queue.push(tag, req, self.tick_no) {
+            Ok(()) => {
+                self.metrics.record_queue_depth(self.queue.len());
+                Ok(())
+            }
+            Err(tag) => {
+                self.metrics.rejected_queue_full += 1;
+                Err((tag, RejectReason::QueueFull))
+            }
+        }
+    }
+
+    /// Summed future-KV bound of the live lanes (admission.rs math).
+    fn live_bound_bytes(&self) -> usize {
+        self.lanes
+            .iter()
+            .flatten()
+            .map(|ar| self.admission.lane_bound_bytes(ar))
+            .sum()
+    }
+
+    /// Fill free lanes from the queue while the admission test passes.
+    /// Per-request failures become buffered `Failed` outcomes, never
+    /// errors — the serving loop must survive them.
+    fn backfill(&mut self, engine: &mut Engine) {
+        loop {
+            let free = match self.lanes.iter().position(|l| l.is_none()) {
+                Some(i) => i,
+                None => return,
+            };
+            let cand = match self.queue.select(self.tick_no) {
+                Some(i) => i,
+                None => return,
+            };
+            if !self.admission.admits(self.live_bound_bytes(), &self.queue.peek(cand).req) {
+                // Head-of-line wait: the budget frees up as live lanes
+                // evict or finish, and `fits_alone` at submit time
+                // guarantees an empty system always admits — no deadlock.
+                return;
+            }
+            let job = self.queue.remove(cand);
+            match engine.prefill(job.req) {
+                Ok(ar) => {
+                    self.metrics.record_ttft(job.enqueued_at.elapsed().as_secs_f64());
+                    if ar.done {
+                        self.metrics.completed += 1;
+                        self.metrics.record_e2e(job.enqueued_at.elapsed().as_secs_f64());
+                        self.ready.push(SchedOutcome::Done { tag: job.tag, ar: Box::new(ar) });
+                    } else {
+                        self.lanes[free] = Some(ar);
+                        self.tags[free] =
+                            Some(LaneTag { tag: job.tag, enqueued_at: job.enqueued_at });
+                    }
+                }
+                Err(e) => {
+                    // e.g. prompt exceeds the largest prefill bucket
+                    self.metrics.failed += 1;
+                    self.ready
+                        .push(SchedOutcome::Failed { tag: job.tag, error: e.to_string() });
+                }
+            }
+        }
+    }
+
+    /// One scheduling round: backfill, one batched decode step, retire.
+    /// Outcomes are buffered — collect them with `take_outcomes` after
+    /// every tick, *including* a failed one: a decode error must not
+    /// swallow replies that backfill already finished this round.
+    pub fn tick(&mut self, engine: &mut Engine) -> Result<StepReport> {
+        self.backfill(engine);
+        let step = engine.step_lanes(&mut self.lanes);
+        self.tick_no += 1;
+        let (report, done) = step?;
+        if report.lanes > 0 {
+            // aggregate live KV at this step, counting lanes that finished
+            // during it — the quantity the admission invariant bounds
+            let live: usize = self
+                .lanes
+                .iter()
+                .flatten()
+                .map(|ar| ar.slab.kv_bytes())
+                .sum::<usize>()
+                + done.iter().map(|(_, ar)| ar.slab.kv_bytes()).sum::<usize>();
+            debug_assert!(
+                live <= self.cfg.kv_budget,
+                "admission invariant violated: {} live > {} budget",
+                live,
+                self.cfg.kv_budget
+            );
+            self.metrics.record_step(report.lanes, live);
+        }
+        for (idx, ar) in done {
+            let lt = self.tags[idx].take().expect("finished lane carries a tag");
+            self.metrics.completed += 1;
+            self.metrics.record_e2e(lt.enqueued_at.elapsed().as_secs_f64());
+            self.ready.push(SchedOutcome::Done { tag: lt.tag, ar: Box::new(ar) });
+        }
+        Ok(report)
+    }
+
+    /// Drain the buffered outcomes of prior `tick` calls.
+    pub fn take_outcomes(&mut self) -> Vec<SchedOutcome<T>> {
+        std::mem::take(&mut self.ready)
+    }
+
+    /// Abandon everything queued or mid-flight, returning the tags so the
+    /// caller can notify clients (shutdown path).
+    pub fn drain_tags(&mut self) -> Vec<T> {
+        let mut tags: Vec<T> = self.queue.drain().into_iter().map(|j| j.tag).collect();
+        for (lane, tag) in self.lanes.iter_mut().zip(self.tags.iter_mut()) {
+            *lane = None;
+            if let Some(lt) = tag.take() {
+                tags.push(lt.tag);
+            }
+        }
+        tags
+    }
+}
+
+/// Parse a `--kv-budget` spec: plain bytes, or an integer with a
+/// k/m/g (KiB/MiB/GiB) suffix, e.g. `512k`, `4m`.
+pub fn parse_kv_budget(spec: &str) -> Option<usize> {
+    let sp = spec.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = sp.strip_suffix('k') {
+        (d, 1usize << 10)
+    } else if let Some(d) = sp.strip_suffix('m') {
+        (d, 1usize << 20)
+    } else if let Some(d) = sp.strip_suffix('g') {
+        (d, 1usize << 30)
+    } else {
+        (sp.as_str(), 1usize)
+    };
+    digits.parse::<usize>().ok().and_then(|n| n.checked_mul(mult))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadKind;
+
+    fn req(prompt: usize, max_new: usize) -> Request {
+        Request {
+            id: 0,
+            kind: WorkloadKind::Understanding,
+            ids: vec![1; prompt],
+            patches: Vec::new(),
+            is_vision: vec![false; prompt],
+            max_new_tokens: max_new,
+            min_new_tokens: 0,
+            expected_answer: None,
+            images: Vec::new(),
+        }
+    }
+
+    fn sched(budget_slots: usize, queue_depth: usize) -> Scheduler<u32> {
+        let cfg = SchedulerConfig {
+            kv_budget: budget_slots * 64,
+            queue_depth,
+            ..SchedulerConfig::default()
+        };
+        Scheduler::new(cfg, 4, 64, 100)
+    }
+
+    #[test]
+    fn submit_rejects_oversized_requests() {
+        let mut sc = sched(8, 16);
+        assert!(sc.submit(1, req(4, 4)).is_ok());
+        match sc.submit(2, req(8, 8)) {
+            Err((tag, RejectReason::KvBudget)) => assert_eq!(tag, 2),
+            _ => panic!("16-slot worst case must not fit an 8-slot budget"),
+        }
+        assert_eq!(sc.metrics.rejected_kv_budget, 1);
+        assert_eq!(sc.metrics.submitted, 2);
+        assert_eq!(sc.queue_len(), 1);
+    }
+
+    #[test]
+    fn submit_rejects_when_queue_full() {
+        let mut sc = sched(100, 1);
+        assert!(sc.submit(1, req(2, 2)).is_ok());
+        match sc.submit(2, req(2, 2)) {
+            Err((tag, RejectReason::QueueFull)) => assert_eq!(tag, 2),
+            _ => panic!("second submit must hit the depth-1 queue"),
+        }
+        assert_eq!(sc.metrics.rejected_queue_full, 1);
+    }
+
+    #[test]
+    fn drain_returns_queued_tags() {
+        let mut sc = sched(100, 8);
+        sc.submit(7, req(2, 2)).unwrap();
+        sc.submit(9, req(2, 2)).unwrap();
+        let tags = sc.drain_tags();
+        assert_eq!(tags, vec![7, 9]);
+        assert!(!sc.has_work());
+    }
+
+    #[test]
+    fn kv_budget_parsing() {
+        assert_eq!(parse_kv_budget("4096"), Some(4096));
+        assert_eq!(parse_kv_budget("512k"), Some(512 << 10));
+        assert_eq!(parse_kv_budget("4M"), Some(4 << 20));
+        assert_eq!(parse_kv_budget("1g"), Some(1 << 30));
+        assert_eq!(parse_kv_budget("bogus"), None);
+        assert_eq!(parse_kv_budget(""), None);
+    }
+}

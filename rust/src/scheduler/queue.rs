@@ -1,0 +1,205 @@
+//! Admission queue: per-workload-kind priority classes with
+//! starvation-free aging.
+//!
+//! Requests wait here until a decode lane AND enough KV budget are free
+//! (scheduler/admission.rs decides the latter). Two selection policies:
+//!
+//! * `Fifo` — strict arrival order regardless of workload kind.
+//! * `Priority` — interactive kinds (QA) outrank long-generation kinds
+//!   (story), with aging: every `aging_ticks` scheduler ticks spent
+//!   waiting promotes a job one class, so sustained high-priority traffic
+//!   can never starve the low classes — a class-`c` job waits at most
+//!   `c * aging_ticks` ticks before it competes at class 0, where ties
+//!   break by arrival order.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::workload::{Request, WorkloadKind};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    Fifo,
+    Priority,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "priority" | "prio" => Some(SchedPolicy::Priority),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Priority => "priority",
+        }
+    }
+}
+
+/// Priority class of a workload kind (lower = served first). QA turns are
+/// interactive; story generations are long batch jobs that would
+/// otherwise head-of-line-block everyone behind them.
+pub fn class_of(kind: WorkloadKind) -> u8 {
+    match kind {
+        WorkloadKind::Understanding => 0,
+        WorkloadKind::Video => 1,
+        WorkloadKind::Mixed => 1,
+        WorkloadKind::Story => 2,
+    }
+}
+
+pub struct QueuedJob<T> {
+    pub tag: T,
+    pub req: Request,
+    pub class: u8,
+    pub enqueued_tick: u64,
+    pub enqueued_at: Instant,
+}
+
+pub struct AdmissionQueue<T> {
+    jobs: VecDeque<QueuedJob<T>>,
+    policy: SchedPolicy,
+    aging_ticks: u64,
+    capacity: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(policy: SchedPolicy, capacity: usize, aging_ticks: u64) -> Self {
+        AdmissionQueue {
+            jobs: VecDeque::new(),
+            policy,
+            aging_ticks: aging_ticks.max(1),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Enqueue, or hand the tag back when the queue is full so the caller
+    /// can reject gracefully.
+    pub fn push(&mut self, tag: T, req: Request, tick: u64) -> Result<(), T> {
+        if self.jobs.len() >= self.capacity {
+            return Err(tag);
+        }
+        let class = class_of(req.kind);
+        self.jobs.push_back(QueuedJob {
+            tag,
+            req,
+            class,
+            enqueued_tick: tick,
+            enqueued_at: Instant::now(),
+        });
+        Ok(())
+    }
+
+    fn effective_class(&self, job: &QueuedJob<T>, tick: u64) -> u8 {
+        let waited = tick.saturating_sub(job.enqueued_tick);
+        let promoted = (waited / self.aging_ticks).min(u8::MAX as u64) as u8;
+        job.class.saturating_sub(promoted)
+    }
+
+    /// Index of the job the policy would admit next (None when empty).
+    pub fn select(&self, tick: u64) -> Option<usize> {
+        if self.jobs.is_empty() {
+            return None;
+        }
+        match self.policy {
+            SchedPolicy::Fifo => Some(0),
+            SchedPolicy::Priority => (0..self.jobs.len()).min_by_key(|&i| {
+                let j = &self.jobs[i];
+                (self.effective_class(j, tick), j.enqueued_tick, i)
+            }),
+        }
+    }
+
+    pub fn peek(&self, idx: usize) -> &QueuedJob<T> {
+        &self.jobs[idx]
+    }
+
+    pub fn remove(&mut self, idx: usize) -> QueuedJob<T> {
+        self.jobs.remove(idx).expect("queue index in range")
+    }
+
+    /// Take everything still waiting (shutdown drain).
+    pub fn drain(&mut self) -> Vec<QueuedJob<T>> {
+        self.jobs.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(kind: WorkloadKind) -> Request {
+        Request {
+            id: 0,
+            kind,
+            ids: vec![1],
+            patches: Vec::new(),
+            is_vision: vec![false],
+            max_new_tokens: 4,
+            min_new_tokens: 0,
+            expected_answer: None,
+            images: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn fifo_ignores_class() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(SchedPolicy::Fifo, 8, 16);
+        q.push(0, req(WorkloadKind::Story), 0).unwrap();
+        q.push(1, req(WorkloadKind::Understanding), 1).unwrap();
+        assert_eq!(q.select(2), Some(0));
+        assert_eq!(q.remove(0).tag, 0);
+        assert_eq!(q.remove(0).tag, 1);
+    }
+
+    #[test]
+    fn priority_prefers_interactive() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(SchedPolicy::Priority, 8, 16);
+        q.push(0, req(WorkloadKind::Story), 0).unwrap();
+        q.push(1, req(WorkloadKind::Understanding), 1).unwrap();
+        // QA (class 0) beats the earlier-arrived story (class 2)
+        let i = q.select(2).unwrap();
+        assert_eq!(q.peek(i).tag, 1);
+    }
+
+    #[test]
+    fn aging_prevents_starvation() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(SchedPolicy::Priority, 8, 4);
+        q.push(0, req(WorkloadKind::Story), 0).unwrap();
+        q.push(1, req(WorkloadKind::Understanding), 7).unwrap();
+        // at tick 8 the story has waited 8 ticks = 2 promotions → class 0,
+        // and its earlier enqueue tick wins the tie
+        let i = q.select(8).unwrap();
+        assert_eq!(q.peek(i).tag, 0);
+    }
+
+    #[test]
+    fn full_queue_returns_tag() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(SchedPolicy::Fifo, 1, 16);
+        q.push(7, req(WorkloadKind::Mixed), 0).unwrap();
+        assert_eq!(q.push(8, req(WorkloadKind::Mixed), 0), Err(8));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(SchedPolicy::Fifo, 8, 16);
+        q.push(1, req(WorkloadKind::Story), 0).unwrap();
+        q.push(2, req(WorkloadKind::Video), 0).unwrap();
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(q.is_empty());
+    }
+}

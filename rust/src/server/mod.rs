@@ -5,38 +5,56 @@
 //!              "max_new": 64, "seed": 123}
 //!            (requests are synthesized server-side from the workload
 //!             generators — the "tokenizer + vision encoder" of this
-//!             system; an external-prompt variant would marshal patches,
-//!             which the JSON substrate supports but the demo doesn't need)
+//!             system; a "seed" field makes the synthesized prompt
+//!             reproducible across connections)
+//!   stats:    {"kind": "stats"} → scheduler metrics snapshot
+//!             (queue depth, TTFT/e2e percentiles, lanes histogram,
+//!              admission rejections, aggregate KV bytes)
 //!   response: {"id": 1, "tokens": [...], "text": "...",
 //!              "prefill_ms": ..., "decode_ms": ..., "steps": N,
 //!              "pruned": N, "evicted": N, "peak_kv_kib": N}
+//!   error:    {"id": 1, "error": "..."} (id echoed whenever the request
+//!             line carried one)
 //!
-//! Architecture: acceptor threads feed a bounded channel into the single
-//! engine thread (the PJRT client is single-threaded by design); responses
-//! flow back through per-connection channels. This is the leader/worker
-//! split of DESIGN.md §2 at CPU scale.
+//! Architecture: acceptor + per-connection reader/writer threads feed a
+//! channel into the single engine thread (the PJRT client is
+//! single-threaded by design). The engine thread runs the
+//! continuous-batching scheduler (scheduler::Scheduler): requests join
+//! free decode lanes mid-flight under KV-budget admission control, and
+//! each response flows back through its connection's channel the moment
+//! that request finishes — short requests are never serialized behind
+//! long generations admitted earlier.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::Engine;
-use crate::model::vocab;
+use crate::model::{vocab, ModelMeta};
+use crate::scheduler::{SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig};
 use crate::util::json::{num, obj, s, Json};
 use crate::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
 
 pub struct ServerConfig {
     pub addr: String,
-    /// max queued requests before backpressure (connection blocks)
+    /// max requests waiting for admission before graceful rejection
     pub queue_depth: usize,
+    /// aggregate live-KV budget in bytes (None → engine ceiling)
+    pub kv_budget: Option<usize>,
+    pub sched_policy: SchedPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8472".into(), queue_depth: 64 }
+        ServerConfig {
+            addr: "127.0.0.1:8472".into(),
+            queue_depth: 64,
+            kv_budget: None,
+            sched_policy: SchedPolicy::Fifo,
+        }
     }
 }
 
@@ -45,19 +63,32 @@ struct Job {
     reply: mpsc::Sender<String>,
 }
 
-/// Parse one request line into a workload Request (synthesized).
+/// Scheduler tag: everything needed to answer a request later.
+struct JobTag {
+    id: i64,
+    reply: mpsc::Sender<String>,
+}
+
+/// Turn one parsed request object into a workload Request (synthesized).
+/// A "seed" field draws the prompt from a fresh builder at that seed so
+/// identical request lines produce identical prompts on any connection;
+/// without it the connection-shared builder stream is used.
 fn synthesize(
-    line: &str,
+    j: &Json,
+    meta: &ModelMeta,
+    grammar: &StoryGrammar,
     builder: &mut RequestBuilder,
 ) -> Result<(i64, crate::workload::Request)> {
-    let j = Json::parse(line).map_err(|e| anyhow!("bad json: {}", e))?;
     let id = j.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
     let kind = j
         .get("kind")
         .and_then(|v| v.as_str())
         .and_then(WorkloadKind::parse)
         .ok_or_else(|| anyhow!("missing/unknown kind"))?;
-    let mut req = builder.make(kind);
+    let mut req = match j.get("seed").and_then(|v| v.as_i64()) {
+        Some(seed) => RequestBuilder::new(meta, grammar, seed as u64).make(kind),
+        None => builder.make(kind),
+    };
     if let Some(mx) = j.get("max_new").and_then(|v| v.as_usize()) {
         req.max_new_tokens = mx;
         req.min_new_tokens = req.min_new_tokens.min(mx);
@@ -84,23 +115,94 @@ fn respond(id: i64, ar: &crate::coordinator::ActiveRequest) -> String {
     .to_string_compact()
 }
 
+/// JSON error object, escaped through the serializer and echoing the
+/// request id when one is known.
+fn error_reply(id: Option<i64>, err: &str) -> String {
+    let mut fields = vec![("error", s(err))];
+    if let Some(id) = id {
+        fields.push(("id", num(id as f64)));
+    }
+    obj(fields).to_string_compact()
+}
+
+#[derive(PartialEq)]
+enum Ingest {
+    Continue,
+    Shutdown,
+}
+
+/// Handle one queued line: control requests (shutdown/stats) inline,
+/// workload requests into the scheduler, failures straight back.
+fn ingest(
+    job: Job,
+    meta: &ModelMeta,
+    grammar: &StoryGrammar,
+    builder: &mut RequestBuilder,
+    sched: &mut Scheduler<JobTag>,
+) -> Ingest {
+    if job.line.trim() == "shutdown" {
+        let _ = job.reply.send("{\"ok\":true,\"shutdown\":true}".into());
+        return Ingest::Shutdown;
+    }
+    let parsed = match Json::parse(&job.line) {
+        Ok(j) => j,
+        Err(e) => {
+            let _ = job.reply.send(error_reply(None, &format!("bad json: {}", e)));
+            return Ingest::Continue;
+        }
+    };
+    let id = parsed.get("id").and_then(|v| v.as_i64());
+    if parsed.get("kind").and_then(|v| v.as_str()) == Some("stats") {
+        let _ = job.reply.send(sched.stats_json().to_string_compact());
+        return Ingest::Continue;
+    }
+    match synthesize(&parsed, meta, grammar, builder) {
+        Ok((id, req)) => {
+            let tag = JobTag { id, reply: job.reply };
+            if let Err((tag, reason)) = sched.submit(tag, req) {
+                let _ = tag.reply.send(error_reply(Some(tag.id), reason.message()));
+            }
+        }
+        Err(e) => {
+            let _ = job.reply.send(error_reply(id, &e.to_string()));
+        }
+    }
+    Ingest::Continue
+}
+
+fn deliver(outcome: SchedOutcome<JobTag>) {
+    match outcome {
+        SchedOutcome::Done { tag, ar } => {
+            let _ = tag.reply.send(respond(tag.id, &ar));
+        }
+        SchedOutcome::Failed { tag, error } => {
+            let _ = tag.reply.send(error_reply(Some(tag.id), &error));
+        }
+    }
+}
+
 /// Run the server until `shutdown` (a line "shutdown" on any connection).
-/// Blocks the calling thread with the engine loop.
+/// Blocks the calling thread with the engine/scheduler loop.
 pub fn serve(mut engine: Engine, cfg: ServerConfig, grammar: StoryGrammar) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
+    let local_addr = listener.local_addr()?;
     eprintln!("hae-serve listening on {}", cfg.addr);
-    let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
-    let shutdown = Arc::new(Mutex::new(false));
+    // mailbox between connection threads and the engine thread; the
+    // scheduler's admission queue is the real (rejecting) queue, so this
+    // only needs enough slack that ingest drains stay cheap
+    let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1) * 4);
+    let shutdown = Arc::new(AtomicBool::new(false));
 
-    // acceptor thread
+    // acceptor thread — unblocked at shutdown by a self-connection from
+    // the engine loop (listener.incoming() cannot time out)
     {
         let tx = tx.clone();
         let shutdown = shutdown.clone();
         let listener = listener.try_clone()?;
         std::thread::spawn(move || {
             for stream in listener.incoming().flatten() {
-                if *shutdown.lock().unwrap() {
+                if shutdown.load(Ordering::SeqCst) {
                     break;
                 }
                 let tx = tx.clone();
@@ -112,59 +214,120 @@ pub fn serve(mut engine: Engine, cfg: ServerConfig, grammar: StoryGrammar) -> Re
         });
     }
 
-    // engine loop (single-threaded PJRT owner)
+    // engine thread (single-threaded PJRT owner) running the scheduler
     let meta = engine.rt.meta().clone();
     let mut builder = RequestBuilder::new(&meta, &grammar, 0xBEEF);
     engine.rt.warmup(&[engine.cfg.batch])?;
-    loop {
-        let job = match rx.recv() {
-            Ok(j) => j,
-            Err(_) => break,
-        };
-        if job.line.trim() == "shutdown" {
-            *shutdown.lock().unwrap() = true;
-            let _ = job.reply.send("{\"ok\":true,\"shutdown\":true}".into());
-            break;
+    let sched_cfg = SchedulerConfig {
+        kv_budget: cfg.kv_budget.unwrap_or_else(|| engine.kv_budget_ceiling()),
+        policy: cfg.sched_policy,
+        queue_depth: cfg.queue_depth,
+        ..SchedulerConfig::default()
+    };
+    let mut sched: Scheduler<JobTag> = Scheduler::for_engine(sched_cfg, &engine);
+    let mut fatal: Option<anyhow::Error> = None;
+
+    'serve: loop {
+        // ingest: block only when idle, otherwise drain opportunistically
+        // between decode steps so new requests join the batch mid-flight
+        if !sched.has_work() {
+            match rx.recv() {
+                Ok(job) => {
+                    if ingest(job, &meta, &grammar, &mut builder, &mut sched)
+                        == Ingest::Shutdown
+                    {
+                        break 'serve;
+                    }
+                }
+                Err(_) => break 'serve,
+            }
         }
-        let reply = match synthesize(&job.line, &mut builder) {
-            Ok((id, req)) => match engine.generate(req) {
-                Ok(ar) => respond(id, &ar),
-                Err(e) => format!("{{\"error\":\"{}\"}}", e),
-            },
-            Err(e) => format!("{{\"error\":\"{}\"}}", e),
-        };
-        let _ = job.reply.send(reply);
+        loop {
+            match rx.try_recv() {
+                Ok(job) => {
+                    if ingest(job, &meta, &grammar, &mut builder, &mut sched)
+                        == Ingest::Shutdown
+                    {
+                        break 'serve;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        // one scheduling round: backfill free lanes, decode, retire. A
+        // decode error is runtime-fatal (the whole batched step failed),
+        // but outcomes are delivered first and cleanup still runs below,
+        // so every in-flight client hears why instead of an abrupt EOF
+        let tick_result = sched.tick(&mut engine);
+        for outcome in sched.take_outcomes() {
+            deliver(outcome);
+        }
+        if let Err(e) = tick_result {
+            fatal = Some(e);
+            break 'serve;
+        }
     }
-    Ok(())
+
+    // prompt shutdown: flag first, then self-connect to pop the acceptor
+    // out of listener.incoming(); in-flight work gets an error reply
+    shutdown.store(true, Ordering::SeqCst);
+    for outcome in sched.take_outcomes() {
+        deliver(outcome);
+    }
+    let reason = match &fatal {
+        Some(e) => format!("engine error: {}", e),
+        None => "server shutting down".to_string(),
+    };
+    for tag in sched.drain_tags() {
+        let _ = tag.reply.send(error_reply(Some(tag.id), &reason));
+    }
+    let _ = TcpStream::connect(local_addr);
+    match fatal {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 fn handle_conn(
     stream: TcpStream,
     tx: mpsc::SyncSender<Job>,
-    shutdown: Arc<Mutex<bool>>,
+    shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
-    let mut writer = stream.try_clone()?;
+    let writer_stream = stream.try_clone()?;
+    let (rtx, rrx) = mpsc::channel::<String>();
+    // writer thread: replies land whenever the scheduler finishes each
+    // request — possibly out of request order; ids disambiguate
+    let writer = std::thread::spawn(move || {
+        let mut w = writer_stream;
+        for resp in rrx {
+            if w
+                .write_all(resp.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
         if line.trim().is_empty() {
             continue;
         }
-        let (rtx, rrx) = mpsc::channel();
-        if tx.send(Job { line, reply: rtx }).is_err() {
+        if tx.send(Job { line, reply: rtx.clone() }).is_err() {
             break;
         }
-        match rrx.recv() {
-            Ok(resp) => {
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
-            }
-            Err(_) => break,
-        }
-        if *shutdown.lock().unwrap() {
+        if shutdown.load(Ordering::SeqCst) {
             break;
         }
     }
+    drop(rtx);
+    let _ = writer.join();
     Ok(())
 }
 
@@ -199,19 +362,62 @@ mod tests {
         }
     }
 
+    fn parse(line: &str) -> Json {
+        Json::parse(line).unwrap()
+    }
+
     #[test]
     fn synthesize_parses_kinds() {
         let m = meta();
         let g = StoryGrammar::uniform();
         let mut b = RequestBuilder::new(&m, &g, 5);
         let (id, req) =
-            synthesize(r#"{"id": 7, "kind": "qa"}"#, &mut b).unwrap();
+            synthesize(&parse(r#"{"id": 7, "kind": "qa"}"#), &m, &g, &mut b).unwrap();
         assert_eq!(id, 7);
         assert_eq!(req.kind, WorkloadKind::Understanding);
-        let (_, req) =
-            synthesize(r#"{"id": 1, "kind": "story", "max_new": 12}"#, &mut b).unwrap();
+        let (_, req) = synthesize(
+            &parse(r#"{"id": 1, "kind": "story", "max_new": 12}"#),
+            &m,
+            &g,
+            &mut b,
+        )
+        .unwrap();
         assert_eq!(req.max_new_tokens, 12);
-        assert!(synthesize(r#"{"kind": "nope"}"#, &mut b).is_err());
-        assert!(synthesize("not json", &mut b).is_err());
+        assert!(synthesize(&parse(r#"{"kind": "nope"}"#), &m, &g, &mut b).is_err());
+        // malformed lines never reach synthesize: ingest rejects them
+        assert!(Json::parse("not json").is_err());
+    }
+
+    #[test]
+    fn seed_makes_requests_reproducible() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        // two different connection-shared builders, same seeded line
+        let mut b1 = RequestBuilder::new(&m, &g, 5);
+        let mut b2 = RequestBuilder::new(&m, &g, 999);
+        let line = parse(r#"{"id": 1, "kind": "story", "seed": 42}"#);
+        let (_, r1) = synthesize(&line, &m, &g, &mut b1).unwrap();
+        let (_, r2) = synthesize(&line, &m, &g, &mut b2).unwrap();
+        assert_eq!(r1.ids, r2.ids);
+        assert_eq!(r1.patches, r2.patches);
+        // unseeded requests keep drawing from the shared stream
+        let unseeded = parse(r#"{"id": 2, "kind": "story"}"#);
+        let (_, u1) = synthesize(&unseeded, &m, &g, &mut b1).unwrap();
+        let (_, u2) = synthesize(&unseeded, &m, &g, &mut b2).unwrap();
+        assert_ne!(u1.ids, u2.ids);
+    }
+
+    #[test]
+    fn error_reply_escapes_and_echoes_id() {
+        let r = error_reply(Some(9), "bad \"quoted\"\nthing");
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(9));
+        assert_eq!(
+            j.get("error").and_then(|v| v.as_str()),
+            Some("bad \"quoted\"\nthing")
+        );
+        // id omitted when unknown
+        let j = Json::parse(&error_reply(None, "x")).unwrap();
+        assert!(j.get("id").is_none());
     }
 }

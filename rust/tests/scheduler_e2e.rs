@@ -1,0 +1,144 @@
+//! Scheduler integration: N concurrent clients against the
+//! continuous-batching server — responses match their request ids, lanes
+//! are actually shared, and the KV-budget admission invariant holds.
+//! Skipped when artifacts are absent.
+
+use hae_serve::cache::PolicyKind;
+use hae_serve::harness::{artifact_dir, spawn_server, wait_listening, widest_batch};
+use hae_serve::model::Manifest;
+use hae_serve::runtime::Runtime;
+use hae_serve::scheduler::SchedPolicy;
+use hae_serve::server::client_request;
+use hae_serve::util::json::Json;
+
+fn artifacts_present() -> bool {
+    if Runtime::load(&artifact_dir()).is_err() {
+        eprintln!("skipping: artifacts not built");
+        return false;
+    }
+    true
+}
+
+fn get_num(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(-1.0)
+}
+
+#[test]
+fn concurrent_clients_share_lanes_under_budget() {
+    if !artifacts_present() {
+        return;
+    }
+    const ADDR: &str = "127.0.0.1:8495";
+    let manifest = Manifest::load(&artifact_dir()).unwrap();
+    let batch = widest_batch();
+    // explicit budget = the physical ceiling: tight enough that the
+    // invariant check is real, loose enough that all lanes can fill
+    let budget = batch
+        * (manifest.shapes.cache_capacity - 1)
+        * manifest.model.kv_bytes_per_token();
+    let server = spawn_server(
+        ADDR.into(),
+        PolicyKind::hae_default(),
+        batch,
+        Some(budget),
+        SchedPolicy::Priority,
+    );
+    assert!(wait_listening(ADDR), "server came up");
+
+    // 6 concurrent clients × 2 requests, every id unique
+    let n_clients: i64 = 6;
+    let per_client: i64 = 2;
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let id = c * 100 + i;
+                let kind = if (c + i) % 2 == 0 { "story" } else { "mixed" };
+                let payload = format!(
+                    r#"{{"id": {}, "kind": "{}", "max_new": 24}}"#,
+                    id, kind
+                );
+                let resp = client_request(ADDR, &payload).unwrap();
+                let j = Json::parse(&resp).unwrap();
+                // (a) the response carries this request's id
+                assert_eq!(
+                    j.get("id").and_then(|v| v.as_i64()),
+                    Some(id),
+                    "response/request id mismatch: {}",
+                    resp
+                );
+                assert!(j.get("error").is_none(), "unexpected error: {}", resp);
+                assert!(
+                    j.get("tokens").and_then(|v| v.as_arr()).map_or(0, |a| a.len()) > 0
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let stats = Json::parse(&client_request(ADDR, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let _ = client_request(ADDR, "shutdown");
+    let _ = server.join();
+
+    assert_eq!(
+        get_num(&stats, "completed"),
+        (n_clients * per_client) as f64,
+        "stats: {}",
+        stats.to_string_compact()
+    );
+    // (b) at least one decode step ran more than one lane
+    if batch > 1 {
+        assert!(
+            get_num(&stats, "max_lanes_step") >= 2.0,
+            "continuous batching never shared a step: {}",
+            stats.to_string_compact()
+        );
+    }
+    // (c) the admission invariant: aggregate live KV never passed the
+    // budget at any decode step
+    let peak = get_num(&stats, "peak_live_kv_bytes");
+    assert!(peak > 0.0, "no KV accounted: {}", stats.to_string_compact());
+    assert!(
+        peak <= budget as f64,
+        "budget invariant violated: peak {} > budget {}",
+        peak,
+        budget
+    );
+}
+
+#[test]
+fn tiny_budget_rejects_gracefully() {
+    if !artifacts_present() {
+        return;
+    }
+    const ADDR: &str = "127.0.0.1:8496";
+    // 1 KiB cannot hold a single token's KV → every request is rejected
+    let server = spawn_server(
+        ADDR.into(),
+        PolicyKind::hae_default(),
+        1,
+        Some(1024),
+        SchedPolicy::Fifo,
+    );
+    assert!(wait_listening(ADDR), "server came up");
+
+    for id in 0..4 {
+        let payload = format!(r#"{{"id": {}, "kind": "qa"}}"#, id);
+        let resp = client_request(ADDR, &payload).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        let err = j.get("error").and_then(|v| v.as_str()).unwrap_or("");
+        assert!(err.contains("kv budget"), "expected budget rejection: {}", resp);
+        // rejections still echo the request id
+        assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(id));
+    }
+
+    // the server stays alive and accounts the rejections
+    let stats = Json::parse(&client_request(ADDR, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    assert_eq!(get_num(&stats, "rejected_kv_budget") as usize, 4);
+    assert_eq!(get_num(&stats, "completed") as usize, 0);
+
+    let _ = client_request(ADDR, "shutdown");
+    let _ = server.join();
+}

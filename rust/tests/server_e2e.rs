@@ -2,15 +2,11 @@
 //! Skipped when artifacts are absent.
 
 use hae_serve::cache::PolicyKind;
-use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::harness::{artifact_dir, spawn_server, wait_listening};
 use hae_serve::runtime::Runtime;
-use hae_serve::server::{client_request, serve, ServerConfig};
+use hae_serve::scheduler::SchedPolicy;
+use hae_serve::server::client_request;
 use hae_serve::util::json::Json;
-use hae_serve::workload::StoryGrammar;
-
-fn artifact_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
 
 #[test]
 fn server_round_trip_and_shutdown() {
@@ -19,29 +15,14 @@ fn server_round_trip_and_shutdown() {
         return;
     }
     const ADDR: &str = "127.0.0.1:8493";
-    let handle = std::thread::spawn(|| {
-        let rt = Runtime::load(&artifact_dir()).unwrap();
-        let engine = Engine::new(
-            rt,
-            EngineConfig {
-                policy: PolicyKind::hae_default(),
-                ..EngineConfig::default()
-            },
-        )
-        .unwrap();
-        let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
-        serve(engine, ServerConfig { addr: ADDR.into(), queue_depth: 8 }, grammar).unwrap();
-    });
-    // wait for listener
-    let mut up = false;
-    for _ in 0..200 {
-        if std::net::TcpStream::connect(ADDR).is_ok() {
-            up = true;
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(25));
-    }
-    assert!(up, "server came up");
+    let handle = spawn_server(
+        ADDR.into(),
+        PolicyKind::hae_default(),
+        1,
+        None,
+        SchedPolicy::Fifo,
+    );
+    assert!(wait_listening(ADDR), "server came up");
 
     // valid request
     let resp = client_request(ADDR, r#"{"id": 3, "kind": "qa"}"#).unwrap();
@@ -55,9 +36,12 @@ fn server_round_trip_and_shutdown() {
     let j = Json::parse(&resp).unwrap();
     assert!(j.get("tokens").unwrap().as_arr().unwrap().len() <= 5);
 
-    // malformed requests produce error objects, not crashes
+    // malformed requests produce error objects (echoing the id when the
+    // line parsed), not crashes
     let resp = client_request(ADDR, r#"{"id": 5, "kind": "nope"}"#).unwrap();
-    assert!(Json::parse(&resp).unwrap().get("error").is_some());
+    let j = Json::parse(&resp).unwrap();
+    assert!(j.get("error").is_some());
+    assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(5));
     let resp = client_request(ADDR, "garbage").unwrap();
     assert!(Json::parse(&resp).unwrap().get("error").is_some());
 
