@@ -1,0 +1,76 @@
+//! §Perf — paged KV arena microbenchmarks (no PJRT required).
+//!
+//! Measures the three host-side primitives the serving hot path leans
+//! on: page alloc/free churn (admission + retirement), the full lane
+//! gather (cold sync after a lane/capacity change), and the incremental
+//! dirty-page gather (steady-state decode). The headline claim: at
+//! steady state the per-step copy cost is O(dirty pages) ≈ 1 page,
+//! independent of the live cache length.
+
+use std::time::Instant;
+
+use hae_serve::cache::PagePool;
+use hae_serve::harness::{bench_n, f2, measure_lane_sync, Table};
+
+/// Alloc-all / free-all churn over a fixed arena.
+fn alloc_free(table: &mut Table, iters: usize) {
+    let n_pages = 1024;
+    let mut pool = PagePool::new(2, 64, n_pages, 16);
+    let mut held = Vec::with_capacity(n_pages);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        while let Some(p) = pool.alloc() {
+            held.push(p);
+        }
+        for p in held.drain(..) {
+            pool.release(p);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let s = pool.stats();
+    let ops = s.allocs + s.frees;
+    table.row(vec![
+        "alloc/free churn".into(),
+        format!("{}", ops),
+        f2(ops as f64 / dt / 1e6),
+        "-".into(),
+        format!("{:.1}%", 100.0 * s.reused as f64 / s.allocs.max(1) as f64),
+    ]);
+}
+
+/// Lane gather: full resync vs steady-state incremental sync (the shared
+/// harness measurement; perf_serve_batch sweeps it over live lengths).
+fn gather(table: &mut Table, iters: usize) {
+    let s = measure_lane_sync(1024, iters);
+    let full_bytes = s.pages as f64 * s.page_bytes as f64;
+    table.row(vec![
+        "gather full".into(),
+        format!("{}", iters),
+        "-".into(),
+        format!("{}", s.pages),
+        f2(full_bytes / (s.full_us_per_step * 1e-6) / 1e9),
+    ]);
+    table.row(vec![
+        "gather incremental".into(),
+        format!("{}", iters),
+        "-".into(),
+        f2(s.incr_pages_per_step),
+        f2(s.incr_pages_per_step * s.page_bytes as f64 / (s.incr_us_per_step * 1e-6) / 1e9),
+    ]);
+    println!(
+        "\n(live cache {} slots over {} pages: the incremental gather moves ~1\n\
+         page per steady-state step; the full gather moves all of them)",
+        s.live_slots, s.pages
+    );
+}
+
+fn main() {
+    let iters = bench_n(200);
+    let mut table = Table::new(
+        &format!("page-pool primitives, {} iterations", iters),
+        &["primitive", "ops", "Mops/s", "pages/step", "GB/s | reuse"],
+    );
+    alloc_free(&mut table, iters);
+    gather(&mut table, iters);
+    table.print();
+}

@@ -9,6 +9,12 @@
 //! batch=1 rows reproduce the seed's serial `engine.generate()` behaviour
 //! (one lane, one request at a time); the batch>1 rows show eviction
 //! converting into admission headroom and throughput.
+//!
+//! Also runs a runtime-free **lane-sync comparison** first: the per-step
+//! host copy of one decode lane under (a) the old regime — the whole
+//! live region re-copied every step — vs (b) the paged arena's
+//! dirty-page incremental gather. Steady-state decode copies O(dirty
+//! pages), not O(live slots).
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -60,9 +66,42 @@ fn drive(addr: &str, clients: usize, per_client: usize) -> (f64, Vec<f64>, usize
     (t0.elapsed().as_secs_f64(), lats, errors)
 }
 
+/// Paged-vs-copy lane sync: per-step host copy cost at several live
+/// cache lengths, full resync (the pre-arena behaviour: O(live slots)
+/// every step) vs incremental dirty-page gather (O(dirty pages)).
+/// Runtime-free — runs even without artifacts.
+fn lane_sync_comparison(steps: usize) {
+    let mut table = Table::new(
+        &format!("lane sync per decode step, {} steps", steps),
+        &["live slots", "pages", "full µs/step", "incr µs/step", "incr pages/step"],
+    );
+    for &len in &[128usize, 512, 1024] {
+        let s = measure_lane_sync(len, steps);
+        table.row(vec![
+            format!("{}", s.live_slots),
+            format!("{}", s.pages),
+            format!("{:.1}", s.full_us_per_step),
+            format!("{:.1}", s.incr_us_per_step),
+            f2(s.incr_pages_per_step),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n(full µs/step grows with the live length; incremental stays flat at\n\
+         ~1 page/step — the arena makes the host copy cost page-incremental)"
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     let per_client = bench_n(6);
-    load_runtime()?; // fail fast (with the artifact hint) before spawning
+    lane_sync_comparison(bench_n(6) * 50);
+    if load_runtime().is_err() {
+        eprintln!(
+            "artifacts not built (run `make artifacts`) — skipping the\n\
+             server throughput section"
+        );
+        return Ok(());
+    }
     let widest = widest_batch();
     let batches: Vec<usize> = if widest > 1 { vec![1, widest] } else { vec![1] };
 

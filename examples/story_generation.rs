@@ -30,9 +30,7 @@ fn main() -> Result<()> {
                 temperature: 0.7,
                 top_k: 8,
                 seed: 9,
-                capture_logits: false,
-                capture_scores: false,
-                batch: 1,
+                ..EngineConfig::default()
             },
         )?;
         engine.rt.warmup(&[1])?;

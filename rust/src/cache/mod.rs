@@ -5,10 +5,14 @@
 pub mod baselines;
 pub mod h2o;
 pub mod hae;
+pub mod paged;
 pub mod policy;
 pub mod slab;
 
 pub use hae::{Hae, HaeConfig};
+pub use paged::{
+    pages_for_slots, PagePool, PoolStats, SharedPagePool, DEFAULT_PAGE_SLOTS,
+};
 pub use policy::{
     DecodeCtx, EvictionPolicy, PrefillCtx, PrefillDecision, StepDecision,
 };
@@ -90,39 +94,107 @@ impl PolicyKind {
                 .ok_or_else(|| format!("bad param '{}' in '{}'", pair, spec))?;
             kv.insert(k.to_string(), v.to_string());
         }
-        let f =
-            |k: &str, d: f32| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
-        let u = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
-        let opt_u = |k: &str| kv.get(k).and_then(|v| v.parse().ok());
+        // a typo'd key (e.g. `hae:rcsize=64`) must fail loudly, not parse
+        // as the defaults
+        let accepted: &[&str] = match name {
+            "full" => &[],
+            "hae" => &["r", "rrel", "alpha", "rc", "stage"],
+            "h2o" => &["budget", "recent"],
+            "snapkv" => &["budget", "window"],
+            "adakv" => &["budget", "recent", "peak"],
+            "mustdrop" => &["r", "sim", "budget"],
+            "fastv" | "sparsevlm" | "tome" => &["ratio"],
+            "window" => &["sinks", "window"],
+            "random" => &["budget", "seed"],
+            other => return Err(format!("unknown policy '{}'", other)),
+        };
+        if let Some(bad) = kv.keys().find(|k| !accepted.contains(&k.as_str())) {
+            return Err(format!(
+                "unknown parameter '{}' for policy '{}' (accepted: {})",
+                bad,
+                name,
+                if accepted.is_empty() { "none".to_string() } else { accepted.join(", ") }
+            ));
+        }
+        // values must parse too — `hae:rc=64x` silently running with the
+        // default rc is the same misconfiguration class as a typo'd key
+        fn val<T: std::str::FromStr>(
+            kv: &std::collections::BTreeMap<String, String>,
+            k: &str,
+            d: T,
+        ) -> Result<T, String> {
+            match kv.get(k) {
+                None => Ok(d),
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| format!("bad value '{}' for parameter '{}'", v, k)),
+            }
+        }
+        fn opt<T: std::str::FromStr>(
+            kv: &std::collections::BTreeMap<String, String>,
+            k: &str,
+        ) -> Result<Option<T>, String> {
+            match kv.get(k) {
+                None => Ok(None),
+                Some(v) => v
+                    .parse()
+                    .map(Some)
+                    .map_err(|_| format!("bad value '{}' for parameter '{}'", v, k)),
+            }
+        }
+        let f = |k: &str, d: f32| val::<f32>(&kv, k, d);
+        let u = |k: &str, d: usize| val::<usize>(&kv, k, d);
+        let opt_u = |k: &str| opt::<usize>(&kv, k);
         Ok(match name {
             "full" => PolicyKind::Full,
-            "hae" => PolicyKind::Hae(HaeParams {
-                r: kv.get("r").and_then(|v| v.parse().ok()),
-                r_rel: f("rrel", 0.6),
-                alpha: f("alpha", 0.05),
-                rc_size: u("rc", 24),
-                prefill_stage: kv.get("stage").map_or(true, |s| s != "decode"),
-                decode_stage: kv.get("stage").map_or(true, |s| s != "prefill"),
-            }),
-            "h2o" => PolicyKind::H2o { budget: opt_u("budget"), recent: u("recent", 16) },
-            "snapkv" => PolicyKind::SnapKv { budget: u("budget", 192), window: u("window", 16) },
+            "hae" => {
+                let (prefill_stage, decode_stage) = match kv.get("stage").map(|s| s.as_str())
+                {
+                    None | Some("all") => (true, true),
+                    Some("prefill") => (true, false),
+                    Some("decode") => (false, true),
+                    Some(other) => {
+                        return Err(format!(
+                            "bad value '{}' for parameter 'stage' (prefill|decode|all)",
+                            other
+                        ))
+                    }
+                };
+                PolicyKind::Hae(HaeParams {
+                    r: opt::<f32>(&kv, "r")?,
+                    r_rel: f("rrel", 0.6)?,
+                    alpha: f("alpha", 0.05)?,
+                    rc_size: u("rc", 24)?,
+                    prefill_stage,
+                    decode_stage,
+                })
+            }
+            "h2o" => PolicyKind::H2o { budget: opt_u("budget")?, recent: u("recent", 16)? },
+            "snapkv" => {
+                PolicyKind::SnapKv { budget: u("budget", 192)?, window: u("window", 16)? }
+            }
             "adakv" => PolicyKind::AdaKv {
-                budget: opt_u("budget"),
-                recent: u("recent", 16),
-                peak_weight: f("peak", 0.5),
+                budget: opt_u("budget")?,
+                recent: u("recent", 16)?,
+                peak_weight: f("peak", 0.5)?,
             },
             "mustdrop" => PolicyKind::MustDrop {
-                r: f("r", -1.0), // <0 → relative uniform-share threshold
-                merge_sim: f("sim", 0.95),
-                budget: opt_u("budget"),
+                r: f("r", -1.0)?, // <0 → relative uniform-share threshold
+                merge_sim: f("sim", 0.95)?,
+                budget: opt_u("budget")?,
             },
-            "fastv" => PolicyKind::FastV { retain_ratio: f("ratio", PAPER_RETAIN_RATIO) },
+            "fastv" => PolicyKind::FastV { retain_ratio: f("ratio", PAPER_RETAIN_RATIO)? },
             "sparsevlm" => {
-                PolicyKind::SparseVlm { retain_ratio: f("ratio", PAPER_RETAIN_RATIO) }
+                PolicyKind::SparseVlm { retain_ratio: f("ratio", PAPER_RETAIN_RATIO)? }
             }
-            "tome" => PolicyKind::ToMe { retain_ratio: f("ratio", PAPER_RETAIN_RATIO) },
-            "window" => PolicyKind::Window { sinks: u("sinks", 4), window: u("window", 64) },
-            "random" => PolicyKind::Random { budget: opt_u("budget"), seed: u("seed", 17) as u64 },
+            "tome" => PolicyKind::ToMe { retain_ratio: f("ratio", PAPER_RETAIN_RATIO)? },
+            "window" => {
+                PolicyKind::Window { sinks: u("sinks", 4)?, window: u("window", 64)? }
+            }
+            "random" => PolicyKind::Random {
+                budget: opt_u("budget")?,
+                seed: u("seed", 17)? as u64,
+            },
             other => return Err(format!("unknown policy '{}'", other)),
         })
     }
@@ -218,6 +290,32 @@ mod tests {
         }
         assert!(PolicyKind::parse("bogus").is_err());
         assert!(PolicyKind::parse("hae:r0.002").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_parameter_keys() {
+        // a typo'd key must not silently parse as the defaults
+        let err = PolicyKind::parse("hae:rcsize=64").unwrap_err();
+        assert!(err.contains("rcsize"), "names the bad key: {}", err);
+        assert!(err.contains("rc"), "lists accepted keys: {}", err);
+        let err = PolicyKind::parse("h2o:window=4").unwrap_err();
+        assert!(err.contains("window") && err.contains("recent"), "{}", err);
+        assert!(PolicyKind::parse("full:budget=4").is_err());
+        // known keys still parse
+        assert!(PolicyKind::parse("hae:rc=64,stage=decode").is_ok());
+        assert!(PolicyKind::parse("random:seed=3,budget=8").is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_unparseable_values() {
+        // an accepted key with a bad value must not fall back to defaults
+        let err = PolicyKind::parse("hae:rc=64x").unwrap_err();
+        assert!(err.contains("64x"), "names the bad value: {}", err);
+        assert!(PolicyKind::parse("fastv:ratio=abc").is_err());
+        assert!(PolicyKind::parse("h2o:budget=").is_err());
+        let err = PolicyKind::parse("hae:stage=bogus").unwrap_err();
+        assert!(err.contains("prefill|decode|all"), "{}", err);
+        assert!(PolicyKind::parse("hae:stage=all").is_ok());
     }
 
     #[test]

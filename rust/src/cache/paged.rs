@@ -1,0 +1,350 @@
+//! Shared paged KV arena.
+//!
+//! A `PagePool` owns one big K and one big V buffer, carved into
+//! fixed-size **pages** of `page_slots` token slots each. Per-request
+//! `KvSlab` views (cache/slab.rs) map logical slot index → (page, offset)
+//! through an ordered page table, so the pool is shared by every live
+//! request of an engine: a slot evicted anywhere becomes a free page —
+//! and therefore admission headroom — for everyone, without a single
+//! byte of cross-request copying.
+//!
+//! Layout: page-major, layer-major within a page —
+//! `[(page * n_layers + layer) * page_slots + offset] * row` floats,
+//! where `row = n_heads * d_head`. One (page, layer) run is contiguous,
+//! so a lane gather copies whole `page_slots * row` spans per layer.
+//!
+//! Allocation is a LIFO free list over recycled pages plus a fresh-page
+//! high-water mark; pages carry refcounts so future copy-on-write prefix
+//! sharing can pin a page under several tables. The pool never grows:
+//! `alloc` returns `None` at capacity and the scheduler's page-granular
+//! admission (scheduler/admission.rs) guarantees that is never hit in
+//! serving.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::model::ModelMeta;
+
+/// Default token slots per page. Small enough that a retired request's
+/// tail fragmentation (< one page per request) is negligible, large
+/// enough that lane gathers move long contiguous spans; see ROADMAP
+/// "Paged KV arena" for the trade-off.
+pub const DEFAULT_PAGE_SLOTS: usize = 16;
+
+/// Snapshot of pool occupancy (scheduler metrics + benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// total pages in the arena
+    pub pages: usize,
+    /// token slots per page
+    pub page_slots: usize,
+    /// pages currently referenced by at least one page table
+    pub in_use: usize,
+    /// pages available for allocation
+    pub free: usize,
+    /// most pages ever in use at once
+    pub peak_in_use: usize,
+    /// lifetime page allocations
+    pub allocs: u64,
+    /// lifetime page frees (refcount reached zero)
+    pub frees: u64,
+    /// allocations served by a recycled page rather than a fresh one —
+    /// the page-reuse counter: high reuse under churn is the arena
+    /// doing its job
+    pub reused: u64,
+}
+
+#[derive(Debug)]
+pub struct PagePool {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    n_layers: usize,
+    /// floats per slot per layer (n_heads * d_head)
+    row: usize,
+    page_slots: usize,
+    n_pages: usize,
+    /// recycled pages ready for reuse (LIFO keeps hot pages hot)
+    free: Vec<u32>,
+    /// pages never handed out yet are `next_fresh..n_pages`
+    next_fresh: u32,
+    refcount: Vec<u32>,
+    allocs: u64,
+    frees: u64,
+    reused: u64,
+    peak_in_use: usize,
+}
+
+/// The pool handle page tables hold. Single engine thread (the PJRT
+/// client is single-threaded by design), so `Rc<RefCell>` — no locking
+/// on the decode hot path.
+pub type SharedPagePool = Rc<RefCell<PagePool>>;
+
+impl PagePool {
+    pub fn new(n_layers: usize, row: usize, n_pages: usize, page_slots: usize) -> Self {
+        assert!(page_slots > 0, "page_slots must be positive");
+        assert!(n_pages > 0, "pool needs at least one page");
+        let floats = n_pages * n_layers * page_slots * row;
+        PagePool {
+            k: vec![0.0; floats],
+            v: vec![0.0; floats],
+            n_layers,
+            row,
+            page_slots,
+            n_pages,
+            free: Vec::new(),
+            next_fresh: 0,
+            refcount: vec![0; n_pages],
+            allocs: 0,
+            frees: 0,
+            reused: 0,
+            peak_in_use: 0,
+        }
+    }
+
+    /// Pool sized for a model: `n_pages` pages of `page_slots` slots.
+    pub fn for_model(m: &ModelMeta, n_pages: usize, page_slots: usize) -> Self {
+        PagePool::new(m.n_layers, m.n_heads * m.d_head, n_pages, page_slots)
+    }
+
+    pub fn new_shared(
+        n_layers: usize,
+        row: usize,
+        n_pages: usize,
+        page_slots: usize,
+    ) -> SharedPagePool {
+        Rc::new(RefCell::new(PagePool::new(n_layers, row, n_pages, page_slots)))
+    }
+
+    pub fn page_slots(&self) -> usize {
+        self.page_slots
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn row(&self) -> usize {
+        self.row
+    }
+
+    pub fn in_use_pages(&self) -> usize {
+        self.next_fresh as usize - self.free.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.n_pages - self.in_use_pages()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            pages: self.n_pages,
+            page_slots: self.page_slots,
+            in_use: self.in_use_pages(),
+            free: self.free_pages(),
+            peak_in_use: self.peak_in_use,
+            allocs: self.allocs,
+            frees: self.frees,
+            reused: self.reused,
+        }
+    }
+
+    /// Allocate one page (refcount 1). `None` when the arena is full —
+    /// callers that can hit this in serving must be guarded by the
+    /// page-granular admission controller.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let page = if let Some(p) = self.free.pop() {
+            self.reused += 1;
+            p
+        } else if (self.next_fresh as usize) < self.n_pages {
+            let p = self.next_fresh;
+            self.next_fresh += 1;
+            p
+        } else {
+            return None;
+        };
+        debug_assert_eq!(self.refcount[page as usize], 0, "allocated page must be dead");
+        self.refcount[page as usize] = 1;
+        self.allocs += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use_pages());
+        Some(page)
+    }
+
+    /// Pin a page under one more table (copy-on-write prefix sharing).
+    pub fn retain_page(&mut self, page: u32) {
+        debug_assert!(self.refcount[page as usize] > 0, "retain of a dead page");
+        self.refcount[page as usize] += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list at zero.
+    pub fn release(&mut self, page: u32) {
+        let rc = &mut self.refcount[page as usize];
+        debug_assert!(*rc > 0, "release of a dead page");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+            self.frees += 1;
+        }
+    }
+
+    #[inline]
+    fn run_offset(&self, page: u32, layer: usize) -> usize {
+        (page as usize * self.n_layers + layer) * self.page_slots * self.row
+    }
+
+    #[inline]
+    fn slot_offset(&self, page: u32, layer: usize, offset: usize) -> usize {
+        self.run_offset(page, layer) + offset * self.row
+    }
+
+    /// Contiguous K span of one (page, layer): `page_slots * row` floats.
+    pub fn k_run(&self, page: u32, layer: usize) -> &[f32] {
+        let o = self.run_offset(page, layer);
+        &self.k[o..o + self.page_slots * self.row]
+    }
+
+    pub fn v_run(&self, page: u32, layer: usize) -> &[f32] {
+        let o = self.run_offset(page, layer);
+        &self.v[o..o + self.page_slots * self.row]
+    }
+
+    /// Write one token's KV. `k_row`/`v_row` are `[L, H, Dh]`
+    /// (layer-major, one lane of a decode output).
+    pub fn write_slot(&mut self, page: u32, offset: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(offset < self.page_slots);
+        debug_assert_eq!(k_row.len(), self.n_layers * self.row);
+        for l in 0..self.n_layers {
+            let dst = self.slot_offset(page, l, offset);
+            let src = l * self.row;
+            self.k[dst..dst + self.row].copy_from_slice(&k_row[src..src + self.row]);
+            self.v[dst..dst + self.row].copy_from_slice(&v_row[src..src + self.row]);
+        }
+    }
+
+    /// Write one token's KV for a single layer from a bucket-major
+    /// prefill output row (prefill injection gather).
+    pub fn write_layer_row(
+        &mut self,
+        page: u32,
+        offset: usize,
+        layer: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let dst = self.slot_offset(page, layer, offset);
+        self.k[dst..dst + self.row].copy_from_slice(k_row);
+        self.v[dst..dst + self.row].copy_from_slice(v_row);
+    }
+
+    /// Move one token's KV (all layers) between arena slots. Used by
+    /// in-table compaction; source and destination must differ.
+    pub fn copy_slot(&mut self, src: (u32, usize), dst: (u32, usize)) {
+        debug_assert!(src != dst, "copy_slot onto itself");
+        for l in 0..self.n_layers {
+            let s = self.slot_offset(src.0, l, src.1);
+            let d = self.slot_offset(dst.0, l, dst.1);
+            // row-sized chunks at distinct (page, offset) never overlap
+            self.k.copy_within(s..s + self.row, d);
+            self.v.copy_within(s..s + self.row, d);
+        }
+    }
+
+    /// Copy of one slot's K (or V) row for a layer (test/diagnostic use).
+    pub fn read_row(&self, page: u32, offset: usize, layer: usize, want_v: bool) -> Vec<f32> {
+        let o = self.slot_offset(page, layer, offset);
+        let src = if want_v { &self.v } else { &self.k };
+        src[o..o + self.row].to_vec()
+    }
+}
+
+/// Pages needed to hold `slots` token slots.
+pub fn pages_for_slots(slots: usize, page_slots: usize) -> usize {
+    slots.div_ceil(page_slots.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PagePool {
+        PagePool::new(2, 4, 4, 8)
+    }
+
+    #[test]
+    fn alloc_free_reuse_accounting() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.in_use_pages(), 2);
+        assert_eq!(p.free_pages(), 2);
+        p.release(a);
+        assert_eq!(p.in_use_pages(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "LIFO free list recycles the last freed page");
+        let s = p.stats();
+        assert_eq!(s.allocs, 3);
+        assert_eq!(s.frees, 1);
+        assert_eq!(s.reused, 1);
+        assert_eq!(s.peak_in_use, 2);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = pool();
+        let pages: Vec<u32> = (0..4).map(|_| p.alloc().unwrap()).collect();
+        assert!(p.alloc().is_none());
+        p.release(pages[2]);
+        assert!(p.alloc().is_some());
+    }
+
+    #[test]
+    fn refcount_pins_pages() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.retain_page(a);
+        p.release(a);
+        assert_eq!(p.in_use_pages(), 1, "still pinned by the second ref");
+        p.release(a);
+        assert_eq!(p.in_use_pages(), 0);
+        assert_eq!(p.stats().frees, 1);
+    }
+
+    #[test]
+    fn write_and_read_back_slots() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        // [L=2, row=4] layer-major token row
+        let k: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let v: Vec<f32> = (0..8).map(|x| -(x as f32)).collect();
+        p.write_slot(a, 3, &k, &v);
+        assert_eq!(p.read_row(a, 3, 0, false), vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(p.read_row(a, 3, 1, false), vec![4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(p.read_row(a, 3, 1, true), vec![-4.0, -5.0, -6.0, -7.0]);
+        // the (page, layer) run places offset 3 at floats [12..16)
+        assert_eq!(p.k_run(a, 0)[12..16], [0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn copy_slot_moves_all_layers() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let k: Vec<f32> = (0..8).map(|x| x as f32 + 1.0).collect();
+        p.write_slot(a, 7, &k, &k);
+        p.copy_slot((a, 7), (b, 0));
+        assert_eq!(p.read_row(b, 0, 0, false), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.read_row(b, 0, 1, true), vec![5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn pages_for_slots_rounds_up() {
+        assert_eq!(pages_for_slots(0, 8), 0);
+        assert_eq!(pages_for_slots(1, 8), 1);
+        assert_eq!(pages_for_slots(8, 8), 1);
+        assert_eq!(pages_for_slots(9, 8), 2);
+    }
+}

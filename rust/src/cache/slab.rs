@@ -1,15 +1,36 @@
-//! Host-owned per-request KV slab.
+//! Per-request KV view over the shared paged arena.
 //!
-//! Layout is layer-major `[L, CAP, H, Dh]` (matching the decode executable's
-//! cache input) with a fixed physical capacity; the first `len` slots of
-//! every layer are live. Each live slot carries metadata: original sequence
-//! position, modality, cumulative attention score (the β(C_j) term of paper
-//! Eq. 5) and a recycle-bin mark (DDES). Eviction = compaction: retained
-//! slots are copied down in order, so slot index i always addresses the
-//! same token across K, V and metadata — the slab-integrity property
-//! tested in tests/cache_props.rs.
+//! `KvSlab` keeps its original contract — slot index i always addresses
+//! the same token across K, V and metadata, the first `len` logical slots
+//! are live, eviction compacts retained slots down in order (the
+//! slab-integrity property tested in tests/cache_props.rs) — but the
+//! storage is no longer an owned contiguous buffer. A page table maps
+//! logical slot → (page, offset) into a `cache::paged::PagePool`, so:
+//!
+//! * eviction returns whole emptied tail pages to the shared pool
+//!   (immediate admission headroom for other requests) instead of
+//!   shrinking a private allocation;
+//! * the per-step batch assembly (`copy_into_lane`) is an incremental
+//!   page-granular gather: pages untouched since the last sync of the
+//!   same (lane, capacity) destination are skipped — steady-state decode
+//!   copies O(dirty pages), not O(live slots).
+//!
+//! Each live slot carries metadata: original sequence position, modality,
+//! cumulative attention score (the β(C_j) term of paper Eq. 5) and a
+//! recycle-bin mark (DDES). `KvSlab::new` keeps the old standalone
+//! behaviour by backing the view with a private single-request pool;
+//! `KvSlab::in_pool` attaches it to an engine's shared arena.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::model::ModelMeta;
+
+use super::paged::{pages_for_slots, PagePool, SharedPagePool, DEFAULT_PAGE_SLOTS};
+
+/// Process-wide slab identity: the engine tracks which slab last wrote
+/// each scratch lane region, and a fresh id per slab (never reused)
+/// makes that check airtight across retire/re-admit cycles.
+static NEXT_SLAB_ID: AtomicU64 = AtomicU64::new(1);
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Modality {
@@ -36,29 +57,86 @@ pub struct SlotMeta {
     pub age: u32,
 }
 
-#[derive(Debug, Clone)]
+/// Destination of the most recent lane sync: the incremental gather is
+/// valid only while the slab keeps writing the same (lane, capacity)
+/// region of the engine's persistent scratch buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct LaneSync {
+    lane: usize,
+    cap_c: usize,
+}
+
 pub struct KvSlab {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// unique per slab (engine scratch-ownership checks)
+    id: u64,
+    pool: SharedPagePool,
+    /// ordered page table: logical slot s lives at
+    /// (pages[s / page_slots], s % page_slots)
+    pages: Vec<u32>,
+    /// per-page KV-content-changed flags since the last lane sync
+    dirty: Vec<bool>,
     meta: Vec<SlotMeta>,
-    /// physical slots per layer
+    /// logical capacity in slots
     cap: usize,
     /// floats per slot per layer (H * Dh)
     row: usize,
     n_layers: usize,
+    page_slots: usize,
+    last_sync: Option<LaneSync>,
+    /// pages returned to the pool at retire (`release_pages`); metadata
+    /// stays readable but KV is gone
+    released: bool,
 }
 
 impl KvSlab {
+    /// Standalone slab backed by a private pool sized to `cap` slots —
+    /// the seed behaviour, used by policies' unit tests and single-shot
+    /// tools. Serving paths share an arena via `in_pool`.
     pub fn new(m: &ModelMeta, cap: usize) -> Self {
-        let row = m.n_heads * m.d_head;
+        let page_slots = DEFAULT_PAGE_SLOTS.min(cap.max(1));
+        let pool = PagePool::new_shared(
+            m.n_layers,
+            m.n_heads * m.d_head,
+            pages_for_slots(cap.max(1), page_slots),
+            page_slots,
+        );
+        KvSlab::in_pool(&pool, cap)
+    }
+
+    /// View over a shared arena, holding at most `cap` live slots. Pages
+    /// are allocated lazily on append and returned on eviction/drop.
+    pub fn in_pool(pool: &SharedPagePool, cap: usize) -> Self {
+        let (row, n_layers, page_slots) = {
+            let p = pool.borrow();
+            (p.row(), p.n_layers(), p.page_slots())
+        };
         KvSlab {
-            k: vec![0.0; m.n_layers * cap * row],
-            v: vec![0.0; m.n_layers * cap * row],
+            id: NEXT_SLAB_ID.fetch_add(1, Ordering::Relaxed),
+            pool: pool.clone(),
+            pages: Vec::new(),
+            dirty: Vec::new(),
             meta: Vec::with_capacity(cap),
             cap,
             row,
-            n_layers: m.n_layers,
+            n_layers,
+            page_slots,
+            last_sync: None,
+            released: false,
         }
+    }
+
+    /// Stable identity for engine scratch-ownership tracking.
+    pub fn sync_id(&self) -> u64 {
+        self.id
+    }
+
+    /// Forget the incremental-sync state: the next `copy_into_lane` does
+    /// a full gather. The engine calls this whenever a *different* slab
+    /// wrote the same scratch region since this slab's last sync — the
+    /// slab's own (lane, capacity) check cannot see that.
+    pub fn invalidate_sync(&mut self) {
+        self.last_sync = None;
+        self.dirty.fill(true);
     }
 
     pub fn len(&self) -> usize {
@@ -81,6 +159,16 @@ impl KvSlab {
         &mut self.meta
     }
 
+    /// Token slots per arena page.
+    pub fn page_slots(&self) -> usize {
+        self.page_slots
+    }
+
+    /// Pages this slab currently holds in the arena.
+    pub fn allocated_pages(&self) -> usize {
+        self.pages.len()
+    }
+
     /// Bytes of one live slot (K+V for one token across all layers) —
     /// the accounting unit of the scheduler's KV-budget admission.
     pub fn kv_bytes_per_slot(&self) -> usize {
@@ -92,8 +180,27 @@ impl KvSlab {
         self.meta.len() * self.kv_bytes_per_slot()
     }
 
-    fn slot_offset(&self, layer: usize, slot: usize) -> usize {
-        (layer * self.cap + slot) * self.row
+    /// Bytes of arena actually held (live + tail-page fragmentation).
+    pub fn kv_bytes_allocated(&self) -> usize {
+        self.pages.len() * self.page_slots * self.kv_bytes_per_slot()
+    }
+
+    #[inline]
+    fn page_of(&self, slot: usize) -> (u32, usize) {
+        (self.pages[slot / self.page_slots], slot % self.page_slots)
+    }
+
+    /// Make sure a page backs logical slot `slot` (== current len).
+    fn ensure_page(&mut self, slot: usize) {
+        if slot == self.pages.len() * self.page_slots {
+            let page = self
+                .pool
+                .borrow_mut()
+                .alloc()
+                .expect("page pool exhausted (admission must prevent this)");
+            self.pages.push(page);
+            self.dirty.push(true);
+        }
     }
 
     /// Append one token's KV. `k_row`/`v_row` are `[L, H, Dh]` (layer-major,
@@ -106,15 +213,14 @@ impl KvSlab {
         modality: Modality,
         init_score: f32,
     ) -> usize {
+        assert!(!self.released, "append to a released slab");
         assert!(self.meta.len() < self.cap, "slab full");
         assert_eq!(k_row.len(), self.n_layers * self.row);
         let slot = self.meta.len();
-        for l in 0..self.n_layers {
-            let dst = self.slot_offset(l, slot);
-            let src = l * self.row;
-            self.k[dst..dst + self.row].copy_from_slice(&k_row[src..src + self.row]);
-            self.v[dst..dst + self.row].copy_from_slice(&v_row[src..src + self.row]);
-        }
+        self.ensure_page(slot);
+        let (page, off) = self.page_of(slot);
+        self.pool.borrow_mut().write_slot(page, off, k_row, v_row);
+        self.dirty[slot / self.page_slots] = true;
         self.meta.push(SlotMeta {
             position,
             modality,
@@ -141,15 +247,24 @@ impl KvSlab {
         modality: &[Modality],
         scores: &[f32],
     ) {
+        assert!(!self.released, "inject into a released slab");
         assert!(self.meta.is_empty(), "inject into non-empty slab");
         assert!(retain.len() < self.cap, "prefill larger than slab capacity");
         for (dst_slot, &src_slot) in retain.iter().enumerate() {
+            self.ensure_page(dst_slot);
+            let (page, off) = self.page_of(dst_slot);
+            let mut pool = self.pool.borrow_mut();
             for l in 0..self.n_layers {
                 let src = (l * bucket + src_slot) * self.row;
-                let dst = self.slot_offset(l, dst_slot);
-                self.k[dst..dst + self.row].copy_from_slice(&k_src[src..src + self.row]);
-                self.v[dst..dst + self.row].copy_from_slice(&v_src[src..src + self.row]);
+                pool.write_layer_row(
+                    page,
+                    off,
+                    l,
+                    &k_src[src..src + self.row],
+                    &v_src[src..src + self.row],
+                );
             }
+            drop(pool);
             self.meta.push(SlotMeta {
                 position: src_slot as i32,
                 modality: modality[src_slot],
@@ -165,8 +280,18 @@ impl KvSlab {
     /// Accumulate this step's attention mass into slot scores and ages.
     /// `mean[i]` is the layer/head-mean mass on slot i, `peak[i]` the
     /// max-over-heads mass (may be the same slice when peak tracking is
-    /// not needed).
+    /// not needed). Both must cover exactly the live slots.
     pub fn add_scores(&mut self, mean: &[f32], peak: &[f32]) {
+        debug_assert_eq!(
+            mean.len(),
+            self.meta.len(),
+            "mean score vector length must match the live slot count"
+        );
+        debug_assert_eq!(
+            peak.len(),
+            self.meta.len(),
+            "peak score vector length must match the live slot count"
+        );
         for (i, m) in self.meta.iter_mut().enumerate() {
             let s = mean.get(i).copied().unwrap_or(0.0);
             m.cum_score += s;
@@ -176,30 +301,56 @@ impl KvSlab {
         }
     }
 
-    /// Keep exactly the slots in `retain` (ascending, deduped), dropping
-    /// the rest. Returns the number of evicted slots.
+    /// Keep exactly the slots in `retain` (strictly ascending, therefore
+    /// deduped), dropping the rest. Retained slots slide down in order;
+    /// tail pages emptied by the shrink are freed back to the pool.
+    /// Returns the number of evicted slots.
     pub fn compact(&mut self, retain: &[usize]) -> usize {
-        debug_assert!(retain.windows(2).all(|w| w[0] < w[1]), "retain must be ascending");
+        debug_assert!(
+            retain.windows(2).all(|w| w[0] < w[1]),
+            "retain must be strictly ascending (ascending + deduped)"
+        );
+        debug_assert!(
+            retain.last().is_none_or(|&i| i < self.meta.len()),
+            "retain indices must be live slots"
+        );
         let evicted = self.meta.len() - retain.len();
         if evicted == 0 {
             return 0;
         }
-        for (dst_slot, &src_slot) in retain.iter().enumerate() {
-            if dst_slot == src_slot {
-                continue;
+        assert!(!self.released, "compact of a released slab");
+        let mut first_moved: Option<usize> = None;
+        {
+            let mut pool = self.pool.borrow_mut();
+            for (dst_slot, &src_slot) in retain.iter().enumerate() {
+                if dst_slot == src_slot {
+                    // unchanged prefix: no copy, page stays clean
+                    continue;
+                }
+                if first_moved.is_none() {
+                    first_moved = Some(dst_slot);
+                }
+                pool.copy_slot(self.page_of(src_slot), self.page_of(dst_slot));
+                self.meta[dst_slot] = self.meta[src_slot];
             }
-            for l in 0..self.n_layers {
-                let src = self.slot_offset(l, src_slot);
-                let dst = self.slot_offset(l, dst_slot);
-                let (a, b) = if src > dst { (dst, src) } else { (src, dst) };
-                // non-overlapping because row-sized chunks at distinct slots
-                let _ = (a, b);
-                self.k.copy_within(src..src + self.row, dst);
-                self.v.copy_within(src..src + self.row, dst);
-            }
-            self.meta[dst_slot] = self.meta[src_slot];
         }
         self.meta.truncate(retain.len());
+        // every page from the first rewritten slot on now has new content
+        if let Some(fm) = first_moved {
+            let live_pages = pages_for_slots(self.meta.len(), self.page_slots);
+            for pi in (fm / self.page_slots)..live_pages {
+                self.dirty[pi] = true;
+            }
+        }
+        // free whole tail pages the shrink emptied
+        let needed = pages_for_slots(self.meta.len(), self.page_slots);
+        if self.pages.len() > needed {
+            let mut pool = self.pool.borrow_mut();
+            for page in self.pages.drain(needed..) {
+                pool.release(page);
+            }
+            self.dirty.truncate(needed);
+        }
         evicted
     }
 
@@ -219,36 +370,80 @@ impl KvSlab {
         self.compact(&retain)
     }
 
-    /// Copy this slab's live region into a batched decode input at the
+    /// Gather this slab's live region into a batched decode input at the
     /// given lane. `dst_k`/`dst_v` are `[B, L, C, H, Dh]`; `cap_c` is the
     /// batch buffer's capacity bucket (≥ self.len()).
+    ///
+    /// Incremental: when the destination (lane, capacity) matches the
+    /// previous call — the engine reuses its scratch buffers across
+    /// steps — only pages whose KV changed since then are copied (the
+    /// paper's index-broadcasting idea applied to the host hot path).
+    /// Returns the number of pages copied.
     pub fn copy_into_lane(
-        &self,
+        &mut self,
         dst_k: &mut [f32],
         dst_v: &mut [f32],
         lane: usize,
         cap_c: usize,
-    ) {
+    ) -> usize {
         let len = self.meta.len();
+        assert!(!self.released, "lane sync of a released slab");
         assert!(len <= cap_c, "lane cache {} > bucket {}", len, cap_c);
-        for l in 0..self.n_layers {
-            let src = self.slot_offset(l, 0);
-            let dst = ((lane * self.n_layers + l) * cap_c) * self.row;
-            let n = len * self.row;
-            dst_k[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
-            dst_v[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
+        let here = LaneSync { lane, cap_c };
+        let full = self.last_sync != Some(here);
+        let pool = self.pool.borrow();
+        let mut copied = 0;
+        for (pi, &page) in self.pages.iter().enumerate() {
+            let base_slot = pi * self.page_slots;
+            if base_slot >= len {
+                break;
+            }
+            if !full && !self.dirty[pi] {
+                continue;
+            }
+            let n = (len - base_slot).min(self.page_slots) * self.row;
+            for l in 0..self.n_layers {
+                let dst = ((lane * self.n_layers + l) * cap_c + base_slot) * self.row;
+                dst_k[dst..dst + n].copy_from_slice(&pool.k_run(page, l)[..n]);
+                dst_v[dst..dst + n].copy_from_slice(&pool.v_run(page, l)[..n]);
+            }
+            copied += 1;
         }
+        drop(pool);
+        self.dirty.fill(false);
+        self.last_sync = Some(here);
+        copied
     }
 
     /// Raw K row of one slot in one layer (test/diagnostic use).
-    pub fn k_row(&self, layer: usize, slot: usize) -> &[f32] {
-        let o = self.slot_offset(layer, slot);
-        &self.k[o..o + self.row]
+    pub fn k_row(&self, layer: usize, slot: usize) -> Vec<f32> {
+        let (page, off) = self.page_of(slot);
+        self.pool.borrow().read_row(page, off, layer, false)
     }
 
-    pub fn v_row(&self, layer: usize, slot: usize) -> &[f32] {
-        let o = self.slot_offset(layer, slot);
-        &self.v[o..o + self.row]
+    pub fn v_row(&self, layer: usize, slot: usize) -> Vec<f32> {
+        let (page, off) = self.page_of(slot);
+        self.pool.borrow().read_row(page, off, layer, true)
+    }
+
+    /// Retire hook: return every arena page to the pool *now*, instead
+    /// of when the caller drops the finished request. Metadata (and so
+    /// `len`, `kv_bytes`, eviction stats) stays readable; the KV itself
+    /// is gone and the slab must not be appended to or lane-synced again.
+    /// Idempotent.
+    pub fn release_pages(&mut self) {
+        if self.pages.is_empty() {
+            self.released = true;
+            return;
+        }
+        let mut pool = self.pool.borrow_mut();
+        for page in self.pages.drain(..) {
+            pool.release(page);
+        }
+        drop(pool);
+        self.dirty.clear();
+        self.last_sync = None;
+        self.released = true;
     }
 
     /// Count of marked (recycle-bin) slots.
@@ -264,6 +459,72 @@ impl KvSlab {
             .filter(|(_, m)| m.marked)
             .map(|(i, _)| i)
             .collect()
+    }
+}
+
+impl Drop for KvSlab {
+    fn drop(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for &page in &self.pages {
+            pool.release(page);
+        }
+    }
+}
+
+impl Clone for KvSlab {
+    /// Deep copy into a fresh private pool: a clone is a snapshot, never
+    /// an alias of the shared arena (aliasing pages without retaining
+    /// them would double-free on drop).
+    fn clone(&self) -> Self {
+        let page_slots = self.page_slots;
+        let pool = PagePool::new_shared(
+            self.n_layers,
+            self.row,
+            pages_for_slots(self.cap.max(1), page_slots).max(1),
+            page_slots,
+        );
+        let mut out = KvSlab {
+            id: NEXT_SLAB_ID.fetch_add(1, Ordering::Relaxed),
+            pool,
+            pages: Vec::new(),
+            dirty: Vec::new(),
+            meta: self.meta.clone(),
+            cap: self.cap,
+            row: self.row,
+            n_layers: self.n_layers,
+            page_slots,
+            last_sync: None,
+            released: self.released,
+        };
+        let src = self.pool.borrow();
+        let live_kv = if self.released { 0 } else { self.meta.len() };
+        for slot in 0..live_kv {
+            out.ensure_page(slot);
+            let (dpage, doff) = out.page_of(slot);
+            let (spage, soff) = self.page_of(slot);
+            let mut dst = out.pool.borrow_mut();
+            for l in 0..self.n_layers {
+                dst.write_layer_row(
+                    dpage,
+                    doff,
+                    l,
+                    &src.read_row(spage, soff, l, false),
+                    &src.read_row(spage, soff, l, true),
+                );
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for KvSlab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvSlab")
+            .field("len", &self.meta.len())
+            .field("cap", &self.cap)
+            .field("pages", &self.pages)
+            .field("page_slots", &self.page_slots)
+            .finish()
     }
 }
 
@@ -289,6 +550,11 @@ mod tests {
 
     fn row_of(val: f32, m: &ModelMeta) -> Vec<f32> {
         vec![val; m.n_layers * m.n_heads * m.d_head]
+    }
+
+    /// A shared arena small enough to observe page churn: 4-slot pages.
+    fn tiny_pool(m: &ModelMeta, pages: usize) -> SharedPagePool {
+        PagePool::new_shared(m.n_layers, m.n_heads * m.d_head, pages, 4)
     }
 
     #[test]
@@ -384,8 +650,167 @@ mod tests {
         // lane 0 untouched
         assert!(dst_k[..m.n_layers * c * row].iter().all(|&x| x == 0.0));
         // lane 1, layer 0, slot 1 = 2.0
-        let off = (1 * m.n_layers + 0) * c * row + 1 * row;
+        let off = (m.n_layers * c + 1) * row;
         assert_eq!(dst_k[off], 2.0);
+    }
+
+    #[test]
+    fn incremental_sync_copies_only_dirty_pages() {
+        let m = tiny_meta();
+        let row = m.n_heads * m.d_head;
+        let pool = tiny_pool(&m, 8); // 4-slot pages
+        let mut s = KvSlab::in_pool(&pool, 20);
+        for i in 0..9 {
+            s.append(&row_of(i as f32, &m), &row_of(i as f32, &m), i as i32,
+                     Modality::Text, 0.0);
+        }
+        let c = 20;
+        let mut dst_k = vec![0.0f32; m.n_layers * c * row];
+        let mut dst_v = dst_k.clone();
+        // first sync: all 3 pages (slots 0..9 over 4-slot pages)
+        assert_eq!(s.copy_into_lane(&mut dst_k, &mut dst_v, 0, c), 3);
+        // steady-state append touches only the tail page
+        s.append(&row_of(9.0, &m), &row_of(9.0, &m), 9, Modality::Text, 0.0);
+        assert_eq!(s.copy_into_lane(&mut dst_k, &mut dst_v, 0, c), 1);
+        assert_eq!(dst_k[9 * row], 9.0);
+        // scores don't touch KV: nothing to copy
+        let zeros = vec![0.0f32; s.len()];
+        s.add_scores(&zeros, &zeros);
+        assert_eq!(s.copy_into_lane(&mut dst_k, &mut dst_v, 0, c), 0);
+        // a different destination forces a full resync
+        assert_eq!(s.copy_into_lane(&mut dst_k, &mut dst_v, 0, c + 4), 3);
+    }
+
+    #[test]
+    fn incremental_sync_tracks_evictions() {
+        let m = tiny_meta();
+        let row = m.n_heads * m.d_head;
+        let pool = tiny_pool(&m, 8);
+        let mut s = KvSlab::in_pool(&pool, 20);
+        for i in 0..12 {
+            s.append(&row_of(i as f32, &m), &row_of(i as f32, &m), i as i32,
+                     Modality::Text, 0.0);
+        }
+        let c = 20;
+        let mut dst_k = vec![0.0f32; m.n_layers * c * row];
+        let mut dst_v = dst_k.clone();
+        s.copy_into_lane(&mut dst_k, &mut dst_v, 0, c);
+        // evicting slot 2 rewrites everything from slot 2 on → pages 0..3
+        // shrink to 11 live slots over 3 pages, all rewritten
+        s.evict(&[2]);
+        assert_eq!(s.copy_into_lane(&mut dst_k, &mut dst_v, 0, c), 3);
+        for (i, expect) in [0.0f32, 1.0, 3.0, 4.0].iter().enumerate() {
+            assert_eq!(dst_k[i * row], *expect, "slot {} after eviction", i);
+        }
+        // pure tail truncation leaves the prefix pages clean
+        let keep: Vec<usize> = (0..8).collect();
+        s.compact(&keep);
+        assert_eq!(s.copy_into_lane(&mut dst_k, &mut dst_v, 0, c), 0);
+    }
+
+    #[test]
+    fn invalidate_sync_recovers_clobbered_scratch() {
+        // Two slabs alternate writes to the same (lane, capacity) region,
+        // the aliasing the engine's per-lane ownership tracking detects:
+        // without invalidation, slab A would skip its "clean" pages and
+        // leave slab B's rows in the buffer.
+        let m = tiny_meta();
+        let row = m.n_heads * m.d_head;
+        let pool = tiny_pool(&m, 8);
+        let mut a = KvSlab::in_pool(&pool, 16);
+        let mut b = KvSlab::in_pool(&pool, 16);
+        assert_ne!(a.sync_id(), b.sync_id());
+        for i in 0..6 {
+            a.append(&row_of(1.0, &m), &row_of(1.0, &m), i, Modality::Text, 0.0);
+            b.append(&row_of(2.0, &m), &row_of(2.0, &m), i, Modality::Text, 0.0);
+        }
+        let c = 16;
+        let mut dst_k = vec![0.0f32; m.n_layers * c * row];
+        let mut dst_v = dst_k.clone();
+        a.copy_into_lane(&mut dst_k, &mut dst_v, 0, c);
+        b.copy_into_lane(&mut dst_k, &mut dst_v, 0, c); // clobbers A's region
+        // A's own (lane, capacity) state still matches — without the
+        // engine-driven invalidation it would copy 0 pages
+        a.invalidate_sync();
+        let copied = a.copy_into_lane(&mut dst_k, &mut dst_v, 0, c);
+        assert_eq!(copied, 2, "full resync after invalidation");
+        for s in 0..6 {
+            assert_eq!(dst_k[s * row], 1.0, "slot {} holds A's data again", s);
+        }
+    }
+
+    #[test]
+    fn eviction_frees_tail_pages_to_the_pool() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let mut s = KvSlab::in_pool(&pool, 32);
+        for i in 0..12 {
+            s.append(&row_of(0.0, &m), &row_of(0.0, &m), i, Modality::Text, 0.0);
+        }
+        assert_eq!(s.allocated_pages(), 3);
+        assert_eq!(pool.borrow().in_use_pages(), 3);
+        // drop 7 of 12 slots: 5 live → 2 pages, one page back to the pool
+        s.evict(&[0, 1, 2, 3, 4, 5, 6]);
+        assert_eq!(s.allocated_pages(), 2);
+        assert_eq!(pool.borrow().in_use_pages(), 2);
+        assert_eq!(pool.borrow().stats().frees, 1);
+        drop(s);
+        assert_eq!(pool.borrow().in_use_pages(), 0, "drop releases every page");
+    }
+
+    #[test]
+    fn slabs_share_one_arena() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 4); // 16 slots total
+        let mut a = KvSlab::in_pool(&pool, 16);
+        let mut b = KvSlab::in_pool(&pool, 16);
+        for i in 0..8 {
+            a.append(&row_of(1.0, &m), &row_of(1.0, &m), i, Modality::Text, 0.0);
+            b.append(&row_of(2.0, &m), &row_of(2.0, &m), i, Modality::Text, 0.0);
+        }
+        assert_eq!(pool.borrow().free_pages(), 0);
+        // a's eviction is immediately b's headroom
+        a.evict(&(0..8).collect::<Vec<_>>());
+        assert_eq!(pool.borrow().free_pages(), 2);
+        for i in 8..16 {
+            b.append(&row_of(2.0, &m), &row_of(2.0, &m), i, Modality::Text, 0.0);
+        }
+        assert_eq!(b.len(), 16);
+        assert_eq!(b.k_row(0, 15)[0], 2.0);
+    }
+
+    #[test]
+    fn release_pages_keeps_metadata() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 4);
+        let mut s = KvSlab::in_pool(&pool, 16);
+        for i in 0..6 {
+            s.append(&row_of(0.0, &m), &row_of(0.0, &m), i, Modality::Text, 0.5);
+        }
+        s.release_pages();
+        assert_eq!(pool.borrow().in_use_pages(), 0, "pages back at retire");
+        assert_eq!(s.len(), 6, "stats stay readable");
+        assert!((s.meta()[3].cum_score - 0.5).abs() < 1e-6);
+        assert!(s.kv_bytes() > 0);
+        s.release_pages(); // idempotent
+        drop(s); // double-free would panic the pool's refcount debug_assert
+        assert_eq!(pool.borrow().stats().frees, 2);
+    }
+
+    #[test]
+    fn clone_detaches_from_the_arena() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 4);
+        let mut s = KvSlab::in_pool(&pool, 16);
+        for i in 0..6 {
+            s.append(&row_of(i as f32, &m), &row_of(0.0, &m), i, Modality::Text, 0.0);
+        }
+        let in_use = pool.borrow().in_use_pages();
+        let c = s.clone();
+        assert_eq!(pool.borrow().in_use_pages(), in_use, "clone takes no arena pages");
+        drop(s);
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.k_row(0, 5)[0], 5.0);
     }
 
     #[test]

@@ -13,9 +13,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cache::{DecodeCtx, KvSlab, Modality, PolicyKind, PrefillCtx};
+use crate::cache::{
+    pages_for_slots, DecodeCtx, KvSlab, Modality, PagePool, PolicyKind, PoolStats,
+    PrefillCtx, SharedPagePool, DEFAULT_PAGE_SLOTS,
+};
 use crate::model::vocab;
 use crate::runtime::{Runtime, StepTiming};
+use crate::scheduler::AdmissionController;
 use crate::util::rng::Rng;
 use crate::util::stats::argmax;
 use crate::workload::Request;
@@ -36,6 +40,11 @@ pub struct EngineConfig {
     pub capture_scores: bool,
     /// decode batch width (must be one of the compiled batch sizes)
     pub batch: usize,
+    /// aggregate live-KV budget in bytes: sizes the shared page arena
+    /// (None → physical ceiling, every lane at full capacity)
+    pub kv_budget: Option<usize>,
+    /// token slots per arena page
+    pub page_slots: usize,
 }
 
 impl Default for EngineConfig {
@@ -48,6 +57,8 @@ impl Default for EngineConfig {
             capture_logits: false,
             capture_scores: false,
             batch: 1,
+            kv_budget: None,
+            page_slots: DEFAULT_PAGE_SLOTS,
         }
     }
 }
@@ -59,16 +70,29 @@ pub struct StepReport {
     pub lanes: usize,
     pub pjrt_s: f64,
     pub coord_s: f64,
+    /// arena pages gathered into the batch buffers this step — the
+    /// incremental lane sync copies O(dirty pages), so at steady state
+    /// this is ≈ lanes, not Σ live slots / page_slots
+    pub pages_copied: usize,
 }
 
 pub struct Engine {
     pub rt: Runtime,
     pub cfg: EngineConfig,
     rng: Rng,
+    /// shared paged KV arena: one pool for every lane's slab, sized from
+    /// `kv_budget` (or the physical ceiling)
+    pool: SharedPagePool,
     /// scratch batch buffers, reused across steps (hot-path allocation
-    /// avoidance; sized for the largest capacity bucket)
+    /// avoidance; sized for the largest capacity bucket). Persistence
+    /// across steps is what makes the slabs' dirty-page lane sync valid.
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
+    /// which slab (`KvSlab::sync_id`) last wrote each scratch lane — a
+    /// slab's own (lane, capacity) sync check cannot see another slab
+    /// clobbering its region, so ownership changes force a full resync
+    /// (0 = never written)
+    lane_owner: Vec<u64>,
     /// component timing of the most recent decode step (perf harness)
     last_timing: StepTiming,
 }
@@ -86,14 +110,70 @@ impl Engine {
         let cap = rt.manifest.shapes.cache_capacity;
         let n = cfg.batch * m.n_layers * cap * m.n_heads * m.d_head;
         let rng = Rng::new(cfg.seed);
+        // Pool sizing: by default every lane can hold a full-capacity
+        // cache; a --kv-budget shrinks the arena (never below one full
+        // lane, so single-request paths always work — the scheduler's
+        // page-granular admission enforces the tighter byte budget).
+        let page_slots = cfg.page_slots.max(1);
+        let pages_per_lane = pages_for_slots(cap, page_slots);
+        let default_pages = cfg.batch * pages_per_lane;
+        let pool_pages = match cfg.kv_budget {
+            None => default_pages,
+            Some(bytes) => {
+                let page_bytes = page_slots * m.kv_bytes_per_token();
+                (bytes / page_bytes.max(1)).clamp(pages_per_lane, default_pages)
+            }
+        };
+        let pool = PagePool::new_shared(
+            m.n_layers,
+            m.n_heads * m.d_head,
+            pool_pages,
+            page_slots,
+        );
+        let lane_owner = vec![0; cfg.batch];
         Ok(Engine {
             rt,
             cfg,
             rng,
+            pool,
             scratch_k: vec![0.0; n],
             scratch_v: vec![0.0; n],
+            lane_owner,
             last_timing: StepTiming::default(),
         })
+    }
+
+    /// Handle to the shared page arena (scheduler metrics, tests).
+    pub fn page_pool(&self) -> SharedPagePool {
+        self.pool.clone()
+    }
+
+    /// Occupancy snapshot of the shared arena.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.borrow().stats()
+    }
+
+    /// Total pages in the arena.
+    pub fn pool_pages(&self) -> usize {
+        self.pool.borrow().n_pages()
+    }
+
+    /// Token slots per arena page.
+    pub fn page_slots(&self) -> usize {
+        self.pool.borrow().page_slots()
+    }
+
+    /// Admission controller over the engine's physical arena (budget =
+    /// the whole pool): the one page-bound implementation, shared by
+    /// engine-direct drivers (`run_batched`) and, with a tighter byte
+    /// budget, by the serving scheduler.
+    pub fn pool_admission(&self) -> AdmissionController {
+        AdmissionController {
+            budget_pages: self.pool_pages(),
+            page_slots: self.page_slots(),
+            capacity_limit: self.capacity_limit(),
+            kv_bytes_per_token: self.rt.meta().kv_bytes_per_token(),
+        }
     }
 
     /// (upload, execute, download) seconds of the most recent decode step.
@@ -163,7 +243,7 @@ impl Engine {
             .iter()
             .map(|&b| if b { Modality::Vision } else { Modality::Text })
             .collect();
-        let mut slab = KvSlab::new(&m, self.rt.manifest.shapes.cache_capacity);
+        let mut slab = KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
         match &decision.kv_override {
             Some((k, v)) => slab.inject_prefill(
                 k,
@@ -259,12 +339,21 @@ impl Engine {
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut lengths = vec![0i32; b];
+        let mut pages_copied = 0usize;
         for (lane, &i) in live.iter().enumerate() {
-            let ar = &lanes[i];
+            let ar = &mut *lanes[i];
             tokens[lane] = ar.pending_token;
             positions[lane] = ar.pos;
             lengths[lane] = ar.slab.len() as i32;
-            ar.slab.copy_into_lane(
+            // a different slab wrote this lane since our last sync (lane
+            // churn, or another driver on this engine): full resync
+            if self.lane_owner[lane] != ar.slab.sync_id() {
+                ar.slab.invalidate_sync();
+                self.lane_owner[lane] = ar.slab.sync_id();
+            }
+            // incremental page-granular gather: pages untouched since the
+            // last step at this (lane, capacity) are already in scratch
+            pages_copied += ar.slab.copy_into_lane(
                 &mut self.scratch_k[..slab_n],
                 &mut self.scratch_v[..slab_n],
                 lane,
@@ -298,8 +387,14 @@ impl Engine {
             ar.pos += 1;
 
             // 2. accumulate this step's attention mass (mean + peak,
-            // already reduced in-graph — §Perf opt 2)
-            ar.slab.add_scores(out.lane_mean(lane), out.lane_peak(lane));
+            // already reduced in-graph — §Perf opt 2). The graph emits
+            // capacity-length vectors with slots ≥ length masked to
+            // zero; slice to the live slots the slab expects.
+            let live_len = ar.slab.len();
+            ar.slab.add_scores(
+                &out.lane_mean(lane)[..live_len],
+                &out.lane_peak(lane)[..live_len],
+            );
             if self.cfg.capture_scores {
                 let snap: Vec<(i32, f32)> = ar
                     .slab
@@ -387,6 +482,7 @@ impl Engine {
             lanes: live.len(),
             pjrt_s: timing.total_s(),
             coord_s,
+            pages_copied,
         })
     }
 
@@ -436,12 +532,16 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// Generate a full completion for one request (batch lane 0 only).
+    /// The returned request's arena pages are already released (callers
+    /// keep metadata, traces and stats), so results can be retained
+    /// while the engine serves further requests.
     pub fn generate(&mut self, req: Request) -> Result<ActiveRequest> {
         let mut ar = self.prefill(req)?;
         while !ar.done {
             let mut lanes = [&mut ar];
             self.decode_step(&mut lanes)?;
         }
+        ar.slab.release_pages();
         Ok(ar)
     }
 
@@ -462,6 +562,8 @@ impl Engine {
             let mut lanes = [&mut ar];
             self.decode_step(&mut lanes)?;
         }
+        // replay is over either way (done, or script exhausted)
+        ar.slab.release_pages();
         Ok(ar)
     }
 
@@ -484,7 +586,12 @@ impl Engine {
         let mut retired = Vec::new();
         for (i, lane) in lanes.iter_mut().enumerate() {
             if lane.as_ref().map_or(false, |ar| ar.done) {
-                retired.push((i, lane.take().unwrap()));
+                let mut ar = lane.take().unwrap();
+                // retired lanes return their arena pages immediately —
+                // admission headroom must not wait for the caller to
+                // drop the finished request
+                ar.slab.release_pages();
+                retired.push((i, ar));
             }
         }
         Ok((report, retired))
@@ -497,23 +604,43 @@ impl Engine {
         requests: Vec<Request>,
     ) -> Result<(Vec<ActiveRequest>, Vec<StepReport>)> {
         let b = self.cfg.batch;
+        let ctl = self.pool_admission();
         let mut queue: std::collections::VecDeque<Request> = requests.into();
         let mut lanes: Vec<Option<ActiveRequest>> = (0..b).map(|_| None).collect();
         let mut finished = Vec::new();
         let mut reports = Vec::new();
 
         loop {
-            // admit
-            for lane in lanes.iter_mut() {
-                if lane.is_none() {
-                    if let Some(req) = queue.pop_front() {
-                        let ar = self.prefill(req)?;
-                        if ar.done {
-                            finished.push(ar);
-                        } else {
-                            *lane = Some(ar);
-                        }
+            // admit — gated by the same page-bound math the scheduler's
+            // admission uses: when --kv-budget shrank the arena below
+            // batch × capacity, requests wait for live lanes to retire
+            // instead of exhausting the pool
+            for i in 0..b {
+                if lanes[i].is_some() {
+                    continue;
+                }
+                let Some(req) = queue.front() else { break };
+                let live: usize =
+                    lanes.iter().flatten().map(|ar| ctl.lane_bound_pages(ar)).sum();
+                if !ctl.admits(live, 0, req) {
+                    if lanes.iter().all(|l| l.is_none()) {
+                        // defensive: the pool floor of one full lane means
+                        // a single request always fits an idle arena
+                        bail!(
+                            "request {} cannot fit the KV arena ({} pages)",
+                            req.id,
+                            ctl.budget_pages
+                        );
                     }
+                    break; // headroom frees as live lanes evict/retire
+                }
+                let req = queue.pop_front().unwrap();
+                let mut ar = self.prefill(req)?;
+                if ar.done {
+                    ar.slab.release_pages();
+                    finished.push(ar);
+                } else {
+                    lanes[i] = Some(ar);
                 }
             }
             if lanes.iter().all(|l| l.is_none()) {

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::cache::PolicyKind;
+use crate::cache::{KvSlab, Modality, PagePool, PolicyKind};
 use crate::coordinator::{ActiveRequest, Engine, EngineConfig};
 use crate::eval::{fidelity, Fidelity};
 use crate::runtime::Runtime;
@@ -52,10 +52,7 @@ pub fn engine_for(policy: PolicyKind, batch: usize, capture: bool) -> Result<Eng
             policy,
             batch,
             capture_logits: capture,
-            capture_scores: false,
-            temperature: 0.0,
-            top_k: 8,
-            seed: 1,
+            ..EngineConfig::default()
         },
     )
 }
@@ -223,6 +220,74 @@ impl Table {
         for row in &self.rows {
             println!("{}", line(row));
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paged-arena lane-sync measurement (shared by perf_serve_batch and
+// perf_page_pool; runtime-free)
+// ---------------------------------------------------------------------------
+
+/// One full-vs-incremental lane-gather measurement over a synthetic
+/// arena: a slab with `live_slots` tokens is synced into a batch buffer
+/// `steps` times, once with the sync cache defeated every step (full
+/// resync — the pre-arena O(live slots) behaviour) and once in
+/// steady-state decode (one append per step — O(dirty pages)).
+pub struct LaneSyncSample {
+    pub live_slots: usize,
+    pub pages: usize,
+    pub full_us_per_step: f64,
+    pub incr_us_per_step: f64,
+    pub incr_pages_per_step: f64,
+    /// K+V bytes of one page (throughput arithmetic)
+    pub page_bytes: usize,
+}
+
+pub fn measure_lane_sync(live_slots: usize, steps: usize) -> LaneSyncSample {
+    let (n_layers, row, ps) = (4usize, 128usize, 16usize);
+    let cap = live_slots + steps + 1;
+    let pool = PagePool::new_shared(n_layers, row, cap.div_ceil(ps) + 1, ps);
+    let token_row = vec![0.5f32; n_layers * row];
+    let mut slab = KvSlab::in_pool(&pool, cap);
+    for i in 0..live_slots {
+        slab.append(&token_row, &token_row, i as i32, Modality::Text, 0.0);
+    }
+    let c = cap;
+    let mut dst_k = vec![0.0f32; 2 * n_layers * c * row];
+    let mut dst_v = dst_k.clone();
+
+    // full resync every step: alternating lanes defeat the sync cache
+    // (start on lane 1 so the first call already mismatches)
+    let pages = slab.allocated_pages();
+    let t0 = Instant::now();
+    for i in 0..steps {
+        slab.copy_into_lane(&mut dst_k, &mut dst_v, (i + 1) % 2, c);
+    }
+    let full_us_per_step = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
+
+    // steady-state decode: one append per step, same destination
+    slab.copy_into_lane(&mut dst_k, &mut dst_v, 0, c); // prime
+    let t0 = Instant::now();
+    let mut pages_copied = 0usize;
+    for i in 0..steps {
+        slab.append(
+            &token_row,
+            &token_row,
+            (live_slots + i) as i32,
+            Modality::Text,
+            0.0,
+        );
+        pages_copied += slab.copy_into_lane(&mut dst_k, &mut dst_v, 0, c);
+    }
+    let incr_us_per_step = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
+
+    LaneSyncSample {
+        live_slots,
+        pages,
+        full_us_per_step,
+        incr_us_per_step,
+        incr_pages_per_step: pages_copied as f64 / steps as f64,
+        page_bytes: n_layers * ps * row * 4 * 2,
     }
 }
 

@@ -13,7 +13,7 @@
 //!           random   (see cache::PolicyKind::parse)
 
 use anyhow::{anyhow, Result};
-use hae_serve::cache::PolicyKind;
+use hae_serve::cache::{PolicyKind, DEFAULT_PAGE_SLOTS};
 use hae_serve::coordinator::{Engine, EngineConfig};
 use hae_serve::harness;
 use hae_serve::model::vocab;
@@ -33,8 +33,10 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
   --seed S          workload seed (default 42)
   --addr A          serve: listen address (default 127.0.0.1:8472)
   --queue N         serve: admission queue depth (default 64)
-  --kv-budget B     serve: aggregate live-KV budget in bytes; k/m/g
+  --kv-budget B     aggregate live-KV budget in bytes; sizes the shared
+                    page arena and the serve admission budget; k/m/g
                     suffixes are KiB/MiB/GiB (default: engine ceiling)
+  --page-slots N    token slots per KV arena page (default 16)
   --sched-policy P  serve: fifo | priority (default fifo)
   --verbose         generate: print full token streams";
 
@@ -60,6 +62,16 @@ fn main() -> Result<()> {
     }
 }
 
+/// `--kv-budget` in bytes (shared by the engine arena and the serve
+/// admission budget), or None when unset.
+fn kv_budget_arg(args: &Args) -> Result<Option<usize>> {
+    args.get("kv-budget")
+        .map(|spec| {
+            parse_kv_budget(spec).ok_or_else(|| anyhow!("bad --kv-budget '{}'", spec))
+        })
+        .transpose()
+}
+
 fn build_engine(
     artifact_dir: &std::path::Path,
     args: &Args,
@@ -67,6 +79,7 @@ fn build_engine(
     let rt = Runtime::load(artifact_dir)?;
     let policy = PolicyKind::parse(args.get_or("policy", "hae"))
         .map_err(|e| anyhow!(e))?;
+    let kv_budget = kv_budget_arg(args)?;
     let cfg = EngineConfig {
         policy,
         temperature: args.f32("temperature", 0.0),
@@ -75,6 +88,8 @@ fn build_engine(
         capture_logits: false,
         capture_scores: false,
         batch: args.usize("batch", 1),
+        kv_budget,
+        page_slots: args.usize("page-slots", DEFAULT_PAGE_SLOTS),
     };
     let grammar =
         StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
@@ -110,6 +125,11 @@ fn info(artifact_dir: &std::path::Path) -> Result<()> {
     println!(
         "kv per token : {} bytes (f32, K+V, all layers)",
         m.kv_bytes_per_token()
+    );
+    println!(
+        "kv arena     : {} slots/page default ({} bytes/page)",
+        DEFAULT_PAGE_SLOTS,
+        DEFAULT_PAGE_SLOTS * m.kv_bytes_per_token()
     );
     Ok(())
 }
@@ -180,13 +200,7 @@ fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
     let (engine, grammar) = build_engine(artifact_dir, args)?;
     let sched_policy = SchedPolicy::parse(args.get_or("sched-policy", "fifo"))
         .ok_or_else(|| anyhow!("unknown --sched-policy (fifo|priority)"))?;
-    let kv_budget = match args.get("kv-budget") {
-        Some(spec) => Some(
-            parse_kv_budget(spec)
-                .ok_or_else(|| anyhow!("bad --kv-budget '{}'", spec))?,
-        ),
-        None => None,
-    };
+    let kv_budget = kv_budget_arg(args)?;
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
         queue_depth: args.usize("queue", 64),

@@ -1,64 +1,128 @@
-//! KV-budget admission control.
+//! Page-granular KV admission control.
 //!
 //! The controller guards one invariant (checked every decode step by
-//! tests/scheduler_e2e.rs): **the sum of live slab `kv_bytes` across all
-//! decode lanes never exceeds the configured budget.**
+//! tests/scheduler_e2e.rs): **the pages held by live lanes in the shared
+//! arena never exceed the page budget** — and therefore aggregate live
+//! KV bytes never exceed `--kv-budget`.
 //!
 //! A lane's live KV can only grow by one slot per decode step (the token
 //! just processed) and the engine hard-caps it at `capacity_limit`, so a
 //! lane admitted with `g` tokens already generated out of `max_new` can
-//! never exceed
+//! never hold more than
 //!
 //! ```text
-//! bound(lane) = min(live_slots + (max_new - g), capacity_limit) * kv_bytes_per_token
+//! bound(lane) = pages(min(live_slots + (max_new - g), capacity_limit))
 //! ```
 //!
-//! Admitting a candidate only when `Σ bound(live lanes) + worst_case(candidate)`
-//! fits the budget therefore guarantees the invariant without ever
-//! re-checking mid-flight. Crucially `bound` is computed from the lane's
-//! *live* slot count: every slot an eviction policy reclaims lowers the
+//! arena pages, where `pages(n) = ⌈n / page_slots⌉`. Admitting a
+//! candidate only when `Σ bound(live lanes) + reserved + pages(candidate
+//! worst case)` fits the page budget guarantees the invariant without
+//! ever re-checking mid-flight. `bound` is computed from the lane's
+//! *live* slot count: every page an eviction policy frees lowers the
 //! aggregate bound immediately, which is exactly how HAE's eviction
 //! converts into admission headroom — a budget that fits N full-cache
 //! requests fits strictly more HAE requests.
+//!
+//! Reserving **pages, not worst-case bytes**, is also what enables
+//! chunked-prefill admission (scheduler/mod.rs): a prompt larger than
+//! the currently-free pool is not head-of-line blocked until its whole
+//! worst case fits at once — it accumulates page reservations chunk by
+//! chunk as lanes evict and retire (`reserved` above), and prefill runs
+//! once the reservation covers the target.
 
+use crate::cache::pages_for_slots;
 use crate::coordinator::ActiveRequest;
 use crate::workload::Request;
 
 #[derive(Debug, Clone, Copy)]
 pub struct AdmissionController {
-    /// aggregate live-KV budget in bytes
-    pub kv_budget: usize,
-    /// bytes of one cache slot (K+V for one token across all layers)
-    pub kv_bytes_per_token: usize,
+    /// aggregate budget in arena pages
+    pub budget_pages: usize,
+    /// token slots per arena page
+    pub page_slots: usize,
     /// hard per-lane slot limit (cache_capacity - 1)
     pub capacity_limit: usize,
+    /// bytes of one cache slot (metrics/reporting only — admission math
+    /// is in pages)
+    pub kv_bytes_per_token: usize,
 }
 
 impl AdmissionController {
-    /// Worst-case live KV of a not-yet-admitted request: the whole prompt
-    /// is retained at prefill, then one slot per generated token, capped
-    /// by the physical lane limit.
-    pub fn worst_case_bytes(&self, req: &Request) -> usize {
-        (req.prompt_len() + req.max_new_tokens).min(self.capacity_limit)
-            * self.kv_bytes_per_token
+    /// Derive the page budget from a byte budget and an arena geometry.
+    /// Conservative: a partial page of budget is no page at all, so the
+    /// byte invariant `live kv_bytes ≤ kv_budget` follows from the page
+    /// invariant.
+    pub fn from_bytes(
+        kv_budget: usize,
+        pool_pages: usize,
+        page_slots: usize,
+        capacity_limit: usize,
+        kv_bytes_per_token: usize,
+    ) -> Self {
+        let page_bytes = page_slots.max(1) * kv_bytes_per_token.max(1);
+        AdmissionController {
+            budget_pages: (kv_budget / page_bytes).min(pool_pages),
+            page_slots: page_slots.max(1),
+            capacity_limit,
+            kv_bytes_per_token,
+        }
     }
 
-    /// Upper bound on a live lane's KV at any future step (see module
-    /// docs). Non-increasing over the lane's lifetime; eviction lowers it.
-    pub fn lane_bound_bytes(&self, ar: &ActiveRequest) -> usize {
+    /// Pages needed for `slots` live token slots.
+    pub fn pages_for(&self, slots: usize) -> usize {
+        pages_for_slots(slots, self.page_slots)
+    }
+
+    /// Worst-case live slots of a not-yet-admitted request: the whole
+    /// prompt is retained at prefill, then one slot per generated token,
+    /// capped by the physical lane limit.
+    pub fn worst_case_slots(&self, req: &Request) -> usize {
+        (req.prompt_len() + req.max_new_tokens).min(self.capacity_limit)
+    }
+
+    /// Worst-case arena pages of a not-yet-admitted request — the
+    /// chunked-prefill reservation target.
+    pub fn worst_case_pages(&self, req: &Request) -> usize {
+        self.pages_for(self.worst_case_slots(req))
+    }
+
+    /// Upper bound on a live lane's arena pages at any future step (see
+    /// module docs). Non-increasing over the lane's lifetime; eviction
+    /// lowers it.
+    pub fn lane_bound_pages(&self, ar: &ActiveRequest) -> usize {
         let remaining = ar.req.max_new_tokens.saturating_sub(ar.generated.len());
-        (ar.slab.len() + remaining).min(self.capacity_limit) * self.kv_bytes_per_token
+        self.pages_for((ar.slab.len() + remaining).min(self.capacity_limit))
     }
 
     /// Could this request ever be admitted on an idle system? Submissions
     /// failing this are rejected immediately (they would wait forever).
     pub fn fits_alone(&self, req: &Request) -> bool {
-        self.worst_case_bytes(req) <= self.kv_budget
+        self.worst_case_pages(req) <= self.budget_pages
     }
 
-    /// Admission test given the summed bound of the currently-live lanes.
-    pub fn admits(&self, live_bound_bytes: usize, req: &Request) -> bool {
-        live_bound_bytes.saturating_add(self.worst_case_bytes(req)) <= self.kv_budget
+    /// Admission test given the summed bound of the currently-live lanes
+    /// and the pages pinned by a chunked-prefill reservation.
+    pub fn admits(&self, live_bound_pages: usize, reserved_pages: usize, req: &Request) -> bool {
+        live_bound_pages
+            .saturating_add(reserved_pages)
+            .saturating_add(self.worst_case_pages(req))
+            <= self.budget_pages
+    }
+
+    /// Pages a chunked-prefill reservation may grab right now: free
+    /// budget not spoken for by live bounds or the existing reservation,
+    /// capped at what the target still needs.
+    pub fn reservation_grab(
+        &self,
+        live_bound_pages: usize,
+        reserved_pages: usize,
+        target_pages: usize,
+    ) -> usize {
+        let headroom = self
+            .budget_pages
+            .saturating_sub(live_bound_pages)
+            .saturating_sub(reserved_pages);
+        target_pages.saturating_sub(reserved_pages).min(headroom)
     }
 }
 
@@ -99,31 +163,55 @@ mod tests {
         }
     }
 
-    fn ctl(budget_slots: usize) -> AdmissionController {
-        let per_tok = tiny_meta().kv_bytes_per_token();
+    /// 4-slot pages, page budget given directly.
+    fn ctl(budget_pages: usize) -> AdmissionController {
         AdmissionController {
-            kv_budget: budget_slots * per_tok,
-            kv_bytes_per_token: per_tok,
+            budget_pages,
+            page_slots: 4,
             capacity_limit: 15,
+            kv_bytes_per_token: tiny_meta().kv_bytes_per_token(),
         }
     }
 
     #[test]
-    fn worst_case_clamps_at_capacity() {
+    fn worst_case_rounds_to_pages_and_clamps_at_capacity() {
         let c = ctl(100);
-        assert_eq!(c.worst_case_bytes(&req(4, 4)), 8 * c.kv_bytes_per_token);
+        // 4 + 4 = 8 slots → 2 pages; 4 + 5 = 9 slots → 3 pages
+        assert_eq!(c.worst_case_pages(&req(4, 4)), 2);
+        assert_eq!(c.worst_case_pages(&req(4, 5)), 3);
         // 30 + 30 tokens can never exceed the 15-slot lane limit
-        assert_eq!(c.worst_case_bytes(&req(30, 30)), 15 * c.kv_bytes_per_token);
+        assert_eq!(c.worst_case_pages(&req(30, 30)), 4);
     }
 
     #[test]
     fn admits_at_boundary_only() {
-        let c = ctl(10);
-        assert!(c.fits_alone(&req(6, 4)));
-        assert!(!c.fits_alone(&req(7, 4)));
-        // two slots of live bound already spoken for
-        assert!(c.admits(2 * c.kv_bytes_per_token, &req(4, 4)));
-        assert!(!c.admits(3 * c.kv_bytes_per_token, &req(4, 4)));
+        let c = ctl(3);
+        assert!(c.fits_alone(&req(6, 4))); // 10 slots → 3 pages
+        assert!(!c.fits_alone(&req(9, 4))); // 13 slots → 4 pages
+        // one page of live bound already spoken for
+        assert!(c.admits(1, 0, &req(4, 4)));
+        assert!(!c.admits(2, 0, &req(4, 4)));
+        // a chunked reservation counts against headroom too
+        assert!(!c.admits(1, 1, &req(4, 4)));
+    }
+
+    #[test]
+    fn from_bytes_is_conservative() {
+        let per_tok = tiny_meta().kv_bytes_per_token();
+        // 9.5 pages of bytes → 9-page budget, clamped by the pool
+        let c = AdmissionController::from_bytes(
+            per_tok * 4 * 9 + per_tok * 2,
+            8,
+            4,
+            100,
+            per_tok,
+        );
+        assert_eq!(c.budget_pages, 8);
+        let c = AdmissionController::from_bytes(per_tok * 4 * 9, 100, 4, 100, per_tok);
+        assert_eq!(c.budget_pages, 9);
+        // unbounded byte budget saturates at the pool size
+        let c = AdmissionController::from_bytes(usize::MAX, 17, 4, 100, per_tok);
+        assert_eq!(c.budget_pages, 17);
     }
 
     #[test]
@@ -150,13 +238,38 @@ mod tests {
             evictions: Vec::new(),
             stats: RequestStats::default(),
         };
-        // 6 live + 8 remaining of 10
-        assert_eq!(c.lane_bound_bytes(&ar), 14 * c.kv_bytes_per_token);
-        // eviction frees admission headroom immediately
+        // 6 live + 8 remaining of 10 = 14 slots → 4 pages
+        assert_eq!(c.lane_bound_pages(&ar), 4);
+        // eviction frees admission headroom immediately: 11 slots → 3 pages
         ar.slab.evict(&[0, 1, 2]);
-        assert_eq!(c.lane_bound_bytes(&ar), 11 * c.kv_bytes_per_token);
-        // progress shrinks the bound too
+        assert_eq!(c.lane_bound_pages(&ar), 3);
+        // progress shrinks the bound too: 3 live + 6 remaining = 9 → 3 pages,
+        // then two more generated → 7 slots → 2 pages
         ar.generated.extend([3, 4]);
-        assert_eq!(c.lane_bound_bytes(&ar), 9 * c.kv_bytes_per_token);
+        assert_eq!(c.lane_bound_pages(&ar), 3);
+        ar.generated.extend([5, 6]);
+        assert_eq!(c.lane_bound_pages(&ar), 2);
+    }
+
+    #[test]
+    fn chunked_reservation_accumulates_to_target() {
+        // simulate the scheduler's reservation loop: a 4-page candidate
+        // against a 5-page budget while a live lane's bound shrinks from
+        // 4 pages to 0 — the candidate must reach its target in chunks
+        // and never let (bound + reserved) pass the budget
+        let c = ctl(5);
+        let target = 4usize;
+        let mut reserved = 0usize;
+        let mut grabs = Vec::new();
+        for live_bound in [4usize, 3, 2, 0] {
+            let grab = c.reservation_grab(live_bound, reserved, target);
+            assert!(live_bound + reserved + grab <= c.budget_pages);
+            reserved += grab;
+            grabs.push(grab);
+        }
+        assert_eq!(reserved, target);
+        assert!(grabs.len() > 2, "accumulated across several rounds: {:?}", grabs);
+        // once reserved, nothing more is grabbed
+        assert_eq!(c.reservation_grab(0, reserved, target), 0);
     }
 }

@@ -2,12 +2,16 @@
 //! `{"kind": "stats"}` server request.
 //!
 //! Counters (submissions, completions, rejections), gauges (queue depth,
-//! live KV bytes) and small fixed-memory latency reservoirs (TTFT and
-//! end-to-end, ring-buffered so a long-lived server never grows). The
-//! lanes-occupied histogram is the direct evidence of continuous
-//! batching: `lanes_hist[k]` counts decode steps that ran with exactly
-//! `k` live lanes.
+//! live KV bytes, page-pool occupancy) and small fixed-memory latency
+//! reservoirs (TTFT and end-to-end, ring-buffered so a long-lived server
+//! never grows). The lanes-occupied histogram is the direct evidence of
+//! continuous batching: `lanes_hist[k]` counts decode steps that ran
+//! with exactly `k` live lanes. The pool gauges (live/free pages,
+//! fragmentation, reuse) are the paged-arena counterpart: they show
+//! eviction turning into free pages, and free pages turning into
+//! admissions (`chunked_admits`).
 
+use crate::cache::PoolStats;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::percentile;
 
@@ -51,13 +55,41 @@ pub struct MetricsRegistry {
     /// invariant says this never exceeds `kv_budget`
     pub peak_live_kv_bytes: usize,
     pub peak_queue_depth: usize,
+    // --- paged-arena accounting -------------------------------------
+    /// total pages in the engine's shared arena
+    pub pool_pages: usize,
+    /// token slots per page
+    pub page_slots: usize,
+    /// pages held by live lanes at the most recent tick (gauge)
+    pub live_pages: usize,
+    /// most pages ever held at once — the page invariant says this never
+    /// exceeds `pool_pages`
+    pub peak_live_pages: usize,
+    /// free pages at the most recent tick (gauge)
+    pub free_pages: usize,
+    /// lifetime page allocations / frees / recycled allocations
+    pub page_allocs: u64,
+    pub page_frees: u64,
+    pub page_reuse: u64,
+    /// allocated-but-dead slots at the most recent tick (tail-page
+    /// internal fragmentation, gauge)
+    pub frag_slots: usize,
+    /// pages currently pinned by a chunked-prefill reservation (gauge)
+    pub reserved_pages: usize,
+    /// pages ever granted to chunked-prefill reservations
+    pub chunk_reserved_pages: u64,
+    /// admissions that went through the chunked-prefill path
+    pub chunked_admits: u64,
+    /// arena pages gathered into batch buffers across all decode steps —
+    /// with the incremental lane sync this grows O(dirty pages/step)
+    pub pages_copied: u64,
     lanes_hist: Vec<u64>,
     ttft_ms: Ring,
     e2e_ms: Ring,
 }
 
 impl MetricsRegistry {
-    pub fn new(batch: usize, kv_budget: usize) -> Self {
+    pub fn new(batch: usize, kv_budget: usize, pool_pages: usize, page_slots: usize) -> Self {
         MetricsRegistry {
             kv_budget,
             submitted: 0,
@@ -69,10 +101,37 @@ impl MetricsRegistry {
             live_kv_bytes: 0,
             peak_live_kv_bytes: 0,
             peak_queue_depth: 0,
+            pool_pages,
+            page_slots,
+            live_pages: 0,
+            peak_live_pages: 0,
+            free_pages: pool_pages,
+            page_allocs: 0,
+            page_frees: 0,
+            page_reuse: 0,
+            frag_slots: 0,
+            reserved_pages: 0,
+            chunk_reserved_pages: 0,
+            chunked_admits: 0,
+            pages_copied: 0,
             lanes_hist: vec![0; batch + 1],
             ttft_ms: Ring::default(),
             e2e_ms: Ring::default(),
         }
+    }
+
+    /// Fold one tick's arena snapshot into the gauges. `live_slots` is
+    /// the summed live length of the lanes (fragmentation = allocated
+    /// slots − live slots); `reserved` the chunked-prefill reservation.
+    pub fn record_pool(&mut self, pool: PoolStats, live_slots: usize, reserved: usize) {
+        self.live_pages = pool.in_use;
+        self.peak_live_pages = self.peak_live_pages.max(pool.peak_in_use);
+        self.free_pages = pool.free;
+        self.page_allocs = pool.allocs;
+        self.page_frees = pool.frees;
+        self.page_reuse = pool.reused;
+        self.frag_slots = (pool.in_use * pool.page_slots).saturating_sub(live_slots);
+        self.reserved_pages = reserved;
     }
 
     pub fn record_step(&mut self, lanes: usize, live_kv_bytes: usize) {
@@ -128,6 +187,19 @@ impl MetricsRegistry {
             ("kv_budget", num(self.kv_budget as f64)),
             ("live_kv_bytes", num(self.live_kv_bytes as f64)),
             ("peak_live_kv_bytes", num(self.peak_live_kv_bytes as f64)),
+            ("pool_pages", num(self.pool_pages as f64)),
+            ("page_slots", num(self.page_slots as f64)),
+            ("live_pages", num(self.live_pages as f64)),
+            ("peak_live_pages", num(self.peak_live_pages as f64)),
+            ("free_pages", num(self.free_pages as f64)),
+            ("page_allocs", num(self.page_allocs as f64)),
+            ("page_frees", num(self.page_frees as f64)),
+            ("page_reuse", num(self.page_reuse as f64)),
+            ("frag_slots", num(self.frag_slots as f64)),
+            ("reserved_pages", num(self.reserved_pages as f64)),
+            ("chunk_reserved_pages", num(self.chunk_reserved_pages as f64)),
+            ("chunked_admits", num(self.chunked_admits as f64)),
+            ("pages_copied", num(self.pages_copied as f64)),
             ("ttft_p50_ms", num(self.ttft_ms.p(0.5))),
             ("ttft_p95_ms", num(self.ttft_ms.p(0.95))),
             ("e2e_p50_ms", num(self.e2e_ms.p(0.5))),
@@ -142,7 +214,7 @@ mod tests {
 
     #[test]
     fn histogram_and_peaks() {
-        let mut m = MetricsRegistry::new(4, 1000);
+        let mut m = MetricsRegistry::new(4, 1000, 16, 8);
         m.record_step(1, 100);
         m.record_step(3, 700);
         m.record_step(3, 400);
@@ -153,13 +225,39 @@ mod tests {
     }
 
     #[test]
+    fn pool_gauges_track_occupancy_and_fragmentation() {
+        let mut m = MetricsRegistry::new(4, 1000, 16, 8);
+        assert_eq!(m.free_pages, 16);
+        let snap = PoolStats {
+            pages: 16,
+            page_slots: 8,
+            in_use: 5,
+            free: 11,
+            peak_in_use: 7,
+            allocs: 20,
+            frees: 15,
+            reused: 12,
+        };
+        // 5 pages × 8 slots = 40 allocated, 33 live → 7 dead slots
+        m.record_pool(snap, 33, 2);
+        assert_eq!(m.live_pages, 5);
+        assert_eq!(m.peak_live_pages, 7);
+        assert_eq!(m.free_pages, 11);
+        assert_eq!(m.frag_slots, 7);
+        assert_eq!(m.reserved_pages, 2);
+        assert_eq!(m.page_reuse, 12);
+        assert!(m.peak_live_pages <= m.pool_pages, "page invariant");
+    }
+
+    #[test]
     fn snapshot_round_trips_as_json() {
-        let mut m = MetricsRegistry::new(2, 4096);
+        let mut m = MetricsRegistry::new(2, 4096, 8, 16);
         m.submitted = 5;
         m.completed = 4;
         m.record_step(2, 2048);
         m.record_ttft(0.010);
         m.record_e2e(0.100);
+        m.chunked_admits = 1;
         let j = m.snapshot(3, 1);
         let parsed = Json::parse(&j.to_string_compact()).unwrap();
         assert_eq!(parsed.get("kind").and_then(|v| v.as_str()), Some("stats"));
@@ -169,6 +267,9 @@ mod tests {
             parsed.get("peak_live_kv_bytes").and_then(|v| v.as_usize()),
             Some(2048)
         );
+        assert_eq!(parsed.get("pool_pages").and_then(|v| v.as_usize()), Some(8));
+        assert_eq!(parsed.get("page_slots").and_then(|v| v.as_usize()), Some(16));
+        assert_eq!(parsed.get("chunked_admits").and_then(|v| v.as_usize()), Some(1));
         assert!(parsed.get("ttft_p50_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
     }
 

@@ -20,19 +20,36 @@
 //!
 //! # The admission invariant
 //!
-//! At every decode step, `Σ live slab kv_bytes ≤ kv_budget`. The
-//! controller admits a request only when the summed *future bound* of the
-//! live lanes plus the candidate's worst-case KV fits the budget (see
+//! Admission is **page-granular** over the engine's shared KV arena
+//! (cache/paged.rs): at every decode step, the pages held by live lanes
+//! never exceed the page budget — and therefore `Σ live slab kv_bytes ≤
+//! kv_budget`. The controller admits a request only when the summed
+//! *future page bound* of the live lanes plus any chunked-prefill
+//! reservation plus the candidate's worst case fits the budget (see
 //! admission.rs for the bound derivation). Because the bound is computed
-//! from live slot counts, **every slot the eviction policy reclaims is
+//! from live slot counts, **every page the eviction policy reclaims is
 //! admission headroom**: under HAE the same budget admits more concurrent
 //! requests than Full Cache, which is how the paper's 41% per-request KV
 //! reduction compounds into serving throughput
 //! (benches/perf_serve_batch.rs measures exactly this).
 //!
+//! # Chunked-prefill admission
+//!
+//! A request whose worst case exceeds the *currently free* budget is no
+//! longer head-of-line blocked until everything fits at once. The
+//! scheduler pulls it into a pending slot and accumulates page
+//! **reservations** chunk by chunk as live lanes evict and retire; freed
+//! pages go to the pending request first (so a sustained stream of small
+//! requests can never starve a large prompt), and any surplus still
+//! admits smaller requests around it. Once the reservation covers the
+//! worst case, prefill runs and the reservation converts into the lane's
+//! live bound. `fits_alone` at submit time guarantees the target is
+//! reachable, so the pending request always eventually runs.
+//!
 //! Metrics (queue depth, TTFT, lanes-occupied histogram, rejections,
-//! aggregate KV bytes) live in `metrics::MetricsRegistry` and are served
-//! by the `{"kind": "stats"}` request.
+//! aggregate KV bytes, pool occupancy/fragmentation/reuse) live in
+//! `metrics::MetricsRegistry` and are served by the `{"kind": "stats"}`
+//! request.
 
 pub mod admission;
 pub mod metrics;
@@ -98,6 +115,15 @@ struct LaneTag<T> {
     enqueued_at: Instant,
 }
 
+/// A request pulled out of the queue for chunked-prefill admission: it
+/// accumulates page reservations across ticks until `reserved` covers
+/// `target`, then prefills into the next free lane.
+struct PendingPrefill<T> {
+    job: QueuedJob<T>,
+    reserved: usize,
+    target: usize,
+}
+
 pub struct Scheduler<T> {
     cfg: SchedulerConfig,
     admission: AdmissionController,
@@ -105,6 +131,9 @@ pub struct Scheduler<T> {
     /// decode lanes, indexed to match `tags` (None = free slot)
     lanes: Vec<Option<ActiveRequest>>,
     tags: Vec<Option<LaneTag<T>>>,
+    /// at most one chunked-prefill reservation at a time (head-of-line
+    /// by admission order; freed pages top it up before anything else)
+    pending: Option<PendingPrefill<T>>,
     /// outcomes produced but not yet collected via `take_outcomes` —
     /// buffered on self so a fatal tick error cannot drop replies that
     /// backfill already finished
@@ -119,33 +148,42 @@ impl<T> Scheduler<T> {
         batch: usize,
         kv_bytes_per_token: usize,
         capacity_limit: usize,
+        page_slots: usize,
+        pool_pages: usize,
     ) -> Self {
-        let admission = AdmissionController {
-            kv_budget: cfg.kv_budget,
-            kv_bytes_per_token,
+        let admission = AdmissionController::from_bytes(
+            cfg.kv_budget,
+            pool_pages,
+            page_slots,
             capacity_limit,
-        };
+            kv_bytes_per_token,
+        );
         let queue = AdmissionQueue::new(cfg.policy, cfg.queue_depth, cfg.aging_ticks);
-        let metrics = MetricsRegistry::new(batch, cfg.kv_budget);
+        let metrics =
+            MetricsRegistry::new(batch, cfg.kv_budget, pool_pages, page_slots);
         Scheduler {
             cfg,
             admission,
             queue,
             lanes: (0..batch).map(|_| None).collect(),
             tags: (0..batch).map(|_| None).collect(),
+            pending: None,
             ready: Vec::new(),
             metrics,
             tick_no: 0,
         }
     }
 
-    /// Derive lane count and admission constants from a built engine.
+    /// Derive lane count, arena geometry and admission constants from a
+    /// built engine.
     pub fn for_engine(cfg: SchedulerConfig, engine: &Engine) -> Self {
         Self::new(
             cfg,
             engine.cfg.batch,
             engine.rt.meta().kv_bytes_per_token(),
             engine.capacity_limit(),
+            engine.page_slots(),
+            engine.pool_pages(),
         )
     }
 
@@ -157,9 +195,11 @@ impl<T> Scheduler<T> {
         self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
-    /// Anything queued or mid-flight?
+    /// Anything queued, reserving pages, or mid-flight?
     pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || self.lanes.iter().any(|l| l.is_some())
+        !self.queue.is_empty()
+            || self.pending.is_some()
+            || self.lanes.iter().any(|l| l.is_some())
     }
 
     pub fn stats_json(&self) -> Json {
@@ -187,55 +227,93 @@ impl<T> Scheduler<T> {
         }
     }
 
-    /// Summed future-KV bound of the live lanes (admission.rs math).
-    fn live_bound_bytes(&self) -> usize {
+    /// Summed future page bound of the live lanes (admission.rs math).
+    fn live_bound_pages(&self) -> usize {
         self.lanes
             .iter()
             .flatten()
-            .map(|ar| self.admission.lane_bound_bytes(ar))
+            .map(|ar| self.admission.lane_bound_pages(ar))
             .sum()
     }
 
-    /// Fill free lanes from the queue while the admission test passes.
-    /// Per-request failures become buffered `Failed` outcomes, never
-    /// errors — the serving loop must survive them.
+    /// Run prefill for an admitted job, landing it in `lane` (or straight
+    /// into the outcome buffer when it finishes at prefill, or fails).
+    fn admit_job(&mut self, engine: &mut Engine, lane: usize, job: QueuedJob<T>) {
+        let QueuedJob { tag, req, enqueued_at, .. } = job;
+        match engine.prefill(req) {
+            Ok(mut ar) => {
+                self.metrics.record_ttft(enqueued_at.elapsed().as_secs_f64());
+                if ar.done {
+                    ar.slab.release_pages();
+                    self.metrics.completed += 1;
+                    self.metrics.record_e2e(enqueued_at.elapsed().as_secs_f64());
+                    self.ready.push(SchedOutcome::Done { tag, ar: Box::new(ar) });
+                } else {
+                    self.lanes[lane] = Some(ar);
+                    self.tags[lane] = Some(LaneTag { tag, enqueued_at });
+                }
+            }
+            Err(e) => {
+                // e.g. prompt exceeds the largest prefill bucket
+                self.metrics.failed += 1;
+                self.ready.push(SchedOutcome::Failed { tag, error: e.to_string() });
+            }
+        }
+    }
+
+    /// Fill free lanes from the queue while the page-granular admission
+    /// test passes; oversized candidates accumulate chunked-prefill
+    /// reservations instead of head-of-line blocking. Per-request
+    /// failures become buffered `Failed` outcomes, never errors — the
+    /// serving loop must survive them.
     fn backfill(&mut self, engine: &mut Engine) {
+        // 1. top up the chunked-prefill reservation first: pages freed by
+        // eviction/retirement go to the oldest oversized request before
+        // anything else can claim them (starvation-freedom)
+        let live = self.live_bound_pages();
+        if let Some(p) = &mut self.pending {
+            let grab = self.admission.reservation_grab(live, p.reserved, p.target);
+            if grab > 0 {
+                p.reserved += grab;
+                self.metrics.chunk_reserved_pages += grab as u64;
+            }
+        }
+        // 2. launch the pending prefill once fully reserved and a lane is
+        // free — the reservation converts into the lane's live bound
+        if self.pending.as_ref().is_some_and(|p| p.reserved >= p.target) {
+            if let Some(free) = self.lanes.iter().position(|l| l.is_none()) {
+                let p = self.pending.take().unwrap();
+                self.metrics.chunked_admits += 1;
+                self.admit_job(engine, free, p.job);
+            }
+        }
+        // 3. regular admission against the surplus the reservation leaves
         loop {
-            let free = match self.lanes.iter().position(|l| l.is_none()) {
-                Some(i) => i,
-                None => return,
-            };
             let cand = match self.queue.select(self.tick_no) {
                 Some(i) => i,
                 None => return,
             };
-            if !self.admission.admits(self.live_bound_bytes(), &self.queue.peek(cand).req) {
-                // Head-of-line wait: the budget frees up as live lanes
-                // evict or finish, and `fits_alone` at submit time
-                // guarantees an empty system always admits — no deadlock.
+            let live = self.live_bound_pages();
+            let reserved = self.pending.as_ref().map_or(0, |p| p.reserved);
+            if !self.admission.admits(live, reserved, &self.queue.peek(cand).req) {
+                if self.pending.is_none() {
+                    // doesn't fit in one piece: start reserving for it
+                    let job = self.queue.remove(cand);
+                    let target = self.admission.worst_case_pages(&job.req);
+                    let reserved = self.admission.reservation_grab(live, 0, target);
+                    self.metrics.chunk_reserved_pages += reserved as u64;
+                    self.pending = Some(PendingPrefill { job, reserved, target });
+                    continue; // smaller jobs may still fit the surplus
+                }
+                // the pending reservation owns the freed pages — wait
                 return;
             }
+            let free = match self.lanes.iter().position(|l| l.is_none()) {
+                Some(i) => i,
+                None => return,
+            };
             let job = self.queue.remove(cand);
-            match engine.prefill(job.req) {
-                Ok(ar) => {
-                    self.metrics.record_ttft(job.enqueued_at.elapsed().as_secs_f64());
-                    if ar.done {
-                        self.metrics.completed += 1;
-                        self.metrics.record_e2e(job.enqueued_at.elapsed().as_secs_f64());
-                        self.ready.push(SchedOutcome::Done { tag: job.tag, ar: Box::new(ar) });
-                    } else {
-                        self.lanes[free] = Some(ar);
-                        self.tags[free] =
-                            Some(LaneTag { tag: job.tag, enqueued_at: job.enqueued_at });
-                    }
-                }
-                Err(e) => {
-                    // e.g. prompt exceeds the largest prefill bucket
-                    self.metrics.failed += 1;
-                    self.ready
-                        .push(SchedOutcome::Failed { tag: job.tag, error: e.to_string() });
-                }
-            }
+            self.admit_job(engine, free, job);
         }
     }
 
@@ -265,7 +343,23 @@ impl<T> Scheduler<T> {
                 self.cfg.kv_budget
             );
             self.metrics.record_step(report.lanes, live);
+            self.metrics.pages_copied += report.pages_copied as u64;
         }
+        // page accounting: arena occupancy, fragmentation, reuse. The
+        // page invariant — live pages never exceed the pool — holds by
+        // construction (alloc fails rather than overcommit) and the
+        // admission bound keeps alloc from ever failing; surface both.
+        let pool = engine.pool_stats();
+        debug_assert!(
+            pool.in_use <= pool.pages,
+            "page accounting broken: {} in use > {} pool pages",
+            pool.in_use,
+            pool.pages
+        );
+        let live_slots: usize =
+            self.lanes.iter().flatten().map(|ar| ar.slab.len()).sum();
+        let reserved = self.pending.as_ref().map_or(0, |p| p.reserved);
+        self.metrics.record_pool(pool, live_slots, reserved);
         for (idx, ar) in done {
             let lt = self.tags[idx].take().expect("finished lane carries a tag");
             self.metrics.completed += 1;
@@ -280,10 +374,13 @@ impl<T> Scheduler<T> {
         std::mem::take(&mut self.ready)
     }
 
-    /// Abandon everything queued or mid-flight, returning the tags so the
-    /// caller can notify clients (shutdown path).
+    /// Abandon everything queued, reserving, or mid-flight, returning the
+    /// tags so the caller can notify clients (shutdown path).
     pub fn drain_tags(&mut self) -> Vec<T> {
         let mut tags: Vec<T> = self.queue.drain().into_iter().map(|j| j.tag).collect();
+        if let Some(p) = self.pending.take() {
+            tags.push(p.job.tag);
+        }
         for (lane, tag) in self.lanes.iter_mut().zip(self.tags.iter_mut()) {
             *lane = None;
             if let Some(lt) = tag.take() {
@@ -335,7 +432,8 @@ mod tests {
             queue_depth,
             ..SchedulerConfig::default()
         };
-        Scheduler::new(cfg, 4, 64, 100)
+        // 1-slot pages keep this test's arithmetic in whole slots
+        Scheduler::new(cfg, 4, 64, 100, 1, 1024)
     }
 
     #[test]

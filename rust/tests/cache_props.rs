@@ -2,7 +2,7 @@
 //! (DESIGN.md §6 invariants). No PJRT required.
 
 use hae_serve::cache::policy::{DecodeCtx, EvictionPolicy, PrefillCtx};
-use hae_serve::cache::{KvSlab, Modality, PolicyKind};
+use hae_serve::cache::{KvSlab, Modality, PagePool, PolicyKind, SlotMeta};
 use hae_serve::model::ModelMeta;
 use hae_serve::util::prop::{gen_modality, run_prop, PropConfig};
 use hae_serve::util::rng::Rng;
@@ -72,6 +72,248 @@ fn prop_slab_integrity_under_random_evictions() {
         for w in slab.meta().windows(2) {
             assert!(w[0].position < w[1].position);
         }
+    });
+}
+
+/// Reference contiguous slab: the dumbest possible model of the KvSlab
+/// contract — one owned `[L, H, Dh]` row per live token, compacted by
+/// rebuilding the vector. The paged arena must be indistinguishable
+/// from it.
+struct RefSlab {
+    /// (k_row, v_row) per live token, each `[L * H * Dh]` layer-major
+    rows: Vec<(Vec<f32>, Vec<f32>)>,
+    meta: Vec<SlotMeta>,
+}
+
+impl RefSlab {
+    fn new() -> Self {
+        RefSlab { rows: Vec::new(), meta: Vec::new() }
+    }
+
+    fn append(&mut self, k: &[f32], v: &[f32], position: i32, modality: Modality, s: f32) {
+        self.rows.push((k.to_vec(), v.to_vec()));
+        self.meta.push(SlotMeta {
+            position,
+            modality,
+            cum_score: s,
+            cum_peak: s,
+            last_score: s,
+            marked: false,
+            age: 0,
+        });
+    }
+
+    fn add_scores(&mut self, mean: &[f32], peak: &[f32]) {
+        for (i, m) in self.meta.iter_mut().enumerate() {
+            m.cum_score += mean[i];
+            m.cum_peak += peak[i];
+            m.last_score = mean[i];
+            m.age += 1;
+        }
+    }
+
+    fn evict(&mut self, evict: &[usize]) {
+        let mut drop_mask = vec![false; self.meta.len()];
+        for &i in evict {
+            if i < drop_mask.len() {
+                drop_mask[i] = true;
+            }
+        }
+        let keep = |i: &usize| !drop_mask[*i];
+        let idx: Vec<usize> = (0..self.meta.len()).filter(keep).collect();
+        self.rows = idx.iter().map(|&i| self.rows[i].clone()).collect();
+        self.meta = idx.iter().map(|&i| self.meta[i]).collect();
+    }
+
+    /// Lane-0 batch buffer `[L, C, H, Dh]` with the live region filled.
+    fn gather(&self, n_layers: usize, row: usize, cap_c: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = vec![0.0f32; n_layers * cap_c * row];
+        let mut v = k.clone();
+        for (s, (kr, vr)) in self.rows.iter().enumerate() {
+            for l in 0..n_layers {
+                let dst = (l * cap_c + s) * row;
+                k[dst..dst + row].copy_from_slice(&kr[l * row..(l + 1) * row]);
+                v[dst..dst + row].copy_from_slice(&vr[l * row..(l + 1) * row]);
+            }
+        }
+        (k, v)
+    }
+}
+
+fn assert_meta_eq(a: &SlotMeta, b: &SlotMeta, what: &str) {
+    assert_eq!(a.position, b.position, "{}: position", what);
+    assert_eq!(a.modality, b.modality, "{}: modality", what);
+    assert_eq!(a.marked, b.marked, "{}: marked", what);
+    assert_eq!(a.age, b.age, "{}: age", what);
+    assert!((a.cum_score - b.cum_score).abs() < 1e-5, "{}: cum_score", what);
+    assert!((a.cum_peak - b.cum_peak).abs() < 1e-5, "{}: cum_peak", what);
+    assert!((a.last_score - b.last_score).abs() < 1e-5, "{}: last_score", what);
+}
+
+/// The paged slab and the contiguous reference produce byte-identical
+/// lane buffers and identical metadata under randomized
+/// append/evict/score/sync sequences — including mid-sequence lane syncs
+/// at varying capacities, so the dirty-page incremental gather is
+/// exercised against stale scratch content.
+#[test]
+fn prop_paged_slab_matches_contiguous_reference() {
+    let m = tiny_meta();
+    let row = m.n_heads * m.d_head;
+    let token_row = m.n_layers * row;
+    run_prop("paged-vs-reference", PropConfig { cases: 64, seed: 11 }, |rng, _| {
+        let cap = 24 + rng.below(16);
+        // 4-slot pages force frequent page-boundary crossings
+        let pool = PagePool::new_shared(m.n_layers, row, (cap / 4) + 2, 4);
+        let mut paged = KvSlab::in_pool(&pool, cap);
+        let mut reference = RefSlab::new();
+        // persistent scratch, as the engine keeps it across steps
+        let caps = [cap, cap + 8];
+        let mut dst_k = vec![0.0f32; m.n_layers * (cap + 8) * row];
+        let mut dst_v = dst_k.clone();
+        let mut pos = 0i32;
+        for _ in 0..60 {
+            match rng.below(5) {
+                // append (biased: two arms)
+                0 | 1 => {
+                    if paged.len() < cap {
+                        let k: Vec<f32> = (0..token_row).map(|_| rng.f32()).collect();
+                        let v: Vec<f32> = (0..token_row).map(|_| rng.f32()).collect();
+                        let md =
+                            if rng.bool(0.3) { Modality::Vision } else { Modality::Text };
+                        let s = rng.f32();
+                        paged.append(&k, &v, pos, md, s);
+                        reference.append(&k, &v, pos, md, s);
+                        pos += 1;
+                    }
+                }
+                // evict a random subset
+                2 => {
+                    if paged.len() > 1 {
+                        let k = rng.below(paged.len().min(6));
+                        let victims = rng.choose_k(paged.len(), k);
+                        paged.evict(&victims);
+                        reference.evict(&victims);
+                    }
+                }
+                // score accumulation + random marking
+                3 => {
+                    let n = paged.len();
+                    let mean: Vec<f32> = (0..n).map(|_| rng.f32() * 0.1).collect();
+                    let peak: Vec<f32> = (0..n).map(|_| rng.f32() * 0.1).collect();
+                    paged.add_scores(&mean, &peak);
+                    reference.add_scores(&mean, &peak);
+                    if n > 0 && rng.bool(0.3) {
+                        let s = rng.below(n);
+                        paged.meta_mut()[s].marked = true;
+                        reference.meta[s].marked = true;
+                    }
+                }
+                // mid-sequence lane sync at a random capacity (primes the
+                // incremental path; correctness is checked at the end)
+                _ => {
+                    let c = caps[rng.below(2)];
+                    paged.copy_into_lane(&mut dst_k, &mut dst_v, 0, c);
+                }
+            }
+        }
+        // final sync + compare the live region of every layer
+        let c = caps[rng.below(2)];
+        paged.copy_into_lane(&mut dst_k, &mut dst_v, 0, c);
+        let (ref_k, ref_v) = reference.gather(m.n_layers, row, c);
+        let len = paged.len();
+        assert_eq!(len, reference.meta.len());
+        for l in 0..m.n_layers {
+            let o = l * c * row;
+            let n = len * row;
+            assert_eq!(
+                &dst_k[o..o + n],
+                &ref_k[o..o + n],
+                "layer {} K live region", l
+            );
+            assert_eq!(
+                &dst_v[o..o + n],
+                &ref_v[o..o + n],
+                "layer {} V live region", l
+            );
+        }
+        for (i, (a, b)) in paged.meta().iter().zip(reference.meta.iter()).enumerate() {
+            assert_meta_eq(a, b, &format!("slot {}", i));
+        }
+    });
+}
+
+/// Page-leak invariant over full request lifecycles: at every point,
+/// `allocated − freed == live pages == Σ slab page tables`, and a fully
+/// drained pool is back to zero pages in use.
+#[test]
+fn prop_page_pool_never_leaks_across_lifecycles() {
+    let m = tiny_meta();
+    let row = m.n_heads * m.d_head;
+    let token_row = m.n_layers * row;
+    run_prop("page-leak", PropConfig { cases: 48, seed: 13 }, |rng, _| {
+        let pool = PagePool::new_shared(m.n_layers, row, 64, 4);
+        let mut live: Vec<KvSlab> = Vec::new();
+        let check = |pool: &hae_serve::cache::SharedPagePool, live: &[KvSlab]| {
+            let p = pool.borrow();
+            let s = p.stats();
+            let held: usize = live.iter().map(|sl| sl.allocated_pages()).sum();
+            assert_eq!(s.in_use, held, "pool in_use == Σ live page tables");
+            assert_eq!(
+                s.allocs - s.frees,
+                s.in_use as u64,
+                "allocated − freed == live pages"
+            );
+        };
+        for _ in 0..40 {
+            match rng.below(4) {
+                // birth: admit a new request
+                0 => {
+                    if live.len() < 4 {
+                        live.push(KvSlab::in_pool(&pool, 48));
+                    }
+                }
+                // growth: decode appends
+                1 => {
+                    if let Some(sl) = live.last_mut() {
+                        let budget = pool.borrow().free_pages() * 4;
+                        let n = rng.below(6).min(budget);
+                        for _ in 0..n {
+                            if sl.len() < sl.capacity() {
+                                let k: Vec<f32> =
+                                    (0..token_row).map(|_| rng.f32()).collect();
+                                sl.append(&k, &k, sl.len() as i32, Modality::Text, 0.0);
+                            }
+                        }
+                    }
+                }
+                // eviction
+                2 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        let n = live[i].len();
+                        if n > 0 {
+                            let victims = rng.choose_k(n, rng.below(n.min(8)));
+                            live[i].evict(&victims);
+                        }
+                    }
+                }
+                // death: retire (release) or abandon (drop)
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        let mut sl = live.remove(i);
+                        if rng.bool(0.5) {
+                            sl.release_pages();
+                            assert_eq!(sl.allocated_pages(), 0);
+                        }
+                        drop(sl);
+                    }
+                }
+            }
+            check(&pool, &live);
+        }
+        live.clear();
+        assert_eq!(pool.borrow().in_use_pages(), 0, "drained pool holds nothing");
     });
 }
 

@@ -3,13 +3,17 @@
 //! are actually shared, and the KV-budget admission invariant holds.
 //! Skipped when artifacts are absent.
 
-use hae_serve::cache::PolicyKind;
-use hae_serve::harness::{artifact_dir, spawn_server, wait_listening, widest_batch};
+use hae_serve::cache::{PolicyKind, DEFAULT_PAGE_SLOTS};
+use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::harness::{
+    artifact_dir, load_grammar, spawn_server, wait_listening, widest_batch,
+};
 use hae_serve::model::Manifest;
 use hae_serve::runtime::Runtime;
-use hae_serve::scheduler::SchedPolicy;
+use hae_serve::scheduler::{SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig};
 use hae_serve::server::client_request;
 use hae_serve::util::json::Json;
+use hae_serve::workload::{Request, RequestBuilder};
 
 fn artifacts_present() -> bool {
     if Runtime::load(&artifact_dir()).is_err() {
@@ -106,6 +110,119 @@ fn concurrent_clients_share_lanes_under_budget() {
         peak,
         budget
     );
+}
+
+/// Chunked-prefill admission: a request whose worst case exceeds the
+/// free page budget at arrival is not rejected and not starved — it
+/// accumulates page reservations as the live lane evicts and retires,
+/// prefills once covered, and completes. The page-accounting invariant
+/// (live pages ≤ pool capacity) and the byte-budget invariant hold at
+/// every step.
+#[test]
+fn chunked_prefill_admits_oversized_prompt_incrementally() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&artifact_dir()).unwrap();
+    let batch = widest_batch();
+    if batch < 2 {
+        eprintln!("skipping: needs a compiled decode batch ≥ 2");
+        return;
+    }
+    let meta = manifest.model.clone();
+    let grammar = load_grammar(&artifact_dir());
+    let mut b = RequestBuilder::new(&meta, &grammar, 77);
+    let mut req_a = b.story(3, 12, 60);
+    req_a.min_new_tokens = 40;
+    let mut req_b = b.story(3, 12, 60);
+    req_b.min_new_tokens = 40;
+
+    // budget: the bigger request fits alone with one page to spare, so
+    // while A is live, B's worst case can never fit in one piece
+    let ps = DEFAULT_PAGE_SLOTS;
+    let cap_limit = manifest.shapes.cache_capacity - 1;
+    let worst_pages = |r: &Request| {
+        (r.prompt_len() + r.max_new_tokens).min(cap_limit).div_ceil(ps)
+    };
+    let budget_pages = worst_pages(&req_a).max(worst_pages(&req_b)) + 1;
+    let budget = budget_pages * ps * meta.kv_bytes_per_token();
+    assert!(worst_pages(&req_a) + worst_pages(&req_b) > budget_pages);
+
+    let rt = Runtime::load(&artifact_dir()).unwrap();
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            batch,
+            kv_budget: Some(budget),
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let sched_cfg = SchedulerConfig { kv_budget: budget, ..SchedulerConfig::default() };
+    let mut sched: Scheduler<u32> = Scheduler::for_engine(sched_cfg, &engine);
+
+    // with A admitted, the unreserved budget is exactly the one spare
+    // page — smaller than even B's prompt, let alone its worst case
+    let b_target_pages = worst_pages(&req_b);
+    assert!(req_b.prompt_len().div_ceil(ps) > 1, "B's prompt exceeds the spare page");
+    sched.submit(1, req_a).expect("A fits alone");
+    sched.submit(2, req_b).expect("B fits alone (but not beside A)");
+
+    let pool_pages = engine.pool_pages();
+    let mut done_tags = Vec::new();
+    let mut saw_partial_reservation = false;
+    for _ in 0..5000 {
+        if !sched.has_work() {
+            break;
+        }
+        sched.tick(&mut engine).unwrap();
+        // B holds a partial reservation: admitted chunk-by-chunk, not in
+        // one piece
+        if sched.metrics.reserved_pages > 0
+            && sched.metrics.reserved_pages < b_target_pages
+        {
+            saw_partial_reservation = true;
+        }
+        // page-accounting invariant, every step
+        let pool = engine.pool_stats();
+        assert!(
+            pool.in_use <= pool_pages,
+            "live pages {} > pool {}",
+            pool.in_use,
+            pool_pages
+        );
+        // byte-budget invariant, every step
+        assert!(
+            sched.metrics.peak_live_kv_bytes <= budget,
+            "peak {} > budget {}",
+            sched.metrics.peak_live_kv_bytes,
+            budget
+        );
+        for outcome in sched.take_outcomes() {
+            match outcome {
+                SchedOutcome::Done { tag, ar } => {
+                    assert!(!ar.generated.is_empty());
+                    done_tags.push(tag);
+                }
+                SchedOutcome::Failed { tag, error } => {
+                    panic!("request {} failed: {}", tag, error);
+                }
+            }
+        }
+    }
+    assert!(
+        saw_partial_reservation,
+        "B never held a partial reservation — it was admitted in one piece"
+    );
+    done_tags.sort_unstable();
+    assert_eq!(done_tags, vec![1, 2], "both requests completed");
+    assert!(
+        sched.metrics.chunked_admits >= 1,
+        "B must have been admitted through the chunked-prefill path"
+    );
+    assert!(sched.metrics.chunk_reserved_pages >= b_target_pages as u64);
+    assert_eq!(engine.pool_stats().in_use, 0, "drained arena holds no pages");
 }
 
 #[test]
