@@ -1,0 +1,264 @@
+//! §Perf — radix-tree prefix cache: cold vs warm prefill on the
+//! shared-image multi-question QA workload (many questions, one image).
+//!
+//! Two sections:
+//!
+//! 1. **Runtime-free primitives** (always run): key hashing + trie
+//!    lookup throughput, and the CoW adopt/fork costs against a
+//!    synthetic arena — the host-side budget of a warm admission.
+//! 2. **Cold vs warm engine table** (needs artifacts): N images × 8
+//!    questions each, prefix cache off vs on. Asserts the acceptance
+//!    criteria: warm `generate` outputs are byte-identical to the cold
+//!    path, and ≥ 50% of prefill tokens are skipped at 8 questions per
+//!    image (2 distinct question prompts → 6 of 8 admissions are warm).
+
+use std::time::Instant;
+
+use hae_serve::cache::{KvSlab, Modality, PagePool, PolicyKind};
+use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::harness::{artifact_dir, bench_n, f2, load_grammar, load_runtime, Table};
+use hae_serve::model::ModelMeta;
+use hae_serve::prefix::{request_fingerprint, request_key, PrefixCache, PrefixStats};
+use hae_serve::runtime::Runtime;
+use hae_serve::workload::{Request, RequestBuilder, StoryGrammar};
+
+fn tiny_meta() -> ModelMeta {
+    ModelMeta {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_head: 32,
+        d_mlp: 256,
+        patch_dim: 32,
+        n_patches: 16,
+        max_pos: 640,
+        dap_layer: 1,
+    }
+}
+
+/// Key hashing + trie lookup throughput over the shared-image workload.
+fn primitives(table: &mut Table, iters: usize) {
+    let m = tiny_meta();
+    let g = StoryGrammar::uniform();
+    let mut b = RequestBuilder::new(&m, &g, 3);
+    // 8 distinct images × 2 questions each: 16 entries in the trie
+    let reqs: Vec<_> = (0..8).flat_map(|i| b.shared_image_qa(100 + i, 2)).collect();
+
+    let t0 = Instant::now();
+    let mut keys = Vec::new();
+    for _ in 0..iters {
+        keys.clear();
+        keys.extend(reqs.iter().map(request_key));
+    }
+    let key_us = t0.elapsed().as_secs_f64() * 1e6 / (iters * reqs.len()) as f64;
+    table.row(vec![
+        "request_key (18-token prompt)".into(),
+        format!("{}", iters * reqs.len()),
+        f2(key_us),
+        "-".into(),
+    ]);
+
+    // populate a cache over a synthetic arena, then measure warm lookups
+    let row = m.n_heads * m.d_head;
+    let mut pool = PagePool::new(m.n_layers, row, 256, 16);
+    let mut cache = PrefixCache::new(64);
+    let fps: Vec<u64> = reqs.iter().map(request_fingerprint).collect();
+    for (k, &fp) in keys.iter().zip(&fps) {
+        let pages = vec![pool.alloc().unwrap()];
+        let meta = vec![
+            hae_serve::cache::SlotMeta {
+                position: 0,
+                modality: Modality::Vision,
+                cum_score: 0.0,
+                cum_peak: 0.0,
+                last_score: 0.0,
+                marked: false,
+                age: 0,
+            };
+            12
+        ];
+        cache.register(&mut pool, k.clone(), fp, pages, meta, 18, vec![0.0; m.vocab]);
+    }
+    let t0 = Instant::now();
+    let mut hits = 0usize;
+    for _ in 0..iters {
+        for (k, &fp) in keys.iter().zip(&fps) {
+            if cache.lookup(k, fp).is_some() {
+                hits += 1;
+            }
+        }
+    }
+    let lk_us = t0.elapsed().as_secs_f64() * 1e6 / (iters * keys.len()) as f64;
+    assert_eq!(hits, iters * keys.len(), "every key registered must hit");
+    table.row(vec![
+        "trie lookup + snapshot (16 entries)".into(),
+        format!("{}", hits),
+        f2(lk_us),
+        "-".into(),
+    ]);
+}
+
+/// CoW adopt vs fork cost against a synthetic arena.
+fn cow_costs(table: &mut Table, iters: usize) {
+    let m = tiny_meta();
+    let row = m.n_heads * m.d_head;
+    let pool = PagePool::new_shared(m.n_layers, row, 512, 16);
+    let token_row = vec![0.5f32; m.n_layers * row];
+    let mut donor = KvSlab::in_pool(&pool, 64);
+    for i in 0..48 {
+        donor.append(&token_row, &token_row, i, Modality::Vision, 0.0);
+    }
+    let pages = donor.mark_all_shared();
+    {
+        let mut p = pool.borrow_mut();
+        for &pg in &pages {
+            p.retain_page(pg);
+        }
+    }
+    let meta = donor.meta().to_vec();
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut s = KvSlab::in_pool(&pool, 64);
+        assert!(s.adopt_shared(&pages, meta.clone()));
+    }
+    let adopt_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    table.row(vec![
+        "adopt 3-page prefix (zero copy)".into(),
+        format!("{}", iters),
+        f2(adopt_us),
+        "0".into(),
+    ]);
+
+    let forks0 = pool.borrow().stats().forks;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut s = KvSlab::in_pool(&pool, 64);
+        assert!(s.adopt_shared(&pages, meta.clone()));
+        // first write inside the shared prefix forks the written page(s)
+        s.evict(&[40]);
+    }
+    let fork_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    let forked = pool.borrow().stats().forks - forks0;
+    table.row(vec![
+        "adopt + diverge (CoW fork)".into(),
+        format!("{}", iters),
+        f2(fork_us),
+        f2(forked as f64 / iters.max(1) as f64),
+    ]);
+}
+
+/// Generate every request serially on a fresh engine; returns
+/// (wall, Σ prefill_s, token streams, prefix stats).
+fn run_mode(
+    rt: Runtime,
+    prefix_cache: bool,
+    requests: &[Request],
+) -> anyhow::Result<(f64, f64, Vec<Vec<i32>>, PrefixStats)> {
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            prefix_cache,
+            ..EngineConfig::default()
+        },
+    )?;
+    engine.rt.warmup(&[1])?;
+    let t0 = Instant::now();
+    let mut outputs = Vec::new();
+    let mut prefill_s = 0.0f64;
+    for r in requests {
+        let ar = engine.generate(r.clone())?;
+        prefill_s += ar.stats.prefill_s;
+        outputs.push(ar.generated.clone());
+    }
+    Ok((t0.elapsed().as_secs_f64(), prefill_s, outputs, engine.prefix_stats()))
+}
+
+/// Cold vs warm serving table + the acceptance assertions.
+fn engine_table(n_images: usize) -> anyhow::Result<()> {
+    let rt = match load_runtime() {
+        Ok(rt) => rt,
+        Err(_) => {
+            eprintln!(
+                "artifacts not built (run `make artifacts`) — skipping the\n\
+                 cold-vs-warm engine section"
+            );
+            return Ok(());
+        }
+    };
+    let grammar = load_grammar(&artifact_dir());
+    let meta = rt.meta().clone();
+    let questions_per_image = 8usize;
+    let mut b = RequestBuilder::new(&meta, &grammar, 9);
+    let requests: Vec<_> = (0..n_images)
+        .flat_map(|i| b.shared_image_qa(1000 + i as u64, questions_per_image))
+        .collect();
+    let total_prompt_tokens: usize = requests.iter().map(|r| r.prompt_len()).sum();
+
+    let (cold_wall, cold_prefill, cold_out, _) = run_mode(rt, false, &requests)?;
+    let (warm_wall, warm_prefill, warm_out, ps) =
+        run_mode(load_runtime()?, true, &requests)?;
+
+    // acceptance: byte-identical outputs, ≥50% prefill tokens skipped
+    assert_eq!(cold_out.len(), warm_out.len());
+    for (i, (c, w)) in cold_out.iter().zip(&warm_out).enumerate() {
+        assert_eq!(c, w, "request {} diverged between cold and warm", i);
+    }
+    let skipped_frac = ps.prefill_tokens_skipped as f64 / total_prompt_tokens as f64;
+    assert!(
+        skipped_frac >= 0.5,
+        "prefill tokens skipped {:.1}% < 50% at {} questions/image",
+        skipped_frac * 100.0,
+        questions_per_image
+    );
+
+    let mut table = Table::new(
+        &format!(
+            "cold vs warm: {} images × {} questions (outputs byte-identical)",
+            n_images, questions_per_image
+        ),
+        &["mode", "wall s", "prefill s", "hits", "hit rate",
+          "prefill tok skipped", "pages pinned"],
+    );
+    table.row(vec![
+        "prefix cache off".into(),
+        f2(cold_wall),
+        f2(cold_prefill),
+        "0".into(),
+        "-".into(),
+        "0".into(),
+        "0".into(),
+    ]);
+    table.row(vec![
+        "prefix cache on".into(),
+        f2(warm_wall),
+        f2(warm_prefill),
+        format!("{}", ps.hits),
+        format!("{:.0}%", 100.0 * ps.hits as f64 / (ps.hits + ps.misses) as f64),
+        format!("{} ({:.0}%)", ps.prefill_tokens_skipped, skipped_frac * 100.0),
+        format!("{}", ps.pinned_pages),
+    ]);
+    table.print();
+    println!(
+        "\n(per distinct image the DAP decision and visual-prefix KV are\n\
+         computed once; the other {} of {} admissions adopt the pinned\n\
+         pages copy-on-write and skip prefill entirely)",
+        ps.hits,
+        requests.len()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let iters = bench_n(200);
+    let mut table = Table::new(
+        &format!("prefix-cache primitives, {} iterations", iters),
+        &["primitive", "ops", "µs/op", "pages forked/op"],
+    );
+    primitives(&mut table, iters);
+    cow_costs(&mut table, iters);
+    table.print();
+    engine_table(3)
+}

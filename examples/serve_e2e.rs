@@ -32,6 +32,7 @@ fn main() -> Result<()> {
         batch,
         None,
         SchedPolicy::Priority,
+        true,
     );
     assert!(wait_listening(ADDR), "server came up");
 

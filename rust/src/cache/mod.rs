@@ -74,9 +74,23 @@ impl Default for HaeParams {
     }
 }
 
+/// Accepted policy names — parse-failure messages list these instead of
+/// a bare rejection (CLI and any JSON error reply that carries them).
+pub const POLICY_NAMES: &str =
+    "full, hae, h2o, snapkv, adakv, mustdrop, fastv, sparsevlm, tome, window, random";
+
 impl PolicyKind {
     pub fn hae_default() -> Self {
         PolicyKind::Hae(HaeParams::default())
+    }
+
+    /// Whether warm prefix-cache hits preserve this policy's cold-path
+    /// behaviour byte-for-byte. A hit skips `EvictionPolicy::prefill`,
+    /// so any policy that consumes internal state there would desync:
+    /// `random` draws from its seeded RNG at prefill, so the engine
+    /// keeps the prefix cache off for it.
+    pub fn prefix_safe(&self) -> bool {
+        !matches!(self, PolicyKind::Random { .. })
     }
 
     /// Parse a policy spec string, e.g. `hae`, `hae:r=0.002,rc=64`,
@@ -106,7 +120,12 @@ impl PolicyKind {
             "fastv" | "sparsevlm" | "tome" => &["ratio"],
             "window" => &["sinks", "window"],
             "random" => &["budget", "seed"],
-            other => return Err(format!("unknown policy '{}'", other)),
+            other => {
+                return Err(format!(
+                    "unknown policy '{}' (accepted: {})",
+                    other, POLICY_NAMES
+                ))
+            }
         };
         if let Some(bad) = kv.keys().find(|k| !accepted.contains(&k.as_str())) {
             return Err(format!(
@@ -195,7 +214,12 @@ impl PolicyKind {
                 budget: opt_u("budget")?,
                 seed: u("seed", 17)? as u64,
             },
-            other => return Err(format!("unknown policy '{}'", other)),
+            other => {
+                return Err(format!(
+                    "unknown policy '{}' (accepted: {})",
+                    other, POLICY_NAMES
+                ))
+            }
         })
     }
 
@@ -290,6 +314,25 @@ mod tests {
         }
         assert!(PolicyKind::parse("bogus").is_err());
         assert!(PolicyKind::parse("hae:r0.002").is_err());
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_accepted_names() {
+        let err = PolicyKind::parse("bogus").unwrap_err();
+        assert!(err.contains("bogus"), "names the bad policy: {}", err);
+        assert!(err.contains("hae") && err.contains("snapkv"), "lists accepted: {}", err);
+        let err = PolicyKind::parse("bogus:budget=4").unwrap_err();
+        assert!(err.contains("accepted"), "{}", err);
+    }
+
+    #[test]
+    fn prefix_safety_gates_stateful_prefill() {
+        for spec in ["full", "hae", "h2o", "snapkv", "adakv", "mustdrop", "fastv",
+                     "sparsevlm", "tome", "window"] {
+            assert!(PolicyKind::parse(spec).unwrap().prefix_safe(), "{}", spec);
+        }
+        // random consumes its RNG at prefill: a warm hit would desync it
+        assert!(!PolicyKind::parse("random").unwrap().prefix_safe());
     }
 
     #[test]

@@ -14,8 +14,9 @@
 //! so a lane gather copies whole `page_slots * row` spans per layer.
 //!
 //! Allocation is a LIFO free list over recycled pages plus a fresh-page
-//! high-water mark; pages carry refcounts so future copy-on-write prefix
-//! sharing can pin a page under several tables. The pool never grows:
+//! high-water mark; pages carry refcounts so the copy-on-write prefix
+//! sharing layer (prefix/cow.rs, prefix/mod.rs) can pin a page under
+//! several tables at once. The pool never grows:
 //! `alloc` returns `None` at capacity and the scheduler's page-granular
 //! admission (scheduler/admission.rs) guarantees that is never hit in
 //! serving.
@@ -52,6 +53,14 @@ pub struct PoolStats {
     /// the page-reuse counter: high reuse under churn is the arena
     /// doing its job
     pub reused: u64,
+    /// copy-on-write forks: a shared page cloned so one table could
+    /// diverge from the prefix cache / its co-sharers
+    pub forks: u64,
+    /// refcount protocol violations caught and refused (double release,
+    /// retain of a dead page). Always 0 in a healthy system; nonzero
+    /// means a caller bug that would previously have corrupted the free
+    /// list silently in release builds
+    pub refcount_errors: u64,
 }
 
 #[derive(Debug)]
@@ -71,6 +80,8 @@ pub struct PagePool {
     allocs: u64,
     frees: u64,
     reused: u64,
+    forks: u64,
+    refcount_errors: u64,
     peak_in_use: usize,
 }
 
@@ -97,6 +108,8 @@ impl PagePool {
             allocs: 0,
             frees: 0,
             reused: 0,
+            forks: 0,
+            refcount_errors: 0,
             peak_in_use: 0,
         }
     }
@@ -149,6 +162,8 @@ impl PagePool {
             allocs: self.allocs,
             frees: self.frees,
             reused: self.reused,
+            forks: self.forks,
+            refcount_errors: self.refcount_errors,
         }
     }
 
@@ -174,20 +189,83 @@ impl PagePool {
     }
 
     /// Pin a page under one more table (copy-on-write prefix sharing).
-    pub fn retain_page(&mut self, page: u32) {
-        debug_assert!(self.refcount[page as usize] > 0, "retain of a dead page");
+    ///
+    /// Retaining a dead page is a caller bug: it would hand out an alias
+    /// to a page the allocator is free to recycle. The violation used to
+    /// be a `debug_assert` — invisible in release builds. It is now a
+    /// real error in every build: the retain is refused (`false`) and
+    /// counted in `PoolStats::refcount_errors` instead of silently
+    /// corrupting the free list.
+    pub fn retain_page(&mut self, page: u32) -> bool {
+        if self.refcount[page as usize] == 0 {
+            self.refcount_errors += 1;
+            return false;
+        }
         self.refcount[page as usize] += 1;
+        true
     }
 
     /// Drop one reference; the page returns to the free list at zero.
-    pub fn release(&mut self, page: u32) {
+    ///
+    /// A double release used to be a `debug_assert` only: in release
+    /// builds the underflowing decrement pushed the page onto the free
+    /// list a second time, and two later `alloc`s would hand the same
+    /// page to two owners. Now the violation is a real error in every
+    /// build — refused (`false`) and counted in
+    /// `PoolStats::refcount_errors`.
+    pub fn release(&mut self, page: u32) -> bool {
         let rc = &mut self.refcount[page as usize];
-        debug_assert!(*rc > 0, "release of a dead page");
+        if *rc == 0 {
+            self.refcount_errors += 1;
+            return false;
+        }
         *rc -= 1;
         if *rc == 0 {
             self.free.push(page);
             self.frees += 1;
         }
+        true
+    }
+
+    /// Current reference count of a page (copy-on-write probes: a
+    /// "shared" page whose count has dropped back to 1 — e.g. the prefix
+    /// cache evicted its entry — can be privatized without a copy).
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    /// Retain every page in `pages`, or none: a refused retain rolls
+    /// back the prefix already taken. The all-or-nothing primitive both
+    /// the prefix cache (entry registration) and CoW page tables
+    /// (adoption) build on.
+    pub fn retain_all(&mut self, pages: &[u32]) -> bool {
+        for (i, &p) in pages.iter().enumerate() {
+            if !self.retain_page(p) {
+                for &q in &pages[..i] {
+                    self.release(q);
+                }
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Copy-on-write fork: allocate a fresh page and copy `src`'s full
+    /// content (every layer run) into it. `None` when the arena is full —
+    /// callers evict prefix-cache entries and retry before treating this
+    /// as fatal. The fork itself does not touch `src`'s refcount; the
+    /// caller swaps its table entry and releases its own reference.
+    pub fn fork_page(&mut self, src: u32) -> Option<u32> {
+        let dst = self.alloc()?;
+        let span = self.page_slots * self.row;
+        for l in 0..self.n_layers {
+            let s = self.run_offset(src, l);
+            let d = self.run_offset(dst, l);
+            self.k.copy_within(s..s + span, d);
+            self.v.copy_within(s..s + span, d);
+        }
+        self.forks += 1;
+        Some(dst)
     }
 
     #[inline]
@@ -338,6 +416,62 @@ mod tests {
         p.copy_slot((a, 7), (b, 0));
         assert_eq!(p.read_row(b, 0, 0, false), vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(p.read_row(b, 0, 1, true), vec![5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn double_release_is_refused_and_counted() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        assert!(p.release(a));
+        // the page is on the free list exactly once; a second release
+        // must not push it again (the old silent free-list corruption)
+        assert!(!p.release(a));
+        assert_eq!(p.stats().refcount_errors, 1);
+        assert_eq!(p.stats().frees, 1);
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        assert_ne!(b, c, "no aliased handout after a refused double release");
+    }
+
+    #[test]
+    fn retain_of_dead_page_is_refused_and_counted() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.release(a);
+        assert!(!p.retain_page(a));
+        assert_eq!(p.stats().refcount_errors, 1);
+        // the refused retain granted no reference: a release would be a
+        // second error, and the page stays allocatable
+        assert!(!p.release(a));
+        assert_eq!(p.stats().refcount_errors, 2);
+        assert_eq!(p.alloc(), Some(a));
+    }
+
+    #[test]
+    fn fork_page_copies_content_into_a_fresh_page() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let k: Vec<f32> = (0..8).map(|x| x as f32 + 1.0).collect();
+        let v: Vec<f32> = (0..8).map(|x| -(x as f32) - 1.0).collect();
+        p.write_slot(a, 2, &k, &v);
+        let b = p.fork_page(a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.refcount(a), 1, "fork leaves the source refcount alone");
+        assert_eq!(p.refcount(b), 1);
+        assert_eq!(p.read_row(b, 2, 0, false), p.read_row(a, 2, 0, false));
+        assert_eq!(p.read_row(b, 2, 1, true), p.read_row(a, 2, 1, true));
+        // diverging the fork never touches the source
+        p.write_slot(b, 2, &v, &k);
+        assert_eq!(p.read_row(a, 2, 0, false), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.stats().forks, 1);
+    }
+
+    #[test]
+    fn fork_page_returns_none_at_capacity() {
+        let mut p = pool();
+        let pages: Vec<u32> = (0..4).map(|_| p.alloc().unwrap()).collect();
+        assert!(p.fork_page(pages[0]).is_none());
+        assert_eq!(p.stats().forks, 0);
     }
 
     #[test]

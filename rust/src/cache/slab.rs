@@ -4,8 +4,9 @@
 //! the same token across K, V and metadata, the first `len` logical slots
 //! are live, eviction compacts retained slots down in order (the
 //! slab-integrity property tested in tests/cache_props.rs) — but the
-//! storage is no longer an owned contiguous buffer. A page table maps
-//! logical slot → (page, offset) into a `cache::paged::PagePool`, so:
+//! storage is no longer an owned contiguous buffer. A copy-on-write page
+//! table (prefix/cow.rs) maps logical slot → (page, offset) into a
+//! `cache::paged::PagePool`, so:
 //!
 //! * eviction returns whole emptied tail pages to the shared pool
 //!   (immediate admission headroom for other requests) instead of
@@ -13,7 +14,14 @@
 //! * the per-step batch assembly (`copy_into_lane`) is an incremental
 //!   page-granular gather: pages untouched since the last sync of the
 //!   same (lane, capacity) destination are skipped — steady-state decode
-//!   copies O(dirty pages), not O(live slots).
+//!   copies O(dirty pages), not O(live slots);
+//! * a slab can **adopt** pages pinned by the prefix cache
+//!   (prefix/mod.rs) instead of recomputing and re-storing an identical
+//!   prompt prefix: adopted pages are mapped shared, every write goes
+//!   through the CoW barrier (append into a shared tail, eviction /
+//!   compaction inside the shared prefix — each forks the page first),
+//!   so each request's eviction policy still acts independently while
+//!   reads are zero-copy.
 //!
 //! Each live slot carries metadata: original sequence position, modality,
 //! cumulative attention score (the β(C_j) term of paper Eq. 5) and a
@@ -24,6 +32,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::model::ModelMeta;
+use crate::prefix::cow::PageTable;
 
 use super::paged::{pages_for_slots, PagePool, SharedPagePool, DEFAULT_PAGE_SLOTS};
 
@@ -70,11 +79,9 @@ pub struct KvSlab {
     /// unique per slab (engine scratch-ownership checks)
     id: u64,
     pool: SharedPagePool,
-    /// ordered page table: logical slot s lives at
-    /// (pages[s / page_slots], s % page_slots)
-    pages: Vec<u32>,
-    /// per-page KV-content-changed flags since the last lane sync
-    dirty: Vec<bool>,
+    /// copy-on-write page table: logical slot s lives at
+    /// (table.page(s / page_slots), s % page_slots)
+    table: PageTable,
     meta: Vec<SlotMeta>,
     /// logical capacity in slots
     cap: usize,
@@ -86,6 +93,11 @@ pub struct KvSlab {
     /// pages returned to the pool at retire (`release_pages`); metadata
     /// stays readable but KV is gone
     released: bool,
+    /// physical split recorded at `release_pages` — a lane that finishes
+    /// mid-step must still be accounted (private bytes + distinct shared
+    /// pages) without double-counting pages a surviving lane also maps
+    released_private: usize,
+    released_shared: Vec<u32>,
 }
 
 impl KvSlab {
@@ -113,8 +125,7 @@ impl KvSlab {
         KvSlab {
             id: NEXT_SLAB_ID.fetch_add(1, Ordering::Relaxed),
             pool: pool.clone(),
-            pages: Vec::new(),
-            dirty: Vec::new(),
+            table: PageTable::new(),
             meta: Vec::with_capacity(cap),
             cap,
             row,
@@ -122,6 +133,8 @@ impl KvSlab {
             page_slots,
             last_sync: None,
             released: false,
+            released_private: 0,
+            released_shared: Vec::new(),
         }
     }
 
@@ -136,7 +149,7 @@ impl KvSlab {
     /// slab's own (lane, capacity) check cannot see that.
     pub fn invalidate_sync(&mut self) {
         self.last_sync = None;
-        self.dirty.fill(true);
+        self.table.mark_all_dirty();
     }
 
     pub fn len(&self) -> usize {
@@ -166,7 +179,50 @@ impl KvSlab {
 
     /// Pages this slab currently holds in the arena.
     pub fn allocated_pages(&self) -> usize {
-        self.pages.len()
+        self.table.len()
+    }
+
+    /// Pages currently mapped copy-on-write (aliased with the prefix
+    /// cache and/or sibling slabs).
+    pub fn shared_pages(&self) -> usize {
+        self.table.shared_count()
+    }
+
+    /// Arena ids of the currently-shared pages (the scheduler counts
+    /// each distinct shared page once for physical KV accounting). A
+    /// released slab reports the split recorded at release time, so a
+    /// lane that finished mid-step dedups against survivors correctly.
+    pub fn shared_page_ids(&self) -> Vec<u32> {
+        if self.released {
+            return self.released_shared.clone();
+        }
+        self.table.shared_page_ids()
+    }
+
+    /// The tail page when it is shared *and* partially filled: the page
+    /// this slab's first append will fork. It stays in the lane's
+    /// private admission bound, so the scheduler's charged-once term
+    /// must not count it again (see `Engine::shared_charge_pages`).
+    pub fn unstable_tail_page(&self) -> Option<u32> {
+        let n = self.table.len();
+        if !self.released
+            && n > 0
+            && self.table.is_shared(n - 1)
+            && self.meta.len() < n * self.page_slots
+        {
+            Some(self.table.page(n - 1))
+        } else {
+            None
+        }
+    }
+
+    /// Shared pages that stay shared under this slab's own appends:
+    /// everything except a shared *partial* tail page
+    /// (`unstable_tail_page` — the one the first generated token
+    /// forks). This is the admission discount — see
+    /// scheduler/admission.rs.
+    pub fn shared_pages_stable(&self) -> usize {
+        self.table.shared_count() - usize::from(self.unstable_tail_page().is_some())
     }
 
     /// Bytes of one live slot (K+V for one token across all layers) —
@@ -175,31 +231,55 @@ impl KvSlab {
         2 * self.n_layers * self.row * 4
     }
 
-    /// Live KV bytes (the paper's "KV Cache (MB)" accounting).
+    /// Live KV bytes (the paper's "KV Cache (MB)" accounting). Counts
+    /// every live slot, shared or not — the per-request view.
     pub fn kv_bytes(&self) -> usize {
         self.meta.len() * self.kv_bytes_per_slot()
     }
 
+    /// Live KV bytes held in *private* pages only. The scheduler's
+    /// physical-occupancy invariant sums this plus each distinct shared
+    /// page once, so a prefix shared by N lanes is charged once, not N
+    /// times. A released slab reports the private bytes recorded at
+    /// release time (its pages were live during the step it finished
+    /// in; the shared part dedups via `shared_page_ids`).
+    pub fn kv_bytes_private(&self) -> usize {
+        if self.released {
+            return self.released_private;
+        }
+        let ps = self.page_slots;
+        let mut slots = 0usize;
+        for pi in 0..self.table.len() {
+            let base = pi * ps;
+            if base >= self.meta.len() {
+                break;
+            }
+            if !self.table.is_shared(pi) {
+                slots += (self.meta.len() - base).min(ps);
+            }
+        }
+        slots * self.kv_bytes_per_slot()
+    }
+
     /// Bytes of arena actually held (live + tail-page fragmentation).
     pub fn kv_bytes_allocated(&self) -> usize {
-        self.pages.len() * self.page_slots * self.kv_bytes_per_slot()
+        self.table.len() * self.page_slots * self.kv_bytes_per_slot()
     }
 
     #[inline]
     fn page_of(&self, slot: usize) -> (u32, usize) {
-        (self.pages[slot / self.page_slots], slot % self.page_slots)
+        (self.table.page(slot / self.page_slots), slot % self.page_slots)
     }
 
     /// Make sure a page backs logical slot `slot` (== current len).
     fn ensure_page(&mut self, slot: usize) {
-        if slot == self.pages.len() * self.page_slots {
+        if slot == self.table.len() * self.page_slots {
             let page = self
                 .pool
                 .borrow_mut()
                 .alloc()
                 .expect("page pool exhausted (admission must prevent this)");
-            self.pages.push(page);
-            self.dirty.push(true);
+            self.table.push_private(page);
         }
     }
 
@@ -218,9 +298,17 @@ impl KvSlab {
         assert_eq!(k_row.len(), self.n_layers * self.row);
         let slot = self.meta.len();
         self.ensure_page(slot);
-        let (page, off) = self.page_of(slot);
-        self.pool.borrow_mut().write_slot(page, off, k_row, v_row);
-        self.dirty[slot / self.page_slots] = true;
+        let pi = slot / self.page_slots;
+        {
+            let mut pool = self.pool.borrow_mut();
+            // CoW barrier: appending into a shared (adopted) partial tail
+            // page forks it first, so the prefix cache's image — and every
+            // co-sharing request — never sees this request's generation
+            self.table.ensure_private(&mut pool, pi);
+            let (page, off) = (self.table.page(pi), slot % self.page_slots);
+            pool.write_slot(page, off, k_row, v_row);
+        }
+        self.table.mark_dirty(pi);
         self.meta.push(SlotMeta {
             position,
             modality,
@@ -277,6 +365,41 @@ impl KvSlab {
         }
     }
 
+    /// Adopt a prefix-cache entry instead of recomputing it: map `pages`
+    /// shared (retaining each in the pool) and take the cached slot
+    /// metadata verbatim. The slab must be empty; `pages` must cover
+    /// exactly `meta.len()` slots. Returns false — leaving the slab
+    /// empty — if any page could not be retained (cache/pool accounting
+    /// bug surfaced via `PoolStats::refcount_errors`), so the caller can
+    /// fall back to a cold prefill.
+    pub fn adopt_shared(&mut self, pages: &[u32], meta: Vec<SlotMeta>) -> bool {
+        assert!(!self.released, "adopt into a released slab");
+        assert!(self.meta.is_empty(), "adopt into non-empty slab");
+        assert!(meta.len() < self.cap, "cached prefix larger than slab capacity");
+        assert_eq!(
+            pages.len(),
+            pages_for_slots(meta.len(), self.page_slots),
+            "adopted pages must cover exactly the cached slots"
+        );
+        let mut pool = self.pool.borrow_mut();
+        if !self.table.adopt_shared(&mut pool, pages) {
+            return false;
+        }
+        drop(pool);
+        self.meta = meta;
+        true
+    }
+
+    /// Hand this slab's pages to the prefix cache: every page becomes
+    /// copy-on-write (the cache retains them separately; this slab's own
+    /// writes fork first from now on) and their arena ids are returned
+    /// for pinning. If the cache ends up not retaining them, the marks
+    /// self-heal: `ensure_private` sees refcount 1 and just clears them.
+    pub fn mark_all_shared(&mut self) -> Vec<u32> {
+        self.table.mark_all_shared();
+        self.table.pages().to_vec()
+    }
+
     /// Accumulate this step's attention mass into slot scores and ages.
     /// `mean[i]` is the layer/head-mean mass on slot i, `peak[i]` the
     /// max-over-heads mass (may be the same slice when peak tracking is
@@ -304,7 +427,9 @@ impl KvSlab {
     /// Keep exactly the slots in `retain` (strictly ascending, therefore
     /// deduped), dropping the rest. Retained slots slide down in order;
     /// tail pages emptied by the shrink are freed back to the pool.
-    /// Returns the number of evicted slots.
+    /// Slide-down writes into a shared page fork it first (CoW): evicting
+    /// inside a shared prefix detaches this slab's copy and leaves the
+    /// cached original intact. Returns the number of evicted slots.
     pub fn compact(&mut self, retain: &[usize]) -> usize {
         debug_assert!(
             retain.windows(2).all(|w| w[0] < w[1]),
@@ -324,13 +449,19 @@ impl KvSlab {
             let mut pool = self.pool.borrow_mut();
             for (dst_slot, &src_slot) in retain.iter().enumerate() {
                 if dst_slot == src_slot {
-                    // unchanged prefix: no copy, page stays clean
+                    // unchanged prefix: no copy, page stays clean/shared
                     continue;
                 }
                 if first_moved.is_none() {
                     first_moved = Some(dst_slot);
                 }
-                pool.copy_slot(self.page_of(src_slot), self.page_of(dst_slot));
+                // CoW barrier before the write; the fork copies the whole
+                // page, including src slots not yet slid — consistent,
+                // because fork-time content equals what those reads expect
+                self.table.ensure_private(&mut pool, dst_slot / self.page_slots);
+                let src = self.page_of(src_slot);
+                let dst = self.page_of(dst_slot);
+                pool.copy_slot(src, dst);
                 self.meta[dst_slot] = self.meta[src_slot];
             }
         }
@@ -339,17 +470,15 @@ impl KvSlab {
         if let Some(fm) = first_moved {
             let live_pages = pages_for_slots(self.meta.len(), self.page_slots);
             for pi in (fm / self.page_slots)..live_pages {
-                self.dirty[pi] = true;
+                self.table.mark_dirty(pi);
             }
         }
-        // free whole tail pages the shrink emptied
+        // free whole tail pages the shrink emptied (a shared tail page
+        // just drops this slab's reference; the cache keeps its copy)
         let needed = pages_for_slots(self.meta.len(), self.page_slots);
-        if self.pages.len() > needed {
+        if self.table.len() > needed {
             let mut pool = self.pool.borrow_mut();
-            for page in self.pages.drain(needed..) {
-                pool.release(page);
-            }
-            self.dirty.truncate(needed);
+            self.table.truncate_release(&mut pool, needed);
         }
         evicted
     }
@@ -393,14 +522,15 @@ impl KvSlab {
         let full = self.last_sync != Some(here);
         let pool = self.pool.borrow();
         let mut copied = 0;
-        for (pi, &page) in self.pages.iter().enumerate() {
+        for pi in 0..self.table.len() {
             let base_slot = pi * self.page_slots;
             if base_slot >= len {
                 break;
             }
-            if !full && !self.dirty[pi] {
+            if !full && !self.table.is_dirty(pi) {
                 continue;
             }
+            let page = self.table.page(pi);
             let n = (len - base_slot).min(self.page_slots) * self.row;
             for l in 0..self.n_layers {
                 let dst = ((lane * self.n_layers + l) * cap_c + base_slot) * self.row;
@@ -410,7 +540,7 @@ impl KvSlab {
             copied += 1;
         }
         drop(pool);
-        self.dirty.fill(false);
+        self.table.clear_dirty();
         self.last_sync = Some(here);
         copied
     }
@@ -430,18 +560,21 @@ impl KvSlab {
     /// of when the caller drops the finished request. Metadata (and so
     /// `len`, `kv_bytes`, eviction stats) stays readable; the KV itself
     /// is gone and the slab must not be appended to or lane-synced again.
-    /// Idempotent.
+    /// Idempotent. Shared pages just drop this slab's reference — the
+    /// prefix cache keeps them alive for the next request.
     pub fn release_pages(&mut self) {
-        if self.pages.is_empty() {
-            self.released = true;
+        if self.released {
             return;
         }
-        let mut pool = self.pool.borrow_mut();
-        for page in self.pages.drain(..) {
-            pool.release(page);
+        // record the physical split first: the scheduler accounts a lane
+        // that finished mid-step by these, deduping shared pages against
+        // lanes that still map them
+        self.released_private = self.kv_bytes_private();
+        self.released_shared = self.table.shared_page_ids();
+        if !self.table.is_empty() {
+            let mut pool = self.pool.borrow_mut();
+            self.table.release_all(&mut pool);
         }
-        drop(pool);
-        self.dirty.clear();
         self.last_sync = None;
         self.released = true;
     }
@@ -465,9 +598,7 @@ impl KvSlab {
 impl Drop for KvSlab {
     fn drop(&mut self) {
         let mut pool = self.pool.borrow_mut();
-        for &page in &self.pages {
-            pool.release(page);
-        }
+        self.table.release_all(&mut pool);
     }
 }
 
@@ -486,8 +617,7 @@ impl Clone for KvSlab {
         let mut out = KvSlab {
             id: NEXT_SLAB_ID.fetch_add(1, Ordering::Relaxed),
             pool,
-            pages: Vec::new(),
-            dirty: Vec::new(),
+            table: PageTable::new(),
             meta: self.meta.clone(),
             cap: self.cap,
             row: self.row,
@@ -495,6 +625,9 @@ impl Clone for KvSlab {
             page_slots,
             last_sync: None,
             released: self.released,
+            released_private: self.released_private,
+            // the clone's private pool shares nothing with the arena
+            released_shared: Vec::new(),
         };
         let src = self.pool.borrow();
         let live_kv = if self.released { 0 } else { self.meta.len() };
@@ -522,7 +655,8 @@ impl std::fmt::Debug for KvSlab {
         f.debug_struct("KvSlab")
             .field("len", &self.meta.len())
             .field("cap", &self.cap)
-            .field("pages", &self.pages)
+            .field("pages", &self.table.pages())
+            .field("shared", &self.table.shared_count())
             .field("page_slots", &self.page_slots)
             .finish()
     }
@@ -793,8 +927,9 @@ mod tests {
         assert!((s.meta()[3].cum_score - 0.5).abs() < 1e-6);
         assert!(s.kv_bytes() > 0);
         s.release_pages(); // idempotent
-        drop(s); // double-free would panic the pool's refcount debug_assert
+        drop(s); // the emptied table leaves nothing to double-release
         assert_eq!(pool.borrow().stats().frees, 2);
+        assert_eq!(pool.borrow().stats().refcount_errors, 0);
     }
 
     #[test]
@@ -832,5 +967,156 @@ mod tests {
         for i in 0..3 {
             s.append(&row_of(0.0, &m), &row_of(0.0, &m), i, Modality::Text, 0.0);
         }
+    }
+
+    // ------------------------------------------------------------------
+    // copy-on-write prefix sharing
+    // ------------------------------------------------------------------
+
+    /// Build a donor slab with `n` slots valued by index, and return the
+    /// metadata snapshot a prefix-cache entry would hold.
+    fn donor(pool: &SharedPagePool, m: &ModelMeta, n: usize) -> (KvSlab, Vec<SlotMeta>) {
+        let mut s = KvSlab::in_pool(pool, 16);
+        for i in 0..n {
+            s.append(&row_of(i as f32, m), &row_of(i as f32, m), i as i32,
+                     Modality::Text, 0.0);
+        }
+        let meta = s.meta().to_vec();
+        (s, meta)
+    }
+
+    #[test]
+    fn adopt_shared_reads_without_copying() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 8); // two full 4-slot pages
+        let in_use = pool.borrow().in_use_pages();
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        assert_eq!(pool.borrow().in_use_pages(), in_use, "adoption allocates nothing");
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.shared_pages(), 2);
+        assert_eq!(s.shared_pages_stable(), 2, "aligned tail stays shared");
+        for i in 0..8 {
+            assert_eq!(s.k_row(0, i)[0], i as f32);
+        }
+        drop(s);
+        assert_eq!(pool.borrow().in_use_pages(), in_use, "adopter's refs released");
+        assert_eq!(pool.borrow().stats().refcount_errors, 0);
+    }
+
+    #[test]
+    fn append_into_shared_partial_tail_forks() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 6); // pages: full + partial (2 slots)
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        assert_eq!(s.shared_pages(), 2);
+        assert_eq!(s.shared_pages_stable(), 1, "partial tail is fork-bound");
+        s.append(&row_of(99.0, &m), &row_of(99.0, &m), 6, Modality::Text, 0.0);
+        assert_eq!(pool.borrow().stats().forks, 1, "first append forked the tail");
+        assert_eq!(s.shared_pages(), 1);
+        // the write landed in this slab only
+        assert_eq!(s.k_row(0, 6)[0], 99.0);
+        assert_eq!(d.k_row(0, 5)[0], 5.0, "donor tail untouched");
+        let (dp, doff) = d.page_of(5);
+        assert_eq!(pool.borrow().read_row(dp, doff, 0, false)[0], 5.0);
+        // further appends reuse the now-private tail: no more forks
+        s.append(&row_of(98.0, &m), &row_of(98.0, &m), 7, Modality::Text, 0.0);
+        assert_eq!(pool.borrow().stats().forks, 1);
+    }
+
+    #[test]
+    fn eviction_inside_shared_prefix_forks_and_leaves_donor_intact() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 8);
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        // evicting slot 1 slides everything down: writes hit both pages
+        s.evict(&[1]);
+        assert!(pool.borrow().stats().forks >= 1, "CoW forked the written pages");
+        assert_eq!(s.shared_pages(), 0, "writer fully diverged");
+        let positions: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
+        assert_eq!(positions, vec![0, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(s.k_row(0, 1)[0], 2.0);
+        // donor still sees its original 8 slots, byte-for-byte
+        for i in 0..8 {
+            assert_eq!(d.k_row(0, i)[0], i as f32, "donor slot {}", i);
+        }
+    }
+
+    #[test]
+    fn shared_pages_free_only_after_every_holder_drops() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 8);
+        let pages = d.table.pages().to_vec();
+        let mut a = KvSlab::in_pool(&pool, 16);
+        let mut b = KvSlab::in_pool(&pool, 16);
+        assert!(a.adopt_shared(&pages, meta.clone()));
+        assert!(b.adopt_shared(&pages, meta));
+        drop(d);
+        assert_eq!(pool.borrow().in_use_pages(), 2, "a+b still pin the pages");
+        a.release_pages();
+        assert_eq!(pool.borrow().in_use_pages(), 2, "b still pins them");
+        drop(b);
+        assert_eq!(pool.borrow().in_use_pages(), 0, "last holder frees");
+        assert_eq!(pool.borrow().stats().refcount_errors, 0);
+    }
+
+    #[test]
+    fn release_records_physical_split_for_accounting() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 6);
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        // fork the tail: 3 private slots, page 0 still shared
+        s.append(&row_of(9.0, &m), &row_of(9.0, &m), 6, Modality::Text, 0.0);
+        let private_before = s.kv_bytes_private();
+        let shared_before = s.shared_page_ids();
+        assert_eq!(shared_before, vec![d.table.page(0)]);
+        s.release_pages();
+        // the split survives release: a lane finishing mid-step is
+        // accounted without double-counting the donor's shared page
+        assert_eq!(s.kv_bytes_private(), private_before);
+        assert_eq!(s.shared_page_ids(), shared_before);
+        assert!(s.unstable_tail_page().is_none(), "released: nothing forks");
+    }
+
+    #[test]
+    fn unstable_tail_is_the_fork_bound_page() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 6); // partial tail (2 of 4 slots)
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        assert_eq!(s.unstable_tail_page(), Some(d.table.page(1)));
+        // the first append forks it: no unstable tail remains
+        s.append(&row_of(1.0, &m), &row_of(1.0, &m), 6, Modality::Text, 0.0);
+        assert_eq!(s.unstable_tail_page(), None);
+
+        // an aligned shared tail is stable: nothing to exclude
+        let (d2, meta2) = donor(&pool, &m, 4);
+        let mut s2 = KvSlab::in_pool(&pool, 16);
+        assert!(s2.adopt_shared(&d2.table.pages().to_vec(), meta2));
+        assert_eq!(s2.unstable_tail_page(), None);
+    }
+
+    #[test]
+    fn kv_bytes_private_excludes_shared_pages() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 6);
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        assert_eq!(s.kv_bytes_private(), 0, "everything shared");
+        assert_eq!(s.kv_bytes(), 6 * s.kv_bytes_per_slot());
+        // fork the tail: 2 live slots in the now-private page
+        s.append(&row_of(0.0, &m), &row_of(0.0, &m), 6, Modality::Text, 0.0);
+        assert_eq!(s.kv_bytes_private(), 3 * s.kv_bytes_per_slot());
+        assert_eq!(s.shared_page_ids(), vec![d.table.page(0)]);
     }
 }

@@ -18,6 +18,9 @@ use crate::cache::{
     PrefillCtx, SharedPagePool, DEFAULT_PAGE_SLOTS,
 };
 use crate::model::vocab;
+use crate::prefix::{
+    request_fingerprint, request_key, KeySym, PrefixCache, PrefixHit, PrefixStats,
+};
 use crate::runtime::{Runtime, StepTiming};
 use crate::scheduler::AdmissionController;
 use crate::util::rng::Rng;
@@ -45,6 +48,12 @@ pub struct EngineConfig {
     pub kv_budget: Option<usize>,
     /// token slots per arena page
     pub page_slots: usize,
+    /// radix-tree prefix cache: identical prompts (same text ids, bit-
+    /// identical vision segments) skip prefill entirely and share the
+    /// retained KV pages copy-on-write. Warm hits are byte-identical to
+    /// the cold path, so this is safe to leave on; disabled internally
+    /// for policies whose prefill consumes state (PolicyKind::prefix_safe)
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -59,6 +68,7 @@ impl Default for EngineConfig {
             batch: 1,
             kv_budget: None,
             page_slots: DEFAULT_PAGE_SLOTS,
+            prefix_cache: true,
         }
     }
 }
@@ -93,6 +103,10 @@ pub struct Engine {
     /// clobbering its region, so ownership changes force a full resync
     /// (0 = never written)
     lane_owner: Vec<u64>,
+    /// radix-tree prefix cache over the shared arena (prefix/mod.rs):
+    /// cold prefills register their retained pages, identical prompts
+    /// adopt them copy-on-write instead of recomputing
+    prefix: PrefixCache,
     /// component timing of the most recent decode step (perf harness)
     last_timing: StepTiming,
 }
@@ -139,6 +153,7 @@ impl Engine {
             scratch_k: vec![0.0; n],
             scratch_v: vec![0.0; n],
             lane_owner,
+            prefix: PrefixCache::new(crate::prefix::DEFAULT_MAX_ENTRIES),
             last_timing: StepTiming::default(),
         })
     }
@@ -176,6 +191,89 @@ impl Engine {
         }
     }
 
+    // ------------------------------------------------------------------
+    // prefix cache
+    // ------------------------------------------------------------------
+
+    /// Is the prefix cache active for this engine's policy?
+    pub fn prefix_enabled(&self) -> bool {
+        self.cfg.prefix_cache && self.cfg.policy.prefix_safe()
+    }
+
+    /// Prefix-cache observability (hits, pinned pages, tokens skipped).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.stats()
+    }
+
+    /// Arena pages currently pinned by prefix-cache entries.
+    pub fn prefix_pinned_pages(&self) -> usize {
+        self.prefix.pinned_pages()
+    }
+
+    /// Ids of every cache-pinned page (the scheduler unions these with
+    /// live lanes' shared pages for charged-once budget accounting).
+    pub fn prefix_pinned_page_ids(&self) -> Vec<u32> {
+        self.prefix.pinned_page_ids()
+    }
+
+    /// Admission discount for a candidate: pages a warm hit would adopt
+    /// that stay shared under its own decode appends. 0 on a miss or
+    /// with the cache off. Hashes the prompt; callers probing every tick
+    /// should hash once and use `prefix_discount_probed`.
+    pub fn prefix_discount(&self, req: &Request) -> usize {
+        if !self.prefix_enabled() {
+            return 0;
+        }
+        self.prefix_discount_probed(&request_key(req), request_fingerprint(req))
+    }
+
+    /// `prefix_discount` with the (key, fingerprint) probe already
+    /// hashed — the scheduler hashes once at enqueue (`QueuedJob::
+    /// prefix_probe`) instead of re-hashing a multi-KB vision prompt on
+    /// every admission attempt.
+    pub fn prefix_discount_probed(&self, key: &[KeySym], fingerprint: u64) -> usize {
+        if !self.prefix_enabled() {
+            return 0;
+        }
+        self.prefix
+            .peek_discount(key, fingerprint, self.cfg.page_slots.max(1))
+    }
+
+    /// Pages the admission loops could actually recover by evicting
+    /// reclaimable cache entries right now. Lets them decline to touch
+    /// the cache when reclaiming cannot close a candidate's shortfall.
+    pub fn prefix_reclaimable_pages(&self) -> usize {
+        let pool = self.pool.borrow();
+        self.prefix.reclaimable_pages(&pool)
+    }
+
+    /// Evict the least-recently-used cache entry unconditionally (tests
+    /// / shutdown drains). False when the cache is empty.
+    pub fn prefix_evict_one(&mut self) -> bool {
+        let mut pool = self.pool.borrow_mut();
+        self.prefix.evict_lru(&mut pool)
+    }
+
+    /// Evict the LRU *reclaimable* entry — one actually holding pages
+    /// nobody else references, so evicting frees budget. The admission
+    /// pressure valve: entries still mapped by live lanes are kept,
+    /// since evicting them frees nothing and only destroys future hits.
+    pub fn prefix_reclaim_one(&mut self) -> bool {
+        let mut pool = self.pool.borrow_mut();
+        self.prefix.evict_lru_reclaimable(&mut pool)
+    }
+
+    /// Make sure at least `needed` pages are free, LRU-evicting
+    /// *reclaimable* prefix entries (cache-only pins) if necessary.
+    /// Called before every allocating phase so a cache full of cold
+    /// prefixes can never starve live requests.
+    fn reclaim_pool_headroom(&mut self, needed: usize) {
+        let mut pool = self.pool.borrow_mut();
+        if pool.free_pages() < needed {
+            self.prefix.reclaim(&mut pool, needed);
+        }
+    }
+
     /// (upload, execute, download) seconds of the most recent decode step.
     pub fn last_timing(&self) -> (f64, f64, f64) {
         (self.last_timing.upload_s, self.last_timing.execute_s, self.last_timing.download_s)
@@ -198,8 +296,99 @@ impl Engine {
     // prefill
     // ------------------------------------------------------------------
 
-    /// Run prefill for a request and admit it with a fresh policy instance.
+    /// Run prefill for a request and admit it with a fresh policy
+    /// instance. With the prefix cache on, a prompt identical to one
+    /// seen before (same text ids, bit-identical vision segments) skips
+    /// the PJRT prefill *and* the DAP decision entirely: the cached
+    /// retained pages are adopted copy-on-write and the cached prefill
+    /// logits produce the first token — byte-identical to the request's
+    /// own cold run, since every input of the decode trajectory is the
+    /// cold run's output for that exact prompt.
     pub fn prefill(&mut self, req: Request) -> Result<ActiveRequest> {
+        let key = self
+            .prefix_enabled()
+            .then(|| (request_key(&req), request_fingerprint(&req)));
+        if let Some((k, fp)) = &key {
+            if let Some(hit) = self.prefix.lookup(k, *fp) {
+                let mut slab =
+                    KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
+                let PrefixHit { pages, meta, logits, .. } = hit;
+                if slab.adopt_shared(&pages, meta) {
+                    // the hit is counted only now, with the pages
+                    // actually adopted — the skipped-token metrics never
+                    // claim work the fallback path then recomputed
+                    self.prefix.note_hit(req.prompt_len());
+                    return self.prefill_from_hit(req, slab, logits);
+                }
+                // adoption refused: the entry's pins are broken (a pool
+                // accounting bug, surfaced via refcount_errors). Drop the
+                // entry so it is not retried forever, and go cold.
+                let mut pool = self.pool.borrow_mut();
+                self.prefix.remove(k, &mut pool);
+            }
+            self.prefix.note_miss();
+        }
+        self.prefill_cold(req, key)
+    }
+
+    /// Prefix-cache fast path: build the post-prefill request state
+    /// around an already-adopted slab and the cached prefill logits.
+    fn prefill_from_hit(
+        &mut self,
+        req: Request,
+        slab: KvSlab,
+        logits: Vec<f32>,
+    ) -> Result<ActiveRequest> {
+        let t_start = Instant::now();
+        let n = req.prompt_len();
+        let policy = self.cfg.policy.build();
+        let prefill_len = slab.len();
+        let first_token = self.sample(&logits);
+        let mut stats = RequestStats {
+            prompt_tokens: n,
+            vision_tokens: req.n_vision(),
+            pruned_at_prefill: n - prefill_len,
+            peak_kv_bytes: slab.kv_bytes(),
+            prefix_hit: true,
+            prefill_tokens_skipped: n,
+            ..RequestStats::default()
+        };
+        stats.decisions = policy.decision_count();
+        let mut ar = ActiveRequest {
+            pos: n as i32,
+            pending_token: first_token,
+            req,
+            slab,
+            policy,
+            generated: Vec::new(),
+            prefill_len,
+            done: false,
+            forced: None,
+            logits_trace: Vec::new(),
+            score_trace: Vec::new(),
+            evictions: Vec::new(),
+            stats,
+        };
+        if self.cfg.capture_logits {
+            ar.logits_trace.push(logits);
+        }
+        ar.generated.push(first_token);
+        self.check_done(&mut ar);
+        // no PJRT prefill ran: the whole warm admission is host-side
+        // coordination, so it lands in coord_s only — prefill_s stays 0,
+        // keeping the timing buckets disjoint (the cold-vs-warm tables
+        // then show the device prefill literally disappearing)
+        ar.stats.coord_s += t_start.elapsed().as_secs_f64();
+        Ok(ar)
+    }
+
+    /// The full prefill path; registers the retained pages in the prefix
+    /// cache when `key` is set (cache enabled and this was a miss).
+    fn prefill_cold(
+        &mut self,
+        req: Request,
+        key: Option<(Vec<KeySym>, u64)>,
+    ) -> Result<ActiveRequest> {
         let t_start = Instant::now();
         let m = self.rt.meta().clone();
         let n = req.prompt_len();
@@ -243,6 +432,12 @@ impl Engine {
             .iter()
             .map(|&b| if b { Modality::Vision } else { Modality::Text })
             .collect();
+        // a cache full of cold prefixes must never starve a live
+        // admission: reclaim pool headroom for the injection first
+        self.reclaim_pool_headroom(pages_for_slots(
+            decision.retain.len(),
+            self.cfg.page_slots.max(1),
+        ));
         let mut slab = KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
         match &decision.kv_override {
             Some((k, v)) => slab.inject_prefill(
@@ -299,6 +494,19 @@ impl Engine {
         // generate_forced below before any decode step runs)
         ar.generated.push(first_token);
         self.check_done(&mut ar);
+        // register the retained prefix so identical prompts skip all of
+        // the above: the cache retains the slab's pages (which become
+        // copy-on-write — this request's own decode forks before any
+        // write) plus the metadata/logits a hit needs
+        if let Some((key, fp)) = key {
+            if !ar.slab.is_empty() {
+                let pages = ar.slab.mark_all_shared();
+                let snapshot = ar.slab.meta().to_vec();
+                let mut pool = self.pool.borrow_mut();
+                self.prefix
+                    .register(&mut pool, key, fp, pages, snapshot, n, out.logits.clone());
+            }
+        }
         Ok(ar)
     }
 
@@ -317,6 +525,16 @@ impl Engine {
         if live.is_empty() {
             return Ok(StepReport::default());
         }
+        // worst-case allocations this step: one append page per live
+        // lane plus a CoW fork of every page it still maps shared (a
+        // policy flush compacting inside the shared prefix forks them
+        // all). Reclaim cache-ONLY entries up front so idle pins never
+        // turn into an alloc panic mid-step; entries kept alive by live
+        // lanes are left alone (evicting them frees nothing), and with
+        // an unconstrained pool this check never evicts anything
+        let need: usize = live.len()
+            + live.iter().map(|&i| lanes[i].slab.shared_pages()).sum::<usize>();
+        self.reclaim_pool_headroom(need);
         let m = self.rt.meta().clone();
         let t0 = Instant::now();
 
@@ -567,6 +785,63 @@ impl Engine {
         Ok(ar)
     }
 
+    /// Distinct arena pages charged once against the page budget: pages
+    /// pinned by the prefix cache plus pages mapped shared by a live
+    /// lane, deduplicated — N requests sharing one visual prefix pay for
+    /// it once (the lanes' own bounds exclude their stable shared pages;
+    /// see scheduler/admission.rs). A shared *partial tail* page stays
+    /// in its lane's private bound (the first append forks it), so it is
+    /// excluded here — counting it in both places would double-charge
+    /// every freshly-adopted lane by one page.
+    pub fn shared_charge_pages(&self, lanes: &[Option<ActiveRequest>]) -> usize {
+        let mut set: std::collections::BTreeSet<u32> =
+            self.prefix.pinned_page_ids().into_iter().collect();
+        for ar in lanes.iter().flatten() {
+            for p in ar.slab.shared_page_ids() {
+                set.insert(p);
+            }
+        }
+        for ar in lanes.iter().flatten() {
+            if let Some(p) = ar.slab.unstable_tail_page() {
+                set.remove(&p);
+            }
+        }
+        set.len()
+    }
+
+    /// Admission test for engine-direct drivers: live lane bounds +
+    /// charged-once shared pages + the candidate's worst case
+    /// (discounted via its pre-hashed probe) versus the budget.
+    /// Reclaimable LRU prefix-cache entries are evicted only while
+    /// their pins can actually close the candidate's shortfall —
+    /// entries kept alive by live lanes are never touched, and an
+    /// unadmittable candidate never flushes the cache. The discount is
+    /// re-probed (cheap trie lookup, no re-hash) after each eviction,
+    /// since evicting could remove the very entry it came from.
+    fn admit_with_reclaim(
+        &mut self,
+        ctl: &AdmissionController,
+        lanes: &[Option<ActiveRequest>],
+        req: &Request,
+        probe: Option<&(Vec<KeySym>, u64)>,
+    ) -> bool {
+        loop {
+            let live: usize =
+                lanes.iter().flatten().map(|ar| ctl.lane_bound_pages(ar)).sum();
+            let shared = self.shared_charge_pages(lanes);
+            let discount =
+                probe.map_or(0, |(k, fp)| self.prefix_discount_probed(k, *fp));
+            let cand = ctl.worst_case_pages(req).saturating_sub(discount);
+            let shortfall = ctl.shortfall_pages(live, shared, cand);
+            if shortfall == 0 {
+                return true;
+            }
+            if self.prefix_reclaimable_pages() < shortfall || !self.prefix_reclaim_one() {
+                return false;
+            }
+        }
+    }
+
     /// Lane lifecycle hook for schedulers: one batched decode step over a
     /// slot map (None = free lane), draining lanes that finished during
     /// the step. Returns the step report plus `(lane_index, request)` for
@@ -605,7 +880,19 @@ impl Engine {
     ) -> Result<(Vec<ActiveRequest>, Vec<StepReport>)> {
         let b = self.cfg.batch;
         let ctl = self.pool_admission();
-        let mut queue: std::collections::VecDeque<Request> = requests.into();
+        // hash each prompt's prefix probe once up front: a request that
+        // waits for headroom is re-tested every round, and re-hashing a
+        // multi-KB vision prompt per attempt would dwarf the trie lookup
+        let probes_on = self.prefix_enabled();
+        let mut queue: std::collections::VecDeque<(Request, Option<(Vec<KeySym>, u64)>)> =
+            requests
+                .into_iter()
+                .map(|r| {
+                    let probe =
+                        probes_on.then(|| (request_key(&r), request_fingerprint(&r)));
+                    (r, probe)
+                })
+                .collect();
         let mut lanes: Vec<Option<ActiveRequest>> = (0..b).map(|_| None).collect();
         let mut finished = Vec::new();
         let mut reports = Vec::new();
@@ -614,18 +901,19 @@ impl Engine {
             // admit — gated by the same page-bound math the scheduler's
             // admission uses: when --kv-budget shrank the arena below
             // batch × capacity, requests wait for live lanes to retire
-            // instead of exhausting the pool
+            // instead of exhausting the pool. Shared pages (prefix cache
+            // + CoW lanes) are charged once; cache pins are reclaimed
+            // before a candidate is turned away
             for i in 0..b {
                 if lanes[i].is_some() {
                     continue;
                 }
-                let Some(req) = queue.front() else { break };
-                let live: usize =
-                    lanes.iter().flatten().map(|ar| ctl.lane_bound_pages(ar)).sum();
-                if !ctl.admits(live, 0, req) {
+                let Some((req, probe)) = queue.front() else { break };
+                if !self.admit_with_reclaim(&ctl, &lanes, req, probe.as_ref()) {
                     if lanes.iter().all(|l| l.is_none()) {
-                        // defensive: the pool floor of one full lane means
-                        // a single request always fits an idle arena
+                        // defensive: the pool floor of one full lane and a
+                        // fully-reclaimed cache mean a single request
+                        // always fits an idle arena
                         bail!(
                             "request {} cannot fit the KV arena ({} pages)",
                             req.id,
@@ -634,7 +922,7 @@ impl Engine {
                     }
                     break; // headroom frees as live lanes evict/retire
                 }
-                let req = queue.pop_front().unwrap();
+                let (req, _) = queue.pop_front().unwrap();
                 let mut ar = self.prefill(req)?;
                 if ar.done {
                     ar.slab.release_pages();

@@ -25,6 +25,11 @@ pub struct RequestStats {
     pub vision_tokens: usize,
     pub pruned_at_prefill: usize,
     pub evicted_at_decode: usize,
+    /// admitted from the prefix cache (no PJRT prefill ran)
+    pub prefix_hit: bool,
+    /// prompt tokens never recomputed because of that hit (== the full
+    /// prompt for an exact-match hit, 0 on the cold path)
+    pub prefill_tokens_skipped: usize,
     /// peak live KV bytes over the request lifetime
     pub peak_kv_bytes: usize,
     /// sum over steps of live KV bytes (for mean occupancy)

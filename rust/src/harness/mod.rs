@@ -67,18 +67,22 @@ pub fn widest_batch() -> usize {
 
 /// Spawn a serving thread with the given scheduler settings. The engine
 /// is constructed inside the thread — the PJRT client is not Send.
+/// `prefix_cache` toggles the engine's radix-tree prefix cache (warm
+/// hits are byte-identical to cold runs, so tests default it on; the
+/// serve bench compares on vs off).
 pub fn spawn_server(
     addr: String,
     policy: PolicyKind,
     batch: usize,
     kv_budget: Option<usize>,
     sched_policy: SchedPolicy,
+    prefix_cache: bool,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let rt = Runtime::load(&artifact_dir()).expect("artifacts built?");
         let engine = Engine::new(
             rt,
-            EngineConfig { policy, batch, ..EngineConfig::default() },
+            EngineConfig { policy, batch, prefix_cache, ..EngineConfig::default() },
         )
         .expect("engine for compiled batch");
         let grammar = load_grammar(&artifact_dir());

@@ -37,6 +37,9 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
                     page arena and the serve admission budget; k/m/g
                     suffixes are KiB/MiB/GiB (default: engine ceiling)
   --page-slots N    token slots per KV arena page (default 16)
+  --prefix-cache M  on|off: radix-tree prefix cache — identical prompts
+                    skip prefill and share retained KV pages
+                    copy-on-write (default on)
   --sched-policy P  serve: fifo | priority (default fifo)
   --verbose         generate: print full token streams";
 
@@ -80,6 +83,11 @@ fn build_engine(
     let policy = PolicyKind::parse(args.get_or("policy", "hae"))
         .map_err(|e| anyhow!(e))?;
     let kv_budget = kv_budget_arg(args)?;
+    let prefix_cache = match args.get_or("prefix-cache", "on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => return Err(anyhow!("bad --prefix-cache '{}' (accepted: on, off)", other)),
+    };
     let cfg = EngineConfig {
         policy,
         temperature: args.f32("temperature", 0.0),
@@ -90,6 +98,7 @@ fn build_engine(
         batch: args.usize("batch", 1),
         kv_budget,
         page_slots: args.usize("page-slots", DEFAULT_PAGE_SLOTS),
+        prefix_cache,
     };
     let grammar =
         StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
@@ -138,7 +147,7 @@ fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
     let (mut engine, grammar) = build_engine(artifact_dir, args)?;
     let meta = engine.rt.meta().clone();
     let kind = WorkloadKind::parse(args.get_or("kind", "story"))
-        .ok_or_else(|| anyhow!("unknown kind"))?;
+        .ok_or_else(|| anyhow!("unknown --kind (accepted: {})", WorkloadKind::accepted()))?;
     let n = args.usize("n", 4);
     let seed = args.u64("seed", 42);
     let verbose = args.flag("verbose");
@@ -191,6 +200,13 @@ fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
             correct,
             qa,
             100.0 * correct as f64 / qa as f64
+        );
+    }
+    let ps = engine.prefix_stats();
+    if ps.hits + ps.misses > 0 {
+        println!(
+            "prefix cache: {} hits / {} misses, {} prefill tokens skipped, {} pages pinned",
+            ps.hits, ps.misses, ps.prefill_tokens_skipped, ps.pinned_pages
         );
     }
     Ok(())

@@ -1,0 +1,286 @@
+//! Copy-on-write page table — the per-request view half of prefix
+//! sharing.
+//!
+//! A `PageTable` is the ordered page list a `KvSlab` (cache/slab.rs)
+//! maps logical slots through, extended with two per-page bits:
+//!
+//! * **shared** — the page is aliased: pinned by the prefix cache
+//!   (prefix/mod.rs) and possibly mapped by other slabs. Shared pages
+//!   are read-freely, but any write must go through the
+//!   [`PageTable::ensure_private`] barrier first, which forks the page
+//!   (`PagePool::fork_page`: alloc + whole-page copy) so the writer
+//!   diverges without perturbing its co-sharers. A "shared" page whose
+//!   pool refcount has meanwhile dropped back to 1 — the cache evicted
+//!   its entry and no sibling maps it — is privatized by just clearing
+//!   the bit: no copy, no allocation.
+//! * **dirty** — the page's KV changed since the last lane sync
+//!   (the incremental gather of `KvSlab::copy_into_lane`). Forking and
+//!   adoption both dirty the page, so the gather never reads a stale
+//!   pre-fork image out of the engine's scratch buffers.
+//!
+//! The write sites are exactly two: `append` into the (possibly partial)
+//! tail page, and `compact`'s slide-down writes — eviction or compaction
+//! inside a shared prefix therefore forces a fork, which is the CoW rule
+//! the admission discount (scheduler/admission.rs) reasons about.
+
+use crate::cache::paged::{pages_for_slots, PagePool};
+
+#[derive(Debug, Default)]
+pub struct PageTable {
+    pages: Vec<u32>,
+    shared: Vec<bool>,
+    dirty: Vec<bool>,
+}
+
+impl PageTable {
+    pub fn new() -> Self {
+        PageTable::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    pub fn page(&self, idx: usize) -> u32 {
+        self.pages[idx]
+    }
+
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
+
+    pub fn is_shared(&self, idx: usize) -> bool {
+        self.shared[idx]
+    }
+
+    pub fn is_dirty(&self, idx: usize) -> bool {
+        self.dirty[idx]
+    }
+
+    pub fn mark_dirty(&mut self, idx: usize) {
+        self.dirty[idx] = true;
+    }
+
+    /// Mark every page dirty (full-resync invalidation).
+    pub fn mark_all_dirty(&mut self) {
+        self.dirty.fill(true);
+    }
+
+    /// Clear every dirty bit (after a lane sync consumed them).
+    pub fn clear_dirty(&mut self) {
+        self.dirty.fill(false);
+    }
+
+    /// Pages currently aliased (shared bit set).
+    pub fn shared_count(&self) -> usize {
+        self.shared.iter().filter(|&&s| s).count()
+    }
+
+    /// Ids of the currently-shared pages (physical-occupancy accounting:
+    /// the scheduler counts each distinct shared page once).
+    pub fn shared_page_ids(&self) -> Vec<u32> {
+        self.pages
+            .iter()
+            .zip(&self.shared)
+            .filter(|(_, &s)| s)
+            .map(|(&p, _)| p)
+            .collect()
+    }
+
+    /// Append a page this table allocated itself (private, dirty).
+    pub fn push_private(&mut self, page: u32) {
+        self.pages.push(page);
+        self.shared.push(false);
+        self.dirty.push(true);
+    }
+
+    /// Adopt a run of pages from the prefix cache: each is retained in
+    /// the pool (one more reference) and mapped shared + dirty. Returns
+    /// false — adopting nothing — if any retain is refused (a dead page
+    /// would mean a cache/pool accounting bug; refusing keeps this table
+    /// consistent and the error observable via `refcount_errors`).
+    pub fn adopt_shared(&mut self, pool: &mut PagePool, pages: &[u32]) -> bool {
+        if !pool.retain_all(pages) {
+            return false;
+        }
+        for &p in pages {
+            self.pages.push(p);
+            self.shared.push(true);
+            self.dirty.push(true);
+        }
+        true
+    }
+
+    /// Mark every page copy-on-write — called when the prefix cache is
+    /// about to retain them, so the owner's own writes fork first from
+    /// now on. A page marked shared whose refcount never actually grew
+    /// self-heals at the first write (`ensure_private`'s sole-owner
+    /// path), so over-marking is safe.
+    pub fn mark_all_shared(&mut self) {
+        self.shared.fill(true);
+    }
+
+    /// Copy-on-write barrier: make page `idx` safe to write. No-op for a
+    /// private page. For a shared page whose pool refcount is 1 (sole
+    /// owner after a cache eviction), just clears the bit. Otherwise
+    /// forks: the caller's mapping moves to a fresh copy and its
+    /// reference on the shared original is released. Returns true when a
+    /// fork actually copied a page.
+    ///
+    /// Panics on pool exhaustion — like slab appends, fork allocations
+    /// are covered by the admission bound plus the engine's
+    /// prefix-cache pressure eviction (coordinator/engine.rs).
+    pub fn ensure_private(&mut self, pool: &mut PagePool, idx: usize) -> bool {
+        if !self.shared[idx] {
+            return false;
+        }
+        let page = self.pages[idx];
+        if pool.refcount(page) == 1 {
+            self.shared[idx] = false;
+            return false;
+        }
+        let fork = pool
+            .fork_page(page)
+            .expect("page pool exhausted during CoW fork (admission must prevent this)");
+        pool.release(page);
+        self.pages[idx] = fork;
+        self.shared[idx] = false;
+        self.dirty[idx] = true;
+        true
+    }
+
+    /// Release the pages beyond the first `keep` back to the pool
+    /// (shared or private — the refcount decides whether they free).
+    pub fn truncate_release(&mut self, pool: &mut PagePool, keep: usize) {
+        for page in self.pages.drain(keep..) {
+            pool.release(page);
+        }
+        self.shared.truncate(keep);
+        self.dirty.truncate(keep);
+    }
+
+    /// Release every page back to the pool and clear the table.
+    pub fn release_all(&mut self, pool: &mut PagePool) {
+        for page in self.pages.drain(..) {
+            pool.release(page);
+        }
+        self.shared.clear();
+        self.dirty.clear();
+    }
+}
+
+/// Pages a prefix-cache hit shares that are *stable* under the sharer's
+/// own appends: every adopted page except a partial tail. The partial
+/// tail page is forked by the first generated token, so the admission
+/// discount (shared pages charged once, not per sharer) must not count
+/// it — its fork allocation is charged to the lane's own bound instead.
+pub fn stable_shared_pages(live_slots: usize, page_slots: usize) -> usize {
+    let pages = pages_for_slots(live_slots, page_slots);
+    if live_slots % page_slots.max(1) == 0 {
+        pages
+    } else {
+        pages.saturating_sub(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PagePool {
+        // 2 layers × row 4, eight 4-slot pages
+        PagePool::new(2, 4, 8, 4)
+    }
+
+    #[test]
+    fn push_private_is_unshared_and_dirty() {
+        let mut p = pool();
+        let mut t = PageTable::new();
+        t.push_private(p.alloc().unwrap());
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_shared(0));
+        assert!(t.is_dirty(0));
+        assert_eq!(t.shared_count(), 0);
+    }
+
+    #[test]
+    fn adopt_retains_and_marks_shared() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let mut t = PageTable::new();
+        assert!(t.adopt_shared(&mut p, &[a, b]));
+        assert_eq!(p.refcount(a), 2);
+        assert_eq!(p.refcount(b), 2);
+        assert_eq!(t.shared_count(), 2);
+        assert_eq!(t.shared_page_ids(), vec![a, b]);
+        t.release_all(&mut p);
+        assert_eq!(p.refcount(a), 1, "adopter's reference released");
+    }
+
+    #[test]
+    fn adopt_of_dead_page_rolls_back() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let dead = p.alloc().unwrap();
+        p.release(dead);
+        let mut t = PageTable::new();
+        assert!(!t.adopt_shared(&mut p, &[a, dead]));
+        assert!(t.is_empty());
+        assert_eq!(p.refcount(a), 1, "partial retains rolled back");
+        assert_eq!(p.stats().refcount_errors, 1);
+    }
+
+    #[test]
+    fn ensure_private_forks_only_when_truly_shared() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let k = vec![7.0f32; 8];
+        p.write_slot(a, 0, &k, &k);
+        let mut t = PageTable::new();
+        assert!(t.adopt_shared(&mut p, &[a])); // refcount 2: cache + us
+        assert!(t.ensure_private(&mut p, 0), "refcount 2 → real fork");
+        assert_ne!(t.page(0), a);
+        assert!(!t.is_shared(0));
+        assert_eq!(p.refcount(a), 1, "our reference moved to the fork");
+        assert_eq!(p.read_row(t.page(0), 0, 0, false), vec![7.0; 4]);
+
+        // sole-owner case: shared bit set but nobody else holds the page
+        let mut t2 = PageTable::new();
+        let sole = p.alloc().unwrap();
+        t2.push_private(sole);
+        // simulate a cache pin that was later evicted: mark shared by
+        // adopting our own page then dropping the original reference
+        let mut t3 = PageTable::new();
+        assert!(t3.adopt_shared(&mut p, &[sole]));
+        t2.release_all(&mut p); // cache-side reference gone, t3 is sole owner
+        let forks_before = p.stats().forks;
+        assert!(!t3.ensure_private(&mut p, 0), "sole owner: no copy");
+        assert!(!t3.is_shared(0));
+        assert_eq!(p.stats().forks, forks_before);
+        assert_eq!(t3.page(0), sole);
+    }
+
+    #[test]
+    fn ensure_private_is_idempotent() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let mut t = PageTable::new();
+        assert!(t.adopt_shared(&mut p, &[a]));
+        t.ensure_private(&mut p, 0);
+        assert!(!t.ensure_private(&mut p, 0), "already private");
+    }
+
+    #[test]
+    fn stable_shared_page_math() {
+        assert_eq!(stable_shared_pages(0, 4), 0);
+        assert_eq!(stable_shared_pages(3, 4), 0, "single partial page is unstable");
+        assert_eq!(stable_shared_pages(4, 4), 1, "aligned tail is stable");
+        assert_eq!(stable_shared_pages(9, 4), 2, "partial tail excluded");
+        assert_eq!(stable_shared_pages(12, 4), 3);
+    }
+}

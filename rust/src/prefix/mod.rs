@@ -1,0 +1,722 @@
+//! Radix-tree prefix cache with copy-on-write page sharing — the
+//! cross-request reuse layer for the dominant multimodal serving
+//! pattern: many questions against the same image or video.
+//!
+//! # What is cached
+//!
+//! After a cold prefill, the engine registers the request's *retained*
+//! KV — the pages left after HAE's Dual-Attention Pruning — under a key
+//! built from the prompt: one symbol per leading/trailing text token id,
+//! one content-hash symbol per vision segment ([`request_key`]). The
+//! entry pins the slab's pages in the shared `PagePool` (`retain_page`)
+//! and snapshots the slot metadata (positions = the cached HAE
+//! retained-index set, cum-score seeds = the DAP statistics) plus the
+//! prefill logits of the last prompt position.
+//!
+//! # What a hit buys
+//!
+//! A later request with the same key skips prefill *entirely*: its slab
+//! adopts the pinned pages copy-on-write (`KvSlab::adopt_shared`), the
+//! cached metadata seeds its scores, and the cached logits produce the
+//! first token. Dual-Attention Pruning therefore runs once per distinct
+//! image instead of once per request, no prompt position is recomputed,
+//! and N concurrent questions hold ONE copy of the visual prefix —
+//! which the scheduler charges once against the KV budget
+//! (scheduler/admission.rs), turning sharing directly into admission
+//! headroom and batch width.
+//!
+//! Hits are **exact** (whole-prompt) matches: a warm request is
+//! byte-identical to its own cold run, because everything the decode
+//! trajectory depends on — retained KV, metadata, first-token logits —
+//! is the cold run's own output for that exact prompt. Partial-prefix
+//! reuse (recompute only the suffix through the decode path) is the
+//! natural extension of `RadixTree::longest_match`, but it would replay
+//! the donor's DAP decision under a different question and so break
+//! cold/warm equivalence; see ROADMAP "Prefix cache (PR 3)".
+//!
+//! # Lifecycle
+//!
+//! Entries share pages with *live* slabs: the donor keeps decoding on
+//! the pages it registered, and the first write a sharer (donor
+//! included) makes inside the shared region forks the page
+//! (prefix/cow.rs), so the cached image stays pristine. Unreferenced
+//! entries are LRU-evicted when the pool runs short (the engine calls
+//! [`PrefixCache::reclaim`] before allocating) or when the entry cap is
+//! hit; eviction drops the cache's page references, freeing exactly the
+//! pages no live request still maps.
+
+pub mod cow;
+pub mod radix;
+
+use crate::cache::paged::PagePool;
+use crate::cache::slab::SlotMeta;
+use crate::workload::Request;
+
+pub use radix::{KeySym, RadixTree};
+
+/// Default cap on cached entries (LRU beyond this). Entries are cheap on
+/// the host (metadata + one logits row) — the real cost is pinned arena
+/// pages, which `reclaim` bounds under pool pressure.
+pub const DEFAULT_MAX_ENTRIES: usize = 64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Build the trie key of a request's prompt: text tokens symbol-by-symbol,
+/// vision segments collapsed to a content hash over their patch features
+/// and segment length. The hash is 64-bit FNV-1a, so the key alone is not
+/// proof of identity — every entry also stores an independently-seeded
+/// [`request_fingerprint`] that a hit must match, making a wrong-prefix
+/// hit require a simultaneous collision in two independent 64-bit hashes.
+pub fn request_key(req: &Request) -> Vec<KeySym> {
+    let n = req.ids.len();
+    let pd = if n == 0 { 0 } else { req.patches.len() / n };
+    let mut key = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if req.is_vision[i] {
+            let start = i;
+            let mut h = FNV_OFFSET;
+            while i < n && req.is_vision[i] {
+                h = fnv(h, &req.ids[i].to_le_bytes());
+                for &f in &req.patches[i * pd..(i + 1) * pd] {
+                    h = fnv(h, &f.to_bits().to_le_bytes());
+                }
+                i += 1;
+            }
+            h = fnv(h, &((i - start) as u64).to_le_bytes());
+            key.push(KeySym::Vision(h));
+        } else {
+            key.push(KeySym::Text(req.ids[i]));
+            i += 1;
+        }
+    }
+    key
+}
+
+/// Independently-seeded whole-prompt content hash (ids, modality mask,
+/// patch bits). Stored per entry and compared at lookup so a radix-key
+/// collision between two different prompts cannot silently serve the
+/// wrong cached KV.
+pub fn request_fingerprint(req: &Request) -> u64 {
+    let mut h = FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15;
+    for (i, &id) in req.ids.iter().enumerate() {
+        h = fnv(h, &id.to_le_bytes());
+        h = fnv(h, &[u8::from(req.is_vision[i])]);
+    }
+    for &f in &req.patches {
+        h = fnv(h, &f.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// One cached prefix: pinned pages + everything needed to reconstruct
+/// the post-prefill request state without running prefill.
+struct PrefixEntry {
+    key: Vec<KeySym>,
+    /// whole-prompt verification hash (`request_fingerprint`)
+    fingerprint: u64,
+    /// arena pages holding the retained KV (one cache reference each)
+    pages: Vec<u32>,
+    /// retained-slot metadata: positions are the HAE retained-index set,
+    /// scores the DAP seeds
+    meta: Vec<SlotMeta>,
+    /// prompt tokens this entry replaces (== prefill tokens skipped/hit)
+    prompt_len: usize,
+    /// prefill logits at the last prompt position (first-token sampling)
+    logits: Vec<f32>,
+    last_used: u64,
+}
+
+/// Owned snapshot a hit hands the engine (no borrows into the cache).
+pub struct PrefixHit {
+    pub pages: Vec<u32>,
+    pub meta: Vec<SlotMeta>,
+    pub prompt_len: usize,
+    pub logits: Vec<f32>,
+}
+
+/// Cache observability — surfaced through `{"kind":"stats"}`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    /// arena pages currently pinned by cache entries
+    pub pinned_pages: usize,
+    pub lru_evictions: u64,
+    pub insertions: u64,
+    /// prompt tokens never recomputed thanks to warm hits
+    pub prefill_tokens_skipped: u64,
+}
+
+pub struct PrefixCache {
+    tree: RadixTree<usize>,
+    entries: Vec<Option<PrefixEntry>>,
+    free_ids: Vec<usize>,
+    max_entries: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    lru_evictions: u64,
+    insertions: u64,
+    skipped_tokens: u64,
+}
+
+impl PrefixCache {
+    pub fn new(max_entries: usize) -> Self {
+        PrefixCache {
+            tree: RadixTree::new(),
+            entries: Vec::new(),
+            free_ids: Vec::new(),
+            max_entries: max_entries.max(1),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            lru_evictions: 0,
+            insertions: 0,
+            skipped_tokens: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tree.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tree.is_empty()
+    }
+
+    /// Arena pages currently pinned by entries. Entries pin the pages of
+    /// the slab that registered them, and a key is registered at most
+    /// once, so the sets are disjoint and the sum is a distinct count.
+    pub fn pinned_pages(&self) -> usize {
+        self.entries
+            .iter()
+            .flatten()
+            .map(|e| e.pages.len())
+            .sum()
+    }
+
+    /// Ids of every pinned page (the scheduler unions these with the
+    /// live lanes' shared pages for charged-once accounting).
+    pub fn pinned_page_ids(&self) -> Vec<u32> {
+        self.entries
+            .iter()
+            .flatten()
+            .flat_map(|e| e.pages.iter().copied())
+            .collect()
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            entries: self.tree.len(),
+            pinned_pages: self.pinned_pages(),
+            lru_evictions: self.lru_evictions,
+            insertions: self.insertions,
+            prefill_tokens_skipped: self.skipped_tokens,
+        }
+    }
+
+    /// Exact-match lookup: the radix key AND the whole-prompt
+    /// fingerprint must both match (a key-hash collision is treated as
+    /// a miss, never served). A hit refreshes the entry's LRU stamp and
+    /// returns an owned snapshot; the caller adopts the pages CoW.
+    /// Hit/miss accounting is deliberately separate (`note_hit` /
+    /// `note_miss`): the engine only counts a hit once adoption actually
+    /// succeeded, so the skipped-token metrics never claim work that was
+    /// then recomputed on the fallback path.
+    pub fn lookup(&mut self, key: &[KeySym], fingerprint: u64) -> Option<PrefixHit> {
+        self.tick += 1;
+        let id = match self.tree.get(key) {
+            Some(&id) => id,
+            None => return None,
+        };
+        let e = self.entries[id].as_mut().expect("tree points at a live entry");
+        if e.fingerprint != fingerprint {
+            return None;
+        }
+        e.last_used = self.tick;
+        Some(PrefixHit {
+            pages: e.pages.clone(),
+            meta: e.meta.clone(),
+            prompt_len: e.prompt_len,
+            logits: e.logits.clone(),
+        })
+    }
+
+    /// Count a served warm admission that skipped `prompt_len` prefill
+    /// tokens (called after page adoption succeeded).
+    pub fn note_hit(&mut self, prompt_len: usize) {
+        self.hits += 1;
+        self.skipped_tokens += prompt_len as u64;
+    }
+
+    /// Count a cache-consulting admission that went cold (lookup miss,
+    /// or a hit whose adoption was refused).
+    pub fn note_miss(&mut self) {
+        self.misses += 1;
+    }
+
+    /// Drop the entry at exactly `key`, releasing its page references.
+    /// Used when adoption of its pages was refused: the pins are broken
+    /// (surfaced via `refcount_errors`) and retrying forever would count
+    /// phantom hits. Releases of already-dead pages are refused-and-
+    /// counted by the pool rather than corrupting it.
+    pub fn remove(&mut self, key: &[KeySym], pool: &mut PagePool) -> bool {
+        let Some(&id) = self.tree.get(key) else {
+            return false;
+        };
+        self.drop_entry(id, pool);
+        true
+    }
+
+    /// Shared teardown: unlink from the trie, drop the page references,
+    /// recycle the entry slot.
+    fn drop_entry(&mut self, id: usize, pool: &mut PagePool) {
+        let e = self.entries[id].take().expect("live entry");
+        self.tree.remove(&e.key);
+        for &p in &e.pages {
+            pool.release(p);
+        }
+        self.free_ids.push(id);
+    }
+
+    /// Pages a hit on `key` would adopt that stay shared under decode
+    /// appends (the admission discount). Read-only: no counters, no LRU.
+    pub fn peek_discount(&self, key: &[KeySym], fingerprint: u64, page_slots: usize) -> usize {
+        match self.tree.get(key) {
+            Some(&id) => {
+                let e = self.entries[id].as_ref().expect("live entry");
+                if e.fingerprint != fingerprint {
+                    return 0;
+                }
+                cow::stable_shared_pages(e.meta.len(), page_slots)
+            }
+            None => 0,
+        }
+    }
+
+    /// Register a cold prefill's retained pages under `key`. `pages` are
+    /// the registering slab's (already marked shared by the caller); the
+    /// cache retains each. Returns false without side effects when the
+    /// key is already present (refreshes its LRU stamp instead) or a
+    /// retain is refused.
+    #[allow(clippy::too_many_arguments)]
+    pub fn register(
+        &mut self,
+        pool: &mut PagePool,
+        key: Vec<KeySym>,
+        fingerprint: u64,
+        pages: Vec<u32>,
+        meta: Vec<SlotMeta>,
+        prompt_len: usize,
+        logits: Vec<f32>,
+    ) -> bool {
+        self.tick += 1;
+        if let Some(&id) = self.tree.get(&key) {
+            self.entries[id].as_mut().expect("live entry").last_used = self.tick;
+            return false;
+        }
+        if self.tree.len() >= self.max_entries && !self.evict_lru(pool) {
+            return false;
+        }
+        if !pool.retain_all(&pages) {
+            return false;
+        }
+        let entry = PrefixEntry {
+            key: key.clone(),
+            fingerprint,
+            pages,
+            meta,
+            prompt_len,
+            logits,
+            last_used: self.tick,
+        };
+        let id = match self.free_ids.pop() {
+            Some(id) => {
+                self.entries[id] = Some(entry);
+                id
+            }
+            None => {
+                self.entries.push(Some(entry));
+                self.entries.len() - 1
+            }
+        };
+        self.tree.insert(&key, id);
+        self.insertions += 1;
+        true
+    }
+
+    /// Evict the least-recently-used entry, dropping its page references
+    /// (pages free only once no live slab maps them). False when empty.
+    pub fn evict_lru(&mut self, pool: &mut PagePool) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (e.last_used, i)))
+            .min()
+            .map(|(_, i)| i);
+        let Some(id) = victim else {
+            return false;
+        };
+        self.drop_entry(id, pool);
+        self.lru_evictions += 1;
+        true
+    }
+
+    /// Is this entry's eviction pure win right now? Only when *every*
+    /// page is referenced by the cache alone (pool refcount 1): evicting
+    /// then frees the whole entry. An entry with even one page still
+    /// mapped by a live lane is hot — its stable pages are serving warm
+    /// state, and a forked-off tail (refcount 1) is still needed by the
+    /// next adopter — so it is never sacrificed under pressure.
+    fn reclaimable(e: &PrefixEntry, pool: &PagePool) -> bool {
+        e.pages.iter().all(|&p| pool.refcount(p) == 1)
+    }
+
+    /// Evict the least-recently-used *reclaimable* entry (see
+    /// [`Self::reclaimable`]). False when none qualifies.
+    pub fn evict_lru_reclaimable(&mut self, pool: &mut PagePool) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (e, i)))
+            .filter(|(e, _)| Self::reclaimable(e, pool))
+            .map(|(e, i)| (e.last_used, i))
+            .min()
+            .map(|(_, i)| i);
+        let Some(id) = victim else {
+            return false;
+        };
+        self.drop_entry(id, pool);
+        self.lru_evictions += 1;
+        true
+    }
+
+    /// Pages that evicting reclaimable entries could free right now —
+    /// the exact amount the admission loops can recover without touching
+    /// entries live lanes keep alive. They use it to avoid flushing the
+    /// cache for a candidate that cannot be admitted anyway.
+    pub fn reclaimable_pages(&self, pool: &PagePool) -> usize {
+        self.entries
+            .iter()
+            .flatten()
+            .filter(|e| Self::reclaimable(e, pool))
+            .map(|e| e.pages.len())
+            .sum()
+    }
+
+    /// Pool-pressure hook: evict reclaimable LRU entries until at least
+    /// `need_free` pages are free or none are reclaimable. Returns
+    /// entries evicted. Entries pinned alive by lanes stay — their pages
+    /// would not free anyway.
+    pub fn reclaim(&mut self, pool: &mut PagePool, need_free: usize) -> usize {
+        let mut evicted = 0;
+        while pool.free_pages() < need_free && self.evict_lru_reclaimable(pool) {
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Drop every entry (engine shutdown / tests).
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        while self.evict_lru(pool) {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::slab::Modality;
+    use crate::workload::WorkloadKind;
+
+    fn meta_of(n: usize) -> Vec<SlotMeta> {
+        (0..n)
+            .map(|i| SlotMeta {
+                position: i as i32,
+                modality: Modality::Text,
+                cum_score: 0.1,
+                cum_peak: 0.1,
+                last_score: 0.1,
+                marked: false,
+                age: 0,
+            })
+            .collect()
+    }
+
+    fn pool() -> PagePool {
+        PagePool::new(2, 4, 16, 4)
+    }
+
+    /// Arbitrary whole-prompt fingerprint used across the cache tests.
+    const FP: u64 = 0xAB;
+
+    fn req(ids: Vec<i32>, is_vision: Vec<bool>, patches: Vec<f32>) -> Request {
+        Request {
+            id: 0,
+            kind: WorkloadKind::Understanding,
+            ids,
+            patches,
+            is_vision,
+            max_new_tokens: 4,
+            min_new_tokens: 0,
+            expected_answer: None,
+            images: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn key_collapses_vision_segments() {
+        // [text 1][vision ×2][text 5] with 2 patch dims per token
+        let r = req(
+            vec![1, 9, 9, 5],
+            vec![false, true, true, false],
+            vec![0.0; 8],
+        );
+        let k = request_key(&r);
+        assert_eq!(k.len(), 3);
+        assert_eq!(k[0], KeySym::Text(1));
+        assert!(matches!(k[1], KeySym::Vision(_)));
+        assert_eq!(k[2], KeySym::Text(5));
+    }
+
+    #[test]
+    fn key_is_content_sensitive() {
+        let a = req(vec![9, 9], vec![true, true], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = req(vec![9, 9], vec![true, true], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(request_key(&a), request_key(&b));
+        // one patch float differs → different image symbol
+        b.patches[3] = 4.5;
+        assert_ne!(request_key(&a), request_key(&b));
+        // generation params don't affect the key (prefill is independent)
+        let mut c = req(vec![9, 9], vec![true, true], vec![1.0, 2.0, 3.0, 4.0]);
+        c.max_new_tokens = 99;
+        assert_eq!(request_key(&a), request_key(&c));
+        // the verification fingerprint tracks the same content
+        assert_ne!(request_fingerprint(&a), request_fingerprint(&b));
+        assert_eq!(request_fingerprint(&a), request_fingerprint(&c));
+    }
+
+    #[test]
+    fn register_pins_and_hit_returns_snapshot() {
+        let mut p = pool();
+        let pages = vec![p.alloc().unwrap(), p.alloc().unwrap()];
+        let mut c = PrefixCache::new(8);
+        let key = vec![KeySym::Text(1), KeySym::Vision(7)];
+        assert!(c.register(
+            &mut p,
+            key.clone(),
+            FP,
+            pages.clone(),
+            meta_of(8),
+            10,
+            vec![0.5; 4],
+        ));
+        assert_eq!(p.refcount(pages[0]), 2, "cache holds a reference");
+        assert_eq!(c.pinned_pages(), 2);
+        let hit = c.lookup(&key, FP).expect("exact hit");
+        c.note_hit(hit.prompt_len);
+        assert_eq!(hit.pages, pages);
+        assert_eq!(hit.meta.len(), 8);
+        assert_eq!(hit.prompt_len, 10);
+        assert_eq!(hit.logits, vec![0.5; 4]);
+        assert!(c.lookup(&[KeySym::Text(1)], FP).is_none(), "prefix is not exact");
+        c.note_miss();
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.prefill_tokens_skipped, 10);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_a_miss_not_a_wrong_hit() {
+        // a radix-key hash collision between two different prompts must
+        // never serve the wrong cached KV: the whole-prompt fingerprint
+        // is checked at lookup (and peek) and a mismatch is a miss
+        let mut p = pool();
+        let pg = p.alloc().unwrap();
+        let mut c = PrefixCache::new(8);
+        let key = vec![KeySym::Vision(42)];
+        assert!(c.register(&mut p, key.clone(), FP, vec![pg], meta_of(3), 5, vec![]));
+        assert!(c.lookup(&key, FP).is_some());
+        assert!(c.lookup(&key, FP ^ 1).is_none(), "colliding key refused");
+        assert_eq!(c.peek_discount(&key, FP ^ 1, 4), 0);
+        assert_eq!(c.len(), 1, "the entry itself is untouched");
+    }
+
+    #[test]
+    fn forked_tail_does_not_make_a_hot_entry_reclaimable() {
+        // the common shape mid-batch: an adopter forked the partial tail
+        // (cache is its sole holder, refcount 1) while the stable pages
+        // still serve live lanes (refcount 2). The entry is HOT — the
+        // tail is still needed by the next adopter — so pressure reclaim
+        // must not sacrifice it for one page
+        let mut p = pool();
+        let stable = p.alloc().unwrap(); // "lane" keeps its reference
+        let tail = p.alloc().unwrap();
+        let mut c = PrefixCache::new(8);
+        assert!(c.register(
+            &mut p,
+            vec![KeySym::Vision(1)],
+            FP,
+            vec![stable, tail],
+            meta_of(6),
+            8,
+            vec![],
+        ));
+        p.release(tail); // adopters forked it: cache-only now
+        assert_eq!(p.refcount(stable), 2);
+        assert_eq!(p.refcount(tail), 1);
+        assert_eq!(c.reclaimable_pages(&p), 0, "hot entry is not reclaimable");
+        assert!(!c.evict_lru_reclaimable(&mut p));
+        assert_eq!(c.reclaim(&mut p, 100), 0, "pressure leaves the hot entry");
+        // once the last lane retires, the whole entry reclaims at once
+        p.release(stable);
+        assert_eq!(c.reclaimable_pages(&p), 2);
+        assert!(c.evict_lru_reclaimable(&mut p));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn remove_drops_entry_and_releases_pins() {
+        let mut p = pool();
+        let pg = p.alloc().unwrap();
+        let mut c = PrefixCache::new(8);
+        let key = vec![KeySym::Text(9)];
+        assert!(c.register(&mut p, key.clone(), FP, vec![pg], meta_of(2), 2, vec![]));
+        assert_eq!(p.refcount(pg), 2);
+        assert!(c.remove(&key, &mut p));
+        assert!(!c.remove(&key, &mut p), "second remove is a no-op");
+        assert!(c.lookup(&key, FP).is_none());
+        assert_eq!(p.refcount(pg), 1, "cache reference released");
+        assert_eq!(c.pinned_pages(), 0);
+    }
+
+    #[test]
+    fn reclaim_skips_entries_shared_with_lanes() {
+        let mut p = pool();
+        // entry A's page is also held by a "lane" (refcount 2);
+        // entry B is cache-only (the registering request retired)
+        let pa = p.alloc().unwrap();
+        let mut c = PrefixCache::new(8);
+        assert!(c.register(&mut p, vec![KeySym::Text(0)], FP, vec![pa], meta_of(2), 2, vec![]));
+        let pb = p.alloc().unwrap();
+        assert!(c.register(&mut p, vec![KeySym::Text(1)], FP, vec![pb], meta_of(2), 2, vec![]));
+        p.release(pb);
+        // A is older (LRU) but evicting it frees nothing: reclaim must
+        // take B and then stop instead of draining the cache
+        assert_eq!(c.reclaim(&mut p, 100), 1);
+        assert_eq!(c.len(), 1);
+        assert!(c.lookup(&[KeySym::Text(0)], FP).is_some(), "lane-shared entry kept");
+        assert!(!c.evict_lru_reclaimable(&mut p), "nothing reclaimable left");
+        // the unconditional LRU eviction (entry-cap path) still works
+        assert!(c.evict_lru(&mut p));
+        assert!(c.is_empty());
+        assert_eq!(p.refcount(pa), 1, "lane still holds its page");
+    }
+
+    #[test]
+    fn duplicate_register_refreshes_without_repinning() {
+        let mut p = pool();
+        let pg = vec![p.alloc().unwrap()];
+        let mut c = PrefixCache::new(8);
+        let key = vec![KeySym::Text(1)];
+        assert!(c.register(&mut p, key.clone(), FP, pg.clone(), meta_of(2), 2, vec![]));
+        assert!(!c.register(&mut p, key.clone(), FP, pg.clone(), meta_of(2), 2, vec![]));
+        assert_eq!(p.refcount(pg[0]), 2, "still one cache reference");
+        assert_eq!(c.stats().insertions, 1);
+    }
+
+    #[test]
+    fn lru_eviction_releases_pages() {
+        let mut p = pool();
+        let mut c = PrefixCache::new(2);
+        let mut page_of = Vec::new();
+        for i in 0..2 {
+            let pg = p.alloc().unwrap();
+            page_of.push(pg);
+            assert!(c.register(
+                &mut p,
+                vec![KeySym::Text(i)],
+                FP,
+                vec![pg],
+                meta_of(2),
+                2,
+                vec![],
+            ));
+            // the registering slab retires: only the cache pins the page
+            p.release(pg);
+        }
+        // touch entry 0 so entry 1 is the LRU victim
+        assert!(c.lookup(&[KeySym::Text(0)], FP).is_some());
+        let pg2 = p.alloc().unwrap();
+        assert!(c.register(&mut p, vec![KeySym::Text(2)], FP, vec![pg2], meta_of(2), 2, vec![]));
+        p.release(pg2);
+        assert_eq!(c.len(), 2, "cap enforced");
+        assert!(c.lookup(&[KeySym::Text(1)], FP).is_none(), "LRU entry evicted");
+        assert!(c.lookup(&[KeySym::Text(0)], FP).is_some(), "hot entry kept");
+        assert_eq!(p.refcount(page_of[1]), 0, "evicted entry's page freed");
+        assert_eq!(c.stats().lru_evictions, 1);
+    }
+
+    #[test]
+    fn reclaim_frees_pages_under_pressure() {
+        let mut p = pool(); // 16 pages
+        let mut c = PrefixCache::new(32);
+        // 3 entries × 4 pages, all cache-only
+        for i in 0..3 {
+            let pages: Vec<u32> = (0..4).map(|_| p.alloc().unwrap()).collect();
+            assert!(c.register(
+                &mut p,
+                vec![KeySym::Text(i)],
+                FP,
+                pages.clone(),
+                meta_of(4),
+                4,
+                vec![],
+            ));
+            for pg in pages {
+                p.release(pg);
+            }
+        }
+        assert_eq!(p.free_pages(), 4);
+        // ask for 10 free pages: two LRU entries must go
+        let evicted = c.reclaim(&mut p, 10);
+        assert_eq!(evicted, 2);
+        assert_eq!(p.free_pages(), 12);
+        assert_eq!(c.len(), 1);
+        // already satisfied: no-op
+        assert_eq!(c.reclaim(&mut p, 10), 0);
+        // impossible targets drain the cache and stop
+        assert_eq!(c.reclaim(&mut p, 1000), 1);
+        assert!(c.is_empty());
+        assert_eq!(p.free_pages(), 16);
+    }
+
+    #[test]
+    fn peek_discount_counts_stable_pages() {
+        let mut p = pool(); // 4-slot pages
+        let pages = vec![p.alloc().unwrap(), p.alloc().unwrap()];
+        let mut c = PrefixCache::new(8);
+        let key = vec![KeySym::Vision(3)];
+        // 6 retained slots over two 4-slot pages: partial tail unstable
+        assert!(c.register(&mut p, key.clone(), FP, pages, meta_of(6), 8, vec![]));
+        assert_eq!(c.peek_discount(&key, FP, 4), 1);
+        assert_eq!(c.peek_discount(&[KeySym::Vision(4)], FP, 4), 0, "miss: no discount");
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 0, "peek is invisible to hit metrics");
+    }
+}

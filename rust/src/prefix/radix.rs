@@ -1,0 +1,292 @@
+//! Compressed radix trie over prompt-prefix symbols.
+//!
+//! Keys are sequences of [`KeySym`]: one symbol per *text* token id, and
+//! one symbol per contiguous *vision segment* (the content hash of the
+//! segment's patch features — prefix/mod.rs builds keys from requests).
+//! Collapsing an image to a single symbol keeps the trie shallow: the
+//! dominant multimodal pattern — many questions against one image —
+//! becomes a single shared [BOS][image-hash] spine with one short text
+//! branch per distinct question.
+//!
+//! Edges are label-compressed (a node stores the whole symbol run to its
+//! parent), so lookup cost is O(key length), independent of how many
+//! entries share a prefix. `longest_match` returns the deepest stored
+//! value whose path is a prefix of the query — the page-aligned partial
+//! reuse hook — while exact hits are the `matched == key.len()` case the
+//! engine's admission fast path uses.
+
+/// One key symbol: a text token id, or a whole vision segment collapsed
+/// to its content hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KeySym {
+    Text(i32),
+    Vision(u64),
+}
+
+struct Node<V> {
+    /// compressed edge label from the parent (empty only at the root)
+    edge: Vec<KeySym>,
+    val: Option<V>,
+    children: Vec<Node<V>>,
+}
+
+impl<V> Node<V> {
+    fn leaf(edge: Vec<KeySym>, val: V) -> Self {
+        Node { edge, val: Some(val), children: Vec::new() }
+    }
+
+    fn insert(&mut self, key: &[KeySym], val: V) -> Option<V> {
+        if key.is_empty() {
+            return self.val.replace(val);
+        }
+        let idx = match self.children.iter().position(|c| c.edge[0] == key[0]) {
+            None => {
+                self.children.push(Node::leaf(key.to_vec(), val));
+                return None;
+            }
+            Some(i) => i,
+        };
+        let child = &mut self.children[idx];
+        let common = child
+            .edge
+            .iter()
+            .zip(key)
+            .take_while(|(a, b)| a == b)
+            .count();
+        if common == child.edge.len() {
+            return child.insert(&key[common..], val);
+        }
+        // split the edge: intermediate node carries the common prefix
+        let prefix: Vec<KeySym> = child.edge.drain(..common).collect();
+        let old = self.children.swap_remove(idx);
+        let mut mid = Node { edge: prefix, val: None, children: vec![old] };
+        let rest = &key[common..];
+        if rest.is_empty() {
+            mid.val = Some(val);
+        } else {
+            mid.children.push(Node::leaf(rest.to_vec(), val));
+        }
+        self.children.push(mid);
+        None
+    }
+
+    fn remove(&mut self, key: &[KeySym]) -> Option<V> {
+        if key.is_empty() {
+            return self.val.take();
+        }
+        let idx = self.children.iter().position(|c| c.edge[0] == key[0])?;
+        {
+            let child = &self.children[idx];
+            if key.len() < child.edge.len() || key[..child.edge.len()] != child.edge[..] {
+                return None;
+            }
+        }
+        let edge_len = self.children[idx].edge.len();
+        let out = self.children[idx].remove(&key[edge_len..]);
+        if out.is_some() && self.children[idx].val.is_none() {
+            if self.children[idx].children.is_empty() {
+                self.children.swap_remove(idx);
+            } else if self.children[idx].children.len() == 1 {
+                // re-compress: merge the lone grandchild into the edge
+                let mut only = self.children[idx].children.pop().unwrap();
+                let mut edge = std::mem::take(&mut self.children[idx].edge);
+                edge.append(&mut only.edge);
+                only.edge = edge;
+                self.children[idx] = only;
+            }
+        }
+        out
+    }
+}
+
+pub struct RadixTree<V> {
+    root: Node<V>,
+    len: usize,
+}
+
+impl<V> Default for RadixTree<V> {
+    fn default() -> Self {
+        RadixTree::new()
+    }
+}
+
+impl<V> RadixTree<V> {
+    pub fn new() -> Self {
+        RadixTree {
+            root: Node { edge: Vec::new(), val: None, children: Vec::new() },
+            len: 0,
+        }
+    }
+
+    /// Stored values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert, returning the previous value stored at exactly this key.
+    pub fn insert(&mut self, key: &[KeySym], val: V) -> Option<V> {
+        let old = self.root.insert(key, val);
+        if old.is_none() {
+            self.len += 1;
+        }
+        old
+    }
+
+    /// Deepest stored value whose key is a prefix of `key`, with the
+    /// number of symbols it covers. `matched == key.len()` is an exact
+    /// hit.
+    pub fn longest_match<'a>(&'a self, key: &[KeySym]) -> Option<(usize, &'a V)> {
+        let mut node = &self.root;
+        let mut depth = 0usize;
+        let mut best = node.val.as_ref().map(|v| (0, v));
+        loop {
+            let rest = &key[depth..];
+            if rest.is_empty() {
+                break;
+            }
+            let Some(child) = node.children.iter().find(|c| c.edge[0] == rest[0]) else {
+                break;
+            };
+            if rest.len() < child.edge.len()
+                || rest[..child.edge.len()] != child.edge[..]
+            {
+                break;
+            }
+            depth += child.edge.len();
+            node = child;
+            if let Some(v) = &node.val {
+                best = Some((depth, v));
+            }
+        }
+        best
+    }
+
+    /// Value stored at exactly `key`.
+    pub fn get(&self, key: &[KeySym]) -> Option<&V> {
+        match self.longest_match(key) {
+            Some((d, v)) if d == key.len() => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Remove the value at exactly `key`, re-compressing the path.
+    pub fn remove(&mut self, key: &[KeySym]) -> Option<V> {
+        let out = self.root.remove(key);
+        if out.is_some() {
+            self.len -= 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: i32) -> KeySym {
+        KeySym::Text(id)
+    }
+
+    fn v(h: u64) -> KeySym {
+        KeySym::Vision(h)
+    }
+
+    #[test]
+    fn insert_get_exact() {
+        let mut tr = RadixTree::new();
+        assert!(tr.insert(&[t(1), v(9), t(2)], "a").is_none());
+        assert!(tr.insert(&[t(1), v(9), t(3)], "b").is_none());
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr.get(&[t(1), v(9), t(2)]), Some(&"a"));
+        assert_eq!(tr.get(&[t(1), v(9), t(3)]), Some(&"b"));
+        assert_eq!(tr.get(&[t(1), v(9)]), None, "interior split node holds no value");
+        assert_eq!(tr.get(&[t(1), v(8), t(2)]), None, "different image hash");
+        // replacing returns the old value and keeps len
+        assert_eq!(tr.insert(&[t(1), v(9), t(2)], "a2"), Some("a"));
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr.get(&[t(1), v(9), t(2)]), Some(&"a2"));
+    }
+
+    #[test]
+    fn longest_match_finds_deepest_prefix() {
+        let mut tr = RadixTree::new();
+        tr.insert(&[t(1), v(9)], "prefix");
+        tr.insert(&[t(1), v(9), t(2), t(3)], "deep");
+        // full key match wins
+        assert_eq!(tr.longest_match(&[t(1), v(9), t(2), t(3)]), Some((4, &"deep")));
+        // a longer query falls back to the deepest stored prefix
+        assert_eq!(
+            tr.longest_match(&[t(1), v(9), t(2), t(3), t(4)]),
+            Some((4, &"deep"))
+        );
+        // diverging after the shared spine matches the shallow entry
+        assert_eq!(tr.longest_match(&[t(1), v(9), t(7)]), Some((2, &"prefix")));
+        // a query shorter than every stored edge matches nothing
+        assert_eq!(tr.longest_match(&[t(1)]), None);
+        assert_eq!(tr.longest_match(&[t(5)]), None);
+    }
+
+    #[test]
+    fn shared_spine_is_one_edge() {
+        // the many-questions-one-image pattern: entries share [BOS][img]
+        let mut tr = RadixTree::new();
+        for q in 0..6 {
+            tr.insert(&[t(1), v(42), t(100 + q)], q);
+        }
+        assert_eq!(tr.len(), 6);
+        // root has a single child (the compressed shared spine)
+        assert_eq!(tr.root.children.len(), 1);
+        assert_eq!(tr.root.children[0].edge, vec![t(1), v(42)]);
+        assert_eq!(tr.root.children[0].children.len(), 6);
+        for q in 0..6 {
+            assert_eq!(tr.get(&[t(1), v(42), t(100 + q)]), Some(&q));
+        }
+    }
+
+    #[test]
+    fn remove_prunes_and_recompresses() {
+        let mut tr = RadixTree::new();
+        tr.insert(&[t(1), t(2), t(3)], "a");
+        tr.insert(&[t(1), t(2), t(4)], "b");
+        assert_eq!(tr.remove(&[t(1), t(2), t(3)]), Some("a"));
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr.get(&[t(1), t(2), t(3)]), None);
+        assert_eq!(tr.get(&[t(1), t(2), t(4)]), Some(&"b"));
+        // the split node re-compressed into a single edge again
+        assert_eq!(tr.root.children.len(), 1);
+        assert_eq!(tr.root.children[0].edge, vec![t(1), t(2), t(4)]);
+        assert_eq!(tr.remove(&[t(1), t(2), t(4)]), Some("b"));
+        assert!(tr.is_empty());
+        assert!(tr.root.children.is_empty());
+        // removing a missing key is a no-op
+        assert_eq!(tr.remove(&[t(1), t(2), t(4)]), None);
+    }
+
+    #[test]
+    fn remove_keeps_interior_values() {
+        let mut tr = RadixTree::new();
+        tr.insert(&[t(1), t(2)], "mid");
+        tr.insert(&[t(1), t(2), t(3)], "leaf");
+        assert_eq!(tr.remove(&[t(1), t(2), t(3)]), Some("leaf"));
+        assert_eq!(tr.get(&[t(1), t(2)]), Some(&"mid"));
+        assert_eq!(tr.len(), 1);
+        // removing an unstored interior point of an edge does nothing
+        tr.insert(&[t(1), t(2), t(3), t(4)], "leaf2");
+        assert_eq!(tr.remove(&[t(1), t(2), t(3)]), None);
+        assert_eq!(tr.len(), 2);
+    }
+
+    #[test]
+    fn empty_key_stores_at_root() {
+        let mut tr = RadixTree::new();
+        assert!(tr.insert(&[], "root").is_none());
+        assert_eq!(tr.longest_match(&[t(1)]), Some((0, &"root")));
+        assert_eq!(tr.get(&[]), Some(&"root"));
+        assert_eq!(tr.remove(&[]), Some("root"));
+        assert!(tr.is_empty());
+    }
+}

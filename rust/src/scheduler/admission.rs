@@ -86,12 +86,30 @@ impl AdmissionController {
         self.pages_for(self.worst_case_slots(req))
     }
 
-    /// Upper bound on a live lane's arena pages at any future step (see
-    /// module docs). Non-increasing over the lane's lifetime; eviction
-    /// lowers it.
+    /// Upper bound on a live lane's *privately charged* arena pages at
+    /// any future step (see module docs). Pages the lane maps shared
+    /// (prefix-cache adoption, CoW) are excluded here and charged once
+    /// globally by the scheduler's shared-charge term — except a shared
+    /// partial tail page, which the lane's first append forks and which
+    /// therefore stays in the private bound (`shared_pages_stable`).
+    ///
+    /// Eviction and generation progress lower the bound; a CoW fork of a
+    /// stable shared page (the policy evicting inside the shared prefix)
+    /// moves that page from the global charge into this bound, so the
+    /// aggregate can transiently grow by up to the lane's shared-page
+    /// count. The scheduler re-evaluates every tick and reclaims
+    /// cache-only pins under pressure, which in practice turns the
+    /// overshoot into deferred admissions. The residual hard case — a
+    /// budget-sized pool admitted to the brim AND several lanes
+    /// diverging from the same prefix at once, with nothing reclaimable
+    /// left — exhausts the pool at the fork site and panics, the same
+    /// failure class as the pre-existing pool-exhaustion `expect`.
+    /// Closing it needs fork-aware reservations or slot-level
+    /// indirection; see the ROADMAP "Prefix cache (PR 3)" open item.
     pub fn lane_bound_pages(&self, ar: &ActiveRequest) -> usize {
         let remaining = ar.req.max_new_tokens.saturating_sub(ar.generated.len());
         self.pages_for((ar.slab.len() + remaining).min(self.capacity_limit))
+            .saturating_sub(ar.slab.shared_pages_stable())
     }
 
     /// Could this request ever be admitted on an idle system? Submissions
@@ -103,10 +121,38 @@ impl AdmissionController {
     /// Admission test given the summed bound of the currently-live lanes
     /// and the pages pinned by a chunked-prefill reservation.
     pub fn admits(&self, live_bound_pages: usize, reserved_pages: usize, req: &Request) -> bool {
+        self.admits_pages(live_bound_pages, reserved_pages, self.worst_case_pages(req))
+    }
+
+    /// Page-level admission test: `reserved_pages` carries everything
+    /// charged besides the live bounds (chunked-prefill reservations and
+    /// the charged-once shared pages of the prefix cache), and
+    /// `candidate_pages` is the candidate's worst case minus any
+    /// prefix-cache discount the caller established.
+    pub fn admits_pages(
+        &self,
+        live_bound_pages: usize,
+        reserved_pages: usize,
+        candidate_pages: usize,
+    ) -> bool {
+        self.shortfall_pages(live_bound_pages, reserved_pages, candidate_pages) == 0
+    }
+
+    /// Pages the candidate is short of admission by (0 = admitted). The
+    /// admission loops compare this against the prefix cache's
+    /// reclaimable pins before evicting anything: flushing warm entries
+    /// for a candidate that cannot be admitted anyway would destroy hit
+    /// state for no gain.
+    pub fn shortfall_pages(
+        &self,
+        live_bound_pages: usize,
+        reserved_pages: usize,
+        candidate_pages: usize,
+    ) -> usize {
         live_bound_pages
             .saturating_add(reserved_pages)
-            .saturating_add(self.worst_case_pages(req))
-            <= self.budget_pages
+            .saturating_add(candidate_pages)
+            .saturating_sub(self.budget_pages)
     }
 
     /// Pages a chunked-prefill reservation may grab right now: free
@@ -249,6 +295,67 @@ mod tests {
         assert_eq!(c.lane_bound_pages(&ar), 3);
         ar.generated.extend([5, 6]);
         assert_eq!(c.lane_bound_pages(&ar), 2);
+    }
+
+    #[test]
+    fn admits_pages_charges_shared_once() {
+        let c = ctl(10);
+        // live bounds 4 + (reservation + shared charge) 3 + candidate 3
+        assert!(c.admits_pages(4, 3, 3));
+        assert!(!c.admits_pages(4, 4, 3));
+        // the method backing `admits` is the same arithmetic
+        assert_eq!(c.admits(4, 3, &req(8, 4)), c.admits_pages(4, 3, 3));
+    }
+
+    #[test]
+    fn lane_bound_discounts_stable_shared_pages() {
+        let m = tiny_meta();
+        let c = ctl(100);
+        // 4-slot pages to match the controller's geometry
+        let pool = crate::cache::PagePool::new_shared(
+            m.n_layers,
+            m.n_heads * m.d_head,
+            8,
+            4,
+        );
+        let row = vec![0.0f32; m.n_layers * m.n_heads * m.d_head];
+        let mut donor = KvSlab::in_pool(&pool, 16);
+        for i in 0..6 {
+            donor.append(&row, &row, i, crate::cache::Modality::Text, 0.0);
+        }
+        let pages = donor.mark_all_shared();
+        let meta = donor.meta().to_vec();
+        // simulate the prefix cache pinning the pages
+        {
+            let mut p = pool.borrow_mut();
+            for &pg in &pages {
+                p.retain_page(pg);
+            }
+        }
+        let mut slab = KvSlab::in_pool(&pool, 16);
+        assert!(slab.adopt_shared(&pages, meta));
+        let ar = ActiveRequest {
+            req: req(6, 10),
+            slab,
+            policy: PolicyKind::Full.build(),
+            generated: Vec::new(),
+            pos: 6,
+            prefill_len: 6,
+            pending_token: 0,
+            done: false,
+            forced: None,
+            logits_trace: Vec::new(),
+            score_trace: Vec::new(),
+            evictions: Vec::new(),
+            stats: RequestStats::default(),
+        };
+        // 6 live + 10 remaining = 16 slots, clamped to the 15-slot lane
+        // limit → 4 pages; minus the one *stable* shared page (the full
+        // page 0 — the partial tail page forks on the first append, so
+        // it stays in the private bound)
+        assert_eq!(ar.slab.shared_pages(), 2);
+        assert_eq!(ar.slab.shared_pages_stable(), 1);
+        assert_eq!(c.lane_bound_pages(&ar), 3);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! admissions (`chunked_admits`).
 
 use crate::cache::PoolStats;
+use crate::prefix::PrefixStats;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::percentile;
 
@@ -83,6 +84,24 @@ pub struct MetricsRegistry {
     /// arena pages gathered into batch buffers across all decode steps —
     /// with the incremental lane sync this grows O(dirty pages/step)
     pub pages_copied: u64,
+    /// copy-on-write forks: a sharer diverging from a shared prefix page
+    pub cow_forks: u64,
+    /// refcount violations the pool refused (healthy systems: always 0)
+    pub refcount_errors: u64,
+    // --- prefix cache ------------------------------------------------
+    /// warm admissions served from the radix-tree prefix cache
+    pub prefix_hits: u64,
+    /// cold prefills that consulted the cache and missed
+    pub prefix_misses: u64,
+    /// live cache entries (gauge)
+    pub prefix_entries: usize,
+    /// distinct arena pages charged once against the budget — cache pins
+    /// ∪ lanes' shared pages (gauge): the sharing multiplier made visible
+    pub pages_shared: usize,
+    /// entries LRU-evicted (cap or pool pressure)
+    pub prefix_lru_evictions: u64,
+    /// prompt tokens never recomputed thanks to warm hits
+    pub prefill_tokens_skipped: u64,
     lanes_hist: Vec<u64>,
     ttft_ms: Ring,
     e2e_ms: Ring,
@@ -114,6 +133,14 @@ impl MetricsRegistry {
             chunk_reserved_pages: 0,
             chunked_admits: 0,
             pages_copied: 0,
+            cow_forks: 0,
+            refcount_errors: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_entries: 0,
+            pages_shared: 0,
+            prefix_lru_evictions: 0,
+            prefill_tokens_skipped: 0,
             lanes_hist: vec![0; batch + 1],
             ttft_ms: Ring::default(),
             e2e_ms: Ring::default(),
@@ -132,6 +159,30 @@ impl MetricsRegistry {
         self.page_reuse = pool.reused;
         self.frag_slots = (pool.in_use * pool.page_slots).saturating_sub(live_slots);
         self.reserved_pages = reserved;
+        self.cow_forks = pool.forks;
+        self.refcount_errors = pool.refcount_errors;
+    }
+
+    /// Fold one tick's prefix-cache snapshot into the gauges.
+    /// `shared_charge` is the distinct charged-once page count
+    /// (`Engine::shared_charge_pages`).
+    pub fn record_prefix(&mut self, ps: PrefixStats, shared_charge: usize) {
+        self.prefix_hits = ps.hits;
+        self.prefix_misses = ps.misses;
+        self.prefix_entries = ps.entries;
+        self.prefix_lru_evictions = ps.lru_evictions;
+        self.prefill_tokens_skipped = ps.prefill_tokens_skipped;
+        self.pages_shared = shared_charge;
+    }
+
+    /// Fraction of cache-consulting admissions served warm.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
     }
 
     pub fn record_step(&mut self, lanes: usize, live_kv_bytes: usize) {
@@ -200,6 +251,15 @@ impl MetricsRegistry {
             ("chunk_reserved_pages", num(self.chunk_reserved_pages as f64)),
             ("chunked_admits", num(self.chunked_admits as f64)),
             ("pages_copied", num(self.pages_copied as f64)),
+            ("cow_forks", num(self.cow_forks as f64)),
+            ("refcount_errors", num(self.refcount_errors as f64)),
+            ("prefix_hits", num(self.prefix_hits as f64)),
+            ("prefix_misses", num(self.prefix_misses as f64)),
+            ("prefix_hit_rate", num(self.prefix_hit_rate())),
+            ("prefix_entries", num(self.prefix_entries as f64)),
+            ("pages_shared", num(self.pages_shared as f64)),
+            ("prefix_lru_evictions", num(self.prefix_lru_evictions as f64)),
+            ("prefill_tokens_skipped", num(self.prefill_tokens_skipped as f64)),
             ("ttft_p50_ms", num(self.ttft_ms.p(0.5))),
             ("ttft_p95_ms", num(self.ttft_ms.p(0.95))),
             ("e2e_p50_ms", num(self.e2e_ms.p(0.5))),
@@ -237,6 +297,8 @@ mod tests {
             allocs: 20,
             frees: 15,
             reused: 12,
+            forks: 3,
+            refcount_errors: 0,
         };
         // 5 pages × 8 slots = 40 allocated, 33 live → 7 dead slots
         m.record_pool(snap, 33, 2);
@@ -246,7 +308,43 @@ mod tests {
         assert_eq!(m.frag_slots, 7);
         assert_eq!(m.reserved_pages, 2);
         assert_eq!(m.page_reuse, 12);
+        assert_eq!(m.cow_forks, 3);
+        assert_eq!(m.refcount_errors, 0);
         assert!(m.peak_live_pages <= m.pool_pages, "page invariant");
+    }
+
+    #[test]
+    fn prefix_gauges_and_hit_rate() {
+        let mut m = MetricsRegistry::new(4, 1000, 16, 8);
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no lookups yet");
+        let ps = PrefixStats {
+            hits: 6,
+            misses: 2,
+            entries: 2,
+            pinned_pages: 3,
+            lru_evictions: 1,
+            insertions: 3,
+            prefill_tokens_skipped: 108,
+        };
+        m.record_prefix(ps, 5);
+        assert_eq!(m.prefix_hits, 6);
+        assert_eq!(m.prefix_misses, 2);
+        assert_eq!(m.prefix_entries, 2);
+        assert_eq!(m.pages_shared, 5);
+        assert_eq!(m.prefill_tokens_skipped, 108);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        let j = m.snapshot(0, 0);
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("prefix_hits").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(parsed.get("pages_shared").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(
+            parsed.get("prefill_tokens_skipped").and_then(|v| v.as_usize()),
+            Some(108)
+        );
+        assert_eq!(
+            parsed.get("refcount_errors").and_then(|v| v.as_usize()),
+            Some(0)
+        );
     }
 
     #[test]

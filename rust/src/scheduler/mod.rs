@@ -263,19 +263,35 @@ impl<T> Scheduler<T> {
 
     /// Fill free lanes from the queue while the page-granular admission
     /// test passes; oversized candidates accumulate chunked-prefill
-    /// reservations instead of head-of-line blocking. Per-request
-    /// failures become buffered `Failed` outcomes, never errors — the
-    /// serving loop must survive them.
+    /// reservations instead of head-of-line blocking. Prefix-cache pins
+    /// are charged once (`Engine::shared_charge_pages`) and are
+    /// reclaimable: LRU entries are evicted whenever they are what
+    /// stands between a candidate (or a starving reservation) and its
+    /// pages. Per-request failures become buffered `Failed` outcomes,
+    /// never errors — the serving loop must survive them.
     fn backfill(&mut self, engine: &mut Engine) {
         // 1. top up the chunked-prefill reservation first: pages freed by
         // eviction/retirement go to the oldest oversized request before
-        // anything else can claim them (starvation-freedom)
-        let live = self.live_bound_pages();
-        if let Some(p) = &mut self.pending {
-            let grab = self.admission.reservation_grab(live, p.reserved, p.target);
-            if grab > 0 {
-                p.reserved += grab;
-                self.metrics.chunk_reserved_pages += grab as u64;
+        // anything else can claim them (starvation-freedom). Reclaimable
+        // cache pins (pages no live lane maps) yield to the reservation
+        // too — otherwise a cache full of cold prefixes could starve it;
+        // entries kept alive by live lanes are skipped, since evicting
+        // them frees nothing
+        if self.pending.is_some() {
+            loop {
+                let live = self.live_bound_pages();
+                let shared = engine.shared_charge_pages(&self.lanes);
+                let p = self.pending.as_mut().unwrap();
+                let grab =
+                    self.admission.reservation_grab(live + shared, p.reserved, p.target);
+                if grab >= p.target - p.reserved || !engine.prefix_reclaim_one() {
+                    if grab > 0 {
+                        p.reserved += grab;
+                        self.metrics.chunk_reserved_pages += grab as u64;
+                    }
+                    break;
+                }
+                // an entry was evicted: recompute the grab with its pins gone
             }
         }
         // 2. launch the pending prefill once fully reserved and a lane is
@@ -293,14 +309,46 @@ impl<T> Scheduler<T> {
                 Some(i) => i,
                 None => return,
             };
-            let live = self.live_bound_pages();
-            let reserved = self.pending.as_ref().map_or(0, |p| p.reserved);
-            if !self.admission.admits(live, reserved, &self.queue.peek(cand).req) {
+            // the candidate's worst case is discounted by the pages a
+            // prefix-cache hit would share (those are already in the
+            // charged-once shared term); recomputed after each eviction,
+            // since evicting could remove the very entry it would hit.
+            // Reclaimable pins are evicted only while they can actually
+            // close the shortfall AND a lane is free to take the
+            // admission — a candidate that cannot land this tick must
+            // not flush the cache for nothing
+            let lane_free = self.lanes.iter().any(|l| l.is_none());
+            let admitted = loop {
+                let live = self.live_bound_pages();
+                let shared = engine.shared_charge_pages(&self.lanes);
+                let reserved = self.pending.as_ref().map_or(0, |p| p.reserved);
+                let job = self.queue.peek(cand);
+                let (probe_key, probe_fp) = &job.prefix_probe;
+                let cand_pages = self
+                    .admission
+                    .worst_case_pages(&job.req)
+                    .saturating_sub(engine.prefix_discount_probed(probe_key, *probe_fp));
+                let shortfall =
+                    self.admission.shortfall_pages(live, reserved + shared, cand_pages);
+                if shortfall == 0 {
+                    break true;
+                }
+                if !lane_free
+                    || engine.prefix_reclaimable_pages() < shortfall
+                    || !engine.prefix_reclaim_one()
+                {
+                    break false;
+                }
+            };
+            if !admitted {
                 if self.pending.is_none() {
                     // doesn't fit in one piece: start reserving for it
                     let job = self.queue.remove(cand);
                     let target = self.admission.worst_case_pages(&job.req);
-                    let reserved = self.admission.reservation_grab(live, 0, target);
+                    let live = self.live_bound_pages();
+                    let shared = engine.shared_charge_pages(&self.lanes);
+                    let reserved =
+                        self.admission.reservation_grab(live + shared, 0, target);
                     self.metrics.chunk_reserved_pages += reserved as u64;
                     self.pending = Some(PendingPrefill { job, reserved, target });
                     continue; // smaller jobs may still fit the surplus
@@ -327,15 +375,21 @@ impl<T> Scheduler<T> {
         self.tick_no += 1;
         let (report, done) = step?;
         if report.lanes > 0 {
-            // aggregate live KV at this step, counting lanes that finished
-            // during it — the quantity the admission invariant bounds
-            let live: usize = self
-                .lanes
-                .iter()
-                .flatten()
-                .map(|ar| ar.slab.kv_bytes())
-                .sum::<usize>()
-                + done.iter().map(|(_, ar)| ar.slab.kv_bytes()).sum::<usize>();
+            // aggregate *physical* live KV at this step, counting lanes
+            // that finished during it: private pages by live slots, each
+            // distinct shared page once (full-page granularity) — the
+            // quantity the charged-once admission invariant bounds
+            let page_bytes = self.admission.page_slots * self.admission.kv_bytes_per_token;
+            let mut seen = std::collections::BTreeSet::new();
+            let mut live = 0usize;
+            for ar in self.lanes.iter().flatten().chain(done.iter().map(|(_, ar)| ar)) {
+                live += ar.slab.kv_bytes_private();
+                for p in ar.slab.shared_page_ids() {
+                    if seen.insert(p) {
+                        live += page_bytes;
+                    }
+                }
+            }
             debug_assert!(
                 live <= self.cfg.kv_budget,
                 "admission invariant violated: {} live > {} budget",
@@ -360,6 +414,8 @@ impl<T> Scheduler<T> {
             self.lanes.iter().flatten().map(|ar| ar.slab.len()).sum();
         let reserved = self.pending.as_ref().map_or(0, |p| p.reserved);
         self.metrics.record_pool(pool, live_slots, reserved);
+        self.metrics
+            .record_prefix(engine.prefix_stats(), engine.shared_charge_pages(&self.lanes));
         for (idx, ar) in done {
             let lt = self.tags[idx].take().expect("finished lane carries a tag");
             self.metrics.completed += 1;

@@ -15,6 +15,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::prefix::{request_fingerprint, request_key, KeySym};
 use crate::workload::{Request, WorkloadKind};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,6 +59,11 @@ pub struct QueuedJob<T> {
     pub class: u8,
     pub enqueued_tick: u64,
     pub enqueued_at: Instant,
+    /// prefix-cache probe (radix key + whole-prompt fingerprint),
+    /// hashed ONCE at enqueue: the admission loop consults the cache
+    /// every tick the job waits, and re-hashing a multi-KB vision
+    /// prompt per tick would dwarf the lookup itself
+    pub prefix_probe: (Vec<KeySym>, u64),
 }
 
 pub struct AdmissionQueue<T> {
@@ -92,12 +98,14 @@ impl<T> AdmissionQueue<T> {
             return Err(tag);
         }
         let class = class_of(req.kind);
+        let prefix_probe = (request_key(&req), request_fingerprint(&req));
         self.jobs.push_back(QueuedJob {
             tag,
             req,
             class,
             enqueued_tick: tick,
             enqueued_at: Instant::now(),
+            prefix_probe,
         });
         Ok(())
     }

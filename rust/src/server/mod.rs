@@ -7,6 +7,12 @@
 //!             generators — the "tokenizer + vision encoder" of this
 //!             system; a "seed" field makes the synthesized prompt
 //!             reproducible across connections)
+//!   shared-image QA: {"id": 1, "kind": "qa", "image_seed": 7,
+//!                     "q": "color"|"shape"}
+//!            (the image is drawn from "image_seed" alone, so every
+//!             request naming the same image carries a bit-identical
+//!             visual prefix — the engine's radix-tree prefix cache
+//!             serves repeat questions without recomputing prefill)
 //!   stats:    {"kind": "stats"} → scheduler metrics snapshot
 //!             (queue depth, TTFT/e2e percentiles, lanes histogram,
 //!              admission rejections, aggregate KV bytes)
@@ -30,7 +36,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::Engine;
 use crate::model::{vocab, ModelMeta};
@@ -80,14 +86,28 @@ fn synthesize(
     builder: &mut RequestBuilder,
 ) -> Result<(i64, crate::workload::Request)> {
     let id = j.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
-    let kind = j
+    let kind_str = j
         .get("kind")
         .and_then(|v| v.as_str())
-        .and_then(WorkloadKind::parse)
-        .ok_or_else(|| anyhow!("missing/unknown kind"))?;
-    let mut req = match j.get("seed").and_then(|v| v.as_i64()) {
-        Some(seed) => RequestBuilder::new(meta, grammar, seed as u64).make(kind),
-        None => builder.make(kind),
+        .ok_or_else(|| anyhow!("missing kind (accepted: {})", WorkloadKind::accepted()))?;
+    let kind = WorkloadKind::parse(kind_str).ok_or_else(|| {
+        anyhow!("unknown kind '{}' (accepted: {})", kind_str, WorkloadKind::accepted())
+    })?;
+    let mut req = match (kind, j.get("image_seed").and_then(|v| v.as_i64())) {
+        (WorkloadKind::Understanding, Some(iseed)) => {
+            // shared-image QA: the image depends on image_seed alone, so
+            // co-referencing requests share a bit-identical visual prefix
+            let ask_color = match j.get("q").and_then(|v| v.as_str()) {
+                None | Some("color") => true,
+                Some("shape") => false,
+                Some(other) => bail!("unknown q '{}' (accepted: color, shape)", other),
+            };
+            builder.understanding_shared(iseed as u64, ask_color)
+        }
+        _ => match j.get("seed").and_then(|v| v.as_i64()) {
+            Some(seed) => RequestBuilder::new(meta, grammar, seed as u64).make(kind),
+            None => builder.make(kind),
+        },
     };
     if let Some(mx) = j.get("max_new").and_then(|v| v.as_usize()) {
         req.max_new_tokens = mx;
@@ -386,6 +406,51 @@ mod tests {
         assert!(synthesize(&parse(r#"{"kind": "nope"}"#), &m, &g, &mut b).is_err());
         // malformed lines never reach synthesize: ingest rejects them
         assert!(Json::parse("not json").is_err());
+    }
+
+    #[test]
+    fn kind_errors_list_accepted_values() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 5);
+        let err = synthesize(&parse(r#"{"id": 3, "kind": "nope"}"#), &m, &g, &mut b)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nope"), "names the bad value: {}", err);
+        assert!(err.contains("story") && err.contains("qa"), "lists accepted: {}", err);
+        let err = synthesize(&parse(r#"{"id": 3}"#), &m, &g, &mut b)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("accepted"), "missing kind lists accepted: {}", err);
+        // the error reply the scheduler path sends echoes the id with it
+        let reply = error_reply(Some(3), &err);
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(3));
+        assert!(j.get("error").and_then(|v| v.as_str()).unwrap().contains("accepted"));
+    }
+
+    #[test]
+    fn image_seed_makes_shared_visual_prefixes() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        // two different connection-shared builders: same image_seed →
+        // identical visual prefix, question selected by "q"
+        let mut b1 = RequestBuilder::new(&m, &g, 5);
+        let mut b2 = RequestBuilder::new(&m, &g, 999);
+        let color = parse(r#"{"id": 1, "kind": "qa", "image_seed": 7, "q": "color"}"#);
+        let shape = parse(r#"{"id": 2, "kind": "qa", "image_seed": 7, "q": "shape"}"#);
+        let (_, r1) = synthesize(&color, &m, &g, &mut b1).unwrap();
+        let (_, r2) = synthesize(&color, &m, &g, &mut b2).unwrap();
+        assert_eq!(r1.ids, r2.ids);
+        assert_eq!(r1.patches, r2.patches);
+        let (_, r3) = synthesize(&shape, &m, &g, &mut b1).unwrap();
+        let pre = 1 + m.n_patches;
+        assert_eq!(&r3.patches[..pre * m.patch_dim], &r1.patches[..pre * m.patch_dim]);
+        assert_ne!(r3.ids, r1.ids, "different question token");
+        // unknown q is rejected with the accepted values
+        let bad = parse(r#"{"id": 1, "kind": "qa", "image_seed": 7, "q": "size"}"#);
+        let err = synthesize(&bad, &m, &g, &mut b1).unwrap_err().to_string();
+        assert!(err.contains("size") && err.contains("color"), "{}", err);
     }
 
     #[test]

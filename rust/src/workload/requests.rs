@@ -39,6 +39,13 @@ impl WorkloadKind {
             _ => None,
         }
     }
+
+    /// Accepted spec strings — parse-failure messages (CLI and the
+    /// server's JSON error replies) list these instead of a bare
+    /// rejection.
+    pub fn accepted() -> &'static str {
+        "understanding|qa, story, video, mixed|mmmu"
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -94,6 +101,19 @@ impl<'a> RequestBuilder<'a> {
             self.meta.n_patches,
             self.meta.patch_dim,
         );
+        self.push_image_patches(ids, patches, is_vision, &img);
+        img
+    }
+
+    /// Append an already-materialised image (shared-image requests reuse
+    /// one `SyntheticImage` bit-for-bit across prompts).
+    fn push_image_patches(
+        &self,
+        ids: &mut Vec<i32>,
+        patches: &mut Vec<f32>,
+        is_vision: &mut Vec<bool>,
+        img: &SyntheticImage,
+    ) {
         for p in 0..self.meta.n_patches {
             ids.push(IMG);
             is_vision.push(true);
@@ -101,7 +121,6 @@ impl<'a> RequestBuilder<'a> {
                 &img.patches[p * self.meta.patch_dim..(p + 1) * self.meta.patch_dim],
             );
         }
-        img
     }
 
     fn push_text(
@@ -149,6 +168,59 @@ impl<'a> RequestBuilder<'a> {
             expected_answer: Some(answer),
             images: vec![class],
         }
+    }
+
+    /// Understanding request over a *shared* image: the image is drawn
+    /// from a dedicated RNG seeded by `image_seed`, so every request
+    /// built with the same seed — on any builder, any connection —
+    /// carries a bit-identical `[BOS][img]` prompt prefix. This is the
+    /// prefix cache's target pattern (many questions, one image): with
+    /// only two question tokens, N requests produce at most two distinct
+    /// prompts, and everything past the first two admissions is a warm
+    /// hit. `ask_color` picks the question (and so the expected answer).
+    pub fn understanding_shared(&mut self, image_seed: u64, ask_color: bool) -> Request {
+        let mut img_rng = Rng::new(image_seed);
+        let class = ImageClass::random(&mut img_rng);
+        let img = SyntheticImage::generate(
+            &mut img_rng,
+            class,
+            self.meta.n_patches,
+            self.meta.patch_dim,
+        );
+        let mut ids = Vec::new();
+        let mut patches = Vec::new();
+        let mut is_vision = Vec::new();
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[BOS]);
+        self.push_image_patches(&mut ids, &mut patches, &mut is_vision, &img);
+        let q = if ask_color { Q_COLOR } else { Q_SHAPE };
+        let answer = if ask_color {
+            color_token(class.color)
+        } else {
+            shape_token(class.shape)
+        };
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[q]);
+        self.next_id += 1;
+        Request {
+            id: self.next_id - 1,
+            kind: WorkloadKind::Understanding,
+            ids,
+            patches,
+            is_vision,
+            max_new_tokens: 4,
+            min_new_tokens: 0,
+            expected_answer: Some(answer),
+            images: vec![class],
+        }
+    }
+
+    /// Shared-image multi-question QA batch: `n` requests against one
+    /// image, questions alternating color/shape deterministically — the
+    /// workload `benches/perf_prefix_cache.rs` and the serve bench's
+    /// shared-image client mix measure sharing on.
+    pub fn shared_image_qa(&mut self, image_seed: u64, n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|q| self.understanding_shared(image_seed, q % 2 == 0))
+            .collect()
     }
 
     /// `[BOS] ([img][STORY][color][shape][w…])×(n-1) [img][STORY]` →
@@ -325,6 +397,38 @@ mod tests {
         let last = *r.images.last().unwrap();
         assert_eq!(r.expected_answer.unwrap(), color_token(last.color));
         assert_eq!(*r.ids.last().unwrap(), IMG);
+    }
+
+    #[test]
+    fn shared_image_qa_shares_the_prompt_prefix() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 7);
+        let reqs = b.shared_image_qa(42, 8);
+        assert_eq!(reqs.len(), 8);
+        let prefix_len = 1 + m.n_patches; // [BOS][img]
+        for r in &reqs {
+            assert_eq!(r.prompt_len(), prefix_len + 1);
+            assert_eq!(&r.ids[..prefix_len], &reqs[0].ids[..prefix_len]);
+            assert_eq!(
+                &r.patches[..prefix_len * m.patch_dim],
+                &reqs[0].patches[..prefix_len * m.patch_dim],
+                "bit-identical image features"
+            );
+            assert!(r.expected_answer.is_some());
+        }
+        // exactly two distinct prompts (color/shape question), alternating
+        assert_eq!(reqs[0].ids, reqs[2].ids);
+        assert_eq!(reqs[1].ids, reqs[3].ids);
+        assert_ne!(reqs[0].ids, reqs[1].ids);
+        // any builder at any workload seed reproduces the same prefix
+        let mut b2 = RequestBuilder::new(&m, &g, 999);
+        let other = b2.understanding_shared(42, true);
+        assert_eq!(other.ids, reqs[0].ids);
+        assert_eq!(other.patches, reqs[0].patches);
+        // a different image seed diverges
+        let diff = b2.understanding_shared(43, true);
+        assert_ne!(diff.patches, reqs[0].patches);
     }
 
     #[test]

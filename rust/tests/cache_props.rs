@@ -317,6 +317,111 @@ fn prop_page_pool_never_leaks_across_lifecycles() {
     });
 }
 
+/// Copy-on-write correctness over shared prefixes: several slabs adopt
+/// one donor's pages, then mutate independently (appends, evictions).
+/// After every operation, each slab — and the pristine pinned image the
+/// "cache" holds — reads exactly its own model's bytes: a write through
+/// one page table never changes bytes read through a sibling table. At
+/// teardown, dropping every sharer and unpinning returns every page
+/// (the no-leak invariant extended to shared pages).
+#[test]
+fn prop_cow_writes_never_leak_across_sharers() {
+    let m = tiny_meta();
+    let row = m.n_heads * m.d_head;
+    let token_row = m.n_layers * row;
+    run_prop("cow-isolation", PropConfig { cases: 48, seed: 17 }, |rng, _| {
+        let pool = PagePool::new_shared(m.n_layers, row, 64, 4);
+        // donor: the "cold prefill" whose pages get pinned + shared
+        let n0 = 4 + rng.below(16);
+        let mut donor = KvSlab::in_pool(&pool, 48);
+        let mut next_val = 1.0f32;
+        let val_row = |v: f32| vec![v; token_row];
+        for i in 0..n0 {
+            donor.append(&val_row(next_val), &val_row(next_val), i as i32,
+                         Modality::Text, 0.0);
+            next_val += 1.0;
+        }
+        let pages = donor.mark_all_shared();
+        let meta = donor.meta().to_vec();
+        // the simulated prefix-cache pin: one extra reference per page
+        {
+            let mut p = pool.borrow_mut();
+            for &pg in &pages {
+                assert!(p.retain_page(pg));
+            }
+        }
+        // the pristine image the cache must preserve: (position, value)
+        let frozen: Vec<(i32, f32)> =
+            (0..n0).map(|i| (i as i32, donor.k_row(0, i)[0])).collect();
+
+        // sharers adopt; every slab (donor included) mutates independently
+        let mut slabs = vec![donor];
+        let mut models: Vec<Vec<(i32, f32)>> = vec![frozen.clone()];
+        for _ in 0..1 + rng.below(3) {
+            let mut s = KvSlab::in_pool(&pool, 48);
+            assert!(s.adopt_shared(&pages, meta.clone()));
+            slabs.push(s);
+            models.push(frozen.clone());
+        }
+        let mut pos = n0 as i32;
+        for _ in 0..30 {
+            let who = rng.below(slabs.len());
+            if rng.bool(0.6) {
+                if slabs[who].len() < slabs[who].capacity() {
+                    slabs[who].append(&val_row(next_val), &val_row(next_val), pos,
+                                      Modality::Text, 0.0);
+                    models[who].push((pos, next_val));
+                    next_val += 1.0;
+                    pos += 1;
+                }
+            } else if slabs[who].len() > 1 {
+                let k = rng.below(slabs[who].len().min(5));
+                let victims = rng.choose_k(slabs[who].len(), k);
+                slabs[who].evict(&victims);
+                let mut sorted = victims.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                for &e in sorted.iter().rev() {
+                    models[who].remove(e);
+                }
+            }
+            // every slab still reads exactly its own bytes
+            for (s, model) in slabs.iter().zip(&models) {
+                assert_eq!(s.len(), model.len());
+                for (slot, &(p, v)) in model.iter().enumerate() {
+                    assert_eq!(s.meta()[slot].position, p, "position follows slot");
+                    assert_eq!(s.k_row(0, slot)[0], v, "K row isolated");
+                    assert_eq!(s.v_row(m.n_layers - 1, slot)[0], v, "V row isolated");
+                }
+            }
+            // ...and the pinned image is untouched by any of them
+            {
+                let p = pool.borrow();
+                for (i, &(_, v)) in frozen.iter().enumerate() {
+                    let (pg, off) = (pages[i / 4], i % 4);
+                    assert_eq!(
+                        p.read_row(pg, off, 0, false)[0],
+                        v,
+                        "cache-pinned page mutated through a sharer"
+                    );
+                }
+            }
+        }
+        // teardown: all sharers gone + cache unpinned → zero pages held
+        drop(slabs);
+        {
+            let mut p = pool.borrow_mut();
+            for &pg in &pages {
+                assert!(p.release(pg));
+            }
+        }
+        let s = pool.borrow().stats();
+        assert_eq!(pool.borrow().in_use_pages(), 0, "no page leaked");
+        assert_eq!(s.refcount_errors, 0, "no refcount violation under CoW");
+        assert_eq!(s.allocs - s.frees, 0);
+    });
+}
+
 /// Every decode policy keeps the cache within the hard capacity limit and
 /// only ever evicts/marks valid slots.
 #[test]

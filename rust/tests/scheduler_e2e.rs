@@ -46,6 +46,7 @@ fn concurrent_clients_share_lanes_under_budget() {
         batch,
         Some(budget),
         SchedPolicy::Priority,
+        true,
     );
     assert!(wait_listening(ADDR), "server came up");
 
@@ -222,7 +223,122 @@ fn chunked_prefill_admits_oversized_prompt_incrementally() {
         "B must have been admitted through the chunked-prefill path"
     );
     assert!(sched.metrics.chunk_reserved_pages >= b_target_pages as u64);
-    assert_eq!(engine.pool_stats().in_use, 0, "drained arena holds no pages");
+    // after the drain, only prefix-cache pins may remain (retired lanes
+    // returned everything else); evicting the cache empties the arena
+    assert_eq!(
+        engine.pool_stats().in_use,
+        engine.prefix_pinned_pages(),
+        "drained arena holds only prefix-cache pins"
+    );
+    while engine.prefix_evict_one() {}
+    assert_eq!(engine.pool_stats().in_use, 0, "reclaimed arena holds no pages");
+    assert_eq!(engine.pool_stats().refcount_errors, 0);
+}
+
+/// Prefix sharing end-to-end: 8 questions against one image. Serially
+/// (where decode numerics are identical), warm outputs are
+/// byte-identical to a prefix-cache-off engine; through the scheduler,
+/// warm admissions skip prefill (≥6 of 8 hits at 2 distinct prompts),
+/// shared pages are charged once and surfaced in the metrics, and the
+/// every-step invariants — live pages ≤ pool, zero refcount errors, no
+/// page leaks beyond the cache's own pins — hold with sharing enabled.
+#[test]
+fn prefix_sharing_serves_shared_image_qa() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&artifact_dir()).unwrap();
+    let meta = manifest.model.clone();
+    let grammar = load_grammar(&artifact_dir());
+
+    // (a) serial byte-identity: cache off vs on, batch 1, same requests
+    let mut b = RequestBuilder::new(&meta, &grammar, 5);
+    let reqs = b.shared_image_qa(11, 8);
+    let mut cold = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            prefix_cache: false,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    cold.rt.warmup(&[1]).unwrap();
+    let mut warm = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
+    )
+    .unwrap();
+    warm.rt.warmup(&[1]).unwrap();
+    for r in &reqs {
+        let c = cold.generate(r.clone()).unwrap();
+        let w = warm.generate(r.clone()).unwrap();
+        assert_eq!(
+            w.generated, c.generated,
+            "warm output differs from cold for request {}",
+            r.id
+        );
+    }
+    let ps = warm.prefix_stats();
+    assert!(ps.hits >= 6, "2 distinct prompts over 8 requests: {:?}", ps);
+    assert!(ps.prefill_tokens_skipped >= (6 * reqs[0].prompt_len()) as u64);
+    assert_eq!(warm.pool_stats().refcount_errors, 0);
+
+    // (b) the scheduler path: invariants every tick with sharing on
+    let batch = widest_batch();
+    let mut engine = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            batch,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    engine.rt.warmup(&[batch]).unwrap();
+    let mut sched: Scheduler<u64> =
+        Scheduler::for_engine(SchedulerConfig::default(), &engine);
+    let mut b = RequestBuilder::new(&meta, &grammar, 6);
+    for r in b.shared_image_qa(12, 8) {
+        sched.submit(r.id, r).unwrap();
+    }
+    let pool_pages = engine.pool_pages();
+    let mut done = 0usize;
+    let mut max_shared = 0usize;
+    for _ in 0..5000 {
+        if !sched.has_work() {
+            break;
+        }
+        sched.tick(&mut engine).unwrap();
+        let pool = engine.pool_stats();
+        assert!(
+            pool.in_use <= pool_pages,
+            "live pages {} > pool {}",
+            pool.in_use,
+            pool_pages
+        );
+        assert_eq!(pool.refcount_errors, 0, "refcount violation under sharing");
+        max_shared = max_shared.max(sched.metrics.pages_shared);
+        for outcome in sched.take_outcomes() {
+            match outcome {
+                SchedOutcome::Done { ar, .. } => {
+                    assert!(!ar.generated.is_empty());
+                    done += 1;
+                }
+                SchedOutcome::Failed { tag, error } => {
+                    panic!("request {} failed: {}", tag, error);
+                }
+            }
+        }
+    }
+    assert_eq!(done, 8, "all shared-image questions completed");
+    let ps = engine.prefix_stats();
+    assert!(ps.hits >= 6, "sharing engaged under the scheduler: {:?}", ps);
+    assert!(max_shared >= 1, "charged-once shared pages surfaced in metrics");
+    // zero page leaks beyond the cache's own pins
+    assert_eq!(engine.pool_stats().in_use, engine.prefix_pinned_pages());
+    while engine.prefix_evict_one() {}
+    assert_eq!(engine.pool_stats().in_use, 0, "reclaimed arena holds nothing");
 }
 
 #[test]
@@ -238,6 +354,7 @@ fn tiny_budget_rejects_gracefully() {
         1,
         Some(1024),
         SchedPolicy::Fifo,
+        true,
     );
     assert!(wait_listening(ADDR), "server came up");
 

@@ -21,6 +21,7 @@ fn server_round_trip_and_shutdown() {
         1,
         None,
         SchedPolicy::Fifo,
+        true,
     );
     assert!(wait_listening(ADDR), "server came up");
 
