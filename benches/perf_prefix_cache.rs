@@ -251,6 +251,101 @@ fn engine_table(n_images: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Partial-prefix warm starts: a multi-turn dialog — distinct question
+/// prompts, one image — where exact-match reuse is impossible. Asserts
+/// the acceptance criteria: every warm turn's output is byte-identical
+/// to its own cold run, no exact hits occur, every turn after the first
+/// is a partial hit, and the prefill tokens skipped reach at least the
+/// shared-prefix fraction of the warm turns' prompt tokens.
+fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
+    let rt = match load_runtime() {
+        Ok(rt) => rt,
+        Err(_) => {
+            eprintln!(
+                "artifacts not built (run `make artifacts`) — skipping the\n\
+                 partial-hit dialog section"
+            );
+            return Ok(());
+        }
+    };
+    let grammar = load_grammar(&artifact_dir());
+    let meta = rt.meta().clone();
+    let mut b = RequestBuilder::new(&meta, &grammar, 11);
+    let turns = b.shared_image_dialog(2000, n_turns);
+    let prefix_len = 1 + meta.n_patches; // [BOS][img]
+    let warm_prompt_tokens: usize = turns[1..].iter().map(|r| r.prompt_len()).sum();
+
+    let (cold_wall, cold_prefill, cold_out, _) = run_mode(rt, false, &turns)?;
+    let (warm_wall, warm_prefill, warm_out, ps) =
+        run_mode(load_runtime()?, true, &turns)?;
+
+    // acceptance: byte-identity per turn, partial hits only, skip rate ≥
+    // the shared-prefix fraction
+    assert_eq!(cold_out.len(), warm_out.len());
+    for (i, (c, w)) in cold_out.iter().zip(&warm_out).enumerate() {
+        assert_eq!(c, w, "turn {} diverged between cold and warm", i);
+    }
+    assert_eq!(ps.hits, 0, "distinct prompts: exact hits are impossible");
+    assert!(
+        ps.partial_hits as usize >= n_turns - 1,
+        "turns 1..{} must warm-start partially: {:?}",
+        n_turns,
+        ps
+    );
+    let skipped = ps.prefill_tokens_skipped as usize;
+    let shared = (n_turns - 1) * prefix_len;
+    assert!(
+        skipped >= shared,
+        "skipped {} < {} ({} warm turns × {}-token shared prefix)",
+        skipped,
+        shared,
+        n_turns - 1,
+        prefix_len
+    );
+    let shared_frac = shared as f64 / warm_prompt_tokens as f64;
+    let skip_frac = skipped as f64 / warm_prompt_tokens as f64;
+    assert!(
+        skip_frac + 1e-9 >= shared_frac,
+        "skip rate {:.1}% below the shared-prefix fraction {:.1}%",
+        skip_frac * 100.0,
+        shared_frac * 100.0
+    );
+
+    let mut table = Table::new(
+        &format!(
+            "partial warm starts: {}-turn dialog, 1 image, distinct prompts \
+             (outputs byte-identical per turn)",
+            n_turns
+        ),
+        &["mode", "wall s", "prefill s", "partial hits",
+          "prefill tok skipped", "skip rate vs shared-prefix frac"],
+    );
+    table.row(vec![
+        "prefix cache off".into(),
+        f2(cold_wall),
+        f2(cold_prefill),
+        "0".into(),
+        "0".into(),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "prefix cache on".into(),
+        f2(warm_wall),
+        f2(warm_prefill),
+        format!("{}", ps.partial_hits),
+        format!("{}", skipped),
+        format!("{:.1}% ≥ {:.1}%", skip_frac * 100.0, shared_frac * 100.0),
+    ]);
+    table.print();
+    println!(
+        "\n(no two turns share a whole prompt, so PR 3's exact matching would\n\
+         recompute every visual prefix; the partial path adopts the image's\n\
+         unpruned KV copy-on-write, recomputes only the dialog text through\n\
+         the decode executables, and re-runs the DAP decision per turn)"
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let iters = bench_n(200);
     let mut table = Table::new(
@@ -260,5 +355,6 @@ fn main() -> anyhow::Result<()> {
     primitives(&mut table, iters);
     cow_costs(&mut table, iters);
     table.print();
-    engine_table(3)
+    engine_table(3)?;
+    dialog_table(8)
 }

@@ -132,6 +132,7 @@ def lower_all(out_dir: str, verbose=True):
             jax.ShapeDtypeStruct((s, cfg.patch_dim), f32),       # patches
             jax.ShapeDtypeStruct((s,), f32),                     # is_vision
             jax.ShapeDtypeStruct((), i32),                       # n_tokens
+            jax.ShapeDtypeStruct((), i32),                       # n_prefix
         ]
         emit(f"prefill_s{s}", M.prefill_fn(cfg), specs)
         table.append({"name": f"prefill_s{s}", "kind": "prefill", "bucket": s})
@@ -156,7 +157,8 @@ def lower_all(out_dir: str, verbose=True):
             jax.ShapeDtypeStruct((s,), i32),
             jax.ShapeDtypeStruct((s, cfg.patch_dim), f32),
             jax.ShapeDtypeStruct((s,), f32),
-            jax.ShapeDtypeStruct((), i32),
+            jax.ShapeDtypeStruct((), i32),                       # n_tokens
+            jax.ShapeDtypeStruct((), i32),                       # n_prefix
         ]
         emit(f"analysis_s{s}", M.prefill_fn(cfg, collect_layers=True), specs)
         table.append({"name": f"analysis_s{s}", "kind": "analysis", "bucket": s})

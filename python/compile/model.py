@@ -115,14 +115,24 @@ def prefill_fn(cfg: ModelConfig = MODEL, *, use_pallas: bool = True,
                collect_layers: bool = False):
     """Build the prefill graph for a static bucket size.
 
-    Returns fn(*params_flat, ids[S], patches[S,PD], is_vision[S], n_tokens)
-      -> (logits[V], k[L,S,H,Dh], v[L,S,H,Dh], dap_sum[S], dap_max[S])
+    Returns fn(*params_flat, ids[S], patches[S,PD], is_vision[S], n_tokens,
+               n_prefix)
+      -> (logits[V], k[L,S,H,Dh], v[L,S,H,Dh], dap_sum[S], dap_max[S],
+          dap_psum[S], dap_pmax[S])
     and, with collect_layers=True, additionally the per-layer stats used by
     the analysis artifact.
+
+    `n_prefix` marks the reusable-prefix boundary (one past the last vision
+    token; 0 = none): dap_psum/dap_pmax are the same Eq. 1/3 column
+    statistics restricted to text query rows < n_prefix. The rust prefix
+    cache stores them with the unpruned prefix KV so a later prompt sharing
+    only the prefix can rebuild its OWN full-prompt statistics — cached
+    prefix rows + its recomputed suffix rows (decode graph's dap_row) —
+    and re-run the pruning decision per request.
     """
 
     def fn(*args):
-        flat, (ids, patches, is_vision, n_tokens) = args[:-4], args[-4:]
+        flat, (ids, patches, is_vision, n_tokens, n_prefix) = args[:-5], args[-5:]
         p = params_dict(flat)
         s = ids.shape[0]
         pos_idx = jnp.arange(s)
@@ -137,11 +147,14 @@ def prefill_fn(cfg: ModelConfig = MODEL, *, use_pallas: bool = True,
         vis_mask = causal * valid[None, :]
         mask = jnp.where(vis_mask > 0, 0.0, -1e9).astype(jnp.float32)
 
-        # text-row weight for DAP: valid AND text
+        # text-row weight for DAP: valid AND text; the prefix-restricted
+        # variant additionally zeroes rows at/after the prefix boundary
         row_w = valid * (1.0 - is_vision)
+        row_w_prefix = row_w * (pos_idx < n_prefix).astype(jnp.float32)
 
         ks, vs = [], []
         dap_sum = dap_max = None
+        dap_psum = dap_pmax = None
         layer_stats = []
         for l in range(cfg.n_layers):
             h = _ln(x, p["ln1_s"][l], p["ln1_b"][l])
@@ -155,8 +168,10 @@ def prefill_fn(cfg: ModelConfig = MODEL, *, use_pallas: bool = True,
             if l == cfg.dap_layer:
                 if use_pallas:
                     dap_sum, dap_max = dap_k.dap_stats(probs, row_w)
+                    dap_psum, dap_pmax = dap_k.dap_stats(probs, row_w_prefix)
                 else:
                     dap_sum, dap_max = kref.dap_stats_ref(probs, row_w)
+                    dap_psum, dap_pmax = kref.dap_stats_ref(probs, row_w_prefix)
             if collect_layers:
                 # Scale-faithful sparsity threshold: the paper uses
                 # ε = 1e-4 at ~2357-token contexts ≈ 0.24× the uniform
@@ -187,7 +202,8 @@ def prefill_fn(cfg: ModelConfig = MODEL, *, use_pallas: bool = True,
             probs0 = layer_stats[0][3]                             # [H,S,S]
             return (logits, k_cache, v_cache, dap_sum, dap_max,
                     sparsity, colsum, colmax, probs0)
-        return logits, k_cache, v_cache, dap_sum, dap_max
+        return (logits, k_cache, v_cache, dap_sum, dap_max,
+                dap_psum, dap_pmax)
 
     return fn
 
@@ -202,14 +218,20 @@ def decode_fn(cfg: ModelConfig = MODEL):
     fn(*params_flat, token[B], pos[B], k_cache[B,L,C,H,Dh],
        v_cache[B,L,C,H,Dh], length[B])
       -> (logits[B,V], k_new[B,L,H,Dh], v_new[B,L,H,Dh],
-          attn[B,L,H,C], self_attn[B,L,H])
+          attn_mean[B,C], attn_peak[B,C], self_mean[B],
+          dap_row[B,C], dap_row_self[B])
 
     The new token attends to the first length[b] cache slots plus itself;
     its own K/V are returned for rust to append to the host slab. `attn`
     carries the post-softmax probability mass each cache slot received this
     step (per layer and head) — the raw material for H2O/DDES/SnapKV/AdaKV
     accounting; `self_attn` is the mass on the token itself (the initial
-    score of the new slot).
+    score of the new slot). `dap_row`/`dap_row_self` are the dap layer's
+    head-mean probabilities for this query row — exactly one row's
+    contribution to the prefill graph's Eq. 1 column sum and Eq. 3 column
+    max, which is what lets a partial-prefix warm start rebuild a
+    request's own DAP statistics while recomputing only its text suffix
+    through this graph.
     """
 
     def fn(*args):
@@ -224,6 +246,7 @@ def decode_fn(cfg: ModelConfig = MODEL):
         valid = (slot[None, :] < length[:, None]).astype(jnp.float32)  # [B,C]
 
         k_news, v_news, attns, self_attns = [], [], [], []
+        dap_row = dap_row_self = None
         for l in range(cfg.n_layers):
             h = _ln(x, p["ln1_s"][l], p["ln1_b"][l])
             q = _split_heads(h @ p["wq"][l], cfg)            # [B,H,Dh]
@@ -237,6 +260,14 @@ def decode_fn(cfg: ModelConfig = MODEL):
             full = jnp.concatenate([scores, self_score[:, :, None]], axis=-1)
             probs = jax.nn.softmax(full, axis=-1)            # [B,H,C+1]
             pc, ps = probs[:, :, :c], probs[:, :, c]
+            if l == cfg.dap_layer:
+                # head-mean row of the dap layer: this query's Eq. 1/3
+                # contribution per cache column (+ its own column). Must
+                # aggregate exactly like kernels/dap.py's pbar (sum over
+                # heads / n_heads) so prefill-time and replay-time
+                # statistics agree.
+                dap_row = jnp.sum(pc, axis=1) / jnp.float32(cfg.n_heads)   # [B,C]
+                dap_row_self = jnp.sum(ps, axis=1) / jnp.float32(cfg.n_heads)  # [B]
             out = (jnp.einsum("bhc,bchd->bhd", pc, vc)
                    + ps[:, :, None] * v)                     # [B,H,Dh]
             x = x + out.reshape(b, cfg.d_attn) @ p["wo"][l]
@@ -260,7 +291,8 @@ def decode_fn(cfg: ModelConfig = MODEL):
         attn_mean = jnp.mean(attn, axis=(1, 2))              # [B,C]
         attn_peak = jnp.max(jnp.mean(attn, axis=1), axis=1)  # [B,C]
         self_mean = jnp.mean(self_attn, axis=(1, 2))         # [B]
-        return logits, k_new, v_new, attn_mean, attn_peak, self_mean
+        return (logits, k_new, v_new, attn_mean, attn_peak, self_mean,
+                dap_row, dap_row_self)
 
     return fn
 

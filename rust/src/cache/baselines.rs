@@ -66,7 +66,7 @@ impl EvictionPolicy for FastV {
         let keep_n = ((vision.len() as f32 * self.retain_ratio).round() as usize)
             .clamp(1, vision.len());
         let mut ranked = vision.clone();
-        ranked.sort_by(|&a, &b| ctx.dap_sum[b].partial_cmp(&ctx.dap_sum[a]).unwrap());
+        ranked.sort_by(|&a, &b| ctx.dap_sum[b].total_cmp(&ctx.dap_sum[a]));
         let kept: std::collections::BTreeSet<usize> =
             ranked.into_iter().take(keep_n).collect();
         PrefillDecision::retain(
@@ -104,7 +104,7 @@ impl EvictionPolicy for SparseVlm {
         let keep_n = ((vision.len() as f32 * self.retain_ratio).round() as usize)
             .clamp(1, vision.len());
         let mut ranked = vision.clone();
-        ranked.sort_by(|&a, &b| ctx.dap_sum[b].partial_cmp(&ctx.dap_sum[a]).unwrap());
+        ranked.sort_by(|&a, &b| ctx.dap_sum[b].total_cmp(&ctx.dap_sum[a]));
         let kept: Vec<usize> = ranked[..keep_n].to_vec();
         let dropped: Vec<usize> = ranked[keep_n..].to_vec();
 
@@ -344,8 +344,7 @@ impl EvictionPolicy for MustDrop {
         vis.sort_by(|&a, &b| {
             ctx.slab.meta()[a]
                 .cum_score
-                .partial_cmp(&ctx.slab.meta()[b].cum_score)
-                .unwrap()
+                .total_cmp(&ctx.slab.meta()[b].cum_score)
         });
         let mut evict: Vec<usize> = vis.into_iter().take(len - budget).collect();
         if evict.is_empty() {
@@ -396,7 +395,7 @@ impl EvictionPolicy for SnapKv {
         self.decisions += 1;
         let window_start = n.saturating_sub(self.window);
         let mut prefix: Vec<usize> = (0..window_start).collect();
-        prefix.sort_by(|&a, &b| ctx.dap_sum[b].partial_cmp(&ctx.dap_sum[a]).unwrap());
+        prefix.sort_by(|&a, &b| ctx.dap_sum[b].total_cmp(&ctx.dap_sum[a]));
         let keep_prefix = self.budget.saturating_sub(n - window_start);
         let mut retain: Vec<usize> = prefix.into_iter().take(keep_prefix).collect();
         retain.extend(window_start..n);
@@ -468,7 +467,7 @@ impl EvictionPolicy for AdaKv {
             let m = &ctx.slab.meta()[i];
             (1.0 - w) * m.cum_score + w * m.cum_peak
         };
-        idx.sort_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap().then(a.cmp(&b)));
+        idx.sort_by(|&a, &b| score(a).total_cmp(&score(b)).then(a.cmp(&b)));
         let mut evict: Vec<usize> = idx.into_iter().take(len - budget).collect();
         evict.sort_unstable();
         StepDecision { mark: Vec::new(), evict }

@@ -114,7 +114,7 @@ impl Hae {
         if let Some(cap) = max_evict {
             if evict.len() > cap {
                 // keep the weakest `cap` evictions (lowest global mass)
-                evict.sort_by(|&a, &b| colsum[a].partial_cmp(&colsum[b]).unwrap());
+                evict.sort_by(|&a, &b| colsum[a].total_cmp(&colsum[b]));
                 evict.truncate(cap);
                 evict.sort_unstable();
             }

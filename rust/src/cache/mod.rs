@@ -93,6 +93,28 @@ impl PolicyKind {
         !matches!(self, PolicyKind::Random { .. })
     }
 
+    /// Whether *partial*-prefix warm starts preserve this policy's cold
+    /// behaviour. The partial path replays the retention decision from
+    /// reconstructed DAP statistics (cached prefix-row contributions +
+    /// this request's own suffix rows) — sound only when the policy's
+    /// `prefill` is a pure function of those statistics. Policies that
+    /// read the raw prompt KV or rewrite it (`kv_override`: ToMe,
+    /// SparseVLM, MustDrop merge KV rows the replay cannot reproduce
+    /// without the full bucket-major prefill output) go cold on a
+    /// partial match instead; exact hits still serve them.
+    pub fn partial_safe(&self) -> bool {
+        matches!(
+            self,
+            PolicyKind::Full
+                | PolicyKind::Hae(_)
+                | PolicyKind::H2o { .. }
+                | PolicyKind::SnapKv { .. }
+                | PolicyKind::AdaKv { .. }
+                | PolicyKind::FastV { .. }
+                | PolicyKind::Window { .. }
+        )
+    }
+
     /// Parse a policy spec string, e.g. `hae`, `hae:r=0.002,rc=64`,
     /// `h2o:budget=200`, `fastv:ratio=0.33`. Used by the CLI and the bench
     /// harnesses.
@@ -333,6 +355,20 @@ mod tests {
         }
         // random consumes its RNG at prefill: a warm hit would desync it
         assert!(!PolicyKind::parse("random").unwrap().prefix_safe());
+    }
+
+    #[test]
+    fn partial_safety_excludes_kv_rewriting_policies() {
+        for spec in ["full", "hae", "h2o", "snapkv", "adakv", "fastv", "window"] {
+            let k = PolicyKind::parse(spec).unwrap();
+            assert!(k.partial_safe(), "{} decides from stats alone", spec);
+            assert!(k.prefix_safe(), "partial_safe must imply prefix_safe");
+        }
+        // kv_override policies merge prompt KV rows the replay cannot
+        // reproduce; random is unsafe for any warm start
+        for spec in ["mustdrop", "sparsevlm", "tome", "random"] {
+            assert!(!PolicyKind::parse(spec).unwrap().partial_safe(), "{}", spec);
+        }
     }
 
     #[test]

@@ -124,10 +124,11 @@ pub fn lowest_score_slots(slab: &KvSlab, n: usize, protect: usize) -> Vec<usize>
     let evictable = len.saturating_sub(protect);
     let mut idx: Vec<usize> = (0..evictable).collect();
     idx.sort_by(|&a, &b| {
+        // total_cmp: a NaN score (poisoned logits upstream) must rank a
+        // slot, not panic the serving loop mid-batch
         slab.meta()[a]
             .cum_score
-            .partial_cmp(&slab.meta()[b].cum_score)
-            .unwrap()
+            .total_cmp(&slab.meta()[b].cum_score)
             .then(a.cmp(&b))
     });
     idx.truncate(n);
@@ -143,10 +144,11 @@ pub fn lowest_unmarked_slots(slab: &KvSlab, n: usize, protect: usize) -> Vec<usi
         .filter(|&i| !slab.meta()[i].marked)
         .collect();
     idx.sort_by(|&a, &b| {
+        // total_cmp: a NaN score (poisoned logits upstream) must rank a
+        // slot, not panic the serving loop mid-batch
         slab.meta()[a]
             .cum_score
-            .partial_cmp(&slab.meta()[b].cum_score)
-            .unwrap()
+            .total_cmp(&slab.meta()[b].cum_score)
             .then(a.cmp(&b))
     });
     idx.truncate(n);

@@ -222,7 +222,18 @@ impl KvSlab {
     /// forks). This is the admission discount — see
     /// scheduler/admission.rs.
     pub fn shared_pages_stable(&self) -> usize {
-        self.table.shared_count() - usize::from(self.unstable_tail_page().is_some())
+        self.table.shared_count() - self.fork_allowance_pages()
+    }
+
+    /// Pages the admission bound must reserve for this slab's own CoW
+    /// forks: the shared *partial tail* page, which the first append
+    /// forks into a fresh allocation. Kept inside the lane's private
+    /// page bound (`AdmissionController::lane_bound_pages`) while the
+    /// original tail stays charged once globally — the double charge IS
+    /// the reservation that guarantees `ensure_private` never meets an
+    /// empty pool on the append path.
+    pub fn fork_allowance_pages(&self) -> usize {
+        usize::from(self.unstable_tail_page().is_some())
     }
 
     /// Bytes of one live slot (K+V for one token across all layers) —
@@ -303,8 +314,16 @@ impl KvSlab {
             let mut pool = self.pool.borrow_mut();
             // CoW barrier: appending into a shared (adopted) partial tail
             // page forks it first, so the prefix cache's image — and every
-            // co-sharing request — never sees this request's generation
-            self.table.ensure_private(&mut pool, pi);
+            // co-sharing request — never sees this request's generation.
+            // The fork's fresh page is reserved by the admission fork
+            // allowance (the shared partial tail stays inside the lane's
+            // private page bound while the original is charged once
+            // globally), so exhaustion here means broken accounting —
+            // the same bug class as the ensure_page expect above.
+            self.table.ensure_private(&mut pool, pi).expect(
+                "page pool exhausted forking the shared tail \
+                 (the admission fork allowance must reserve it)",
+            );
             let (page, off) = (self.table.page(pi), slot % self.page_slots);
             pool.write_slot(page, off, k_row, v_row);
         }
@@ -430,7 +449,26 @@ impl KvSlab {
     /// Slide-down writes into a shared page fork it first (CoW): evicting
     /// inside a shared prefix detaches this slab's copy and leaves the
     /// cached original intact. Returns the number of evicted slots.
+    ///
+    /// Panics when the pool cannot supply a CoW fork page — the contract
+    /// of the standalone/private-pool callers, for whom a fork can never
+    /// be needed. Serving paths, where divergence from a shared prefix
+    /// under a tight budget is real, use [`Self::try_compact`] and defer.
     pub fn compact(&mut self, retain: &[usize]) -> usize {
+        self.try_compact(retain).expect(
+            "page pool exhausted during CoW compaction \
+             (serving callers must use try_compact and defer)",
+        )
+    }
+
+    /// Fallible [`Self::compact`]: `None` — with every slot still live
+    /// and in place — when a copy-on-write fork cannot get a page. All
+    /// forks run in a pre-pass *before* the first slot moves, so a
+    /// mid-compaction exhaustion can never leave the slab half-slid:
+    /// pages forked before the failure simply stay private (their
+    /// content is byte-identical to the shared original), and the caller
+    /// retries after pages free up.
+    pub fn try_compact(&mut self, retain: &[usize]) -> Option<usize> {
         debug_assert!(
             retain.windows(2).all(|w| w[0] < w[1]),
             "retain must be strictly ascending (ascending + deduped)"
@@ -441,10 +479,26 @@ impl KvSlab {
         );
         let evicted = self.meta.len() - retain.len();
         if evicted == 0 {
-            return 0;
+            return Some(0);
         }
         assert!(!self.released, "compact of a released slab");
-        let mut first_moved: Option<usize> = None;
+        let first_moved = retain
+            .iter()
+            .enumerate()
+            .find(|&(dst, &src)| dst != src)
+            .map(|(dst, _)| dst);
+        if let Some(fm) = first_moved {
+            // CoW pre-pass: privatize every page the slide-down will
+            // write (first moved slot → last retained slot) before any
+            // copy. Forking up front is consistent — fork-time content
+            // equals what the not-yet-slid source reads expect — and it
+            // makes exhaustion recoverable instead of corrupting state.
+            let dst_pages = pages_for_slots(retain.len(), self.page_slots);
+            let mut pool = self.pool.borrow_mut();
+            for pi in (fm / self.page_slots)..dst_pages {
+                self.table.ensure_private(&mut pool, pi)?;
+            }
+        }
         {
             let mut pool = self.pool.borrow_mut();
             for (dst_slot, &src_slot) in retain.iter().enumerate() {
@@ -452,13 +506,6 @@ impl KvSlab {
                     // unchanged prefix: no copy, page stays clean/shared
                     continue;
                 }
-                if first_moved.is_none() {
-                    first_moved = Some(dst_slot);
-                }
-                // CoW barrier before the write; the fork copies the whole
-                // page, including src slots not yet slid — consistent,
-                // because fork-time content equals what those reads expect
-                self.table.ensure_private(&mut pool, dst_slot / self.page_slots);
                 let src = self.page_of(src_slot);
                 let dst = self.page_of(dst_slot);
                 pool.copy_slot(src, dst);
@@ -480,13 +527,25 @@ impl KvSlab {
             let mut pool = self.pool.borrow_mut();
             self.table.truncate_release(&mut pool, needed);
         }
-        evicted
+        Some(evicted)
     }
 
-    /// Evict the given slots (any order, deduped internally).
+    /// Evict the given slots (any order, deduped internally). Panics on
+    /// CoW-fork exhaustion like [`Self::compact`].
     pub fn evict(&mut self, evict: &[usize]) -> usize {
+        self.try_evict(evict).expect(
+            "page pool exhausted during CoW eviction \
+             (serving callers must use try_evict and defer)",
+        )
+    }
+
+    /// Fallible [`Self::evict`]: `None` — nothing evicted, slab intact —
+    /// when a copy-on-write fork cannot get a page. The serving engine's
+    /// deferral path: the eviction is simply retried on a later step,
+    /// once retirements or cache reclaim free pages.
+    pub fn try_evict(&mut self, evict: &[usize]) -> Option<usize> {
         if evict.is_empty() {
-            return 0;
+            return Some(0);
         }
         let mut drop_mask = vec![false; self.meta.len()];
         for &i in evict {
@@ -496,7 +555,41 @@ impl KvSlab {
         }
         let retain: Vec<usize> =
             (0..self.meta.len()).filter(|&i| !drop_mask[i]).collect();
-        self.compact(&retain)
+        self.try_compact(&retain)
+    }
+
+    /// First slot [`Self::drop_tail_aligned`] would remove for `need`:
+    /// the largest page-aligned length at most `len - need`. The single
+    /// source of the alignment rule — callers snapshotting the victims
+    /// before the drop read the same boundary the drop will use.
+    pub fn tail_drop_keep(&self, need: usize) -> usize {
+        (self.meta.len().saturating_sub(need) / self.page_slots) * self.page_slots
+    }
+
+    /// Emergency fork-free eviction: drop the newest slots, down to a
+    /// page boundary, covering at least `need` of them. Pure truncation —
+    /// no slide-down writes, so no CoW forks and no allocations — and the
+    /// page alignment guarantees at least one whole tail page returns to
+    /// the pool *and* the next append lands on a fresh page instead of a
+    /// shared tail. This is the capacity-wall last resort: when a
+    /// CoW-deferred eviction would otherwise leave no slot for the
+    /// incoming token, dropping recent context beats panicking the whole
+    /// serving loop (coordinator/engine.rs counts every use). Returns
+    /// slots dropped.
+    pub fn drop_tail_aligned(&mut self, need: usize) -> usize {
+        assert!(!self.released, "drop_tail on a released slab");
+        let len = self.meta.len();
+        if len == 0 || need == 0 {
+            return 0;
+        }
+        let keep = self.tail_drop_keep(need);
+        self.meta.truncate(keep);
+        let needed = pages_for_slots(keep, self.page_slots);
+        if self.table.len() > needed {
+            let mut pool = self.pool.borrow_mut();
+            self.table.truncate_release(&mut pool, needed);
+        }
+        len - keep
     }
 
     /// Gather this slab's live region into a batched decode input at the
@@ -1045,6 +1138,97 @@ mod tests {
         for i in 0..8 {
             assert_eq!(d.k_row(0, i)[0], i as f32, "donor slot {}", i);
         }
+    }
+
+    #[test]
+    fn try_evict_defers_on_exhaustion_and_recovers() {
+        // pool sized so the donor + one adopter fill it exactly: the
+        // adopter's eviction inside the shared prefix needs CoW forks the
+        // pool cannot supply — try_evict must defer (slab untouched, no
+        // refcount damage) and succeed once pages free up. This is the
+        // PR-3 fork-exhaustion panic scenario, now recoverable.
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 4); // donor 2 pages + 2 for the forks
+        let (d, meta) = donor(&pool, &m, 8); // donor holds 2 pages
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        // burn the free pages so the fork pre-pass finds nothing
+        let blockers: Vec<u32> =
+            (0..2).map(|_| pool.borrow_mut().alloc().unwrap()).collect();
+        let before: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
+        assert_eq!(s.try_evict(&[1]), None, "no page for the fork: deferred");
+        assert_eq!(s.len(), 8, "nothing evicted");
+        let after: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
+        assert_eq!(after, before, "slot order untouched");
+        for i in 0..8 {
+            assert_eq!(s.k_row(0, i)[0], i as f32, "KV untouched at slot {}", i);
+        }
+        assert_eq!(pool.borrow().stats().refcount_errors, 0);
+        // pages free → the retry applies the same eviction cleanly
+        for b in blockers {
+            pool.borrow_mut().release(b);
+        }
+        assert_eq!(s.try_evict(&[1]), Some(1));
+        let positions: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
+        assert_eq!(positions, vec![0, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(s.k_row(0, 1)[0], 2.0);
+        // donor still byte-identical
+        for i in 0..8 {
+            assert_eq!(d.k_row(0, i)[0], i as f32, "donor slot {}", i);
+        }
+    }
+
+    #[test]
+    fn partial_prepass_fork_survives_a_deferral() {
+        // 4-page pool: donor 2 pages + 1 free. The pre-pass forks page 0,
+        // then fails on page 1 → deferral. Page 0 stays private with
+        // identical content; the logical view is unchanged, and a retry
+        // after a free completes (page 0 needs no second fork).
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 3);
+        let (d, meta) = donor(&pool, &m, 8);
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        assert_eq!(pool.borrow().free_pages(), 1);
+        assert_eq!(s.try_evict(&[0]), None, "second fork has no page");
+        assert!(s.shared_pages() <= 1, "first pre-pass fork may persist");
+        for i in 0..8 {
+            assert_eq!(s.k_row(0, i)[0], i as f32, "content intact at {}", i);
+        }
+        // dropping the donor frees its reference on the forked-off page;
+        // the sole-owner path then privatizes page 1 without a copy
+        drop(d);
+        assert_eq!(s.try_evict(&[0]), Some(1));
+        let positions: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
+        assert_eq!(positions, (1..8).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn drop_tail_aligned_is_fork_free_and_frees_a_page() {
+        let m = tiny_meta();
+        let pool = tiny_pool(&m, 8);
+        let (d, meta) = donor(&pool, &m, 6); // 2 pages, partial tail
+        let mut s = KvSlab::in_pool(&pool, 16);
+        assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
+        let forks_before = pool.borrow().stats().forks;
+        let in_use = pool.borrow().in_use_pages();
+        // need 1 → truncate to the 4-slot page boundary: 2 slots dropped
+        assert_eq!(s.drop_tail_aligned(1), 2);
+        assert_eq!(s.len(), 4);
+        assert_eq!(pool.borrow().stats().forks, forks_before, "no CoW fork");
+        assert_eq!(pool.borrow().in_use_pages(), in_use, "donor keeps the tail page");
+        assert_eq!(s.allocated_pages(), 1, "this slab released its tail reference");
+        // the next append allocates a fresh page — no shared tail to fork
+        assert!(s.unstable_tail_page().is_none());
+        s.append(&row_of(9.0, &m), &row_of(9.0, &m), 6, Modality::Text, 0.0);
+        assert_eq!(pool.borrow().stats().forks, forks_before);
+        // donor tail untouched
+        assert_eq!(d.k_row(0, 5)[0], 5.0);
+        // degenerate: need larger than len drops everything
+        let mut t = KvSlab::in_pool(&pool, 16);
+        t.append(&row_of(0.0, &m), &row_of(0.0, &m), 0, Modality::Text, 0.0);
+        assert_eq!(t.drop_tail_aligned(99), 1);
+        assert!(t.is_empty());
     }
 
     #[test]

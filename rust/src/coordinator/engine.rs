@@ -15,13 +15,14 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cache::{
     pages_for_slots, DecodeCtx, KvSlab, Modality, PagePool, PolicyKind, PoolStats,
-    PrefillCtx, SharedPagePool, DEFAULT_PAGE_SLOTS,
+    PrefillCtx, SharedPagePool, SlotMeta, DEFAULT_PAGE_SLOTS,
 };
 use crate::model::vocab;
 use crate::prefix::{
-    request_fingerprint, request_key, KeySym, PrefixCache, PrefixHit, PrefixStats,
+    request_fingerprint, request_key, KeySym, PartialPrefixHit, PartialProbe,
+    PrefixCache, PrefixHit, PrefixProbe, PrefixStats,
 };
-use crate::runtime::{Runtime, StepTiming};
+use crate::runtime::{PrefillOut, Runtime, StepTiming};
 use crate::scheduler::AdmissionController;
 use crate::util::rng::Rng;
 use crate::util::stats::argmax;
@@ -104,9 +105,17 @@ pub struct Engine {
     /// (0 = never written)
     lane_owner: Vec<u64>,
     /// radix-tree prefix cache over the shared arena (prefix/mod.rs):
-    /// cold prefills register their retained pages, identical prompts
-    /// adopt them copy-on-write instead of recomputing
+    /// cold prefills register their retained pages (exact entries) and
+    /// their unpruned visual prefix (prefix entries); identical prompts
+    /// adopt the former copy-on-write, prefix-sharing prompts the latter
     prefix: PrefixCache,
+    /// policy evictions deferred because a CoW fork found the pool empty
+    /// (retried on a later step — the recoverable form of the PR-3
+    /// fork-exhaustion panic)
+    fork_deferrals: u64,
+    /// capacity-wall emergencies: a deferred eviction at the hard limit
+    /// resolved by the fork-free aligned tail drop instead
+    emergency_tail_drops: u64,
     /// component timing of the most recent decode step (perf harness)
     last_timing: StepTiming,
 }
@@ -154,6 +163,8 @@ impl Engine {
             scratch_v: vec![0.0; n],
             lane_owner,
             prefix: PrefixCache::new(crate::prefix::DEFAULT_MAX_ENTRIES),
+            fork_deferrals: 0,
+            emergency_tail_drops: 0,
             last_timing: StepTiming::default(),
         })
     }
@@ -203,6 +214,19 @@ impl Engine {
     /// Prefix-cache observability (hits, pinned pages, tokens skipped).
     pub fn prefix_stats(&self) -> PrefixStats {
         self.prefix.stats()
+    }
+
+    /// Policy evictions deferred because a CoW fork found the pool empty
+    /// (each is retried on a later step — never a panic).
+    pub fn fork_deferrals(&self) -> u64 {
+        self.fork_deferrals
+    }
+
+    /// Capacity-wall emergencies resolved by the fork-free aligned tail
+    /// drop. Nonzero only under extreme budget pressure; counted because
+    /// the dropped recent context changes that lane's trajectory.
+    pub fn emergency_tail_drops(&self) -> u64 {
+        self.emergency_tail_drops
     }
 
     /// Arena pages currently pinned by prefix-cache entries.
@@ -297,19 +321,25 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// Run prefill for a request and admit it with a fresh policy
-    /// instance. With the prefix cache on, a prompt identical to one
-    /// seen before (same text ids, bit-identical vision segments) skips
-    /// the PJRT prefill *and* the DAP decision entirely: the cached
-    /// retained pages are adopted copy-on-write and the cached prefill
-    /// logits produce the first token — byte-identical to the request's
-    /// own cold run, since every input of the decode trajectory is the
-    /// cold run's output for that exact prompt.
+    /// instance. With the prefix cache on:
+    ///
+    /// * a prompt identical to one seen before (same text ids,
+    ///   bit-identical vision segments) skips the PJRT prefill *and* the
+    ///   DAP decision entirely: the cached retained pages are adopted
+    ///   copy-on-write and the cached prefill logits produce the first
+    ///   token — byte-identical to the request's own cold run, since
+    ///   every input of the decode trajectory is the cold run's output
+    ///   for that exact prompt;
+    /// * a prompt sharing only the *visual prefix* (a new question about
+    ///   a cached image) takes the partial warm start: the unpruned
+    ///   prefix pages are adopted copy-on-write, only the text suffix is
+    ///   recomputed through the decode executables, and the retention
+    ///   decision is re-run with this request's OWN reconstructed DAP
+    ///   statistics — never the donor's decision (`prefill_partial`).
     pub fn prefill(&mut self, req: Request) -> Result<ActiveRequest> {
-        let key = self
-            .prefix_enabled()
-            .then(|| (request_key(&req), request_fingerprint(&req)));
-        if let Some((k, fp)) = &key {
-            if let Some(hit) = self.prefix.lookup(k, *fp) {
+        let probe = self.prefix_enabled().then(|| PrefixProbe::of(&req));
+        let req = if let Some(pr) = &probe {
+            if let Some(hit) = self.prefix.lookup(&pr.key, pr.fingerprint) {
                 let mut slab =
                     KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
                 let PrefixHit { pages, meta, logits, .. } = hit;
@@ -324,11 +354,31 @@ impl Engine {
                 // accounting bug, surfaced via refcount_errors). Drop the
                 // entry so it is not retried forever, and go cold.
                 let mut pool = self.pool.borrow_mut();
-                self.prefix.remove(k, &mut pool);
+                self.prefix.remove(&pr.key, &mut pool);
+            }
+            // partial warm start: only for policies whose retention
+            // decision is a pure function of the DAP statistics — the
+            // replay cannot reproduce kv-rewriting prefills
+            let mut fallback = req;
+            if self.cfg.policy.partial_safe() {
+                if let Some(pp) = &pr.partial {
+                    if let Some(hit) = self.prefix.lookup_partial(&pr.key, pp) {
+                        match self.prefill_partial(fallback, pr, hit)? {
+                            Ok(ar) => return Ok(ar),
+                            // the partial path bailed (adoption refused,
+                            // pool too tight for the replay forks): the
+                            // request comes back and goes cold
+                            Err(req) => fallback = req,
+                        }
+                    }
+                }
             }
             self.prefix.note_miss();
-        }
-        self.prefill_cold(req, key)
+            fallback
+        } else {
+            req
+        };
+        self.prefill_cold(req, probe)
     }
 
     /// Prefix-cache fast path: build the post-prefill request state
@@ -382,12 +432,368 @@ impl Engine {
         Ok(ar)
     }
 
-    /// The full prefill path; registers the retained pages in the prefix
-    /// cache when `key` is set (cache enabled and this was a miss).
+    /// Partial-prefix warm start: adopt the entry's *unpruned* prefix
+    /// pages copy-on-write, recompute only the text suffix through the
+    /// decode executables, reconstruct this request's own DAP statistics
+    /// (cached prefix-row contributions + the recomputed suffix rows'
+    /// `dap_row` outputs), re-run the retention decision with them, and
+    /// compact the slab to the decision — so the pruning decision is the
+    /// request's own, never the donor's, and the retained-index set,
+    /// score seeds and first token match the request's own cold run.
+    ///
+    /// `Err(req)` (the inner result) hands the request back for a cold
+    /// prefill when the warm path cannot complete: page adoption refused,
+    /// the prompt too long for the decode buckets, or the pool too tight
+    /// for the replay's CoW forks. Outer errors are runtime failures and
+    /// propagate.
+    ///
+    /// Numerical caveat: the reconstructed statistics and the recomputed
+    /// suffix KV/logits are *mathematically* equal to the cold prefill's
+    /// (same weights, same attention support, same aggregation), but the
+    /// two executables may reduce in different float orders, so equality
+    /// is ULP-level, not provably bitwise. The decision thresholds and
+    /// greedy argmax are far from ties on trained attention, and the
+    /// equivalence is enforced empirically by hard asserts
+    /// (`benches/perf_prefix_cache.rs` dialog table,
+    /// `tests/scheduler_e2e.rs`) wherever artifacts exist.
+    #[allow(clippy::result_large_err)]
+    fn prefill_partial(
+        &mut self,
+        req: Request,
+        probe: &PrefixProbe,
+        hit: PartialPrefixHit,
+    ) -> Result<std::result::Result<ActiveRequest, Request>> {
+        let t_start = Instant::now();
+        let m = self.rt.meta().clone();
+        let n = req.prompt_len();
+        let p = hit.prefix_len;
+        debug_assert!(p < n, "partial hit requires a nonempty suffix");
+        let ps = self.cfg.page_slots.max(1);
+
+        // the extension runs over the UNPRUNED prefix, so the whole
+        // prompt must fit the decode capacity buckets and the slab
+        // capacity as-is; a prompt the cold path can still serve (its
+        // prefill bucket exists and DAP prunes before decode) goes cold
+        // instead of erroring out of the suffix loop
+        if n >= self.rt.manifest.shapes.cache_capacity
+            || self.rt.manifest.capacity_bucket(n - 1).is_none()
+        {
+            return Ok(Err(req));
+        }
+
+        // adopt FIRST: once the slab maps the entry's pages their pool
+        // refcount exceeds the cache's pin count, so the headroom
+        // reclaim below can never evict the very entry being served
+        // (a cache-only entry is reclaimable until someone maps it)
+        let mut slab = KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
+        if !slab.adopt_shared(&hit.pages, hit.meta.clone()) {
+            // broken pins (a pool-accounting bug surfaced via
+            // refcount_errors): drop the entry like the exact path does,
+            // so it is not retried — and refused — on every later turn
+            let mut pool = self.pool.borrow_mut();
+            if let Some(pp) = &probe.partial {
+                self.prefix.remove(&probe.key[..pp.prefix_syms], &mut pool);
+            }
+            return Ok(Err(req));
+        }
+        // headroom for the whole warm admission: suffix pages beyond the
+        // adopted coverage, the partial-tail fork, and the replay
+        // compaction's worst case (every adopted page forks). Admission
+        // already charged the candidate its full worst case (no partial
+        // discount — the fork allowance), so this reclaim is normally a
+        // no-op; a tight race falls back to cold below rather than panic.
+        let worst = pages_for_slots(n, ps) + hit.pages.len() + 1;
+        self.reclaim_pool_headroom(worst);
+        {
+            // the extension's appends (suffix pages + the tail fork) may
+            // not hit the allocator's exhaustion expect: if the pool
+            // cannot cover them even after reclaim, go cold — the cold
+            // path needs no more pages than this and reclaims for itself
+            let pool = self.pool.borrow();
+            let appends = pages_for_slots(n, ps).saturating_sub(hit.pages.len()) + 1;
+            if pool.free_pages() < appends {
+                return Ok(Err(req));
+            }
+        }
+
+        // the request's own DAP statistics, rebuilt per column (slot i ==
+        // position i: the prefix is unpruned and the suffix appends in
+        // order). Prefix-row contributions come from the entry's score
+        // fields; each recomputed suffix row adds its own.
+        let mut colsum = vec![0.0f32; n];
+        let mut colmax = vec![0.0f32; n];
+        for (j, sm) in hit.meta.iter().enumerate() {
+            colsum[j] = sm.cum_score;
+            colmax[j] = sm.cum_peak;
+        }
+
+        // suffix recompute through the decode executables, lane 0 only.
+        // Positions and lengths are exact, so each suffix token attends
+        // to the full unpruned prefix plus the already-recomputed suffix
+        // — the same context its row saw in the cold prefill.
+        let b = self.cfg.batch;
+        let row = m.n_heads * m.d_head;
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut lengths = vec![0i32; b];
+        let mut prefill_dev_s = 0.0f64;
+        let mut last_logits: Vec<f32> = Vec::new();
+        for t in p..n {
+            debug_assert!(!req.is_vision[t], "partial suffix must be text-only");
+            let len = slab.len();
+            let capacity = self
+                .rt
+                .manifest
+                .capacity_bucket(len)
+                .ok_or_else(|| anyhow!("suffix length {} exceeds all buckets", len))?;
+            let slab_n = b * m.n_layers * capacity * row;
+            slab.copy_into_lane(
+                &mut self.scratch_k[..slab_n],
+                &mut self.scratch_v[..slab_n],
+                0,
+                capacity,
+            );
+            tokens[0] = req.ids[t];
+            positions[0] = t as i32;
+            lengths[0] = len as i32;
+            let (out, timing) = self.rt.decode(
+                b,
+                capacity,
+                &tokens,
+                &positions,
+                &self.scratch_k[..slab_n],
+                &self.scratch_v[..slab_n],
+                &lengths,
+            )?;
+            prefill_dev_s += timing.total_s();
+            let k_new = out.lane_kv(&m, &out.k_new, 0).to_vec();
+            let v_new = out.lane_kv(&m, &out.v_new, 0).to_vec();
+            // the partial-tail fork this append may trigger is covered by
+            // the `worst` reclaim above plus the admission fork allowance
+            slab.append(&k_new, &v_new, t as i32, Modality::Text, 0.0);
+            // this text row's Eq. 1 / Eq. 3 contributions: cache columns
+            // plus its own (dap_stats' row weight covers all valid text
+            // rows, and the causal diagonal includes self-attention)
+            let dap_row = out.lane_dap_row(0);
+            for ((cs, cm), &r) in
+                colsum.iter_mut().zip(colmax.iter_mut()).zip(&dap_row[..len])
+            {
+                *cs += r;
+                *cm = cm.max(r);
+            }
+            let self_mass = out.lane_dap_self(0);
+            colsum[t] += self_mass;
+            colmax[t] = colmax[t].max(self_mass);
+            if t + 1 == n {
+                last_logits = out.lane_logits(&m, 0).to_vec();
+            }
+        }
+        // the extension wrote scratch lane 0 outside decode_step's
+        // ownership tracking: force a clean resync on the first real step
+        slab.invalidate_sync();
+        self.lane_owner[0] = 0;
+
+        // the retention decision, re-run for THIS request over its own
+        // statistics — cold/warm equivalence holds because this is the
+        // same pure function of (dap_sum, dap_max, modality, n) the cold
+        // path would have evaluated
+        let mut policy = self.cfg.policy.build();
+        let mut is_vision = req.is_vision.clone();
+        is_vision.resize(n, false);
+        let pctx = PrefillCtx {
+            dap_sum: &colsum,
+            dap_max: &colmax,
+            is_vision: &is_vision,
+            n_tokens: n,
+            k: &[],
+            v: &[],
+            bucket: n,
+            meta: &m,
+        };
+        let decision = policy.prefill(&pctx);
+        if decision.kv_override.is_some() {
+            // defensive: partial_safe policies never rewrite KV; if one
+            // does, the replay cannot honour it — recompute cold
+            return Ok(Err(req));
+        }
+        if decision.retain.len() >= self.rt.manifest.shapes.cache_capacity {
+            bail!("prefill retain set exceeds cache capacity");
+        }
+        let retain = decision.retain;
+        // apply the decision: compaction inside the adopted prefix forks
+        // the written pages (CoW) — deferrable, so exhaustion here falls
+        // back to a cold prefill instead of panicking
+        if slab.try_compact(&retain).is_none() {
+            return Ok(Err(req));
+        }
+        // rewrite the slot metadata to cold-injection semantics: the
+        // score seeds are the request's own full-prompt DAP mass
+        for (i, &src) in retain.iter().enumerate() {
+            slab.meta_mut()[i] = SlotMeta {
+                position: src as i32,
+                modality: if is_vision[src] { Modality::Vision } else { Modality::Text },
+                cum_score: colsum[src],
+                cum_peak: colsum[src],
+                last_score: colsum[src],
+                marked: false,
+                age: 0,
+            };
+        }
+
+        let prefill_len = slab.len();
+        let first_token = self.sample(&last_logits);
+        let mut stats = RequestStats {
+            prefill_s: prefill_dev_s,
+            prompt_tokens: n,
+            vision_tokens: req.n_vision(),
+            pruned_at_prefill: n - prefill_len,
+            peak_kv_bytes: slab.kv_bytes(),
+            prefix_hit: true,
+            prefill_tokens_skipped: p,
+            ..RequestStats::default()
+        };
+        stats.decisions = policy.decision_count();
+        let mut ar = ActiveRequest {
+            pos: n as i32,
+            pending_token: first_token,
+            req,
+            slab,
+            policy,
+            generated: Vec::new(),
+            prefill_len,
+            done: false,
+            forced: None,
+            logits_trace: Vec::new(),
+            score_trace: Vec::new(),
+            evictions: Vec::new(),
+            stats,
+        };
+        if self.cfg.capture_logits {
+            ar.logits_trace.push(last_logits.clone());
+        }
+        ar.generated.push(first_token);
+        self.check_done(&mut ar);
+        // the warm start stuck: count it, and register the full prompt as
+        // an exact entry so a repeat of this very question skips even the
+        // suffix recompute next time
+        self.prefix.note_partial_hit(p);
+        self.register_exact_entry(
+            probe.key.clone(),
+            probe.fingerprint,
+            n,
+            &mut ar,
+            &last_logits,
+        );
+        ar.stats.coord_s += t_start.elapsed().as_secs_f64() - prefill_dev_s;
+        Ok(Ok(ar))
+    }
+
+    /// Register a freshly admitted request's retained pages as an exact
+    /// whole-prompt entry (shared by the cold and partial-warm paths).
+    fn register_exact_entry(
+        &mut self,
+        key: Vec<KeySym>,
+        fingerprint: u64,
+        prompt_len: usize,
+        ar: &mut ActiveRequest,
+        logits: &[f32],
+    ) {
+        if ar.slab.is_empty() {
+            return;
+        }
+        let pages = ar.slab.mark_all_shared();
+        let snapshot = ar.slab.meta().to_vec();
+        let mut pool = self.pool.borrow_mut();
+        self.prefix.register(
+            &mut pool,
+            key,
+            fingerprint,
+            pages,
+            snapshot,
+            prompt_len,
+            logits.to_vec(),
+        );
+    }
+
+    /// Register a cold prefill's *unpruned* visual prefix as a partial
+    /// warm-start donor: copy the prefix KV out of the prefill output
+    /// into fresh cache-owned pages and store it with the prefix-row DAP
+    /// contributions (`dap_psum`/`dap_pmax`). Best-effort — under pool
+    /// pressure the copy is skipped rather than starving live lanes.
+    fn register_prefix_entry(
+        &mut self,
+        pp: &PartialProbe,
+        probe_key: &[KeySym],
+        req: &Request,
+        out: &PrefillOut,
+    ) {
+        let p = pp.prefix_tokens;
+        let ps = self.cfg.page_slots.max(1);
+        let n_pages = pages_for_slots(p, ps);
+        if n_pages == 0 {
+            return;
+        }
+        self.reclaim_pool_headroom(n_pages);
+        let mut pool = self.pool.borrow_mut();
+        if pool.free_pages() < n_pages {
+            return;
+        }
+        let mut pages = Vec::with_capacity(n_pages);
+        for _ in 0..n_pages {
+            match pool.alloc() {
+                Some(pg) => pages.push(pg),
+                None => {
+                    for &pg in &pages {
+                        pool.release(pg);
+                    }
+                    return;
+                }
+            }
+        }
+        let row = pool.row();
+        let n_layers = pool.n_layers();
+        for slot in 0..p {
+            let (pg, off) = (pages[slot / ps], slot % ps);
+            for l in 0..n_layers {
+                let src = (l * out.bucket + slot) * row;
+                pool.write_layer_row(
+                    pg,
+                    off,
+                    l,
+                    &out.k[src..src + row],
+                    &out.v[src..src + row],
+                );
+            }
+        }
+        let meta: Vec<SlotMeta> = (0..p)
+            .map(|j| SlotMeta {
+                position: j as i32,
+                modality: if req.is_vision[j] { Modality::Vision } else { Modality::Text },
+                cum_score: out.dap_psum[j],
+                cum_peak: out.dap_pmax[j],
+                last_score: out.dap_psum[j],
+                marked: false,
+                age: 0,
+            })
+            .collect();
+        let key = probe_key[..pp.prefix_syms].to_vec();
+        self.prefix
+            .register_prefix(&mut pool, key, pp.prefix_fp, pages.clone(), meta, p);
+        // the cache holds its own references now (or the registration was
+        // refused): drop the allocation references either way, so refused
+        // registrations leak nothing and accepted ones are cache-owned
+        for &pg in &pages {
+            pool.release(pg);
+        }
+    }
+
+    /// The full prefill path; registers the retained pages (and, for
+    /// partial-safe policies, the unpruned visual prefix) in the prefix
+    /// cache when `probe` is set (cache enabled and this was a miss).
     fn prefill_cold(
         &mut self,
         req: Request,
-        key: Option<(Vec<KeySym>, u64)>,
+        probe: Option<PrefixProbe>,
     ) -> Result<ActiveRequest> {
         let t_start = Instant::now();
         let m = self.rt.meta().clone();
@@ -407,7 +813,17 @@ impl Engine {
             req.is_vision.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
         is_vision_f.resize(bucket, 0.0);
 
-        let (out, timing) = self.rt.prefill(bucket, &ids, &patches, &is_vision_f, n)?;
+        // the reusable-prefix boundary makes the graph also emit the
+        // prefix-row-restricted DAP stats a prefix entry caches; 0 when
+        // nothing will be registered at a boundary
+        let register_prefix = self.cfg.policy.partial_safe();
+        let n_prefix = probe
+            .as_ref()
+            .filter(|_| register_prefix)
+            .and_then(|pr| pr.partial.as_ref())
+            .map_or(0, |pp| pp.prefix_tokens);
+        let (out, timing) =
+            self.rt.prefill(bucket, &ids, &patches, &is_vision_f, n, n_prefix)?;
 
         let t_coord = Instant::now();
         let mut policy = self.cfg.policy.build();
@@ -494,17 +910,23 @@ impl Engine {
         // generate_forced below before any decode step runs)
         ar.generated.push(first_token);
         self.check_done(&mut ar);
-        // register the retained prefix so identical prompts skip all of
-        // the above: the cache retains the slab's pages (which become
+        // register the retained prompt so identical prompts skip all of
+        // the above (the cache retains the slab's pages, which become
         // copy-on-write — this request's own decode forks before any
-        // write) plus the metadata/logits a hit needs
-        if let Some((key, fp)) = key {
-            if !ar.slab.is_empty() {
-                let pages = ar.slab.mark_all_shared();
-                let snapshot = ar.slab.meta().to_vec();
-                let mut pool = self.pool.borrow_mut();
-                self.prefix
-                    .register(&mut pool, key, fp, pages, snapshot, n, out.logits.clone());
+        // write), and the unpruned visual prefix so prefix-sharing
+        // prompts get partial warm starts with a per-request DAP replay
+        if let Some(pr) = probe {
+            self.register_exact_entry(
+                pr.key.clone(),
+                pr.fingerprint,
+                n,
+                &mut ar,
+                &out.logits,
+            );
+            if register_prefix {
+                if let Some(pp) = &pr.partial {
+                    self.register_prefix_entry(pp, &pr.key, &ar.req, &out);
+                }
             }
         }
         Ok(ar)
@@ -636,16 +1058,43 @@ impl Engine {
                 ar.slab.meta_mut()[s].marked = true;
             }
             if !decision.evict.is_empty() {
-                let victims: Vec<(i32, f32, bool)> = decision
-                    .evict
-                    .iter()
-                    .map(|&s| {
-                        let sm = &ar.slab.meta()[s];
-                        (sm.position, sm.cum_score, sm.marked)
-                    })
-                    .collect();
-                ar.evictions.push(EvictionEvent { step, victims });
-                ar.stats.evicted_at_decode += ar.slab.evict(&decision.evict);
+                // CoW affordability gate: an eviction inside a shared
+                // prefix may fork up to every page this lane still maps
+                // shared, and the OTHER lanes' appends this step must
+                // still find pages (an append's exhaustion is a panic,
+                // not a deferral). Defer the eviction unless the pool
+                // can afford both; a fork-free eviction (nothing shared)
+                // always proceeds.
+                let affordable = ar.slab.shared_pages() == 0 || {
+                    let pool = self.pool.borrow();
+                    pool.free_pages() >= ar.slab.shared_pages() + live.len()
+                };
+                if affordable {
+                    let victims: Vec<(i32, f32, bool)> = decision
+                        .evict
+                        .iter()
+                        .map(|&s| {
+                            let sm = &ar.slab.meta()[s];
+                            (sm.position, sm.cum_score, sm.marked)
+                        })
+                        .collect();
+                    match ar.slab.try_evict(&decision.evict) {
+                        Some(evicted) => {
+                            ar.evictions.push(EvictionEvent { step, victims });
+                            ar.stats.evicted_at_decode += evicted;
+                        }
+                        None => {
+                            // CoW fork exhausted mid-divergence: defer —
+                            // the slab is untouched, the policy
+                            // re-decides next step, and pages free as
+                            // lanes retire or the cache reclaims. The
+                            // recoverable form of the PR-3 fork panic.
+                            self.fork_deferrals += 1;
+                        }
+                    }
+                } else {
+                    self.fork_deferrals += 1;
+                }
             }
             // hard capacity fallback
             let limit = self.rt.manifest.shapes.cache_capacity - 1;
@@ -665,8 +1114,35 @@ impl Engine {
                         (sm.position, sm.cum_score, sm.marked)
                     })
                     .collect();
-                ar.evictions.push(EvictionEvent { step, victims });
-                ar.stats.evicted_at_decode += ar.slab.evict(&force);
+                match ar.slab.try_evict(&force) {
+                    Some(evicted) => {
+                        ar.evictions.push(EvictionEvent { step, victims });
+                        ar.stats.evicted_at_decode += evicted;
+                    }
+                    None => {
+                        // the hard wall cannot wait for a retry: the next
+                        // append needs a slot, and possibly a page for
+                        // the tail. Fall back to the fork-free aligned
+                        // tail drop — no CoW, frees at least one whole
+                        // page, and the aligned tail means the next
+                        // append allocates fresh instead of forking.
+                        // Sacrifices the newest context; counted as an
+                        // emergency (NOT as a deferral — nothing is
+                        // retried later), and the admission fork
+                        // allowance makes it vanishingly rare.
+                        let keep = ar.slab.tail_drop_keep(need);
+                        let victims: Vec<(i32, f32, bool)> = ar.slab.meta()[keep..]
+                            .iter()
+                            .map(|sm| (sm.position, sm.cum_score, sm.marked))
+                            .collect();
+                        let dropped = ar.slab.drop_tail_aligned(need);
+                        if dropped > 0 {
+                            self.emergency_tail_drops += 1;
+                            ar.evictions.push(EvictionEvent { step, victims });
+                            ar.stats.evicted_at_decode += dropped;
+                        }
+                    }
+                }
             }
 
             // 4. next token
@@ -735,7 +1211,9 @@ impl Engine {
         }
         let k = self.cfg.top_k.max(1).min(logits.len());
         let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        // total_cmp: a single NaN logit must not panic the serving loop
+        // mid-batch; NaNs sort above +inf, i.e. deterministically first
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
         idx.truncate(k);
         let inv_t = 1.0 / self.cfg.temperature;
         let weights: Vec<f64> = {
@@ -789,10 +1267,17 @@ impl Engine {
     /// pinned by the prefix cache plus pages mapped shared by a live
     /// lane, deduplicated — N requests sharing one visual prefix pay for
     /// it once (the lanes' own bounds exclude their stable shared pages;
-    /// see scheduler/admission.rs). A shared *partial tail* page stays
-    /// in its lane's private bound (the first append forks it), so it is
-    /// excluded here — counting it in both places would double-charge
-    /// every freshly-adopted lane by one page.
+    /// see scheduler/admission.rs).
+    ///
+    /// A shared *partial tail* page is counted here **and** stays in its
+    /// lane's private bound (`KvSlab::fork_allowance_pages`). PR 3
+    /// excluded it to avoid the double charge — but the double charge is
+    /// exactly the fork reservation: when the lane's first append forks
+    /// the tail, the fresh copy lands in the lane's bound while the
+    /// original keeps living under the cache pin. Excluding it left the
+    /// forked-off original uncharged, which is precisely how a
+    /// budget-sized pool admitted to the brim could exhaust at the fork
+    /// site (the PR-3 panic).
     pub fn shared_charge_pages(&self, lanes: &[Option<ActiveRequest>]) -> usize {
         let mut set: std::collections::BTreeSet<u32> =
             self.prefix.pinned_page_ids().into_iter().collect();
@@ -801,17 +1286,17 @@ impl Engine {
                 set.insert(p);
             }
         }
-        for ar in lanes.iter().flatten() {
-            if let Some(p) = ar.slab.unstable_tail_page() {
-                set.remove(&p);
-            }
-        }
         set.len()
     }
 
     /// Admission test for engine-direct drivers: live lane bounds +
     /// charged-once shared pages + the candidate's worst case
     /// (discounted via its pre-hashed probe) versus the budget.
+    /// Only *exact* hits earn a discount: a partial hit's replayed
+    /// retention decision may fork any adopted page, so partial
+    /// candidates are charged their full worst case — the fork
+    /// allowance that keeps the replay's CoW allocations covered
+    /// (`peek_discount` returns 0 for prefix entries by construction).
     /// Reclaimable LRU prefix-cache entries are evicted only while
     /// their pins can actually close the candidate's shortfall —
     /// entries kept alive by live lanes are never touched, and an

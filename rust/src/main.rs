@@ -233,7 +233,16 @@ fn analyze(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
         StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
     let mut builder = RequestBuilder::new(&meta, &grammar, args.u64("seed", 42));
     let n = args.usize("n", 20);
-    let bucket = *rt.manifest.shapes.analysis_buckets.first().unwrap();
+    // a manifest without analysis artifacts is a valid build product
+    // (aot can be configured to skip them) — report it as a CLI error
+    // naming the manifest field instead of panicking on .first()
+    let bucket = *rt.manifest.shapes.analysis_buckets.first().ok_or_else(|| {
+        anyhow!(
+            "manifest '{}' lists no analysis buckets (artifacts.analysis_buckets \
+             is empty) — rebuild artifacts with analysis variants to run `analyze`",
+            artifact_dir.join("manifest.json").display()
+        )
+    })?;
 
     let mut acc = vec![[0.0f64; 3]; meta.n_layers];
     let mut count = 0;

@@ -125,32 +125,38 @@ impl PageTable {
     }
 
     /// Copy-on-write barrier: make page `idx` safe to write. No-op for a
-    /// private page. For a shared page whose pool refcount is 1 (sole
-    /// owner after a cache eviction), just clears the bit. Otherwise
-    /// forks: the caller's mapping moves to a fresh copy and its
-    /// reference on the shared original is released. Returns true when a
-    /// fork actually copied a page.
+    /// private page (`Some(false)`). For a shared page whose pool
+    /// refcount is 1 (sole owner after a cache eviction), just clears
+    /// the bit (`Some(false)` — no copy). Otherwise forks: the caller's
+    /// mapping moves to a fresh copy and its reference on the shared
+    /// original is released (`Some(true)`).
     ///
-    /// Panics on pool exhaustion — like slab appends, fork allocations
-    /// are covered by the admission bound plus the engine's
-    /// prefix-cache pressure eviction (coordinator/engine.rs).
-    pub fn ensure_private(&mut self, pool: &mut PagePool, idx: usize) -> bool {
+    /// Returns `None` — touching nothing — when the pool cannot supply
+    /// the fork page. This used to be an `expect` (the PR-3
+    /// fork-exhaustion panic): a budget-sized pool with several lanes
+    /// diverging from one shared prefix at once could make the fork the
+    /// first allocation to see an empty pool. Callers now decide:
+    /// appends are covered by the admission fork allowance (the shared
+    /// partial tail stays in the lane's private page bound, see
+    /// scheduler/admission.rs), and compaction-driven forks defer the
+    /// eviction to a later step instead of crashing the serving loop
+    /// (`KvSlab::try_compact`).
+    #[must_use]
+    pub fn ensure_private(&mut self, pool: &mut PagePool, idx: usize) -> Option<bool> {
         if !self.shared[idx] {
-            return false;
+            return Some(false);
         }
         let page = self.pages[idx];
         if pool.refcount(page) == 1 {
             self.shared[idx] = false;
-            return false;
+            return Some(false);
         }
-        let fork = pool
-            .fork_page(page)
-            .expect("page pool exhausted during CoW fork (admission must prevent this)");
+        let fork = pool.fork_page(page)?;
         pool.release(page);
         self.pages[idx] = fork;
         self.shared[idx] = false;
         self.dirty[idx] = true;
-        true
+        Some(true)
     }
 
     /// Release the pages beyond the first `keep` back to the pool
@@ -243,7 +249,7 @@ mod tests {
         p.write_slot(a, 0, &k, &k);
         let mut t = PageTable::new();
         assert!(t.adopt_shared(&mut p, &[a])); // refcount 2: cache + us
-        assert!(t.ensure_private(&mut p, 0), "refcount 2 → real fork");
+        assert_eq!(t.ensure_private(&mut p, 0), Some(true), "refcount 2 → real fork");
         assert_ne!(t.page(0), a);
         assert!(!t.is_shared(0));
         assert_eq!(p.refcount(a), 1, "our reference moved to the fork");
@@ -259,7 +265,7 @@ mod tests {
         assert!(t3.adopt_shared(&mut p, &[sole]));
         t2.release_all(&mut p); // cache-side reference gone, t3 is sole owner
         let forks_before = p.stats().forks;
-        assert!(!t3.ensure_private(&mut p, 0), "sole owner: no copy");
+        assert_eq!(t3.ensure_private(&mut p, 0), Some(false), "sole owner: no copy");
         assert!(!t3.is_shared(0));
         assert_eq!(p.stats().forks, forks_before);
         assert_eq!(t3.page(0), sole);
@@ -271,8 +277,35 @@ mod tests {
         let a = p.alloc().unwrap();
         let mut t = PageTable::new();
         assert!(t.adopt_shared(&mut p, &[a]));
-        t.ensure_private(&mut p, 0);
-        assert!(!t.ensure_private(&mut p, 0), "already private");
+        assert!(t.ensure_private(&mut p, 0).is_some());
+        assert_eq!(t.ensure_private(&mut p, 0), Some(false), "already private");
+    }
+
+    #[test]
+    fn ensure_private_defers_on_exhaustion_without_corruption() {
+        // 2-page pool: donor page + one free. Two sharers diverge; the
+        // second finds the pool empty — the barrier must report None and
+        // leave the table, refcounts and dirty bits exactly as they were
+        // (so the caller can retry after pages free up).
+        let mut p = PagePool::new(2, 4, 2, 4);
+        let a = p.alloc().unwrap();
+        let mut t1 = PageTable::new();
+        let mut t2 = PageTable::new();
+        assert!(t1.adopt_shared(&mut p, &[a]));
+        assert!(t2.adopt_shared(&mut p, &[a])); // refcount 3
+        assert_eq!(t1.ensure_private(&mut p, 0), Some(true), "last page forks");
+        assert_eq!(p.free_pages(), 0);
+        t2.clear_dirty();
+        assert_eq!(t2.ensure_private(&mut p, 0), None, "exhausted: deferred");
+        assert!(t2.is_shared(0), "mapping untouched");
+        assert!(!t2.is_dirty(0), "dirty bit untouched");
+        assert_eq!(t2.page(0), a);
+        assert_eq!(p.refcount(a), 2, "no reference was dropped");
+        assert_eq!(p.stats().refcount_errors, 0);
+        // a page frees → the retry succeeds
+        t1.release_all(&mut p);
+        assert_eq!(t2.ensure_private(&mut p, 0), Some(true), "retry after free");
+        assert_eq!(p.refcount(a), 1, "cache-side holder remains");
     }
 
     #[test]

@@ -25,14 +25,26 @@
 //! (scheduler/admission.rs), turning sharing directly into admission
 //! headroom and batch width.
 //!
-//! Hits are **exact** (whole-prompt) matches: a warm request is
-//! byte-identical to its own cold run, because everything the decode
-//! trajectory depends on — retained KV, metadata, first-token logits —
-//! is the cold run's own output for that exact prompt. Partial-prefix
-//! reuse (recompute only the suffix through the decode path) is the
-//! natural extension of `RadixTree::longest_match`, but it would replay
-//! the donor's DAP decision under a different question and so break
-//! cold/warm equivalence; see ROADMAP "Prefix cache (PR 3)".
+//! Hits come in two granularities:
+//!
+//! * **Exact** (whole-prompt) matches are byte-identical to the
+//!   request's own cold run, because everything the decode trajectory
+//!   depends on — retained KV, metadata, first-token logits — is the
+//!   cold run's own output for that exact prompt.
+//! * **Partial** matches (PR 4): a prompt sharing only the *visual
+//!   prefix* (the image symbols + leading tokens, e.g. a new question
+//!   about a cached image) adopts a **prefix entry** — the *unpruned*
+//!   prefix KV pinned at the last-vision-segment boundary, plus the
+//!   prefix text rows' DAP statistic contributions — copy-on-write,
+//!   recomputes only the text suffix through the decode executables,
+//!   and re-runs the Dual-Attention Pruning decision with the
+//!   request's OWN reconstructed statistics (cached prefix rows + its
+//!   suffix rows, emitted per step by the decode graph). The pruning
+//!   decision is therefore the request's own, never the donor's —
+//!   which is what preserves cold/warm equivalence where replaying the
+//!   donor's decision under a different question would break it
+//!   (MadaKV's modality-aware budgets and TGV-KV's text-grounded
+//!   scoring motivate exactly this per-request re-scoring).
 //!
 //! # Lifecycle
 //!
@@ -103,41 +115,184 @@ pub fn request_key(req: &Request) -> Vec<KeySym> {
     key
 }
 
-/// Independently-seeded whole-prompt content hash (ids, modality mask,
-/// patch bits). Stored per entry and compared at lookup so a radix-key
-/// collision between two different prompts cannot silently serve the
-/// wrong cached KV.
-pub fn request_fingerprint(req: &Request) -> u64 {
-    let mut h = FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15;
-    for (i, &id) in req.ids.iter().enumerate() {
-        h = fnv(h, &id.to_le_bytes());
-        h = fnv(h, &[u8::from(req.is_vision[i])]);
-    }
-    for &f in &req.patches {
+/// Seed of the fingerprint stream — distinct from the radix-key hash so
+/// a collision must happen in two independent 64-bit hashes at once.
+const FP_SEED: u64 = FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15;
+
+/// Absorb one prompt token (id, modality bit, patch row) into the
+/// fingerprint stream. Token-interleaved so a prefix of the stream is a
+/// fingerprint of a prompt prefix — which is what lets
+/// [`PrefixProbe::of`] compute the whole-prompt and prefix fingerprints
+/// in ONE pass over the (patch-dominated) prompt data.
+#[inline]
+fn fp_absorb(mut h: u64, req: &Request, i: usize, pd: usize) -> u64 {
+    h = fnv(h, &req.ids[i].to_le_bytes());
+    h = fnv(h, &[u8::from(req.is_vision[i])]);
+    for &f in &req.patches[i * pd..(i + 1) * pd] {
         h = fnv(h, &f.to_bits().to_le_bytes());
     }
     h
 }
 
+#[inline]
+fn patch_dim_of(req: &Request) -> usize {
+    let n = req.ids.len();
+    if n == 0 {
+        0
+    } else {
+        req.patches.len() / n
+    }
+}
+
+/// Independently-seeded whole-prompt content hash (ids, modality mask,
+/// patch bits). Stored per entry and compared at lookup so a radix-key
+/// collision between two different prompts cannot silently serve the
+/// wrong cached KV.
+pub fn request_fingerprint(req: &Request) -> u64 {
+    let pd = patch_dim_of(req);
+    let mut h = FP_SEED;
+    for i in 0..req.ids.len() {
+        h = fp_absorb(h, req, i, pd);
+    }
+    h
+}
+
+/// The fingerprint stream snapshotted at `prefix_tokens`, with the
+/// boundary mixed in. The verification hash of *prefix* entries: a warm
+/// partial admission must prove its own first `prefix_tokens` tokens
+/// are byte-identical to what the entry caches, not merely
+/// radix-key-equal.
+pub fn prefix_fingerprint(req: &Request, prefix_tokens: usize) -> u64 {
+    let pd = patch_dim_of(req);
+    let p = prefix_tokens.min(req.ids.len());
+    let mut h = FP_SEED;
+    for i in 0..p {
+        h = fp_absorb(h, req, i, pd);
+    }
+    fnv(h, &(p as u64).to_le_bytes())
+}
+
+/// Token boundary of the reusable prefix: one past the *last* vision
+/// token. `None` when the prompt has no vision (a pure-text prefix is
+/// not worth pinning arena pages for) or no text suffix after it (an
+/// empty suffix is the exact-hit case, and the decode-path suffix
+/// recompute can only embed text tokens anyway).
+pub fn partial_boundary(req: &Request) -> Option<usize> {
+    let last_vis = req.is_vision.iter().rposition(|&v| v)?;
+    let p = last_vis + 1;
+    (p < req.ids.len()).then_some(p)
+}
+
+/// Key symbols covering the first `prefix_tokens` prompt tokens — the
+/// truncation depth of [`request_key`] at a segment boundary
+/// ([`partial_boundary`] always is one: it sits one past a vision run).
+pub fn prefix_symbols(req: &Request, prefix_tokens: usize) -> usize {
+    let mut syms = 0usize;
+    let mut i = 0usize;
+    while i < prefix_tokens {
+        if req.is_vision[i] {
+            while i < prefix_tokens && req.is_vision[i] {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+        syms += 1;
+    }
+    syms
+}
+
+/// Everything the engine and scheduler need to consult the cache for one
+/// request, hashed once: the full-prompt radix key + fingerprint (exact
+/// hits) and, when the prompt has a reusable visual prefix, the
+/// partial-hit probe for it.
+pub struct PrefixProbe {
+    pub key: Vec<KeySym>,
+    pub fingerprint: u64,
+    pub partial: Option<PartialProbe>,
+}
+
+/// Partial-hit probe: the request's own last-vision-segment boundary.
+/// This is the only depth a stored prefix entry can match for this
+/// request — prefix entries are registered at donor last-vision
+/// boundaries (their keys end with a vision symbol), and any shallower
+/// stored boundary would leave vision tokens in the suffix, which the
+/// decode-path recompute cannot embed.
+pub struct PartialProbe {
+    /// prompt tokens in the reusable prefix
+    pub prefix_tokens: usize,
+    /// key symbols covering those tokens
+    pub prefix_syms: usize,
+    /// independent content hash of the prefix alone
+    pub prefix_fp: u64,
+}
+
+impl PrefixProbe {
+    pub fn of(req: &Request) -> PrefixProbe {
+        let key = request_key(req);
+        let boundary = partial_boundary(req);
+        // one pass over the (patch-dominated) prompt data computes BOTH
+        // fingerprints: snapshot the stream at the boundary, keep going
+        let pd = patch_dim_of(req);
+        let mut h = FP_SEED;
+        let mut prefix_fp = None;
+        for i in 0..req.ids.len() {
+            h = fp_absorb(h, req, i, pd);
+            if Some(i + 1) == boundary {
+                prefix_fp = Some(fnv(h, &((i + 1) as u64).to_le_bytes()));
+            }
+        }
+        let partial = boundary.map(|p| PartialProbe {
+            prefix_tokens: p,
+            prefix_syms: prefix_symbols(req, p),
+            prefix_fp: prefix_fp.expect("boundary is within the prompt"),
+        });
+        PrefixProbe { key, fingerprint: h, partial }
+    }
+}
+
+/// What an entry caches — the two reuse granularities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EntryKind {
+    /// Whole-prompt entry (PR 3): post-DAP retained pages, slot metadata
+    /// and last-position prefill logits. A hit replays the cold run's
+    /// own outputs — prefill AND the pruning decision are skipped.
+    Exact,
+    /// Prefix entry at a last-vision-segment boundary: the *unpruned*
+    /// prefix KV in cache-owned pages, with the prefix-row DAP
+    /// contributions in the slot metadata's score fields (`cum_score` /
+    /// `last_score` = Eq. 1 column mass from prefix text rows,
+    /// `cum_peak` = Eq. 3 column max). A partial hit adopts the pages
+    /// copy-on-write, recomputes only the text suffix through the
+    /// decode executables, and re-runs the retention decision with the
+    /// request's OWN statistics (cached prefix rows + its suffix rows) —
+    /// the donor's pruning decision is never replayed.
+    Prefix,
+}
+
 /// One cached prefix: pinned pages + everything needed to reconstruct
 /// the post-prefill request state without running prefill.
 struct PrefixEntry {
+    kind: EntryKind,
     key: Vec<KeySym>,
-    /// whole-prompt verification hash (`request_fingerprint`)
+    /// verification hash: `request_fingerprint` for exact entries,
+    /// `prefix_fingerprint` for prefix entries
     fingerprint: u64,
-    /// arena pages holding the retained KV (one cache reference each)
+    /// arena pages holding the cached KV (one cache reference each)
     pages: Vec<u32>,
-    /// retained-slot metadata: positions are the HAE retained-index set,
-    /// scores the DAP seeds
+    /// slot metadata — see [`EntryKind`] for what the score fields carry
     meta: Vec<SlotMeta>,
     /// prompt tokens this entry replaces (== prefill tokens skipped/hit)
     prompt_len: usize,
-    /// prefill logits at the last prompt position (first-token sampling)
+    /// prefill logits at the last prompt position (first-token sampling;
+    /// empty for prefix entries — the last suffix decode step supplies
+    /// the warm first token instead)
     logits: Vec<f32>,
     last_used: u64,
 }
 
-/// Owned snapshot a hit hands the engine (no borrows into the cache).
+/// Owned snapshot an exact hit hands the engine (no borrows into the
+/// cache).
 pub struct PrefixHit {
     pub pages: Vec<u32>,
     pub meta: Vec<SlotMeta>,
@@ -145,17 +300,32 @@ pub struct PrefixHit {
     pub logits: Vec<f32>,
 }
 
+/// Owned snapshot a *partial* hit hands the engine: the unpruned prefix
+/// pages to adopt copy-on-write, per-slot metadata (positions are the
+/// identity 0..prefix_len, modality real, score fields = the cached
+/// prefix-row DAP contributions), and the prefix token count.
+pub struct PartialPrefixHit {
+    pub pages: Vec<u32>,
+    pub meta: Vec<SlotMeta>,
+    pub prefix_len: usize,
+}
+
 /// Cache observability — surfaced through `{"kind":"stats"}`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PrefixStats {
+    /// exact whole-prompt hits (prefill AND the DAP decision skipped)
     pub hits: u64,
+    /// partial-prefix hits (prefix prefill skipped; suffix recomputed
+    /// and the retention decision re-run for the request)
+    pub partial_hits: u64,
     pub misses: u64,
     pub entries: usize,
     /// arena pages currently pinned by cache entries
     pub pinned_pages: usize,
     pub lru_evictions: u64,
     pub insertions: u64,
-    /// prompt tokens never recomputed thanks to warm hits
+    /// prompt tokens never recomputed thanks to warm hits (exact hits
+    /// contribute the whole prompt, partial hits the shared prefix)
     pub prefill_tokens_skipped: u64,
 }
 
@@ -166,6 +336,7 @@ pub struct PrefixCache {
     max_entries: usize,
     tick: u64,
     hits: u64,
+    partial_hits: u64,
     misses: u64,
     lru_evictions: u64,
     insertions: u64,
@@ -181,6 +352,7 @@ impl PrefixCache {
             max_entries: max_entries.max(1),
             tick: 0,
             hits: 0,
+            partial_hits: 0,
             misses: 0,
             lru_evictions: 0,
             insertions: 0,
@@ -196,18 +368,21 @@ impl PrefixCache {
         self.tree.is_empty()
     }
 
-    /// Arena pages currently pinned by entries. Entries pin the pages of
-    /// the slab that registered them, and a key is registered at most
-    /// once, so the sets are disjoint and the sum is a distinct count.
+    /// Distinct arena pages currently pinned by entries. Entries can
+    /// overlap: a partial warm start registers its whole prompt as an
+    /// exact entry whose still-shared prefix pages are the prefix
+    /// entry's own, so the count dedups.
     pub fn pinned_pages(&self) -> usize {
         self.entries
             .iter()
             .flatten()
-            .map(|e| e.pages.len())
-            .sum()
+            .flat_map(|e| e.pages.iter())
+            .collect::<std::collections::BTreeSet<_>>()
+            .len()
     }
 
-    /// Ids of every pinned page (the scheduler unions these with the
+    /// Ids of every pinned page, possibly repeated across overlapping
+    /// entries (the scheduler inserts them into a set together with the
     /// live lanes' shared pages for charged-once accounting).
     pub fn pinned_page_ids(&self) -> Vec<u32> {
         self.entries
@@ -217,9 +392,23 @@ impl PrefixCache {
             .collect()
     }
 
+    /// How many cache entries pin each pinned page — the reference count
+    /// the cache itself accounts for. A page whose pool refcount equals
+    /// its pin count is held by the cache alone (no live slab maps it).
+    fn pin_counts(&self) -> std::collections::BTreeMap<u32, u32> {
+        let mut counts = std::collections::BTreeMap::new();
+        for e in self.entries.iter().flatten() {
+            for &p in &e.pages {
+                *counts.entry(p).or_insert(0) += 1;
+            }
+        }
+        counts
+    }
+
     pub fn stats(&self) -> PrefixStats {
         PrefixStats {
             hits: self.hits,
+            partial_hits: self.partial_hits,
             misses: self.misses,
             entries: self.tree.len(),
             pinned_pages: self.pinned_pages(),
@@ -244,7 +433,9 @@ impl PrefixCache {
             None => return None,
         };
         let e = self.entries[id].as_mut().expect("tree points at a live entry");
-        if e.fingerprint != fingerprint {
+        if e.kind != EntryKind::Exact || e.fingerprint != fingerprint {
+            // a prefix entry stored at this key cannot serve an exact
+            // hit: its KV is unpruned and it carries no prefill logits
             return None;
         }
         e.last_used = self.tick;
@@ -256,11 +447,59 @@ impl PrefixCache {
         })
     }
 
+    /// Partial-hit lookup: the [`RadixTree::longest_match`] walk (via
+    /// `get`) over the key truncated at the request's own
+    /// last-vision-segment boundary (`probe`) — the only depth a usable
+    /// prefix entry can live at, since a shallower stored boundary would
+    /// leave vision tokens in the suffix the decode recompute cannot
+    /// embed, and deeper stored values are exact entries for earlier
+    /// turns' whole prompts (which must not shadow the boundary — hence
+    /// the truncation, not a raw deepest-match). Kind, boundary or
+    /// fingerprint mismatches are misses. A hit refreshes the LRU stamp
+    /// and returns an owned snapshot; the caller adopts the pages CoW
+    /// and recomputes the suffix.
+    pub fn lookup_partial(
+        &mut self,
+        key: &[KeySym],
+        probe: &PartialProbe,
+    ) -> Option<PartialPrefixHit> {
+        self.tick += 1;
+        if probe.prefix_syms >= key.len() {
+            return None;
+        }
+        let id = match self.tree.get(&key[..probe.prefix_syms]) {
+            Some(&id) => id,
+            None => return None,
+        };
+        let e = self.entries[id].as_mut().expect("tree points at a live entry");
+        if e.kind != EntryKind::Prefix
+            || e.prompt_len != probe.prefix_tokens
+            || e.fingerprint != probe.prefix_fp
+        {
+            return None;
+        }
+        e.last_used = self.tick;
+        Some(PartialPrefixHit {
+            pages: e.pages.clone(),
+            meta: e.meta.clone(),
+            prefix_len: e.prompt_len,
+        })
+    }
+
     /// Count a served warm admission that skipped `prompt_len` prefill
     /// tokens (called after page adoption succeeded).
     pub fn note_hit(&mut self, prompt_len: usize) {
         self.hits += 1;
         self.skipped_tokens += prompt_len as u64;
+    }
+
+    /// Count a served *partial* warm admission that skipped
+    /// `prefix_len` prefill tokens (called once the warm start actually
+    /// stuck — adoption, suffix recompute and the replayed retention
+    /// decision all succeeded).
+    pub fn note_partial_hit(&mut self, prefix_len: usize) {
+        self.partial_hits += 1;
+        self.skipped_tokens += prefix_len as u64;
     }
 
     /// Count a cache-consulting admission that went cold (lookup miss,
@@ -293,13 +532,17 @@ impl PrefixCache {
         self.free_ids.push(id);
     }
 
-    /// Pages a hit on `key` would adopt that stay shared under decode
-    /// appends (the admission discount). Read-only: no counters, no LRU.
+    /// Pages an *exact* hit on `key` would adopt that stay shared under
+    /// decode appends (the admission discount). Read-only: no counters,
+    /// no LRU. Partial hits carry no discount: their replayed retention
+    /// decision may fork any adopted page, so admission charges them
+    /// their full worst case (the fork allowance — see
+    /// scheduler/admission.rs).
     pub fn peek_discount(&self, key: &[KeySym], fingerprint: u64, page_slots: usize) -> usize {
         match self.tree.get(key) {
             Some(&id) => {
                 let e = self.entries[id].as_ref().expect("live entry");
-                if e.fingerprint != fingerprint {
+                if e.kind != EntryKind::Exact || e.fingerprint != fingerprint {
                     return 0;
                 }
                 cow::stable_shared_pages(e.meta.len(), page_slots)
@@ -324,8 +567,64 @@ impl PrefixCache {
         prompt_len: usize,
         logits: Vec<f32>,
     ) -> bool {
+        self.register_kind(
+            pool,
+            EntryKind::Exact,
+            key,
+            fingerprint,
+            pages,
+            meta,
+            prompt_len,
+            logits,
+        )
+    }
+
+    /// Register the *unpruned* prefix of a cold prefill as a partial
+    /// warm-start donor. `key` is the radix key truncated at the
+    /// last-vision-segment boundary, `fingerprint` the
+    /// [`prefix_fingerprint`] over those tokens, `meta` the identity
+    /// slot metadata carrying the prefix-row DAP contributions in its
+    /// score fields (see [`EntryKind::Prefix`]). `pages` are freshly
+    /// cache-filled copies (the caller wrote the unpruned prefix KV into
+    /// them); the cache retains each, so the caller must release its own
+    /// allocation references afterwards.
+    pub fn register_prefix(
+        &mut self,
+        pool: &mut PagePool,
+        key: Vec<KeySym>,
+        fingerprint: u64,
+        pages: Vec<u32>,
+        meta: Vec<SlotMeta>,
+        prefix_len: usize,
+    ) -> bool {
+        self.register_kind(
+            pool,
+            EntryKind::Prefix,
+            key,
+            fingerprint,
+            pages,
+            meta,
+            prefix_len,
+            Vec::new(),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn register_kind(
+        &mut self,
+        pool: &mut PagePool,
+        kind: EntryKind,
+        key: Vec<KeySym>,
+        fingerprint: u64,
+        pages: Vec<u32>,
+        meta: Vec<SlotMeta>,
+        prompt_len: usize,
+        logits: Vec<f32>,
+    ) -> bool {
         self.tick += 1;
         if let Some(&id) = self.tree.get(&key) {
+            // first registration wins — a prefix entry and a degenerate
+            // whole-prompt entry at the same key are not merged
             self.entries[id].as_mut().expect("live entry").last_used = self.tick;
             return false;
         }
@@ -336,6 +635,7 @@ impl PrefixCache {
             return false;
         }
         let entry = PrefixEntry {
+            kind,
             key: key.clone(),
             fingerprint,
             pages,
@@ -377,25 +677,34 @@ impl PrefixCache {
         true
     }
 
-    /// Is this entry's eviction pure win right now? Only when *every*
-    /// page is referenced by the cache alone (pool refcount 1): evicting
-    /// then frees the whole entry. An entry with even one page still
-    /// mapped by a live lane is hot — its stable pages are serving warm
-    /// state, and a forked-off tail (refcount 1) is still needed by the
+    /// Is this entry's eviction pure win right now? Only when every page
+    /// is held by cache entries alone — pool refcount equal to the
+    /// cache's own pin count (1 for an unshared entry; 2 where an exact
+    /// entry from a partial warm start overlaps the prefix entry).
+    /// Evicting all such entries frees the pages. An entry with even one
+    /// page still mapped by a live lane is hot — its stable pages are
+    /// serving warm state, and a forked-off tail is still needed by the
     /// next adopter — so it is never sacrificed under pressure.
-    fn reclaimable(e: &PrefixEntry, pool: &PagePool) -> bool {
-        e.pages.iter().all(|&p| pool.refcount(p) == 1)
+    fn reclaimable(
+        e: &PrefixEntry,
+        pool: &PagePool,
+        pins: &std::collections::BTreeMap<u32, u32>,
+    ) -> bool {
+        e.pages
+            .iter()
+            .all(|&p| pool.refcount(p) == *pins.get(&p).unwrap_or(&0))
     }
 
     /// Evict the least-recently-used *reclaimable* entry (see
     /// [`Self::reclaimable`]). False when none qualifies.
     pub fn evict_lru_reclaimable(&mut self, pool: &mut PagePool) -> bool {
+        let pins = self.pin_counts();
         let victim = self
             .entries
             .iter()
             .enumerate()
             .filter_map(|(i, e)| e.as_ref().map(|e| (e, i)))
-            .filter(|(e, _)| Self::reclaimable(e, pool))
+            .filter(|(e, _)| Self::reclaimable(e, pool, &pins))
             .map(|(e, i)| (e.last_used, i))
             .min()
             .map(|(_, i)| i);
@@ -407,17 +716,19 @@ impl PrefixCache {
         true
     }
 
-    /// Pages that evicting reclaimable entries could free right now —
-    /// the exact amount the admission loops can recover without touching
-    /// entries live lanes keep alive. They use it to avoid flushing the
-    /// cache for a candidate that cannot be admitted anyway.
+    /// Distinct pages that evicting reclaimable entries could free right
+    /// now — the exact amount the admission loops can recover without
+    /// touching entries live lanes keep alive. They use it to avoid
+    /// flushing the cache for a candidate that cannot be admitted anyway.
     pub fn reclaimable_pages(&self, pool: &PagePool) -> usize {
+        let pins = self.pin_counts();
         self.entries
             .iter()
             .flatten()
-            .filter(|e| Self::reclaimable(e, pool))
-            .map(|e| e.pages.len())
-            .sum()
+            .filter(|e| Self::reclaimable(e, pool, &pins))
+            .flat_map(|e| e.pages.iter())
+            .collect::<std::collections::BTreeSet<_>>()
+            .len()
     }
 
     /// Pool-pressure hook: evict reclaimable LRU entries until at least
@@ -587,6 +898,132 @@ mod tests {
         p.release(stable);
         assert_eq!(c.reclaimable_pages(&p), 2);
         assert!(c.evict_lru_reclaimable(&mut p));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn partial_boundary_and_prefix_symbols() {
+        // [BOS][vision ×2][q]: boundary one past the vision run
+        let r = req(
+            vec![1, 9, 9, 8],
+            vec![false, true, true, false],
+            vec![0.0; 8],
+        );
+        assert_eq!(partial_boundary(&r), Some(3));
+        assert_eq!(prefix_symbols(&r, 3), 2, "[BOS][img-hash]");
+        assert_eq!(request_key(&r).len(), 3);
+        // no vision → no partial boundary
+        let t = req(vec![1, 5], vec![false, false], vec![0.0; 4]);
+        assert_eq!(partial_boundary(&t), None);
+        // vision at the very end → empty suffix → no boundary
+        let v = req(vec![1, 9], vec![false, true], vec![0.0; 4]);
+        assert_eq!(partial_boundary(&v), None);
+        // the prefix fingerprint tracks prefix content only
+        let mut r2 = r.clone();
+        r2.ids[3] = 9; // different question token, same prefix
+        r2.is_vision[3] = false;
+        assert_eq!(prefix_fingerprint(&r, 3), prefix_fingerprint(&r2, 3));
+        assert_ne!(request_fingerprint(&r), request_fingerprint(&r2));
+        let mut r3 = r.clone();
+        r3.patches[4] = 7.0; // a prefix patch bit differs
+        assert_ne!(prefix_fingerprint(&r, 3), prefix_fingerprint(&r3, 3));
+    }
+
+    #[test]
+    fn probe_single_pass_matches_standalone_fingerprints() {
+        // registration and the scheduler's queue probe hash through the
+        // standalone functions; admission lookups hash through the
+        // probe's single pass — the streams must agree bit-for-bit
+        let r = req(
+            vec![1, 9, 9, 8, 5],
+            vec![false, true, true, false, false],
+            vec![0.5; 10],
+        );
+        let probe = PrefixProbe::of(&r);
+        assert_eq!(probe.fingerprint, request_fingerprint(&r));
+        let pp = probe.partial.expect("vision + text suffix → boundary");
+        assert_eq!(pp.prefix_tokens, 3);
+        assert_eq!(pp.prefix_syms, 2);
+        assert_eq!(pp.prefix_fp, prefix_fingerprint(&r, 3));
+        // no-vision prompts probe without a partial half
+        let t = req(vec![1, 5], vec![false, false], vec![0.0; 4]);
+        let probe = PrefixProbe::of(&t);
+        assert!(probe.partial.is_none());
+        assert_eq!(probe.fingerprint, request_fingerprint(&t));
+    }
+
+    #[test]
+    fn partial_lookup_matches_prefix_entries_only() {
+        let mut p = pool();
+        let mut c = PrefixCache::new(8);
+        // donor prompt [BOS][img][q1]: prefix entry at [BOS][img]
+        let pre_key = vec![KeySym::Text(1), KeySym::Vision(7)];
+        let pg = p.alloc().unwrap();
+        assert!(c.register_prefix(&mut p, pre_key.clone(), 0xF1, vec![pg], meta_of(3), 3));
+        p.release(pg); // caller's allocation reference → cache-owned
+        assert_eq!(p.refcount(pg), 1);
+        // a second question about the same image probes at the boundary
+        let key_b = vec![KeySym::Text(1), KeySym::Vision(7), KeySym::Text(99)];
+        let probe = PartialProbe { prefix_tokens: 3, prefix_syms: 2, prefix_fp: 0xF1 };
+        let hit = c.lookup_partial(&key_b, &probe).expect("partial hit");
+        assert_eq!(hit.prefix_len, 3);
+        assert_eq!(hit.pages, vec![pg]);
+        assert_eq!(hit.meta.len(), 3);
+        c.note_partial_hit(hit.prefix_len);
+        // fingerprint mismatch is a miss, never a wrong adoption
+        let bad = PartialProbe { prefix_tokens: 3, prefix_syms: 2, prefix_fp: 0xF2 };
+        assert!(c.lookup_partial(&key_b, &bad).is_none());
+        // boundary mismatch (entry registered at a different token count)
+        let off = PartialProbe { prefix_tokens: 4, prefix_syms: 2, prefix_fp: 0xF1 };
+        assert!(c.lookup_partial(&key_b, &off).is_none());
+        // an EXACT entry whose prompt is our prefix must not serve a
+        // partial hit (its KV is pruned), and a prefix entry must not
+        // serve an exact lookup (no logits)
+        assert!(c.lookup(&pre_key, 0xF1).is_none(), "prefix entry ≠ exact hit");
+        let s = c.stats();
+        assert_eq!(s.partial_hits, 1);
+        assert_eq!(s.prefill_tokens_skipped, 3);
+        assert_eq!(s.hits, 0);
+    }
+
+    #[test]
+    fn exact_entry_for_an_earlier_turn_does_not_shadow_the_prefix_entry() {
+        // multi-turn dialogs: turn 1's WHOLE prompt is a proper prefix of
+        // turn 2's key, and deeper than the vision boundary. The partial
+        // lookup must still find the prefix entry at the boundary.
+        let mut p = pool();
+        let mut c = PrefixCache::new(8);
+        let pre_key = vec![KeySym::Text(1), KeySym::Vision(7)];
+        let turn1_key =
+            vec![KeySym::Text(1), KeySym::Vision(7), KeySym::Text(8)];
+        let turn2_key = vec![
+            KeySym::Text(1),
+            KeySym::Vision(7),
+            KeySym::Text(8),
+            KeySym::Text(20),
+            KeySym::Text(9),
+        ];
+        let pg_pre = p.alloc().unwrap();
+        assert!(c.register_prefix(&mut p, pre_key, 0xAA, vec![pg_pre], meta_of(3), 3));
+        p.release(pg_pre);
+        let pg_exact = p.alloc().unwrap();
+        assert!(c.register(&mut p, turn1_key, 0xBB, vec![pg_exact], meta_of(3), 4, vec![]));
+        let probe = PartialProbe { prefix_tokens: 3, prefix_syms: 2, prefix_fp: 0xAA };
+        let hit = c.lookup_partial(&turn2_key, &probe).expect("boundary entry found");
+        assert_eq!(hit.pages, vec![pg_pre]);
+    }
+
+    #[test]
+    fn prefix_entries_participate_in_lru_and_reclaim() {
+        let mut p = pool();
+        let mut c = PrefixCache::new(8);
+        let pg = p.alloc().unwrap();
+        assert!(c.register_prefix(&mut p, vec![KeySym::Vision(5)], 0x1, vec![pg], meta_of(4), 4));
+        p.release(pg);
+        assert_eq!(c.pinned_pages(), 1);
+        assert_eq!(c.reclaimable_pages(&p), 1, "cache-owned prefix page reclaims");
+        assert!(c.evict_lru_reclaimable(&mut p));
+        assert_eq!(p.refcount(pg), 0, "prefix page freed on eviction");
         assert!(c.is_empty());
     }
 

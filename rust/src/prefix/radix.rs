@@ -231,6 +231,25 @@ mod tests {
     }
 
     #[test]
+    fn boundary_get_sees_through_deeper_exact_entries() {
+        // the partial-hit lookup shape: the cache stores a prefix entry
+        // at the vision boundary AND exact entries at deeper whole-prompt
+        // keys (earlier dialog turns). Truncating the query at the
+        // boundary and using get() (longest_match underneath) must find
+        // the boundary entry regardless of what is stored deeper.
+        let mut tr = RadixTree::new();
+        tr.insert(&[t(1), v(9)], "prefix");
+        tr.insert(&[t(1), v(9), t(2)], "exact-turn-0");
+        let query = [t(1), v(9), t(2), t(20), t(3)]; // turn 1's key
+        assert_eq!(
+            tr.longest_match(&query),
+            Some((3, &"exact-turn-0")),
+            "the raw deepest match is the earlier turn's exact entry"
+        );
+        assert_eq!(tr.get(&query[..2]), Some(&"prefix"), "boundary get unshadowed");
+    }
+
+    #[test]
     fn shared_spine_is_one_edge() {
         // the many-questions-one-image pattern: entries share [BOS][img]
         let mut tr = RadixTree::new();

@@ -109,6 +109,12 @@ impl Runtime {
     /// Run one prefill over `ids/patches/is_vision` (padded to `bucket`).
     ///
     /// `n_tokens` is the number of valid positions (≤ bucket).
+    /// `n_prefix` marks the reusable-prefix boundary: the graph
+    /// additionally emits the DAP statistics restricted to text query
+    /// rows `< n_prefix` (`PrefillOut::dap_psum`/`dap_pmax`), which the
+    /// prefix cache stores for partial warm starts. Pass 0 when the
+    /// prompt has no reusable prefix — the restricted stats come back as
+    /// zeros and are ignored.
     pub fn prefill(
         &self,
         bucket: usize,
@@ -116,6 +122,7 @@ impl Runtime {
         patches: &[f32],
         is_vision: &[f32],
         n_tokens: usize,
+        n_prefix: usize,
     ) -> Result<(PrefillOut, StepTiming)> {
         let m = self.meta();
         if ids.len() != bucket || is_vision.len() != bucket {
@@ -137,6 +144,7 @@ impl Runtime {
             self.buf_f32(patches, &[bucket, m.patch_dim])?,
             self.buf_f32(is_vision, &[bucket])?,
             self.buf_i32(&[n_tokens as i32], &[])?,
+            self.buf_i32(&[n_prefix as i32], &[])?,
         ];
         let upload_s = t0.elapsed().as_secs_f64();
         let cache = self.prefill.borrow();
@@ -233,6 +241,9 @@ impl Runtime {
             self.buf_f32(patches, &[bucket, m.patch_dim])?,
             self.buf_f32(is_vision, &[bucket])?,
             self.buf_i32(&[n_tokens as i32], &[])?,
+            // analysis shares the prefill graph: no reusable-prefix
+            // boundary to report here
+            self.buf_i32(&[0i32], &[])?,
         ];
         let upload_s = t0.elapsed().as_secs_f64();
         let cache = self.analysis.borrow();

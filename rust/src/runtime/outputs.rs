@@ -25,17 +25,23 @@ pub struct PrefillOut {
     /// `[L, S, H, Dh]` slot-major KV
     pub k: Vec<f32>,
     pub v: Vec<f32>,
-    /// `[S]` — Eq. 1 text→key attention mass per column (layer 0)
+    /// `[S]` — Eq. 1 text→key attention mass per column (dap layer)
     pub dap_sum: Vec<f32>,
-    /// `[S]` — Eq. 3 max text→key attention per column (layer 0)
+    /// `[S]` — Eq. 3 max text→key attention per column (dap layer)
     pub dap_max: Vec<f32>,
+    /// `[S]` — Eq. 1 mass restricted to text query rows `< n_prefix`
+    /// (the prefix-row contribution a partial warm start caches; zeros
+    /// when the call passed `n_prefix = 0`)
+    pub dap_psum: Vec<f32>,
+    /// `[S]` — Eq. 3 max restricted to text query rows `< n_prefix`
+    pub dap_pmax: Vec<f32>,
     pub bucket: usize,
 }
 
 impl PrefillOut {
     pub fn from_literals(parts: Vec<Literal>, m: &ModelMeta, bucket: usize) -> Result<Self> {
-        if parts.len() != 5 {
-            bail!("prefill returned {} outputs, expected 5", parts.len());
+        if parts.len() != 7 {
+            bail!("prefill returned {} outputs, expected 7 (rebuild artifacts)", parts.len());
         }
         let kv = m.n_layers * bucket * m.n_heads * m.d_head;
         Ok(PrefillOut {
@@ -44,6 +50,8 @@ impl PrefillOut {
             v: take_f32(&parts[2], kv, "prefill.v")?,
             dap_sum: take_f32(&parts[3], bucket, "prefill.dap_sum")?,
             dap_max: take_f32(&parts[4], bucket, "prefill.dap_max")?,
+            dap_psum: take_f32(&parts[5], bucket, "prefill.dap_psum")?,
+            dap_pmax: take_f32(&parts[6], bucket, "prefill.dap_pmax")?,
             bucket,
         })
     }
@@ -75,6 +83,15 @@ pub struct DecodeOut {
     pub attn_peak: Vec<f32>,
     /// `[B]` — mean mass on the new token itself
     pub self_mean: Vec<f32>,
+    /// `[B, C]` — the dap layer's head-mean probability mass per cache
+    /// slot: this query row's contribution to the Eq. 1 column sum /
+    /// Eq. 3 column max. Partial warm starts accumulate these over the
+    /// recomputed suffix rows to reconstruct the request's own DAP
+    /// statistics (prefix/mod.rs).
+    pub dap_row: Vec<f32>,
+    /// `[B]` — the dap layer's head-mean mass on the token itself (the
+    /// row's contribution to its own column)
+    pub dap_row_self: Vec<f32>,
     pub batch: usize,
     pub capacity: usize,
 }
@@ -86,8 +103,8 @@ impl DecodeOut {
         batch: usize,
         capacity: usize,
     ) -> Result<Self> {
-        if parts.len() != 6 {
-            bail!("decode returned {} outputs, expected 6", parts.len());
+        if parts.len() != 8 {
+            bail!("decode returned {} outputs, expected 8 (rebuild artifacts)", parts.len());
         }
         let row = m.n_heads * m.d_head;
         Ok(DecodeOut {
@@ -97,6 +114,8 @@ impl DecodeOut {
             attn_mean: take_f32(&parts[3], batch * capacity, "decode.attn_mean")?,
             attn_peak: take_f32(&parts[4], batch * capacity, "decode.attn_peak")?,
             self_mean: take_f32(&parts[5], batch, "decode.self_mean")?,
+            dap_row: take_f32(&parts[6], batch * capacity, "decode.dap_row")?,
+            dap_row_self: take_f32(&parts[7], batch, "decode.dap_row_self")?,
             batch,
             capacity,
         })
@@ -126,6 +145,17 @@ impl DecodeOut {
     /// Mean self-attention mass (initial score of the new slot).
     pub fn lane_self_score(&self, lane: usize) -> f32 {
         self.self_mean[lane]
+    }
+
+    /// Dap-layer head-mean row (this query's Eq. 1/3 contribution per
+    /// cache slot) for one lane.
+    pub fn lane_dap_row<'a>(&'a self, lane: usize) -> &'a [f32] {
+        &self.dap_row[lane * self.capacity..(lane + 1) * self.capacity]
+    }
+
+    /// Dap-layer head-mean mass the lane's query put on itself.
+    pub fn lane_dap_self(&self, lane: usize) -> f32 {
+        self.dap_row_self[lane]
     }
 }
 

@@ -89,27 +89,56 @@ impl AdmissionController {
     /// Upper bound on a live lane's *privately charged* arena pages at
     /// any future step (see module docs). Pages the lane maps shared
     /// (prefix-cache adoption, CoW) are excluded here and charged once
-    /// globally by the scheduler's shared-charge term — except a shared
-    /// partial tail page, which the lane's first append forks and which
-    /// therefore stays in the private bound (`shared_pages_stable`).
+    /// globally by the scheduler's shared-charge term — except the
+    /// **fork allowance**: the shared partial tail page, which the
+    /// lane's first append forks into a fresh allocation. The tail stays
+    /// in this private bound AND in the global shared charge; the double
+    /// charge is deliberate — it reserves the fork's fresh page while
+    /// the forked-off original keeps living under the cache pin, so
+    /// `ensure_private` is never the first allocation to see an empty
+    /// pool on the append path. (PR 3 excluded the tail from the global
+    /// charge as a "double-charge" — leaving the forked-off original
+    /// uncharged was the arithmetic hole behind the fork-exhaustion
+    /// panic.)
     ///
-    /// Eviction and generation progress lower the bound; a CoW fork of a
-    /// stable shared page (the policy evicting inside the shared prefix)
-    /// moves that page from the global charge into this bound, so the
-    /// aggregate can transiently grow by up to the lane's shared-page
-    /// count. The scheduler re-evaluates every tick and reclaims
-    /// cache-only pins under pressure, which in practice turns the
-    /// overshoot into deferred admissions. The residual hard case — a
-    /// budget-sized pool admitted to the brim AND several lanes
-    /// diverging from the same prefix at once, with nothing reclaimable
-    /// left — exhausts the pool at the fork site and panics, the same
-    /// failure class as the pre-existing pool-exhaustion `expect`.
-    /// Closing it needs fork-aware reservations or slot-level
-    /// indirection; see the ROADMAP "Prefix cache (PR 3)" open item.
+    /// Eviction and generation progress lower the bound. A CoW fork of a
+    /// *stable* shared page (the policy evicting inside the shared
+    /// prefix) still moves that page from the global charge into this
+    /// bound, so the aggregate can transiently exceed what admission
+    /// reserved by the forked count — but that path is no longer a
+    /// panic: `KvSlab::try_evict` defers the eviction until pages free
+    /// (retirements, cache reclaim), the scheduler re-evaluates every
+    /// tick, and the capacity wall has a fork-free fallback. The
+    /// remaining optimism is a latency trade, not a crash.
     pub fn lane_bound_pages(&self, ar: &ActiveRequest) -> usize {
         let remaining = ar.req.max_new_tokens.saturating_sub(ar.generated.len());
-        self.pages_for((ar.slab.len() + remaining).min(self.capacity_limit))
-            .saturating_sub(ar.slab.shared_pages_stable())
+        let nominal =
+            self.pages_for((ar.slab.len() + remaining).min(self.capacity_limit));
+        let shared = ar.slab.shared_pages();
+        let fork_allowance = ar.slab.fork_allowance_pages();
+        nominal.saturating_sub(shared) + fork_allowance
+    }
+
+    /// Candidate charge for a *partial* prefix-cache hit: the suffix's
+    /// new pages plus a fork allowance covering every adopted prefix
+    /// page — the replayed retention decision may compact inside the
+    /// shared prefix and fork any of them, and the suffix extension
+    /// forks the partial tail. The two terms sum to the full worst case
+    /// (which is why partial candidates simply take `worst_case_pages`,
+    /// discount 0): the latency win of a partial hit is the skipped
+    /// prefill, not admission width.
+    ///
+    /// NOT a hot-path knob: the charge materializes in serving as
+    /// `PrefixCache::peek_discount` returning 0 for prefix entries, so
+    /// admission falls through to the undiscounted worst case. This
+    /// function states that identity explicitly (and the test below
+    /// pins it) — change the discount there, not here.
+    pub fn partial_candidate_pages(&self, req: &Request, prefix_tokens: usize) -> usize {
+        let total = self.worst_case_pages(req);
+        let adopted = self.pages_for(prefix_tokens.min(self.worst_case_slots(req)));
+        let suffix_pages = total - adopted;
+        let fork_allowance = adopted;
+        suffix_pages + fork_allowance
     }
 
     /// Could this request ever be admitted on an idle system? Submissions
@@ -355,6 +384,68 @@ mod tests {
         // it stays in the private bound)
         assert_eq!(ar.slab.shared_pages(), 2);
         assert_eq!(ar.slab.shared_pages_stable(), 1);
+        assert_eq!(c.lane_bound_pages(&ar), 3);
+    }
+
+    #[test]
+    fn partial_candidates_are_charged_suffix_plus_fork_allowance() {
+        let c = ctl(100);
+        // prompt 10 + max_new 4 = 14 slots → 4 pages; prefix 8 tokens →
+        // 2 adopted pages. suffix pages = 2, fork allowance = 2 → the
+        // full worst case: partial hits earn no admission discount
+        let r = req(10, 4);
+        assert_eq!(c.partial_candidate_pages(&r, 8), 4);
+        assert_eq!(c.partial_candidate_pages(&r, 8), c.worst_case_pages(&r));
+        // degenerate boundaries stay within the worst case
+        assert_eq!(c.partial_candidate_pages(&r, 0), c.worst_case_pages(&r));
+        assert_eq!(c.partial_candidate_pages(&r, 1000), c.worst_case_pages(&r));
+    }
+
+    #[test]
+    fn lane_bound_keeps_the_tail_fork_allowance() {
+        // a lane bound = nominal − shared + fork allowance: with a shared
+        // partial tail, the allowance keeps exactly that page charged
+        // privately even though the tail is also in the global shared
+        // charge — the double charge IS the fork reservation
+        let m = tiny_meta();
+        let c = ctl(100);
+        let pool = crate::cache::PagePool::new_shared(
+            m.n_layers,
+            m.n_heads * m.d_head,
+            8,
+            4,
+        );
+        let row = vec![0.0f32; m.n_layers * m.n_heads * m.d_head];
+        let mut donor = KvSlab::in_pool(&pool, 16);
+        for i in 0..6 {
+            donor.append(&row, &row, i, crate::cache::Modality::Text, 0.0);
+        }
+        let pages = donor.mark_all_shared();
+        {
+            let mut p = pool.borrow_mut();
+            for &pg in &pages {
+                p.retain_page(pg);
+            }
+        }
+        let mut slab = KvSlab::in_pool(&pool, 16);
+        assert!(slab.adopt_shared(&pages, donor.meta().to_vec()));
+        assert_eq!(slab.fork_allowance_pages(), 1, "partial tail");
+        let ar = ActiveRequest {
+            req: req(6, 10),
+            slab,
+            policy: PolicyKind::Full.build(),
+            generated: Vec::new(),
+            pos: 6,
+            prefill_len: 6,
+            pending_token: 0,
+            done: false,
+            forced: None,
+            logits_trace: Vec::new(),
+            score_trace: Vec::new(),
+            evictions: Vec::new(),
+            stats: RequestStats::default(),
+        };
+        // nominal 4 (15-slot clamp) − 2 shared + 1 tail allowance = 3
         assert_eq!(c.lane_bound_pages(&ar), 3);
     }
 

@@ -86,11 +86,22 @@ pub struct MetricsRegistry {
     pub pages_copied: u64,
     /// copy-on-write forks: a sharer diverging from a shared prefix page
     pub cow_forks: u64,
+    /// policy evictions deferred because a CoW fork found the pool empty
+    /// (retried later — the recoverable form of the fork-exhaustion
+    /// panic; a sustained nonzero rate means the budget is too tight for
+    /// the divergence pattern)
+    pub cow_fork_deferrals: u64,
+    /// capacity-wall emergencies resolved by the fork-free aligned tail
+    /// drop (recent context sacrificed; healthy systems: always 0)
+    pub emergency_tail_drops: u64,
     /// refcount violations the pool refused (healthy systems: always 0)
     pub refcount_errors: u64,
     // --- prefix cache ------------------------------------------------
-    /// warm admissions served from the radix-tree prefix cache
+    /// exact warm admissions served from the radix-tree prefix cache
     pub prefix_hits: u64,
+    /// partial-prefix warm admissions (prefix adopted CoW, suffix
+    /// recomputed, retention decision replayed per request)
+    pub prefix_partial_hits: u64,
     /// cold prefills that consulted the cache and missed
     pub prefix_misses: u64,
     /// live cache entries (gauge)
@@ -134,8 +145,11 @@ impl MetricsRegistry {
             chunked_admits: 0,
             pages_copied: 0,
             cow_forks: 0,
+            cow_fork_deferrals: 0,
+            emergency_tail_drops: 0,
             refcount_errors: 0,
             prefix_hits: 0,
+            prefix_partial_hits: 0,
             prefix_misses: 0,
             prefix_entries: 0,
             pages_shared: 0,
@@ -165,23 +179,35 @@ impl MetricsRegistry {
 
     /// Fold one tick's prefix-cache snapshot into the gauges.
     /// `shared_charge` is the distinct charged-once page count
-    /// (`Engine::shared_charge_pages`).
-    pub fn record_prefix(&mut self, ps: PrefixStats, shared_charge: usize) {
+    /// (`Engine::shared_charge_pages`); `fork_deferrals` and
+    /// `tail_drops` the engine's CoW back-pressure counters.
+    pub fn record_prefix(
+        &mut self,
+        ps: PrefixStats,
+        shared_charge: usize,
+        fork_deferrals: u64,
+        tail_drops: u64,
+    ) {
         self.prefix_hits = ps.hits;
+        self.prefix_partial_hits = ps.partial_hits;
         self.prefix_misses = ps.misses;
         self.prefix_entries = ps.entries;
         self.prefix_lru_evictions = ps.lru_evictions;
         self.prefill_tokens_skipped = ps.prefill_tokens_skipped;
         self.pages_shared = shared_charge;
+        self.cow_fork_deferrals = fork_deferrals;
+        self.emergency_tail_drops = tail_drops;
     }
 
-    /// Fraction of cache-consulting admissions served warm.
+    /// Fraction of cache-consulting admissions served warm (exact or
+    /// partial).
     pub fn prefix_hit_rate(&self) -> f64 {
-        let total = self.prefix_hits + self.prefix_misses;
+        let warm = self.prefix_hits + self.prefix_partial_hits;
+        let total = warm + self.prefix_misses;
         if total == 0 {
             0.0
         } else {
-            self.prefix_hits as f64 / total as f64
+            warm as f64 / total as f64
         }
     }
 
@@ -252,8 +278,11 @@ impl MetricsRegistry {
             ("chunked_admits", num(self.chunked_admits as f64)),
             ("pages_copied", num(self.pages_copied as f64)),
             ("cow_forks", num(self.cow_forks as f64)),
+            ("cow_fork_deferrals", num(self.cow_fork_deferrals as f64)),
+            ("emergency_tail_drops", num(self.emergency_tail_drops as f64)),
             ("refcount_errors", num(self.refcount_errors as f64)),
             ("prefix_hits", num(self.prefix_hits as f64)),
+            ("prefix_partial_hits", num(self.prefix_partial_hits as f64)),
             ("prefix_misses", num(self.prefix_misses as f64)),
             ("prefix_hit_rate", num(self.prefix_hit_rate())),
             ("prefix_entries", num(self.prefix_entries as f64)),
@@ -319,6 +348,7 @@ mod tests {
         assert_eq!(m.prefix_hit_rate(), 0.0, "no lookups yet");
         let ps = PrefixStats {
             hits: 6,
+            partial_hits: 2,
             misses: 2,
             entries: 2,
             pinned_pages: 3,
@@ -326,16 +356,32 @@ mod tests {
             insertions: 3,
             prefill_tokens_skipped: 108,
         };
-        m.record_prefix(ps, 5);
+        m.record_prefix(ps, 5, 4, 1);
         assert_eq!(m.prefix_hits, 6);
+        assert_eq!(m.prefix_partial_hits, 2);
         assert_eq!(m.prefix_misses, 2);
         assert_eq!(m.prefix_entries, 2);
         assert_eq!(m.pages_shared, 5);
         assert_eq!(m.prefill_tokens_skipped, 108);
-        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        assert_eq!(m.cow_fork_deferrals, 4);
+        assert_eq!(m.emergency_tail_drops, 1);
+        // (6 exact + 2 partial) of 10 consulting admissions
+        assert!((m.prefix_hit_rate() - 0.8).abs() < 1e-9);
         let j = m.snapshot(0, 0);
         let parsed = Json::parse(&j.to_string_compact()).unwrap();
         assert_eq!(parsed.get("prefix_hits").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(
+            parsed.get("prefix_partial_hits").and_then(|v| v.as_usize()),
+            Some(2)
+        );
+        assert_eq!(
+            parsed.get("cow_fork_deferrals").and_then(|v| v.as_usize()),
+            Some(4)
+        );
+        assert_eq!(
+            parsed.get("emergency_tail_drops").and_then(|v| v.as_usize()),
+            Some(1)
+        );
         assert_eq!(parsed.get("pages_shared").and_then(|v| v.as_usize()), Some(5));
         assert_eq!(
             parsed.get("prefill_tokens_skipped").and_then(|v| v.as_usize()),

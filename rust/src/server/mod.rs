@@ -13,6 +13,14 @@
 //!             request naming the same image carries a bit-identical
 //!             visual prefix — the engine's radix-tree prefix cache
 //!             serves repeat questions without recomputing prefill)
+//!   multi-turn dialog: {"id": 1, "kind": "qa", "image_seed": 7,
+//!                       "turn": 3}
+//!            (turn T's prompt replays turns 0..T's Q/A history and ends
+//!             at a fresh question — every turn is a distinct prompt, so
+//!             exact reuse is impossible; the engine serves them through
+//!             partial-prefix warm starts: the image's cached KV is
+//!             adopted copy-on-write and only the dialog text is
+//!             recomputed, with the pruning decision re-run per request)
 //!   stats:    {"kind": "stats"} → scheduler metrics snapshot
 //!             (queue depth, TTFT/e2e percentiles, lanes histogram,
 //!              admission rejections, aggregate KV bytes)
@@ -96,13 +104,25 @@ fn synthesize(
     let mut req = match (kind, j.get("image_seed").and_then(|v| v.as_i64())) {
         (WorkloadKind::Understanding, Some(iseed)) => {
             // shared-image QA: the image depends on image_seed alone, so
-            // co-referencing requests share a bit-identical visual prefix
-            let ask_color = match j.get("q").and_then(|v| v.as_str()) {
-                None | Some("color") => true,
-                Some("shape") => false,
-                Some(other) => bail!("unknown q '{}' (accepted: color, shape)", other),
-            };
-            builder.understanding_shared(iseed as u64, ask_color)
+            // co-referencing requests share a bit-identical visual prefix.
+            // "turn" selects a multi-turn dialog prompt (distinct per
+            // turn — served via partial-prefix warm starts); "q" the
+            // single-turn question
+            if let Some(turn) = j.get("turn").and_then(|v| v.as_i64()) {
+                if turn < 0 {
+                    bail!("turn must be >= 0, got {}", turn);
+                }
+                builder.qa_dialog_turn(iseed as u64, turn as usize)
+            } else {
+                let ask_color = match j.get("q").and_then(|v| v.as_str()) {
+                    None | Some("color") => true,
+                    Some("shape") => false,
+                    Some(other) => {
+                        bail!("unknown q '{}' (accepted: color, shape)", other)
+                    }
+                };
+                builder.understanding_shared(iseed as u64, ask_color)
+            }
         }
         _ => match j.get("seed").and_then(|v| v.as_i64()) {
             Some(seed) => RequestBuilder::new(meta, grammar, seed as u64).make(kind),
@@ -451,6 +471,28 @@ mod tests {
         let bad = parse(r#"{"id": 1, "kind": "qa", "image_seed": 7, "q": "size"}"#);
         let err = synthesize(&bad, &m, &g, &mut b1).unwrap_err().to_string();
         assert!(err.contains("size") && err.contains("color"), "{}", err);
+    }
+
+    #[test]
+    fn dialog_turns_synthesize_distinct_prompts_over_one_image() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b1 = RequestBuilder::new(&m, &g, 5);
+        let mut b2 = RequestBuilder::new(&m, &g, 999);
+        let t0 = parse(r#"{"id": 1, "kind": "qa", "image_seed": 7, "turn": 0}"#);
+        let t2 = parse(r#"{"id": 2, "kind": "qa", "image_seed": 7, "turn": 2}"#);
+        let (_, r0) = synthesize(&t0, &m, &g, &mut b1).unwrap();
+        let (_, r2) = synthesize(&t2, &m, &g, &mut b1).unwrap();
+        let pre = 1 + m.n_patches;
+        assert_ne!(r0.ids, r2.ids, "turns are distinct prompts");
+        assert_eq!(&r2.patches[..pre * m.patch_dim], &r0.patches[..pre * m.patch_dim]);
+        assert!(r2.prompt_len() > r0.prompt_len(), "history grows the prompt");
+        // reproducible across connections
+        let (_, again) = synthesize(&t2, &m, &g, &mut b2).unwrap();
+        assert_eq!(again.ids, r2.ids);
+        // negative turns are rejected
+        let bad = parse(r#"{"id": 1, "kind": "qa", "image_seed": 7, "turn": -1}"#);
+        assert!(synthesize(&bad, &m, &g, &mut b1).is_err());
     }
 
     #[test]

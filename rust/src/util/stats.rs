@@ -23,12 +23,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p in [0,1]; linear interpolation between order statistics.
+///
+/// NaN-safe: samples sort by `total_cmp` (NaNs order after +inf) instead
+/// of panicking — one poisoned latency sample must never take down a
+/// long-lived metrics reservoir.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -40,19 +44,23 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 }
 
 /// Indices of the k smallest values (ties broken by lower index).
+/// NaN-safe: `total_cmp` ranks NaNs above every real value, so they are
+/// the last candidates rather than a panic.
 pub fn argmin_k(xs: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
     let k = k.min(xs.len());
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]).then(a.cmp(&b)));
     idx.truncate(k);
     idx
 }
 
 /// Indices of the k largest values (ties broken by lower index).
+/// NaN-safe: `total_cmp` ranks NaNs above every real value, so a single
+/// NaN score cannot panic a serving-loop sort mid-batch.
 pub fn argmax_k(xs: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
     let k = k.min(xs.len());
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]).then(a.cmp(&b)));
     idx.truncate(k);
     idx
 }
@@ -139,6 +147,19 @@ mod tests {
         let xs = [3.0f32, 1.0, 2.0, 0.5];
         assert_eq!(argmin_k(&xs, 2), vec![3, 1]);
         assert_eq!(argmax_k(&xs, 1), vec![0]);
+    }
+
+    #[test]
+    fn nan_inputs_never_panic() {
+        // a poisoned value sorts last (total_cmp: NaN > +inf) instead of
+        // panicking the comparator mid-sort
+        let xs = [3.0f32, f32::NAN, 2.0, 0.5];
+        assert_eq!(argmin_k(&xs, 2), vec![3, 2]);
+        assert_eq!(argmax_k(&xs, 1), vec![1], "NaN ranks above every real");
+        assert_eq!(argmax_k(&xs, 2), vec![1, 0]);
+        let ys = [1.0f64, f64::NAN, 3.0];
+        let p = percentile(&ys, 0.0);
+        assert_eq!(p, 1.0, "NaN sample sorts to the top, reals stay ordered");
     }
 
     #[test]

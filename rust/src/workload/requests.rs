@@ -223,6 +223,65 @@ impl<'a> RequestBuilder<'a> {
             .collect()
     }
 
+    /// One turn of a multi-turn QA dialog over a shared image:
+    /// `[BOS][img] ([q_i][ANS][a_i])×turn [q_turn]` — the prompt replays
+    /// the prior turns' questions and ground-truth answers and ends at
+    /// this turn's question. Every turn's prompt is therefore
+    /// *distinct* (no exact-match reuse possible) and grows with
+    /// history, while all turns share the `[BOS][img]` visual prefix
+    /// bit-for-bit — the partial-prefix warm-start target pattern: the
+    /// image's KV and a per-request DAP replay serve every turn, only
+    /// the dialog suffix is recomputed. Questions alternate color/shape;
+    /// the expected answer is this turn's.
+    pub fn qa_dialog_turn(&mut self, image_seed: u64, turn: usize) -> Request {
+        let mut img_rng = Rng::new(image_seed);
+        let class = ImageClass::random(&mut img_rng);
+        let img = SyntheticImage::generate(
+            &mut img_rng,
+            class,
+            self.meta.n_patches,
+            self.meta.patch_dim,
+        );
+        let mut ids = Vec::new();
+        let mut patches = Vec::new();
+        let mut is_vision = Vec::new();
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[BOS]);
+        self.push_image_patches(&mut ids, &mut patches, &mut is_vision, &img);
+        let qa_pair = |i: usize| {
+            if i % 2 == 0 {
+                (Q_COLOR, color_token(class.color))
+            } else {
+                (Q_SHAPE, shape_token(class.shape))
+            }
+        };
+        for i in 0..turn {
+            let (q, a) = qa_pair(i);
+            self.push_text(&mut ids, &mut patches, &mut is_vision, &[q, ANS_MARK, a]);
+        }
+        let (q, answer) = qa_pair(turn);
+        self.push_text(&mut ids, &mut patches, &mut is_vision, &[q]);
+        self.next_id += 1;
+        Request {
+            id: self.next_id - 1,
+            kind: WorkloadKind::Understanding,
+            ids,
+            patches,
+            is_vision,
+            max_new_tokens: 4,
+            min_new_tokens: 0,
+            expected_answer: Some(answer),
+            images: vec![class],
+        }
+    }
+
+    /// A whole dialog: `n` turns against one image, prompts all distinct
+    /// (the acceptance workload of the partial-prefix warm start —
+    /// benches/perf_prefix_cache.rs asserts per-turn byte-identity with
+    /// cold runs and a skip rate at least the shared-prefix fraction).
+    pub fn shared_image_dialog(&mut self, image_seed: u64, n: usize) -> Vec<Request> {
+        (0..n).map(|t| self.qa_dialog_turn(image_seed, t)).collect()
+    }
+
     /// `[BOS] ([img][STORY][color][shape][w…])×(n-1) [img][STORY]` →
     /// long free generation continuing the last segment.
     pub fn story(&mut self, n_images: usize, seg_text: usize, max_new: usize) -> Request {
@@ -429,6 +488,48 @@ mod tests {
         // a different image seed diverges
         let diff = b2.understanding_shared(43, true);
         assert_ne!(diff.patches, reqs[0].patches);
+    }
+
+    #[test]
+    fn dialog_turns_are_distinct_but_share_the_visual_prefix() {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 7);
+        let turns = b.shared_image_dialog(42, 8);
+        assert_eq!(turns.len(), 8);
+        let prefix_len = 1 + m.n_patches; // [BOS][img]
+        for (t, r) in turns.iter().enumerate() {
+            // [BOS][img] + 3 tokens per prior turn + this turn's question
+            assert_eq!(r.prompt_len(), prefix_len + 3 * t + 1);
+            assert_eq!(&r.ids[..prefix_len], &turns[0].ids[..prefix_len]);
+            assert_eq!(
+                &r.patches[..prefix_len * m.patch_dim],
+                &turns[0].patches[..prefix_len * m.patch_dim],
+                "bit-identical image features at every turn"
+            );
+            // the suffix after the image is text-only (the partial
+            // warm start recomputes it through the decode path)
+            assert!(r.is_vision[prefix_len..].iter().all(|&v| !v));
+            assert!(r.expected_answer.is_some());
+        }
+        // every prompt is distinct: no exact-match hit can serve a turn
+        for i in 0..turns.len() {
+            for j in (i + 1)..turns.len() {
+                assert_ne!(turns[i].ids, turns[j].ids, "turns {} vs {}", i, j);
+            }
+        }
+        // a prior turn's whole prompt is a prefix of the next turn's
+        // (the radix shape the partial lookup must not be shadowed by)
+        assert_eq!(
+            &turns[1].ids[..turns[0].ids.len()],
+            &turns[0].ids[..],
+            "dialog grows by appending to the previous prompt"
+        );
+        // any builder reproduces the same dialog for the same image seed
+        let mut b2 = RequestBuilder::new(&m, &g, 999);
+        let again = b2.qa_dialog_turn(42, 3);
+        assert_eq!(again.ids, turns[3].ids);
+        assert_eq!(again.patches, turns[3].patches);
     }
 
     #[test]

@@ -540,3 +540,92 @@ fn prop_dap_only_evicts_weak_vision() {
         }
     });
 }
+
+/// Partial-prefix DAP replay (PR 4): reconstructing a request's
+/// statistics from the cached prefix-row contributions plus its own
+/// recomputed suffix rows is *bit-exact* — prefix rows and suffix rows
+/// accumulate in exactly the order the whole-prompt reduction adds them
+/// — and every partial_safe policy's prefill is a pure function of
+/// those statistics (it never reads the prompt KV). Together these are
+/// the two halves of the warm-start guarantee: the replayed retention
+/// decision equals the request's own cold decision.
+#[test]
+fn prop_partial_replay_reconstructs_cold_decision() {
+    let m = tiny_meta();
+    run_prop("partial-replay", PropConfig::default(), |rng, _| {
+        // prompt layout mirrors the QA shape: [BOS][vision run][text…]
+        let n_vis = 2 + rng.below(8);
+        let n_suffix = 1 + rng.below(6);
+        let n = 1 + n_vis + n_suffix;
+        let p = 1 + n_vis; // boundary: one past the last vision token
+        let is_vision: Vec<bool> = (0..n).map(|i| i >= 1 && i < p).collect();
+        // per-text-row head-mean attention contributions, causal: row i
+        // covers columns 0..=i (vision rows carry no DAP weight)
+        let rows: Vec<Option<Vec<f32>>> = (0..n)
+            .map(|i| (!is_vision[i]).then(|| (0..=i).map(|_| rng.f32()).collect()))
+            .collect();
+        // cold: one pass over every text row, in row order
+        let mut cold_sum = vec![0.0f32; n];
+        let mut cold_max = vec![0.0f32; n];
+        for r in rows.iter().flatten() {
+            for (j, &x) in r.iter().enumerate() {
+                cold_sum[j] += x;
+                cold_max[j] = cold_max[j].max(x);
+            }
+        }
+        // replay: the cached prefix-row contribution first, then the
+        // suffix rows — the exact accumulation the warm path performs
+        let mut re_sum = vec![0.0f32; n];
+        let mut re_max = vec![0.0f32; n];
+        for r in rows[..p].iter().flatten() {
+            for (j, &x) in r.iter().enumerate() {
+                re_sum[j] += x;
+                re_max[j] = re_max[j].max(x);
+            }
+        }
+        for r in rows[p..].iter().flatten() {
+            for (j, &x) in r.iter().enumerate() {
+                re_sum[j] += x;
+                re_max[j] = re_max[j].max(x);
+            }
+        }
+        assert_eq!(cold_sum, re_sum, "column sums must be bit-exact");
+        assert_eq!(cold_max, re_max, "column maxes must be bit-exact");
+        // identical stats → identical decision, for every partial_safe
+        // policy — and independence from the prompt KV (junk vs empty):
+        // the purity partial_safe certifies
+        for spec in ["full", "hae", "h2o", "snapkv", "adakv", "fastv", "window"] {
+            let kind = PolicyKind::parse(spec).unwrap();
+            assert!(kind.partial_safe(), "{}", spec);
+            let junk = vec![0.25f32; m.n_layers * n * m.n_heads * m.d_head];
+            let ctx_cold = PrefillCtx {
+                dap_sum: &cold_sum,
+                dap_max: &cold_max,
+                is_vision: &is_vision,
+                n_tokens: n,
+                k: &junk,
+                v: &junk,
+                bucket: n,
+                meta: &m,
+            };
+            let ctx_replay = PrefillCtx {
+                dap_sum: &re_sum,
+                dap_max: &re_max,
+                is_vision: &is_vision,
+                n_tokens: n,
+                k: &[],
+                v: &[],
+                bucket: n,
+                meta: &m,
+            };
+            let dc = kind.build().prefill(&ctx_cold);
+            let dr = kind.build().prefill(&ctx_replay);
+            assert_eq!(
+                dc.retain, dr.retain,
+                "{}: replayed retention decision differs from cold",
+                spec
+            );
+            assert!(dr.kv_override.is_none(), "{}: partial_safe rewrote KV", spec);
+        }
+    });
+}

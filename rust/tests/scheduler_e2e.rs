@@ -341,6 +341,266 @@ fn prefix_sharing_serves_shared_image_qa() {
     assert_eq!(engine.pool_stats().in_use, 0, "reclaimed arena holds nothing");
 }
 
+/// The fork-storm corner that used to panic (PR-3 known residual): a
+/// budget-sized pool admitted to the brim, with six sharers of ONE
+/// visual prefix diverging simultaneously — an H2O budget below the
+/// prompt length forces eviction *inside* the shared prefix from the
+/// first decode step on every lane, so CoW forks fire concurrently
+/// under maximum page pressure. The fixed accounting (shared partial
+/// tails charged once globally AND kept in the lane bound as the fork
+/// allowance) plus recoverable deferral (`try_evict` + the CoW
+/// affordability gate) must turn that into back-pressure: zero panics,
+/// zero refcount errors, live pages ≤ pool at every tick, and every
+/// request eventually completes.
+#[test]
+fn fork_storm_defers_instead_of_panicking() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&artifact_dir()).unwrap();
+    let batch = widest_batch();
+    if batch < 2 {
+        eprintln!("skipping: needs a compiled decode batch ≥ 2");
+        return;
+    }
+    let meta = manifest.model.clone();
+    let grammar = load_grammar(&artifact_dir());
+    let mut b = RequestBuilder::new(&meta, &grammar, 21);
+    // six questions, one image: every admission shares the visual prefix
+    let mut reqs = b.shared_image_qa(31, 6);
+    for r in &mut reqs {
+        r.max_new_tokens = 12; // enough steps for repeated divergence
+    }
+
+    // budget-sized: exactly the admission bound of `batch` such lanes
+    // plus the cache's prefix pins — admitted to the brim, nothing spare
+    let ps = DEFAULT_PAGE_SLOTS;
+    let cap_limit = manifest.shapes.cache_capacity - 1;
+    let worst = |r: &Request| {
+        (r.prompt_len() + r.max_new_tokens).min(cap_limit).div_ceil(ps)
+    };
+    let prompt_pages = reqs[0].prompt_len().div_ceil(ps);
+    let budget_pages = batch * worst(&reqs[0]) + 2 * prompt_pages + 1;
+    let budget = budget_pages * ps * meta.kv_bytes_per_token();
+
+    // H2O with a budget below the prompt: the very first post-step
+    // decision compacts deep inside the adopted prefix
+    let policy = PolicyKind::parse("h2o:budget=12,recent=2").unwrap();
+    let rt = Runtime::load(&artifact_dir()).unwrap();
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            policy,
+            batch,
+            kv_budget: Some(budget),
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    engine.rt.warmup(&[batch]).unwrap();
+    let sched_cfg = SchedulerConfig { kv_budget: budget, ..SchedulerConfig::default() };
+    let mut sched: Scheduler<u64> = Scheduler::for_engine(sched_cfg, &engine);
+    for r in reqs {
+        sched.submit(r.id, r).expect("fits alone under the storm budget");
+    }
+
+    let pool_pages = engine.pool_pages();
+    let mut done = 0usize;
+    for _ in 0..5000 {
+        if !sched.has_work() {
+            break;
+        }
+        // a panic anywhere in here IS the regression this test guards
+        sched.tick(&mut engine).unwrap();
+        let pool = engine.pool_stats();
+        assert!(
+            pool.in_use <= pool_pages,
+            "fork allowance failed: {} live pages > {} pool",
+            pool.in_use,
+            pool_pages
+        );
+        assert_eq!(pool.refcount_errors, 0, "refcount violation under divergence");
+        for outcome in sched.take_outcomes() {
+            match outcome {
+                SchedOutcome::Done { ar, .. } => {
+                    assert!(!ar.generated.is_empty());
+                    done += 1;
+                }
+                SchedOutcome::Failed { tag, error } => {
+                    panic!("request {} failed: {}", tag, error);
+                }
+            }
+        }
+    }
+    assert_eq!(done, 6, "every sharer completed despite the storm");
+    let pool = engine.pool_stats();
+    assert!(pool.forks > 0, "the storm actually diverged (CoW forks fired)");
+    assert_eq!(pool.refcount_errors, 0);
+    assert_eq!(
+        engine.emergency_tail_drops(),
+        0,
+        "no lane should have reached the capacity wall in this workload"
+    );
+    // drained arena: only cache pins remain, and they reclaim fully
+    while engine.prefix_evict_one() {}
+    assert_eq!(engine.pool_stats().in_use, 0, "no page leaked through the storm");
+}
+
+/// Partial-prefix warm starts end to end through the scheduler: a
+/// multi-turn dialog (8 distinct prompts, one image) admits every turn
+/// after the first via `RadixTree::longest_match` + suffix recompute +
+/// per-request DAP replay. Serially (batch-1 engines, identical decode
+/// numerics) every warm turn must be byte-identical to its own cold
+/// run — including the retained-index set the replayed decision
+/// produces — and through the scheduler the page/refcount invariants
+/// must hold every tick while the skip-rate reaches the shared-prefix
+/// fraction.
+#[test]
+fn partial_warm_starts_serve_multi_turn_dialog() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&artifact_dir()).unwrap();
+    let meta = manifest.model.clone();
+    let grammar = load_grammar(&artifact_dir());
+
+    // (a) serial byte-identity + retained-set equality, cold vs warm
+    let mut b = RequestBuilder::new(&meta, &grammar, 5);
+    let turns = b.shared_image_dialog(17, 8);
+    let prefix_len = 1 + meta.n_patches;
+    let mut cold = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            prefix_cache: false,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    cold.rt.warmup(&[1]).unwrap();
+    let mut warm = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
+    )
+    .unwrap();
+    warm.rt.warmup(&[1]).unwrap();
+    for (t, r) in turns.iter().enumerate() {
+        let c = cold.generate(r.clone()).unwrap();
+        let w = warm.generate(r.clone()).unwrap();
+        assert_eq!(
+            w.generated, c.generated,
+            "turn {} diverged between cold and warm",
+            t
+        );
+        // the replayed DAP decision is the request's own: same retained
+        // count, positions and score seeds as the cold prefill
+        assert_eq!(
+            w.stats.pruned_at_prefill, c.stats.pruned_at_prefill,
+            "turn {}: replayed retention decision differs from cold",
+            t
+        );
+    }
+    // retained-index sets, observed right after admission (before decode
+    // mutates the slab): the replayed decision must pick the same slots
+    let mut cold2 = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            prefix_cache: false,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    cold2.rt.warmup(&[1]).unwrap();
+    let mut warm2 = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
+    )
+    .unwrap();
+    warm2.rt.warmup(&[1]).unwrap();
+    for (t, r) in turns.iter().enumerate() {
+        let c = cold2.prefill(r.clone()).unwrap();
+        let w = warm2.prefill(r.clone()).unwrap();
+        let cp: Vec<i32> = c.slab.meta().iter().map(|m| m.position).collect();
+        let wp: Vec<i32> = w.slab.meta().iter().map(|m| m.position).collect();
+        assert_eq!(wp, cp, "turn {}: retained-index set differs from cold", t);
+        assert_eq!(
+            w.pending_token, c.pending_token,
+            "turn {}: first token differs from cold",
+            t
+        );
+    }
+    assert!(
+        warm2.prefix_stats().partial_hits >= 7,
+        "prefill-level replay exercised the partial path"
+    );
+    let ps = warm.prefix_stats();
+    assert_eq!(ps.hits, 0, "every turn is a distinct prompt — no exact hits");
+    assert!(
+        ps.partial_hits >= 7,
+        "turns 1..8 must warm-start from the shared image: {:?}",
+        ps
+    );
+    // skip rate ≥ the shared-prefix fraction: each warm turn skips its
+    // whole [BOS][img] prefix
+    assert!(
+        ps.prefill_tokens_skipped >= (7 * prefix_len) as u64,
+        "skipped {} < {} (7 turns × {}-token prefix)",
+        ps.prefill_tokens_skipped,
+        7 * prefix_len,
+        prefix_len
+    );
+    assert_eq!(warm.pool_stats().refcount_errors, 0);
+
+    // (b) through the scheduler: invariants every tick under divergence
+    let batch = widest_batch();
+    let mut engine = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            batch,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    engine.rt.warmup(&[batch]).unwrap();
+    let mut sched: Scheduler<u64> =
+        Scheduler::for_engine(SchedulerConfig::default(), &engine);
+    let mut b = RequestBuilder::new(&meta, &grammar, 6);
+    for r in b.shared_image_dialog(18, 8) {
+        sched.submit(r.id, r).unwrap();
+    }
+    let pool_pages = engine.pool_pages();
+    let mut done = 0usize;
+    for _ in 0..5000 {
+        if !sched.has_work() {
+            break;
+        }
+        sched.tick(&mut engine).unwrap();
+        let pool = engine.pool_stats();
+        assert!(pool.in_use <= pool_pages, "live pages exceed the pool");
+        assert_eq!(pool.refcount_errors, 0);
+        for outcome in sched.take_outcomes() {
+            match outcome {
+                SchedOutcome::Done { ar, .. } => {
+                    assert!(!ar.generated.is_empty());
+                    done += 1;
+                }
+                SchedOutcome::Failed { tag, error } => {
+                    panic!("turn {} failed: {}", tag, error);
+                }
+            }
+        }
+    }
+    assert_eq!(done, 8, "all dialog turns completed");
+    let ps = engine.prefix_stats();
+    assert!(ps.partial_hits >= 1, "scheduler path produced partial hits: {:?}", ps);
+    assert_eq!(
+        sched.metrics.prefix_partial_hits, ps.partial_hits,
+        "partial hits surfaced in the stats snapshot"
+    );
+}
+
 #[test]
 fn tiny_budget_rejects_gracefully() {
     if !artifacts_present() {
