@@ -1,0 +1,35 @@
+# Entry points shared verbatim by CI (.github/workflows/ci.yml) and
+# local use, so the two invocations cannot drift.
+#
+#   make artifacts     — AOT-build the JAX artifacts into ./artifacts
+#                        (the directory runtime/mod.rs and the test
+#                        harness look in; $HAE_ARTIFACTS overrides).
+#                        HAE_SMALL_ARTIFACTS=1 builds the trimmed CI
+#                        bucket grid; HAE_TRAIN_STEPS overrides the
+#                        training length. Needs python with jax + numpy
+#                        (CI: pip install "jax[cpu]" numpy).
+#   make test          — the tier-1 suite. With artifacts present the
+#                        artifact-gated e2e suites run for real;
+#                        HAE_REQUIRE_ARTIFACTS=1 (CI) turns any
+#                        would-be skip into a failure.
+#   make bench-smoke   — the assertion-bearing prefix-cache bench
+#                        (byte-identity, retained-set equality, extend
+#                        call bounds). HAE_BENCH_N scales samples.
+
+PYTHON ?= python3
+
+.PHONY: artifacts check-extend test bench-smoke
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+# numeric equivalence of the chunked extend graph vs prefill/decode
+# (random weights, no artifacts needed — a build-time sanity gate)
+check-extend:
+	cd python && $(PYTHON) -m compile.check_extend
+
+test:
+	cargo test -q
+
+bench-smoke:
+	cargo bench --bench perf_prefix_cache

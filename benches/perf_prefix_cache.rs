@@ -150,12 +150,13 @@ fn cow_costs(table: &mut Table, iters: usize) {
 }
 
 /// Generate every request serially on a fresh engine; returns
-/// (wall, Σ prefill_s, token streams, prefix stats).
+/// (wall, Σ prefill_s, token streams, prefix stats, extend calls,
+/// effective extend chunk).
 fn run_mode(
     rt: Runtime,
     prefix_cache: bool,
     requests: &[Request],
-) -> anyhow::Result<(f64, f64, Vec<Vec<i32>>, PrefixStats)> {
+) -> anyhow::Result<(f64, f64, Vec<Vec<i32>>, PrefixStats, u64, usize)> {
     let mut engine = Engine::new(
         rt,
         EngineConfig {
@@ -173,7 +174,14 @@ fn run_mode(
         prefill_s += ar.stats.prefill_s;
         outputs.push(ar.generated.clone());
     }
-    Ok((t0.elapsed().as_secs_f64(), prefill_s, outputs, engine.prefix_stats()))
+    Ok((
+        t0.elapsed().as_secs_f64(),
+        prefill_s,
+        outputs,
+        engine.prefix_stats(),
+        engine.extend_calls(),
+        engine.effective_extend_chunk(),
+    ))
 }
 
 /// Cold vs warm serving table + the acceptance assertions.
@@ -181,9 +189,9 @@ fn engine_table(n_images: usize) -> anyhow::Result<()> {
     let rt = match load_runtime() {
         Ok(rt) => rt,
         Err(_) => {
-            eprintln!(
-                "artifacts not built (run `make artifacts`) — skipping the\n\
-                 cold-vs-warm engine section"
+            hae_serve::harness::skip_or_fail(
+                "artifacts not built (run `make artifacts`) — \
+                 cold-vs-warm engine section",
             );
             return Ok(());
         }
@@ -197,8 +205,8 @@ fn engine_table(n_images: usize) -> anyhow::Result<()> {
         .collect();
     let total_prompt_tokens: usize = requests.iter().map(|r| r.prompt_len()).sum();
 
-    let (cold_wall, cold_prefill, cold_out, _) = run_mode(rt, false, &requests)?;
-    let (warm_wall, warm_prefill, warm_out, ps) =
+    let (cold_wall, cold_prefill, cold_out, _, _, _) = run_mode(rt, false, &requests)?;
+    let (warm_wall, warm_prefill, warm_out, ps, _, _) =
         run_mode(load_runtime()?, true, &requests)?;
 
     // acceptance: byte-identical outputs, ≥50% prefill tokens skipped
@@ -261,9 +269,9 @@ fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
     let rt = match load_runtime() {
         Ok(rt) => rt,
         Err(_) => {
-            eprintln!(
-                "artifacts not built (run `make artifacts`) — skipping the\n\
-                 partial-hit dialog section"
+            hae_serve::harness::skip_or_fail(
+                "artifacts not built (run `make artifacts`) — \
+                 partial-hit dialog section",
             );
             return Ok(());
         }
@@ -275,8 +283,8 @@ fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
     let prefix_len = 1 + meta.n_patches; // [BOS][img]
     let warm_prompt_tokens: usize = turns[1..].iter().map(|r| r.prompt_len()).sum();
 
-    let (cold_wall, cold_prefill, cold_out, _) = run_mode(rt, false, &turns)?;
-    let (warm_wall, warm_prefill, warm_out, ps) =
+    let (cold_wall, cold_prefill, cold_out, _, _, _) = run_mode(rt, false, &turns)?;
+    let (warm_wall, warm_prefill, warm_out, ps, extend_calls, eff_chunk) =
         run_mode(load_runtime()?, true, &turns)?;
 
     // acceptance: byte-identity per turn, partial hits only, skip rate ≥
@@ -302,6 +310,27 @@ fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
         n_turns - 1,
         prefix_len
     );
+    // the chunked suffix recompute: never more device calls than
+    // ⌈suffix/chunk⌉ per warm turn at the chunk the engine actually ran
+    // (the default clamped to the artifacts' largest compiled bucket —
+    // 1 on a pre-extend artifact set, where the bound degrades to the
+    // old one-call-per-token loop instead of hard-failing the bench)
+    let call_bound: u64 = turns[1..]
+        .iter()
+        .map(|r| {
+            hae_serve::scheduler::AdmissionController::extend_chunk_calls(
+                r.prompt_len() - prefix_len,
+                eff_chunk,
+            ) as u64
+        })
+        .sum();
+    assert!(
+        extend_calls <= call_bound,
+        "extend calls {} > Σ⌈suffix/{}⌉ = {}",
+        extend_calls,
+        eff_chunk,
+        call_bound
+    );
     let shared_frac = shared as f64 / warm_prompt_tokens as f64;
     let skip_frac = skipped as f64 / warm_prompt_tokens as f64;
     assert!(
@@ -317,13 +346,14 @@ fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
              (outputs byte-identical per turn)",
             n_turns
         ),
-        &["mode", "wall s", "prefill s", "partial hits",
+        &["mode", "wall s", "prefill s", "partial hits", "extend calls",
           "prefill tok skipped", "skip rate vs shared-prefix frac"],
     );
     table.row(vec![
         "prefix cache off".into(),
         f2(cold_wall),
         f2(cold_prefill),
+        "0".into(),
         "0".into(),
         "0".into(),
         "-".into(),
@@ -333,6 +363,7 @@ fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
         f2(warm_wall),
         f2(warm_prefill),
         format!("{}", ps.partial_hits),
+        format!("{}", extend_calls),
         format!("{}", skipped),
         format!("{:.1}% ≥ {:.1}%", skip_frac * 100.0, shared_frac * 100.0),
     ]);

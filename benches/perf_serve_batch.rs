@@ -133,12 +133,10 @@ fn shared_image_mix(per_client: usize, widest: usize) {
         &["prefix cache", "req/s", "ttft p50 ms", "p50 ms", "max lanes",
           "hit rate", "prefill tok skipped", "errors"],
     );
-    let mut port = 8560u16;
     for &cache_on in &[false, true] {
-        let addr = format!("127.0.0.1:{}", port);
-        port += 1;
-        let handle = spawn_server(
-            addr.clone(),
+        // port 0: the OS hands out a free port, so parallel bench/test
+        // binaries never collide on a hard-coded one
+        let (handle, addr) = spawn_server(
             PolicyKind::parse("hae").unwrap(),
             widest,
             None,
@@ -197,15 +195,12 @@ fn main() -> anyhow::Result<()> {
           "max lanes", "peak KV KiB", "errors"],
     );
 
-    let mut port = 8520u16;
     for policy_spec in ["hae", "full"] {
         for &batch in &batches {
             for &clients in &[1usize, 4, 8] {
-                let addr = format!("127.0.0.1:{}", port);
-                port += 1;
                 let policy = PolicyKind::parse(policy_spec).unwrap();
-                let handle =
-                    spawn_server(addr.clone(), policy, batch, None, SchedPolicy::Fifo, true);
+                let (handle, addr) =
+                    spawn_server(policy, batch, None, SchedPolicy::Fifo, true);
                 assert!(wait_listening(&addr), "server on {}", addr);
                 let (wall, lats, errors) = drive(&addr, clients, per_client);
                 let stats = client_request(&addr, r#"{"kind": "stats"}"#)

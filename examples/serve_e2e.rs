@@ -22,19 +22,17 @@ use hae_serve::server::client_request;
 use hae_serve::util::json::Json;
 use hae_serve::util::stats::percentile;
 
-const ADDR: &str = "127.0.0.1:8491";
-
 fn main() -> Result<()> {
     let batch = widest_batch();
-    let server = spawn_server(
-        ADDR.into(),
+    // port 0: the OS picks a free port, read back from the bound listener
+    let (server, addr) = spawn_server(
         PolicyKind::hae_default(),
         batch,
         None,
         SchedPolicy::Priority,
         true,
     );
-    assert!(wait_listening(ADDR), "server came up");
+    assert!(wait_listening(&addr), "server came up");
 
     let n_clients = 4;
     let per_client = 8;
@@ -42,6 +40,7 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
     for c in 0..n_clients {
         let tx = tx.clone();
+        let addr = addr.clone();
         std::thread::spawn(move || {
             for i in 0..per_client {
                 let kind = match (c + i) % 3 {
@@ -55,7 +54,7 @@ fn main() -> Result<()> {
                     kind
                 );
                 let t = Instant::now();
-                let resp = client_request(ADDR, &payload).unwrap_or_default();
+                let resp = client_request(&addr, &payload).unwrap_or_default();
                 tx.send((t.elapsed().as_secs_f64(), resp)).unwrap();
             }
         });
@@ -79,10 +78,10 @@ fn main() -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let stats = client_request(ADDR, r#"{"kind": "stats"}"#)
+    let stats = client_request(&addr, r#"{"kind": "stats"}"#)
         .ok()
         .and_then(|r| Json::parse(&r).ok());
-    let _ = client_request(ADDR, "shutdown");
+    let _ = client_request(&addr, "shutdown");
     let _ = server.join();
 
     let n = latencies.len();

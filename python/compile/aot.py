@@ -9,7 +9,11 @@ Emits, into the artifacts directory:
                       contract the rust runtime validates at startup)
   prefill_s{S}.hlo.txt
   decode_b{B}_c{C}.hlo.txt
+  extend_b{B}_s{S}_c{C}.hlo.txt
   analysis_s{S}.hlo.txt
+
+Set HAE_SMALL_ARTIFACTS=1 for the trimmed bucket grid CI builds (same
+model and training, fewer graphs — see config.SMALL_ARTIFACTS).
 
 Interchange format is HLO **text**, not serialized HloModuleProto: jax≥0.5
 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
@@ -29,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax._src.lib import xla_client as xc
 
-from .config import MODEL, ARTIFACTS, manifest_dict
+from .config import MODEL, ARTIFACTS, SMALL, manifest_dict
 from . import model as M
 from . import train as T
 
@@ -52,7 +56,12 @@ def weight_specs():
 
 
 def source_fingerprint() -> str:
-    """Hash of the compile-path sources — invalidates cached artifacts."""
+    """Hash of the compile-path sources — invalidates cached artifacts.
+
+    The build-shaping environment (bucket grid, training length) is part
+    of the hash: switching HAE_SMALL_ARTIFACTS or HAE_TRAIN_STEPS must
+    not be mistaken for an up-to-date build.
+    """
     h = hashlib.sha256()
     pkg = os.path.dirname(__file__)
     for root, _, files in sorted(os.walk(pkg)):
@@ -60,6 +69,8 @@ def source_fingerprint() -> str:
             if f.endswith(".py"):
                 with open(os.path.join(root, f), "rb") as fh:
                     h.update(fh.read())
+    h.update(b"small" if SMALL else b"full")
+    h.update(str(TRAIN_STEPS).encode())
     return h.hexdigest()[:16]
 
 
@@ -151,6 +162,23 @@ def lower_all(out_dir: str, verbose=True):
             emit(f"decode_b{b}_c{c}", M.decode_fn(cfg), specs)
             table.append({"name": f"decode_b{b}_c{c}", "kind": "decode",
                           "batch": b, "capacity": c})
+
+    for b in art.extend_batches:
+        for s in art.extend_chunks:
+            for c in art.decode_capacities:
+                specs = [
+                    jax.ShapeDtypeStruct((b, s), i32),           # token
+                    jax.ShapeDtypeStruct((b, s), i32),           # pos
+                    jax.ShapeDtypeStruct(
+                        (b, cfg.n_layers, c, cfg.n_heads, cfg.d_head), f32),  # K
+                    jax.ShapeDtypeStruct(
+                        (b, cfg.n_layers, c, cfg.n_heads, cfg.d_head), f32),  # V
+                    jax.ShapeDtypeStruct((b,), i32),             # length
+                    jax.ShapeDtypeStruct((b,), i32),             # n_new
+                ]
+                emit(f"extend_b{b}_s{s}_c{c}", M.extend_fn(cfg), specs)
+                table.append({"name": f"extend_b{b}_s{s}_c{c}", "kind": "extend",
+                              "batch": b, "chunk": s, "capacity": c})
 
     for s in art.analysis_buckets:
         specs = [

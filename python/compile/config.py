@@ -12,6 +12,7 @@ multimodal corpus so that its attention maps exhibit the heterogeneous
 visual/text sparsity the HAE paper exploits.
 """
 
+import os
 from dataclasses import dataclass, field, asdict
 from typing import List
 
@@ -50,6 +51,13 @@ class ArtifactConfig:
     decode_capacities: List[int] = field(default_factory=lambda: [128, 256, 384, 512])
     analysis_buckets: List[int] = field(default_factory=lambda: [128, 256])
     cache_capacity: int = 512    # max decode-time KV slots per request (C)
+    # chunked-extend executables (extend_b{B}_s{S}_c{C}): prefill-with-
+    # KV-cache over S new token rows against a C-slot cache. Partial
+    # warm starts recompute their text suffix through these in chunks of
+    # --extend-chunk instead of one token per decode call; shorter
+    # chunks run padded against the smallest bucket that fits
+    extend_batches: List[int] = field(default_factory=lambda: [1])
+    extend_chunks: List[int] = field(default_factory=lambda: [8, 32])
 
     # special token ids (must match rust/src/model/tokenizer.rs)
     pad_id: int = 0
@@ -59,7 +67,34 @@ class ArtifactConfig:
 
 
 MODEL = ModelConfig()
-ARTIFACTS = ArtifactConfig()
+
+
+def _env_flag(name: str) -> bool:
+    """Explicit truthy set only: "false"/"off"/garbage never silently
+    flips a build-shaping flag on."""
+    return os.environ.get(name, "").strip().lower() in ("1", "true", "yes", "on")
+
+
+# The small/test artifact set CI builds (HAE_SMALL_ARTIFACTS=1): the SAME
+# model and training (the byte-identity asserts need trained attention,
+# where thresholds and greedy argmax sit far from ties), but a trimmed
+# bucket grid — fewer graphs to lower at build time and fewer PJRT
+# compiles at test time. Every workload the test suites synthesize still
+# fits: prompts ≤ 256 tokens, live caches ≤ 512 slots.
+SMALL_ARTIFACTS = ArtifactConfig(
+    prefill_buckets=[64, 256],
+    decode_batches=[1, 4],
+    decode_capacities=[128, 512],
+    analysis_buckets=[128],
+    extend_batches=[1],
+    extend_chunks=[8, 32],
+)
+
+# normalized once here; aot.py hashes this decision (not the raw env
+# string) into the artifact fingerprint
+SMALL = _env_flag("HAE_SMALL_ARTIFACTS")
+
+ARTIFACTS = SMALL_ARTIFACTS if SMALL else ArtifactConfig()
 
 # Sparsity threshold used by the paper for Fig. 3 (Appendix Eq. 7).
 SPARSITY_EPS = 1e-4

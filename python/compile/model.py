@@ -7,6 +7,9 @@ transformer runs over the mix. Three graph variants are lowered by aot.py:
 
   prefill   — full-sequence forward, emits KV cache + layer-0 DAP stats
   decode    — one-token batched step against a host-owned KV cache
+  extend    — S-token chunked step against a host-owned KV cache (the
+              batched suffix recompute of partial warm starts: one device
+              call processes a whole chunk of text-suffix rows)
   analysis  — prefill variant emitting per-layer observation statistics
               (sparsity rates, DAP column stats, layer-0 probabilities)
 
@@ -293,6 +296,89 @@ def decode_fn(cfg: ModelConfig = MODEL):
         self_mean = jnp.mean(self_attn, axis=(1, 2))         # [B]
         return (logits, k_new, v_new, attn_mean, attn_peak, self_mean,
                 dap_row, dap_row_self)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# extend (chunked prefill-with-cache)
+# ---------------------------------------------------------------------------
+
+def extend_fn(cfg: ModelConfig = MODEL):
+    """Build the chunked extend graph: S new token rows against a cache.
+
+    fn(*params_flat, token[B,S], pos[B,S], k_cache[B,L,C,H,Dh],
+       v_cache[B,L,C,H,Dh], length[B], n_new[B])
+      -> (logits[B,V], k_new[B,L,S,H,Dh], v_new[B,L,S,H,Dh],
+          dap_rows[B,S,C+S])
+
+    The decode graph generalized from one token to a chunk: row i attends
+    to the first length[b] cache slots plus chunk rows 0..=i (causal), so
+    a partial warm start's text suffix recomputes in ⌈suffix/S⌉ device
+    calls instead of one call per token, while every row still sees
+    exactly the context it saw in a cold prefill (positions are passed
+    explicitly; the cache holds the unpruned prefix). Rows are text-only
+    (embed + positional; suffixes never contain vision tokens — see
+    prefix::partial_boundary). Rows at and past n_new[b] are padding:
+    their outputs are garbage and must not be read; `logits` is taken at
+    row n_new[b]-1, the last valid row.
+
+    `dap_rows[b, i]` is the dap layer's head-mean probability row of
+    chunk row i — columns 0..C over the cache slots, columns C..C+S over
+    the chunk rows (C+i is the row's own column). It aggregates exactly
+    like kernels/dap.py's pbar (sum over heads / n_heads) and the decode
+    graph's dap_row, so the host can accumulate a chunk row-by-row, in
+    row order, and reconstruct bit-for-bit the statistics the one-token
+    decode loop would have accumulated.
+    """
+
+    def fn(*args):
+        flat, (token, pos, k_cache, v_cache, length, n_new) = args[:-6], args[-6:]
+        p = params_dict(flat)
+        b, s_ = token.shape
+        c = k_cache.shape[2]
+        scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head))
+
+        x = p["embed"][token] + p["pos"][pos]                # [B,S,D]
+        slot = jnp.arange(c)
+        cache_valid = (slot[None, :] < length[:, None]).astype(jnp.float32)  # [B,C]
+        # causal mask among the chunk rows; pad rows (≥ n_new) sit after
+        # every valid row, so causality alone already hides them as keys
+        causal = jnp.tril(jnp.ones((s_, s_), jnp.float32))   # [S,S]
+
+        k_news, v_news = [], []
+        dap_rows = None
+        for l in range(cfg.n_layers):
+            h = _ln(x, p["ln1_s"][l], p["ln1_b"][l])
+            q = _split_heads(h @ p["wq"][l], cfg)            # [B,S,H,Dh]
+            k = _split_heads(h @ p["wk"][l], cfg)
+            v = _split_heads(h @ p["wv"][l], cfg)
+            kc = k_cache[:, l]                               # [B,C,H,Dh]
+            vc = v_cache[:, l]
+            sc = jnp.einsum("bshd,bchd->bhsc", q, kc) * scale
+            sc = jnp.where(cache_valid[:, None, None, :] > 0, sc, -1e9)
+            ss = jnp.einsum("bshd,bthd->bhst", q, k) * scale
+            ss = jnp.where(causal[None, None, :, :] > 0, ss, -1e9)
+            full = jnp.concatenate([sc, ss], axis=-1)        # [B,H,S,C+S]
+            probs = jax.nn.softmax(full, axis=-1)
+            pc, pi = probs[..., :c], probs[..., c:]
+            if l == cfg.dap_layer:
+                # head-mean rows — the same reduction as decode's dap_row
+                dap_rows = jnp.sum(probs, axis=1) / jnp.float32(cfg.n_heads)
+            out = (jnp.einsum("bhsc,bchd->bshd", pc, vc)
+                   + jnp.einsum("bhst,bthd->bshd", pi, v))   # [B,S,H,Dh]
+            x = x + out.reshape(b, s_, cfg.d_attn) @ p["wo"][l]
+            h2 = _ln(x, p["ln2_s"][l], p["ln2_b"][l])
+            x = x + jax.nn.gelu(h2 @ p["w1"][l] + p["b1"][l]) @ p["w2"][l] + p["b2"][l]
+            k_news.append(k)
+            v_news.append(v)
+
+        xf = _ln(x, p["lnf_s"], p["lnf_b"])
+        last = jnp.clip(n_new - 1, 0, s_ - 1)                # [B]
+        logits = jnp.take_along_axis(xf, last[:, None, None], axis=1)[:, 0] @ p["head"]
+        k_new = jnp.stack(k_news, axis=1)                    # [B,L,S,H,Dh]
+        v_new = jnp.stack(v_news, axis=1)
+        return (logits, k_new, v_new, dap_rows)
 
     return fn
 

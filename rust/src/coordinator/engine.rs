@@ -19,8 +19,8 @@ use crate::cache::{
 };
 use crate::model::vocab;
 use crate::prefix::{
-    request_fingerprint, request_key, KeySym, PartialPrefixHit, PartialProbe,
-    PrefixCache, PrefixHit, PrefixProbe, PrefixStats,
+    request_fingerprint, request_key, DapAccumulator, KeySym, PartialPrefixHit,
+    PartialProbe, PrefixCache, PrefixHit, PrefixProbe, PrefixStats,
 };
 use crate::runtime::{PrefillOut, Runtime, StepTiming};
 use crate::scheduler::AdmissionController;
@@ -55,7 +55,16 @@ pub struct EngineConfig {
     /// the cold path, so this is safe to leave on; disabled internally
     /// for policies whose prefill consumes state (PolicyKind::prefix_safe)
     pub prefix_cache: bool,
+    /// partial warm starts recompute their text suffix in chunks of up
+    /// to this many tokens per device call through the extend
+    /// executables (`--extend-chunk`; clamped to the largest compiled
+    /// chunk bucket). 1 = the one-token decode loop, reproduced exactly
+    pub extend_chunk: usize,
 }
+
+/// Default suffix-recompute chunk: one compiled extend bucket's worth of
+/// rows per device call.
+pub const DEFAULT_EXTEND_CHUNK: usize = 8;
 
 impl Default for EngineConfig {
     fn default() -> Self {
@@ -70,6 +79,7 @@ impl Default for EngineConfig {
             kv_budget: None,
             page_slots: DEFAULT_PAGE_SLOTS,
             prefix_cache: true,
+            extend_chunk: DEFAULT_EXTEND_CHUNK,
         }
     }
 }
@@ -116,6 +126,10 @@ pub struct Engine {
     /// capacity-wall emergencies: a deferred eviction at the hard limit
     /// resolved by the fork-free aligned tail drop instead
     emergency_tail_drops: u64,
+    /// suffix-recompute device calls issued by partial warm starts
+    /// (extend executables + decode-loop fallbacks) — chunking makes
+    /// this ≈ Σ ⌈suffix/chunk⌉ instead of Σ suffix
+    extend_calls: u64,
     /// component timing of the most recent decode step (perf harness)
     last_timing: StepTiming,
 }
@@ -165,6 +179,7 @@ impl Engine {
             prefix: PrefixCache::new(crate::prefix::DEFAULT_MAX_ENTRIES),
             fork_deferrals: 0,
             emergency_tail_drops: 0,
+            extend_calls: 0,
             last_timing: StepTiming::default(),
         })
     }
@@ -227,6 +242,22 @@ impl Engine {
     /// the dropped recent context changes that lane's trajectory.
     pub fn emergency_tail_drops(&self) -> u64 {
         self.emergency_tail_drops
+    }
+
+    /// Suffix-recompute device calls issued by partial warm starts so
+    /// far (chunked extend calls + one-token decode fallbacks).
+    pub fn extend_calls(&self) -> u64 {
+        self.extend_calls
+    }
+
+    /// The suffix-recompute chunk actually in effect: `cfg.extend_chunk`
+    /// clamped to the largest extend bucket compiled for single-lane
+    /// extension (1 when none exist — the decode-loop path).
+    pub fn effective_extend_chunk(&self) -> usize {
+        self.cfg
+            .extend_chunk
+            .max(1)
+            .min(self.rt.manifest.max_extend_chunk(1).max(1))
     }
 
     /// Arena pages currently pinned by prefix-cache entries.
@@ -433,13 +464,20 @@ impl Engine {
     }
 
     /// Partial-prefix warm start: adopt the entry's *unpruned* prefix
-    /// pages copy-on-write, recompute only the text suffix through the
-    /// decode executables, reconstruct this request's own DAP statistics
-    /// (cached prefix-row contributions + the recomputed suffix rows'
-    /// `dap_row` outputs), re-run the retention decision with them, and
-    /// compact the slab to the decision — so the pruning decision is the
-    /// request's own, never the donor's, and the retained-index set,
-    /// score seeds and first token match the request's own cold run.
+    /// pages copy-on-write, recompute only the text suffix — in chunks
+    /// of up to `--extend-chunk` rows per device call through the extend
+    /// executables (`Runtime::extend`), the one-token decode loop at
+    /// chunk 1 — reconstruct this request's own DAP statistics
+    /// (cached prefix-row contributions + the recomputed rows' dap
+    /// outputs, folded in prompt order by `prefix::DapAccumulator`),
+    /// re-run the retention decision with them, and compact the slab to
+    /// the decision — so the pruning decision is the request's own,
+    /// never the donor's, and the retained-index set, score seeds and
+    /// first token match the request's own cold run. Chunking changes
+    /// only how rows are grouped into device calls (⌈suffix/chunk⌉
+    /// instead of one per token): every row still attends over the
+    /// exact context it saw in a cold prefill, and the host accumulation
+    /// order is identical for every chunk size.
     ///
     /// `Err(req)` (the inner result) hands the request back for a cold
     /// prefill when the warm path cannot complete: page adoption refused,
@@ -496,102 +534,162 @@ impl Engine {
             }
             return Ok(Err(req));
         }
-        // headroom for the whole warm admission: suffix pages beyond the
-        // adopted coverage, the partial-tail fork, and the replay
-        // compaction's worst case (every adopted page forks). Admission
-        // already charged the candidate its full worst case (no partial
-        // discount — the fork allowance), so this reclaim is normally a
-        // no-op; a tight race falls back to cold below rather than panic.
-        let worst = pages_for_slots(n, ps) + hit.pages.len() + 1;
-        self.reclaim_pool_headroom(worst);
-        {
-            // the extension's appends (suffix pages + the tail fork) may
-            // not hit the allocator's exhaustion expect: if the pool
-            // cannot cover them even after reclaim, go cold — the cold
-            // path needs no more pages than this and reclaims for itself
-            let pool = self.pool.borrow();
-            let appends = pages_for_slots(n, ps).saturating_sub(hit.pages.len()) + 1;
-            if pool.free_pages() < appends {
-                return Ok(Err(req));
-            }
+        // the extension's appends (suffix pages + the tail fork) may not
+        // hit the allocator's exhaustion expect: if the pool cannot
+        // cover the whole suffix even after reclaiming cache-only pins,
+        // go cold BEFORE any device work — the cold path needs no more
+        // pages than this and reclaims for itself. Admission already
+        // charged the candidate its full worst case (no partial discount
+        // — the fork allowance), so this is normally a no-op; the chunk
+        // loop below then *claims* its pages chunk-by-chunk (the same
+        // claim-as-you-go shape as chunked-prefill reservations,
+        // `AdmissionController::extend_chunk_claim`), and the replay
+        // compaction reclaims its fork worst case separately — cache
+        // pins are only converted when the phase that needs them runs.
+        let appends = pages_for_slots(n, ps).saturating_sub(hit.pages.len()) + 1;
+        self.reclaim_pool_headroom(appends);
+        if self.pool.borrow().free_pages() < appends {
+            return Ok(Err(req));
         }
 
         // the request's own DAP statistics, rebuilt per column (slot i ==
         // position i: the prefix is unpruned and the suffix appends in
-        // order). Prefix-row contributions come from the entry's score
-        // fields; each recomputed suffix row adds its own.
-        let mut colsum = vec![0.0f32; n];
-        let mut colmax = vec![0.0f32; n];
-        for (j, sm) in hit.meta.iter().enumerate() {
-            colsum[j] = sm.cum_score;
-            colmax[j] = sm.cum_peak;
-        }
+        // order). The accumulator seeds columns from the entry's cached
+        // prefix-row contributions, then folds each recomputed suffix
+        // row in prompt order — one addition per column per row, so the
+        // accumulation is bit-identical for every chunk size
+        // (prefix/replay.rs; pinned by tests/cache_props.rs).
+        let mut acc = DapAccumulator::seeded(&hit.meta, n);
 
-        // suffix recompute through the decode executables, lane 0 only.
-        // Positions and lengths are exact, so each suffix token attends
-        // to the full unpruned prefix plus the already-recomputed suffix
-        // — the same context its row saw in the cold prefill.
+        // suffix recompute, lane 0 only: up to `effective_extend_chunk`
+        // rows per extend call, ⌈suffix/chunk⌉ device calls in place of
+        // one per token; chunk 1 (or a pre-extend artifact set) takes
+        // the one-token decode path, reproducing it exactly. Positions
+        // and lengths are exact, so each suffix row attends to the full
+        // unpruned prefix plus the already-recomputed suffix — the same
+        // context its row saw in the cold prefill.
+        let chunk_eff = self.effective_extend_chunk();
+        let ctl = self.pool_admission();
         let b = self.cfg.batch;
         let row = m.n_heads * m.d_head;
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut lengths = vec![0i32; b];
         let mut prefill_dev_s = 0.0f64;
+        let mut calls = 0u64;
         let mut last_logits: Vec<f32> = Vec::new();
-        for t in p..n {
-            debug_assert!(!req.is_vision[t], "partial suffix must be text-only");
+        let mut t = p;
+        while t < n {
+            let step = chunk_eff.min(n - t);
+            debug_assert!(
+                req.is_vision[t..t + step].iter().all(|&v| !v),
+                "partial suffix must be text-only"
+            );
+            // claim this chunk's pages (append pages + the possible tail
+            // fork) out of the reserved worst case
+            self.reclaim_pool_headroom(ctl.extend_chunk_claim(step));
             let len = slab.len();
+            debug_assert_eq!(len, t, "suffix appends in order");
             let capacity = self
                 .rt
                 .manifest
                 .capacity_bucket(len)
                 .ok_or_else(|| anyhow!("suffix length {} exceeds all buckets", len))?;
-            let slab_n = b * m.n_layers * capacity * row;
-            slab.copy_into_lane(
-                &mut self.scratch_k[..slab_n],
-                &mut self.scratch_v[..slab_n],
-                0,
-                capacity,
-            );
-            tokens[0] = req.ids[t];
-            positions[0] = t as i32;
-            lengths[0] = len as i32;
-            let (out, timing) = self.rt.decode(
-                b,
-                capacity,
-                &tokens,
-                &positions,
-                &self.scratch_k[..slab_n],
-                &self.scratch_v[..slab_n],
-                &lengths,
-            )?;
-            prefill_dev_s += timing.total_s();
-            let k_new = out.lane_kv(&m, &out.k_new, 0).to_vec();
-            let v_new = out.lane_kv(&m, &out.v_new, 0).to_vec();
-            // the partial-tail fork this append may trigger is covered by
-            // the `worst` reclaim above plus the admission fork allowance
-            slab.append(&k_new, &v_new, t as i32, Modality::Text, 0.0);
-            // this text row's Eq. 1 / Eq. 3 contributions: cache columns
-            // plus its own (dap_stats' row weight covers all valid text
-            // rows, and the causal diagonal includes self-attention)
-            let dap_row = out.lane_dap_row(0);
-            for ((cs, cm), &r) in
-                colsum.iter_mut().zip(colmax.iter_mut()).zip(&dap_row[..len])
-            {
-                *cs += r;
-                *cm = cm.max(r);
+            if step > 1 {
+                // chunked extend: one device call for `step` rows, padded
+                // to the smallest compiled chunk bucket
+                let s_bucket = self
+                    .rt
+                    .manifest
+                    .extend_bucket(step)
+                    .expect("effective chunk fits a compiled bucket");
+                let slab_n = m.n_layers * capacity * row; // one lane
+                slab.copy_into_lane(
+                    &mut self.scratch_k[..slab_n],
+                    &mut self.scratch_v[..slab_n],
+                    0,
+                    capacity,
+                );
+                let mut toks = vec![0i32; s_bucket];
+                let mut poss = vec![0i32; s_bucket];
+                for i in 0..step {
+                    toks[i] = req.ids[t + i];
+                    poss[i] = (t + i) as i32;
+                }
+                let (out, timing) = self.rt.extend(
+                    1,
+                    s_bucket,
+                    capacity,
+                    &toks,
+                    &poss,
+                    &self.scratch_k[..slab_n],
+                    &self.scratch_v[..slab_n],
+                    &[len as i32],
+                    &[step as i32],
+                )?;
+                prefill_dev_s += timing.total_s();
+                calls += 1;
+                for i in 0..step {
+                    let k_new = out.row_kv(&out.k_new, &m, 0, i);
+                    let v_new = out.row_kv(&out.v_new, &m, 0, i);
+                    slab.append(&k_new, &v_new, (t + i) as i32, Modality::Text, 0.0);
+                    // this row's Eq. 1 / Eq. 3 contributions: the cache
+                    // columns (the unpruned prefix + earlier chunks),
+                    // then the chunk columns up to and including itself
+                    let (cache_cols, chunk_cols) = out.row_dap(0, i);
+                    acc.push_row(&[&cache_cols[..len], &chunk_cols[..=i]]);
+                }
+                if t + step == n {
+                    last_logits = out.lane_logits(&m, 0).to_vec();
+                }
+            } else {
+                // one-token decode step — the pre-chunking path verbatim
+                let slab_n = b * m.n_layers * capacity * row;
+                slab.copy_into_lane(
+                    &mut self.scratch_k[..slab_n],
+                    &mut self.scratch_v[..slab_n],
+                    0,
+                    capacity,
+                );
+                tokens[0] = req.ids[t];
+                positions[0] = t as i32;
+                lengths[0] = len as i32;
+                let (out, timing) = self.rt.decode(
+                    b,
+                    capacity,
+                    &tokens,
+                    &positions,
+                    &self.scratch_k[..slab_n],
+                    &self.scratch_v[..slab_n],
+                    &lengths,
+                )?;
+                prefill_dev_s += timing.total_s();
+                calls += 1;
+                let k_new = out.lane_kv(&m, &out.k_new, 0).to_vec();
+                let v_new = out.lane_kv(&m, &out.v_new, 0).to_vec();
+                slab.append(&k_new, &v_new, t as i32, Modality::Text, 0.0);
+                // this text row's Eq. 1 / Eq. 3 contributions: cache
+                // columns plus its own (dap_stats' row weight covers all
+                // valid text rows; the causal diagonal is self-attention)
+                let dap_row = out.lane_dap_row(0);
+                acc.push_row(&[&dap_row[..len], &[out.lane_dap_self(0)]]);
+                if t + 1 == n {
+                    last_logits = out.lane_logits(&m, 0).to_vec();
+                }
             }
-            let self_mass = out.lane_dap_self(0);
-            colsum[t] += self_mass;
-            colmax[t] = colmax[t].max(self_mass);
-            if t + 1 == n {
-                last_logits = out.lane_logits(&m, 0).to_vec();
-            }
+            t += step;
         }
-        // the extension wrote scratch lane 0 outside decode_step's
-        // ownership tracking: force a clean resync on the first real step
+        let (colsum, colmax) = acc.into_stats();
+        // the extension wrote scratch outside decode_step's ownership
+        // tracking: force a clean resync on the first real step. ALL
+        // lane owners are reset, not just lane 0 — the extension's
+        // lane-0 writes at ITS capacity bucket span byte ranges that
+        // other lanes' regions occupy at smaller buckets, so a lane
+        // whose (lane, capacity) sync looks current could otherwise
+        // read back clobbered bytes after this request compacts the
+        // batch back down a bucket
         slab.invalidate_sync();
-        self.lane_owner[0] = 0;
+        self.lane_owner.fill(0);
 
         // the retention decision, re-run for THIS request over its own
         // statistics — cold/warm equivalence holds because this is the
@@ -621,8 +719,11 @@ impl Engine {
         }
         let retain = decision.retain;
         // apply the decision: compaction inside the adopted prefix forks
-        // the written pages (CoW) — deferrable, so exhaustion here falls
+        // the written pages (CoW) — the last chunk-wise claim, worst case
+        // every still-shared page. Reclaim for it now (cache pins were
+        // deliberately not flushed for this up front); exhaustion falls
         // back to a cold prefill instead of panicking
+        self.reclaim_pool_headroom(slab.shared_pages());
         if slab.try_compact(&retain).is_none() {
             return Ok(Err(req));
         }
@@ -640,6 +741,11 @@ impl Engine {
             };
         }
 
+        // counted only once the warm start stuck: the engine total then
+        // always equals the sum of per-request counts — a rare
+        // cold-fallback after the chunk loop (try_compact exhaustion)
+        // discards its calls from both, keeping the stats reconcilable
+        self.extend_calls += calls;
         let prefill_len = slab.len();
         let first_token = self.sample(&last_logits);
         let mut stats = RequestStats {
@@ -650,6 +756,7 @@ impl Engine {
             peak_kv_bytes: slab.kv_bytes(),
             prefix_hit: true,
             prefill_tokens_skipped: p,
+            extend_calls: calls as usize,
             ..RequestStats::default()
         };
         stats.decisions = policy.decision_count();

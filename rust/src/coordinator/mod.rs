@@ -11,5 +11,5 @@
 pub mod engine;
 pub mod request_state;
 
-pub use engine::{Engine, EngineConfig, StepReport};
+pub use engine::{Engine, EngineConfig, StepReport, DEFAULT_EXTEND_CHUNK};
 pub use request_state::{ActiveRequest, EvictionEvent, RequestStats};

@@ -30,6 +30,10 @@ pub struct RequestStats {
     /// prompt tokens never recomputed because of that hit (== the full
     /// prompt for an exact-match hit, 0 on the cold path)
     pub prefill_tokens_skipped: usize,
+    /// suffix-recompute device calls a partial warm start issued
+    /// (chunked extend calls + decode-loop fallbacks): ≤ ⌈suffix/chunk⌉
+    /// at `--extend-chunk` chunk; 0 for cold prefills and exact hits
+    pub extend_calls: usize,
     /// peak live KV bytes over the request lifetime
     pub peak_kv_bytes: usize,
     /// sum over steps of live KV bytes (for mean occupancy)

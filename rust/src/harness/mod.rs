@@ -15,7 +15,7 @@ use crate::coordinator::{ActiveRequest, Engine, EngineConfig};
 use crate::eval::{fidelity, Fidelity};
 use crate::runtime::Runtime;
 use crate::scheduler::SchedPolicy;
-use crate::server::{serve, ServerConfig};
+use crate::server::{serve_on, ServerConfig};
 use crate::workload::{Request, StoryGrammar};
 
 /// Artifact directory: $HAE_ARTIFACTS or ./artifacts.
@@ -31,6 +31,32 @@ pub fn bench_n(default: usize) -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Artifact-gated suites call this instead of silently returning when
+/// their precondition (built artifacts, a wide-enough compiled batch) is
+/// missing. Under `HAE_REQUIRE_ARTIFACTS=1` — the CI artifacts job,
+/// which just built them — a skip is a hard failure, so the gated
+/// byte-identity/invariant suites can never silently stop running
+/// (libtest captures a passing test's output, so CI could not even grep
+/// for the skip message). Without the variable this is the familiar
+/// eprintln + return.
+pub fn skip_or_fail(reason: &str) {
+    // explicit truthy set only, matching config.py's HAE_SMALL_ARTIFACTS
+    // semantics — "false"/"off"/"0" never arm the gate by accident
+    let required = std::env::var("HAE_REQUIRE_ARTIFACTS")
+        .map(|v| {
+            matches!(v.trim().to_ascii_lowercase().as_str(), "1" | "true" | "yes" | "on")
+        })
+        .unwrap_or(false);
+    if required {
+        panic!(
+            "suite would skip ({}) but HAE_REQUIRE_ARTIFACTS is set — \
+             the CI artifacts job ran without usable artifacts",
+            reason
+        );
+    }
+    eprintln!("skipping: {}", reason);
 }
 
 pub fn load_runtime() -> Result<Runtime> {
@@ -65,20 +91,31 @@ pub fn widest_batch() -> usize {
         .unwrap_or(1)
 }
 
-/// Spawn a serving thread with the given scheduler settings. The engine
-/// is constructed inside the thread — the PJRT client is not Send.
-/// `prefix_cache` toggles the engine's radix-tree prefix cache (warm
-/// hits are byte-identical to cold runs, so tests default it on; the
-/// serve bench compares on vs off).
+/// Spawn a serving thread with the given scheduler settings; returns the
+/// join handle and the server's actual address. The listener is bound
+/// HERE on port 0 — the OS picks a free port, read back via
+/// `local_addr` — so parallel test binaries can never collide on a
+/// hard-coded port (the old fixed-port scheme was a CI flake); the
+/// engine is still constructed inside the thread because the PJRT
+/// client is not Send, but a bound `TcpListener` is. `prefix_cache`
+/// toggles the engine's radix-tree prefix cache (warm hits are
+/// byte-identical to cold runs, so tests default it on; the serve bench
+/// compares on vs off).
 pub fn spawn_server(
-    addr: String,
     policy: PolicyKind,
     batch: usize,
     kv_budget: Option<usize>,
     sched_policy: SchedPolicy,
     prefix_cache: bool,
-) -> std::thread::JoinHandle<()> {
-    std::thread::spawn(move || {
+) -> (std::thread::JoinHandle<()>, String) {
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral port");
+    let addr = listener
+        .local_addr()
+        .expect("bound listener has an address")
+        .to_string();
+    let cfg_addr = addr.clone();
+    let handle = std::thread::spawn(move || {
         let rt = Runtime::load(&artifact_dir()).expect("artifacts built?");
         let engine = Engine::new(
             rt,
@@ -87,15 +124,16 @@ pub fn spawn_server(
         .expect("engine for compiled batch");
         let grammar = load_grammar(&artifact_dir());
         let cfg = ServerConfig {
-            addr,
+            addr: cfg_addr,
             queue_depth: 64,
             kv_budget,
             sched_policy,
         };
-        // surface bind/engine errors as a thread panic so callers see
-        // the root cause on join() instead of a silent dead server
-        serve(engine, cfg, grammar).expect("serve exited with error");
-    })
+        // surface engine errors as a thread panic so callers see the
+        // root cause on join() instead of a silent dead server
+        serve_on(engine, listener, cfg, grammar).expect("serve exited with error");
+    });
+    (handle, addr)
 }
 
 /// Poll until the server accepts connections (up to ~10 s).

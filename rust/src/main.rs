@@ -14,7 +14,7 @@
 
 use anyhow::{anyhow, Result};
 use hae_serve::cache::{PolicyKind, DEFAULT_PAGE_SLOTS};
-use hae_serve::coordinator::{Engine, EngineConfig};
+use hae_serve::coordinator::{Engine, EngineConfig, DEFAULT_EXTEND_CHUNK};
 use hae_serve::harness;
 use hae_serve::model::vocab;
 use hae_serve::runtime::Runtime;
@@ -40,6 +40,10 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
   --prefix-cache M  on|off: radix-tree prefix cache — identical prompts
                     skip prefill and share retained KV pages
                     copy-on-write (default on)
+  --extend-chunk N  partial warm starts recompute their text suffix in
+                    chunks of N tokens per device call (the extend
+                    executables); N|full, clamped to the largest compiled
+                    chunk; 1 = the one-token decode loop (default 8)
   --sched-policy P  serve: fifo | priority (default fifo)
   --verbose         generate: print full token streams";
 
@@ -88,6 +92,15 @@ fn build_engine(
         "off" | "false" | "0" => false,
         other => return Err(anyhow!("bad --prefix-cache '{}' (accepted: on, off)", other)),
     };
+    let extend_chunk = match args.get_or("extend-chunk", "") {
+        "" => DEFAULT_EXTEND_CHUNK,
+        // "full": one call per suffix when a bucket fits it (the engine
+        // clamps to the largest compiled chunk)
+        "full" => usize::MAX,
+        spec => spec.parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+            anyhow!("bad --extend-chunk '{}' (accepted: an integer ≥ 1, or 'full')", spec)
+        })?,
+    };
     let cfg = EngineConfig {
         policy,
         temperature: args.f32("temperature", 0.0),
@@ -99,6 +112,7 @@ fn build_engine(
         kv_budget,
         page_slots: args.usize("page-slots", DEFAULT_PAGE_SLOTS),
         prefix_cache,
+        extend_chunk,
     };
     let grammar =
         StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
@@ -203,10 +217,17 @@ fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
         );
     }
     let ps = engine.prefix_stats();
-    if ps.hits + ps.misses > 0 {
+    if ps.hits + ps.partial_hits + ps.misses > 0 {
         println!(
-            "prefix cache: {} hits / {} misses, {} prefill tokens skipped, {} pages pinned",
-            ps.hits, ps.misses, ps.prefill_tokens_skipped, ps.pinned_pages
+            "prefix cache: {} exact + {} partial hits / {} misses, {} prefill tokens \
+             skipped, {} extend calls (chunk {}), {} pages pinned",
+            ps.hits,
+            ps.partial_hits,
+            ps.misses,
+            ps.prefill_tokens_skipped,
+            engine.extend_calls(),
+            engine.effective_extend_chunk(),
+            ps.pinned_pages
         );
     }
     Ok(())

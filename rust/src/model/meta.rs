@@ -53,6 +53,12 @@ pub struct ArtifactShapes {
     pub decode_capacities: Vec<usize>,
     pub analysis_buckets: Vec<usize>,
     pub cache_capacity: usize,
+    /// chunked-extend executables (`extend_b{B}_s{S}_c{C}`): batch sizes
+    /// and chunk (S) buckets; capacities reuse `decode_capacities`.
+    /// Empty on pre-extend artifact sets — the engine then recomputes
+    /// partial warm-start suffixes through the decode loop as before.
+    pub extend_batches: Vec<usize>,
+    pub extend_chunks: Vec<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -107,6 +113,12 @@ impl Manifest {
             decode_capacities: usize_list(&j, &["artifacts", "decode_capacities"])?,
             analysis_buckets: usize_list(&j, &["artifacts", "analysis_buckets"])?,
             cache_capacity: usize_field(&j, &["artifacts", "cache_capacity"])?,
+            // absent on pre-extend manifests: default to no extend
+            // executables rather than refusing the whole artifact set
+            extend_batches: usize_list(&j, &["artifacts", "extend_batches"])
+                .unwrap_or_default(),
+            extend_chunks: usize_list(&j, &["artifacts", "extend_chunks"])
+                .unwrap_or_default(),
         };
 
         let weights_json = j
@@ -175,6 +187,14 @@ impl Manifest {
         if self.model.max_pos < self.shapes.cache_capacity {
             bail!("positional table smaller than cache capacity");
         }
+        let mut chunks = self.shapes.extend_chunks.clone();
+        chunks.sort_unstable();
+        if chunks != self.shapes.extend_chunks {
+            bail!("extend chunks must be sorted ascending");
+        }
+        if self.shapes.extend_chunks.contains(&0) {
+            bail!("extend chunk of 0 tokens is meaningless");
+        }
         let total: usize = self.weights.iter().map(|w| w.numel).sum();
         let bin = self.dir.join("weights.bin");
         if let Ok(md) = std::fs::metadata(&bin) {
@@ -202,6 +222,24 @@ impl Manifest {
     /// (strictly greater, because the new token needs a free slot).
     pub fn capacity_bucket(&self, len: usize) -> Option<usize> {
         self.shapes.decode_capacities.iter().copied().find(|&c| c > len)
+    }
+
+    /// Smallest compiled extend chunk (S) bucket that fits `step` new
+    /// rows; shorter chunks run padded with `n_new` masking the rest.
+    /// None when no bucket fits (or no extend executables exist).
+    pub fn extend_bucket(&self, step: usize) -> Option<usize> {
+        self.shapes.extend_chunks.iter().copied().find(|&s| s >= step)
+    }
+
+    /// Largest compiled extend chunk for `batch` lanes — the ceiling on
+    /// `--extend-chunk` (0 when no extend executables exist at that
+    /// batch, in which case the suffix recompute falls back to the
+    /// one-token decode loop).
+    pub fn max_extend_chunk(&self, batch: usize) -> usize {
+        if !self.shapes.extend_batches.contains(&batch) {
+            return 0;
+        }
+        self.shapes.extend_chunks.iter().copied().max().unwrap_or(0)
     }
 }
 
@@ -240,6 +278,51 @@ mod tests {
         let c0 = m.shapes.decode_capacities[0];
         assert_eq!(m.capacity_bucket(c0 - 1), Some(c0));
         assert!(m.capacity_bucket(c0).unwrap() > c0);
+    }
+
+    #[test]
+    fn extend_bucket_selection() {
+        let meta = ModelMeta {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            d_mlp: 256,
+            patch_dim: 32,
+            n_patches: 16,
+            max_pos: 640,
+            dap_layer: 1,
+        };
+        let mut m = Manifest {
+            dir: PathBuf::from("."),
+            model: meta,
+            shapes: ArtifactShapes {
+                prefill_buckets: vec![64, 256],
+                decode_batches: vec![1, 4],
+                decode_capacities: vec![128, 512],
+                analysis_buckets: vec![128],
+                cache_capacity: 512,
+                extend_batches: vec![1],
+                extend_chunks: vec![8, 32],
+            },
+            weights: Vec::new(),
+            seed: 0,
+            train_steps: 0,
+        };
+        assert_eq!(m.extend_bucket(1), Some(8), "short chunks run padded");
+        assert_eq!(m.extend_bucket(8), Some(8));
+        assert_eq!(m.extend_bucket(9), Some(32));
+        assert_eq!(m.extend_bucket(32), Some(32));
+        assert_eq!(m.extend_bucket(33), None, "no bucket fits");
+        assert_eq!(m.max_extend_chunk(1), 32);
+        assert_eq!(m.max_extend_chunk(4), 0, "batch 4 not compiled");
+        // pre-extend manifests: everything degrades to the decode loop
+        m.shapes.extend_batches.clear();
+        m.shapes.extend_chunks.clear();
+        assert_eq!(m.extend_bucket(2), None);
+        assert_eq!(m.max_extend_chunk(1), 0);
+        assert!(m.validate().is_ok(), "empty extend lists are valid");
     }
 
     #[test]

@@ -59,12 +59,14 @@
 
 pub mod cow;
 pub mod radix;
+pub mod replay;
 
 use crate::cache::paged::PagePool;
 use crate::cache::slab::SlotMeta;
 use crate::workload::Request;
 
 pub use radix::{KeySym, RadixTree};
+pub use replay::DapAccumulator;
 
 /// Default cap on cached entries (LRU beyond this). Entries are cheap on
 /// the host (metadata + one logits row) — the real cost is pinned arena
@@ -172,15 +174,46 @@ pub fn prefix_fingerprint(req: &Request, prefix_tokens: usize) -> u64 {
     fnv(h, &(p as u64).to_le_bytes())
 }
 
-/// Token boundary of the reusable prefix: one past the *last* vision
-/// token. `None` when the prompt has no vision (a pure-text prefix is
-/// not worth pinning arena pages for) or no text suffix after it (an
-/// empty suffix is the exact-hit case, and the decode-path suffix
-/// recompute can only embed text tokens anyway).
-pub fn partial_boundary(req: &Request) -> Option<usize> {
-    let last_vis = req.is_vision.iter().rposition(|&v| v)?;
+/// A reusable-prefix boundary of a prompt: a token position where a
+/// prefix entry can be snapshotted and later adopted. Everything after a
+/// boundary must be text-only — the suffix recompute (decode or chunked
+/// extend executables) can only embed text tokens.
+///
+/// Today there is exactly one boundary kind: one past the *last* vision
+/// segment, where the prefill graph emits the prefix-restricted DAP
+/// statistics (`dap_psum`/`dap_pmax`). The boundary discovery is
+/// factored here so the planned deeper *text* boundaries (caching shared
+/// dialog history, which needs a psum snapshot per boundary) extend
+/// [`reusable_boundaries`] instead of re-deriving positions at every
+/// call site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixBoundary {
+    /// prompt tokens in the reusable prefix (the boundary position)
+    pub tokens: usize,
+    /// key symbols covering those tokens ([`prefix_symbols`])
+    pub syms: usize,
+}
+
+/// Every reusable-prefix boundary of a prompt, shallow→deep. Currently
+/// at most one (the last-vision-segment boundary); empty when the
+/// prompt has no vision (a pure-text prefix is not worth pinning arena
+/// pages for) or no text suffix after the last vision token (an empty
+/// suffix is the exact-hit case).
+pub fn reusable_boundaries(req: &Request) -> Vec<PrefixBoundary> {
+    let Some(last_vis) = req.is_vision.iter().rposition(|&v| v) else {
+        return Vec::new();
+    };
     let p = last_vis + 1;
-    (p < req.ids.len()).then_some(p)
+    if p >= req.ids.len() {
+        return Vec::new();
+    }
+    vec![PrefixBoundary { tokens: p, syms: prefix_symbols(req, p) }]
+}
+
+/// Token boundary of the deepest reusable prefix (see
+/// [`reusable_boundaries`]); the depth partial lookups probe at.
+pub fn partial_boundary(req: &Request) -> Option<usize> {
+    reusable_boundaries(req).last().map(|b| b.tokens)
 }
 
 /// Key symbols covering the first `prefix_tokens` prompt tokens — the
@@ -230,22 +263,29 @@ pub struct PartialProbe {
 impl PrefixProbe {
     pub fn of(req: &Request) -> PrefixProbe {
         let key = request_key(req);
-        let boundary = partial_boundary(req);
-        // one pass over the (patch-dominated) prompt data computes BOTH
-        // fingerprints: snapshot the stream at the boundary, keep going
+        let boundaries = reusable_boundaries(req);
+        // one pass over the (patch-dominated) prompt data computes the
+        // whole-prompt fingerprint AND a snapshot at every reusable
+        // boundary (today at most one; deeper text boundaries will
+        // snapshot here too) — the stream is token-interleaved exactly
+        // so these prefixes are prefix fingerprints
         let pd = patch_dim_of(req);
         let mut h = FP_SEED;
-        let mut prefix_fp = None;
+        let mut snaps: Vec<u64> = Vec::with_capacity(boundaries.len());
+        let mut next = boundaries.iter();
+        let mut pending = next.next();
         for i in 0..req.ids.len() {
             h = fp_absorb(h, req, i, pd);
-            if Some(i + 1) == boundary {
-                prefix_fp = Some(fnv(h, &((i + 1) as u64).to_le_bytes()));
+            if pending.is_some_and(|b| b.tokens == i + 1) {
+                snaps.push(fnv(h, &((i + 1) as u64).to_le_bytes()));
+                pending = next.next();
             }
         }
-        let partial = boundary.map(|p| PartialProbe {
-            prefix_tokens: p,
-            prefix_syms: prefix_symbols(req, p),
-            prefix_fp: prefix_fp.expect("boundary is within the prompt"),
+        debug_assert_eq!(snaps.len(), boundaries.len(), "boundaries lie in the prompt");
+        let partial = boundaries.last().zip(snaps.last()).map(|(b, &fp)| PartialProbe {
+            prefix_tokens: b.tokens,
+            prefix_syms: b.syms,
+            prefix_fp: fp,
         });
         PrefixProbe { key, fingerprint: h, partial }
     }
@@ -912,6 +952,11 @@ mod tests {
         assert_eq!(partial_boundary(&r), Some(3));
         assert_eq!(prefix_symbols(&r, 3), 2, "[BOS][img-hash]");
         assert_eq!(request_key(&r).len(), 3);
+        // the factored boundary metadata carries position + key depth
+        assert_eq!(
+            reusable_boundaries(&r),
+            vec![PrefixBoundary { tokens: 3, syms: 2 }]
+        );
         // no vision → no partial boundary
         let t = req(vec![1, 5], vec![false, false], vec![0.0; 4]);
         assert_eq!(partial_boundary(&t), None);

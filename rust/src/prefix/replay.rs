@@ -1,0 +1,158 @@
+//! Host-side DAP statistic replay for partial warm starts.
+//!
+//! A partial warm start reconstructs the request's OWN Eq. 1 / Eq. 3
+//! column statistics from two sources: the cached prefix text rows'
+//! contributions (stored in the prefix entry's slot metadata) and the
+//! recomputed suffix rows' dap-layer head-mean probabilities, emitted
+//! per row by the decode graph (`DecodeOut::dap_row`) or per chunk by
+//! the extend graph (`ExtendOut::dap_rows`).
+//!
+//! The accumulator makes the one invariant both paths must share
+//! explicit: **rows are folded in prompt-position order, one addition
+//! per column per row** — so chunked accumulation is bit-identical to
+//! per-token accumulation (the order of float additions per column is
+//! the row order, regardless of how rows were grouped into device
+//! calls), and both match the cold prefill's row order. The runtime-free
+//! property test in tests/cache_props.rs pins this; the device-side row
+//! values themselves are ULP-equal across executables, which is the
+//! engine's documented numerical caveat.
+
+use crate::cache::SlotMeta;
+
+/// Accumulates per-row DAP contributions into column statistics, in
+/// strict prompt-position order. `filled` is the position of the next
+/// row to fold; each pushed row must cover columns `0..=filled`.
+#[derive(Debug, Clone)]
+pub struct DapAccumulator {
+    colsum: Vec<f32>,
+    colmax: Vec<f32>,
+    filled: usize,
+}
+
+impl DapAccumulator {
+    /// Start an accumulation over an `n`-column prompt whose first
+    /// `meta.len()` rows (the cached prefix) already contributed: the
+    /// entry's score fields carry the prefix text rows' Eq. 1 mass /
+    /// Eq. 3 max per column.
+    pub fn seeded(meta: &[SlotMeta], n: usize) -> Self {
+        let mut colsum = vec![0.0f32; n];
+        let mut colmax = vec![0.0f32; n];
+        for (j, sm) in meta.iter().enumerate().take(n) {
+            colsum[j] = sm.cum_score;
+            colmax[j] = sm.cum_peak;
+        }
+        DapAccumulator { colsum, colmax, filled: meta.len().min(n) }
+    }
+
+    /// Fresh accumulation with no cached prefix (tests).
+    pub fn new(n: usize) -> Self {
+        DapAccumulator { colsum: vec![0.0; n], colmax: vec![0.0; n], filled: 0 }
+    }
+
+    /// Position of the next row to fold.
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Fold one row's contributions. `parts`, concatenated, cover
+    /// columns `0..=filled` — the decode path passes
+    /// `[&dap_row[..len], &[self_mass]]`, the extend path
+    /// `[&cache_cols[..len0], &chunk_cols[..=i]]`; either way each
+    /// column receives exactly one addition and rows arrive in position
+    /// order, so the per-column float-addition sequence is identical
+    /// across chunkings.
+    pub fn push_row(&mut self, parts: &[&[f32]]) {
+        let mut j = 0usize;
+        for part in parts {
+            for &x in *part {
+                self.colsum[j] += x;
+                self.colmax[j] = self.colmax[j].max(x);
+                j += 1;
+            }
+        }
+        debug_assert_eq!(
+            j,
+            self.filled + 1,
+            "row must cover columns 0..=its own position"
+        );
+        self.filled += 1;
+    }
+
+    pub fn colsum(&self) -> &[f32] {
+        &self.colsum
+    }
+
+    pub fn colmax(&self) -> &[f32] {
+        &self.colmax
+    }
+
+    /// Final statistics (every row folded).
+    pub fn into_stats(self) -> (Vec<f32>, Vec<f32>) {
+        (self.colsum, self.colmax)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Modality;
+
+    fn meta_row(score: f32, peak: f32) -> SlotMeta {
+        SlotMeta {
+            position: 0,
+            modality: Modality::Text,
+            cum_score: score,
+            cum_peak: peak,
+            last_score: score,
+            marked: false,
+            age: 0,
+        }
+    }
+
+    #[test]
+    fn seeds_from_prefix_meta_and_accumulates() {
+        let meta = vec![meta_row(0.5, 0.4), meta_row(0.25, 0.25)];
+        let mut acc = DapAccumulator::seeded(&meta, 4);
+        assert_eq!(acc.filled(), 2);
+        // row at position 2: cache part covers columns 0..2, self 2
+        acc.push_row(&[&[0.1, 0.2], &[0.3]]);
+        acc.push_row(&[&[0.05, 0.05, 0.6], &[0.7]]);
+        let (sum, max) = acc.into_stats();
+        assert_eq!(sum, vec![0.5 + 0.1 + 0.05, 0.25 + 0.2 + 0.05, 0.3 + 0.6, 0.7]);
+        assert_eq!(max, vec![0.4, 0.25, 0.6, 0.7]);
+    }
+
+    #[test]
+    fn chunked_parts_equal_per_token_parts() {
+        // the same four rows, folded as 1+1+1+1 vs 2+2 part splits,
+        // produce bit-identical statistics — the invariant the engine's
+        // chunk loop relies on
+        let rows: Vec<Vec<f32>> = vec![
+            vec![0.125],
+            vec![0.25, 0.5],
+            vec![0.1, 0.2, 0.3],
+            vec![0.4, 0.3, 0.2, 0.1],
+        ];
+        let mut per_token = DapAccumulator::new(4);
+        for r in &rows {
+            let (cache, selfm) = r.split_at(r.len() - 1);
+            per_token.push_row(&[cache, selfm]);
+        }
+        let mut chunked = DapAccumulator::new(4);
+        // chunk of 4 starting at a 0-slot cache: cache part empty, intra
+        // part covers everything
+        for (i, r) in rows.iter().enumerate() {
+            chunked.push_row(&[&[], &r[..=i]]);
+        }
+        assert_eq!(per_token.colsum(), chunked.colsum());
+        assert_eq!(per_token.colmax(), chunked.colmax());
+    }
+
+    #[test]
+    #[should_panic(expected = "row must cover")]
+    #[cfg(debug_assertions)]
+    fn short_row_is_rejected() {
+        let mut acc = DapAccumulator::new(3);
+        acc.push_row(&[&[0.1, 0.2]]); // position 0 needs exactly 1 column
+    }
+}

@@ -20,7 +20,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::model::{Manifest, ModelMeta};
-pub use outputs::{AnalysisOut, DecodeOut, PrefillOut};
+pub use outputs::{AnalysisOut, DecodeOut, ExtendOut, PrefillOut};
 
 /// Wall-clock accounting for one executable call.
 #[derive(Debug, Clone, Copy, Default)]
@@ -45,6 +45,8 @@ pub struct Runtime {
     weights: Vec<PjRtBuffer>,
     prefill: RefCell<BTreeMap<usize, PjRtLoadedExecutable>>,
     decode: RefCell<BTreeMap<(usize, usize), PjRtLoadedExecutable>>,
+    /// chunked extend executables, keyed on (batch, chunk, capacity)
+    extend: RefCell<BTreeMap<(usize, usize, usize), PjRtLoadedExecutable>>,
     analysis: RefCell<BTreeMap<usize, PjRtLoadedExecutable>>,
 }
 
@@ -60,6 +62,7 @@ impl Runtime {
             weights,
             prefill: RefCell::new(BTreeMap::new()),
             decode: RefCell::new(BTreeMap::new()),
+            extend: RefCell::new(BTreeMap::new()),
             analysis: RefCell::new(BTreeMap::new()),
         })
     }
@@ -215,6 +218,91 @@ impl Runtime {
         let (parts, mut timing) = self.run(exe, args)?;
         timing.upload_s = upload_s;
         let out = DecodeOut::from_literals(parts, m, batch, capacity)?;
+        Ok((out, timing))
+    }
+
+    /// Run one chunked extend step at (batch, chunk, capacity): `chunk`
+    /// new token rows per lane against an existing cache — the batched
+    /// suffix recompute of partial warm starts.
+    ///
+    /// `tokens`/`positions` are `[B, S]` row-major (positions explicit,
+    /// so suffix rows sit at their exact prompt offsets); `k_cache`/
+    /// `v_cache` are `[B, L, C, H, Dh]` host slabs; `lengths[b]` live
+    /// cache slots; `n_new[b]` valid rows (≤ chunk — the rest is
+    /// padding the graph masks). Lane b's logits are taken at its row
+    /// `n_new[b]-1`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn extend(
+        &self,
+        batch: usize,
+        chunk: usize,
+        capacity: usize,
+        tokens: &[i32],
+        positions: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        lengths: &[i32],
+        n_new: &[i32],
+    ) -> Result<(ExtendOut, StepTiming)> {
+        let m = self.meta();
+        let slab = m.n_layers * capacity * m.n_heads * m.d_head;
+        if tokens.len() != batch * chunk || positions.len() != batch * chunk {
+            bail!("extend row args must have len {}", batch * chunk);
+        }
+        if lengths.len() != batch || n_new.len() != batch {
+            bail!("extend lane args must have len {}", batch);
+        }
+        if k_cache.len() != batch * slab || v_cache.len() != batch * slab {
+            bail!(
+                "extend cache len {} != {} (B{} C{})",
+                k_cache.len(),
+                batch * slab,
+                batch,
+                capacity
+            );
+        }
+        for (b, (&l, &nn)) in lengths.iter().zip(n_new.iter()).enumerate() {
+            if l as usize > capacity {
+                bail!("lane {}: length {} exceeds capacity {}", b, l, capacity);
+            }
+            if nn as usize > chunk {
+                bail!("lane {}: n_new {} exceeds chunk {}", b, nn, chunk);
+            }
+        }
+        let key = (batch, chunk, capacity);
+        if !self.extend.borrow().contains_key(&key) {
+            if !self.manifest.shapes.extend_batches.contains(&batch)
+                || !self.manifest.shapes.extend_chunks.contains(&chunk)
+                || !self.manifest.shapes.decode_capacities.contains(&capacity)
+            {
+                bail!(
+                    "no extend artifact for batch {} chunk {} capacity {} \
+                     (run `make artifacts`)",
+                    batch,
+                    chunk,
+                    capacity
+                );
+            }
+            let exe =
+                self.compile(&format!("extend_b{}_s{}_c{}", batch, chunk, capacity))?;
+            self.extend.borrow_mut().insert(key, exe);
+        }
+        let dims = [batch, m.n_layers, capacity, m.n_heads, m.d_head];
+        let t0 = Instant::now();
+        let args = vec![
+            self.buf_i32(tokens, &[batch, chunk])?,
+            self.buf_i32(positions, &[batch, chunk])?,
+            self.buf_f32(k_cache, &dims)?,
+            self.buf_f32(v_cache, &dims)?,
+            self.buf_i32(lengths, &[batch])?,
+            self.buf_i32(n_new, &[batch])?,
+        ];
+        let upload_s = t0.elapsed().as_secs_f64();
+        let cache = self.extend.borrow();
+        let exe = cache.get(&key).unwrap();
+        let (parts, mut timing) = self.run(exe, args)?;
+        timing.upload_s = upload_s;
+        let out = ExtendOut::from_literals(parts, m, batch, chunk, capacity)?;
         Ok((out, timing))
     }
 

@@ -159,6 +159,82 @@ impl DecodeOut {
     }
 }
 
+/// One chunked extend step: S new token rows against a C-slot cache —
+/// the batched suffix recompute of partial warm starts.
+#[derive(Debug, Clone)]
+pub struct ExtendOut {
+    /// `[B, vocab]` — logits at each lane's LAST valid row (`n_new-1`)
+    pub logits: Vec<f32>,
+    /// `[B, L, S, H, Dh]` — K/V of the chunk's rows (rows ≥ n_new are
+    /// padding garbage; never read them)
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+    /// `[B, S, C+S]` — the dap layer's head-mean probability row per
+    /// chunk row: columns `0..C` over the cache slots, `C..C+S` over the
+    /// chunk's own rows (`C+i` is row i's own column). Each valid row,
+    /// taken in row order, is exactly the Eq. 1 / Eq. 3 contribution the
+    /// one-token decode loop would have produced for that position, so
+    /// host accumulation is order-identical (prefix/replay.rs).
+    pub dap_rows: Vec<f32>,
+    pub batch: usize,
+    pub chunk: usize,
+    pub capacity: usize,
+}
+
+impl ExtendOut {
+    pub fn from_literals(
+        parts: Vec<Literal>,
+        m: &ModelMeta,
+        batch: usize,
+        chunk: usize,
+        capacity: usize,
+    ) -> Result<Self> {
+        if parts.len() != 4 {
+            bail!("extend returned {} outputs, expected 4 (rebuild artifacts)", parts.len());
+        }
+        let row = m.n_heads * m.d_head;
+        Ok(ExtendOut {
+            logits: take_f32(&parts[0], batch * m.vocab, "extend.logits")?,
+            k_new: take_f32(&parts[1], batch * m.n_layers * chunk * row, "extend.k_new")?,
+            v_new: take_f32(&parts[2], batch * m.n_layers * chunk * row, "extend.v_new")?,
+            dap_rows: take_f32(
+                &parts[3],
+                batch * chunk * (capacity + chunk),
+                "extend.dap_rows",
+            )?,
+            batch,
+            chunk,
+            capacity,
+        })
+    }
+
+    pub fn lane_logits<'a>(&'a self, m: &ModelMeta, lane: usize) -> &'a [f32] {
+        &self.logits[lane * m.vocab..(lane + 1) * m.vocab]
+    }
+
+    /// `[L, H, Dh]` K (or V) of one chunk row in one lane — the shape
+    /// `KvSlab::append` takes. `src` must be `self.k_new` or `self.v_new`.
+    pub fn row_kv(&self, src: &[f32], m: &ModelMeta, lane: usize, row: usize) -> Vec<f32> {
+        let r = m.n_heads * m.d_head;
+        let mut out = Vec::with_capacity(m.n_layers * r);
+        for l in 0..m.n_layers {
+            let base = ((lane * m.n_layers + l) * self.chunk + row) * r;
+            out.extend_from_slice(&src[base..base + r]);
+        }
+        out
+    }
+
+    /// One chunk row's dap contributions, split at the cache/chunk
+    /// boundary: `(cache_cols[C], chunk_cols[S])`. `chunk_cols[i]` is
+    /// the row's own column when `i == row`.
+    pub fn row_dap<'a>(&'a self, lane: usize, row: usize) -> (&'a [f32], &'a [f32]) {
+        let w = self.capacity + self.chunk;
+        let base = (lane * self.chunk + row) * w;
+        let full = &self.dap_rows[base..base + w];
+        full.split_at(self.capacity)
+    }
+}
+
 /// Instrumented prefill (observation harnesses: Figs. 2/3/5).
 #[derive(Debug, Clone)]
 pub struct AnalysisOut {

@@ -141,6 +141,26 @@ impl AdmissionController {
         suffix_pages + fork_allowance
     }
 
+    /// Pages one suffix-recompute chunk of `chunk_tokens` rows may claim
+    /// from the pool when it lands: the appended slots' new pages (at
+    /// most ⌈chunk/page_slots⌉ — appends are contiguous) plus the
+    /// partial-tail fork the chunk's first append can trigger. A partial
+    /// warm start's reservation is charged whole at admission
+    /// (`partial_candidate_pages`) but *claimed* in these increments as
+    /// the chunk loop runs — the same claim-as-you-go shape as a
+    /// chunked-prefill reservation, so cache pins convert to free pages
+    /// only when the chunk that needs them arrives.
+    pub fn extend_chunk_claim(&self, chunk_tokens: usize) -> usize {
+        self.pages_for(chunk_tokens.max(1)) + 1
+    }
+
+    /// Device calls a chunked suffix recompute issues: ⌈suffix/chunk⌉.
+    /// The acceptance bound `RequestStats::extend_calls` is tested
+    /// against (chunk 1 degenerates to the one-call-per-token loop).
+    pub fn extend_chunk_calls(suffix_tokens: usize, chunk: usize) -> usize {
+        suffix_tokens.div_ceil(chunk.max(1))
+    }
+
     /// Could this request ever be admitted on an idle system? Submissions
     /// failing this are rejected immediately (they would wait forever).
     pub fn fits_alone(&self, req: &Request) -> bool {
@@ -447,6 +467,30 @@ mod tests {
         };
         // nominal 4 (15-slot clamp) − 2 shared + 1 tail allowance = 3
         assert_eq!(c.lane_bound_pages(&ar), 3);
+    }
+
+    #[test]
+    fn extend_chunk_claims_and_call_counts() {
+        let c = ctl(100); // 4-slot pages
+        // a chunk's claim: its own pages + the possible tail fork
+        assert_eq!(c.extend_chunk_claim(1), 2);
+        assert_eq!(c.extend_chunk_claim(4), 2);
+        assert_eq!(c.extend_chunk_claim(8), 3);
+        assert_eq!(c.extend_chunk_claim(0), 2, "clamped to one token");
+        // the chunk-wise claims cover the suffix's total append bound
+        let suffix = 22usize;
+        let chunk = 8usize;
+        let calls = AdmissionController::extend_chunk_calls(suffix, chunk);
+        assert_eq!(calls, 3);
+        let claimed: usize = (0..calls)
+            .map(|i| c.extend_chunk_claim(chunk.min(suffix - i * chunk)))
+            .sum();
+        assert!(claimed >= c.pages_for(suffix) + 1);
+        // chunk 1 degenerates to one call per token (the decode loop)
+        assert_eq!(AdmissionController::extend_chunk_calls(suffix, 1), suffix);
+        assert_eq!(AdmissionController::extend_chunk_calls(suffix, 0), suffix);
+        assert_eq!(AdmissionController::extend_chunk_calls(0, 8), 0);
+        assert_eq!(AdmissionController::extend_chunk_calls(suffix, 1000), 1);
     }
 
     #[test]

@@ -113,6 +113,10 @@ pub struct MetricsRegistry {
     pub prefix_lru_evictions: u64,
     /// prompt tokens never recomputed thanks to warm hits
     pub prefill_tokens_skipped: u64,
+    /// suffix-recompute device calls issued by partial warm starts:
+    /// ≈ Σ ⌈suffix/extend-chunk⌉ with the chunked extend executables,
+    /// Σ suffix at --extend-chunk 1 (the one-token decode loop)
+    pub extend_calls: u64,
     lanes_hist: Vec<u64>,
     ttft_ms: Ring,
     e2e_ms: Ring,
@@ -155,6 +159,7 @@ impl MetricsRegistry {
             pages_shared: 0,
             prefix_lru_evictions: 0,
             prefill_tokens_skipped: 0,
+            extend_calls: 0,
             lanes_hist: vec![0; batch + 1],
             ttft_ms: Ring::default(),
             e2e_ms: Ring::default(),
@@ -180,13 +185,15 @@ impl MetricsRegistry {
     /// Fold one tick's prefix-cache snapshot into the gauges.
     /// `shared_charge` is the distinct charged-once page count
     /// (`Engine::shared_charge_pages`); `fork_deferrals` and
-    /// `tail_drops` the engine's CoW back-pressure counters.
+    /// `tail_drops` the engine's CoW back-pressure counters;
+    /// `extend_calls` its suffix-recompute device-call counter.
     pub fn record_prefix(
         &mut self,
         ps: PrefixStats,
         shared_charge: usize,
         fork_deferrals: u64,
         tail_drops: u64,
+        extend_calls: u64,
     ) {
         self.prefix_hits = ps.hits;
         self.prefix_partial_hits = ps.partial_hits;
@@ -197,6 +204,7 @@ impl MetricsRegistry {
         self.pages_shared = shared_charge;
         self.cow_fork_deferrals = fork_deferrals;
         self.emergency_tail_drops = tail_drops;
+        self.extend_calls = extend_calls;
     }
 
     /// Fraction of cache-consulting admissions served warm (exact or
@@ -289,6 +297,7 @@ impl MetricsRegistry {
             ("pages_shared", num(self.pages_shared as f64)),
             ("prefix_lru_evictions", num(self.prefix_lru_evictions as f64)),
             ("prefill_tokens_skipped", num(self.prefill_tokens_skipped as f64)),
+            ("extend_calls", num(self.extend_calls as f64)),
             ("ttft_p50_ms", num(self.ttft_ms.p(0.5))),
             ("ttft_p95_ms", num(self.ttft_ms.p(0.95))),
             ("e2e_p50_ms", num(self.e2e_ms.p(0.5))),
@@ -356,7 +365,7 @@ mod tests {
             insertions: 3,
             prefill_tokens_skipped: 108,
         };
-        m.record_prefix(ps, 5, 4, 1);
+        m.record_prefix(ps, 5, 4, 1, 9);
         assert_eq!(m.prefix_hits, 6);
         assert_eq!(m.prefix_partial_hits, 2);
         assert_eq!(m.prefix_misses, 2);
@@ -365,6 +374,7 @@ mod tests {
         assert_eq!(m.prefill_tokens_skipped, 108);
         assert_eq!(m.cow_fork_deferrals, 4);
         assert_eq!(m.emergency_tail_drops, 1);
+        assert_eq!(m.extend_calls, 9);
         // (6 exact + 2 partial) of 10 consulting admissions
         assert!((m.prefix_hit_rate() - 0.8).abs() < 1e-9);
         let j = m.snapshot(0, 0);
@@ -387,6 +397,7 @@ mod tests {
             parsed.get("prefill_tokens_skipped").and_then(|v| v.as_usize()),
             Some(108)
         );
+        assert_eq!(parsed.get("extend_calls").and_then(|v| v.as_usize()), Some(9));
         assert_eq!(
             parsed.get("refcount_errors").and_then(|v| v.as_usize()),
             Some(0)

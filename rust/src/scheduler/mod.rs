@@ -342,7 +342,15 @@ impl<T> Scheduler<T> {
             };
             if !admitted {
                 if self.pending.is_none() {
-                    // doesn't fit in one piece: start reserving for it
+                    // doesn't fit in one piece: start reserving for it.
+                    // The target is the worst case whether or not a
+                    // partial warm start ends up serving the candidate —
+                    // `partial_candidate_pages` (suffix pages + fork
+                    // allowance) sums to exactly this, so chunked prefill
+                    // and chunked extension share one reservation path:
+                    // pages accumulate here chunk-by-chunk, and the
+                    // engine's extend loop later CLAIMS them
+                    // chunk-by-chunk (`extend_chunk_claim`)
                     let job = self.queue.remove(cand);
                     let target = self.admission.worst_case_pages(&job.req);
                     let live = self.live_bound_pages();
@@ -431,6 +439,7 @@ impl<T> Scheduler<T> {
             engine.shared_charge_pages(&self.lanes),
             engine.fork_deferrals(),
             engine.emergency_tail_drops(),
+            engine.extend_calls(),
         );
         for (idx, ar) in done {
             let lt = self.tags[idx].take().expect("finished lane carries a tag");

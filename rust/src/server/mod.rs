@@ -222,12 +222,29 @@ fn deliver(outcome: SchedOutcome<JobTag>) {
 }
 
 /// Run the server until `shutdown` (a line "shutdown" on any connection).
-/// Blocks the calling thread with the engine/scheduler loop.
-pub fn serve(mut engine: Engine, cfg: ServerConfig, grammar: StoryGrammar) -> Result<()> {
+/// Blocks the calling thread with the engine/scheduler loop. Binds
+/// `cfg.addr` (port 0 picks a free port) and delegates to [`serve_on`];
+/// callers that need the chosen port bind their own listener and call
+/// `serve_on` directly (`harness::spawn_server` does — a fixed test
+/// port is a collision flake waiting for parallel CI binaries).
+pub fn serve(engine: Engine, cfg: ServerConfig, grammar: StoryGrammar) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
+    serve_on(engine, listener, cfg, grammar)
+}
+
+/// [`serve`] on an already-bound listener (the engine is constructed by
+/// the caller's thread because the PJRT client is not Send, but a
+/// listener is — so tests bind port 0, read the port back, and hand the
+/// listener in).
+pub fn serve_on(
+    mut engine: Engine,
+    listener: TcpListener,
+    cfg: ServerConfig,
+    grammar: StoryGrammar,
+) -> Result<()> {
     let local_addr = listener.local_addr()?;
-    eprintln!("hae-serve listening on {}", cfg.addr);
+    eprintln!("hae-serve listening on {}", local_addr);
     // mailbox between connection threads and the engine thread; the
     // scheduler's admission queue is the real (rejecting) queue, so this
     // only needs enough slack that ingest drains stay cheap

@@ -4,6 +4,7 @@
 use hae_serve::cache::policy::{DecodeCtx, EvictionPolicy, PrefillCtx};
 use hae_serve::cache::{KvSlab, Modality, PagePool, PolicyKind, SlotMeta};
 use hae_serve::model::ModelMeta;
+use hae_serve::prefix::DapAccumulator;
 use hae_serve::util::prop::{gen_modality, run_prop, PropConfig};
 use hae_serve::util::rng::Rng;
 
@@ -626,6 +627,77 @@ fn prop_partial_replay_reconstructs_cold_decision() {
                 spec
             );
             assert!(dr.kv_override.is_none(), "{}: partial_safe rewrote KV", spec);
+        }
+    });
+}
+
+/// Chunked DAP accumulation is ORDER-IDENTICAL to per-token accumulation:
+/// grouping suffix rows into extend chunks of any size changes only how
+/// rows arrive at the accumulator (a chunk row's contributions split at
+/// the chunk-start cache boundary instead of at its own column), never
+/// the per-column sequence of float additions — so the reconstructed
+/// Eq. 1 / Eq. 3 statistics are bit-for-bit the same for every
+/// `--extend-chunk`, which is what lets the chunked warm start inherit
+/// `prop_partial_replay_reconstructs_cold_decision`'s guarantee
+/// unchanged.
+#[test]
+fn prop_chunked_dap_accumulation_is_order_identical() {
+    run_prop("chunked-dap", PropConfig::default(), |rng, _| {
+        let p = 1 + rng.below(8); // cached prefix rows (accumulator seed)
+        let n_suffix = 1 + rng.below(14);
+        let n = p + n_suffix;
+        // seed metadata: the prefix entry's cached per-column stats
+        let seed: Vec<SlotMeta> = (0..p)
+            .map(|i| SlotMeta {
+                position: i as i32,
+                modality: Modality::Vision,
+                cum_score: rng.f32(),
+                cum_peak: rng.f32(),
+                last_score: 0.0,
+                marked: false,
+                age: 0,
+            })
+            .collect();
+        // suffix row r at position p+idx covers columns 0..=p+idx
+        let rows: Vec<Vec<f32>> = (p..n)
+            .map(|i| (0..=i).map(|_| rng.f32()).collect())
+            .collect();
+
+        // per-token: each row splits cache-columns | own column — exactly
+        // the decode-loop path (dap_row[..len] + self mass)
+        let mut per_tok = DapAccumulator::seeded(&seed, n);
+        for (idx, r) in rows.iter().enumerate() {
+            let len = p + idx;
+            per_tok.push_row(&[&r[..len], &r[len..]]);
+        }
+
+        // chunked: rows grouped into chunks; a chunk row splits at the
+        // CHUNK-START cache length instead (cache part | intra part) —
+        // exactly the extend path (cache_cols[..len0] + chunk_cols[..=i])
+        for chunk in [1usize, 2, 3, 5, 8, n_suffix] {
+            let mut acc = DapAccumulator::seeded(&seed, n);
+            let mut t = 0usize;
+            while t < n_suffix {
+                let step = chunk.min(n_suffix - t);
+                let len0 = p + t;
+                for i in 0..step {
+                    let r = &rows[t + i];
+                    acc.push_row(&[&r[..len0], &r[len0..len0 + i + 1]]);
+                }
+                t += step;
+            }
+            assert_eq!(
+                per_tok.colsum(),
+                acc.colsum(),
+                "chunk {}: column sums must be bit-exact",
+                chunk
+            );
+            assert_eq!(
+                per_tok.colmax(),
+                acc.colmax(),
+                "chunk {}: column maxes must be bit-exact",
+                chunk
+            );
         }
     });
 }

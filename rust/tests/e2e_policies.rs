@@ -15,7 +15,7 @@ fn engine(policy: &str) -> Option<Engine> {
     let rt = match Runtime::load(&artifact_dir()) {
         Ok(rt) => rt,
         Err(_) => {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            hae_serve::harness::skip_or_fail("artifacts not built (run `make artifacts`)");
             return None;
         }
     };

@@ -6,18 +6,21 @@
 use hae_serve::cache::{PolicyKind, DEFAULT_PAGE_SLOTS};
 use hae_serve::coordinator::{Engine, EngineConfig};
 use hae_serve::harness::{
-    artifact_dir, load_grammar, spawn_server, wait_listening, widest_batch,
+    artifact_dir, load_grammar, skip_or_fail, spawn_server, wait_listening,
+    widest_batch,
 };
 use hae_serve::model::Manifest;
 use hae_serve::runtime::Runtime;
-use hae_serve::scheduler::{SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig};
+use hae_serve::scheduler::{
+    AdmissionController, SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig,
+};
 use hae_serve::server::client_request;
 use hae_serve::util::json::Json;
 use hae_serve::workload::{Request, RequestBuilder};
 
 fn artifacts_present() -> bool {
     if Runtime::load(&artifact_dir()).is_err() {
-        eprintln!("skipping: artifacts not built");
+        skip_or_fail("artifacts not built");
         return false;
     }
     true
@@ -32,7 +35,6 @@ fn concurrent_clients_share_lanes_under_budget() {
     if !artifacts_present() {
         return;
     }
-    const ADDR: &str = "127.0.0.1:8495";
     let manifest = Manifest::load(&artifact_dir()).unwrap();
     let batch = widest_batch();
     // explicit budget = the physical ceiling: tight enough that the
@@ -40,21 +42,21 @@ fn concurrent_clients_share_lanes_under_budget() {
     let budget = batch
         * (manifest.shapes.cache_capacity - 1)
         * manifest.model.kv_bytes_per_token();
-    let server = spawn_server(
-        ADDR.into(),
+    let (server, addr) = spawn_server(
         PolicyKind::hae_default(),
         batch,
         Some(budget),
         SchedPolicy::Priority,
         true,
     );
-    assert!(wait_listening(ADDR), "server came up");
+    assert!(wait_listening(&addr), "server came up");
 
     // 6 concurrent clients × 2 requests, every id unique
     let n_clients: i64 = 6;
     let per_client: i64 = 2;
     let mut handles = Vec::new();
     for c in 0..n_clients {
+        let addr = addr.clone();
         handles.push(std::thread::spawn(move || {
             for i in 0..per_client {
                 let id = c * 100 + i;
@@ -63,7 +65,7 @@ fn concurrent_clients_share_lanes_under_budget() {
                     r#"{{"id": {}, "kind": "{}", "max_new": 24}}"#,
                     id, kind
                 );
-                let resp = client_request(ADDR, &payload).unwrap();
+                let resp = client_request(&addr, &payload).unwrap();
                 let j = Json::parse(&resp).unwrap();
                 // (a) the response carries this request's id
                 assert_eq!(
@@ -83,8 +85,9 @@ fn concurrent_clients_share_lanes_under_budget() {
         h.join().unwrap();
     }
 
-    let stats = Json::parse(&client_request(ADDR, r#"{"kind": "stats"}"#).unwrap()).unwrap();
-    let _ = client_request(ADDR, "shutdown");
+    let stats =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let _ = client_request(&addr, "shutdown");
     let _ = server.join();
 
     assert_eq!(
@@ -127,7 +130,7 @@ fn chunked_prefill_admits_oversized_prompt_incrementally() {
     let manifest = Manifest::load(&artifact_dir()).unwrap();
     let batch = widest_batch();
     if batch < 2 {
-        eprintln!("skipping: needs a compiled decode batch ≥ 2");
+        skip_or_fail("needs a compiled decode batch ≥ 2");
         return;
     }
     let meta = manifest.model.clone();
@@ -360,7 +363,7 @@ fn fork_storm_defers_instead_of_panicking() {
     let manifest = Manifest::load(&artifact_dir()).unwrap();
     let batch = widest_batch();
     if batch < 2 {
-        eprintln!("skipping: needs a compiled decode batch ≥ 2");
+        skip_or_fail("needs a compiled decode batch ≥ 2");
         return;
     }
     let meta = manifest.model.clone();
@@ -599,6 +602,166 @@ fn partial_warm_starts_serve_multi_turn_dialog() {
         sched.metrics.prefix_partial_hits, ps.partial_hits,
         "partial hits surfaced in the stats snapshot"
     );
+    assert_eq!(
+        sched.metrics.extend_calls,
+        engine.extend_calls(),
+        "suffix-recompute device calls surfaced in the stats snapshot"
+    );
+    assert!(
+        engine.extend_calls() > 0,
+        "partial hits recomputed their suffixes through extend calls"
+    );
+}
+
+/// Chunked-extend equivalence at every `--extend-chunk`: partial warm
+/// starts must reproduce the request's own cold results — generated
+/// tokens byte-identical AND the replayed retention decision's
+/// retained-index set equal — at chunk sizes 1 (the one-token decode
+/// loop, reproduced exactly: one device call per suffix token), 4
+/// (padded chunks through the extend executables) and full (one call
+/// per suffix where a bucket fits), while issuing at most
+/// ⌈suffix/chunk⌉ suffix-recompute device calls (`extend_calls`).
+#[test]
+fn chunked_extend_matches_cold_at_every_chunk_size() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&artifact_dir()).unwrap();
+    let meta = manifest.model.clone();
+    let grammar = load_grammar(&artifact_dir());
+    let prefix_len = 1 + meta.n_patches;
+    let n_turns = 6usize;
+    let turns =
+        RequestBuilder::new(&meta, &grammar, 5).shared_image_dialog(29, n_turns);
+
+    /// One dialog pass: per turn, the retained-index set and first token
+    /// observed right after admission, the suffix-recompute call count,
+    /// whether the turn was a *partial* warm start, then the full
+    /// generation.
+    fn run_dialog(
+        engine: &mut Engine,
+        turns: &[Request],
+        prefix_len: usize,
+    ) -> Vec<(Vec<i32>, i32, usize, bool, Vec<i32>)> {
+        let mut out = Vec::new();
+        for r in turns {
+            let mut ar = engine.prefill(r.clone()).unwrap();
+            let retained: Vec<i32> = ar.slab.meta().iter().map(|m| m.position).collect();
+            let first = ar.pending_token;
+            let calls = ar.stats.extend_calls;
+            let partial =
+                ar.stats.prefix_hit && ar.stats.prefill_tokens_skipped == prefix_len;
+            while !ar.done {
+                let mut lanes = [&mut ar];
+                engine.decode_step(&mut lanes).unwrap();
+            }
+            ar.slab.release_pages();
+            out.push((retained, first, calls, partial, ar.generated.clone()));
+        }
+        out
+    }
+
+    // cold oracle (prefix cache off — chunking never runs)
+    let mut cold = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            prefix_cache: false,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    cold.rt.warmup(&[1]).unwrap();
+    let cold_runs = run_dialog(&mut cold, &turns, prefix_len);
+    for (_, _, calls, partial, _) in &cold_runs {
+        assert_eq!(*calls, 0, "cold runs never extend");
+        assert!(!partial);
+    }
+
+    for &chunk in &[1usize, 4, usize::MAX] {
+        let mut warm = Engine::new(
+            Runtime::load(&artifact_dir()).unwrap(),
+            EngineConfig {
+                policy: PolicyKind::hae_default(),
+                extend_chunk: chunk,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        warm.rt.warmup(&[1]).unwrap();
+        let eff = warm.effective_extend_chunk();
+        if chunk == 1 {
+            assert_eq!(eff, 1, "chunk 1 is never widened");
+        } else if chunk == usize::MAX {
+            assert_eq!(
+                eff,
+                manifest.max_extend_chunk(1).max(1),
+                "'full' clamps to the largest compiled bucket"
+            );
+        }
+        let warm_runs = run_dialog(&mut warm, &turns, prefix_len);
+        let mut partial_turns = 0usize;
+        for (t, (w, c)) in warm_runs.iter().zip(&cold_runs).enumerate() {
+            assert_eq!(
+                w.4, c.4,
+                "chunk {}: turn {} output diverged from cold",
+                eff, t
+            );
+            assert_eq!(
+                w.0, c.0,
+                "chunk {}: turn {} retained-index set differs from cold",
+                eff, t
+            );
+            assert_eq!(w.1, c.1, "chunk {}: turn {} first token differs", eff, t);
+            if w.3 {
+                partial_turns += 1;
+                let suffix = turns[t].prompt_len() - prefix_len;
+                let bound = AdmissionController::extend_chunk_calls(suffix, eff);
+                assert!(
+                    w.2 <= bound,
+                    "chunk {}: turn {} issued {} calls > ⌈{}/{}⌉ = {}",
+                    eff,
+                    t,
+                    w.2,
+                    suffix,
+                    eff,
+                    bound
+                );
+                if eff == 1 {
+                    // the decode-loop path, reproduced exactly: one
+                    // device call per suffix token
+                    assert_eq!(w.2, suffix, "turn {}: decode loop calls", t);
+                } else if suffix >= 2 {
+                    assert!(
+                        w.2 < suffix,
+                        "chunk {}: turn {} saved no device calls ({} for {} tokens)",
+                        eff,
+                        t,
+                        w.2,
+                        suffix
+                    );
+                }
+            } else {
+                assert_eq!(w.2, 0, "non-partial admissions never extend");
+            }
+        }
+        assert!(
+            partial_turns >= n_turns - 1,
+            "chunk {}: only {} of {} turns warm-started partially",
+            eff,
+            partial_turns,
+            n_turns - 1
+        );
+        let ps = warm.prefix_stats();
+        assert_eq!(ps.hits, 0, "distinct prompts: no exact hits");
+        assert_eq!(ps.partial_hits as usize, partial_turns);
+        assert_eq!(
+            warm.extend_calls(),
+            warm_runs.iter().map(|r| r.2 as u64).sum::<u64>(),
+            "engine total matches the per-request counts"
+        );
+        assert_eq!(warm.pool_stats().refcount_errors, 0);
+    }
 }
 
 #[test]
@@ -606,21 +769,19 @@ fn tiny_budget_rejects_gracefully() {
     if !artifacts_present() {
         return;
     }
-    const ADDR: &str = "127.0.0.1:8496";
     // 1 KiB cannot hold a single token's KV → every request is rejected
-    let server = spawn_server(
-        ADDR.into(),
+    let (server, addr) = spawn_server(
         PolicyKind::hae_default(),
         1,
         Some(1024),
         SchedPolicy::Fifo,
         true,
     );
-    assert!(wait_listening(ADDR), "server came up");
+    assert!(wait_listening(&addr), "server came up");
 
     for id in 0..4 {
         let payload = format!(r#"{{"id": {}, "kind": "qa"}}"#, id);
-        let resp = client_request(ADDR, &payload).unwrap();
+        let resp = client_request(&addr, &payload).unwrap();
         let j = Json::parse(&resp).unwrap();
         let err = j.get("error").and_then(|v| v.as_str()).unwrap_or("");
         assert!(err.contains("kv budget"), "expected budget rejection: {}", resp);
@@ -629,10 +790,11 @@ fn tiny_budget_rejects_gracefully() {
     }
 
     // the server stays alive and accounts the rejections
-    let stats = Json::parse(&client_request(ADDR, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let stats =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats"}"#).unwrap()).unwrap();
     assert_eq!(get_num(&stats, "rejected_kv_budget") as usize, 4);
     assert_eq!(get_num(&stats, "completed") as usize, 0);
 
-    let _ = client_request(ADDR, "shutdown");
+    let _ = client_request(&addr, "shutdown");
     let _ = server.join();
 }

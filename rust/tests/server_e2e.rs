@@ -2,7 +2,7 @@
 //! Skipped when artifacts are absent.
 
 use hae_serve::cache::PolicyKind;
-use hae_serve::harness::{artifact_dir, spawn_server, wait_listening};
+use hae_serve::harness::{artifact_dir, skip_or_fail, spawn_server, wait_listening};
 use hae_serve::runtime::Runtime;
 use hae_serve::scheduler::SchedPolicy;
 use hae_serve::server::client_request;
@@ -11,43 +11,41 @@ use hae_serve::util::json::Json;
 #[test]
 fn server_round_trip_and_shutdown() {
     if Runtime::load(&artifact_dir()).is_err() {
-        eprintln!("skipping: artifacts not built");
+        skip_or_fail("artifacts not built");
         return;
     }
-    const ADDR: &str = "127.0.0.1:8493";
-    let handle = spawn_server(
-        ADDR.into(),
+    let (handle, addr) = spawn_server(
         PolicyKind::hae_default(),
         1,
         None,
         SchedPolicy::Fifo,
         true,
     );
-    assert!(wait_listening(ADDR), "server came up");
+    assert!(wait_listening(&addr), "server came up");
 
     // valid request
-    let resp = client_request(ADDR, r#"{"id": 3, "kind": "qa"}"#).unwrap();
+    let resp = client_request(&addr, r#"{"id": 3, "kind": "qa"}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(3));
     assert!(j.get("tokens").and_then(|v| v.as_arr()).map_or(0, |a| a.len()) > 0);
     assert!(j.get("error").is_none(), "{}", resp);
 
     // max_new honoured
-    let resp = client_request(ADDR, r#"{"id": 4, "kind": "story", "max_new": 5}"#).unwrap();
+    let resp = client_request(&addr, r#"{"id": 4, "kind": "story", "max_new": 5}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert!(j.get("tokens").unwrap().as_arr().unwrap().len() <= 5);
 
     // malformed requests produce error objects (echoing the id when the
     // line parsed), not crashes
-    let resp = client_request(ADDR, r#"{"id": 5, "kind": "nope"}"#).unwrap();
+    let resp = client_request(&addr, r#"{"id": 5, "kind": "nope"}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert!(j.get("error").is_some());
     assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(5));
-    let resp = client_request(ADDR, "garbage").unwrap();
+    let resp = client_request(&addr, "garbage").unwrap();
     assert!(Json::parse(&resp).unwrap().get("error").is_some());
 
     // clean shutdown
-    let resp = client_request(ADDR, "shutdown").unwrap();
+    let resp = client_request(&addr, "shutdown").unwrap();
     assert!(resp.contains("shutdown"));
     handle.join().unwrap();
 }
