@@ -12,13 +12,19 @@
 #                        artifact-gated e2e suites run for real;
 #                        HAE_REQUIRE_ARTIFACTS=1 (CI) turns any
 #                        would-be skip into a failure.
-#   make bench-smoke   — the assertion-bearing prefix-cache bench
-#                        (byte-identity, retained-set equality, extend
-#                        call bounds). HAE_BENCH_N scales samples.
+#   make bench-smoke   — the four assertion-bearing perf benches
+#                        (prefix cache byte-identity, page-pool ops,
+#                        decode primitives, serve-batch + tracing
+#                        overhead guardrail). HAE_BENCH_N scales
+#                        samples. Each bench leaves a machine-readable
+#                        BENCH_<name>.json report (HAE_BENCH_DIR
+#                        overrides the destination).
+#   make bench-verify  — schema-check the BENCH_*.json reports and
+#                        require at least HAE_BENCH_MIN (default 4).
 
 PYTHON ?= python3
 
-.PHONY: artifacts check-extend test bench-smoke
+.PHONY: artifacts check-extend test bench-smoke bench-verify
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
@@ -33,3 +39,9 @@ test:
 
 bench-smoke:
 	cargo bench --bench perf_prefix_cache
+	cargo bench --bench perf_page_pool
+	cargo bench --bench perf_decode
+	cargo bench --bench perf_serve_batch
+
+bench-verify:
+	cargo run --release --bin bench_verify

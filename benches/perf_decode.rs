@@ -9,11 +9,38 @@ use std::time::Instant;
 
 use hae_serve::cache::PolicyKind;
 use hae_serve::harness::*;
+use hae_serve::obs::BenchReport;
 use hae_serve::workload::RequestBuilder;
 
 fn main() -> anyhow::Result<()> {
     let steps = bench_n(200);
-    let rt = load_runtime()?;
+    let mut report = BenchReport::new("decode");
+    report.config("steps", steps);
+    let rt = match load_runtime() {
+        Ok(rt) => rt,
+        Err(_) => {
+            // no artifacts: fall back to the runtime-free host-side slice
+            // of the decode step (lane sync), so this bench still leaves
+            // a schema-valid report instead of exiting empty-handed
+            skip_or_fail(
+                "artifacts not built (run `make artifacts`) — \
+                 PJRT decode breakdown; reporting host-side lane sync only",
+            );
+            report.config("mode", "host-only");
+            let s = measure_lane_sync(512, steps.max(50));
+            report.metric("lane_sync_full_us_per_step", s.full_us_per_step, "us");
+            report.metric("lane_sync_incr_us_per_step", s.incr_us_per_step, "us");
+            report.metric(
+                "lane_sync_incr_pages_per_step",
+                s.incr_pages_per_step,
+                "pages",
+            );
+            let path = report.write().expect("write BENCH_decode.json");
+            println!("bench report: {}", path.display());
+            return Ok(());
+        }
+    };
+    report.config("mode", "pjrt");
     let meta = rt.meta().clone();
     let caps = rt.manifest.shapes.decode_capacities.clone();
     let batches = rt.manifest.shapes.decode_batches.clone();
@@ -79,6 +106,16 @@ fn main() -> anyhow::Result<()> {
             }
             let wall = t_all.elapsed().as_secs_f64();
             let n = done_steps as f64;
+            report.metric(
+                &format!("step_us_b{}_c{}", b, c),
+                wall / n * 1e6,
+                "us",
+            );
+            report.metric(
+                &format!("tok_s_b{}_c{}", b, c),
+                (b as f64) * n / wall,
+                "tok/s",
+            );
             table.row(vec![
                 format!("{}", b),
                 format!("{}", c),
@@ -93,5 +130,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.print();
+    let path = report.write().expect("write BENCH_decode.json");
+    println!("\nbench report: {}", path.display());
     Ok(())
 }

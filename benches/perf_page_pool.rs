@@ -11,9 +11,10 @@ use std::time::Instant;
 
 use hae_serve::cache::PagePool;
 use hae_serve::harness::{bench_n, f2, measure_lane_sync, Table};
+use hae_serve::obs::BenchReport;
 
 /// Alloc-all / free-all churn over a fixed arena.
-fn alloc_free(table: &mut Table, iters: usize) {
+fn alloc_free(table: &mut Table, report: &mut BenchReport, iters: usize) {
     let n_pages = 1024;
     let mut pool = PagePool::new(2, 64, n_pages, 16);
     let mut held = Vec::with_capacity(n_pages);
@@ -29,6 +30,12 @@ fn alloc_free(table: &mut Table, iters: usize) {
     let dt = t0.elapsed().as_secs_f64();
     let s = pool.stats();
     let ops = s.allocs + s.frees;
+    report.metric("alloc_free_mops", ops as f64 / dt / 1e6, "Mops/s");
+    report.metric(
+        "page_reuse_frac",
+        s.reused as f64 / s.allocs.max(1) as f64,
+        "fraction",
+    );
     table.row(vec![
         "alloc/free churn".into(),
         format!("{}", ops),
@@ -40,9 +47,16 @@ fn alloc_free(table: &mut Table, iters: usize) {
 
 /// Lane gather: full resync vs steady-state incremental sync (the shared
 /// harness measurement; perf_serve_batch sweeps it over live lengths).
-fn gather(table: &mut Table, iters: usize) {
+fn gather(table: &mut Table, report: &mut BenchReport, iters: usize) {
     let s = measure_lane_sync(1024, iters);
     let full_bytes = s.pages as f64 * s.page_bytes as f64;
+    report.metric(
+        "gather_full_gbs",
+        full_bytes / (s.full_us_per_step * 1e-6) / 1e9,
+        "GB/s",
+    );
+    report.metric("gather_incr_us_per_step", s.incr_us_per_step, "us");
+    report.metric("gather_incr_pages_per_step", s.incr_pages_per_step, "pages");
     table.row(vec![
         "gather full".into(),
         format!("{}", iters),
@@ -66,11 +80,15 @@ fn gather(table: &mut Table, iters: usize) {
 
 fn main() {
     let iters = bench_n(200);
+    let mut report = BenchReport::new("page_pool");
+    report.config("iters", iters);
     let mut table = Table::new(
         &format!("page-pool primitives, {} iterations", iters),
         &["primitive", "ops", "Mops/s", "pages/step", "GB/s | reuse"],
     );
-    alloc_free(&mut table, iters);
-    gather(&mut table, iters);
+    alloc_free(&mut table, &mut report, iters);
+    gather(&mut table, &mut report, iters);
     table.print();
+    let path = report.write().expect("write BENCH_page_pool.json");
+    println!("\nbench report: {}", path.display());
 }

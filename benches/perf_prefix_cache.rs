@@ -18,6 +18,7 @@ use hae_serve::cache::{KvSlab, Modality, PagePool, PolicyKind};
 use hae_serve::coordinator::{Engine, EngineConfig};
 use hae_serve::harness::{artifact_dir, bench_n, f2, load_grammar, load_runtime, Table};
 use hae_serve::model::ModelMeta;
+use hae_serve::obs::BenchReport;
 use hae_serve::prefix::{request_fingerprint, request_key, PrefixCache, PrefixStats};
 use hae_serve::runtime::Runtime;
 use hae_serve::workload::{Request, RequestBuilder, StoryGrammar};
@@ -38,7 +39,7 @@ fn tiny_meta() -> ModelMeta {
 }
 
 /// Key hashing + trie lookup throughput over the shared-image workload.
-fn primitives(table: &mut Table, iters: usize) {
+fn primitives(table: &mut Table, report: &mut BenchReport, iters: usize) {
     let m = tiny_meta();
     let g = StoryGrammar::uniform();
     let mut b = RequestBuilder::new(&m, &g, 3);
@@ -52,6 +53,7 @@ fn primitives(table: &mut Table, iters: usize) {
         keys.extend(reqs.iter().map(request_key));
     }
     let key_us = t0.elapsed().as_secs_f64() * 1e6 / (iters * reqs.len()) as f64;
+    report.metric("request_key_us", key_us, "us");
     table.row(vec![
         "request_key (18-token prompt)".into(),
         format!("{}", iters * reqs.len()),
@@ -91,6 +93,7 @@ fn primitives(table: &mut Table, iters: usize) {
     }
     let lk_us = t0.elapsed().as_secs_f64() * 1e6 / (iters * keys.len()) as f64;
     assert_eq!(hits, iters * keys.len(), "every key registered must hit");
+    report.metric("trie_lookup_us", lk_us, "us");
     table.row(vec![
         "trie lookup + snapshot (16 entries)".into(),
         format!("{}", hits),
@@ -100,7 +103,7 @@ fn primitives(table: &mut Table, iters: usize) {
 }
 
 /// CoW adopt vs fork cost against a synthetic arena.
-fn cow_costs(table: &mut Table, iters: usize) {
+fn cow_costs(table: &mut Table, report: &mut BenchReport, iters: usize) {
     let m = tiny_meta();
     let row = m.n_heads * m.d_head;
     let pool = PagePool::new_shared(m.n_layers, row, 512, 16);
@@ -124,6 +127,7 @@ fn cow_costs(table: &mut Table, iters: usize) {
         assert!(s.adopt_shared(&pages, meta.clone()));
     }
     let adopt_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    report.metric("cow_adopt_us", adopt_us, "us");
     table.row(vec![
         "adopt 3-page prefix (zero copy)".into(),
         format!("{}", iters),
@@ -141,6 +145,7 @@ fn cow_costs(table: &mut Table, iters: usize) {
     }
     let fork_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
     let forked = pool.borrow().stats().forks - forks0;
+    report.metric("cow_fork_us", fork_us, "us");
     table.row(vec![
         "adopt + diverge (CoW fork)".into(),
         format!("{}", iters),
@@ -185,7 +190,7 @@ fn run_mode(
 }
 
 /// Cold vs warm serving table + the acceptance assertions.
-fn engine_table(n_images: usize) -> anyhow::Result<()> {
+fn engine_table(report: &mut BenchReport, n_images: usize) -> anyhow::Result<()> {
     let rt = match load_runtime() {
         Ok(rt) => rt,
         Err(_) => {
@@ -215,6 +220,9 @@ fn engine_table(n_images: usize) -> anyhow::Result<()> {
         assert_eq!(c, w, "request {} diverged between cold and warm", i);
     }
     let skipped_frac = ps.prefill_tokens_skipped as f64 / total_prompt_tokens as f64;
+    report.metric("cold_prefill_s", cold_prefill, "s");
+    report.metric("warm_prefill_s", warm_prefill, "s");
+    report.metric("warm_skipped_frac", skipped_frac, "fraction");
     assert!(
         skipped_frac >= 0.5,
         "prefill tokens skipped {:.1}% < 50% at {} questions/image",
@@ -265,7 +273,7 @@ fn engine_table(n_images: usize) -> anyhow::Result<()> {
 /// to its own cold run, no exact hits occur, every turn after the first
 /// is a partial hit, and the prefill tokens skipped reach at least the
 /// shared-prefix fraction of the warm turns' prompt tokens.
-fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
+fn dialog_table(report: &mut BenchReport, n_turns: usize) -> anyhow::Result<()> {
     let rt = match load_runtime() {
         Ok(rt) => rt,
         Err(_) => {
@@ -333,6 +341,10 @@ fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
     );
     let shared_frac = shared as f64 / warm_prompt_tokens as f64;
     let skip_frac = skipped as f64 / warm_prompt_tokens as f64;
+    report.metric("dialog_cold_wall_s", cold_wall, "s");
+    report.metric("dialog_warm_wall_s", warm_wall, "s");
+    report.metric("dialog_extend_calls", extend_calls as f64, "calls");
+    report.metric("dialog_skip_frac", skip_frac, "fraction");
     assert!(
         skip_frac + 1e-9 >= shared_frac,
         "skip rate {:.1}% below the shared-prefix fraction {:.1}%",
@@ -379,13 +391,18 @@ fn dialog_table(n_turns: usize) -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     let iters = bench_n(200);
+    let mut report = BenchReport::new("prefix_cache");
+    report.config("iters", iters);
     let mut table = Table::new(
         &format!("prefix-cache primitives, {} iterations", iters),
         &["primitive", "ops", "µs/op", "pages forked/op"],
     );
-    primitives(&mut table, iters);
-    cow_costs(&mut table, iters);
+    primitives(&mut table, &mut report, iters);
+    cow_costs(&mut table, &mut report, iters);
     table.print();
-    engine_table(3)?;
-    dialog_table(8)
+    engine_table(&mut report, 3)?;
+    dialog_table(&mut report, 8)?;
+    let path = report.write().expect("write BENCH_prefix_cache.json");
+    println!("\nbench report: {}", path.display());
+    Ok(())
 }

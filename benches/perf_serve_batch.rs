@@ -19,16 +19,20 @@
 //! Closes with a **shared-image client mix** (8 clients, 1 image,
 //! prefix cache on vs off): admitted-batch width and TTFT with the
 //! radix-tree prefix cache serving repeat questions from pinned pages.
+//!
+//! Also runtime-free: the **tracing-overhead guardrail** — steady-state
+//! decode throughput with observability on vs off must stay within 2%.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
-use hae_serve::cache::PolicyKind;
+use hae_serve::cache::{KvSlab, Modality, PagePool, PolicyKind};
 use hae_serve::harness::*;
+use hae_serve::obs::{BenchReport, Obs, SharedObs, TraceEvent};
 use hae_serve::scheduler::SchedPolicy;
 use hae_serve::server::client_request;
 use hae_serve::util::json::Json;
-use hae_serve::util::stats::percentile;
+use hae_serve::util::stats::percentiles;
 
 /// Drive `clients` concurrent connections, each sending `per_client`
 /// requests built by `payload(client, i)`; returns (wall, latencies,
@@ -88,13 +92,17 @@ fn drive(addr: &str, clients: usize, per_client: usize) -> (f64, Vec<f64>, usize
 /// cache lengths, full resync (the pre-arena behaviour: O(live slots)
 /// every step) vs incremental dirty-page gather (O(dirty pages)).
 /// Runtime-free — runs even without artifacts.
-fn lane_sync_comparison(steps: usize) {
+fn lane_sync_comparison(report: &mut BenchReport, steps: usize) {
     let mut table = Table::new(
         &format!("lane sync per decode step, {} steps", steps),
         &["live slots", "pages", "full µs/step", "incr µs/step", "incr pages/step"],
     );
     for &len in &[128usize, 512, 1024] {
         let s = measure_lane_sync(len, steps);
+        if len == 1024 {
+            report.metric("lane_sync_full_us_per_step", s.full_us_per_step, "us");
+            report.metric("lane_sync_incr_us_per_step", s.incr_us_per_step, "us");
+        }
         table.row(vec![
             format!("{}", s.live_slots),
             format!("{}", s.pages),
@@ -107,6 +115,77 @@ fn lane_sync_comparison(steps: usize) {
     println!(
         "\n(full µs/step grows with the live length; incremental stays flat at\n\
          ~1 page/step — the arena makes the host copy cost page-incremental)"
+    );
+}
+
+/// One steady-state decode loop over the synthetic arena — the same
+/// per-step host work as `measure_lane_sync`'s incremental phase — with
+/// the per-step observability sequence `Engine::decode_step` performs
+/// spliced in: one enabled check, one histogram record, one trace event
+/// per lane. Returns steps/sec.
+fn traced_decode_steps_per_sec(obs: &SharedObs, lanes: usize, steps: usize) -> f64 {
+    let (n_layers, row, ps) = (4usize, 128usize, 16usize);
+    let live = 256usize;
+    let cap = live + steps + 1;
+    let pool = PagePool::new_shared(n_layers, row, cap.div_ceil(ps) + 1, ps);
+    let token_row = vec![0.5f32; n_layers * row];
+    let mut slab = KvSlab::in_pool(&pool, cap);
+    for i in 0..live {
+        slab.append(&token_row, &token_row, i as i32, Modality::Text, 0.0);
+    }
+    let mut dst_k = vec![0.0f32; 2 * n_layers * cap * row];
+    let mut dst_v = dst_k.clone();
+    slab.copy_into_lane(&mut dst_k, &mut dst_v, 0, cap); // prime
+    let t0 = Instant::now();
+    for i in 0..steps {
+        slab.append(
+            &token_row,
+            &token_row,
+            (live + i) as i32,
+            Modality::Text,
+            0.0,
+        );
+        slab.copy_into_lane(&mut dst_k, &mut dst_v, 0, cap);
+        let obs_on = obs.borrow().enabled();
+        if obs_on {
+            obs.borrow_mut().decode_step_ms.record(0.2);
+        }
+        for lane in 0..lanes {
+            obs.borrow_mut().event(lane as u64, TraceEvent::DecodeStep);
+        }
+    }
+    steps as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Tracing-overhead guardrail (runtime-free): steady-state decode
+/// throughput with observability enabled must stay within 2% of
+/// disabled. Best-of-trials per mode, alternating, so scheduler noise
+/// cannot fail the ratio — only a real per-step cost can.
+fn tracing_overhead_guardrail(report: &mut BenchReport, steps: usize) {
+    let steps = steps.max(500);
+    let lanes = 8;
+    let trials = 5;
+    let mut best_off = 0.0f64;
+    let mut best_on = 0.0f64;
+    for _ in 0..trials {
+        best_off = best_off.max(traced_decode_steps_per_sec(&Obs::shared(false), lanes, steps));
+        best_on = best_on.max(traced_decode_steps_per_sec(&Obs::shared(true), lanes, steps));
+    }
+    let ratio = best_on / best_off;
+    println!(
+        "\n## tracing overhead guardrail\n\
+         decode steps/s: tracing off {:.0}, on {:.0} — ratio {:.4} \
+         (floor 0.98)",
+        best_off, best_on, ratio
+    );
+    report.metric("tracing_overhead_ratio", ratio, "on/off");
+    assert!(
+        ratio >= 0.98,
+        "tracing-on decode throughput is {:.1}% of tracing-off \
+         ({:.0} vs {:.0} steps/s) — the <2% overhead guardrail failed",
+        ratio * 100.0,
+        best_on,
+        best_off
     );
 }
 
@@ -161,7 +240,7 @@ fn shared_image_mix(per_client: usize, widest: usize) {
             if cache_on { "on" } else { "off" }.into(),
             f2(lats.len() as f64 / wall),
             format!("{:.1}", g("ttft_p50_ms")),
-            format!("{:.0}", percentile(&lats, 0.5) * 1000.0),
+            format!("{:.0}", percentiles(&lats, &[0.5])[0] * 1000.0),
             format!("{:.0}", g("max_lanes_step")),
             format!("{:.0}%", 100.0 * g("prefix_hit_rate")),
             format!("{:.0}", g("prefill_tokens_skipped")),
@@ -178,12 +257,17 @@ fn shared_image_mix(per_client: usize, widest: usize) {
 
 fn main() -> anyhow::Result<()> {
     let per_client = bench_n(6);
-    lane_sync_comparison(bench_n(6) * 50);
+    let mut report = BenchReport::new("serve_batch");
+    report.config("per_client", per_client);
+    lane_sync_comparison(&mut report, bench_n(6) * 50);
+    tracing_overhead_guardrail(&mut report, bench_n(6) * 100);
     if load_runtime().is_err() {
         eprintln!(
             "artifacts not built (run `make artifacts`) — skipping the\n\
              server throughput section"
         );
+        let path = report.write().expect("write BENCH_serve_batch.json");
+        println!("\nbench report: {}", path.display());
         return Ok(());
     }
     let widest = widest_batch();
@@ -216,13 +300,21 @@ fn main() -> anyhow::Result<()> {
                         .and_then(|v| v.as_f64())
                         .unwrap_or(0.0)
                 };
+                let ps = percentiles(&lats, &[0.5, 0.95]);
+                if clients == 8 {
+                    report.metric(
+                        &format!("req_s_{}_b{}_c8", policy_spec, batch),
+                        lats.len() as f64 / wall,
+                        "req/s",
+                    );
+                }
                 table.row(vec![
                     policy_spec.into(),
                     format!("{}", batch),
                     format!("{}", clients),
                     f2(lats.len() as f64 / wall),
-                    format!("{:.0}", percentile(&lats, 0.5) * 1000.0),
-                    format!("{:.0}", percentile(&lats, 0.95) * 1000.0),
+                    format!("{:.0}", ps[0] * 1000.0),
+                    format!("{:.0}", ps[1] * 1000.0),
                     format!("{:.0}", g("max_lanes_step")),
                     format!("{:.0}", g("peak_live_kv_bytes") / 1024.0),
                     format!("{}", errors),
@@ -238,5 +330,7 @@ fn main() -> anyhow::Result<()> {
         widest
     );
     shared_image_mix(per_client, widest);
+    let path = report.write().expect("write BENCH_serve_batch.json");
+    println!("\nbench report: {}", path.display());
     Ok(())
 }

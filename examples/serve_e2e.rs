@@ -20,7 +20,7 @@ use hae_serve::harness::{spawn_server, wait_listening, widest_batch};
 use hae_serve::scheduler::SchedPolicy;
 use hae_serve::server::client_request;
 use hae_serve::util::json::Json;
-use hae_serve::util::stats::percentile;
+use hae_serve::util::stats::percentiles;
 
 fn main() -> Result<()> {
     let batch = widest_batch();
@@ -93,11 +93,12 @@ fn main() -> Result<()> {
         steps as f64 / wall,
         errors
     );
+    let lat = percentiles(&latencies, &[0.5, 0.95, 1.0]);
     println!(
         "latency p50 {:.0} ms | p95 {:.0} ms | max {:.0} ms",
-        percentile(&latencies, 0.5) * 1000.0,
-        percentile(&latencies, 0.95) * 1000.0,
-        percentile(&latencies, 1.0) * 1000.0
+        lat[0] * 1000.0,
+        lat[1] * 1000.0,
+        lat[2] * 1000.0
     );
     println!(
         "HAE activity: {} prompt tokens pruned (DAP), {} cache slots evicted (DDES)",

@@ -1,0 +1,63 @@
+//! Validate the `BENCH_*.json` reports the perf benches leave behind.
+//!
+//! `make bench-verify` (and the CI bench-smoke job) runs this after
+//! `make bench-smoke`: every report must match the schema in
+//! `obs::bench_report`, and at least `HAE_BENCH_MIN` (default 4 — one per
+//! perf bench) must exist. Exit status is the whole interface so the
+//! Makefile/CI can gate on it; the listing doubles as a human summary.
+
+use hae_serve::obs::bench_report::{bench_dir, schema_problems};
+use hae_serve::util::json::Json;
+
+fn main() {
+    let min: usize = std::env::var("HAE_BENCH_MIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let dir = bench_dir();
+    let mut names: Vec<_> = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect(),
+        Err(e) => {
+            eprintln!("bench-verify: cannot read {}: {}", dir.display(), e);
+            std::process::exit(1);
+        }
+    };
+    names.sort();
+    let mut bad = 0usize;
+    for name in &names {
+        let path = dir.join(name);
+        let problems = match std::fs::read_to_string(&path) {
+            Ok(body) => match Json::parse(body.trim()) {
+                Ok(j) => schema_problems(&j),
+                Err(e) => vec![format!("unparseable json: {}", e)],
+            },
+            Err(e) => vec![format!("unreadable: {}", e)],
+        };
+        if problems.is_empty() {
+            println!("ok      {}", name);
+        } else {
+            bad += 1;
+            for p in problems {
+                println!("INVALID {}: {}", name, p);
+            }
+        }
+    }
+    if bad > 0 {
+        eprintln!("bench-verify: {} invalid report(s)", bad);
+        std::process::exit(1);
+    }
+    if names.len() < min {
+        eprintln!(
+            "bench-verify: found {} report(s) in {}, need >= {} (run `make bench-smoke`; HAE_BENCH_MIN overrides)",
+            names.len(),
+            dir.display(),
+            min
+        );
+        std::process::exit(1);
+    }
+    println!("bench-verify: {} report(s) valid", names.len());
+}

@@ -18,6 +18,7 @@ use crate::cache::{
     PrefillCtx, SharedPagePool, SlotMeta, DEFAULT_PAGE_SLOTS,
 };
 use crate::model::vocab;
+use crate::obs::{EvictKind, Obs, SharedObs, TraceEvent};
 use crate::prefix::{
     request_fingerprint, request_key, DapAccumulator, KeySym, PartialPrefixHit,
     PartialProbe, PrefixCache, PrefixHit, PrefixProbe, PrefixStats,
@@ -60,6 +61,11 @@ pub struct EngineConfig {
     /// executables (`--extend-chunk`; clamped to the largest compiled
     /// chunk bucket). 1 = the one-token decode loop, reproduced exactly
     pub extend_chunk: usize,
+    /// request-lifecycle tracing + per-phase histograms (`obs::Obs`).
+    /// Recording is alloc-free (pre-sized ring, `Copy` events) and the
+    /// guardrail bench pins its decode overhead under 2%, so this stays
+    /// on by default; off switches every `Obs` record into a no-op.
+    pub trace: bool,
 }
 
 /// Default suffix-recompute chunk: one compiled extend bucket's worth of
@@ -80,6 +86,7 @@ impl Default for EngineConfig {
             page_slots: DEFAULT_PAGE_SLOTS,
             prefix_cache: true,
             extend_chunk: DEFAULT_EXTEND_CHUNK,
+            trace: true,
         }
     }
 }
@@ -132,6 +139,10 @@ pub struct Engine {
     extend_calls: u64,
     /// component timing of the most recent decode step (perf harness)
     last_timing: StepTiming,
+    /// lifecycle trace journal + engine-phase histograms, shared with
+    /// the scheduler (`Scheduler::for_engine` clones the handle) and
+    /// exposed over the wire via `{"kind":"trace"}`
+    obs: SharedObs,
 }
 
 impl Engine {
@@ -168,6 +179,7 @@ impl Engine {
             page_slots,
         );
         let lane_owner = vec![0; cfg.batch];
+        let cfg_trace = cfg.trace;
         Ok(Engine {
             rt,
             cfg,
@@ -181,7 +193,15 @@ impl Engine {
             emergency_tail_drops: 0,
             extend_calls: 0,
             last_timing: StepTiming::default(),
+            obs: Obs::shared(cfg_trace),
         })
+    }
+
+    /// Handle to the shared observability state (trace journal + phase
+    /// histograms). The scheduler clones this so both sides journal into
+    /// one ring.
+    pub fn obs(&self) -> SharedObs {
+        self.obs.clone()
     }
 
     /// Handle to the shared page arena (scheduler metrics, tests).
@@ -368,6 +388,54 @@ impl Engine {
     ///   decision is re-run with this request's OWN reconstructed DAP
     ///   statistics — never the donor's decision (`prefill_partial`).
     pub fn prefill(&mut self, req: Request) -> Result<ActiveRequest> {
+        let rid = req.id;
+        self.obs.borrow_mut().event(rid, TraceEvent::PrefillStart);
+        let out = self.prefill_inner(req);
+        let mut o = self.obs.borrow_mut();
+        if o.enabled() {
+            if let Ok(ar) = &out {
+                // phase histograms: cold device prefill vs partial-replay
+                // suffix recompute. Exact warm hits run no device prefill
+                // (prefill_s stays 0) and record in neither.
+                if !ar.stats.prefix_hit {
+                    o.prefill_ms.record(ar.stats.prefill_s * 1000.0);
+                } else if ar.stats.extend_calls > 0 {
+                    o.partial_replay_ms.record(ar.stats.prefill_s * 1000.0);
+                }
+                // retained fraction per modality, recorded where a
+                // retention decision actually ran (cold + partial replay;
+                // exact hits reuse the donor's decision). Slot eviction
+                // spans all layers in KvSlab, so "per-layer" collapses to
+                // one fraction — per-modality is the observable axis (see
+                // docs/OBSERVABILITY.md).
+                if !ar.stats.prefix_hit || ar.stats.extend_calls > 0 {
+                    let vis_kept = ar
+                        .slab
+                        .meta()
+                        .iter()
+                        .filter(|sm| sm.modality == Modality::Vision)
+                        .count();
+                    let vis_total = ar.stats.vision_tokens;
+                    let txt_total =
+                        ar.stats.prompt_tokens.saturating_sub(vis_total);
+                    let txt_kept = ar.prefill_len.saturating_sub(vis_kept);
+                    if vis_total > 0 {
+                        o.retained_frac_vision
+                            .record(vis_kept as f64 / vis_total as f64);
+                    }
+                    if txt_total > 0 {
+                        o.retained_frac_text
+                            .record((txt_kept.min(txt_total)) as f64 / txt_total as f64);
+                    }
+                }
+            }
+            o.trace.record(rid, TraceEvent::PrefillEnd);
+        }
+        out
+    }
+
+    /// Prefill dispatch (see `prefill` for the path semantics).
+    fn prefill_inner(&mut self, req: Request) -> Result<ActiveRequest> {
         let probe = self.prefix_enabled().then(|| PrefixProbe::of(&req));
         let req = if let Some(pr) = &probe {
             if let Some(hit) = self.prefix.lookup(&pr.key, pr.fingerprint) {
@@ -534,6 +602,10 @@ impl Engine {
             }
             return Ok(Err(req));
         }
+        self.obs.borrow_mut().event(
+            req.id,
+            TraceEvent::PartialAdopt { shared_pages: hit.pages.len() as u32 },
+        );
         // the extension's appends (suffix pages + the tail fork) may not
         // hit the allocator's exhaustion expect: if the pool cannot
         // cover the whole suffix even after reclaiming cache-only pins,
@@ -629,6 +701,13 @@ impl Engine {
                 )?;
                 prefill_dev_s += timing.total_s();
                 calls += 1;
+                {
+                    let mut o = self.obs.borrow_mut();
+                    if o.enabled() {
+                        o.extend_chunk_ms.record(timing.total_s() * 1000.0);
+                        o.trace.record(req.id, TraceEvent::ExtendChunk { n: step as u32 });
+                    }
+                }
                 for i in 0..step {
                     let k_new = out.row_kv(&out.k_new, &m, 0, i);
                     let v_new = out.row_kv(&out.v_new, &m, 0, i);
@@ -665,6 +744,13 @@ impl Engine {
                 )?;
                 prefill_dev_s += timing.total_s();
                 calls += 1;
+                {
+                    let mut o = self.obs.borrow_mut();
+                    if o.enabled() {
+                        o.extend_chunk_ms.record(timing.total_s() * 1000.0);
+                        o.trace.record(req.id, TraceEvent::ExtendChunk { n: step as u32 });
+                    }
+                }
                 let k_new = out.lane_kv(&m, &out.k_new, 0).to_vec();
                 let v_new = out.lane_kv(&m, &out.v_new, 0).to_vec();
                 slab.append(&k_new, &v_new, t as i32, Modality::Text, 0.0);
@@ -724,8 +810,15 @@ impl Engine {
         // deliberately not flushed for this up front); exhaustion falls
         // back to a cold prefill instead of panicking
         self.reclaim_pool_headroom(slab.shared_pages());
+        let forks_before = self.pool.borrow().stats().forks;
         if slab.try_compact(&retain).is_none() {
             return Ok(Err(req));
+        }
+        let forked = self.pool.borrow().stats().forks - forks_before;
+        if forked > 0 {
+            self.obs
+                .borrow_mut()
+                .event(req.id, TraceEvent::CowFork { pages: forked as u32 });
         }
         // rewrite the slot metadata to cold-injection semantics: the
         // score seeds are the request's own full-prompt DAP mass
@@ -750,6 +843,10 @@ impl Engine {
         let first_token = self.sample(&last_logits);
         let mut stats = RequestStats {
             prefill_s: prefill_dev_s,
+            // the suffix recompute *is* this path's prefill: extend_s
+            // mirrors it so replies can show where warm-start time went
+            // without changing prefill_s semantics
+            extend_s: prefill_dev_s,
             prompt_tokens: n,
             vision_tokens: req.n_vision(),
             pruned_at_prefill: n - prefill_len,
@@ -1120,6 +1217,15 @@ impl Engine {
         )?;
 
         self.last_timing = timing;
+        // one enabled-check per step keeps the disabled path to a single
+        // RefCell borrow (the <2% overhead guardrail measures both modes)
+        let obs_on = self.obs.borrow().enabled();
+        if obs_on {
+            self.obs
+                .borrow_mut()
+                .decode_step_ms
+                .record(timing.total_s() * 1000.0);
+        }
         let t1 = Instant::now();
         for (lane, &i) in live.iter().enumerate() {
             let ar = &mut lanes[i];
@@ -1185,10 +1291,32 @@ impl Engine {
                             (sm.position, sm.cum_score, sm.marked)
                         })
                         .collect();
+                    let forks_before = (obs_on && ar.slab.shared_pages() > 0)
+                        .then(|| self.pool.borrow().stats().forks);
                     match ar.slab.try_evict(&decision.evict) {
                         Some(evicted) => {
                             ar.evictions.push(EvictionEvent { step, victims });
                             ar.stats.evicted_at_decode += evicted;
+                            if obs_on {
+                                let forked = forks_before.map_or(0, |f0| {
+                                    self.pool.borrow().stats().forks - f0
+                                });
+                                let mut o = self.obs.borrow_mut();
+                                o.evicted_per_decision.record(evicted as f64);
+                                o.trace.record(
+                                    ar.req.id,
+                                    TraceEvent::Evict {
+                                        kind: EvictKind::Policy,
+                                        slots: evicted as u32,
+                                    },
+                                );
+                                if forked > 0 {
+                                    o.trace.record(
+                                        ar.req.id,
+                                        TraceEvent::CowFork { pages: forked as u32 },
+                                    );
+                                }
+                            }
                         }
                         None => {
                             // CoW fork exhausted mid-divergence: defer —
@@ -1225,6 +1353,17 @@ impl Engine {
                     Some(evicted) => {
                         ar.evictions.push(EvictionEvent { step, victims });
                         ar.stats.evicted_at_decode += evicted;
+                        if obs_on {
+                            let mut o = self.obs.borrow_mut();
+                            o.evicted_per_decision.record(evicted as f64);
+                            o.trace.record(
+                                ar.req.id,
+                                TraceEvent::Evict {
+                                    kind: EvictKind::Capacity,
+                                    slots: evicted as u32,
+                                },
+                            );
+                        }
                     }
                     None => {
                         // the hard wall cannot wait for a retry: the next
@@ -1247,6 +1386,17 @@ impl Engine {
                             self.emergency_tail_drops += 1;
                             ar.evictions.push(EvictionEvent { step, victims });
                             ar.stats.evicted_at_decode += dropped;
+                            if obs_on {
+                                let mut o = self.obs.borrow_mut();
+                                o.evicted_per_decision.record(dropped as f64);
+                                o.trace.record(
+                                    ar.req.id,
+                                    TraceEvent::Evict {
+                                        kind: EvictKind::Emergency,
+                                        slots: dropped as u32,
+                                    },
+                                );
+                            }
                         }
                     }
                 }
@@ -1267,6 +1417,9 @@ impl Engine {
             ar.generated.push(next);
 
             // 5. accounting + termination
+            if obs_on {
+                self.obs.borrow_mut().trace.record(ar.req.id, TraceEvent::DecodeStep);
+            }
             ar.stats.steps += 1;
             ar.stats.decode_s += timing.total_s() / live.len() as f64;
             ar.stats.decisions = ar.policy.decision_count();

@@ -20,6 +20,14 @@ pub struct RequestStats {
     pub decode_s: f64,
     /// host-side coordination time (everything outside PJRT calls)
     pub coord_s: f64,
+    /// enqueue → admission wait under the serving scheduler (0 for
+    /// engine-direct drivers, which never queue)
+    pub queue_s: f64,
+    /// suffix-recompute device time of a partial warm start: the portion
+    /// of `prefill_s` spent inside chunked-extend calls (== `prefill_s`
+    /// on the partial path, 0 for cold prefills and exact hits —
+    /// `prefill_s` keeps its established semantics either way)
+    pub extend_s: f64,
     pub steps: usize,
     pub prompt_tokens: usize,
     pub vision_tokens: usize,

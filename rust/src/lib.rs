@@ -12,6 +12,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod harness;
 pub mod model;
+pub mod obs;
 pub mod prefix;
 pub mod runtime;
 pub mod scheduler;

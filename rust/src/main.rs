@@ -44,6 +44,9 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
                     chunks of N tokens per device call (the extend
                     executables); N|full, clamped to the largest compiled
                     chunk; 1 = the one-token decode loop (default 8)
+  --trace M         on|off: request-lifecycle trace journal + per-phase
+                    histograms (queryable via {"kind":"trace"} and the
+                    stats "phases" block; default on)
   --sched-policy P  serve: fifo | priority (default fifo)
   --verbose         generate: print full token streams";
 
@@ -101,6 +104,11 @@ fn build_engine(
             anyhow!("bad --extend-chunk '{}' (accepted: an integer ≥ 1, or 'full')", spec)
         })?,
     };
+    let trace = match args.get_or("trace", "on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => return Err(anyhow!("bad --trace '{}' (accepted: on, off)", other)),
+    };
     let cfg = EngineConfig {
         policy,
         temperature: args.f32("temperature", 0.0),
@@ -113,6 +121,7 @@ fn build_engine(
         page_slots: args.usize("page-slots", DEFAULT_PAGE_SLOTS),
         prefix_cache,
         extend_chunk,
+        trace,
     };
     let grammar =
         StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());

@@ -1,0 +1,183 @@
+//! Machine-readable bench output: `BENCH_<name>.json`.
+//!
+//! Every `benches/perf_*.rs` target emits one report so perf trends can be
+//! compared across PRs instead of resetting with every table printed to a
+//! scrolled-away CI log. The schema is deliberately small and stable —
+//! `make bench-verify` (rust/src/bin/bench_verify.rs) checks it and CI
+//! archives the files as artifacts.
+//!
+//! ```json
+//! {
+//!   "bench": "page_pool",
+//!   "rev": "392c282",
+//!   "config": {"iters": "4000"},
+//!   "metrics": {"alloc_free_mops": {"value": 12.3, "unit": "Mops/s"}}
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::PathBuf;
+use std::process::Command;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Directory reports are written into; overridable for tests and CI via
+/// `HAE_BENCH_DIR` (default: current working directory, i.e. the repo root
+/// under `cargo bench`).
+pub fn bench_dir() -> PathBuf {
+    PathBuf::from(std::env::var("HAE_BENCH_DIR").unwrap_or_else(|_| ".".into()))
+}
+
+/// Best-effort short git revision; "unknown" when git is unavailable
+/// (bench output must never fail because the tree is not a checkout).
+pub fn git_rev() -> String {
+    Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|v| v.trim().to_string())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Accumulates config and metrics for one bench run, then serialises to
+/// `BENCH_<name>.json`.
+pub struct BenchReport {
+    name: String,
+    config: BTreeMap<String, String>,
+    metrics: BTreeMap<String, (f64, String)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            config: BTreeMap::new(),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&mut self, key: &str, value: impl ToString) -> &mut Self {
+        self.config.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn metric(&mut self, key: &str, value: f64, unit: &str) -> &mut Self {
+        self.metrics.insert(key.to_string(), (value, unit.to_string()));
+        self
+    }
+
+    pub fn metric_count(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let config = Json::Obj(
+            self.config.iter().map(|(k, v)| (k.clone(), s(v))).collect(),
+        );
+        let metrics = Json::Obj(
+            self.metrics
+                .iter()
+                .map(|(k, (v, u))| {
+                    (k.clone(), obj(vec![("value", num(*v)), ("unit", s(u))]))
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("bench", s(&self.name)),
+            ("rev", s(&git_rev())),
+            ("config", config),
+            ("metrics", metrics),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into [`bench_dir`], returning the path.
+    pub fn write(&self) -> io::Result<PathBuf> {
+        let path = bench_dir().join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_compact() + "\n")?;
+        Ok(path)
+    }
+}
+
+/// Schema check shared by `bench_verify` and tests: returns a list of
+/// human-readable problems (empty = valid).
+pub fn schema_problems(j: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    match j.get("bench").and_then(|v| v.as_str()) {
+        Some(b) if !b.is_empty() => {}
+        _ => out.push("missing or empty 'bench'".into()),
+    }
+    if j.get("rev").and_then(|v| v.as_str()).is_none() {
+        out.push("missing 'rev'".into());
+    }
+    if j.get("config").and_then(|v| v.as_obj()).is_none() {
+        out.push("missing 'config' object".into());
+    }
+    match j.get("metrics").and_then(|v| v.as_obj()) {
+        None => out.push("missing 'metrics' object".into()),
+        Some(m) if m.is_empty() => out.push("'metrics' is empty".into()),
+        Some(m) => {
+            for (k, v) in m {
+                if v.get("value").and_then(|x| x.as_f64()).is_none() {
+                    out.push(format!("metric '{}' missing numeric 'value'", k));
+                }
+                if v.get("unit").and_then(|x| x.as_str()).is_none() {
+                    out.push(format!("metric '{}' missing 'unit'", k));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_serialises_to_valid_schema() {
+        let mut r = BenchReport::new("unit_test");
+        r.config("iters", 100).metric("throughput", 12.5, "Mops/s");
+        let j = r.to_json();
+        assert!(schema_problems(&j).is_empty(), "{:?}", schema_problems(&j));
+        assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("unit_test"));
+        assert_eq!(
+            j.path(&["metrics", "throughput", "value"]).and_then(|v| v.as_f64()),
+            Some(12.5)
+        );
+        assert_eq!(
+            j.path(&["config", "iters"]).and_then(|v| v.as_str()),
+            Some("100")
+        );
+    }
+
+    #[test]
+    fn schema_check_flags_missing_keys() {
+        let bad = Json::parse(r#"{"bench":"x","metrics":{"m":{"value":"nope"}}}"#).unwrap();
+        let probs = schema_problems(&bad);
+        assert!(probs.iter().any(|p| p.contains("rev")));
+        assert!(probs.iter().any(|p| p.contains("config")));
+        assert!(probs.iter().any(|p| p.contains("numeric 'value'")));
+        assert!(probs.iter().any(|p| p.contains("unit")));
+        let empty = Json::parse(r#"{"bench":"x","rev":"r","config":{},"metrics":{}}"#).unwrap();
+        assert!(schema_problems(&empty).iter().any(|p| p.contains("empty")));
+    }
+
+    #[test]
+    fn write_roundtrip_in_temp_dir() {
+        let dir = std::env::temp_dir().join(format!("hae_bench_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("HAE_BENCH_DIR", &dir);
+        let mut r = BenchReport::new("roundtrip");
+        r.metric("x", 1.0, "count");
+        let path = r.write().unwrap();
+        std::env::remove_var("HAE_BENCH_DIR");
+        let body = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(body.trim()).unwrap();
+        assert!(schema_problems(&j).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

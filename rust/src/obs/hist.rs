@@ -1,0 +1,302 @@
+//! Fixed-bucket histograms with bounded memory and whole-run percentiles.
+//!
+//! The scheduler's original metrics kept raw latency samples in a bounded
+//! ring, which silently *drops* the oldest samples — a long-run p99 computed
+//! from the survivors is wrong precisely when tail behaviour matters most.
+//! A fixed-bucket histogram never drops a sample: every observation lands in
+//! one of a pre-computed set of buckets, so memory is exact and constant and
+//! percentiles cover the whole run at the cost of bucket-width resolution
+//! (log-scale buckets bound the *relative* error instead of the absolute
+//! one, which is the right trade for latencies spanning µs to minutes).
+//!
+//! Recording is alloc-free after construction: `record` touches a pre-sized
+//! counts vector via binary search over the edge table and never grows
+//! either allocation.
+
+use crate::util::json::{num, obj, Json};
+
+/// Log- or linear-bucketed histogram over `f64` samples.
+///
+/// Bucket `i` covers `(edges[i-1], edges[i]]`; values at or below the first
+/// edge land in bucket 0 and values above the last edge land in a dedicated
+/// overflow bucket. Exact `min`/`max`/`sum`/`count` are tracked alongside so
+/// extreme quantiles clamp to observed values rather than bucket bounds.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Ascending bucket upper bounds. Never mutated after construction.
+    edges: Vec<f64>,
+    /// One count per edge plus a trailing overflow bucket.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    fn from_edges(edges: Vec<f64>) -> Self {
+        assert!(edges.len() >= 2, "histogram needs at least two buckets");
+        assert!(
+            edges.windows(2).all(|w| w[0] < w[1]),
+            "histogram edges must be strictly ascending"
+        );
+        let n = edges.len();
+        Histogram {
+            edges,
+            counts: vec![0; n + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Geometric buckets: `n` edges from `lo` to `hi` inclusive, constant
+    /// ratio between consecutive edges (constant relative bucket width).
+    pub fn log(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+        let mut edges = Vec::with_capacity(n);
+        for i in 0..n {
+            edges.push(lo * ratio.powi(i as i32));
+        }
+        // guard against powf drift on the final edge
+        *edges.last_mut().unwrap() = hi;
+        Histogram::from_edges(edges)
+    }
+
+    /// Evenly spaced buckets: `n` edges from `lo + step` to `hi` inclusive.
+    pub fn linear(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n >= 2);
+        let step = (hi - lo) / n as f64;
+        let mut edges = Vec::with_capacity(n);
+        for i in 1..=n {
+            edges.push(lo + step * i as f64);
+        }
+        *edges.last_mut().unwrap() = hi;
+        Histogram::from_edges(edges)
+    }
+
+    /// Latency histogram in milliseconds: 1µs to 10 minutes, ~13% relative
+    /// bucket width (160 log-scale buckets).
+    pub fn latency_ms() -> Self {
+        Histogram::log(1e-3, 6e5, 160)
+    }
+
+    /// Fraction histogram over [0, 1] with 2% absolute resolution.
+    pub fn unit_fraction() -> Self {
+        Histogram::linear(0.0, 1.0, 50)
+    }
+
+    /// Count histogram (evicted slots per decision etc.): 1 to 100k,
+    /// log-scale.
+    pub fn count_scale() -> Self {
+        Histogram::log(1.0, 1e5, 60)
+    }
+
+    /// Record one sample. Alloc-free. NaN samples are counted in the
+    /// overflow bucket but excluded from `sum`/`min`/`max` so one poisoned
+    /// value cannot corrupt every derived statistic.
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        if v.is_nan() {
+            *self.counts.last_mut().unwrap() += 1;
+            return;
+        }
+        let idx = self.edges.partition_point(|e| *e < v);
+        self.counts[idx] += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 || self.min.is_infinite() {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 || self.max.is_infinite() {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Bucket upper bounds (exclusive of the overflow bucket).
+    pub fn edges(&self) -> &[f64] {
+        &self.edges
+    }
+
+    /// Per-bucket counts; last entry is the overflow bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Whole-run quantile estimate: the upper edge of the bucket holding
+    /// the rank-`q` sample, clamped to the observed `[min, max]`. Error is
+    /// bounded by one bucket width at the quantile.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let upper = if i < self.edges.len() {
+                    self.edges[i]
+                } else {
+                    self.max()
+                };
+                return upper.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Compact JSON summary used by the `phases` block of the stats reply.
+    pub fn summary_json(&self) -> Json {
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("sum", num(self.sum)),
+            ("min", num(self.min())),
+            ("max", num(self.max())),
+            ("p50", num(self.percentile(0.50))),
+            ("p95", num(self.percentile(0.95))),
+            ("p99", num(self.percentile(0.99))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile as exact_percentile;
+
+    /// The bucket index an exact value falls into (same rule as `record`).
+    fn bucket_of(h: &Histogram, v: f64) -> usize {
+        h.edges().partition_point(|e| *e < v)
+    }
+
+    fn bucket_bounds(h: &Histogram, idx: usize) -> (f64, f64) {
+        let lo = if idx == 0 { f64::NEG_INFINITY } else { h.edges()[idx - 1] };
+        let hi = if idx < h.edges().len() { h.edges()[idx] } else { f64::INFINITY };
+        (lo, hi)
+    }
+
+    #[test]
+    fn percentiles_within_one_bucket_of_exact() {
+        // deterministic long-tailed sample set: 1..=2000 with a heavy tail
+        let mut xs: Vec<f64> = (1..=2000).map(|i| i as f64 * 0.37).collect();
+        xs.extend((0..40).map(|i| 5_000.0 + 900.0 * i as f64));
+        let mut h = Histogram::latency_ms();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [0.50, 0.95, 0.99] {
+            let exact = exact_percentile(&xs, q);
+            let got = h.percentile(q);
+            // within one bucket: got must land in the exact value's bucket
+            // or an immediate neighbour
+            let idx = bucket_of(&h, exact);
+            let (lo, _) = bucket_bounds(&h, idx.saturating_sub(1));
+            let (_, hi) = bucket_bounds(&h, (idx + 1).min(h.edges().len()));
+            assert!(
+                got >= lo && got <= hi,
+                "q={}: exact={} got={} outside one-bucket band [{}, {}]",
+                q,
+                exact,
+                got,
+                lo,
+                hi
+            );
+        }
+    }
+
+    #[test]
+    fn no_allocation_after_construction() {
+        let mut h = Histogram::latency_ms();
+        let edges_ptr = h.edges().as_ptr();
+        let counts_ptr = h.counts().as_ptr();
+        let edges_len = h.edges().len();
+        let counts_len = h.counts().len();
+        for i in 0..10_000 {
+            h.record((i % 977) as f64 * 1.3 + 0.001);
+        }
+        h.record(f64::NAN);
+        h.record(1e12); // overflow
+        h.record(-5.0); // underflow
+        assert_eq!(h.edges().as_ptr(), edges_ptr, "edge table reallocated");
+        assert_eq!(h.counts().as_ptr(), counts_ptr, "counts reallocated");
+        assert_eq!(h.edges().len(), edges_len);
+        assert_eq!(h.counts().len(), counts_len);
+        assert_eq!(h.count(), 10_003);
+    }
+
+    #[test]
+    fn never_drops_samples_unlike_a_ring() {
+        // 1M samples into a ~160-bucket histogram: every one is counted
+        let mut h = Histogram::latency_ms();
+        let n = 1_000_000u64;
+        for i in 0..n {
+            h.record((i % 10_000) as f64 / 10.0 + 0.01);
+        }
+        assert_eq!(h.count(), n);
+        assert_eq!(h.counts().iter().sum::<u64>(), n);
+    }
+
+    #[test]
+    fn nan_and_extremes_are_safe() {
+        let mut h = Histogram::linear(0.0, 1.0, 10);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(-1.0);
+        h.record(0.5);
+        assert_eq!(h.count(), 4);
+        assert!(h.sum().is_infinite(), "inf lands in sum; nan does not");
+        assert_eq!(h.min(), -1.0);
+        // empty histogram yields zeros, not NaN
+        let e = Histogram::unit_fraction();
+        assert_eq!(e.percentile(0.99), 0.0);
+        assert_eq!(e.min(), 0.0);
+        assert_eq!(e.mean(), 0.0);
+    }
+
+    #[test]
+    fn monotone_percentiles_and_clamping() {
+        let mut h = Histogram::latency_ms();
+        for v in [2.0, 2.0, 2.0, 900.0] {
+            h.record(v);
+        }
+        let p50 = h.percentile(0.5);
+        let p99 = h.percentile(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 <= h.max(), "clamped to observed max");
+        assert!(h.percentile(0.0) >= h.min());
+    }
+}

@@ -1,0 +1,197 @@
+//! Observability layer: request-lifecycle tracing, per-phase histograms,
+//! Prometheus exposition and machine-readable bench reports.
+//!
+//! The serving stack is single-threaded around a PJRT client that is not
+//! `Send`, so the shared handle is an `Rc<RefCell<Obs>>` (the same pattern
+//! as `SharedPagePool`): the engine owns the instance, the scheduler clones
+//! the handle, and the server reaches it through the scheduler's stats
+//! methods. Recording on the hot path is alloc-free (pre-sized trace ring,
+//! `Copy` events, fixed-bucket histograms) and globally gated by `enabled`
+//! so the overhead guardrail in `benches/perf_serve_batch.rs` can measure
+//! tracing on vs off.
+
+pub mod bench_report;
+pub mod hist;
+pub mod prometheus;
+pub mod trace;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub use bench_report::BenchReport;
+pub use hist::Histogram;
+pub use trace::{EvictKind, RetireReason, TraceEvent, TraceJournal, TraceRecord};
+
+use crate::util::json::{num, obj, Json};
+
+/// All engine-side observability state: the trace journal plus the phase
+/// histograms the scheduler's metrics registry does not own (it keeps
+/// queue-wait/TTFT/e2e, which are scheduler-clock phases).
+#[derive(Debug)]
+pub struct Obs {
+    enabled: bool,
+    pub trace: TraceJournal,
+    /// Cold prefill device time per request (ms).
+    pub prefill_ms: Histogram,
+    /// Partial warm-start suffix recompute device time per request (ms).
+    pub partial_replay_ms: Histogram,
+    /// Device time per chunked-extend call (ms).
+    pub extend_chunk_ms: Histogram,
+    /// Device time per decode step, whole batch (ms).
+    pub decode_step_ms: Histogram,
+    /// Fraction of vision prompt tokens retained by the prefill decision.
+    pub retained_frac_vision: Histogram,
+    /// Fraction of text prompt tokens retained by the prefill decision.
+    pub retained_frac_text: Histogram,
+    /// KV slots evicted per eviction decision (any mechanism).
+    pub evicted_per_decision: Histogram,
+}
+
+/// Single-threaded shared handle (see module docs).
+pub type SharedObs = Rc<RefCell<Obs>>;
+
+impl Obs {
+    pub fn new(enabled: bool) -> Self {
+        Obs {
+            enabled,
+            trace: TraceJournal::new(),
+            prefill_ms: Histogram::latency_ms(),
+            partial_replay_ms: Histogram::latency_ms(),
+            extend_chunk_ms: Histogram::latency_ms(),
+            decode_step_ms: Histogram::latency_ms(),
+            retained_frac_vision: Histogram::unit_fraction(),
+            retained_frac_text: Histogram::unit_fraction(),
+            evicted_per_decision: Histogram::count_scale(),
+        }
+    }
+
+    pub fn shared(enabled: bool) -> SharedObs {
+        Rc::new(RefCell::new(Obs::new(enabled)))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Record one lifecycle event; no-op when tracing is disabled.
+    pub fn event(&mut self, id: u64, ev: TraceEvent) {
+        if self.enabled {
+            self.trace.record(id, ev);
+        }
+    }
+
+    /// Engine-phase histogram summaries for the `phases` block of the JSON
+    /// stats reply (additive — the flat legacy keys are untouched).
+    pub fn phases_json(&self) -> Json {
+        obj(vec![
+            ("prefill_ms", self.prefill_ms.summary_json()),
+            ("partial_replay_ms", self.partial_replay_ms.summary_json()),
+            ("extend_chunk_ms", self.extend_chunk_ms.summary_json()),
+            ("decode_step_ms", self.decode_step_ms.summary_json()),
+            ("retained_frac_vision", self.retained_frac_vision.summary_json()),
+            ("retained_frac_text", self.retained_frac_text.summary_json()),
+            ("evicted_per_decision", self.evicted_per_decision.summary_json()),
+        ])
+    }
+
+    /// Answer `{"kind":"trace","id":N}` / `{"kind":"trace","last":K}`.
+    /// With `id` present, returns that request's retained lifecycle; else
+    /// the newest `last` events journal-wide (default 64).
+    pub fn trace_json(&self, id: Option<u64>, last: Option<usize>) -> Json {
+        let records = match id {
+            Some(rid) => self.trace.for_request(rid),
+            None => self.trace.last(last.unwrap_or(64)),
+        };
+        let events: Vec<Json> = records.iter().map(|r| r.to_json()).collect();
+        let mut pairs = vec![
+            ("kind", Json::Str("trace".into())),
+            ("count", num(events.len() as f64)),
+            ("dropped", num(self.trace.total_recorded().saturating_sub(self.trace.len() as u64) as f64)),
+        ];
+        if let Some(rid) = id {
+            pairs.push(("id", num(rid as f64)));
+        }
+        pairs.push(("events", Json::Arr(events)));
+        obj(pairs)
+    }
+
+    /// Render the engine-phase histograms in Prometheus exposition format
+    /// (the scheduler appends its own registry series).
+    pub fn prometheus_body(&self, out: &mut String) {
+        prometheus::histogram(out, "hae_prefill_ms", "cold prefill device time per request (ms)", &self.prefill_ms);
+        prometheus::histogram(out, "hae_partial_replay_ms", "warm-start suffix recompute device time per request (ms)", &self.partial_replay_ms);
+        prometheus::histogram(out, "hae_extend_chunk_ms", "device time per chunked-extend call (ms)", &self.extend_chunk_ms);
+        prometheus::histogram(out, "hae_decode_step_ms", "device time per decode step (ms)", &self.decode_step_ms);
+        prometheus::histogram(out, "hae_retained_frac_vision", "fraction of vision prompt tokens retained at prefill", &self.retained_frac_vision);
+        prometheus::histogram(out, "hae_retained_frac_text", "fraction of text prompt tokens retained at prefill", &self.retained_frac_text);
+        prometheus::histogram(out, "hae_evicted_slots_per_decision", "KV slots evicted per eviction decision", &self.evicted_per_decision);
+        prometheus::counter(out, "hae_trace_events_total", "lifecycle trace events recorded", self.trace.total_recorded() as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let mut o = Obs::new(false);
+        o.event(1, TraceEvent::Enqueued);
+        o.event(1, TraceEvent::DecodeStep);
+        assert_eq!(o.trace.total_recorded(), 0);
+        o.set_enabled(true);
+        o.event(1, TraceEvent::Enqueued);
+        assert_eq!(o.trace.total_recorded(), 1);
+    }
+
+    #[test]
+    fn trace_json_by_id_and_by_last() {
+        let mut o = Obs::new(true);
+        o.event(1, TraceEvent::Enqueued);
+        o.event(2, TraceEvent::Enqueued);
+        o.event(1, TraceEvent::Retired { reason: RetireReason::Completed });
+        let by_id = o.trace_json(Some(1), None);
+        assert_eq!(by_id.get("count").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(by_id.get("id").and_then(|v| v.as_i64()), Some(1));
+        let ev = by_id.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(ev[0].get("event").and_then(|v| v.as_str()), Some("enqueued"));
+        assert_eq!(ev[1].get("event").and_then(|v| v.as_str()), Some("retired"));
+        let last = o.trace_json(None, Some(2));
+        assert_eq!(last.get("count").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(last.get("dropped").and_then(|v| v.as_i64()), Some(0));
+    }
+
+    #[test]
+    fn phases_json_has_all_histograms() {
+        let mut o = Obs::new(true);
+        o.prefill_ms.record(12.0);
+        let p = o.phases_json();
+        for key in [
+            "prefill_ms",
+            "partial_replay_ms",
+            "extend_chunk_ms",
+            "decode_step_ms",
+            "retained_frac_vision",
+            "retained_frac_text",
+            "evicted_per_decision",
+        ] {
+            assert!(p.get(key).is_some(), "missing {}", key);
+        }
+        assert_eq!(p.path(&["prefill_ms", "count"]).and_then(|v| v.as_i64()), Some(1));
+    }
+
+    #[test]
+    fn prometheus_body_is_valid_exposition() {
+        let mut o = Obs::new(true);
+        o.decode_step_ms.record(0.5);
+        o.evicted_per_decision.record(8.0);
+        let mut out = String::new();
+        o.prometheus_body(&mut out);
+        assert!(prometheus::parses_as_exposition(&out), "{}", out);
+        assert!(out.contains("hae_decode_step_ms_bucket"));
+    }
+}

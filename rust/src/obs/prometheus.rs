@@ -1,0 +1,145 @@
+//! Prometheus text-exposition rendering for counters, gauges and
+//! [`Histogram`]s.
+//!
+//! The server replies to `{"kind":"stats","format":"prometheus"}` with the
+//! rendered registry as a JSON string field (the wire protocol is one JSON
+//! object per line, so the exposition body travels escaped and is unescaped
+//! client-side). Names are stable, `hae_`-prefixed, and follow Prometheus
+//! conventions: counters end in `_total`, histograms expose cumulative
+//! `_bucket{le="..."}` series plus `_sum` and `_count`.
+
+use super::hist::Histogram;
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else if v.is_nan() {
+        "NaN".into()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{}", v)
+    }
+}
+
+/// `# TYPE name counter` + one sample line.
+pub fn counter(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!("# HELP {} {}\n# TYPE {} counter\n{} {}\n", name, help, name, name, fmt_f64(v)));
+}
+
+/// `# TYPE name gauge` + one sample line.
+pub fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!("# HELP {} {}\n# TYPE {} gauge\n{} {}\n", name, help, name, name, fmt_f64(v)));
+}
+
+/// Cumulative-bucket histogram exposition. Only buckets at or below the
+/// first empty tail are elided to keep the payload proportional to the data
+/// actually observed; the mandatory `+Inf` bucket, `_sum` and `_count` are
+/// always present.
+pub fn histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    out.push_str(&format!("# HELP {} {}\n# TYPE {} histogram\n", name, help, name));
+    let mut cum = 0u64;
+    // index of the last non-empty bucket: everything after it renders the
+    // same cumulative count as +Inf, so it can be skipped
+    let last_used = h
+        .counts()
+        .iter()
+        .rposition(|c| *c > 0)
+        .unwrap_or(0);
+    for (i, (edge, c)) in h.edges().iter().zip(h.counts()).enumerate() {
+        cum += c;
+        if i <= last_used {
+            out.push_str(&format!(
+                "{}_bucket{{le=\"{}\"}} {}\n",
+                name,
+                fmt_f64(*edge),
+                cum
+            ));
+        }
+    }
+    out.push_str(&format!("{}_bucket{{le=\"+Inf\"}} {}\n", name, h.count()));
+    out.push_str(&format!("{}_sum {}\n", name, fmt_f64(h.sum())));
+    out.push_str(&format!("{}_count {}\n", name, h.count()));
+}
+
+/// Lightweight validity check used by tests: every non-comment, non-blank
+/// line must be `name{labels} value` or `name value` with a parseable value.
+pub fn parses_as_exposition(body: &str) -> bool {
+    for line in body.lines() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name_part, value_part)) = line.rsplit_once(' ') else {
+            return false;
+        };
+        if name_part.is_empty() {
+            return false;
+        }
+        // metric name: leading identifier, optional {labels} suffix
+        let name_end = name_part.find('{').unwrap_or(name_part.len());
+        let ident = &name_part[..name_end];
+        if ident.is_empty()
+            || !ident
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || ident.chars().next().unwrap().is_ascii_digit()
+        {
+            return false;
+        }
+        if name_end < name_part.len() && !name_part.ends_with('}') {
+            return false;
+        }
+        let ok = value_part.parse::<f64>().is_ok()
+            || matches!(value_part, "+Inf" | "-Inf" | "NaN");
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_series_render_and_validate() {
+        let mut out = String::new();
+        counter(&mut out, "hae_requests_total", "requests submitted", 42.0);
+        gauge(&mut out, "hae_queue_depth", "current queue depth", 3.0);
+        assert!(out.contains("# TYPE hae_requests_total counter"));
+        assert!(out.contains("hae_requests_total 42"));
+        assert!(parses_as_exposition(&out), "{}", out);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut h = Histogram::linear(0.0, 10.0, 10);
+        for v in [1.0, 1.5, 2.5, 9.0] {
+            h.record(v);
+        }
+        let mut out = String::new();
+        histogram(&mut out, "hae_test_ms", "test", &h);
+        assert!(out.contains("hae_test_ms_bucket{le=\"+Inf\"} 4"));
+        assert!(out.contains("hae_test_ms_sum 14"));
+        assert!(out.contains("hae_test_ms_count 4"));
+        // cumulative counts never decrease down the bucket list
+        let mut prev = 0u64;
+        for line in out.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "{}", out);
+            prev = v;
+        }
+        assert!(parses_as_exposition(&out), "{}", out);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(!parses_as_exposition("not a metric line at all..!"));
+        assert!(!parses_as_exposition("name value_not_numeric"));
+        assert!(!parses_as_exposition("1leading_digit 5"));
+        assert!(parses_as_exposition("# just a comment\n"));
+        assert!(parses_as_exposition("a_b{le=\"0.5\"} 3\n"));
+    }
+}

@@ -1,0 +1,289 @@
+//! Request-lifecycle trace journal.
+//!
+//! A fixed-capacity ring of typed, `Copy` events with request id and
+//! monotonic microsecond timestamps. Recording on the hot path is alloc-free:
+//! the backing vector is reserved up front, events carry no heap data, and a
+//! full ring overwrites the oldest record in place. Queries (`for_request`,
+//! `last`) allocate — they run on the stats path, not the decode loop.
+
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Which mechanism evicted KV slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictKind {
+    /// The eviction policy's own decision (HAE scoring).
+    Policy,
+    /// Capacity-wall fallback eviction when a lane hits its slab ceiling.
+    Capacity,
+    /// Emergency aligned tail drop after every gentler option failed.
+    Emergency,
+}
+
+impl EvictKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EvictKind::Policy => "policy",
+            EvictKind::Capacity => "capacity",
+            EvictKind::Emergency => "emergency",
+        }
+    }
+}
+
+/// Why a request left the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetireReason {
+    Completed,
+    Failed,
+    Rejected,
+}
+
+impl RetireReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RetireReason::Completed => "completed",
+            RetireReason::Failed => "failed",
+            RetireReason::Rejected => "rejected",
+        }
+    }
+}
+
+/// One lifecycle event. `Copy` by construction so recording never touches
+/// the allocator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// Request entered the admission queue.
+    Enqueued,
+    /// Admission granted; worst-case page reservation at admit time.
+    Admitted { pages: u32 },
+    /// Engine began prefill (any path: cold, partial, exact hit).
+    PrefillStart,
+    /// Prefill finished and the request holds a lane (or completed).
+    PrefillEnd,
+    /// Warm start adopted shared prefix pages copy-free.
+    PartialAdopt { shared_pages: u32 },
+    /// One chunked-extend device call recomputed `n` suffix tokens.
+    ExtendChunk { n: u32 },
+    /// One decode step advanced this request by one token.
+    DecodeStep,
+    /// KV slots evicted from this request's slab.
+    Evict { kind: EvictKind, slots: u32 },
+    /// Copy-on-write fork materialised `pages` private pages.
+    CowFork { pages: u32 },
+    /// Request left the system.
+    Retired { reason: RetireReason },
+}
+
+impl TraceEvent {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceEvent::Enqueued => "enqueued",
+            TraceEvent::Admitted { .. } => "admitted",
+            TraceEvent::PrefillStart => "prefill_start",
+            TraceEvent::PrefillEnd => "prefill_end",
+            TraceEvent::PartialAdopt { .. } => "partial_adopt",
+            TraceEvent::ExtendChunk { .. } => "extend_chunk",
+            TraceEvent::DecodeStep => "decode_step",
+            TraceEvent::Evict { .. } => "evict",
+            TraceEvent::CowFork { .. } => "cow_fork",
+            TraceEvent::Retired { .. } => "retired",
+        }
+    }
+}
+
+/// A journal entry: request id, microseconds since journal creation, event.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRecord {
+    pub id: u64,
+    pub at_us: u64,
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    /// Wire form: `{"id":N,"at_us":T,"event":"...", ...payload}`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", num(self.id as f64)),
+            ("at_us", num(self.at_us as f64)),
+            ("event", s(self.event.name())),
+        ];
+        match self.event {
+            TraceEvent::Admitted { pages } => pairs.push(("pages", num(pages as f64))),
+            TraceEvent::PartialAdopt { shared_pages } => {
+                pairs.push(("shared_pages", num(shared_pages as f64)))
+            }
+            TraceEvent::ExtendChunk { n } => pairs.push(("n", num(n as f64))),
+            TraceEvent::Evict { kind, slots } => {
+                pairs.push(("policy", s(kind.as_str())));
+                pairs.push(("slots", num(slots as f64)));
+            }
+            TraceEvent::CowFork { pages } => pairs.push(("pages", num(pages as f64))),
+            TraceEvent::Retired { reason } => pairs.push(("reason", s(reason.as_str()))),
+            _ => {}
+        }
+        obj(pairs)
+    }
+}
+
+/// Default journal capacity: ~1.5 MiB of 24-byte records, enough for the
+/// full lifecycle of thousands of requests before wrapping.
+pub const DEFAULT_TRACE_CAP: usize = 65_536;
+
+/// Fixed-capacity ring of [`TraceRecord`]s in insertion (= chronological)
+/// order.
+#[derive(Debug)]
+pub struct TraceJournal {
+    buf: Vec<TraceRecord>,
+    /// Ring bound. `Vec::with_capacity` may over-allocate, so the wrap
+    /// arithmetic uses this stored bound rather than `buf.capacity()`.
+    cap: usize,
+    next: usize,
+    total: u64,
+    epoch: Instant,
+}
+
+impl TraceJournal {
+    pub fn new() -> Self {
+        TraceJournal::with_capacity(DEFAULT_TRACE_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0);
+        TraceJournal {
+            buf: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+            total: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Append one event. Alloc-free: pushes stay within the reserved
+    /// capacity until the ring is full, then overwrite the oldest slot.
+    pub fn record(&mut self, id: u64, event: TraceEvent) {
+        let at_us = self.epoch.elapsed().as_micros() as u64;
+        let rec = TraceRecord { id, at_us, event };
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.next] = rec;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.total += 1;
+    }
+
+    /// Records currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn total_recorded(&self) -> u64 {
+        self.total
+    }
+
+    /// Iterate retained records oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceRecord> {
+        let (tail, head) = if self.buf.len() < self.cap {
+            (&self.buf[..], &self.buf[..0])
+        } else {
+            (&self.buf[self.next..], &self.buf[..self.next])
+        };
+        tail.iter().chain(head.iter())
+    }
+
+    /// All retained events for one request, chronological.
+    pub fn for_request(&self, id: u64) -> Vec<TraceRecord> {
+        self.iter().filter(|r| r.id == id).copied().collect()
+    }
+
+    /// The most recent `k` events, chronological.
+    pub fn last(&self, k: usize) -> Vec<TraceRecord> {
+        let n = self.buf.len();
+        let skip = n.saturating_sub(k);
+        self.iter().skip(skip).copied().collect()
+    }
+}
+
+impl Default for TraceJournal {
+    fn default() -> Self {
+        TraceJournal::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_with_monotonic_timestamps() {
+        let mut j = TraceJournal::with_capacity(64);
+        j.record(1, TraceEvent::Enqueued);
+        j.record(1, TraceEvent::Admitted { pages: 3 });
+        j.record(2, TraceEvent::Enqueued);
+        j.record(1, TraceEvent::PrefillStart);
+        j.record(1, TraceEvent::PrefillEnd);
+        j.record(1, TraceEvent::Retired { reason: RetireReason::Completed });
+
+        let ev = j.for_request(1);
+        assert_eq!(ev.len(), 5);
+        assert_eq!(ev[0].event, TraceEvent::Enqueued);
+        assert_eq!(ev[1].event, TraceEvent::Admitted { pages: 3 });
+        assert_eq!(
+            ev.last().unwrap().event,
+            TraceEvent::Retired { reason: RetireReason::Completed }
+        );
+        assert!(ev.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        assert_eq!(j.for_request(2).len(), 1);
+        assert_eq!(j.for_request(99).len(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let mut j = TraceJournal::with_capacity(8);
+        for i in 0..20u64 {
+            j.record(i, TraceEvent::DecodeStep);
+        }
+        assert_eq!(j.len(), 8);
+        assert_eq!(j.total_recorded(), 20);
+        let ids: Vec<u64> = j.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (12..20).collect::<Vec<_>>(), "oldest overwritten first");
+        assert!(
+            j.iter().collect::<Vec<_>>().windows(2).all(|w| w[0].at_us <= w[1].at_us),
+            "chronological after wrap"
+        );
+        let last3: Vec<u64> = j.last(3).iter().map(|r| r.id).collect();
+        assert_eq!(last3, vec![17, 18, 19]);
+        // capacity never grew: ring stayed at its pre-sized bound
+        assert_eq!(j.capacity(), 8);
+    }
+
+    #[test]
+    fn last_handles_short_journals() {
+        let mut j = TraceJournal::with_capacity(8);
+        j.record(7, TraceEvent::Enqueued);
+        assert_eq!(j.last(100).len(), 1);
+        assert_eq!(j.last(0).len(), 0);
+    }
+
+    #[test]
+    fn json_wire_form_carries_payload() {
+        let mut j = TraceJournal::with_capacity(8);
+        j.record(5, TraceEvent::Evict { kind: EvictKind::Emergency, slots: 16 });
+        let rec = j.last(1)[0];
+        let json = rec.to_json();
+        assert_eq!(json.get("id").and_then(|v| v.as_i64()), Some(5));
+        assert_eq!(json.get("event").and_then(|v| v.as_str()), Some("evict"));
+        assert_eq!(json.get("policy").and_then(|v| v.as_str()), Some("emergency"));
+        assert_eq!(json.get("slots").and_then(|v| v.as_i64()), Some(16));
+    }
+}

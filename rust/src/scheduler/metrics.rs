@@ -1,44 +1,24 @@
 //! Serving metrics registry, exposed over the wire via the
-//! `{"kind": "stats"}` server request.
+//! `{"kind": "stats"}` server request (JSON snapshot or Prometheus text
+//! exposition with `"format": "prometheus"`).
 //!
 //! Counters (submissions, completions, rejections), gauges (queue depth,
-//! live KV bytes, page-pool occupancy) and small fixed-memory latency
-//! reservoirs (TTFT and end-to-end, ring-buffered so a long-lived server
-//! never grows). The lanes-occupied histogram is the direct evidence of
-//! continuous batching: `lanes_hist[k]` counts decode steps that ran
-//! with exactly `k` live lanes. The pool gauges (live/free pages,
-//! fragmentation, reuse) are the paged-arena counterpart: they show
-//! eviction turning into free pages, and free pages turning into
-//! admissions (`chunked_admits`).
+//! live KV bytes, page-pool occupancy) and fixed-bucket log-scale latency
+//! histograms (queue wait, TTFT and end-to-end). The histograms replaced a
+//! raw-sample ring that silently dropped the oldest samples — a long-run
+//! p99 computed from survivors is wrong exactly when tails matter; a
+//! histogram keeps every observation in bounded memory (see `obs::hist`).
+//! The lanes-occupied histogram is the direct evidence of continuous
+//! batching: `lanes_hist[k]` counts decode steps that ran with exactly
+//! `k` live lanes. The pool gauges (live/free pages, fragmentation,
+//! reuse) are the paged-arena counterpart: they show eviction turning
+//! into free pages, and free pages turning into admissions
+//! (`chunked_admits`).
 
 use crate::cache::PoolStats;
+use crate::obs::{prometheus, Histogram};
 use crate::prefix::PrefixStats;
 use crate::util::json::{num, obj, s, Json};
-use crate::util::stats::percentile;
-
-const RING_CAP: usize = 4096;
-
-/// Fixed-capacity latency reservoir (keeps the most recent samples).
-#[derive(Debug, Clone, Default)]
-struct Ring {
-    buf: Vec<f64>,
-    next: usize,
-}
-
-impl Ring {
-    fn push(&mut self, v: f64) {
-        if self.buf.len() < RING_CAP {
-            self.buf.push(v);
-        } else {
-            self.buf[self.next] = v;
-            self.next = (self.next + 1) % RING_CAP;
-        }
-    }
-
-    fn p(&self, q: f64) -> f64 {
-        percentile(&self.buf, q)
-    }
-}
 
 #[derive(Debug, Clone)]
 pub struct MetricsRegistry {
@@ -118,8 +98,12 @@ pub struct MetricsRegistry {
     /// Σ suffix at --extend-chunk 1 (the one-token decode loop)
     pub extend_calls: u64,
     lanes_hist: Vec<u64>,
-    ttft_ms: Ring,
-    e2e_ms: Ring,
+    /// enqueue → admission (scheduler clock)
+    queue_wait_ms: Histogram,
+    /// enqueue → prefill done (first token exists)
+    ttft_ms: Histogram,
+    /// enqueue → retirement
+    e2e_ms: Histogram,
 }
 
 impl MetricsRegistry {
@@ -161,8 +145,9 @@ impl MetricsRegistry {
             prefill_tokens_skipped: 0,
             extend_calls: 0,
             lanes_hist: vec![0; batch + 1],
-            ttft_ms: Ring::default(),
-            e2e_ms: Ring::default(),
+            queue_wait_ms: Histogram::latency_ms(),
+            ttft_ms: Histogram::latency_ms(),
+            e2e_ms: Histogram::latency_ms(),
         }
     }
 
@@ -231,14 +216,20 @@ impl MetricsRegistry {
         self.peak_queue_depth = self.peak_queue_depth.max(depth);
     }
 
+    /// Queue wait: enqueue → the moment admission hands the request to
+    /// the engine.
+    pub fn record_queue_wait(&mut self, seconds: f64) {
+        self.queue_wait_ms.record(seconds * 1000.0);
+    }
+
     /// Time-to-first-token: enqueue → prefill done (the first token
     /// exists as soon as prefill logits are sampled).
     pub fn record_ttft(&mut self, seconds: f64) {
-        self.ttft_ms.push(seconds * 1000.0);
+        self.ttft_ms.record(seconds * 1000.0);
     }
 
     pub fn record_e2e(&mut self, seconds: f64) {
-        self.e2e_ms.push(seconds * 1000.0);
+        self.e2e_ms.record(seconds * 1000.0);
     }
 
     /// Widest batch any decode step actually ran at.
@@ -298,11 +289,68 @@ impl MetricsRegistry {
             ("prefix_lru_evictions", num(self.prefix_lru_evictions as f64)),
             ("prefill_tokens_skipped", num(self.prefill_tokens_skipped as f64)),
             ("extend_calls", num(self.extend_calls as f64)),
-            ("ttft_p50_ms", num(self.ttft_ms.p(0.5))),
-            ("ttft_p95_ms", num(self.ttft_ms.p(0.95))),
-            ("e2e_p50_ms", num(self.e2e_ms.p(0.5))),
-            ("e2e_p95_ms", num(self.e2e_ms.p(0.95))),
+            ("ttft_p50_ms", num(self.ttft_ms.percentile(0.5))),
+            ("ttft_p95_ms", num(self.ttft_ms.percentile(0.95))),
+            ("e2e_p50_ms", num(self.e2e_ms.percentile(0.5))),
+            ("e2e_p95_ms", num(self.e2e_ms.percentile(0.95))),
+            // additive keys (the block above is schema-frozen — see
+            // `snapshot_keys_are_stable`); whole-run tails the old sample
+            // ring could not provide, plus the queue-wait phase
+            ("ttft_p99_ms", num(self.ttft_ms.percentile(0.99))),
+            ("e2e_p99_ms", num(self.e2e_ms.percentile(0.99))),
+            ("queue_wait_p50_ms", num(self.queue_wait_ms.percentile(0.5))),
+            ("queue_wait_p95_ms", num(self.queue_wait_ms.percentile(0.95))),
+            ("queue_wait_p99_ms", num(self.queue_wait_ms.percentile(0.99))),
         ])
+    }
+
+    /// Render every counter, gauge and latency histogram in Prometheus
+    /// text exposition format. Engine-phase histograms are appended by the
+    /// caller (`Scheduler::stats_prometheus`) from the shared `Obs`.
+    pub fn prometheus_into(&self, out: &mut String, queue_depth: usize, lanes_occupied: usize) {
+        use prometheus::{counter, gauge, histogram};
+        gauge(out, "hae_queue_depth", "requests waiting for admission", queue_depth as f64);
+        gauge(out, "hae_peak_queue_depth", "deepest queue observed", self.peak_queue_depth as f64);
+        gauge(out, "hae_lanes_occupied", "decode lanes currently live", lanes_occupied as f64);
+        gauge(out, "hae_max_lanes_step", "widest batch any decode step ran at", self.max_lanes_step() as f64);
+        counter(out, "hae_requests_submitted_total", "requests submitted", self.submitted as f64);
+        counter(out, "hae_requests_completed_total", "requests completed", self.completed as f64);
+        counter(out, "hae_requests_failed_total", "requests failed in the engine", self.failed as f64);
+        counter(out, "hae_rejected_queue_full_total", "rejections: queue full", self.rejected_queue_full as f64);
+        counter(out, "hae_rejected_kv_budget_total", "rejections: cannot fit KV budget alone", self.rejected_kv_budget as f64);
+        counter(out, "hae_decode_steps_total", "decode steps executed", self.decode_steps as f64);
+        gauge(out, "hae_kv_budget_bytes", "aggregate KV budget", self.kv_budget as f64);
+        gauge(out, "hae_live_kv_bytes", "live KV bytes at last step", self.live_kv_bytes as f64);
+        gauge(out, "hae_peak_live_kv_bytes", "max live KV bytes observed", self.peak_live_kv_bytes as f64);
+        gauge(out, "hae_pool_pages", "total arena pages", self.pool_pages as f64);
+        gauge(out, "hae_page_slots", "token slots per page", self.page_slots as f64);
+        gauge(out, "hae_live_pages", "pages held by live lanes", self.live_pages as f64);
+        gauge(out, "hae_peak_live_pages", "max pages held at once", self.peak_live_pages as f64);
+        gauge(out, "hae_free_pages", "free arena pages", self.free_pages as f64);
+        counter(out, "hae_page_allocs_total", "lifetime page allocations", self.page_allocs as f64);
+        counter(out, "hae_page_frees_total", "lifetime page frees", self.page_frees as f64);
+        counter(out, "hae_page_reuse_total", "recycled page allocations", self.page_reuse as f64);
+        gauge(out, "hae_frag_slots", "allocated-but-dead slots (tail fragmentation)", self.frag_slots as f64);
+        gauge(out, "hae_reserved_pages", "pages pinned by chunked-prefill reservations", self.reserved_pages as f64);
+        counter(out, "hae_chunk_reserved_pages_total", "pages ever granted to chunked reservations", self.chunk_reserved_pages as f64);
+        counter(out, "hae_chunked_admits_total", "admissions via chunked prefill", self.chunked_admits as f64);
+        counter(out, "hae_pages_copied_total", "arena pages gathered into batch buffers", self.pages_copied as f64);
+        counter(out, "hae_cow_forks_total", "copy-on-write page forks", self.cow_forks as f64);
+        counter(out, "hae_cow_fork_deferrals_total", "policy evictions deferred by fork pressure", self.cow_fork_deferrals as f64);
+        counter(out, "hae_emergency_tail_drops_total", "capacity emergencies resolved by aligned tail drop", self.emergency_tail_drops as f64);
+        counter(out, "hae_refcount_errors_total", "refcount violations refused by the pool", self.refcount_errors as f64);
+        counter(out, "hae_prefix_hits_total", "exact warm admissions", self.prefix_hits as f64);
+        counter(out, "hae_prefix_partial_hits_total", "partial-prefix warm admissions", self.prefix_partial_hits as f64);
+        counter(out, "hae_prefix_misses_total", "cold prefills that consulted the cache", self.prefix_misses as f64);
+        gauge(out, "hae_prefix_hit_rate", "warm fraction of cache-consulting admissions", self.prefix_hit_rate());
+        gauge(out, "hae_prefix_entries", "live prefix-cache entries", self.prefix_entries as f64);
+        gauge(out, "hae_pages_shared", "distinct pages charged once against the budget", self.pages_shared as f64);
+        counter(out, "hae_prefix_lru_evictions_total", "prefix entries LRU-evicted", self.prefix_lru_evictions as f64);
+        counter(out, "hae_prefill_tokens_skipped_total", "prompt tokens never recomputed", self.prefill_tokens_skipped as f64);
+        counter(out, "hae_extend_calls_total", "suffix-recompute device calls", self.extend_calls as f64);
+        histogram(out, "hae_queue_wait_ms", "enqueue to admission (ms)", &self.queue_wait_ms);
+        histogram(out, "hae_ttft_ms", "enqueue to first token (ms)", &self.ttft_ms);
+        histogram(out, "hae_e2e_ms", "enqueue to retirement (ms)", &self.e2e_ms);
     }
 }
 
@@ -429,13 +477,69 @@ mod tests {
     }
 
     #[test]
-    fn ring_stays_bounded() {
-        let mut r = Ring::default();
-        for i in 0..(RING_CAP + 100) {
-            r.push(i as f64);
+    fn latency_tails_cover_the_whole_run() {
+        // the old sample ring dropped the first samples of a long run;
+        // the histogram must keep every one: record far more samples than
+        // the old ring capacity (4096) with the slow tail *early*, then
+        // check the tail is still visible
+        let mut m = MetricsRegistry::new(2, 4096, 8, 16);
+        for _ in 0..100 {
+            m.record_e2e(5.0); // 5s outliers, all in the first 100 samples
         }
-        assert_eq!(r.buf.len(), RING_CAP);
-        // the oldest samples were overwritten
-        assert!(r.p(0.0) >= 100.0);
+        for _ in 0..20_000 {
+            m.record_e2e(0.010);
+        }
+        let j = m.snapshot(0, 0);
+        let p99 = j.get("e2e_p99_ms").and_then(|v| v.as_f64()).unwrap();
+        let p995 = m.e2e_ms.percentile(0.9995);
+        assert!(p99 < 100.0, "bulk at 10ms dominates p99: {}", p99);
+        assert!(p995 > 1000.0, "early 5s outliers still visible at p99.95: {}", p995);
+        assert_eq!(m.e2e_ms.count(), 20_100, "no sample dropped");
+    }
+
+    #[test]
+    fn snapshot_keys_are_stable() {
+        // wire-compatibility contract: every key below existed before the
+        // histogram refactor and must keep existing — external scrapers
+        // depend on them. New keys may be added; these may not vanish.
+        let m = MetricsRegistry::new(2, 4096, 8, 16);
+        let j = m.snapshot(0, 0);
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        const FROZEN: &[&str] = &[
+            "kind", "queue_depth", "peak_queue_depth", "lanes_occupied",
+            "max_lanes_step", "lanes_hist", "submitted", "completed",
+            "failed", "rejected_queue_full", "rejected_kv_budget",
+            "decode_steps", "kv_budget", "live_kv_bytes",
+            "peak_live_kv_bytes", "pool_pages", "page_slots", "live_pages",
+            "peak_live_pages", "free_pages", "page_allocs", "page_frees",
+            "page_reuse", "frag_slots", "reserved_pages",
+            "chunk_reserved_pages", "chunked_admits", "pages_copied",
+            "cow_forks", "cow_fork_deferrals", "emergency_tail_drops",
+            "refcount_errors", "prefix_hits", "prefix_partial_hits",
+            "prefix_misses", "prefix_hit_rate", "prefix_entries",
+            "pages_shared", "prefix_lru_evictions",
+            "prefill_tokens_skipped", "extend_calls", "ttft_p50_ms",
+            "ttft_p95_ms", "e2e_p50_ms", "e2e_p95_ms",
+        ];
+        for key in FROZEN {
+            assert!(parsed.get(key).is_some(), "snapshot lost frozen key '{}'", key);
+        }
+        assert_eq!(parsed.get("kind").and_then(|v| v.as_str()), Some("stats"));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_valid_exposition() {
+        let mut m = MetricsRegistry::new(2, 4096, 8, 16);
+        m.submitted = 3;
+        m.record_queue_wait(0.002);
+        m.record_ttft(0.010);
+        m.record_e2e(0.100);
+        let mut out = String::new();
+        m.prometheus_into(&mut out, 1, 2);
+        assert!(prometheus::parses_as_exposition(&out), "{}", out);
+        assert!(out.contains("# TYPE hae_requests_submitted_total counter"));
+        assert!(out.contains("hae_queue_depth 1"));
+        assert!(out.contains("hae_ttft_ms_bucket"));
+        assert!(out.contains("hae_e2e_ms_count 1"));
     }
 }

@@ -64,6 +64,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::{ActiveRequest, Engine, StepReport};
+use crate::obs::{Obs, RetireReason, SharedObs, TraceEvent};
 use crate::util::json::Json;
 use crate::workload::Request;
 
@@ -139,6 +140,9 @@ pub struct Scheduler<T> {
     /// backfill already finished
     ready: Vec<SchedOutcome<T>>,
     pub metrics: MetricsRegistry,
+    /// shared with the engine (`for_engine`) so the scheduler's lifecycle
+    /// events and the engine's phase events land in one journal
+    pub obs: SharedObs,
     tick_no: u64,
 }
 
@@ -170,21 +174,25 @@ impl<T> Scheduler<T> {
             pending: None,
             ready: Vec::new(),
             metrics,
+            obs: Obs::shared(true),
             tick_no: 0,
         }
     }
 
     /// Derive lane count, arena geometry and admission constants from a
-    /// built engine.
+    /// built engine, and adopt its observability handle so scheduler and
+    /// engine events interleave in one trace journal.
     pub fn for_engine(cfg: SchedulerConfig, engine: &Engine) -> Self {
-        Self::new(
+        let mut sc = Self::new(
             cfg,
             engine.cfg.batch,
             engine.rt.meta().kv_bytes_per_token(),
             engine.capacity_limit(),
             engine.page_slots(),
             engine.pool_pages(),
-        )
+        );
+        sc.obs = engine.obs();
+        sc
     }
 
     pub fn queue_len(&self) -> usize {
@@ -203,7 +211,30 @@ impl<T> Scheduler<T> {
     }
 
     pub fn stats_json(&self) -> Json {
-        self.metrics.snapshot(self.queue.len(), self.lanes_occupied())
+        let mut snap = self.metrics.snapshot(self.queue.len(), self.lanes_occupied());
+        if let Json::Obj(map) = &mut snap {
+            // additive nested block: engine-phase histogram summaries.
+            // The flat legacy keys above it are frozen (snapshot test in
+            // metrics.rs) — existing dashboards keep parsing unchanged.
+            map.insert("phases".to_string(), self.obs.borrow().phases_json());
+        }
+        snap
+    }
+
+    /// Answer `{"kind":"trace", ...}`: a request's lifecycle by `id`, or
+    /// the newest `last` events journal-wide.
+    pub fn trace_json(&self, id: Option<u64>, last: Option<usize>) -> Json {
+        self.obs.borrow().trace_json(id, last)
+    }
+
+    /// Full Prometheus exposition body: scheduler registry series followed
+    /// by the engine-phase histograms.
+    pub fn stats_prometheus(&self) -> String {
+        let mut out = String::new();
+        self.metrics
+            .prometheus_into(&mut out, self.queue.len(), self.lanes_occupied());
+        self.obs.borrow().prometheus_body(&mut out);
+        out
     }
 
     /// Enqueue a request. `Err` hands the tag back with the reject reason
@@ -211,8 +242,13 @@ impl<T> Scheduler<T> {
     /// blocking) keeps the engine thread responsive under overload.
     pub fn submit(&mut self, tag: T, req: Request) -> Result<(), (T, RejectReason)> {
         self.metrics.submitted += 1;
+        let rid = req.id;
+        self.obs.borrow_mut().event(rid, TraceEvent::Enqueued);
         if !self.admission.fits_alone(&req) {
             self.metrics.rejected_kv_budget += 1;
+            self.obs
+                .borrow_mut()
+                .event(rid, TraceEvent::Retired { reason: RetireReason::Rejected });
             return Err((tag, RejectReason::KvBudget));
         }
         match self.queue.push(tag, req, self.tick_no) {
@@ -222,6 +258,9 @@ impl<T> Scheduler<T> {
             }
             Err(tag) => {
                 self.metrics.rejected_queue_full += 1;
+                self.obs
+                    .borrow_mut()
+                    .event(rid, TraceEvent::Retired { reason: RetireReason::Rejected });
                 Err((tag, RejectReason::QueueFull))
             }
         }
@@ -240,13 +279,22 @@ impl<T> Scheduler<T> {
     /// into the outcome buffer when it finishes at prefill, or fails).
     fn admit_job(&mut self, engine: &mut Engine, lane: usize, job: QueuedJob<T>) {
         let QueuedJob { tag, req, enqueued_at, .. } = job;
+        let rid = req.id;
+        let waited = enqueued_at.elapsed().as_secs_f64();
+        self.metrics.record_queue_wait(waited);
+        let pages = self.admission.worst_case_pages(&req) as u32;
+        self.obs.borrow_mut().event(rid, TraceEvent::Admitted { pages });
         match engine.prefill(req) {
             Ok(mut ar) => {
+                ar.stats.queue_s = waited;
                 self.metrics.record_ttft(enqueued_at.elapsed().as_secs_f64());
                 if ar.done {
                     ar.slab.release_pages();
                     self.metrics.completed += 1;
                     self.metrics.record_e2e(enqueued_at.elapsed().as_secs_f64());
+                    self.obs
+                        .borrow_mut()
+                        .event(rid, TraceEvent::Retired { reason: RetireReason::Completed });
                     self.ready.push(SchedOutcome::Done { tag, ar: Box::new(ar) });
                 } else {
                     self.lanes[lane] = Some(ar);
@@ -256,6 +304,9 @@ impl<T> Scheduler<T> {
             Err(e) => {
                 // e.g. prompt exceeds the largest prefill bucket
                 self.metrics.failed += 1;
+                self.obs
+                    .borrow_mut()
+                    .event(rid, TraceEvent::Retired { reason: RetireReason::Failed });
                 self.ready.push(SchedOutcome::Failed { tag, error: e.to_string() });
             }
         }
@@ -445,6 +496,9 @@ impl<T> Scheduler<T> {
             let lt = self.tags[idx].take().expect("finished lane carries a tag");
             self.metrics.completed += 1;
             self.metrics.record_e2e(lt.enqueued_at.elapsed().as_secs_f64());
+            self.obs
+                .borrow_mut()
+                .event(ar.req.id, TraceEvent::Retired { reason: RetireReason::Completed });
             self.ready.push(SchedOutcome::Done { tag: lt.tag, ar: Box::new(ar) });
         }
         Ok(report)
@@ -549,6 +603,52 @@ mod tests {
         let tags = sc.drain_tags();
         assert_eq!(tags, vec![7, 9]);
         assert!(!sc.has_work());
+    }
+
+    #[test]
+    fn submit_and_reject_trace_lifecycle_events() {
+        let mut sc = sched(8, 1);
+        let mut ok = req(4, 4);
+        ok.id = 11;
+        sc.submit(1, ok).unwrap();
+        let mut oversized = req(8, 8);
+        oversized.id = 12;
+        assert!(sc.submit(2, oversized).is_err(), "kv-budget reject");
+        let mut overflow = req(2, 2);
+        overflow.id = 13;
+        assert!(sc.submit(3, overflow).is_err(), "queue-full reject");
+
+        let o = sc.obs.borrow();
+        // admitted-to-queue request: Enqueued only (no engine ran)
+        let ev11 = o.trace.for_request(11);
+        assert_eq!(ev11.len(), 1);
+        assert!(matches!(ev11[0].event, TraceEvent::Enqueued));
+        // both reject paths: Enqueued then Retired{Rejected}
+        for rid in [12u64, 13] {
+            let ev = o.trace.for_request(rid);
+            assert_eq!(ev.len(), 2, "request {}", rid);
+            assert!(matches!(ev[0].event, TraceEvent::Enqueued));
+            assert!(matches!(
+                ev[1].event,
+                TraceEvent::Retired { reason: RetireReason::Rejected }
+            ));
+            assert!(ev[0].at_us <= ev[1].at_us, "timestamps monotone per request");
+        }
+        drop(o);
+
+        // the stats snapshot gains the additive `phases` block without
+        // disturbing the frozen flat keys
+        let snap = sc.stats_json();
+        assert!(snap.get("phases").is_some());
+        assert!(snap.get("submitted").is_some());
+        // trace query over the wire shape
+        let tr = sc.trace_json(Some(12), None);
+        assert_eq!(tr.get("count").and_then(|v| v.as_i64()), Some(2));
+        // prometheus body covers registry + engine-phase series
+        let body = sc.stats_prometheus();
+        assert!(crate::obs::prometheus::parses_as_exposition(&body), "{}", body);
+        assert!(body.contains("hae_requests_submitted_total"));
+        assert!(body.contains("hae_prefill_ms_bucket"));
     }
 
     #[test]

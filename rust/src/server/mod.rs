@@ -23,10 +23,24 @@
 //!             recomputed, with the pruning decision re-run per request)
 //!   stats:    {"kind": "stats"} → scheduler metrics snapshot
 //!             (queue depth, TTFT/e2e percentiles, lanes histogram,
-//!              admission rejections, aggregate KV bytes)
+//!              admission rejections, aggregate KV bytes, plus a nested
+//!              "phases" block of per-phase histogram summaries)
+//!   prometheus: {"kind": "stats", "format": "prometheus"} →
+//!             {"kind":"stats","format":"prometheus","body":"..."} where
+//!             body is the full metric set in Prometheus text exposition
+//!             format (scrapers unwrap the one JSON field)
+//!   trace:    {"kind": "trace", "id": N} → request N's retained
+//!             lifecycle events; {"kind": "trace", "last": K} → the
+//!             newest K events journal-wide (default 64). Reply:
+//!             {"kind":"trace","count":N,"dropped":N,"events":[
+//!               {"id":N,"at_us":T,"event":"enqueued"|...}, ...]}
 //!   response: {"id": 1, "tokens": [...], "text": "...",
-//!              "prefill_ms": ..., "decode_ms": ..., "steps": N,
+//!              "queue_ms": ..., "prefill_ms": ..., "extend_ms": ...,
+//!              "extend_calls": N, "decode_ms": ..., "steps": N,
 //!              "pruned": N, "evicted": N, "peak_kv_kib": N}
+//!            (a warm prefix hit keeps the established prefill_ms == 0
+//!             semantics; extend_ms/extend_calls expose the partial
+//!             warm-start suffix recompute instead)
 //!   error:    {"id": 1, "error": "..."} (id echoed whenever the request
 //!             line carried one)
 //!
@@ -133,6 +147,11 @@ fn synthesize(
         req.max_new_tokens = mx;
         req.min_new_tokens = req.min_new_tokens.min(mx);
     }
+    // carry the wire id into the engine so trace-journal events are
+    // queryable by the id the client knows (builders assign synthetic ids)
+    if id >= 0 {
+        req.id = id as u64;
+    }
     Ok((id, req))
 }
 
@@ -145,7 +164,10 @@ fn respond(id: i64, ar: &crate::coordinator::ActiveRequest) -> String {
             Json::Arr(ar.generated.iter().map(|&t| num(t as f64)).collect()),
         ),
         ("text", s(&text.join(" "))),
+        ("queue_ms", num(ar.stats.queue_s * 1000.0)),
         ("prefill_ms", num(ar.stats.prefill_s * 1000.0)),
+        ("extend_ms", num(ar.stats.extend_s * 1000.0)),
+        ("extend_calls", num(ar.stats.extend_calls as f64)),
         ("decode_ms", num(ar.stats.decode_s * 1000.0)),
         ("steps", num(ar.stats.steps as f64)),
         ("pruned", num(ar.stats.pruned_at_prefill as f64)),
@@ -192,9 +214,32 @@ fn ingest(
         }
     };
     let id = parsed.get("id").and_then(|v| v.as_i64());
-    if parsed.get("kind").and_then(|v| v.as_str()) == Some("stats") {
-        let _ = job.reply.send(sched.stats_json().to_string_compact());
-        return Ingest::Continue;
+    match parsed.get("kind").and_then(|v| v.as_str()) {
+        Some("stats") => {
+            let reply = if parsed.get("format").and_then(|v| v.as_str())
+                == Some("prometheus")
+            {
+                // the exposition text travels as one JSON string field so
+                // the line protocol stays one-object-per-line
+                obj(vec![
+                    ("kind", s("stats")),
+                    ("format", s("prometheus")),
+                    ("body", s(&sched.stats_prometheus())),
+                ])
+                .to_string_compact()
+            } else {
+                sched.stats_json().to_string_compact()
+            };
+            let _ = job.reply.send(reply);
+            return Ingest::Continue;
+        }
+        Some("trace") => {
+            let rid = parsed.get("id").and_then(|v| v.as_i64()).map(|i| i as u64);
+            let last = parsed.get("last").and_then(|v| v.as_usize());
+            let _ = job.reply.send(sched.trace_json(rid, last).to_string_compact());
+            return Ingest::Continue;
+        }
+        _ => {}
     }
     match synthesize(&parsed, meta, grammar, builder) {
         Ok((id, req)) => {
@@ -529,6 +574,109 @@ mod tests {
         let (_, u1) = synthesize(&unseeded, &m, &g, &mut b1).unwrap();
         let (_, u2) = synthesize(&unseeded, &m, &g, &mut b2).unwrap();
         assert_ne!(u1.ids, u2.ids);
+    }
+
+    fn test_sched() -> Scheduler<JobTag> {
+        // runtime-free: geometry matching the scheduler's own unit tests
+        Scheduler::new(SchedulerConfig::default(), 4, 64, 100, 1, 1024)
+    }
+
+    fn ingest_line(line: &str, sched: &mut Scheduler<JobTag>) -> String {
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 5);
+        let (rtx, rrx) = mpsc::channel::<String>();
+        let out = ingest(Job { line: line.into(), reply: rtx }, &m, &g, &mut b, sched);
+        assert!(out == Ingest::Continue);
+        rrx.recv().expect("control requests reply inline")
+    }
+
+    #[test]
+    fn stats_reply_keeps_flat_keys_and_adds_phases() {
+        let mut sc = test_sched();
+        let j = Json::parse(&ingest_line(r#"{"kind": "stats"}"#, &mut sc)).unwrap();
+        for key in ["kind", "queue_depth", "submitted", "ttft_p50_ms", "e2e_p95_ms"] {
+            assert!(j.get(key).is_some(), "missing {}", key);
+        }
+        assert!(j.path(&["phases", "prefill_ms", "count"]).is_some());
+    }
+
+    #[test]
+    fn prometheus_stats_reply_wraps_valid_exposition() {
+        let mut sc = test_sched();
+        let line = r#"{"kind": "stats", "format": "prometheus"}"#;
+        let j = Json::parse(&ingest_line(line, &mut sc)).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("stats"));
+        assert_eq!(j.get("format").and_then(|v| v.as_str()), Some("prometheus"));
+        let body = j.get("body").and_then(|v| v.as_str()).unwrap();
+        assert!(crate::obs::prometheus::parses_as_exposition(body), "{}", body);
+        assert!(body.contains("hae_requests_submitted_total"));
+        assert!(body.contains("hae_ttft_ms_bucket"));
+    }
+
+    #[test]
+    fn trace_reply_carries_lifecycle_events() {
+        let mut sc = test_sched();
+        // queue a request through the real ingest path (never admitted —
+        // no engine runs in this test — so only Enqueued is journaled)
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 5);
+        let (rtx, _rrx) = mpsc::channel::<String>();
+        let line = r#"{"id": 42, "kind": "qa", "max_new": 4}"#.to_string();
+        assert!(ingest(Job { line, reply: rtx }, &m, &g, &mut b, &mut sc) == Ingest::Continue);
+
+        let j = Json::parse(&ingest_line(r#"{"kind": "trace", "id": 42}"#, &mut sc)).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("trace"));
+        assert_eq!(j.get("count").and_then(|v| v.as_i64()), Some(1));
+        let ev = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(ev[0].get("id").and_then(|v| v.as_i64()), Some(42));
+        assert_eq!(ev[0].get("event").and_then(|v| v.as_str()), Some("enqueued"));
+        // journal-wide query sees it too
+        let j = Json::parse(&ingest_line(r#"{"kind": "trace", "last": 8}"#, &mut sc)).unwrap();
+        assert_eq!(j.get("count").and_then(|v| v.as_i64()), Some(1));
+    }
+
+    #[test]
+    fn respond_includes_phase_timing_fields() {
+        // a respond() line must carry the new per-request phase fields
+        // with warm-hit semantics (prefill_ms 0, extend_* populated)
+        use crate::cache::baselines::FullCache;
+        use crate::cache::KvSlab;
+        use crate::coordinator::ActiveRequest;
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 5);
+        let (_, req) = synthesize(
+            &parse(r#"{"id": 9, "kind": "qa", "max_new": 4}"#),
+            &m,
+            &g,
+            &mut b,
+        )
+        .unwrap();
+        let mut ar = ActiveRequest {
+            req,
+            slab: KvSlab::new(&m, 64),
+            policy: Box::new(FullCache),
+            generated: vec![3, 4],
+            pos: 2,
+            prefill_len: 2,
+            pending_token: 4,
+            done: true,
+            forced: None,
+            logits_trace: Vec::new(),
+            score_trace: Vec::new(),
+            evictions: Vec::new(),
+            stats: Default::default(),
+        };
+        ar.stats.queue_s = 0.002;
+        ar.stats.extend_s = 0.005;
+        ar.stats.extend_calls = 2;
+        let j = Json::parse(&respond(9, &ar)).unwrap();
+        assert_eq!(j.get("prefill_ms").and_then(|v| v.as_f64()), Some(0.0));
+        assert!((j.get("queue_ms").and_then(|v| v.as_f64()).unwrap() - 2.0).abs() < 1e-9);
+        assert!((j.get("extend_ms").and_then(|v| v.as_f64()).unwrap() - 5.0).abs() < 1e-9);
+        assert_eq!(j.get("extend_calls").and_then(|v| v.as_i64()), Some(2));
     }
 
     #[test]

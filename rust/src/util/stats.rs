@@ -43,6 +43,33 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Several quantiles of the same sample set, sorting **once**.
+///
+/// `percentile` clones and sorts per call — fine for a single quantile,
+/// quadratic waste when a caller wants p50/p95/p99 of the same vector
+/// (the old stats-snapshot path re-sorted thousands of latency samples
+/// for every quantile of every query). Same NaN semantics as
+/// `percentile`: `total_cmp` ordering, empty input yields 0.0.
+pub fn percentiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; qs.len()];
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    qs.iter()
+        .map(|p| {
+            let rank = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                v[lo]
+            } else {
+                v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+            }
+        })
+        .collect()
+}
+
 /// Indices of the k smallest values (ties broken by lower index).
 /// NaN-safe: `total_cmp` ranks NaNs above every real value, so they are
 /// the last candidates rather than a panic.
@@ -135,11 +162,38 @@ mod tests {
     }
 
     #[test]
-    fn percentiles() {
+    fn percentile_interpolates() {
         let xs = [5.0, 1.0, 3.0];
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 5.0);
         assert_eq!(percentile(&xs, 0.5), 3.0);
+    }
+
+    #[test]
+    fn percentiles_match_single_calls_with_one_sort() {
+        let xs = [9.0, 2.0, 7.0, 4.0, 1.0, 8.0];
+        let qs = [0.0, 0.25, 0.5, 0.95, 1.0];
+        let batch = percentiles(&xs, &qs);
+        for (q, got) in qs.iter().zip(&batch) {
+            assert_eq!(*got, percentile(&xs, *q), "q={}", q);
+        }
+    }
+
+    #[test]
+    fn percentile_empty_and_nan_regression() {
+        // empty input: 0.0, never a panic or NaN
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentiles(&[], &[0.5, 0.99]), vec![0.0, 0.0]);
+        // all-NaN input: total_cmp keeps the sort well-defined; the result
+        // is NaN (faithful) but must not panic
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 0.5).is_nan());
+        // mixed: NaNs sort above +inf, reals keep their order statistics
+        let mixed = [2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(percentile(&mixed, 0.0), 1.0);
+        let ps = percentiles(&mixed, &[0.0, 1.0]);
+        assert_eq!(ps[0], 1.0);
+        assert!(ps[1].is_nan(), "NaN is the top order statistic");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use hae_serve::harness::{
     widest_batch,
 };
 use hae_serve::model::Manifest;
+use hae_serve::obs::{RetireReason, TraceEvent};
 use hae_serve::runtime::Runtime;
 use hae_serve::scheduler::{
     AdmissionController, SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig,
@@ -762,6 +763,121 @@ fn chunked_extend_matches_cold_at_every_chunk_size() {
         );
         assert_eq!(warm.pool_stats().refcount_errors, 0);
     }
+}
+
+/// Request-lifecycle tracing end to end: every request served through
+/// the scheduler leaves a complete, ordered lifecycle in the shared
+/// trace journal (Enqueued → Admitted → PrefillStart → … → Retired with
+/// monotone timestamps), warm dialog turns journal their PartialAdopt
+/// and ExtendChunk events between the prefill markers, and the
+/// ExtendChunk event count reconciles exactly with the extend-call
+/// metric the stats snapshot reports.
+#[test]
+fn trace_journal_records_complete_lifecycles() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load(&artifact_dir()).unwrap();
+    let meta = manifest.model.clone();
+    let grammar = load_grammar(&artifact_dir());
+    let batch = widest_batch();
+    let mut engine = Engine::new(
+        Runtime::load(&artifact_dir()).unwrap(),
+        EngineConfig {
+            policy: PolicyKind::hae_default(),
+            batch,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    engine.rt.warmup(&[batch]).unwrap();
+    let mut sched: Scheduler<u64> =
+        Scheduler::for_engine(SchedulerConfig::default(), &engine);
+    let mut b = RequestBuilder::new(&meta, &grammar, 6);
+    let turns = b.shared_image_dialog(44, 6);
+    let ids: Vec<u64> = turns.iter().map(|r| r.id).collect();
+    for r in turns {
+        sched.submit(r.id, r).unwrap();
+    }
+    for _ in 0..5000 {
+        if !sched.has_work() {
+            break;
+        }
+        sched.tick(&mut engine).unwrap();
+        sched.take_outcomes();
+    }
+
+    let obs = engine.obs();
+    let o = obs.borrow();
+    let mut extend_events = 0u64;
+    let mut partial_turns = 0usize;
+    for &rid in &ids {
+        let ev = o.trace.for_request(rid);
+        assert!(!ev.is_empty(), "request {} left no trace", rid);
+        for w in ev.windows(2) {
+            assert!(
+                w[0].at_us <= w[1].at_us,
+                "request {}: timestamps regress in journal order",
+                rid
+            );
+        }
+        let names: Vec<&str> = ev.iter().map(|r| r.event.name()).collect();
+        let pos = |name: &str| names.iter().position(|n| *n == name);
+        let enq = pos("enqueued").unwrap_or_else(|| panic!("{}: {:?}", rid, names));
+        let adm = pos("admitted").expect("admitted");
+        let pstart = pos("prefill_start").expect("prefill_start");
+        let pend = pos("prefill_end").expect("prefill_end");
+        let ret = pos("retired").expect("retired");
+        assert!(
+            enq < adm && adm < pstart && pstart < pend && pend < ret,
+            "request {}: lifecycle out of order: {:?}",
+            rid,
+            names
+        );
+        assert_eq!(ret, ev.len() - 1, "request {}: retired is terminal", rid);
+        assert!(
+            matches!(
+                ev[ret].event,
+                TraceEvent::Retired { reason: RetireReason::Completed }
+            ),
+            "request {}: retired as {:?}",
+            rid,
+            ev[ret].event
+        );
+        if let Some(pa) = pos("partial_adopt") {
+            partial_turns += 1;
+            assert!(
+                pstart < pa && pa < pend,
+                "request {}: partial adopt outside the prefill window: {:?}",
+                rid,
+                names
+            );
+        }
+        extend_events +=
+            names.iter().filter(|n| **n == "extend_chunk").count() as u64;
+    }
+    // turns are submitted up-front so concurrent admission keeps some
+    // from seeing the earlier turn's pages; at least one must warm-start
+    assert!(
+        partial_turns >= 1,
+        "no dialog turn warm-started partially"
+    );
+    assert_eq!(
+        extend_events,
+        sched.metrics.extend_calls,
+        "ExtendChunk events disagree with the extend-call metric"
+    );
+    assert_eq!(sched.metrics.extend_calls, engine.extend_calls());
+    assert!(extend_events > 0, "warm turns recompute suffixes in chunks");
+    assert!(
+        o.trace.iter().any(|r| r.event.name() == "decode_step"),
+        "decode steps were journaled"
+    );
+    // the phase histograms saw the run: one cold prefill, warm replays,
+    // and per-step decode samples
+    assert!(o.prefill_ms.count() >= 1);
+    assert!(o.partial_replay_ms.count() >= 1);
+    assert!(o.decode_step_ms.count() > 0);
 }
 
 #[test]
