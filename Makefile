@@ -21,10 +21,19 @@
 #                        overrides the destination).
 #   make bench-verify  — schema-check the BENCH_*.json reports and
 #                        require at least HAE_BENCH_MIN (default 4).
+#   make stress        — repeat the threaded e2e suites (scheduler_e2e,
+#                        server_e2e) HAE_STRESS_N times (default 10)
+#                        with a high in-process test-thread count, to
+#                        shake out thread-interleaving bugs a single
+#                        green run can miss (docs/CONCURRENCY.md).
+#                        Artifact-gated tests self-skip without
+#                        ./artifacts; build those first (or set
+#                        HAE_REQUIRE_ARTIFACTS=1) for full coverage.
 
 PYTHON ?= python3
+HAE_STRESS_N ?= 10
 
-.PHONY: artifacts check-extend test bench-smoke bench-verify
+.PHONY: artifacts check-extend test bench-smoke bench-verify stress
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
@@ -42,6 +51,13 @@ bench-smoke:
 	cargo bench --bench perf_page_pool
 	cargo bench --bench perf_decode
 	cargo bench --bench perf_serve_batch
+
+stress:
+	@for i in $$(seq 1 $(HAE_STRESS_N)); do \
+		echo "=== stress round $$i/$(HAE_STRESS_N) ==="; \
+		cargo test -q --test scheduler_e2e --test server_e2e \
+			-- --test-threads 8 || exit 1; \
+	done
 
 bench-verify:
 	cargo run --release --bin bench_verify

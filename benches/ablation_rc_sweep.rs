@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     );
     for &b in &batches {
         let mut engine = engine_for(PolicyKind::hae_default(), b, false)?;
-        engine.rt.warmup(&[b])?;
+        engine.warmup()?;
         let reqs: Vec<_> = (0..b * 3)
             .map(|_| {
                 let mut bb = RequestBuilder::new(&meta, &grammar, 1000 + b as u64);

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     for &b in &batches {
         for &c in &caps {
             let mut engine = engine_for(PolicyKind::Full, b, false)?;
-            engine.rt.warmup(&[b])?;
+            engine.warmup()?;
             // build b requests whose caches sit just under capacity bucket c
             let prev_cap = caps.iter().filter(|&&x| x < c).max().copied().unwrap_or(0);
             let target_len = (prev_cap + c) / 2; // mid-bucket

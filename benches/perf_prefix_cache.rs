@@ -20,7 +20,6 @@ use hae_serve::harness::{artifact_dir, bench_n, f2, load_grammar, load_runtime, 
 use hae_serve::model::ModelMeta;
 use hae_serve::obs::BenchReport;
 use hae_serve::prefix::{request_fingerprint, request_key, PrefixCache, PrefixStats};
-use hae_serve::runtime::Runtime;
 use hae_serve::workload::{Request, RequestBuilder, StoryGrammar};
 
 fn tiny_meta() -> ModelMeta {
@@ -114,7 +113,7 @@ fn cow_costs(table: &mut Table, report: &mut BenchReport, iters: usize) {
     }
     let pages = donor.mark_all_shared();
     {
-        let mut p = pool.borrow_mut();
+        let mut p = pool.lock().unwrap();
         for &pg in &pages {
             p.retain_page(pg);
         }
@@ -135,7 +134,7 @@ fn cow_costs(table: &mut Table, report: &mut BenchReport, iters: usize) {
         "0".into(),
     ]);
 
-    let forks0 = pool.borrow().stats().forks;
+    let forks0 = pool.lock().unwrap().stats().forks;
     let t0 = Instant::now();
     for _ in 0..iters {
         let mut s = KvSlab::in_pool(&pool, 64);
@@ -144,7 +143,7 @@ fn cow_costs(table: &mut Table, report: &mut BenchReport, iters: usize) {
         s.evict(&[40]);
     }
     let fork_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
-    let forked = pool.borrow().stats().forks - forks0;
+    let forked = pool.lock().unwrap().stats().forks - forks0;
     report.metric("cow_fork_us", fork_us, "us");
     table.row(vec![
         "adopt + diverge (CoW fork)".into(),
@@ -158,19 +157,18 @@ fn cow_costs(table: &mut Table, report: &mut BenchReport, iters: usize) {
 /// (wall, Σ prefill_s, token streams, prefix stats, extend calls,
 /// effective extend chunk).
 fn run_mode(
-    rt: Runtime,
     prefix_cache: bool,
     requests: &[Request],
 ) -> anyhow::Result<(f64, f64, Vec<Vec<i32>>, PrefixStats, u64, usize)> {
-    let mut engine = Engine::new(
-        rt,
+    let mut engine = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             prefix_cache,
             ..EngineConfig::default()
         },
     )?;
-    engine.rt.warmup(&[1])?;
+    engine.warmup()?;
     let t0 = Instant::now();
     let mut outputs = Vec::new();
     let mut prefill_s = 0.0f64;
@@ -210,9 +208,10 @@ fn engine_table(report: &mut BenchReport, n_images: usize) -> anyhow::Result<()>
         .collect();
     let total_prompt_tokens: usize = requests.iter().map(|r| r.prompt_len()).sum();
 
-    let (cold_wall, cold_prefill, cold_out, _, _, _) = run_mode(rt, false, &requests)?;
+    drop(rt);
+    let (cold_wall, cold_prefill, cold_out, _, _, _) = run_mode(false, &requests)?;
     let (warm_wall, warm_prefill, warm_out, ps, _, _) =
-        run_mode(load_runtime()?, true, &requests)?;
+        run_mode(true, &requests)?;
 
     // acceptance: byte-identical outputs, ≥50% prefill tokens skipped
     assert_eq!(cold_out.len(), warm_out.len());
@@ -291,9 +290,10 @@ fn dialog_table(report: &mut BenchReport, n_turns: usize) -> anyhow::Result<()> 
     let prefix_len = 1 + meta.n_patches; // [BOS][img]
     let warm_prompt_tokens: usize = turns[1..].iter().map(|r| r.prompt_len()).sum();
 
-    let (cold_wall, cold_prefill, cold_out, _, _, _) = run_mode(rt, false, &turns)?;
+    drop(rt);
+    let (cold_wall, cold_prefill, cold_out, _, _, _) = run_mode(false, &turns)?;
     let (warm_wall, warm_prefill, warm_out, ps, extend_calls, eff_chunk) =
-        run_mode(load_runtime()?, true, &turns)?;
+        run_mode(true, &turns)?;
 
     // acceptance: byte-identity per turn, partial hits only, skip rate ≥
     // the shared-prefix fraction

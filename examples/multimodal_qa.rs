@@ -12,14 +12,13 @@
 use anyhow::Result;
 use hae_serve::cache::PolicyKind;
 use hae_serve::harness::{answer_accuracy, artifact_dir, engine_for, load_grammar, run_policy, Table};
-use hae_serve::runtime::Runtime;
+use hae_serve::model::Manifest;
 use hae_serve::workload::{RequestBuilder, WorkloadKind};
 
 fn main() -> Result<()> {
-    let rt = Runtime::load(&artifact_dir())?;
-    let meta = rt.meta().clone();
+    // cheap manifest read — no PJRT client needed for workload synthesis
+    let meta = Manifest::load(&artifact_dir())?.model;
     let grammar = load_grammar(&artifact_dir());
-    drop(rt);
     let n = 30;
     let requests =
         RequestBuilder::new(&meta, &grammar, 77).make_batch(WorkloadKind::Understanding, n);

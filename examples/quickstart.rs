@@ -7,28 +7,25 @@ use anyhow::Result;
 use hae_serve::cache::PolicyKind;
 use hae_serve::coordinator::{Engine, EngineConfig};
 use hae_serve::model::vocab;
-use hae_serve::runtime::Runtime;
 use hae_serve::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
 
 fn main() -> Result<()> {
     let artifact_dir = std::path::Path::new("artifacts");
-    let rt = Runtime::load(artifact_dir)?;
+    let cfg = EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() };
+    let mut engine = Engine::from_artifact_dir(artifact_dir, cfg)?;
     println!(
         "loaded TinyMM: {} layers, d_model {}, vocab {} ({} weights)",
-        rt.meta().n_layers,
-        rt.meta().d_model,
-        rt.meta().vocab,
-        rt.manifest.weights.len()
+        engine.meta().n_layers,
+        engine.meta().d_model,
+        engine.meta().vocab,
+        engine.manifest().weights.len()
     );
 
     let grammar = StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
-    let meta = rt.meta().clone();
+    let meta = engine.meta().clone();
     let mut builder = RequestBuilder::new(&meta, &grammar, 42);
     let qa = builder.make(WorkloadKind::Understanding);
     let story = builder.story(3, 12, 64);
-
-    let cfg = EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() };
-    let mut engine = Engine::new(rt, cfg)?;
 
     println!("\n=== understanding request ===");
     let expected = qa.expected_answer.unwrap();

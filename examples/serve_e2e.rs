@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         None,
         SchedPolicy::Priority,
         true,
+        2,
     );
     assert!(wait_listening(&addr), "server came up");
 

@@ -14,17 +14,14 @@ use hae_serve::coordinator::{Engine, EngineConfig};
 use hae_serve::eval::quality::degeneration;
 use hae_serve::harness::{artifact_dir, load_grammar};
 use hae_serve::model::vocab;
-use hae_serve::runtime::Runtime;
 use hae_serve::workload::RequestBuilder;
 
 fn main() -> Result<()> {
     let grammar = load_grammar(&artifact_dir());
 
     for spec in ["full", "h2o", "hae"] {
-        let rt = Runtime::load(&artifact_dir())?;
-        let meta = rt.meta().clone();
-        let mut engine = Engine::new(
-            rt,
+        let mut engine = Engine::from_artifact_dir(
+            &artifact_dir(),
             EngineConfig {
                 policy: PolicyKind::parse(spec).unwrap(),
                 temperature: 0.7,
@@ -33,7 +30,8 @@ fn main() -> Result<()> {
                 ..EngineConfig::default()
             },
         )?;
-        engine.rt.warmup(&[1])?;
+        let meta = engine.meta().clone();
+        engine.warmup()?;
 
         // same episode for all policies (same builder seed)
         let mut builder = RequestBuilder::new(&meta, &grammar, 31337);

@@ -21,8 +21,7 @@
 //! admission (scheduler/admission.rs) guarantees that is never hit in
 //! serving.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::model::ModelMeta;
 
@@ -85,10 +84,15 @@ pub struct PagePool {
     peak_in_use: usize,
 }
 
-/// The pool handle page tables hold. Single engine thread (the PJRT
-/// client is single-threaded by design), so `Rc<RefCell>` — no locking
-/// on the decode hot path.
-pub type SharedPagePool = Rc<RefCell<PagePool>>;
+/// The pool handle page tables hold. `Arc<Mutex<...>>` so the engine
+/// loop, worker threads and tests can share one arena: only device
+/// calls are pinned to the dedicated device thread (the PJRT client is
+/// `!Send` — see device/mod.rs); everything touching the pool is Send.
+/// The lock is a single coarse Mutex: every critical section is a few
+/// index/refcount updates or one page-sized memcpy, and the hot
+/// retain/release path is measured by `perf_page_pool` — shard it only
+/// if that bench shows contention (docs/CONCURRENCY.md §lock order).
+pub type SharedPagePool = Arc<Mutex<PagePool>>;
 
 impl PagePool {
     pub fn new(n_layers: usize, row: usize, n_pages: usize, page_slots: usize) -> Self {
@@ -125,7 +129,7 @@ impl PagePool {
         n_pages: usize,
         page_slots: usize,
     ) -> SharedPagePool {
-        Rc::new(RefCell::new(PagePool::new(n_layers, row, n_pages, page_slots)))
+        Arc::new(Mutex::new(PagePool::new(n_layers, row, n_pages, page_slots)))
     }
 
     pub fn page_slots(&self) -> usize {
@@ -336,6 +340,28 @@ impl PagePool {
         let src = if want_v { &self.v } else { &self.k };
         src[o..o + self.row].to_vec()
     }
+
+    /// Bit-exact content equality of two *full* pages (every layer's K
+    /// and V run). The prefix cache's cross-entry dedup compares a
+    /// freshly registered page against pages already pinned under the
+    /// same vision-segment hash — only whole pages are deduped, so tail
+    /// slots beyond either entry's live region never alias garbage.
+    pub fn pages_equal(&self, a: u32, b: u32) -> bool {
+        if a == b {
+            return true;
+        }
+        let span = self.page_slots * self.row;
+        for l in 0..self.n_layers {
+            let oa = self.run_offset(a, l);
+            let ob = self.run_offset(b, l);
+            if self.k[oa..oa + span] != self.k[ob..ob + span]
+                || self.v[oa..oa + span] != self.v[ob..ob + span]
+            {
+                return false;
+            }
+        }
+        true
+    }
 }
 
 /// Pages needed to hold `slots` token slots.
@@ -480,5 +506,126 @@ mod tests {
         assert_eq!(pages_for_slots(1, 8), 1);
         assert_eq!(pages_for_slots(8, 8), 1);
         assert_eq!(pages_for_slots(9, 8), 2);
+    }
+
+    #[test]
+    fn pages_equal_compares_full_content() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let k: Vec<f32> = (0..8).map(|x| x as f32 + 1.0).collect();
+        let v: Vec<f32> = (0..8).map(|x| -(x as f32) - 1.0).collect();
+        p.write_slot(a, 1, &k, &v);
+        let b = p.fork_page(a).unwrap();
+        assert!(p.pages_equal(a, b), "a fork is bit-identical to its source");
+        assert!(p.pages_equal(a, a), "reflexive");
+        // diverge one slot of one layer's V run: no longer equal
+        p.write_slot(b, 3, &k, &k);
+        assert!(!p.pages_equal(a, b));
+    }
+
+    // ---- satellite: multi-thread stress over the shared pool ----
+    //
+    // The pool is now `Arc<Mutex<PagePool>>` shared between the engine
+    // loop, worker threads and the server's ingest path. These tests
+    // hammer the retain/release/fork surface from many threads and then
+    // assert the bookkeeping invariants that the single-thread tests
+    // above pin: refcounts never underflow, the free list never holds a
+    // live page twice, and alloc/free totals balance after every thread
+    // joins. On a single-core runner they still interleave at lock
+    // granularity, which is exactly the unit under test.
+
+    #[test]
+    fn concurrent_retain_release_fork_stress() {
+        use std::thread;
+        const THREADS: usize = 8;
+        const ITERS: usize = 200;
+        let pool = PagePool::new_shared(2, 4, 64, 8);
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let pool = Arc::clone(&pool);
+            handles.push(thread::spawn(move || {
+                for i in 0..ITERS {
+                    let page = {
+                        let mut p = pool.lock().unwrap();
+                        match p.alloc() {
+                            Some(pg) => pg,
+                            // transient exhaustion under contention is
+                            // legal; the invariants are checked at join
+                            None => continue,
+                        }
+                    };
+                    {
+                        let mut p = pool.lock().unwrap();
+                        assert!(p.retain_page(page), "fresh page must be live");
+                    }
+                    // every third iteration also forks, diverges the
+                    // copy, and drops it again
+                    if (t + i) % 3 == 0 {
+                        let forked = {
+                            let mut p = pool.lock().unwrap();
+                            p.fork_page(page)
+                        };
+                        if let Some(f) = forked {
+                            let mut p = pool.lock().unwrap();
+                            let row: Vec<f32> = vec![t as f32; 8];
+                            p.write_slot(f, 0, &row, &row);
+                            assert!(p.release(f));
+                        }
+                    }
+                    let mut p = pool.lock().unwrap();
+                    assert!(p.release(page), "first release drops the retain");
+                    assert!(p.release(page), "second release frees the page");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("stress worker panicked");
+        }
+        let p = pool.lock().unwrap();
+        let s = p.stats();
+        assert_eq!(s.refcount_errors, 0, "no underflow under contention");
+        assert_eq!(s.allocs, s.frees, "every page handed out came back");
+        assert_eq!(p.in_use_pages(), 0, "all pages returned after join");
+        // free-list integrity: every freed page appears exactly once and
+        // every entry is a dead page
+        let mut seen = std::collections::BTreeSet::new();
+        for &pg in &p.free {
+            assert!(seen.insert(pg), "page {pg} is on the free list twice");
+            assert_eq!(p.refcount(pg), 0, "free-listed page {pg} is live");
+        }
+        assert_eq!(
+            p.next_fresh as usize,
+            p.free.len(),
+            "every fresh-watermark page is accounted for on the free list"
+        );
+    }
+
+    #[test]
+    fn concurrent_shared_page_pinning_is_exact() {
+        use std::thread;
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 100;
+        let pool = PagePool::new_shared(2, 4, 16, 8);
+        // one long-lived shared page, as the prefix cache would pin it
+        let shared = pool.lock().unwrap().alloc().unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..THREADS {
+            let pool = Arc::clone(&pool);
+            handles.push(thread::spawn(move || {
+                for _ in 0..ROUNDS {
+                    // adopt-then-retire, the CoW warm-start lifecycle
+                    assert!(pool.lock().unwrap().retain_page(shared));
+                    assert!(pool.lock().unwrap().release(shared));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("pinning worker panicked");
+        }
+        let mut p = pool.lock().unwrap();
+        assert_eq!(p.refcount(shared), 1, "only the original pin survives");
+        assert_eq!(p.stats().refcount_errors, 0);
+        assert!(p.release(shared));
+        assert_eq!(p.in_use_pages(), 0);
     }
 }

@@ -119,7 +119,7 @@ impl KvSlab {
     /// are allocated lazily on append and returned on eviction/drop.
     pub fn in_pool(pool: &SharedPagePool, cap: usize) -> Self {
         let (row, n_layers, page_slots) = {
-            let p = pool.borrow();
+            let p = pool.lock().unwrap();
             (p.row(), p.n_layers(), p.page_slots())
         };
         KvSlab {
@@ -287,7 +287,7 @@ impl KvSlab {
         if slot == self.table.len() * self.page_slots {
             let page = self
                 .pool
-                .borrow_mut()
+                .lock().unwrap()
                 .alloc()
                 .expect("page pool exhausted (admission must prevent this)");
             self.table.push_private(page);
@@ -311,7 +311,7 @@ impl KvSlab {
         self.ensure_page(slot);
         let pi = slot / self.page_slots;
         {
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             // CoW barrier: appending into a shared (adopted) partial tail
             // page forks it first, so the prefix cache's image — and every
             // co-sharing request — never sees this request's generation.
@@ -360,7 +360,7 @@ impl KvSlab {
         for (dst_slot, &src_slot) in retain.iter().enumerate() {
             self.ensure_page(dst_slot);
             let (page, off) = self.page_of(dst_slot);
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             for l in 0..self.n_layers {
                 let src = (l * bucket + src_slot) * self.row;
                 pool.write_layer_row(
@@ -400,7 +400,7 @@ impl KvSlab {
             pages_for_slots(meta.len(), self.page_slots),
             "adopted pages must cover exactly the cached slots"
         );
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         if !self.table.adopt_shared(&mut pool, pages) {
             return false;
         }
@@ -494,13 +494,13 @@ impl KvSlab {
             // equals what the not-yet-slid source reads expect — and it
             // makes exhaustion recoverable instead of corrupting state.
             let dst_pages = pages_for_slots(retain.len(), self.page_slots);
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             for pi in (fm / self.page_slots)..dst_pages {
                 self.table.ensure_private(&mut pool, pi)?;
             }
         }
         {
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             for (dst_slot, &src_slot) in retain.iter().enumerate() {
                 if dst_slot == src_slot {
                     // unchanged prefix: no copy, page stays clean/shared
@@ -524,7 +524,7 @@ impl KvSlab {
         // just drops this slab's reference; the cache keeps its copy)
         let needed = pages_for_slots(self.meta.len(), self.page_slots);
         if self.table.len() > needed {
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             self.table.truncate_release(&mut pool, needed);
         }
         Some(evicted)
@@ -586,7 +586,7 @@ impl KvSlab {
         self.meta.truncate(keep);
         let needed = pages_for_slots(keep, self.page_slots);
         if self.table.len() > needed {
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             self.table.truncate_release(&mut pool, needed);
         }
         len - keep
@@ -613,7 +613,7 @@ impl KvSlab {
         assert!(len <= cap_c, "lane cache {} > bucket {}", len, cap_c);
         let here = LaneSync { lane, cap_c };
         let full = self.last_sync != Some(here);
-        let pool = self.pool.borrow();
+        let pool = self.pool.lock().unwrap();
         let mut copied = 0;
         for pi in 0..self.table.len() {
             let base_slot = pi * self.page_slots;
@@ -641,12 +641,12 @@ impl KvSlab {
     /// Raw K row of one slot in one layer (test/diagnostic use).
     pub fn k_row(&self, layer: usize, slot: usize) -> Vec<f32> {
         let (page, off) = self.page_of(slot);
-        self.pool.borrow().read_row(page, off, layer, false)
+        self.pool.lock().unwrap().read_row(page, off, layer, false)
     }
 
     pub fn v_row(&self, layer: usize, slot: usize) -> Vec<f32> {
         let (page, off) = self.page_of(slot);
-        self.pool.borrow().read_row(page, off, layer, true)
+        self.pool.lock().unwrap().read_row(page, off, layer, true)
     }
 
     /// Retire hook: return every arena page to the pool *now*, instead
@@ -665,7 +665,7 @@ impl KvSlab {
         self.released_private = self.kv_bytes_private();
         self.released_shared = self.table.shared_page_ids();
         if !self.table.is_empty() {
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             self.table.release_all(&mut pool);
         }
         self.last_sync = None;
@@ -690,7 +690,7 @@ impl KvSlab {
 
 impl Drop for KvSlab {
     fn drop(&mut self) {
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         self.table.release_all(&mut pool);
     }
 }
@@ -722,13 +722,13 @@ impl Clone for KvSlab {
             // the clone's private pool shares nothing with the arena
             released_shared: Vec::new(),
         };
-        let src = self.pool.borrow();
+        let src = self.pool.lock().unwrap();
         let live_kv = if self.released { 0 } else { self.meta.len() };
         for slot in 0..live_kv {
             out.ensure_page(slot);
             let (dpage, doff) = out.page_of(slot);
             let (spage, soff) = self.page_of(slot);
-            let mut dst = out.pool.borrow_mut();
+            let mut dst = out.pool.lock().unwrap();
             for l in 0..self.n_layers {
                 dst.write_layer_row(
                     dpage,
@@ -975,14 +975,14 @@ mod tests {
             s.append(&row_of(0.0, &m), &row_of(0.0, &m), i, Modality::Text, 0.0);
         }
         assert_eq!(s.allocated_pages(), 3);
-        assert_eq!(pool.borrow().in_use_pages(), 3);
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 3);
         // drop 7 of 12 slots: 5 live → 2 pages, one page back to the pool
         s.evict(&[0, 1, 2, 3, 4, 5, 6]);
         assert_eq!(s.allocated_pages(), 2);
-        assert_eq!(pool.borrow().in_use_pages(), 2);
-        assert_eq!(pool.borrow().stats().frees, 1);
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 2);
+        assert_eq!(pool.lock().unwrap().stats().frees, 1);
         drop(s);
-        assert_eq!(pool.borrow().in_use_pages(), 0, "drop releases every page");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 0, "drop releases every page");
     }
 
     #[test]
@@ -995,10 +995,10 @@ mod tests {
             a.append(&row_of(1.0, &m), &row_of(1.0, &m), i, Modality::Text, 0.0);
             b.append(&row_of(2.0, &m), &row_of(2.0, &m), i, Modality::Text, 0.0);
         }
-        assert_eq!(pool.borrow().free_pages(), 0);
+        assert_eq!(pool.lock().unwrap().free_pages(), 0);
         // a's eviction is immediately b's headroom
         a.evict(&(0..8).collect::<Vec<_>>());
-        assert_eq!(pool.borrow().free_pages(), 2);
+        assert_eq!(pool.lock().unwrap().free_pages(), 2);
         for i in 8..16 {
             b.append(&row_of(2.0, &m), &row_of(2.0, &m), i, Modality::Text, 0.0);
         }
@@ -1015,14 +1015,14 @@ mod tests {
             s.append(&row_of(0.0, &m), &row_of(0.0, &m), i, Modality::Text, 0.5);
         }
         s.release_pages();
-        assert_eq!(pool.borrow().in_use_pages(), 0, "pages back at retire");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 0, "pages back at retire");
         assert_eq!(s.len(), 6, "stats stay readable");
         assert!((s.meta()[3].cum_score - 0.5).abs() < 1e-6);
         assert!(s.kv_bytes() > 0);
         s.release_pages(); // idempotent
         drop(s); // the emptied table leaves nothing to double-release
-        assert_eq!(pool.borrow().stats().frees, 2);
-        assert_eq!(pool.borrow().stats().refcount_errors, 0);
+        assert_eq!(pool.lock().unwrap().stats().frees, 2);
+        assert_eq!(pool.lock().unwrap().stats().refcount_errors, 0);
     }
 
     #[test]
@@ -1033,9 +1033,9 @@ mod tests {
         for i in 0..6 {
             s.append(&row_of(i as f32, &m), &row_of(0.0, &m), i, Modality::Text, 0.0);
         }
-        let in_use = pool.borrow().in_use_pages();
+        let in_use = pool.lock().unwrap().in_use_pages();
         let c = s.clone();
-        assert_eq!(pool.borrow().in_use_pages(), in_use, "clone takes no arena pages");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), in_use, "clone takes no arena pages");
         drop(s);
         assert_eq!(c.len(), 6);
         assert_eq!(c.k_row(0, 5)[0], 5.0);
@@ -1083,10 +1083,10 @@ mod tests {
         let m = tiny_meta();
         let pool = tiny_pool(&m, 8);
         let (d, meta) = donor(&pool, &m, 8); // two full 4-slot pages
-        let in_use = pool.borrow().in_use_pages();
+        let in_use = pool.lock().unwrap().in_use_pages();
         let mut s = KvSlab::in_pool(&pool, 16);
         assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
-        assert_eq!(pool.borrow().in_use_pages(), in_use, "adoption allocates nothing");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), in_use, "adoption allocates nothing");
         assert_eq!(s.len(), 8);
         assert_eq!(s.shared_pages(), 2);
         assert_eq!(s.shared_pages_stable(), 2, "aligned tail stays shared");
@@ -1094,8 +1094,8 @@ mod tests {
             assert_eq!(s.k_row(0, i)[0], i as f32);
         }
         drop(s);
-        assert_eq!(pool.borrow().in_use_pages(), in_use, "adopter's refs released");
-        assert_eq!(pool.borrow().stats().refcount_errors, 0);
+        assert_eq!(pool.lock().unwrap().in_use_pages(), in_use, "adopter's refs released");
+        assert_eq!(pool.lock().unwrap().stats().refcount_errors, 0);
     }
 
     #[test]
@@ -1108,16 +1108,16 @@ mod tests {
         assert_eq!(s.shared_pages(), 2);
         assert_eq!(s.shared_pages_stable(), 1, "partial tail is fork-bound");
         s.append(&row_of(99.0, &m), &row_of(99.0, &m), 6, Modality::Text, 0.0);
-        assert_eq!(pool.borrow().stats().forks, 1, "first append forked the tail");
+        assert_eq!(pool.lock().unwrap().stats().forks, 1, "first append forked the tail");
         assert_eq!(s.shared_pages(), 1);
         // the write landed in this slab only
         assert_eq!(s.k_row(0, 6)[0], 99.0);
         assert_eq!(d.k_row(0, 5)[0], 5.0, "donor tail untouched");
         let (dp, doff) = d.page_of(5);
-        assert_eq!(pool.borrow().read_row(dp, doff, 0, false)[0], 5.0);
+        assert_eq!(pool.lock().unwrap().read_row(dp, doff, 0, false)[0], 5.0);
         // further appends reuse the now-private tail: no more forks
         s.append(&row_of(98.0, &m), &row_of(98.0, &m), 7, Modality::Text, 0.0);
-        assert_eq!(pool.borrow().stats().forks, 1);
+        assert_eq!(pool.lock().unwrap().stats().forks, 1);
     }
 
     #[test]
@@ -1129,7 +1129,7 @@ mod tests {
         assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
         // evicting slot 1 slides everything down: writes hit both pages
         s.evict(&[1]);
-        assert!(pool.borrow().stats().forks >= 1, "CoW forked the written pages");
+        assert!(pool.lock().unwrap().stats().forks >= 1, "CoW forked the written pages");
         assert_eq!(s.shared_pages(), 0, "writer fully diverged");
         let positions: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
         assert_eq!(positions, vec![0, 2, 3, 4, 5, 6, 7]);
@@ -1154,7 +1154,7 @@ mod tests {
         assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
         // burn the free pages so the fork pre-pass finds nothing
         let blockers: Vec<u32> =
-            (0..2).map(|_| pool.borrow_mut().alloc().unwrap()).collect();
+            (0..2).map(|_| pool.lock().unwrap().alloc().unwrap()).collect();
         let before: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
         assert_eq!(s.try_evict(&[1]), None, "no page for the fork: deferred");
         assert_eq!(s.len(), 8, "nothing evicted");
@@ -1163,10 +1163,10 @@ mod tests {
         for i in 0..8 {
             assert_eq!(s.k_row(0, i)[0], i as f32, "KV untouched at slot {}", i);
         }
-        assert_eq!(pool.borrow().stats().refcount_errors, 0);
+        assert_eq!(pool.lock().unwrap().stats().refcount_errors, 0);
         // pages free → the retry applies the same eviction cleanly
         for b in blockers {
-            pool.borrow_mut().release(b);
+            pool.lock().unwrap().release(b);
         }
         assert_eq!(s.try_evict(&[1]), Some(1));
         let positions: Vec<i32> = s.meta().iter().map(|mm| mm.position).collect();
@@ -1189,7 +1189,7 @@ mod tests {
         let (d, meta) = donor(&pool, &m, 8);
         let mut s = KvSlab::in_pool(&pool, 16);
         assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
-        assert_eq!(pool.borrow().free_pages(), 1);
+        assert_eq!(pool.lock().unwrap().free_pages(), 1);
         assert_eq!(s.try_evict(&[0]), None, "second fork has no page");
         assert!(s.shared_pages() <= 1, "first pre-pass fork may persist");
         for i in 0..8 {
@@ -1210,18 +1210,18 @@ mod tests {
         let (d, meta) = donor(&pool, &m, 6); // 2 pages, partial tail
         let mut s = KvSlab::in_pool(&pool, 16);
         assert!(s.adopt_shared(&d.table.pages().to_vec(), meta));
-        let forks_before = pool.borrow().stats().forks;
-        let in_use = pool.borrow().in_use_pages();
+        let forks_before = pool.lock().unwrap().stats().forks;
+        let in_use = pool.lock().unwrap().in_use_pages();
         // need 1 → truncate to the 4-slot page boundary: 2 slots dropped
         assert_eq!(s.drop_tail_aligned(1), 2);
         assert_eq!(s.len(), 4);
-        assert_eq!(pool.borrow().stats().forks, forks_before, "no CoW fork");
-        assert_eq!(pool.borrow().in_use_pages(), in_use, "donor keeps the tail page");
+        assert_eq!(pool.lock().unwrap().stats().forks, forks_before, "no CoW fork");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), in_use, "donor keeps the tail page");
         assert_eq!(s.allocated_pages(), 1, "this slab released its tail reference");
         // the next append allocates a fresh page — no shared tail to fork
         assert!(s.unstable_tail_page().is_none());
         s.append(&row_of(9.0, &m), &row_of(9.0, &m), 6, Modality::Text, 0.0);
-        assert_eq!(pool.borrow().stats().forks, forks_before);
+        assert_eq!(pool.lock().unwrap().stats().forks, forks_before);
         // donor tail untouched
         assert_eq!(d.k_row(0, 5)[0], 5.0);
         // degenerate: need larger than len drops everything
@@ -1242,12 +1242,12 @@ mod tests {
         assert!(a.adopt_shared(&pages, meta.clone()));
         assert!(b.adopt_shared(&pages, meta));
         drop(d);
-        assert_eq!(pool.borrow().in_use_pages(), 2, "a+b still pin the pages");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 2, "a+b still pin the pages");
         a.release_pages();
-        assert_eq!(pool.borrow().in_use_pages(), 2, "b still pins them");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 2, "b still pins them");
         drop(b);
-        assert_eq!(pool.borrow().in_use_pages(), 0, "last holder frees");
-        assert_eq!(pool.borrow().stats().refcount_errors, 0);
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 0, "last holder frees");
+        assert_eq!(pool.lock().unwrap().stats().refcount_errors, 0);
     }
 
     #[test]

@@ -1,14 +1,25 @@
 //! The serving engine: prefill → continuous-batched decode with
 //! policy-driven KV eviction.
 //!
-//! The engine is the leader loop of the L3 coordinator. It owns the PJRT
-//! runtime, assembles batched decode inputs from per-request host slabs,
-//! samples tokens, feeds attention scores back into the policies and
-//! applies their eviction decisions. Capacity bucketing (DESIGN.md §2)
-//! happens here: each decode step runs on the smallest compiled capacity
-//! that fits the longest live cache in the batch — the mechanism by which
-//! eviction buys wall-clock speed in a static-shape runtime.
+//! The engine is the leader loop of the L3 coordinator. It assembles
+//! batched decode inputs from per-request host slabs, samples tokens,
+//! feeds attention scores back into the policies and applies their
+//! eviction decisions. Capacity bucketing (DESIGN.md §2) happens here:
+//! each decode step runs on the smallest compiled capacity that fits the
+//! longest live cache in the batch — the mechanism by which eviction buys
+//! wall-clock speed in a static-shape runtime.
+//!
+//! Device calls go through a [`DeviceHandle`]: the PJRT runtime lives on
+//! its own thread (device/mod.rs) and the engine's decode step is split
+//! into [`Engine::step_submit`] / [`Engine::step_complete`] so a caller
+//! can overlap host work — admission, prefix probes, backfill prefills —
+//! with the device's compute window. The blocking [`Engine::decode_step`]
+//! (submit immediately followed by complete) is the sequential
+//! single-thread baseline and the compatibility surface for the existing
+//! drivers, benches and tests.
 
+use std::path::Path;
+use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -17,13 +28,14 @@ use crate::cache::{
     pages_for_slots, DecodeCtx, KvSlab, Modality, PagePool, PolicyKind, PoolStats,
     PrefillCtx, SharedPagePool, SlotMeta, DEFAULT_PAGE_SLOTS,
 };
-use crate::model::vocab;
+use crate::device::{DecodeDone, DeviceHandle};
+use crate::model::{vocab, Manifest, ModelMeta};
 use crate::obs::{EvictKind, Obs, SharedObs, TraceEvent};
 use crate::prefix::{
     request_fingerprint, request_key, DapAccumulator, KeySym, PartialPrefixHit,
     PartialProbe, PrefixCache, PrefixHit, PrefixProbe, PrefixStats,
 };
-use crate::runtime::{PrefillOut, Runtime, StepTiming};
+use crate::runtime::{DecodeOut, PrefillOut, Runtime, StepTiming};
 use crate::scheduler::AdmissionController;
 use crate::util::rng::Rng;
 use crate::util::stats::argmax;
@@ -102,10 +114,43 @@ pub struct StepReport {
     /// incremental lane sync copies O(dirty pages), so at steady state
     /// this is ≈ lanes, not Σ live slots / page_slots
     pub pages_copied: usize,
+    /// host seconds between `step_submit` returning and `step_complete`
+    /// starting to wait — the part of the device window the caller
+    /// actually spent on other work. 0 on the blocking `decode_step`
+    /// path; `min(overlap_host_s, pjrt_s) / pjrt_s` is the per-step
+    /// host/device overlap fraction the scheduler aggregates.
+    pub overlap_host_s: f64,
+}
+
+/// An in-flight decode step: submitted to the device thread, not yet
+/// collected. Holds the *slot indices* of the submitted lanes (indices
+/// into the caller's `Option`-lane array — stable while the overlap
+/// window backfills `None` slots) and the reply channel carrying the
+/// result plus the gather scratch on its way back.
+pub struct PendingStep {
+    slots: Vec<usize>,
+    capacity: usize,
+    rx: Receiver<DecodeDone>,
+    assemble_s: f64,
+    pages_copied: usize,
+    submitted_at: Instant,
+}
+
+impl PendingStep {
+    /// Lanes submitted in this step.
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Does this pending step include the given lane slot?
+    pub fn covers_slot(&self, slot: usize) -> bool {
+        self.slots.contains(&slot)
+    }
 }
 
 pub struct Engine {
-    pub rt: Runtime,
+    /// handle to the dedicated device thread that owns the PJRT runtime
+    dev: DeviceHandle,
     pub cfg: EngineConfig,
     rng: Rng,
     /// shared paged KV arena: one pool for every lane's slab, sized from
@@ -114,8 +159,16 @@ pub struct Engine {
     /// scratch batch buffers, reused across steps (hot-path allocation
     /// avoidance; sized for the largest capacity bucket). Persistence
     /// across steps is what makes the slabs' dirty-page lane sync valid.
-    scratch_k: Vec<f32>,
-    scratch_v: Vec<f32>,
+    /// `None` while a decode step is in flight: the buffers travel to
+    /// the device thread inside the call and come back in the reply
+    /// (`DecodeDone`), so they are never aliased across threads.
+    scratch_k: Option<Vec<f32>>,
+    scratch_v: Option<Vec<f32>>,
+    /// separate gather buffers for the partial warm start's suffix
+    /// recompute, so a backfill prefill can run its extend calls while
+    /// the decode scratch is in flight on the device thread
+    ext_k: Vec<f32>,
+    ext_v: Vec<f32>,
     /// which slab (`KvSlab::sync_id`) last wrote each scratch lane — a
     /// slab's own (lane, capacity) sync check cannot see another slab
     /// clobbering its region, so ownership changes force a full resync
@@ -146,16 +199,17 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Engine> {
-        if !rt.manifest.shapes.decode_batches.contains(&cfg.batch) {
+    pub fn new(dev: DeviceHandle, cfg: EngineConfig) -> Result<Engine> {
+        let manifest = dev.manifest();
+        if !manifest.shapes.decode_batches.contains(&cfg.batch) {
             bail!(
                 "batch {} not compiled (available: {:?})",
                 cfg.batch,
-                rt.manifest.shapes.decode_batches
+                manifest.shapes.decode_batches
             );
         }
-        let m = rt.meta();
-        let cap = rt.manifest.shapes.cache_capacity;
+        let m = dev.meta();
+        let cap = manifest.shapes.cache_capacity;
         let n = cfg.batch * m.n_layers * cap * m.n_heads * m.d_head;
         let rng = Rng::new(cfg.seed);
         // Pool sizing: by default every lane can hold a full-capacity
@@ -181,12 +235,14 @@ impl Engine {
         let lane_owner = vec![0; cfg.batch];
         let cfg_trace = cfg.trace;
         Ok(Engine {
-            rt,
+            dev,
             cfg,
             rng,
             pool,
-            scratch_k: vec![0.0; n],
-            scratch_v: vec![0.0; n],
+            scratch_k: Some(vec![0.0; n]),
+            scratch_v: Some(vec![0.0; n]),
+            ext_k: vec![0.0; n],
+            ext_v: vec![0.0; n],
             lane_owner,
             prefix: PrefixCache::new(crate::prefix::DEFAULT_MAX_ENTRIES),
             fork_deferrals: 0,
@@ -195,6 +251,35 @@ impl Engine {
             last_timing: StepTiming::default(),
             obs: Obs::shared(cfg_trace),
         })
+    }
+
+    /// Spawn a device thread loading artifacts from `dir` and build an
+    /// engine on it — the one-liner for drivers, benches and tests that
+    /// previously constructed `Engine::new(Runtime::load(dir)?, cfg)`.
+    pub fn from_artifact_dir(dir: &Path, cfg: EngineConfig) -> Result<Engine> {
+        let dir = dir.to_path_buf();
+        Engine::new(crate::device::spawn(move || Runtime::load(&dir))?, cfg)
+    }
+
+    /// Model geometry (mirrored off the device thread at spawn).
+    pub fn meta(&self) -> &ModelMeta {
+        self.dev.meta()
+    }
+
+    /// Artifact manifest (shapes, buckets, paths).
+    pub fn manifest(&self) -> &Manifest {
+        self.dev.manifest()
+    }
+
+    /// The device-thread handle (cloneable; standalone probes and the
+    /// harness share it rather than spawning a second runtime).
+    pub fn device(&self) -> &DeviceHandle {
+        &self.dev
+    }
+
+    /// Compile this engine's decode batch width ahead of serving.
+    pub fn warmup(&self) -> Result<()> {
+        self.dev.warmup(&[self.cfg.batch])
     }
 
     /// Handle to the shared observability state (trace journal + phase
@@ -211,17 +296,17 @@ impl Engine {
 
     /// Occupancy snapshot of the shared arena.
     pub fn pool_stats(&self) -> PoolStats {
-        self.pool.borrow().stats()
+        self.pool.lock().unwrap().stats()
     }
 
     /// Total pages in the arena.
     pub fn pool_pages(&self) -> usize {
-        self.pool.borrow().n_pages()
+        self.pool.lock().unwrap().n_pages()
     }
 
     /// Token slots per arena page.
     pub fn page_slots(&self) -> usize {
-        self.pool.borrow().page_slots()
+        self.pool.lock().unwrap().page_slots()
     }
 
     /// Admission controller over the engine's physical arena (budget =
@@ -233,7 +318,7 @@ impl Engine {
             budget_pages: self.pool_pages(),
             page_slots: self.page_slots(),
             capacity_limit: self.capacity_limit(),
-            kv_bytes_per_token: self.rt.meta().kv_bytes_per_token(),
+            kv_bytes_per_token: self.meta().kv_bytes_per_token(),
         }
     }
 
@@ -277,7 +362,7 @@ impl Engine {
         self.cfg
             .extend_chunk
             .max(1)
-            .min(self.rt.manifest.max_extend_chunk(1).max(1))
+            .min(self.manifest().max_extend_chunk(1).max(1))
     }
 
     /// Arena pages currently pinned by prefix-cache entries.
@@ -318,14 +403,14 @@ impl Engine {
     /// reclaimable cache entries right now. Lets them decline to touch
     /// the cache when reclaiming cannot close a candidate's shortfall.
     pub fn prefix_reclaimable_pages(&self) -> usize {
-        let pool = self.pool.borrow();
+        let pool = self.pool.lock().unwrap();
         self.prefix.reclaimable_pages(&pool)
     }
 
     /// Evict the least-recently-used cache entry unconditionally (tests
     /// / shutdown drains). False when the cache is empty.
     pub fn prefix_evict_one(&mut self) -> bool {
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         self.prefix.evict_lru(&mut pool)
     }
 
@@ -334,7 +419,7 @@ impl Engine {
     /// pressure valve: entries still mapped by live lanes are kept,
     /// since evicting them frees nothing and only destroys future hits.
     pub fn prefix_reclaim_one(&mut self) -> bool {
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         self.prefix.evict_lru_reclaimable(&mut pool)
     }
 
@@ -343,7 +428,7 @@ impl Engine {
     /// Called before every allocating phase so a cache full of cold
     /// prefixes can never starve live requests.
     fn reclaim_pool_headroom(&mut self, needed: usize) {
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         if pool.free_pages() < needed {
             self.prefix.reclaim(&mut pool, needed);
         }
@@ -357,14 +442,14 @@ impl Engine {
     /// Hard limit on live slots (one below the largest compiled capacity —
     /// the incoming token always needs a free slot).
     pub fn capacity_limit(&self) -> usize {
-        self.rt.manifest.shapes.cache_capacity - 1
+        self.manifest().shapes.cache_capacity - 1
     }
 
     /// Most live KV the engine can physically hold: every decode lane at
     /// the hard capacity limit. The scheduler's default (unconstrained)
     /// KV budget; `--kv-budget` tightens it below this.
     pub fn kv_budget_ceiling(&self) -> usize {
-        self.cfg.batch * self.capacity_limit() * self.rt.meta().kv_bytes_per_token()
+        self.cfg.batch * self.capacity_limit() * self.meta().kv_bytes_per_token()
     }
 
     // ------------------------------------------------------------------
@@ -389,10 +474,10 @@ impl Engine {
     ///   statistics — never the donor's decision (`prefill_partial`).
     pub fn prefill(&mut self, req: Request) -> Result<ActiveRequest> {
         let rid = req.id;
-        self.obs.borrow_mut().event(rid, TraceEvent::PrefillStart);
+        self.obs.event(rid, TraceEvent::PrefillStart);
         let out = self.prefill_inner(req);
-        let mut o = self.obs.borrow_mut();
-        if o.enabled() {
+        if self.obs.enabled() {
+            let mut o = self.obs.inner();
             if let Ok(ar) = &out {
                 // phase histograms: cold device prefill vs partial-replay
                 // suffix recompute. Exact warm hits run no device prefill
@@ -440,7 +525,7 @@ impl Engine {
         let req = if let Some(pr) = &probe {
             if let Some(hit) = self.prefix.lookup(&pr.key, pr.fingerprint) {
                 let mut slab =
-                    KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
+                    KvSlab::in_pool(&self.pool, self.manifest().shapes.cache_capacity);
                 let PrefixHit { pages, meta, logits, .. } = hit;
                 if slab.adopt_shared(&pages, meta) {
                     // the hit is counted only now, with the pages
@@ -452,7 +537,7 @@ impl Engine {
                 // adoption refused: the entry's pins are broken (a pool
                 // accounting bug, surfaced via refcount_errors). Drop the
                 // entry so it is not retried forever, and go cold.
-                let mut pool = self.pool.borrow_mut();
+                let mut pool = self.pool.lock().unwrap();
                 self.prefix.remove(&pr.key, &mut pool);
             }
             // partial warm start: only for policies whose retention
@@ -570,7 +655,7 @@ impl Engine {
         hit: PartialPrefixHit,
     ) -> Result<std::result::Result<ActiveRequest, Request>> {
         let t_start = Instant::now();
-        let m = self.rt.meta().clone();
+        let m = self.meta().clone();
         let n = req.prompt_len();
         let p = hit.prefix_len;
         debug_assert!(p < n, "partial hit requires a nonempty suffix");
@@ -581,8 +666,8 @@ impl Engine {
         // capacity as-is; a prompt the cold path can still serve (its
         // prefill bucket exists and DAP prunes before decode) goes cold
         // instead of erroring out of the suffix loop
-        if n >= self.rt.manifest.shapes.cache_capacity
-            || self.rt.manifest.capacity_bucket(n - 1).is_none()
+        if n >= self.manifest().shapes.cache_capacity
+            || self.manifest().capacity_bucket(n - 1).is_none()
         {
             return Ok(Err(req));
         }
@@ -591,18 +676,18 @@ impl Engine {
         // refcount exceeds the cache's pin count, so the headroom
         // reclaim below can never evict the very entry being served
         // (a cache-only entry is reclaimable until someone maps it)
-        let mut slab = KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
+        let mut slab = KvSlab::in_pool(&self.pool, self.manifest().shapes.cache_capacity);
         if !slab.adopt_shared(&hit.pages, hit.meta.clone()) {
             // broken pins (a pool-accounting bug surfaced via
             // refcount_errors): drop the entry like the exact path does,
             // so it is not retried — and refused — on every later turn
-            let mut pool = self.pool.borrow_mut();
+            let mut pool = self.pool.lock().unwrap();
             if let Some(pp) = &probe.partial {
                 self.prefix.remove(&probe.key[..pp.prefix_syms], &mut pool);
             }
             return Ok(Err(req));
         }
-        self.obs.borrow_mut().event(
+        self.obs.event(
             req.id,
             TraceEvent::PartialAdopt { shared_pages: hit.pages.len() as u32 },
         );
@@ -620,7 +705,7 @@ impl Engine {
         // pins are only converted when the phase that needs them runs.
         let appends = pages_for_slots(n, ps).saturating_sub(hit.pages.len()) + 1;
         self.reclaim_pool_headroom(appends);
-        if self.pool.borrow().free_pages() < appends {
+        if self.pool.lock().unwrap().free_pages() < appends {
             return Ok(Err(req));
         }
 
@@ -663,22 +748,20 @@ impl Engine {
             let len = slab.len();
             debug_assert_eq!(len, t, "suffix appends in order");
             let capacity = self
-                .rt
-                .manifest
+                .manifest()
                 .capacity_bucket(len)
                 .ok_or_else(|| anyhow!("suffix length {} exceeds all buckets", len))?;
             if step > 1 {
                 // chunked extend: one device call for `step` rows, padded
                 // to the smallest compiled chunk bucket
                 let s_bucket = self
-                    .rt
-                    .manifest
+                    .manifest()
                     .extend_bucket(step)
                     .expect("effective chunk fits a compiled bucket");
                 let slab_n = m.n_layers * capacity * row; // one lane
                 slab.copy_into_lane(
-                    &mut self.scratch_k[..slab_n],
-                    &mut self.scratch_v[..slab_n],
+                    &mut self.ext_k[..slab_n],
+                    &mut self.ext_v[..slab_n],
                     0,
                     capacity,
                 );
@@ -688,26 +771,31 @@ impl Engine {
                     toks[i] = req.ids[t + i];
                     poss[i] = (t + i) as i32;
                 }
-                let (out, timing) = self.rt.extend(
+                // the gather buffers ride the call to the device thread
+                // and come back in the reply; restore them before the
+                // result is inspected so an error path leaks nothing
+                let ek = std::mem::take(&mut self.ext_k);
+                let evb = std::mem::take(&mut self.ext_v);
+                let done = self.dev.extend(
                     1,
                     s_bucket,
                     capacity,
-                    &toks,
-                    &poss,
-                    &self.scratch_k[..slab_n],
-                    &self.scratch_v[..slab_n],
-                    &[len as i32],
-                    &[step as i32],
+                    toks,
+                    poss,
+                    ek,
+                    evb,
+                    vec![len as i32],
+                    vec![step as i32],
                 )?;
+                self.ext_k = done.k;
+                self.ext_v = done.v;
+                let (out, timing) = done.result?;
                 prefill_dev_s += timing.total_s();
                 calls += 1;
-                {
-                    let mut o = self.obs.borrow_mut();
-                    if o.enabled() {
-                        o.extend_chunk_ms.record(timing.total_s() * 1000.0);
-                        o.trace.record(req.id, TraceEvent::ExtendChunk { n: step as u32 });
-                    }
-                }
+                self.obs.record(|o| {
+                    o.extend_chunk_ms.record(timing.total_s() * 1000.0);
+                    o.trace.record(req.id, TraceEvent::ExtendChunk { n: step as u32 });
+                });
                 for i in 0..step {
                     let k_new = out.row_kv(&out.k_new, &m, 0, i);
                     let v_new = out.row_kv(&out.v_new, &m, 0, i);
@@ -725,32 +813,34 @@ impl Engine {
                 // one-token decode step — the pre-chunking path verbatim
                 let slab_n = b * m.n_layers * capacity * row;
                 slab.copy_into_lane(
-                    &mut self.scratch_k[..slab_n],
-                    &mut self.scratch_v[..slab_n],
+                    &mut self.ext_k[..slab_n],
+                    &mut self.ext_v[..slab_n],
                     0,
                     capacity,
                 );
                 tokens[0] = req.ids[t];
                 positions[0] = t as i32;
                 lengths[0] = len as i32;
-                let (out, timing) = self.rt.decode(
+                let ek = std::mem::take(&mut self.ext_k);
+                let evb = std::mem::take(&mut self.ext_v);
+                let done = self.dev.decode(
                     b,
                     capacity,
-                    &tokens,
-                    &positions,
-                    &self.scratch_k[..slab_n],
-                    &self.scratch_v[..slab_n],
-                    &lengths,
+                    tokens.clone(),
+                    positions.clone(),
+                    ek,
+                    evb,
+                    lengths.clone(),
                 )?;
+                self.ext_k = done.k;
+                self.ext_v = done.v;
+                let (out, timing) = done.result?;
                 prefill_dev_s += timing.total_s();
                 calls += 1;
-                {
-                    let mut o = self.obs.borrow_mut();
-                    if o.enabled() {
-                        o.extend_chunk_ms.record(timing.total_s() * 1000.0);
-                        o.trace.record(req.id, TraceEvent::ExtendChunk { n: step as u32 });
-                    }
-                }
+                self.obs.record(|o| {
+                    o.extend_chunk_ms.record(timing.total_s() * 1000.0);
+                    o.trace.record(req.id, TraceEvent::ExtendChunk { n: step as u32 });
+                });
                 let k_new = out.lane_kv(&m, &out.k_new, 0).to_vec();
                 let v_new = out.lane_kv(&m, &out.v_new, 0).to_vec();
                 slab.append(&k_new, &v_new, t as i32, Modality::Text, 0.0);
@@ -766,14 +856,12 @@ impl Engine {
             t += step;
         }
         let (colsum, colmax) = acc.into_stats();
-        // the extension wrote scratch outside decode_step's ownership
-        // tracking: force a clean resync on the first real step. ALL
-        // lane owners are reset, not just lane 0 — the extension's
-        // lane-0 writes at ITS capacity bucket span byte ranges that
-        // other lanes' regions occupy at smaller buckets, so a lane
-        // whose (lane, capacity) sync looks current could otherwise
-        // read back clobbered bytes after this request compacts the
-        // batch back down a bucket
+        // the extension gathered into the ext_* buffers, not the decode
+        // scratch, but the slab's sync bookkeeping cannot tell buffers
+        // apart: it now claims lane-0 pages are synced somewhere the
+        // decode step will never read. Force a clean resync on the first
+        // real step; lane owners reset too so no other slab trusts a
+        // stale claim about this engine's scratch
         slab.invalidate_sync();
         self.lane_owner.fill(0);
 
@@ -800,7 +888,7 @@ impl Engine {
             // does, the replay cannot honour it — recompute cold
             return Ok(Err(req));
         }
-        if decision.retain.len() >= self.rt.manifest.shapes.cache_capacity {
+        if decision.retain.len() >= self.manifest().shapes.cache_capacity {
             bail!("prefill retain set exceeds cache capacity");
         }
         let retain = decision.retain;
@@ -810,15 +898,13 @@ impl Engine {
         // deliberately not flushed for this up front); exhaustion falls
         // back to a cold prefill instead of panicking
         self.reclaim_pool_headroom(slab.shared_pages());
-        let forks_before = self.pool.borrow().stats().forks;
+        let forks_before = self.pool.lock().unwrap().stats().forks;
         if slab.try_compact(&retain).is_none() {
             return Ok(Err(req));
         }
-        let forked = self.pool.borrow().stats().forks - forks_before;
+        let forked = self.pool.lock().unwrap().stats().forks - forks_before;
         if forked > 0 {
-            self.obs
-                .borrow_mut()
-                .event(req.id, TraceEvent::CowFork { pages: forked as u32 });
+            self.obs.event(req.id, TraceEvent::CowFork { pages: forked as u32 });
         }
         // rewrite the slot metadata to cold-injection semantics: the
         // score seeds are the request's own full-prompt DAP mass
@@ -907,7 +993,7 @@ impl Engine {
         }
         let pages = ar.slab.mark_all_shared();
         let snapshot = ar.slab.meta().to_vec();
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         self.prefix.register(
             &mut pool,
             key,
@@ -938,7 +1024,7 @@ impl Engine {
             return;
         }
         self.reclaim_pool_headroom(n_pages);
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         if pool.free_pages() < n_pages {
             return;
         }
@@ -1000,7 +1086,7 @@ impl Engine {
         probe: Option<PrefixProbe>,
     ) -> Result<ActiveRequest> {
         let t_start = Instant::now();
-        let m = self.rt.meta().clone();
+        let m = self.meta().clone();
         let n = req.prompt_len();
         let bucket = self
             .rt
@@ -1027,7 +1113,7 @@ impl Engine {
             .and_then(|pr| pr.partial.as_ref())
             .map_or(0, |pp| pp.prefix_tokens);
         let (out, timing) =
-            self.rt.prefill(bucket, &ids, &patches, &is_vision_f, n, n_prefix)?;
+            self.dev.prefill(bucket, &ids, &patches, &is_vision_f, n, n_prefix)?;
 
         let t_coord = Instant::now();
         let mut policy = self.cfg.policy.build();
@@ -1044,7 +1130,7 @@ impl Engine {
             meta: &m,
         };
         let decision = policy.prefill(&pctx);
-        if decision.retain.len() >= self.rt.manifest.shapes.cache_capacity {
+        if decision.retain.len() >= self.manifest().shapes.cache_capacity {
             bail!("prefill retain set exceeds cache capacity");
         }
 
@@ -1058,7 +1144,7 @@ impl Engine {
             decision.retain.len(),
             self.cfg.page_slots.max(1),
         ));
-        let mut slab = KvSlab::in_pool(&self.pool, self.rt.manifest.shapes.cache_capacity);
+        let mut slab = KvSlab::in_pool(&self.pool, self.manifest().shapes.cache_capacity);
         match &decision.kv_override {
             Some((k, v)) => slab.inject_prefill(
                 k,
@@ -1140,17 +1226,113 @@ impl Engine {
     // decode
     // ------------------------------------------------------------------
 
-    /// One batched decode step over up to `cfg.batch` unfinished lanes.
+    /// One batched decode step over up to `cfg.batch` unfinished lanes —
+    /// submit immediately followed by complete, no overlap window. The
+    /// sequential baseline (`--engine-threads 1`) and the compatibility
+    /// surface for existing drivers, benches and tests.
     pub fn decode_step(&mut self, lanes: &mut [&mut ActiveRequest]) -> Result<StepReport> {
         let b = self.cfg.batch;
         if lanes.len() > b {
             bail!("{} lanes > batch width {}", lanes.len(), b);
         }
-        let live: Vec<usize> =
-            (0..lanes.len()).filter(|&i| !lanes[i].done).collect();
+        let mut live: Vec<(usize, &mut ActiveRequest)> = lanes
+            .iter_mut()
+            .enumerate()
+            .filter(|(_, ar)| !ar.done)
+            .map(|(i, ar)| (i, &mut **ar))
+            .collect();
         if live.is_empty() {
             return Ok(StepReport::default());
         }
+        let pending = self.submit_live(&mut live)?;
+        self.complete_live(pending, &mut live)
+    }
+
+    /// Submit a decode step over an `Option`-lane slot map without
+    /// waiting for the device. All host pre-work (headroom reclaim,
+    /// capacity bucketing, dirty-page gather) runs here; then the batch
+    /// leaves for the device thread with the scratch buffers inside it.
+    /// Returns `None` when no lane is live.
+    ///
+    /// The returned [`PendingStep`] records *slot indices*, so between
+    /// submit and [`Engine::step_complete`] the caller may fill `None`
+    /// slots (speculative backfill: admission, prefix probes, prefill /
+    /// extend of the next candidate) — but must leave submitted lanes
+    /// untouched.
+    pub fn step_submit(
+        &mut self,
+        lanes: &mut [Option<ActiveRequest>],
+    ) -> Result<Option<PendingStep>> {
+        if lanes.len() > self.cfg.batch {
+            bail!("{} lanes > batch width {}", lanes.len(), self.cfg.batch);
+        }
+        let mut live: Vec<(usize, &mut ActiveRequest)> = lanes
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, l)| l.as_mut().filter(|ar| !ar.done).map(|ar| (i, ar)))
+            .collect();
+        if live.is_empty() {
+            return Ok(None);
+        }
+        self.submit_live(&mut live).map(Some)
+    }
+
+    /// Collect a submitted step: wait for the device reply, run the
+    /// per-lane post-processing (KV append, score accumulation, policy
+    /// eviction, sampling, termination) and retire finished lanes. The
+    /// second return pairs each retired request with its lane slot, as
+    /// `step_lanes` does.
+    pub fn step_complete(
+        &mut self,
+        pending: PendingStep,
+        lanes: &mut [Option<ActiveRequest>],
+    ) -> Result<(StepReport, Vec<(usize, ActiveRequest)>)> {
+        let report = {
+            // re-collect exactly the submitted slots, in submission
+            // order — backfill may have filled other slots meanwhile
+            let mut by_slot: Vec<Option<&mut ActiveRequest>> =
+                lanes.iter_mut().map(|l| l.as_mut()).collect();
+            let mut live: Vec<(usize, &mut ActiveRequest)> =
+                Vec::with_capacity(pending.slots.len());
+            for &slot in &pending.slots {
+                let ar = by_slot
+                    .get_mut(slot)
+                    .and_then(|s| s.take())
+                    .ok_or_else(|| anyhow!("submitted lane {} vanished mid-flight", slot))?;
+                live.push((slot, ar));
+            }
+            self.complete_live(pending, &mut live)?
+        };
+        let mut retired = Vec::new();
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if lane.as_ref().map_or(false, |ar| ar.done) {
+                let mut ar = lane.take().unwrap();
+                // retired lanes return their arena pages immediately —
+                // admission headroom must not wait for the caller to
+                // drop the finished request
+                ar.slab.release_pages();
+                retired.push((i, ar));
+            }
+        }
+        Ok((report, retired))
+    }
+
+    /// Decode scratch size: every lane at the largest compiled capacity.
+    fn scratch_len(&self) -> usize {
+        let m = self.meta();
+        self.cfg.batch
+            * m.n_layers
+            * self.manifest().shapes.cache_capacity
+            * m.n_heads
+            * m.d_head
+    }
+
+    /// Shared submit path over `(slot, lane)` pairs in lane order.
+    fn submit_live(
+        &mut self,
+        live: &mut [(usize, &mut ActiveRequest)],
+    ) -> Result<PendingStep> {
+        let b = self.cfg.batch;
         // worst-case allocations this step: one append page per live
         // lane plus a CoW fork of every page it still maps shared (a
         // policy flush compacting inside the shared prefix forks them
@@ -1159,17 +1341,16 @@ impl Engine {
         // lanes are left alone (evicting them frees nothing), and with
         // an unconstrained pool this check never evicts anything
         let need: usize = live.len()
-            + live.iter().map(|&i| lanes[i].slab.shared_pages()).sum::<usize>();
+            + live.iter().map(|(_, ar)| ar.slab.shared_pages()).sum::<usize>();
         self.reclaim_pool_headroom(need);
-        let m = self.rt.meta().clone();
+        let m = self.meta().clone();
         let t0 = Instant::now();
 
         // capacity bucket: smallest compiled C strictly above the longest
         // live cache in the batch
-        let max_len = live.iter().map(|&i| lanes[i].slab.len()).max().unwrap();
+        let max_len = live.iter().map(|(_, ar)| ar.slab.len()).max().unwrap();
         let capacity = self
-            .rt
-            .manifest
+            .manifest()
             .capacity_bucket(max_len)
             .ok_or_else(|| anyhow!("cache length {} exceeds all buckets", max_len))?;
 
@@ -1179,13 +1360,19 @@ impl Engine {
         // stale floats are finite and the decode graph masks slots ≥ len
         // before the softmax, so skipping the clear saves a full
         // buffer-sized memset per step (§Perf opt 1).
+        let mut k = self
+            .scratch_k
+            .take()
+            .ok_or_else(|| anyhow!("decode step already in flight"))?;
+        let mut v = self.scratch_v.take().expect("scratch buffers travel together");
 
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut lengths = vec![0i32; b];
         let mut pages_copied = 0usize;
-        for (lane, &i) in live.iter().enumerate() {
-            let ar = &mut *lanes[i];
+        let mut slots = Vec::with_capacity(live.len());
+        for (lane, (slot, ar)) in live.iter_mut().enumerate() {
+            slots.push(*slot);
             tokens[lane] = ar.pending_token;
             positions[lane] = ar.pos;
             lengths[lane] = ar.slab.len() as i32;
@@ -1198,42 +1385,104 @@ impl Engine {
             // incremental page-granular gather: pages untouched since the
             // last step at this (lane, capacity) are already in scratch
             pages_copied += ar.slab.copy_into_lane(
-                &mut self.scratch_k[..slab_n],
-                &mut self.scratch_v[..slab_n],
+                &mut k[..slab_n],
+                &mut v[..slab_n],
                 lane,
                 capacity,
             );
         }
         let assemble_s = t0.elapsed().as_secs_f64();
-
-        let (out, timing) = self.rt.decode(
-            b,
+        let rx = match self.dev.decode_async(b, capacity, tokens, positions, k, v, lengths) {
+            Ok(rx) => rx,
+            Err(e) => {
+                // the send consumed the scratch; restore fresh buffers so
+                // the engine object stays usable past the error
+                let n = self.scratch_len();
+                self.scratch_k = Some(vec![0.0; n]);
+                self.scratch_v = Some(vec![0.0; n]);
+                self.lane_owner.fill(0);
+                return Err(e);
+            }
+        };
+        Ok(PendingStep {
+            slots,
             capacity,
-            &tokens,
-            &positions,
-            &self.scratch_k[..slab_n],
-            &self.scratch_v[..slab_n],
-            &lengths,
-        )?;
+            rx,
+            assemble_s,
+            pages_copied,
+            submitted_at: Instant::now(),
+        })
+    }
+
+    /// Shared completion path: `live` must hold exactly the submitted
+    /// lanes, in submission order.
+    fn complete_live(
+        &mut self,
+        pending: PendingStep,
+        live: &mut [(usize, &mut ActiveRequest)],
+    ) -> Result<StepReport> {
+        debug_assert_eq!(live.len(), pending.slots.len());
+        // host time the caller spent between submit and this wait — the
+        // realized overlap window (the scheduler caps it at pjrt_s when
+        // it aggregates the overlap fraction)
+        let overlap_host_s = pending.submitted_at.elapsed().as_secs_f64();
+        let done = pending
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("device thread disconnected mid-step"))?;
+        // scratch comes home first: an Err step must not lose the buffers
+        self.scratch_k = Some(done.k);
+        self.scratch_v = Some(done.v);
+        let (out, timing) = done.result?;
+        let m = self.meta().clone();
 
         self.last_timing = timing;
         // one enabled-check per step keeps the disabled path to a single
-        // RefCell borrow (the <2% overhead guardrail measures both modes)
-        let obs_on = self.obs.borrow().enabled();
+        // atomic load (the <2% overhead guardrail measures both modes)
+        let obs_on = self.obs.enabled();
         if obs_on {
-            self.obs
-                .borrow_mut()
-                .decode_step_ms
-                .record(timing.total_s() * 1000.0);
+            self.obs.inner().decode_step_ms.record(timing.total_s() * 1000.0);
         }
         let t1 = Instant::now();
-        for (lane, &i) in live.iter().enumerate() {
-            let ar = &mut lanes[i];
+        let live_n = live.len();
+        for (lane, (_, ar)) in live.iter_mut().enumerate() {
+            self.post_lane(ar, lane, live_n, &out, &timing, &m, obs_on);
+        }
+        let coord_s = pending.assemble_s + t1.elapsed().as_secs_f64();
+        for (_, ar) in live.iter_mut() {
+            ar.stats.coord_s += coord_s / live_n as f64;
+        }
+        Ok(StepReport {
+            capacity: pending.capacity,
+            lanes: live_n,
+            pjrt_s: timing.total_s(),
+            coord_s,
+            pages_copied: pending.pages_copied,
+            overlap_host_s,
+        })
+    }
+
+    /// Post-device processing for one lane of a completed step: append
+    /// the new token's KV, fold attention scores into the policy, apply
+    /// its eviction decision (with the CoW affordability gate and the
+    /// capacity-wall fallback), sample the next token and account.
+    #[allow(clippy::too_many_arguments)]
+    fn post_lane(
+        &mut self,
+        ar: &mut ActiveRequest,
+        lane: usize,
+        live_n: usize,
+        out: &DecodeOut,
+        timing: &StepTiming,
+        m: &ModelMeta,
+        obs_on: bool,
+    ) {
+        {
             let step = ar.generated.len() - 1; // index of the token just processed
 
             // 1. append the processed token's KV
-            let k_new = out.lane_kv(&m, &out.k_new, lane).to_vec();
-            let v_new = out.lane_kv(&m, &out.v_new, lane).to_vec();
+            let k_new = out.lane_kv(m, &out.k_new, lane).to_vec();
+            let v_new = out.lane_kv(m, &out.v_new, lane).to_vec();
             let self_score = out.lane_self_score(lane);
             let modality = Modality::Text; // generated tokens are text
             ar.slab.append(&k_new, &v_new, ar.pos, modality, self_score);
@@ -1264,7 +1513,7 @@ impl Engine {
                 slab: &ar.slab,
                 step,
                 prefill_len: ar.prefill_len,
-                capacity_limit: self.rt.manifest.shapes.cache_capacity - 1,
+                capacity_limit: self.manifest().shapes.cache_capacity - 1,
             };
             let decision = ar.policy.post_step(&ctx);
             for &s in &decision.mark {
@@ -1279,8 +1528,8 @@ impl Engine {
                 // can afford both; a fork-free eviction (nothing shared)
                 // always proceeds.
                 let affordable = ar.slab.shared_pages() == 0 || {
-                    let pool = self.pool.borrow();
-                    pool.free_pages() >= ar.slab.shared_pages() + live.len()
+                    let pool = self.pool.lock().unwrap();
+                    pool.free_pages() >= ar.slab.shared_pages() + live_n
                 };
                 if affordable {
                     let victims: Vec<(i32, f32, bool)> = decision
@@ -1292,16 +1541,16 @@ impl Engine {
                         })
                         .collect();
                     let forks_before = (obs_on && ar.slab.shared_pages() > 0)
-                        .then(|| self.pool.borrow().stats().forks);
+                        .then(|| self.pool.lock().unwrap().stats().forks);
                     match ar.slab.try_evict(&decision.evict) {
                         Some(evicted) => {
                             ar.evictions.push(EvictionEvent { step, victims });
                             ar.stats.evicted_at_decode += evicted;
                             if obs_on {
                                 let forked = forks_before.map_or(0, |f0| {
-                                    self.pool.borrow().stats().forks - f0
+                                    self.pool.lock().unwrap().stats().forks - f0
                                 });
-                                let mut o = self.obs.borrow_mut();
+                                let mut o = self.obs.inner();
                                 o.evicted_per_decision.record(evicted as f64);
                                 o.trace.record(
                                     ar.req.id,
@@ -1332,7 +1581,7 @@ impl Engine {
                 }
             }
             // hard capacity fallback
-            let limit = self.rt.manifest.shapes.cache_capacity - 1;
+            let limit = self.manifest().shapes.cache_capacity - 1;
             if ar.slab.len() >= limit {
                 let need = ar.slab.len() + 1 - limit;
                 let ctx = DecodeCtx {
@@ -1354,7 +1603,7 @@ impl Engine {
                         ar.evictions.push(EvictionEvent { step, victims });
                         ar.stats.evicted_at_decode += evicted;
                         if obs_on {
-                            let mut o = self.obs.borrow_mut();
+                            let mut o = self.obs.inner();
                             o.evicted_per_decision.record(evicted as f64);
                             o.trace.record(
                                 ar.req.id,
@@ -1387,7 +1636,7 @@ impl Engine {
                             ar.evictions.push(EvictionEvent { step, victims });
                             ar.stats.evicted_at_decode += dropped;
                             if obs_on {
-                                let mut o = self.obs.borrow_mut();
+                                let mut o = self.obs.inner();
                                 o.evicted_per_decision.record(dropped as f64);
                                 o.trace.record(
                                     ar.req.id,
@@ -1403,7 +1652,7 @@ impl Engine {
             }
 
             // 4. next token
-            let logits = out.lane_logits(&m, lane);
+            let logits = out.lane_logits(m, lane);
             if self.cfg.capture_logits {
                 ar.logits_trace.push(logits.to_vec());
             }
@@ -1418,26 +1667,15 @@ impl Engine {
 
             // 5. accounting + termination
             if obs_on {
-                self.obs.borrow_mut().trace.record(ar.req.id, TraceEvent::DecodeStep);
+                self.obs.inner().trace.record(ar.req.id, TraceEvent::DecodeStep);
             }
             ar.stats.steps += 1;
-            ar.stats.decode_s += timing.total_s() / live.len() as f64;
+            ar.stats.decode_s += timing.total_s() / live_n as f64;
             ar.stats.decisions = ar.policy.decision_count();
             ar.stats.peak_kv_bytes = ar.stats.peak_kv_bytes.max(ar.slab.kv_bytes());
             ar.stats.kv_byte_steps += ar.slab.kv_bytes() as u64;
             self.check_done(ar);
         }
-        let coord_s = assemble_s + t1.elapsed().as_secs_f64();
-        for &i in &live {
-            lanes[i].stats.coord_s += coord_s / live.len() as f64;
-        }
-        Ok(StepReport {
-            capacity,
-            lanes: live.len(),
-            pjrt_s: timing.total_s(),
-            coord_s,
-            pages_copied,
-        })
     }
 
     /// Termination / continuation rules: hard stops are max_new_tokens and
@@ -1446,7 +1684,7 @@ impl Engine {
     /// new story segment is started instead (the multi-segment generation
     /// the paper's Seed-Story pipeline performs across turns).
     fn check_done(&self, ar: &mut ActiveRequest) {
-        let m = self.rt.meta();
+        let m = self.meta();
         let last = *ar.generated.last().unwrap_or(&vocab::PAD);
         if ar.generated.len() >= ar.req.max_new_tokens
             || (ar.pos as usize) + 1 >= m.max_pos
@@ -1596,25 +1834,10 @@ impl Engine {
         &mut self,
         lanes: &mut [Option<ActiveRequest>],
     ) -> Result<(StepReport, Vec<(usize, ActiveRequest)>)> {
-        let mut active: Vec<&mut ActiveRequest> =
-            lanes.iter_mut().filter_map(|l| l.as_mut()).collect();
-        if active.is_empty() {
-            return Ok((StepReport::default(), Vec::new()));
+        match self.step_submit(lanes)? {
+            None => Ok((StepReport::default(), Vec::new())),
+            Some(pending) => self.step_complete(pending, lanes),
         }
-        let report = self.decode_step(&mut active)?;
-        drop(active);
-        let mut retired = Vec::new();
-        for (i, lane) in lanes.iter_mut().enumerate() {
-            if lane.as_ref().map_or(false, |ar| ar.done) {
-                let mut ar = lane.take().unwrap();
-                // retired lanes return their arena pages immediately —
-                // admission headroom must not wait for the caller to
-                // drop the finished request
-                ar.slab.release_pages();
-                retired.push((i, ar));
-            }
-        }
-        Ok((report, retired))
     }
 
     /// Run a set of requests to completion with continuous batching;

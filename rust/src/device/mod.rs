@@ -1,0 +1,390 @@
+//! The dedicated device thread.
+//!
+//! The PJRT client inside [`Runtime`] is not `Send`: the XLA C-API
+//! handles are thread-affine, so the one hard rule of the threaded
+//! engine is that **every device call executes on the single thread
+//! that constructed the `Runtime`**. This module owns that rule. The
+//! device thread is spawned with a factory closure, builds the
+//! `Runtime` in place, and then serves [`DeviceCall`]s from a bounded
+//! channel in strict FIFO order. Everything that crosses the channel is
+//! plain owned data (`Vec`s, `Copy` scalars, output structs), so every
+//! other thread in the process is free to be a real thread.
+//!
+//! Backpressure: the channel is bounded (`QUEUE_DEPTH`). The device
+//! thread never blocks on the engine — it only receives, executes and
+//! replies — so a full queue blocks the *caller*, which is the correct
+//! direction and cannot deadlock (docs/CONCURRENCY.md).
+//!
+//! The decode/extend replies carry the lane-gather scratch buffers back
+//! to the caller ([`DecodeDone::k`]/[`DecodeDone::v`]): the engine
+//! moves its scratch `Vec`s into the call, the device slices the front
+//! it needs, and the reply returns the allocation for reuse — no
+//! per-step buffer churn on either side.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Manifest, ModelMeta};
+use crate::runtime::{AnalysisOut, DecodeOut, ExtendOut, PrefillOut, Runtime, StepTiming};
+
+/// Bounded request-queue depth. Deep enough that a prefill or extend
+/// can queue behind an in-flight decode without blocking the engine's
+/// overlap window; shallow enough that backpressure reaches admission
+/// instead of hiding in the channel.
+pub const QUEUE_DEPTH: usize = 4;
+
+/// One request to the device thread. Args are owned; the reply sender
+/// is the caller's rendezvous.
+pub enum DeviceCall {
+    Prefill {
+        bucket: usize,
+        ids: Vec<i32>,
+        patches: Vec<f32>,
+        is_vision: Vec<f32>,
+        n_tokens: usize,
+        n_prefix: usize,
+        reply: Sender<Result<(PrefillOut, StepTiming)>>,
+    },
+    Decode {
+        batch: usize,
+        capacity: usize,
+        tokens: Vec<i32>,
+        positions: Vec<i32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        lengths: Vec<i32>,
+        reply: Sender<DecodeDone>,
+    },
+    Extend {
+        batch: usize,
+        chunk: usize,
+        capacity: usize,
+        tokens: Vec<i32>,
+        positions: Vec<i32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        lengths: Vec<i32>,
+        n_new: Vec<i32>,
+        reply: Sender<ExtendDone>,
+    },
+    Analysis {
+        bucket: usize,
+        ids: Vec<i32>,
+        patches: Vec<f32>,
+        is_vision: Vec<f32>,
+        n_tokens: usize,
+        reply: Sender<Result<(AnalysisOut, StepTiming)>>,
+    },
+    Warmup {
+        batches: Vec<usize>,
+        reply: Sender<Result<()>>,
+    },
+}
+
+/// Decode reply: the result plus the gather scratch moved back to the
+/// caller for reuse.
+pub struct DecodeDone {
+    pub result: Result<(DecodeOut, StepTiming)>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Extend reply; same scratch round-trip as [`DecodeDone`].
+pub struct ExtendDone {
+    pub result: Result<(ExtendOut, StepTiming)>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Owns the join handle; the last [`DeviceHandle`] clone to drop joins
+/// the device thread (its senders are gone by then, so the serve loop
+/// has already seen the disconnect and returned).
+struct DeviceThread {
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Drop for DeviceThread {
+    fn drop(&mut self) {
+        if let Some(h) = self.join.lock().unwrap().take() {
+            if h.join().is_err() {
+                eprintln!("device thread panicked during shutdown");
+            }
+        }
+    }
+}
+
+/// Cloneable handle to the device thread. `Send + Sync` by
+/// construction: the manifest is immutable shared data, the busy
+/// counter is atomic, and each clone owns its *own* channel sender.
+pub struct DeviceHandle {
+    // field order matters: `tx` must drop before `shared`, so that the
+    // last handle's drop disconnects the channel (serve loop exits)
+    // before `DeviceThread::drop` joins the thread.
+    tx: SyncSender<DeviceCall>,
+    manifest: Arc<Manifest>,
+    busy_us: Arc<AtomicU64>,
+    shared: Arc<DeviceThread>,
+}
+
+impl Clone for DeviceHandle {
+    fn clone(&self) -> Self {
+        DeviceHandle {
+            tx: self.tx.clone(),
+            manifest: Arc::clone(&self.manifest),
+            busy_us: Arc::clone(&self.busy_us),
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+impl std::fmt::Debug for DeviceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceHandle")
+            .field("model", &self.manifest.model)
+            .field("busy_us", &self.busy_us.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+/// Spawn the device thread. The factory runs *on the new thread* (the
+/// `Runtime` never crosses a thread boundary); its `Manifest` is cloned
+/// back over a bootstrap channel so the handle can answer shape/meta
+/// questions without a device round trip. A factory error is returned
+/// here, after the thread has been joined.
+pub fn spawn(
+    factory: impl FnOnce() -> Result<Runtime> + Send + 'static,
+) -> Result<DeviceHandle> {
+    let (boot_tx, boot_rx) = mpsc::channel::<Result<Manifest>>();
+    let (tx, rx) = mpsc::sync_channel::<DeviceCall>(QUEUE_DEPTH);
+    let busy_us = Arc::new(AtomicU64::new(0));
+    let busy = Arc::clone(&busy_us);
+    let join = thread::Builder::new()
+        .name("hae-device".into())
+        .spawn(move || {
+            let rt = match factory() {
+                Ok(rt) => {
+                    // a dropped bootstrap receiver means the spawner
+                    // gave up; nothing to serve
+                    if boot_tx.send(Ok(rt.manifest.clone())).is_err() {
+                        return;
+                    }
+                    rt
+                }
+                Err(e) => {
+                    let _ = boot_tx.send(Err(e));
+                    return;
+                }
+            };
+            serve(&rt, &rx, &busy);
+        })
+        .map_err(|e| anyhow!("spawning device thread: {e}"))?;
+    let manifest = match boot_rx.recv() {
+        Ok(Ok(m)) => m,
+        Ok(Err(e)) => {
+            let _ = join.join();
+            return Err(e);
+        }
+        Err(_) => {
+            let _ = join.join();
+            return Err(anyhow!("device thread died before bootstrap"));
+        }
+    };
+    Ok(DeviceHandle {
+        tx,
+        manifest: Arc::new(manifest),
+        busy_us,
+        shared: Arc::new(DeviceThread { join: Mutex::new(Some(join)) }),
+    })
+}
+
+/// The device thread's serve loop: strict FIFO, never blocks on a
+/// caller (a dropped reply receiver is ignored), exits when every
+/// handle is gone.
+fn serve(rt: &Runtime, rx: &Receiver<DeviceCall>, busy_us: &AtomicU64) {
+    let m = rt.meta();
+    let row = m.n_heads * m.d_head;
+    let n_layers = m.n_layers;
+    while let Ok(call) = rx.recv() {
+        let t0 = Instant::now();
+        match call {
+            DeviceCall::Prefill { bucket, ids, patches, is_vision, n_tokens, n_prefix, reply } => {
+                let r = rt.prefill(bucket, &ids, &patches, &is_vision, n_tokens, n_prefix);
+                let _ = reply.send(r);
+            }
+            DeviceCall::Decode { batch, capacity, tokens, positions, k, v, lengths, reply } => {
+                // scratch is sized for the engine's max batch; the
+                // graph wants exactly batch * slab floats
+                let want = batch * n_layers * capacity * row;
+                let result = if k.len() < want || v.len() < want {
+                    Err(anyhow!(
+                        "decode scratch too small: {} < {} floats",
+                        k.len().min(v.len()),
+                        want
+                    ))
+                } else {
+                    rt.decode(batch, capacity, &tokens, &positions, &k[..want], &v[..want], &lengths)
+                };
+                let _ = reply.send(DecodeDone { result, k, v });
+            }
+            DeviceCall::Extend { batch, chunk, capacity, tokens, positions, k, v, lengths, n_new, reply } => {
+                let want = batch * n_layers * capacity * row;
+                let result = if k.len() < want || v.len() < want {
+                    Err(anyhow!(
+                        "extend scratch too small: {} < {} floats",
+                        k.len().min(v.len()),
+                        want
+                    ))
+                } else {
+                    rt.extend(
+                        batch, chunk, capacity, &tokens, &positions, &k[..want], &v[..want],
+                        &lengths, &n_new,
+                    )
+                };
+                let _ = reply.send(ExtendDone { result, k, v });
+            }
+            DeviceCall::Analysis { bucket, ids, patches, is_vision, n_tokens, reply } => {
+                let r = rt.analysis(bucket, &ids, &patches, &is_vision, n_tokens);
+                let _ = reply.send(r);
+            }
+            DeviceCall::Warmup { batches, reply } => {
+                let _ = reply.send(rt.warmup(&batches));
+            }
+        }
+        busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
+impl DeviceHandle {
+    pub fn meta(&self) -> &ModelMeta {
+        &self.manifest.model
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Cumulative wall-time the device thread has spent executing calls
+    /// (µs). `busy / elapsed` is the device-utilization companion to
+    /// the scheduler's overlap fraction.
+    pub fn busy_us(&self) -> u64 {
+        self.busy_us.load(Ordering::Relaxed)
+    }
+
+    fn send(&self, call: DeviceCall) -> Result<()> {
+        self.tx
+            .send(call)
+            .map_err(|_| anyhow!("device thread disconnected"))
+    }
+
+    pub fn prefill(
+        &self,
+        bucket: usize,
+        ids: &[i32],
+        patches: &[f32],
+        is_vision: &[f32],
+        n_tokens: usize,
+        n_prefix: usize,
+    ) -> Result<(PrefillOut, StepTiming)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(DeviceCall::Prefill {
+            bucket,
+            ids: ids.to_vec(),
+            patches: patches.to_vec(),
+            is_vision: is_vision.to_vec(),
+            n_tokens,
+            n_prefix,
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("device thread disconnected"))?
+    }
+
+    /// Submit a decode step and return immediately; the caller overlaps
+    /// host work and collects the reply (with its scratch buffers) from
+    /// the receiver. Scratch `Vec`s are moved in and handed back in the
+    /// [`DecodeDone`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_async(
+        &self,
+        batch: usize,
+        capacity: usize,
+        tokens: Vec<i32>,
+        positions: Vec<i32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        lengths: Vec<i32>,
+    ) -> Result<Receiver<DecodeDone>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(DeviceCall::Decode { batch, capacity, tokens, positions, k, v, lengths, reply })?;
+        Ok(rx)
+    }
+
+    /// Blocking decode: submit and wait.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        batch: usize,
+        capacity: usize,
+        tokens: Vec<i32>,
+        positions: Vec<i32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        lengths: Vec<i32>,
+    ) -> Result<DecodeDone> {
+        let rx = self.decode_async(batch, capacity, tokens, positions, k, v, lengths)?;
+        rx.recv().map_err(|_| anyhow!("device thread disconnected"))
+    }
+
+    /// Blocking chunked extend: submit and wait. Queues FIFO behind any
+    /// in-flight decode, which is what lets a warm start's suffix
+    /// recompute ride the overlap window.
+    #[allow(clippy::too_many_arguments)]
+    pub fn extend(
+        &self,
+        batch: usize,
+        chunk: usize,
+        capacity: usize,
+        tokens: Vec<i32>,
+        positions: Vec<i32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        lengths: Vec<i32>,
+        n_new: Vec<i32>,
+    ) -> Result<ExtendDone> {
+        let (reply, rx) = mpsc::channel();
+        self.send(DeviceCall::Extend {
+            batch, chunk, capacity, tokens, positions, k, v, lengths, n_new, reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("device thread disconnected"))
+    }
+
+    pub fn analysis(
+        &self,
+        bucket: usize,
+        ids: &[i32],
+        patches: &[f32],
+        is_vision: &[f32],
+        n_tokens: usize,
+    ) -> Result<(AnalysisOut, StepTiming)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(DeviceCall::Analysis {
+            bucket,
+            ids: ids.to_vec(),
+            patches: patches.to_vec(),
+            is_vision: is_vision.to_vec(),
+            n_tokens,
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("device thread disconnected"))?
+    }
+
+    pub fn warmup(&self, batches: &[usize]) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(DeviceCall::Warmup { batches: batches.to_vec(), reply })?;
+        rx.recv().map_err(|_| anyhow!("device thread disconnected"))?
+    }
+}

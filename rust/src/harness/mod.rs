@@ -67,13 +67,13 @@ pub fn load_grammar(dir: &Path) -> StoryGrammar {
     StoryGrammar::load(dir).unwrap_or_else(|_| StoryGrammar::uniform())
 }
 
-/// Build a fresh engine for a policy (each policy gets its own engine so
-/// executable compile time never leaks into another policy's measurement;
-/// call `engine.rt.warmup` before timing).
+/// Build a fresh engine for a policy (each policy gets its own engine —
+/// and its own device thread — so executable compile time never leaks
+/// into another policy's measurement; call `engine.warmup()` before
+/// timing).
 pub fn engine_for(policy: PolicyKind, batch: usize, capture: bool) -> Result<Engine> {
-    let rt = load_runtime()?;
-    Engine::new(
-        rt,
+    Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy,
             batch,
@@ -95,18 +95,19 @@ pub fn widest_batch() -> usize {
 /// join handle and the server's actual address. The listener is bound
 /// HERE on port 0 — the OS picks a free port, read back via
 /// `local_addr` — so parallel test binaries can never collide on a
-/// hard-coded port (the old fixed-port scheme was a CI flake); the
-/// engine is still constructed inside the thread because the PJRT
-/// client is not Send, but a bound `TcpListener` is. `prefix_cache`
-/// toggles the engine's radix-tree prefix cache (warm hits are
-/// byte-identical to cold runs, so tests default it on; the serve bench
-/// compares on vs off).
+/// hard-coded port (the old fixed-port scheme was a CI flake).
+/// `prefix_cache` toggles the engine's radix-tree prefix cache (warm
+/// hits are byte-identical to cold runs, so tests default it on; the
+/// serve bench compares on vs off). `engine_threads` selects the serve
+/// loop's overlap discipline (1 = sequential rounds, ≥2 = host work
+/// overlaps the device window; see `ServerConfig::engine_threads`).
 pub fn spawn_server(
     policy: PolicyKind,
     batch: usize,
     kv_budget: Option<usize>,
     sched_policy: SchedPolicy,
     prefix_cache: bool,
+    engine_threads: usize,
 ) -> (std::thread::JoinHandle<()>, String) {
     let listener =
         std::net::TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral port");
@@ -116,9 +117,10 @@ pub fn spawn_server(
         .to_string();
     let cfg_addr = addr.clone();
     let handle = std::thread::spawn(move || {
-        let rt = Runtime::load(&artifact_dir()).expect("artifacts built?");
-        let engine = Engine::new(
-            rt,
+        // the engine spawns its own device thread; the PJRT client lives
+        // there (it is not Send), so construction can happen anywhere
+        let engine = Engine::from_artifact_dir(
+            &artifact_dir(),
             EngineConfig { policy, batch, prefix_cache, ..EngineConfig::default() },
         )
         .expect("engine for compiled batch");
@@ -128,6 +130,7 @@ pub fn spawn_server(
             queue_depth: 64,
             kv_budget,
             sched_policy,
+            engine_threads,
         };
         // surface engine errors as a thread panic so callers see the
         // root cause on join() instead of a silent dead server
@@ -156,7 +159,7 @@ pub struct PolicyRun {
 
 /// Run requests to completion (batch width from engine cfg), timed.
 pub fn run_policy(engine: &mut Engine, requests: Vec<Request>) -> Result<PolicyRun> {
-    engine.rt.warmup(&[engine.cfg.batch])?;
+    engine.warmup()?;
     let label = engine.cfg.policy.label();
     let t0 = Instant::now();
     let (finished, _) = engine.run_batched(requests)?;

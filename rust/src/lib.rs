@@ -9,6 +9,7 @@
 pub mod attention;
 pub mod cache;
 pub mod coordinator;
+pub mod device;
 pub mod eval;
 pub mod harness;
 pub mod model;

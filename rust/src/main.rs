@@ -48,6 +48,10 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
                     histograms (queryable via {"kind":"trace"} and the
                     stats "phases" block; default on)
   --sched-policy P  serve: fifo | priority (default fifo)
+  --engine-threads N serve: 1 = strictly sequential scheduler rounds,
+                    >=2 = pipelined rounds overlapping host work (reply
+                    delivery, ingest, lane backfill) with the device
+                    window (default 2)
   --verbose         generate: print full token streams";
 
 fn main() -> Result<()> {
@@ -86,7 +90,6 @@ fn build_engine(
     artifact_dir: &std::path::Path,
     args: &Args,
 ) -> Result<(Engine, StoryGrammar)> {
-    let rt = Runtime::load(artifact_dir)?;
     let policy = PolicyKind::parse(args.get_or("policy", "hae"))
         .map_err(|e| anyhow!(e))?;
     let kv_budget = kv_budget_arg(args)?;
@@ -125,7 +128,7 @@ fn build_engine(
     };
     let grammar =
         StoryGrammar::load(artifact_dir).unwrap_or_else(|_| StoryGrammar::uniform());
-    Ok((Engine::new(rt, cfg)?, grammar))
+    Ok((Engine::from_artifact_dir(artifact_dir, cfg)?, grammar))
 }
 
 fn info(artifact_dir: &std::path::Path) -> Result<()> {
@@ -168,7 +171,7 @@ fn info(artifact_dir: &std::path::Path) -> Result<()> {
 
 fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
     let (mut engine, grammar) = build_engine(artifact_dir, args)?;
-    let meta = engine.rt.meta().clone();
+    let meta = engine.meta().clone();
     let kind = WorkloadKind::parse(args.get_or("kind", "story"))
         .ok_or_else(|| anyhow!("unknown --kind (accepted: {})", WorkloadKind::accepted()))?;
     let n = args.usize("n", 4);
@@ -176,7 +179,7 @@ fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
     let verbose = args.flag("verbose");
 
     let requests = RequestBuilder::new(&meta, &grammar, seed).make_batch(kind, n);
-    engine.rt.warmup(&[engine.cfg.batch])?;
+    engine.warmup()?;
     let t0 = std::time::Instant::now();
     let (finished, reports) = engine.run_batched(requests)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -247,11 +250,16 @@ fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
     let sched_policy = SchedPolicy::parse(args.get_or("sched-policy", "fifo"))
         .ok_or_else(|| anyhow!("unknown --sched-policy (fifo|priority)"))?;
     let kv_budget = kv_budget_arg(args)?;
+    let engine_threads = args.usize("engine-threads", 2);
+    if engine_threads == 0 {
+        return Err(anyhow!("bad --engine-threads 0 (accepted: an integer ≥ 1)"));
+    }
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
         queue_depth: args.usize("queue", 64),
         kv_budget,
         sched_policy,
+        engine_threads,
     };
     serve(engine, cfg, grammar)
 }

@@ -128,6 +128,31 @@ pub fn schema_problems(j: &Json) -> Vec<String> {
                     out.push(format!("metric '{}' missing 'unit'", k));
                 }
             }
+            // serve_batch runs with artifacts set config.engine_sections
+            // and must then carry the pipeline-comparison keys — a report
+            // that silently dropped them would hide a lost measurement
+            let engine_sections = j
+                .path(&["config", "engine_sections"])
+                .and_then(|v| v.as_str())
+                == Some("true");
+            if j.get("bench").and_then(|v| v.as_str()) == Some("serve_batch")
+                && engine_sections
+            {
+                for key in [
+                    "decode_tok_s_single_thread",
+                    "decode_tok_s_pipelined",
+                    "ttft_p50_ms_single_thread",
+                    "ttft_p50_ms_pipelined",
+                    "host_device_overlap_frac",
+                ] {
+                    if !m.contains_key(key) {
+                        out.push(format!(
+                            "serve_batch with engine_sections misses metric '{}'",
+                            key
+                        ));
+                    }
+                }
+            }
         }
     }
     out
@@ -152,6 +177,25 @@ mod tests {
             j.path(&["config", "iters"]).and_then(|v| v.as_str()),
             Some("100")
         );
+    }
+
+    #[test]
+    fn serve_batch_engine_sections_requires_pipeline_keys() {
+        let mut r = BenchReport::new("serve_batch");
+        r.config("engine_sections", "true");
+        r.metric("req_s_hae_b4_c8", 1.0, "req/s");
+        let probs = schema_problems(&r.to_json());
+        assert_eq!(probs.len(), 5, "one problem per missing key: {:?}", probs);
+        r.metric("decode_tok_s_single_thread", 10.0, "tok/s")
+            .metric("decode_tok_s_pipelined", 11.0, "tok/s")
+            .metric("ttft_p50_ms_single_thread", 5.0, "ms")
+            .metric("ttft_p50_ms_pipelined", 4.0, "ms")
+            .metric("host_device_overlap_frac", 0.4, "frac");
+        assert!(schema_problems(&r.to_json()).is_empty());
+        // without the flag (artifacts absent) the keys are optional
+        let mut bare = BenchReport::new("serve_batch");
+        bare.metric("lane_sync_full_us_per_step", 1.0, "us");
+        assert!(schema_problems(&bare.to_json()).is_empty());
     }
 
     #[test]

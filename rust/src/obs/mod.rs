@@ -1,22 +1,24 @@
 //! Observability layer: request-lifecycle tracing, per-phase histograms,
 //! Prometheus exposition and machine-readable bench reports.
 //!
-//! The serving stack is single-threaded around a PJRT client that is not
-//! `Send`, so the shared handle is an `Rc<RefCell<Obs>>` (the same pattern
-//! as `SharedPagePool`): the engine owns the instance, the scheduler clones
-//! the handle, and the server reaches it through the scheduler's stats
-//! methods. Recording on the hot path is alloc-free (pre-sized trace ring,
-//! `Copy` events, fixed-bucket histograms) and globally gated by `enabled`
-//! so the overhead guardrail in `benches/perf_serve_batch.rs` can measure
-//! tracing on vs off.
+//! The serving stack is thread-parallel: the engine loop, the device
+//! thread and the server's connection threads all record, so the shared
+//! handle is an `Arc<Obs>` with the enabled flag in an atomic and the
+//! mutable state (trace ring + histograms) behind one `Mutex`. The hot
+//! path stays cheap: a disabled `Obs` costs one relaxed atomic load per
+//! call site and never touches the lock, which is what keeps the
+//! overhead guardrail in `benches/perf_serve_batch.rs` honest. Recording
+//! itself is alloc-free (pre-sized trace ring, `Copy` events,
+//! fixed-bucket histograms); the lock is never held across a device
+//! call (docs/CONCURRENCY.md).
 
 pub mod bench_report;
 pub mod hist;
 pub mod prometheus;
 pub mod trace;
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 pub use bench_report::BenchReport;
 pub use hist::Histogram;
@@ -24,12 +26,11 @@ pub use trace::{EvictKind, RetireReason, TraceEvent, TraceJournal, TraceRecord};
 
 use crate::util::json::{num, obj, Json};
 
-/// All engine-side observability state: the trace journal plus the phase
-/// histograms the scheduler's metrics registry does not own (it keeps
-/// queue-wait/TTFT/e2e, which are scheduler-clock phases).
+/// All mutable engine-side observability state: the trace journal plus
+/// the phase histograms the scheduler's metrics registry does not own
+/// (it keeps queue-wait/TTFT/e2e, which are scheduler-clock phases).
 #[derive(Debug)]
-pub struct Obs {
-    enabled: bool,
+pub struct ObsInner {
     pub trace: TraceJournal,
     /// Cold prefill device time per request (ms).
     pub prefill_ms: Histogram,
@@ -47,13 +48,9 @@ pub struct Obs {
     pub evicted_per_decision: Histogram,
 }
 
-/// Single-threaded shared handle (see module docs).
-pub type SharedObs = Rc<RefCell<Obs>>;
-
-impl Obs {
-    pub fn new(enabled: bool) -> Self {
-        Obs {
-            enabled,
+impl ObsInner {
+    fn new() -> Self {
+        ObsInner {
             trace: TraceJournal::new(),
             prefill_ms: Histogram::latency_ms(),
             partial_replay_ms: Histogram::latency_ms(),
@@ -64,37 +61,72 @@ impl Obs {
             evicted_per_decision: Histogram::count_scale(),
         }
     }
+}
+
+/// Thread-safe observability handle (see module docs). The enabled gate
+/// lives outside the lock so disabled tracing stays off the hot path.
+#[derive(Debug)]
+pub struct Obs {
+    enabled: AtomicBool,
+    inner: Mutex<ObsInner>,
+}
+
+/// Shared handle: cloned by the engine, scheduler, server and benches.
+pub type SharedObs = Arc<Obs>;
+
+impl Obs {
+    pub fn new(enabled: bool) -> Self {
+        Obs {
+            enabled: AtomicBool::new(enabled),
+            inner: Mutex::new(ObsInner::new()),
+        }
+    }
 
     pub fn shared(enabled: bool) -> SharedObs {
-        Rc::new(RefCell::new(Obs::new(enabled)))
+        Arc::new(Obs::new(enabled))
     }
 
     pub fn enabled(&self) -> bool {
-        self.enabled
+        self.enabled.load(Ordering::Relaxed)
     }
 
-    pub fn set_enabled(&mut self, on: bool) {
-        self.enabled = on;
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Direct access to the journal/histograms, ungated — for stats
+    /// replies and tests. Never hold this guard across a device call.
+    pub fn inner(&self) -> MutexGuard<'_, ObsInner> {
+        self.inner.lock().unwrap()
     }
 
     /// Record one lifecycle event; no-op when tracing is disabled.
-    pub fn event(&mut self, id: u64, ev: TraceEvent) {
-        if self.enabled {
-            self.trace.record(id, ev);
+    pub fn event(&self, id: u64, ev: TraceEvent) {
+        if self.enabled() {
+            self.inner().trace.record(id, ev);
+        }
+    }
+
+    /// Run a recording closure against the histograms under the lock;
+    /// no-op when tracing is disabled. The closure must not block.
+    pub fn record(&self, f: impl FnOnce(&mut ObsInner)) {
+        if self.enabled() {
+            f(&mut self.inner());
         }
     }
 
     /// Engine-phase histogram summaries for the `phases` block of the JSON
     /// stats reply (additive — the flat legacy keys are untouched).
     pub fn phases_json(&self) -> Json {
+        let o = self.inner();
         obj(vec![
-            ("prefill_ms", self.prefill_ms.summary_json()),
-            ("partial_replay_ms", self.partial_replay_ms.summary_json()),
-            ("extend_chunk_ms", self.extend_chunk_ms.summary_json()),
-            ("decode_step_ms", self.decode_step_ms.summary_json()),
-            ("retained_frac_vision", self.retained_frac_vision.summary_json()),
-            ("retained_frac_text", self.retained_frac_text.summary_json()),
-            ("evicted_per_decision", self.evicted_per_decision.summary_json()),
+            ("prefill_ms", o.prefill_ms.summary_json()),
+            ("partial_replay_ms", o.partial_replay_ms.summary_json()),
+            ("extend_chunk_ms", o.extend_chunk_ms.summary_json()),
+            ("decode_step_ms", o.decode_step_ms.summary_json()),
+            ("retained_frac_vision", o.retained_frac_vision.summary_json()),
+            ("retained_frac_text", o.retained_frac_text.summary_json()),
+            ("evicted_per_decision", o.evicted_per_decision.summary_json()),
         ])
     }
 
@@ -102,15 +134,16 @@ impl Obs {
     /// With `id` present, returns that request's retained lifecycle; else
     /// the newest `last` events journal-wide (default 64).
     pub fn trace_json(&self, id: Option<u64>, last: Option<usize>) -> Json {
+        let o = self.inner();
         let records = match id {
-            Some(rid) => self.trace.for_request(rid),
-            None => self.trace.last(last.unwrap_or(64)),
+            Some(rid) => o.trace.for_request(rid),
+            None => o.trace.last(last.unwrap_or(64)),
         };
         let events: Vec<Json> = records.iter().map(|r| r.to_json()).collect();
         let mut pairs = vec![
             ("kind", Json::Str("trace".into())),
             ("count", num(events.len() as f64)),
-            ("dropped", num(self.trace.total_recorded().saturating_sub(self.trace.len() as u64) as f64)),
+            ("dropped", num(o.trace.total_recorded().saturating_sub(o.trace.len() as u64) as f64)),
         ];
         if let Some(rid) = id {
             pairs.push(("id", num(rid as f64)));
@@ -122,14 +155,15 @@ impl Obs {
     /// Render the engine-phase histograms in Prometheus exposition format
     /// (the scheduler appends its own registry series).
     pub fn prometheus_body(&self, out: &mut String) {
-        prometheus::histogram(out, "hae_prefill_ms", "cold prefill device time per request (ms)", &self.prefill_ms);
-        prometheus::histogram(out, "hae_partial_replay_ms", "warm-start suffix recompute device time per request (ms)", &self.partial_replay_ms);
-        prometheus::histogram(out, "hae_extend_chunk_ms", "device time per chunked-extend call (ms)", &self.extend_chunk_ms);
-        prometheus::histogram(out, "hae_decode_step_ms", "device time per decode step (ms)", &self.decode_step_ms);
-        prometheus::histogram(out, "hae_retained_frac_vision", "fraction of vision prompt tokens retained at prefill", &self.retained_frac_vision);
-        prometheus::histogram(out, "hae_retained_frac_text", "fraction of text prompt tokens retained at prefill", &self.retained_frac_text);
-        prometheus::histogram(out, "hae_evicted_slots_per_decision", "KV slots evicted per eviction decision", &self.evicted_per_decision);
-        prometheus::counter(out, "hae_trace_events_total", "lifecycle trace events recorded", self.trace.total_recorded() as f64);
+        let o = self.inner();
+        prometheus::histogram(out, "hae_prefill_ms", "cold prefill device time per request (ms)", &o.prefill_ms);
+        prometheus::histogram(out, "hae_partial_replay_ms", "warm-start suffix recompute device time per request (ms)", &o.partial_replay_ms);
+        prometheus::histogram(out, "hae_extend_chunk_ms", "device time per chunked-extend call (ms)", &o.extend_chunk_ms);
+        prometheus::histogram(out, "hae_decode_step_ms", "device time per decode step (ms)", &o.decode_step_ms);
+        prometheus::histogram(out, "hae_retained_frac_vision", "fraction of vision prompt tokens retained at prefill", &o.retained_frac_vision);
+        prometheus::histogram(out, "hae_retained_frac_text", "fraction of text prompt tokens retained at prefill", &o.retained_frac_text);
+        prometheus::histogram(out, "hae_evicted_slots_per_decision", "KV slots evicted per eviction decision", &o.evicted_per_decision);
+        prometheus::counter(out, "hae_trace_events_total", "lifecycle trace events recorded", o.trace.total_recorded() as f64);
     }
 }
 
@@ -139,18 +173,20 @@ mod tests {
 
     #[test]
     fn disabled_obs_records_nothing() {
-        let mut o = Obs::new(false);
+        let o = Obs::new(false);
         o.event(1, TraceEvent::Enqueued);
         o.event(1, TraceEvent::DecodeStep);
-        assert_eq!(o.trace.total_recorded(), 0);
+        o.record(|i| i.decode_step_ms.record(1.0));
+        assert_eq!(o.inner().trace.total_recorded(), 0);
+        assert_eq!(o.inner().decode_step_ms.count(), 0);
         o.set_enabled(true);
         o.event(1, TraceEvent::Enqueued);
-        assert_eq!(o.trace.total_recorded(), 1);
+        assert_eq!(o.inner().trace.total_recorded(), 1);
     }
 
     #[test]
     fn trace_json_by_id_and_by_last() {
-        let mut o = Obs::new(true);
+        let o = Obs::new(true);
         o.event(1, TraceEvent::Enqueued);
         o.event(2, TraceEvent::Enqueued);
         o.event(1, TraceEvent::Retired { reason: RetireReason::Completed });
@@ -167,8 +203,8 @@ mod tests {
 
     #[test]
     fn phases_json_has_all_histograms() {
-        let mut o = Obs::new(true);
-        o.prefill_ms.record(12.0);
+        let o = Obs::new(true);
+        o.record(|i| i.prefill_ms.record(12.0));
         let p = o.phases_json();
         for key in [
             "prefill_ms",
@@ -186,12 +222,33 @@ mod tests {
 
     #[test]
     fn prometheus_body_is_valid_exposition() {
-        let mut o = Obs::new(true);
-        o.decode_step_ms.record(0.5);
-        o.evicted_per_decision.record(8.0);
+        let o = Obs::new(true);
+        o.record(|i| i.decode_step_ms.record(0.5));
+        o.record(|i| i.evicted_per_decision.record(8.0));
         let mut out = String::new();
         o.prometheus_body(&mut out);
         assert!(prometheus::parses_as_exposition(&out), "{}", out);
         assert!(out.contains("hae_decode_step_ms_bucket"));
+    }
+
+    #[test]
+    fn shared_obs_is_recordable_from_many_threads() {
+        use std::thread;
+        let o = Obs::shared(true);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let o = Arc::clone(&o);
+            handles.push(thread::spawn(move || {
+                for i in 0..50 {
+                    o.event(t * 1000 + i, TraceEvent::Enqueued);
+                    o.record(|inner| inner.decode_step_ms.record(0.1));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("obs recorder panicked");
+        }
+        assert_eq!(o.inner().trace.total_recorded(), 200);
+        assert_eq!(o.inner().decode_step_ms.count(), 200);
     }
 }

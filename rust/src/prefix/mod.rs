@@ -367,6 +367,10 @@ pub struct PrefixStats {
     /// prompt tokens never recomputed thanks to warm hits (exact hits
     /// contribute the whole prompt, partial hits the shared prefix)
     pub prefill_tokens_skipped: u64,
+    /// pages deduplicated at registration: the entry recorded an
+    /// already-pinned bit-identical page instead of pinning its own copy
+    /// (the duplicate frees with its registering slab)
+    pub dedup_pages: u64,
 }
 
 pub struct PrefixCache {
@@ -381,6 +385,7 @@ pub struct PrefixCache {
     lru_evictions: u64,
     insertions: u64,
     skipped_tokens: u64,
+    dedup_pages: u64,
 }
 
 impl PrefixCache {
@@ -397,6 +402,7 @@ impl PrefixCache {
             lru_evictions: 0,
             insertions: 0,
             skipped_tokens: 0,
+            dedup_pages: 0,
         }
     }
 
@@ -455,6 +461,7 @@ impl PrefixCache {
             lru_evictions: self.lru_evictions,
             insertions: self.insertions,
             prefill_tokens_skipped: self.skipped_tokens,
+            dedup_pages: self.dedup_pages,
         }
     }
 
@@ -671,9 +678,15 @@ impl PrefixCache {
         if self.tree.len() >= self.max_entries && !self.evict_lru(pool) {
             return false;
         }
+        // cross-entry page dedup: the same image reaching the cache under
+        // a different whole-prompt key (new question, shuffled text) would
+        // otherwise pin a second bit-identical copy of its vision pages
+        let mut pages = pages;
+        let deduped = self.dedup_incoming(pool, &key, &mut pages);
         if !pool.retain_all(&pages) {
             return false;
         }
+        self.dedup_pages += deduped;
         let entry = PrefixEntry {
             kind,
             key: key.clone(),
@@ -697,6 +710,62 @@ impl PrefixCache {
         self.tree.insert(&key, id);
         self.insertions += 1;
         true
+    }
+
+    /// Cross-entry page dedup at registration: rewrite each incoming
+    /// page to an existing entry's bit-identical page where one exists,
+    /// so the new entry pins the cached copy and the duplicate frees
+    /// with its registering slab (or immediately, for the cache-filled
+    /// pages of a prefix registration). Returns the pages swapped; the
+    /// caller folds that into the stats counter only once the
+    /// registration actually sticks.
+    ///
+    /// Candidates are restricted to entries sharing a vision-segment
+    /// content hash with the incoming key: content-hashed image segments
+    /// are the realistic source of cross-key duplicates (MINE-style
+    /// cross-request image reuse), and the restriction bounds the
+    /// full-page compares to entries already known to carry the same
+    /// image. Comparison is [`PagePool::pages_equal`] — whole-page
+    /// bit equality, never hash-only — so a hash collision can waste a
+    /// compare but can never alias different KV.
+    fn dedup_incoming(&self, pool: &PagePool, key: &[KeySym], pages: &mut [u32]) -> u64 {
+        let vision: std::collections::BTreeSet<u64> = key
+            .iter()
+            .filter_map(|s| match s {
+                KeySym::Vision(h) => Some(*h),
+                _ => None,
+            })
+            .collect();
+        if vision.is_empty() {
+            return 0;
+        }
+        let candidates: Vec<u32> = self
+            .entries
+            .iter()
+            .flatten()
+            .filter(|e| {
+                e.key
+                    .iter()
+                    .any(|s| matches!(s, KeySym::Vision(h) if vision.contains(h)))
+            })
+            .flat_map(|e| e.pages.iter().copied())
+            .collect();
+        if candidates.is_empty() {
+            return 0;
+        }
+        let mut swapped = 0;
+        for p in pages.iter_mut() {
+            // a page already pinned by a candidate entry is the shared
+            // copy itself (overlapping entries from a partial warm start)
+            if candidates.contains(p) {
+                continue;
+            }
+            if let Some(&q) = candidates.iter().find(|&&q| pool.pages_equal(q, *p)) {
+                *p = q;
+                swapped += 1;
+            }
+        }
+        swapped
     }
 
     /// Evict the least-recently-used entry, dropping its page references
@@ -1186,6 +1255,113 @@ mod tests {
         assert_eq!(c.reclaim(&mut p, 1000), 1);
         assert!(c.is_empty());
         assert_eq!(p.free_pages(), 16);
+    }
+
+    /// Fill every slot of `page` with a value derived from `seed` (the
+    /// pool is 2 layers × row 4 × 4 slots in these tests).
+    fn fill_page(p: &mut PagePool, page: u32, seed: f32) {
+        for s in 0..p.page_slots() {
+            let row = vec![seed + s as f32; p.n_layers() * p.row()];
+            p.write_slot(page, s, &row, &row);
+        }
+    }
+
+    #[test]
+    fn register_dedups_identical_vision_pages_across_keys() {
+        let mut p = pool();
+        let mut c = PrefixCache::new(8);
+        // donor A: image hash 7, one page of known content
+        let pa = p.alloc().unwrap();
+        fill_page(&mut p, pa, 1.0);
+        let key_a = vec![KeySym::Vision(7), KeySym::Text(1)];
+        assert!(c.register(&mut p, key_a, FP, vec![pa], meta_of(4), 5, vec![]));
+        assert_eq!(p.refcount(pa), 2);
+        // donor B: same image under a different whole-prompt key, its own
+        // bit-identical copy of the page
+        let pb = p.alloc().unwrap();
+        fill_page(&mut p, pb, 1.0);
+        let key_b = vec![KeySym::Vision(7), KeySym::Text(2)];
+        assert!(c.register(&mut p, key_b.clone(), FP ^ 1, vec![pb], meta_of(4), 5, vec![]));
+        // entry B pins A's page, not its own copy
+        let hit = c.lookup(&key_b, FP ^ 1).expect("entry B serves");
+        assert_eq!(hit.pages, vec![pa], "dedup swapped in the cached copy");
+        assert_eq!(p.refcount(pa), 3, "two cache pins + donor A's slab");
+        assert_eq!(p.refcount(pb), 1, "duplicate only held by donor B's slab");
+        assert_eq!(c.stats().dedup_pages, 1);
+        assert_eq!(c.pinned_pages(), 1, "one physical copy for both entries");
+        // donor B retires → the duplicate frees; the shared copy lives on
+        p.release(pb);
+        assert_eq!(p.refcount(pb), 0);
+        assert_eq!(p.stats().refcount_errors, 0);
+    }
+
+    #[test]
+    fn dedup_requires_bit_identical_content_and_a_shared_vision_key() {
+        let mut p = pool();
+        let mut c = PrefixCache::new(8);
+        let pa = p.alloc().unwrap();
+        fill_page(&mut p, pa, 1.0);
+        assert!(c.register(
+            &mut p,
+            vec![KeySym::Vision(7), KeySym::Text(1)],
+            FP,
+            vec![pa],
+            meta_of(4),
+            5,
+            vec![],
+        ));
+        // same vision hash, different page bits: no dedup (hash alone is
+        // never trusted)
+        let pb = p.alloc().unwrap();
+        fill_page(&mut p, pb, 2.0);
+        assert!(c.register(
+            &mut p,
+            vec![KeySym::Vision(7), KeySym::Text(2)],
+            FP ^ 1,
+            vec![pb],
+            meta_of(4),
+            5,
+            vec![],
+        ));
+        assert_eq!(p.refcount(pb), 2, "distinct content keeps its own pin");
+        // identical bits but no shared vision symbol: not a candidate
+        let pc = p.alloc().unwrap();
+        fill_page(&mut p, pc, 1.0);
+        assert!(c.register(
+            &mut p,
+            vec![KeySym::Vision(9), KeySym::Text(3)],
+            FP ^ 2,
+            vec![pc],
+            meta_of(4),
+            5,
+            vec![],
+        ));
+        assert_eq!(p.refcount(pc), 2, "different image hash is never scanned");
+        assert_eq!(c.stats().dedup_pages, 0);
+        assert_eq!(c.pinned_pages(), 3);
+    }
+
+    #[test]
+    fn dedup_survives_donor_entry_eviction() {
+        // entry B deduped onto entry A's page; evicting A must leave B's
+        // pin intact (pins are per-entry references, not shared state)
+        let mut p = pool();
+        let mut c = PrefixCache::new(8);
+        let pa = p.alloc().unwrap();
+        fill_page(&mut p, pa, 3.0);
+        let key_a = vec![KeySym::Vision(5), KeySym::Text(1)];
+        assert!(c.register(&mut p, key_a.clone(), FP, vec![pa], meta_of(4), 5, vec![]));
+        let pb = p.alloc().unwrap();
+        fill_page(&mut p, pb, 3.0);
+        let key_b = vec![KeySym::Vision(5), KeySym::Text(2)];
+        assert!(c.register(&mut p, key_b.clone(), FP ^ 1, vec![pb], meta_of(4), 5, vec![]));
+        p.release(pb); // donor B's slab retires its duplicate
+        assert!(c.remove(&key_a, &mut p), "evict the original entry");
+        p.release(pa); // donor A's slab retires too
+        assert_eq!(p.refcount(pa), 1, "entry B's dedup pin keeps the page");
+        let hit = c.lookup(&key_b, FP ^ 1).expect("entry B still serves");
+        assert_eq!(hit.pages, vec![pa]);
+        assert_eq!(p.stats().refcount_errors, 0);
     }
 
     #[test]

@@ -376,7 +376,7 @@ mod tests {
         let meta = donor.meta().to_vec();
         // simulate the prefix cache pinning the pages
         {
-            let mut p = pool.borrow_mut();
+            let mut p = pool.lock().unwrap();
             for &pg in &pages {
                 p.retain_page(pg);
             }
@@ -442,7 +442,7 @@ mod tests {
         }
         let pages = donor.mark_all_shared();
         {
-            let mut p = pool.borrow_mut();
+            let mut p = pool.lock().unwrap();
             for &pg in &pages {
                 p.retain_page(pg);
             }

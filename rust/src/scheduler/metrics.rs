@@ -97,6 +97,17 @@ pub struct MetricsRegistry {
     /// ≈ Σ ⌈suffix/extend-chunk⌉ with the chunked extend executables,
     /// Σ suffix at --extend-chunk 1 (the one-token decode loop)
     pub extend_calls: u64,
+    /// pages deduplicated at prefix-cache registration: an entry pinned
+    /// an existing bit-identical page instead of a second copy
+    pub prefix_dedup_pages: u64,
+    /// Σ per-step host/device overlap fractions over `overlap_steps`
+    /// pipelined decode steps: each step contributes
+    /// `min(host_overlap_s, pjrt_s) / pjrt_s` — 0 when the scheduler did
+    /// no host work during the device window, 1 when it filled it
+    overlap_frac_sum: f64,
+    /// pipelined decode steps that reported an overlap window (the
+    /// sequential engine contributes none)
+    overlap_steps: u64,
     lanes_hist: Vec<u64>,
     /// enqueue → admission (scheduler clock)
     queue_wait_ms: Histogram,
@@ -144,6 +155,9 @@ impl MetricsRegistry {
             prefix_lru_evictions: 0,
             prefill_tokens_skipped: 0,
             extend_calls: 0,
+            prefix_dedup_pages: 0,
+            overlap_frac_sum: 0.0,
+            overlap_steps: 0,
             lanes_hist: vec![0; batch + 1],
             queue_wait_ms: Histogram::latency_ms(),
             ttft_ms: Histogram::latency_ms(),
@@ -186,10 +200,33 @@ impl MetricsRegistry {
         self.prefix_entries = ps.entries;
         self.prefix_lru_evictions = ps.lru_evictions;
         self.prefill_tokens_skipped = ps.prefill_tokens_skipped;
+        self.prefix_dedup_pages = ps.dedup_pages;
         self.pages_shared = shared_charge;
         self.cow_fork_deferrals = fork_deferrals;
         self.emergency_tail_drops = tail_drops;
         self.extend_calls = extend_calls;
+    }
+
+    /// Fold one pipelined decode step's realized host/device overlap:
+    /// `host_overlap_s` is the host time spent between submit and
+    /// collect ([`crate::coordinator::StepReport::overlap_host_s`]),
+    /// `pjrt_s` the device time of the step.
+    pub fn record_overlap(&mut self, host_overlap_s: f64, pjrt_s: f64) {
+        if pjrt_s > 0.0 {
+            self.overlap_frac_sum += (host_overlap_s / pjrt_s).clamp(0.0, 1.0);
+            self.overlap_steps += 1;
+        }
+    }
+
+    /// Mean fraction of the device window covered by host work across
+    /// pipelined decode steps; 0.0 with no pipelined steps (sequential
+    /// engine or no decode traffic).
+    pub fn host_device_overlap_frac(&self) -> f64 {
+        if self.overlap_steps == 0 {
+            0.0
+        } else {
+            self.overlap_frac_sum / self.overlap_steps as f64
+        }
     }
 
     /// Fraction of cache-consulting admissions served warm (exact or
@@ -301,6 +338,9 @@ impl MetricsRegistry {
             ("queue_wait_p50_ms", num(self.queue_wait_ms.percentile(0.5))),
             ("queue_wait_p95_ms", num(self.queue_wait_ms.percentile(0.95))),
             ("queue_wait_p99_ms", num(self.queue_wait_ms.percentile(0.99))),
+            // thread-parallel engine core (additive)
+            ("prefix_dedup_pages", num(self.prefix_dedup_pages as f64)),
+            ("host_device_overlap_frac", num(self.host_device_overlap_frac())),
         ])
     }
 
@@ -348,6 +388,8 @@ impl MetricsRegistry {
         counter(out, "hae_prefix_lru_evictions_total", "prefix entries LRU-evicted", self.prefix_lru_evictions as f64);
         counter(out, "hae_prefill_tokens_skipped_total", "prompt tokens never recomputed", self.prefill_tokens_skipped as f64);
         counter(out, "hae_extend_calls_total", "suffix-recompute device calls", self.extend_calls as f64);
+        counter(out, "hae_prefix_dedup_pages_total", "pages deduplicated at prefix-cache registration", self.prefix_dedup_pages as f64);
+        gauge(out, "hae_host_device_overlap_frac", "mean fraction of the decode device window covered by host work", self.host_device_overlap_frac());
         histogram(out, "hae_queue_wait_ms", "enqueue to admission (ms)", &self.queue_wait_ms);
         histogram(out, "hae_ttft_ms", "enqueue to first token (ms)", &self.ttft_ms);
         histogram(out, "hae_e2e_ms", "enqueue to retirement (ms)", &self.e2e_ms);
@@ -412,6 +454,7 @@ mod tests {
             lru_evictions: 1,
             insertions: 3,
             prefill_tokens_skipped: 108,
+            dedup_pages: 7,
         };
         m.record_prefix(ps, 5, 4, 1, 9);
         assert_eq!(m.prefix_hits, 6);
@@ -450,6 +493,29 @@ mod tests {
             parsed.get("refcount_errors").and_then(|v| v.as_usize()),
             Some(0)
         );
+        assert_eq!(
+            parsed.get("prefix_dedup_pages").and_then(|v| v.as_usize()),
+            Some(7)
+        );
+    }
+
+    #[test]
+    fn overlap_fraction_aggregates_pipelined_steps() {
+        let mut m = MetricsRegistry::new(2, 4096, 8, 16);
+        assert_eq!(m.host_device_overlap_frac(), 0.0, "no pipelined steps yet");
+        m.record_overlap(0.004, 0.010); // 40% of the window covered
+        m.record_overlap(0.050, 0.010); // host overran the window: capped at 1
+        m.record_overlap(0.0, 0.010); // no host work overlapped
+        let f = m.host_device_overlap_frac();
+        assert!((f - (0.4 + 1.0) / 3.0).abs() < 1e-9, "mean of capped fractions: {}", f);
+        m.record_overlap(1.0, 0.0); // zero device time never divides
+        let j = m.snapshot(0, 0);
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        let got = parsed
+            .get("host_device_overlap_frac")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!((got - f).abs() < 1e-9);
     }
 
     #[test]

@@ -18,6 +18,20 @@
 //!    with `take_outcomes`; the server replies per-connection) and their
 //!    slots become backfill targets on the next tick.
 //!
+//! # The pipelined tick
+//!
+//! `tick` is also available split in two — [`Scheduler::begin_step`]
+//! (backfill + submit the decode batch to the device thread) and
+//! [`Scheduler::finish_step`] (collect, account, retire) — so a serving
+//! loop can do host work *inside* the device window: deliver outcomes,
+//! drain the ingest channel, and run [`Scheduler::overlap_backfill`] to
+//! admit/prefill the next candidates into free lanes while the submitted
+//! lanes compute. Backfill only ever writes `None` slots, and the
+//! in-flight [`crate::coordinator::PendingStep`] addresses its lanes by
+//! slot index, so overlap work never touches a submitted lane. The
+//! realized overlap is aggregated into the `host_device_overlap_frac`
+//! stats key (see `metrics::MetricsRegistry::record_overlap`).
+//!
 //! # The admission invariant
 //!
 //! Admission is **page-granular** over the engine's shared KV arena
@@ -63,7 +77,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::{ActiveRequest, Engine, StepReport};
+use crate::coordinator::{ActiveRequest, Engine, PendingStep, StepReport};
 use crate::obs::{Obs, RetireReason, SharedObs, TraceEvent};
 use crate::util::json::Json;
 use crate::workload::Request;
@@ -186,7 +200,7 @@ impl<T> Scheduler<T> {
         let mut sc = Self::new(
             cfg,
             engine.cfg.batch,
-            engine.rt.meta().kv_bytes_per_token(),
+            engine.meta().kv_bytes_per_token(),
             engine.capacity_limit(),
             engine.page_slots(),
             engine.pool_pages(),
@@ -216,7 +230,7 @@ impl<T> Scheduler<T> {
             // additive nested block: engine-phase histogram summaries.
             // The flat legacy keys above it are frozen (snapshot test in
             // metrics.rs) — existing dashboards keep parsing unchanged.
-            map.insert("phases".to_string(), self.obs.borrow().phases_json());
+            map.insert("phases".to_string(), self.obs.phases_json());
         }
         snap
     }
@@ -224,7 +238,7 @@ impl<T> Scheduler<T> {
     /// Answer `{"kind":"trace", ...}`: a request's lifecycle by `id`, or
     /// the newest `last` events journal-wide.
     pub fn trace_json(&self, id: Option<u64>, last: Option<usize>) -> Json {
-        self.obs.borrow().trace_json(id, last)
+        self.obs.trace_json(id, last)
     }
 
     /// Full Prometheus exposition body: scheduler registry series followed
@@ -233,7 +247,7 @@ impl<T> Scheduler<T> {
         let mut out = String::new();
         self.metrics
             .prometheus_into(&mut out, self.queue.len(), self.lanes_occupied());
-        self.obs.borrow().prometheus_body(&mut out);
+        self.obs.prometheus_body(&mut out);
         out
     }
 
@@ -243,11 +257,10 @@ impl<T> Scheduler<T> {
     pub fn submit(&mut self, tag: T, req: Request) -> Result<(), (T, RejectReason)> {
         self.metrics.submitted += 1;
         let rid = req.id;
-        self.obs.borrow_mut().event(rid, TraceEvent::Enqueued);
+        self.obs.event(rid, TraceEvent::Enqueued);
         if !self.admission.fits_alone(&req) {
             self.metrics.rejected_kv_budget += 1;
             self.obs
-                .borrow_mut()
                 .event(rid, TraceEvent::Retired { reason: RetireReason::Rejected });
             return Err((tag, RejectReason::KvBudget));
         }
@@ -259,7 +272,6 @@ impl<T> Scheduler<T> {
             Err(tag) => {
                 self.metrics.rejected_queue_full += 1;
                 self.obs
-                    .borrow_mut()
                     .event(rid, TraceEvent::Retired { reason: RetireReason::Rejected });
                 Err((tag, RejectReason::QueueFull))
             }
@@ -283,7 +295,7 @@ impl<T> Scheduler<T> {
         let waited = enqueued_at.elapsed().as_secs_f64();
         self.metrics.record_queue_wait(waited);
         let pages = self.admission.worst_case_pages(&req) as u32;
-        self.obs.borrow_mut().event(rid, TraceEvent::Admitted { pages });
+        self.obs.event(rid, TraceEvent::Admitted { pages });
         match engine.prefill(req) {
             Ok(mut ar) => {
                 ar.stats.queue_s = waited;
@@ -293,7 +305,6 @@ impl<T> Scheduler<T> {
                     self.metrics.completed += 1;
                     self.metrics.record_e2e(enqueued_at.elapsed().as_secs_f64());
                     self.obs
-                        .borrow_mut()
                         .event(rid, TraceEvent::Retired { reason: RetireReason::Completed });
                     self.ready.push(SchedOutcome::Done { tag, ar: Box::new(ar) });
                 } else {
@@ -305,7 +316,6 @@ impl<T> Scheduler<T> {
                 // e.g. prompt exceeds the largest prefill bucket
                 self.metrics.failed += 1;
                 self.obs
-                    .borrow_mut()
                     .event(rid, TraceEvent::Retired { reason: RetireReason::Failed });
                 self.ready.push(SchedOutcome::Failed { tag, error: e.to_string() });
             }
@@ -428,11 +438,48 @@ impl<T> Scheduler<T> {
     /// Outcomes are buffered — collect them with `take_outcomes` after
     /// every tick, *including* a failed one: a decode error must not
     /// swallow replies that backfill already finished this round.
+    ///
+    /// This is the sequential composition of [`Self::begin_step`] and
+    /// [`Self::finish_step`]; a pipelined serving loop calls those
+    /// directly and does host work between them.
     pub fn tick(&mut self, engine: &mut Engine) -> Result<StepReport> {
+        let pending = self.begin_step(engine)?;
+        self.finish_step(engine, pending)
+    }
+
+    /// First half of a tick: backfill free lanes, then submit the decode
+    /// batch to the device thread without waiting for it. `None` when no
+    /// lane is live after backfill (queue empty or everything finished at
+    /// prefill — collect outcomes and call [`Self::finish_step`] anyway
+    /// to advance accounting).
+    pub fn begin_step(&mut self, engine: &mut Engine) -> Result<Option<PendingStep>> {
         self.backfill(engine);
-        let step = engine.step_lanes(&mut self.lanes);
+        engine.step_submit(&mut self.lanes)
+    }
+
+    /// Overlap-window work: run another backfill round while a submitted
+    /// step computes on the device thread. Safe by construction — the
+    /// backfill only writes `None` lane slots and the in-flight step
+    /// addresses its lanes by slot index, so submitted lanes are never
+    /// touched. Admission, prefix probes, prefill and chunked extends of
+    /// the next candidates all run here, inside the device window.
+    pub fn overlap_backfill(&mut self, engine: &mut Engine) {
+        self.backfill(engine);
+    }
+
+    /// Second half of a tick: collect the submitted step (blocking until
+    /// the device reply arrives), fold the accounting, retire finished
+    /// lanes into buffered outcomes.
+    pub fn finish_step(
+        &mut self,
+        engine: &mut Engine,
+        pending: Option<PendingStep>,
+    ) -> Result<StepReport> {
         self.tick_no += 1;
-        let (report, done) = step?;
+        let (report, done) = match pending {
+            Some(p) => engine.step_complete(p, &mut self.lanes)?,
+            None => (StepReport::default(), Vec::new()),
+        };
         if report.lanes > 0 {
             // aggregate *physical* live KV at this step, counting lanes
             // that finished during it: private pages by live slots, each
@@ -469,6 +516,10 @@ impl<T> Scheduler<T> {
             }
             self.metrics.record_step(report.lanes, live);
             self.metrics.pages_copied += report.pages_copied as u64;
+            // realized host/device overlap: ~0 through the sequential
+            // `tick` path (submit and collect are back-to-back), the
+            // pipelined loop's overlap-window work otherwise
+            self.metrics.record_overlap(report.overlap_host_s, report.pjrt_s);
         }
         // page accounting: arena occupancy, fragmentation, reuse. The
         // page invariant — live pages never exceed the pool — holds by
@@ -497,7 +548,6 @@ impl<T> Scheduler<T> {
             self.metrics.completed += 1;
             self.metrics.record_e2e(lt.enqueued_at.elapsed().as_secs_f64());
             self.obs
-                .borrow_mut()
                 .event(ar.req.id, TraceEvent::Retired { reason: RetireReason::Completed });
             self.ready.push(SchedOutcome::Done { tag: lt.tag, ar: Box::new(ar) });
         }
@@ -618,7 +668,7 @@ mod tests {
         overflow.id = 13;
         assert!(sc.submit(3, overflow).is_err(), "queue-full reject");
 
-        let o = sc.obs.borrow();
+        let o = sc.obs.inner();
         // admitted-to-queue request: Enqueued only (no engine ran)
         let ev11 = o.trace.for_request(11);
         assert_eq!(ev11.len(), 1);

@@ -45,18 +45,33 @@
 //!             line carried one)
 //!
 //! Architecture: acceptor + per-connection reader/writer threads feed a
-//! channel into the single engine thread (the PJRT client is
-//! single-threaded by design). The engine thread runs the
-//! continuous-batching scheduler (scheduler::Scheduler): requests join
-//! free decode lanes mid-flight under KV-budget admission control, and
-//! each response flows back through its connection's channel the moment
-//! that request finishes — short requests are never serialized behind
-//! long generations admitted earlier.
+//! channel into the scheduler loop on the caller's thread. Device work
+//! runs on the engine's dedicated device thread (the PJRT client is
+//! `!Send` — see `device::spawn` and docs/CONCURRENCY.md), which is what
+//! lets the scheduler loop pipeline: with `engine_threads > 1` each
+//! round submits the decode batch, then spends the device window
+//! delivering finished replies, draining the ingest channel and
+//! backfilling free lanes (admission + prefill of the next candidates)
+//! before collecting the step. `engine_threads == 1` keeps the strictly
+//! sequential round — the measured baseline in
+//! `benches/perf_serve_batch.rs`. Either way, requests join free decode
+//! lanes mid-flight under KV-budget admission control, and each response
+//! flows back through its connection's channel the moment that request
+//! finishes — short requests are never serialized behind long
+//! generations admitted earlier.
+//!
+//! Shutdown is a drain, not an abort: the flag flips, connection readers
+//! notice within one read-timeout, the acceptor is popped out of
+//! `accept` by a self-connection and *joins* every connection thread,
+//! and `serve_on` joins the acceptor — so when it returns, no server
+//! thread is left running and the device thread has been joined by the
+//! engine drop.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -73,6 +88,12 @@ pub struct ServerConfig {
     /// aggregate live-KV budget in bytes (None → engine ceiling)
     pub kv_budget: Option<usize>,
     pub sched_policy: SchedPolicy,
+    /// 1 = strictly sequential scheduler rounds (submit and collect
+    /// back-to-back — the measured baseline); ≥2 = pipelined rounds that
+    /// overlap host work with the device window. There is always exactly
+    /// one scheduler thread and one device thread; this selects the
+    /// overlap discipline between them.
+    pub engine_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -82,6 +103,7 @@ impl Default for ServerConfig {
             queue_depth: 64,
             kv_budget: None,
             sched_policy: SchedPolicy::Fifo,
+            engine_threads: 2,
         }
     }
 }
@@ -297,29 +319,40 @@ pub fn serve_on(
     let shutdown = Arc::new(AtomicBool::new(false));
 
     // acceptor thread — unblocked at shutdown by a self-connection from
-    // the engine loop (listener.incoming() cannot time out)
-    {
+    // the scheduler loop (listener.incoming() cannot time out). It keeps
+    // every connection thread's handle and joins them on exit, so joining
+    // the acceptor proves the whole listener side has terminated.
+    let acceptor = {
         let tx = tx.clone();
         let shutdown = shutdown.clone();
         let listener = listener.try_clone()?;
-        std::thread::spawn(move || {
-            for stream in listener.incoming().flatten() {
-                if shutdown.load(Ordering::SeqCst) {
-                    break;
+        std::thread::Builder::new()
+            .name("hae-acceptor".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                for stream in listener.incoming().flatten() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let tx = tx.clone();
+                    let shutdown = shutdown.clone();
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, tx, shutdown);
+                    }));
                 }
-                let tx = tx.clone();
-                let shutdown = shutdown.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_conn(stream, tx, shutdown);
-                });
-            }
-        });
-    }
+                // readers poll the flag at read-timeout granularity, so
+                // each join resolves within ~one CONN_READ_TIMEOUT
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?
+    };
 
-    // engine thread (single-threaded PJRT owner) running the scheduler
-    let meta = engine.rt.meta().clone();
+    // scheduler loop on this thread; device calls run on the engine's
+    // dedicated device thread behind `engine.device()`
+    let meta = engine.meta().clone();
     let mut builder = RequestBuilder::new(&meta, &grammar, 0xBEEF);
-    engine.rt.warmup(&[engine.cfg.batch])?;
+    engine.warmup()?;
     let sched_cfg = SchedulerConfig {
         kv_budget: cfg.kv_budget.unwrap_or_else(|| engine.kv_budget_ceiling()),
         policy: cfg.sched_policy,
@@ -328,6 +361,7 @@ pub fn serve_on(
     };
     let mut sched: Scheduler<JobTag> = Scheduler::for_engine(sched_cfg, &engine);
     let mut fatal: Option<anyhow::Error> = None;
+    let pipelined = cfg.engine_threads > 1;
 
     'serve: loop {
         // ingest: block only when idle, otherwise drain opportunistically
@@ -344,29 +378,47 @@ pub fn serve_on(
                 Err(_) => break 'serve,
             }
         }
-        loop {
-            match rx.try_recv() {
-                Ok(job) => {
-                    if ingest(job, &meta, &grammar, &mut builder, &mut sched)
-                        == Ingest::Shutdown
-                    {
-                        break 'serve;
-                    }
-                }
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => break,
-            }
+        let mut stop = drain_ingest(&rx, &meta, &grammar, &mut builder, &mut sched);
+        if stop {
+            break 'serve;
         }
         // one scheduling round: backfill free lanes, decode, retire. A
         // decode error is runtime-fatal (the whole batched step failed),
         // but outcomes are delivered first and cleanup still runs below,
         // so every in-flight client hears why instead of an abrupt EOF
-        let tick_result = sched.tick(&mut engine);
+        let tick_result = if pipelined {
+            // pipelined round: submit the decode batch, then spend the
+            // device window on host work — delivering finished replies,
+            // draining new ingest, and backfilling freed lanes — before
+            // blocking on the device reply in finish_step
+            match sched.begin_step(&mut engine) {
+                Err(e) => Err(e),
+                Ok(pending) => {
+                    if pending.is_some() {
+                        for outcome in sched.take_outcomes() {
+                            deliver(outcome);
+                        }
+                        stop = drain_ingest(
+                            &rx, &meta, &grammar, &mut builder, &mut sched,
+                        );
+                        sched.overlap_backfill(&mut engine);
+                    }
+                    // a shutdown seen mid-flight still collects the step:
+                    // the in-flight lanes finish and reply before we drain
+                    sched.finish_step(&mut engine, pending)
+                }
+            }
+        } else {
+            sched.tick(&mut engine)
+        };
         for outcome in sched.take_outcomes() {
             deliver(outcome);
         }
         if let Err(e) = tick_result {
             fatal = Some(e);
+            break 'serve;
+        }
+        if stop {
             break 'serve;
         }
     }
@@ -384,12 +436,46 @@ pub fn serve_on(
     for tag in sched.drain_tags() {
         let _ = tag.reply.send(error_reply(Some(tag.id), &reason));
     }
+    // drop our receiver so any connection thread blocked in a full
+    // mailbox send errors out instead of deadlocking the acceptor join
+    drop(rx);
     let _ = TcpStream::connect(local_addr);
+    let _ = acceptor.join();
+    // `engine` drops here, joining the device thread (DeviceHandle drop
+    // closes the request channel first, so the join cannot hang)
     match fatal {
         Some(e) => Err(e),
         None => Ok(()),
     }
 }
+
+/// Pull every queued job off the ingest mailbox without blocking.
+/// Returns `true` when a shutdown line was seen (the caller breaks its
+/// serve loop after finishing any in-flight step).
+fn drain_ingest(
+    rx: &mpsc::Receiver<Job>,
+    meta: &ModelMeta,
+    grammar: &StoryGrammar,
+    builder: &mut RequestBuilder,
+    sched: &mut Scheduler<JobTag>,
+) -> bool {
+    loop {
+        match rx.try_recv() {
+            Ok(job) => {
+                if ingest(job, meta, grammar, builder, sched) == Ingest::Shutdown {
+                    return true;
+                }
+            }
+            Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => {
+                return false;
+            }
+        }
+    }
+}
+
+/// How often an idle connection reader re-checks the shutdown flag.
+/// Bounds how long a parked reader thread can outlive `serve_on`.
+const CONN_READ_TIMEOUT: Duration = Duration::from_millis(50);
 
 fn handle_conn(
     stream: TcpStream,
@@ -412,20 +498,36 @@ fn handle_conn(
             }
         }
     });
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    // finite read timeout so a client that connects and goes quiet cannot
+    // pin this thread past shutdown; a timeout with a partial line in
+    // `buf` keeps accumulating — read_line appends, it never discards
+    stream.set_read_timeout(Some(CONN_READ_TIMEOUT))?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // EOF (any unterminated partial line is dropped)
+            Ok(_) => {
+                let line = std::mem::take(&mut buf);
+                let line = line.trim_end_matches(['\r', '\n']).to_string();
+                if !line.trim().is_empty()
+                    && tx.send(Job { line, reply: rtx.clone() }).is_err()
+                {
+                    break;
+                }
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
             Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        if tx.send(Job { line, reply: rtx.clone() }).is_err() {
-            break;
-        }
-        if shutdown.load(Ordering::SeqCst) {
-            break;
         }
     }
     drop(rtx);

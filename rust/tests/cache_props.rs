@@ -255,7 +255,7 @@ fn prop_page_pool_never_leaks_across_lifecycles() {
         let pool = PagePool::new_shared(m.n_layers, row, 64, 4);
         let mut live: Vec<KvSlab> = Vec::new();
         let check = |pool: &hae_serve::cache::SharedPagePool, live: &[KvSlab]| {
-            let p = pool.borrow();
+            let p = pool.lock().unwrap();
             let s = p.stats();
             let held: usize = live.iter().map(|sl| sl.allocated_pages()).sum();
             assert_eq!(s.in_use, held, "pool in_use == Σ live page tables");
@@ -276,7 +276,7 @@ fn prop_page_pool_never_leaks_across_lifecycles() {
                 // growth: decode appends
                 1 => {
                     if let Some(sl) = live.last_mut() {
-                        let budget = pool.borrow().free_pages() * 4;
+                        let budget = pool.lock().unwrap().free_pages() * 4;
                         let n = rng.below(6).min(budget);
                         for _ in 0..n {
                             if sl.len() < sl.capacity() {
@@ -314,7 +314,7 @@ fn prop_page_pool_never_leaks_across_lifecycles() {
             check(&pool, &live);
         }
         live.clear();
-        assert_eq!(pool.borrow().in_use_pages(), 0, "drained pool holds nothing");
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 0, "drained pool holds nothing");
     });
 }
 
@@ -346,7 +346,7 @@ fn prop_cow_writes_never_leak_across_sharers() {
         let meta = donor.meta().to_vec();
         // the simulated prefix-cache pin: one extra reference per page
         {
-            let mut p = pool.borrow_mut();
+            let mut p = pool.lock().unwrap();
             for &pg in &pages {
                 assert!(p.retain_page(pg));
             }
@@ -397,7 +397,7 @@ fn prop_cow_writes_never_leak_across_sharers() {
             }
             // ...and the pinned image is untouched by any of them
             {
-                let p = pool.borrow();
+                let p = pool.lock().unwrap();
                 for (i, &(_, v)) in frozen.iter().enumerate() {
                     let (pg, off) = (pages[i / 4], i % 4);
                     assert_eq!(
@@ -411,13 +411,13 @@ fn prop_cow_writes_never_leak_across_sharers() {
         // teardown: all sharers gone + cache unpinned → zero pages held
         drop(slabs);
         {
-            let mut p = pool.borrow_mut();
+            let mut p = pool.lock().unwrap();
             for &pg in &pages {
                 assert!(p.release(pg));
             }
         }
-        let s = pool.borrow().stats();
-        assert_eq!(pool.borrow().in_use_pages(), 0, "no page leaked");
+        let s = pool.lock().unwrap().stats();
+        assert_eq!(pool.lock().unwrap().in_use_pages(), 0, "no page leaked");
         assert_eq!(s.refcount_errors, 0, "no refcount violation under CoW");
         assert_eq!(s.allocs - s.frees, 0);
     });

@@ -12,16 +12,13 @@ fn artifact_dir() -> std::path::PathBuf {
 }
 
 fn engine(policy: &str) -> Option<Engine> {
-    let rt = match Runtime::load(&artifact_dir()) {
-        Ok(rt) => rt,
-        Err(_) => {
-            hae_serve::harness::skip_or_fail("artifacts not built (run `make artifacts`)");
-            return None;
-        }
-    };
+    if Runtime::load(&artifact_dir()).is_err() {
+        hae_serve::harness::skip_or_fail("artifacts not built (run `make artifacts`)");
+        return None;
+    }
     Some(
-        Engine::new(
-            rt,
+        Engine::from_artifact_dir(
+            &artifact_dir(),
             EngineConfig {
                 policy: PolicyKind::parse(policy).unwrap(),
                 ..EngineConfig::default()
@@ -38,7 +35,7 @@ fn every_policy_completes_mixed_requests() {
         "adakv", "mustdrop", "fastv", "sparsevlm", "tome", "window", "random",
     ] {
         let Some(mut eng) = engine(spec) else { return };
-        let meta = eng.rt.meta().clone();
+        let meta = eng.meta().clone();
         let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
         let mut b = RequestBuilder::new(&meta, &grammar, 11);
         for kind in [WorkloadKind::Understanding, WorkloadKind::Story] {
@@ -49,7 +46,7 @@ fn every_policy_completes_mixed_requests() {
             assert!(ar.done, "{}: finished", spec);
             assert!(!ar.generated.is_empty(), "{}: produced tokens", spec);
             assert!(
-                ar.slab.len() < eng.rt.manifest.shapes.cache_capacity,
+                ar.slab.len() < eng.manifest().shapes.cache_capacity,
                 "{}: capacity respected",
                 spec
             );
@@ -65,7 +62,7 @@ fn every_policy_completes_mixed_requests() {
 fn greedy_determinism_across_runs() {
     let Some(mut e1) = engine("hae") else { return };
     let Some(mut e2) = engine("hae") else { return };
-    let meta = e1.rt.meta().clone();
+    let meta = e1.meta().clone();
     let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
     let req1 = RequestBuilder::new(&meta, &grammar, 99).make(WorkloadKind::Story);
     let req2 = RequestBuilder::new(&meta, &grammar, 99).make(WorkloadKind::Story);
@@ -82,7 +79,7 @@ fn full_cache_teacher_forcing_is_exact() {
     // reproduce identical logits — validates the fidelity protocol itself
     let Some(mut reference) = engine("full") else { return };
     reference.cfg.capture_logits = true;
-    let meta = reference.rt.meta().clone();
+    let meta = reference.meta().clone();
     let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
     let mut b = RequestBuilder::new(&meta, &grammar, 5);
     let mut req = b.make(WorkloadKind::Story);
@@ -104,7 +101,7 @@ fn batched_equals_sequential_for_greedy_decode() {
     // batch width must not change results: run the same two requests at
     // batch 1 and batch 4 and compare token streams
     let Some(mut e1) = engine("hae") else { return };
-    let meta = e1.rt.meta().clone();
+    let meta = e1.meta().clone();
     let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
     let reqs = |seed| {
         let mut b = RequestBuilder::new(&meta, &grammar, seed);
@@ -112,9 +109,8 @@ fn batched_equals_sequential_for_greedy_decode() {
     };
     let (seq, _) = e1.run_batched(reqs(17)).unwrap();
 
-    let rt = Runtime::load(&artifact_dir()).unwrap();
-    let mut e4 = Engine::new(
-        rt,
+    let mut e4 = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::parse("hae").unwrap(),
             batch: 4,
@@ -135,7 +131,7 @@ fn capacity_bucketing_shrinks_with_eviction() {
     // a long story under HAE must run most decode steps in a smaller
     // capacity bucket than the full-cache run
     let Some(mut hae) = engine("hae:rc=8") else { return };
-    let meta = hae.rt.meta().clone();
+    let meta = hae.meta().clone();
     let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
     let mut b = RequestBuilder::new(&meta, &grammar, 23);
     let mut req = b.story(4, 14, 140);
@@ -170,7 +166,7 @@ fn h2o_does_more_decisions_than_ddes() {
     // the Table 3 mechanism: greedy sorts every over-budget step, the
     // recycle bin amortises
     let Some(mut ddes) = engine("hae:stage=decode,rc=16") else { return };
-    let meta = ddes.rt.meta().clone();
+    let meta = ddes.meta().clone();
     let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
     let mut b = RequestBuilder::new(&meta, &grammar, 31);
     let mut req = b.story(3, 12, 120);

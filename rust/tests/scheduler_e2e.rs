@@ -49,6 +49,7 @@ fn concurrent_clients_share_lanes_under_budget() {
         Some(budget),
         SchedPolicy::Priority,
         true,
+        2,
     );
     assert!(wait_listening(&addr), "server came up");
 
@@ -153,9 +154,8 @@ fn chunked_prefill_admits_oversized_prompt_incrementally() {
     let budget = budget_pages * ps * meta.kv_bytes_per_token();
     assert!(worst_pages(&req_a) + worst_pages(&req_b) > budget_pages);
 
-    let rt = Runtime::load(&artifact_dir()).unwrap();
-    let mut engine = Engine::new(
-        rt,
+    let mut engine = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             batch,
@@ -258,8 +258,8 @@ fn prefix_sharing_serves_shared_image_qa() {
     // (a) serial byte-identity: cache off vs on, batch 1, same requests
     let mut b = RequestBuilder::new(&meta, &grammar, 5);
     let reqs = b.shared_image_qa(11, 8);
-    let mut cold = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    let mut cold = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             prefix_cache: false,
@@ -267,13 +267,13 @@ fn prefix_sharing_serves_shared_image_qa() {
         },
     )
     .unwrap();
-    cold.rt.warmup(&[1]).unwrap();
-    let mut warm = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    cold.warmup().unwrap();
+    let mut warm = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
     )
     .unwrap();
-    warm.rt.warmup(&[1]).unwrap();
+    warm.warmup().unwrap();
     for r in &reqs {
         let c = cold.generate(r.clone()).unwrap();
         let w = warm.generate(r.clone()).unwrap();
@@ -290,8 +290,8 @@ fn prefix_sharing_serves_shared_image_qa() {
 
     // (b) the scheduler path: invariants every tick with sharing on
     let batch = widest_batch();
-    let mut engine = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    let mut engine = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             batch,
@@ -299,7 +299,7 @@ fn prefix_sharing_serves_shared_image_qa() {
         },
     )
     .unwrap();
-    engine.rt.warmup(&[batch]).unwrap();
+    engine.warmup().unwrap();
     let mut sched: Scheduler<u64> =
         Scheduler::for_engine(SchedulerConfig::default(), &engine);
     let mut b = RequestBuilder::new(&meta, &grammar, 6);
@@ -390,9 +390,8 @@ fn fork_storm_defers_instead_of_panicking() {
     // H2O with a budget below the prompt: the very first post-step
     // decision compacts deep inside the adopted prefix
     let policy = PolicyKind::parse("h2o:budget=12,recent=2").unwrap();
-    let rt = Runtime::load(&artifact_dir()).unwrap();
-    let mut engine = Engine::new(
-        rt,
+    let mut engine = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy,
             batch,
@@ -401,7 +400,7 @@ fn fork_storm_defers_instead_of_panicking() {
         },
     )
     .unwrap();
-    engine.rt.warmup(&[batch]).unwrap();
+    engine.warmup().unwrap();
     let sched_cfg = SchedulerConfig { kv_budget: budget, ..SchedulerConfig::default() };
     let mut sched: Scheduler<u64> = Scheduler::for_engine(sched_cfg, &engine);
     for r in reqs {
@@ -472,8 +471,8 @@ fn partial_warm_starts_serve_multi_turn_dialog() {
     let mut b = RequestBuilder::new(&meta, &grammar, 5);
     let turns = b.shared_image_dialog(17, 8);
     let prefix_len = 1 + meta.n_patches;
-    let mut cold = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    let mut cold = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             prefix_cache: false,
@@ -481,13 +480,13 @@ fn partial_warm_starts_serve_multi_turn_dialog() {
         },
     )
     .unwrap();
-    cold.rt.warmup(&[1]).unwrap();
-    let mut warm = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    cold.warmup().unwrap();
+    let mut warm = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
     )
     .unwrap();
-    warm.rt.warmup(&[1]).unwrap();
+    warm.warmup().unwrap();
     for (t, r) in turns.iter().enumerate() {
         let c = cold.generate(r.clone()).unwrap();
         let w = warm.generate(r.clone()).unwrap();
@@ -506,8 +505,8 @@ fn partial_warm_starts_serve_multi_turn_dialog() {
     }
     // retained-index sets, observed right after admission (before decode
     // mutates the slab): the replayed decision must pick the same slots
-    let mut cold2 = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    let mut cold2 = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             prefix_cache: false,
@@ -515,13 +514,13 @@ fn partial_warm_starts_serve_multi_turn_dialog() {
         },
     )
     .unwrap();
-    cold2.rt.warmup(&[1]).unwrap();
-    let mut warm2 = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    cold2.warmup().unwrap();
+    let mut warm2 = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig { policy: PolicyKind::hae_default(), ..EngineConfig::default() },
     )
     .unwrap();
-    warm2.rt.warmup(&[1]).unwrap();
+    warm2.warmup().unwrap();
     for (t, r) in turns.iter().enumerate() {
         let c = cold2.prefill(r.clone()).unwrap();
         let w = warm2.prefill(r.clone()).unwrap();
@@ -558,8 +557,8 @@ fn partial_warm_starts_serve_multi_turn_dialog() {
 
     // (b) through the scheduler: invariants every tick under divergence
     let batch = widest_batch();
-    let mut engine = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    let mut engine = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             batch,
@@ -567,7 +566,7 @@ fn partial_warm_starts_serve_multi_turn_dialog() {
         },
     )
     .unwrap();
-    engine.rt.warmup(&[batch]).unwrap();
+    engine.warmup().unwrap();
     let mut sched: Scheduler<u64> =
         Scheduler::for_engine(SchedulerConfig::default(), &engine);
     let mut b = RequestBuilder::new(&meta, &grammar, 6);
@@ -663,8 +662,8 @@ fn chunked_extend_matches_cold_at_every_chunk_size() {
     }
 
     // cold oracle (prefix cache off — chunking never runs)
-    let mut cold = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    let mut cold = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             prefix_cache: false,
@@ -672,7 +671,7 @@ fn chunked_extend_matches_cold_at_every_chunk_size() {
         },
     )
     .unwrap();
-    cold.rt.warmup(&[1]).unwrap();
+    cold.warmup().unwrap();
     let cold_runs = run_dialog(&mut cold, &turns, prefix_len);
     for (_, _, calls, partial, _) in &cold_runs {
         assert_eq!(*calls, 0, "cold runs never extend");
@@ -680,8 +679,8 @@ fn chunked_extend_matches_cold_at_every_chunk_size() {
     }
 
     for &chunk in &[1usize, 4, usize::MAX] {
-        let mut warm = Engine::new(
-            Runtime::load(&artifact_dir()).unwrap(),
+        let mut warm = Engine::from_artifact_dir(
+            &artifact_dir(),
             EngineConfig {
                 policy: PolicyKind::hae_default(),
                 extend_chunk: chunk,
@@ -689,7 +688,7 @@ fn chunked_extend_matches_cold_at_every_chunk_size() {
             },
         )
         .unwrap();
-        warm.rt.warmup(&[1]).unwrap();
+        warm.warmup().unwrap();
         let eff = warm.effective_extend_chunk();
         if chunk == 1 {
             assert_eq!(eff, 1, "chunk 1 is never widened");
@@ -781,8 +780,8 @@ fn trace_journal_records_complete_lifecycles() {
     let meta = manifest.model.clone();
     let grammar = load_grammar(&artifact_dir());
     let batch = widest_batch();
-    let mut engine = Engine::new(
-        Runtime::load(&artifact_dir()).unwrap(),
+    let mut engine = Engine::from_artifact_dir(
+        &artifact_dir(),
         EngineConfig {
             policy: PolicyKind::hae_default(),
             batch,
@@ -790,7 +789,7 @@ fn trace_journal_records_complete_lifecycles() {
         },
     )
     .unwrap();
-    engine.rt.warmup(&[batch]).unwrap();
+    engine.warmup().unwrap();
     let mut sched: Scheduler<u64> =
         Scheduler::for_engine(SchedulerConfig::default(), &engine);
     let mut b = RequestBuilder::new(&meta, &grammar, 6);
@@ -808,7 +807,7 @@ fn trace_journal_records_complete_lifecycles() {
     }
 
     let obs = engine.obs();
-    let o = obs.borrow();
+    let o = obs.inner();
     let mut extend_events = 0u64;
     let mut partial_turns = 0usize;
     for &rid in &ids {
@@ -892,6 +891,7 @@ fn tiny_budget_rejects_gracefully() {
         Some(1024),
         SchedPolicy::Fifo,
         true,
+        2,
     );
     assert!(wait_listening(&addr), "server came up");
 

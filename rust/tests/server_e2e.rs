@@ -20,6 +20,7 @@ fn server_round_trip_and_shutdown() {
         None,
         SchedPolicy::Fifo,
         true,
+        2,
     );
     assert!(wait_listening(&addr), "server came up");
 
@@ -48,4 +49,118 @@ fn server_round_trip_and_shutdown() {
     let resp = client_request(&addr, "shutdown").unwrap();
     assert!(resp.contains("shutdown"));
     handle.join().unwrap();
+}
+
+/// Shutdown is a full drain: `serve_on` returns only after the acceptor
+/// has joined every connection thread, so once the serve thread joins,
+/// the listener is gone — even with an idle client connected that never
+/// sends a byte (its reader exits via the read timeout + shutdown flag).
+#[test]
+fn shutdown_terminates_listener_and_connection_threads() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) = spawn_server(
+        PolicyKind::hae_default(),
+        1,
+        None,
+        SchedPolicy::Fifo,
+        true,
+        1, // sequential mode must drain identically to pipelined
+    );
+    assert!(wait_listening(&addr), "server came up");
+
+    // an idle connection that never sends anything must not pin the
+    // server past shutdown
+    let idle = std::net::TcpStream::connect(&addr).unwrap();
+
+    let resp = client_request(&addr, "shutdown").unwrap();
+    assert!(resp.contains("shutdown"));
+    // joins acceptor + every connection thread inside serve_on; a hang
+    // here (the old detached-thread leak) fails via the test timeout
+    handle.join().unwrap();
+    drop(idle);
+
+    // the listener socket is closed once serve_on returns: new
+    // connections are refused (or reset immediately, never serviced)
+    match std::net::TcpStream::connect(&addr) {
+        Err(_) => {}
+        Ok(mut stream) => {
+            use std::io::{Read, Write};
+            let _ = stream.write_all(b"{\"id\": 9, \"kind\": \"qa\"}\n");
+            let mut buf = Vec::new();
+            let n = stream.read_to_end(&mut buf).unwrap_or(0);
+            assert_eq!(n, 0, "dead server answered: {:?}", String::from_utf8_lossy(&buf));
+        }
+    }
+}
+
+/// Contention e2e: many client threads hammer one server; the final
+/// stats must be consistent — the per-request `extend_calls` fields sum
+/// to the engine total the snapshot reports, zero refcount errors, and
+/// every request is accounted as completed.
+#[test]
+fn concurrent_clients_leave_consistent_stats() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) = spawn_server(
+        PolicyKind::hae_default(),
+        hae_serve::harness::widest_batch(),
+        None,
+        SchedPolicy::Fifo,
+        true,
+        2,
+    );
+    assert!(wait_listening(&addr), "server came up");
+
+    // dialog turns share an image ⇒ partial warm starts ⇒ nonzero
+    // extend_calls to reconcile; distinct seeds also mix in cold misses
+    let n_clients: i64 = 4;
+    let per_client: i64 = 3;
+    let mut workers = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut extend_calls = 0u64;
+            for i in 0..per_client {
+                let id = c * 100 + i;
+                let payload = format!(
+                    r#"{{"id": {}, "kind": "qa", "image_seed": 9, "turn": {}, "max_new": 8}}"#,
+                    id, i
+                );
+                let resp = client_request(&addr, &payload).unwrap();
+                let j = Json::parse(&resp).unwrap();
+                assert!(j.get("error").is_none(), "unexpected error: {}", resp);
+                assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(id));
+                extend_calls +=
+                    j.get("extend_calls").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            }
+            extend_calls
+        }));
+    }
+    let client_extends: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+
+    let stats =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let _ = client_request(&addr, "shutdown");
+    handle.join().unwrap();
+
+    let get = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert_eq!(
+        get("completed") as i64,
+        n_clients * per_client,
+        "stats: {}",
+        stats.to_string_compact()
+    );
+    assert_eq!(
+        get("extend_calls") as u64,
+        client_extends,
+        "per-request extend_calls don't sum to the engine total: {}",
+        stats.to_string_compact()
+    );
+    assert_eq!(get("refcount_errors") as i64, 0);
+    assert_eq!(get("failed") as i64, 0);
 }

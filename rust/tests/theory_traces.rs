@@ -13,10 +13,10 @@ fn artifact_dir() -> std::path::PathBuf {
 }
 
 fn engine(policy: &str) -> Option<Engine> {
-    let rt = Runtime::load(&artifact_dir()).ok()?;
+    Runtime::load(&artifact_dir()).ok()?;
     Some(
-        Engine::new(
-            rt,
+        Engine::from_artifact_dir(
+            &artifact_dir(),
             EngineConfig {
                 policy: PolicyKind::parse(policy).unwrap(),
                 ..EngineConfig::default()
@@ -29,7 +29,7 @@ fn engine(policy: &str) -> Option<Engine> {
 #[test]
 fn decay_model_fits_measured_scores() {
     let Some(mut eng) = engine("full") else { return };
-    let meta = eng.rt.meta().clone();
+    let meta = eng.meta().clone();
     let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
     let mut b = RequestBuilder::new(&meta, &grammar, 41);
     let mut req = b.story(3, 12, 100);
@@ -67,7 +67,7 @@ fn decay_model_fits_measured_scores() {
 fn corollary_ddes_loss_le_greedy_on_traces() {
     // teacher-forced identical scripts; compare per-eviction realized loss
     let Some(mut reference) = engine("full") else { return };
-    let meta = reference.rt.meta().clone();
+    let meta = reference.meta().clone();
     let grammar = StoryGrammar::load(&artifact_dir()).unwrap();
     let mut b = RequestBuilder::new(&meta, &grammar, 43);
     let mut holds = 0;
