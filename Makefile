@@ -21,6 +21,13 @@
 #                        overrides the destination).
 #   make bench-verify  — schema-check the BENCH_*.json reports and
 #                        require at least HAE_BENCH_MIN (default 4).
+#   make bench-trend   — append the current BENCH_*.json run to the
+#                        trend history (benches/trend/data.json) and
+#                        gate headline metrics against the committed
+#                        baseline reports in benches/baseline/: exits
+#                        non-zero when one regresses beyond
+#                        HAE_TREND_THRESHOLD (default 0.10 relative).
+#                        Refresh procedure in docs/OBSERVABILITY.md.
 #   make stress        — repeat the threaded e2e suites (scheduler_e2e,
 #                        server_e2e) HAE_STRESS_N times (default 10)
 #                        with a high in-process test-thread count, to
@@ -33,7 +40,7 @@
 PYTHON ?= python3
 HAE_STRESS_N ?= 10
 
-.PHONY: artifacts check-extend test bench-smoke bench-verify stress
+.PHONY: artifacts check-extend test bench-smoke bench-verify bench-trend stress
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
@@ -61,3 +68,6 @@ stress:
 
 bench-verify:
 	cargo run --release --bin bench_verify
+
+bench-trend:
+	cargo run --release --bin bench_trend

@@ -120,9 +120,10 @@ fn lane_sync_comparison(report: &mut BenchReport, steps: usize) {
 
 /// One steady-state decode loop over the synthetic arena — the same
 /// per-step host work as `measure_lane_sync`'s incremental phase — with
-/// the per-step observability sequence `Engine::decode_step` performs
-/// spliced in: one enabled check, one histogram record, one trace event
-/// per lane. Returns steps/sec.
+/// the per-step observability sequence the engine and scheduler perform
+/// spliced in: one enabled check, histogram records (including the
+/// profiler's step-section and queue-depth spans), one trace event per
+/// lane. Returns steps/sec.
 fn traced_decode_steps_per_sec(obs: &SharedObs, lanes: usize, steps: usize) -> f64 {
     let (n_layers, row, ps) = (4usize, 128usize, 16usize);
     let live = 256usize;
@@ -147,7 +148,11 @@ fn traced_decode_steps_per_sec(obs: &SharedObs, lanes: usize, steps: usize) -> f
         );
         slab.copy_into_lane(&mut dst_k, &mut dst_v, 0, cap);
         if obs.enabled() {
-            obs.record(|o| o.decode_step_ms.record(0.2));
+            obs.record(|o| {
+                o.decode_step_ms.record(0.2);
+                o.profile.step_finish_ms.record(0.2);
+                o.profile.device_queue_depth.record(1.0);
+            });
         }
         for lane in 0..lanes {
             obs.event(lane as u64, TraceEvent::DecodeStep);
@@ -393,6 +398,9 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let widest = widest_batch();
+    // the serve sections (throughput table, shared-image mix, pipeline
+    // comparison) all run the 2-thread engine core
+    report.engine_threads(2);
     let batches: Vec<usize> = if widest > 1 { vec![1, widest] } else { vec![1] };
 
     let mut table = Table::new(

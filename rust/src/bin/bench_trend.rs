@@ -1,0 +1,119 @@
+//! Bench trend recorder + regression gate: `make bench-trend`.
+//!
+//! Reads the `BENCH_*.json` reports of the current run (from
+//! `HAE_BENCH_DIR`, default `.`), appends one flattened trend point to
+//! `benches/trend/data.json` (`HAE_TREND_DIR` overrides the directory),
+//! then diffs the run's headline metrics against the committed baseline
+//! reports in `benches/baseline/` (`HAE_BASELINE_DIR`). Exits non-zero
+//! when any headline moved beyond `HAE_TREND_THRESHOLD` (default 0.10,
+//! relative) in its bad direction — the CI gate that makes perf numbers
+//! stick across PRs instead of resetting with every scrolled-away log.
+//!
+//! All comparison logic is in `obs::trend` (unit-tested, filesystem
+//! free); this binary only shuttles files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use hae_serve::obs::bench_report::bench_dir;
+use hae_serve::obs::trend;
+use hae_serve::util::json::Json;
+
+/// Load every `BENCH_*.json` in `dir` keyed by its `bench` name.
+/// Unreadable or unparseable files are reported and skipped — the gate
+/// judges metrics, not filesystem accidents.
+fn load_reports(dir: &Path) -> BTreeMap<String, Json> {
+    let mut out = BTreeMap::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return out,
+    };
+    for entry in entries.filter_map(|e| e.ok()) {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+            continue;
+        }
+        let parsed = std::fs::read_to_string(entry.path())
+            .map_err(|e| e.to_string())
+            .and_then(|body| Json::parse(body.trim()).map_err(|e| e.to_string()));
+        match parsed {
+            Ok(j) => {
+                let bench = j
+                    .get("bench")
+                    .and_then(|v| v.as_str())
+                    .map(String::from)
+                    .unwrap_or_else(|| name.clone());
+                out.insert(bench, j);
+            }
+            Err(e) => eprintln!("bench-trend: skipping {}: {}", name, e),
+        }
+    }
+    out
+}
+
+fn env_dir(var: &str, default: &str) -> PathBuf {
+    PathBuf::from(std::env::var(var).unwrap_or_else(|_| default.into()))
+}
+
+fn main() {
+    let threshold: f64 = std::env::var("HAE_TREND_THRESHOLD")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(trend::DEFAULT_THRESHOLD);
+    let trend_dir = env_dir("HAE_TREND_DIR", "benches/trend");
+    let baseline_dir = env_dir("HAE_BASELINE_DIR", "benches/baseline");
+
+    let current = load_reports(&bench_dir());
+    if current.is_empty() {
+        eprintln!(
+            "bench-trend: no BENCH_*.json in {} (run `make bench-smoke` first)",
+            bench_dir().display()
+        );
+        std::process::exit(1);
+    }
+
+    // 1. record: append this run to the trend history
+    let data_path = trend_dir.join("data.json");
+    let history = std::fs::read_to_string(&data_path)
+        .ok()
+        .and_then(|body| Json::parse(body.trim()).ok());
+    let updated = trend::append_point(history, trend::trend_point(&current));
+    if let Err(e) = std::fs::create_dir_all(&trend_dir)
+        .and_then(|_| std::fs::write(&data_path, updated.to_string_compact() + "\n"))
+    {
+        eprintln!("bench-trend: cannot write {}: {}", data_path.display(), e);
+        std::process::exit(1);
+    }
+    let points = updated.get("points").and_then(|v| v.as_arr()).map_or(0, |p| p.len());
+    println!("trend   {} ({} point(s))", data_path.display(), points);
+
+    // 2. gate: diff the headline metrics against the committed baseline
+    let baseline = load_reports(&baseline_dir);
+    let cmp = trend::compare(&current, &baseline, threshold);
+    for key in &cmp.ok {
+        println!("ok      {}", key);
+    }
+    for key in &cmp.skipped {
+        println!("skipped {} (missing on one side)", key);
+    }
+    for r in &cmp.regressions {
+        println!("REGRESSED {}", r.describe());
+    }
+    if cmp.regressions.is_empty() {
+        println!(
+            "bench-trend: {} headline(s) within {:.0}% of {}",
+            cmp.ok.len(),
+            100.0 * threshold,
+            baseline_dir.display()
+        );
+    } else {
+        eprintln!(
+            "bench-trend: {} headline regression(s) beyond {:.0}% vs {} — \
+             if intentional, refresh the baseline (docs/OBSERVABILITY.md)",
+            cmp.regressions.len(),
+            100.0 * threshold,
+            baseline_dir.display()
+        );
+    }
+    std::process::exit(trend::exit_code(&cmp));
+}

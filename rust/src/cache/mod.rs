@@ -11,7 +11,8 @@ pub mod slab;
 
 pub use hae::{Hae, HaeConfig};
 pub use paged::{
-    pages_for_slots, PagePool, PoolStats, SharedPagePool, DEFAULT_PAGE_SLOTS,
+    lock_profiled, pages_for_slots, PagePool, PoolStats, SharedPagePool,
+    DEFAULT_PAGE_SLOTS,
 };
 pub use policy::{
     DecodeCtx, EvictionPolicy, PrefillCtx, PrefillDecision, StepDecision,

@@ -94,6 +94,28 @@ pub struct PagePool {
 /// if that bench shows contention (docs/CONCURRENCY.md §lock order).
 pub type SharedPagePool = Arc<Mutex<PagePool>>;
 
+/// Acquire the pool mutex, recording the acquire wait into the profiler
+/// when tracing is on. Every engine pool-lock site goes through this,
+/// so `hae_pool_lock_wait_ms` sees exactly the contention the coarse
+/// mutex comment above asks about. Gate checked *before* the clock
+/// (disabled cost: one relaxed atomic load); the obs lock is taken
+/// while holding the pool guard, which follows the documented pool→obs
+/// lock order (docs/CONCURRENCY.md) — never the reverse.
+pub fn lock_profiled<'a>(
+    pool: &'a SharedPagePool,
+    obs: &crate::obs::Obs,
+) -> std::sync::MutexGuard<'a, PagePool> {
+    if obs.enabled() {
+        let t0 = std::time::Instant::now();
+        let guard = pool.lock().unwrap();
+        let waited_ms = t0.elapsed().as_secs_f64() * 1e3;
+        obs.record(|o| o.profile.pool_lock_wait_ms.record(waited_ms));
+        guard
+    } else {
+        pool.lock().unwrap()
+    }
+}
+
 impl PagePool {
     pub fn new(n_layers: usize, row: usize, n_pages: usize, page_slots: usize) -> Self {
         assert!(page_slots > 0, "page_slots must be positive");

@@ -25,8 +25,9 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::cache::{
-    pages_for_slots, DecodeCtx, KvSlab, Modality, PagePool, PolicyKind, PoolStats,
-    PrefillCtx, SharedPagePool, SlotMeta, DEFAULT_PAGE_SLOTS,
+    lock_profiled, pages_for_slots, DecodeCtx, KvSlab, Modality, PagePool,
+    PolicyKind, PoolStats, PrefillCtx, SharedPagePool, SlotMeta,
+    DEFAULT_PAGE_SLOTS,
 };
 use crate::device::{DecodeDone, DeviceHandle};
 use crate::model::{vocab, Manifest, ModelMeta};
@@ -289,6 +290,30 @@ impl Engine {
         self.obs.clone()
     }
 
+    /// Start a send-wait span: snapshot the device handle's cumulative
+    /// channel send wait before a device call. Returns `u64::MAX` when
+    /// tracing is off so the closing bracket costs nothing. The delta is
+    /// exact because only this engine's thread sends on its handle.
+    fn send_wait_mark(&self) -> u64 {
+        if self.obs.enabled() {
+            self.dev.send_wait_us()
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Close a send-wait span opened by [`Self::send_wait_mark`]: record
+    /// how long the bounded device channel blocked this call's send —
+    /// the backpressure histogram `hae_device_send_wait_ms`.
+    fn send_wait_record(&self, mark: u64) {
+        if mark != u64::MAX {
+            let waited_us = self.dev.send_wait_us().saturating_sub(mark);
+            self.obs.record(|o| {
+                o.profile.device_send_wait_ms.record(waited_us as f64 / 1e3);
+            });
+        }
+    }
+
     /// Handle to the shared page arena (scheduler metrics, tests).
     pub fn page_pool(&self) -> SharedPagePool {
         self.pool.clone()
@@ -296,17 +321,17 @@ impl Engine {
 
     /// Occupancy snapshot of the shared arena.
     pub fn pool_stats(&self) -> PoolStats {
-        self.pool.lock().unwrap().stats()
+        lock_profiled(&self.pool, &self.obs).stats()
     }
 
     /// Total pages in the arena.
     pub fn pool_pages(&self) -> usize {
-        self.pool.lock().unwrap().n_pages()
+        lock_profiled(&self.pool, &self.obs).n_pages()
     }
 
     /// Token slots per arena page.
     pub fn page_slots(&self) -> usize {
-        self.pool.lock().unwrap().page_slots()
+        lock_profiled(&self.pool, &self.obs).page_slots()
     }
 
     /// Admission controller over the engine's physical arena (budget =
@@ -403,14 +428,14 @@ impl Engine {
     /// reclaimable cache entries right now. Lets them decline to touch
     /// the cache when reclaiming cannot close a candidate's shortfall.
     pub fn prefix_reclaimable_pages(&self) -> usize {
-        let pool = self.pool.lock().unwrap();
+        let pool = lock_profiled(&self.pool, &self.obs);
         self.prefix.reclaimable_pages(&pool)
     }
 
     /// Evict the least-recently-used cache entry unconditionally (tests
     /// / shutdown drains). False when the cache is empty.
     pub fn prefix_evict_one(&mut self) -> bool {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_profiled(&self.pool, &self.obs);
         self.prefix.evict_lru(&mut pool)
     }
 
@@ -419,7 +444,7 @@ impl Engine {
     /// pressure valve: entries still mapped by live lanes are kept,
     /// since evicting them frees nothing and only destroys future hits.
     pub fn prefix_reclaim_one(&mut self) -> bool {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_profiled(&self.pool, &self.obs);
         self.prefix.evict_lru_reclaimable(&mut pool)
     }
 
@@ -428,7 +453,7 @@ impl Engine {
     /// Called before every allocating phase so a cache full of cold
     /// prefixes can never starve live requests.
     fn reclaim_pool_headroom(&mut self, needed: usize) {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_profiled(&self.pool, &self.obs);
         if pool.free_pages() < needed {
             self.prefix.reclaim(&mut pool, needed);
         }
@@ -537,7 +562,7 @@ impl Engine {
                 // adoption refused: the entry's pins are broken (a pool
                 // accounting bug, surfaced via refcount_errors). Drop the
                 // entry so it is not retried forever, and go cold.
-                let mut pool = self.pool.lock().unwrap();
+                let mut pool = lock_profiled(&self.pool, &self.obs);
                 self.prefix.remove(&pr.key, &mut pool);
             }
             // partial warm start: only for policies whose retention
@@ -681,7 +706,7 @@ impl Engine {
             // broken pins (a pool-accounting bug surfaced via
             // refcount_errors): drop the entry like the exact path does,
             // so it is not retried — and refused — on every later turn
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_profiled(&self.pool, &self.obs);
             if let Some(pp) = &probe.partial {
                 self.prefix.remove(&probe.key[..pp.prefix_syms], &mut pool);
             }
@@ -705,7 +730,7 @@ impl Engine {
         // pins are only converted when the phase that needs them runs.
         let appends = pages_for_slots(n, ps).saturating_sub(hit.pages.len()) + 1;
         self.reclaim_pool_headroom(appends);
-        if self.pool.lock().unwrap().free_pages() < appends {
+        if lock_profiled(&self.pool, &self.obs).free_pages() < appends {
             return Ok(Err(req));
         }
 
@@ -776,6 +801,7 @@ impl Engine {
                 // result is inspected so an error path leaks nothing
                 let ek = std::mem::take(&mut self.ext_k);
                 let evb = std::mem::take(&mut self.ext_v);
+                let sw = self.send_wait_mark();
                 let done = self.dev.extend(
                     1,
                     s_bucket,
@@ -787,6 +813,7 @@ impl Engine {
                     vec![len as i32],
                     vec![step as i32],
                 )?;
+                self.send_wait_record(sw);
                 self.ext_k = done.k;
                 self.ext_v = done.v;
                 let (out, timing) = done.result?;
@@ -823,6 +850,7 @@ impl Engine {
                 lengths[0] = len as i32;
                 let ek = std::mem::take(&mut self.ext_k);
                 let evb = std::mem::take(&mut self.ext_v);
+                let sw = self.send_wait_mark();
                 let done = self.dev.decode(
                     b,
                     capacity,
@@ -832,6 +860,7 @@ impl Engine {
                     evb,
                     lengths.clone(),
                 )?;
+                self.send_wait_record(sw);
                 self.ext_k = done.k;
                 self.ext_v = done.v;
                 let (out, timing) = done.result?;
@@ -898,11 +927,11 @@ impl Engine {
         // deliberately not flushed for this up front); exhaustion falls
         // back to a cold prefill instead of panicking
         self.reclaim_pool_headroom(slab.shared_pages());
-        let forks_before = self.pool.lock().unwrap().stats().forks;
+        let forks_before = lock_profiled(&self.pool, &self.obs).stats().forks;
         if slab.try_compact(&retain).is_none() {
             return Ok(Err(req));
         }
-        let forked = self.pool.lock().unwrap().stats().forks - forks_before;
+        let forked = lock_profiled(&self.pool, &self.obs).stats().forks - forks_before;
         if forked > 0 {
             self.obs.event(req.id, TraceEvent::CowFork { pages: forked as u32 });
         }
@@ -993,7 +1022,7 @@ impl Engine {
         }
         let pages = ar.slab.mark_all_shared();
         let snapshot = ar.slab.meta().to_vec();
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_profiled(&self.pool, &self.obs);
         self.prefix.register(
             &mut pool,
             key,
@@ -1024,7 +1053,7 @@ impl Engine {
             return;
         }
         self.reclaim_pool_headroom(n_pages);
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_profiled(&self.pool, &self.obs);
         if pool.free_pages() < n_pages {
             return;
         }
@@ -1089,8 +1118,7 @@ impl Engine {
         let m = self.meta().clone();
         let n = req.prompt_len();
         let bucket = self
-            .rt
-            .manifest
+            .manifest()
             .prefill_bucket(n)
             .ok_or_else(|| anyhow!("prompt of {} tokens exceeds largest bucket", n))?;
 
@@ -1112,8 +1140,10 @@ impl Engine {
             .filter(|_| register_prefix)
             .and_then(|pr| pr.partial.as_ref())
             .map_or(0, |pp| pp.prefix_tokens);
+        let sw = self.send_wait_mark();
         let (out, timing) =
             self.dev.prefill(bucket, &ids, &patches, &is_vision_f, n, n_prefix)?;
+        self.send_wait_record(sw);
 
         let t_coord = Instant::now();
         let mut policy = self.cfg.policy.build();
@@ -1392,8 +1422,12 @@ impl Engine {
             );
         }
         let assemble_s = t0.elapsed().as_secs_f64();
+        let sw = self.send_wait_mark();
         let rx = match self.dev.decode_async(b, capacity, tokens, positions, k, v, lengths) {
-            Ok(rx) => rx,
+            Ok(rx) => {
+                self.send_wait_record(sw);
+                rx
+            }
             Err(e) => {
                 // the send consumed the scratch; restore fresh buffers so
                 // the engine object stays usable past the error
@@ -1528,7 +1562,7 @@ impl Engine {
                 // can afford both; a fork-free eviction (nothing shared)
                 // always proceeds.
                 let affordable = ar.slab.shared_pages() == 0 || {
-                    let pool = self.pool.lock().unwrap();
+                    let pool = lock_profiled(&self.pool, &self.obs);
                     pool.free_pages() >= ar.slab.shared_pages() + live_n
                 };
                 if affordable {
@@ -1541,14 +1575,14 @@ impl Engine {
                         })
                         .collect();
                     let forks_before = (obs_on && ar.slab.shared_pages() > 0)
-                        .then(|| self.pool.lock().unwrap().stats().forks);
+                        .then(|| lock_profiled(&self.pool, &self.obs).stats().forks);
                     match ar.slab.try_evict(&decision.evict) {
                         Some(evicted) => {
                             ar.evictions.push(EvictionEvent { step, victims });
                             ar.stats.evicted_at_decode += evicted;
                             if obs_on {
                                 let forked = forks_before.map_or(0, |f0| {
-                                    self.pool.lock().unwrap().stats().forks - f0
+                                    lock_profiled(&self.pool, &self.obs).stats().forks - f0
                                 });
                                 let mut o = self.obs.inner();
                                 o.evicted_per_decision.record(evicted as f64);

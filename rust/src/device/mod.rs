@@ -86,6 +86,26 @@ pub enum DeviceCall {
     },
 }
 
+/// Raw channel-health counters shared between every [`DeviceHandle`]
+/// clone and the serve loop. Always on: a handful of relaxed atomic ops
+/// per device *call* (not per token) is noise next to the call itself,
+/// and keeping them unconditional means `{"kind":"stats"}` reports
+/// device health even with tracing off. The obs layer folds these into
+/// its gated profile spans once per step (`obs::profile`).
+#[derive(Debug, Default)]
+pub struct ChannelStats {
+    /// Cumulative wall-time callers spent blocked in `send` (µs) —
+    /// nonzero means the bounded queue pushed back on the host.
+    pub send_wait_us: AtomicU64,
+    /// Total calls sent over the channel.
+    pub calls: AtomicU64,
+    /// Calls sent and not yet completed by the device thread
+    /// (queued + executing); bounded by `QUEUE_DEPTH + 1`.
+    pub in_flight: AtomicU64,
+    /// High-water mark of `in_flight`.
+    pub peak_in_flight: AtomicU64,
+}
+
 /// Decode reply: the result plus the gather scratch moved back to the
 /// caller for reuse.
 pub struct DecodeDone {
@@ -128,6 +148,7 @@ pub struct DeviceHandle {
     tx: SyncSender<DeviceCall>,
     manifest: Arc<Manifest>,
     busy_us: Arc<AtomicU64>,
+    chan: Arc<ChannelStats>,
     shared: Arc<DeviceThread>,
 }
 
@@ -137,6 +158,7 @@ impl Clone for DeviceHandle {
             tx: self.tx.clone(),
             manifest: Arc::clone(&self.manifest),
             busy_us: Arc::clone(&self.busy_us),
+            chan: Arc::clone(&self.chan),
             shared: Arc::clone(&self.shared),
         }
     }
@@ -147,6 +169,7 @@ impl std::fmt::Debug for DeviceHandle {
         f.debug_struct("DeviceHandle")
             .field("model", &self.manifest.model)
             .field("busy_us", &self.busy_us.load(Ordering::Relaxed))
+            .field("queue_depth", &self.chan.in_flight.load(Ordering::Relaxed))
             .finish()
     }
 }
@@ -163,6 +186,8 @@ pub fn spawn(
     let (tx, rx) = mpsc::sync_channel::<DeviceCall>(QUEUE_DEPTH);
     let busy_us = Arc::new(AtomicU64::new(0));
     let busy = Arc::clone(&busy_us);
+    let chan = Arc::new(ChannelStats::default());
+    let chan_serve = Arc::clone(&chan);
     let join = thread::Builder::new()
         .name("hae-device".into())
         .spawn(move || {
@@ -180,7 +205,7 @@ pub fn spawn(
                     return;
                 }
             };
-            serve(&rt, &rx, &busy);
+            serve(&rt, &rx, &busy, &chan_serve);
         })
         .map_err(|e| anyhow!("spawning device thread: {e}"))?;
     let manifest = match boot_rx.recv() {
@@ -198,6 +223,7 @@ pub fn spawn(
         tx,
         manifest: Arc::new(manifest),
         busy_us,
+        chan,
         shared: Arc::new(DeviceThread { join: Mutex::new(Some(join)) }),
     })
 }
@@ -205,7 +231,7 @@ pub fn spawn(
 /// The device thread's serve loop: strict FIFO, never blocks on a
 /// caller (a dropped reply receiver is ignored), exits when every
 /// handle is gone.
-fn serve(rt: &Runtime, rx: &Receiver<DeviceCall>, busy_us: &AtomicU64) {
+fn serve(rt: &Runtime, rx: &Receiver<DeviceCall>, busy_us: &AtomicU64, chan: &ChannelStats) {
     let m = rt.meta();
     let row = m.n_heads * m.d_head;
     let n_layers = m.n_layers;
@@ -256,6 +282,7 @@ fn serve(rt: &Runtime, rx: &Receiver<DeviceCall>, busy_us: &AtomicU64) {
             }
         }
         busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        chan.in_flight.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -275,10 +302,40 @@ impl DeviceHandle {
         self.busy_us.load(Ordering::Relaxed)
     }
 
+    /// Cumulative wall-time callers have spent blocked in the channel
+    /// send (µs) — the backpressure signal. The engine brackets device
+    /// calls with deltas of this to build the gated send-wait histogram.
+    pub fn send_wait_us(&self) -> u64 {
+        self.chan.send_wait_us.load(Ordering::Relaxed)
+    }
+
+    /// Total calls sent to the device thread.
+    pub fn calls(&self) -> u64 {
+        self.chan.calls.load(Ordering::Relaxed)
+    }
+
+    /// Calls sent and not yet completed (queued + executing).
+    pub fn queue_depth(&self) -> u64 {
+        self.chan.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`queue_depth`](Self::queue_depth).
+    pub fn peak_queue_depth(&self) -> u64 {
+        self.chan.peak_in_flight.load(Ordering::Relaxed)
+    }
+
     fn send(&self, call: DeviceCall) -> Result<()> {
-        self.tx
-            .send(call)
-            .map_err(|_| anyhow!("device thread disconnected"))
+        let depth = self.chan.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.chan.peak_in_flight.fetch_max(depth, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let sent = self.tx.send(call);
+        self.chan.send_wait_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        self.chan.calls.fetch_add(1, Ordering::Relaxed);
+        if sent.is_err() {
+            // nothing reached the queue; undo the optimistic increment
+            self.chan.in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+        sent.map_err(|_| anyhow!("device thread disconnected"))
     }
 
     pub fn prefill(

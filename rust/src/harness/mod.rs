@@ -131,6 +131,7 @@ pub fn spawn_server(
             kv_budget,
             sched_policy,
             engine_threads,
+            ..ServerConfig::default()
         };
         // surface engine errors as a thread panic so callers see the
         // root cause on join() instead of a silent dead server

@@ -18,7 +18,7 @@ use hae_serve::coordinator::{Engine, EngineConfig, DEFAULT_EXTEND_CHUNK};
 use hae_serve::harness;
 use hae_serve::model::vocab;
 use hae_serve::runtime::Runtime;
-use hae_serve::scheduler::{parse_kv_budget, SchedPolicy};
+use hae_serve::scheduler::{parse_kv_budget, SchedPolicy, SloTable};
 use hae_serve::server::{serve, ServerConfig};
 use hae_serve::util::args::Args;
 use hae_serve::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
@@ -48,6 +48,12 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
                     histograms (queryable via {"kind":"trace"} and the
                     stats "phases" block; default on)
   --sched-policy P  serve: fifo | priority (default fifo)
+  --slo SPEC        serve: per-class latency SLO targets as
+                    class=ttft_ms:e2e_ms[,class=...], classes
+                    qa|story|video|mixed, e.g. qa=200:2000,story=500:30000;
+                    attainment is reported per class in the stats snapshot
+                    and as hae_slo_*_attainment Prometheus series
+                    (default: none)
   --engine-threads N serve: 1 = strictly sequential scheduler rounds,
                     >=2 = pipelined rounds overlapping host work (reply
                     delivery, ingest, lane backfill) with the device
@@ -254,12 +260,17 @@ fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
     if engine_threads == 0 {
         return Err(anyhow!("bad --engine-threads 0 (accepted: an integer ≥ 1)"));
     }
+    let slo = match args.get("slo") {
+        Some(spec) => SloTable::parse(spec).map_err(|e| anyhow!(e))?,
+        None => SloTable::default(),
+    };
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
         queue_depth: args.usize("queue", 64),
         kv_budget,
         sched_policy,
         engine_threads,
+        slo,
     };
     serve(engine, cfg, grammar)
 }

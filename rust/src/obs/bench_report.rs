@@ -10,15 +10,23 @@
 //! {
 //!   "bench": "page_pool",
 //!   "rev": "392c282",
+//!   "timestamp": 1754550000,
+//!   "engine_threads": 1,
 //!   "config": {"iters": "4000"},
 //!   "metrics": {"alloc_free_mops": {"value": 12.3, "unit": "Mops/s"}}
 //! }
 //! ```
+//!
+//! `timestamp` (unix seconds at serialisation) and `engine_threads` (the
+//! scheduler-overlap setting the run used; 1 when irrelevant) let
+//! `bin/bench_trend` place each report on its trend axis without parsing
+//! git history.
 
 use std::collections::BTreeMap;
 use std::io;
 use std::path::PathBuf;
 use std::process::Command;
+use std::sync::OnceLock;
 
 use crate::util::json::{num, obj, s, Json};
 
@@ -31,16 +39,31 @@ pub fn bench_dir() -> PathBuf {
 
 /// Best-effort short git revision; "unknown" when git is unavailable
 /// (bench output must never fail because the tree is not a checkout).
+/// Cached for the process lifetime — a bench binary writing several
+/// reports shells out to git once, not per report.
 pub fn git_rev() -> String {
-    Command::new("git")
-        .args(["rev-parse", "--short", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|v| v.trim().to_string())
-        .filter(|v| !v.is_empty())
-        .unwrap_or_else(|| "unknown".to_string())
+    static REV: OnceLock<String> = OnceLock::new();
+    REV.get_or_init(|| {
+        Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|v| v.trim().to_string())
+            .filter(|v| !v.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    })
+    .clone()
+}
+
+/// Unix seconds now; 0 if the clock is before the epoch (never panics —
+/// report writing must not fail on a broken clock).
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
 }
 
 /// Accumulates config and metrics for one bench run, then serialises to
@@ -49,6 +72,9 @@ pub struct BenchReport {
     name: String,
     config: BTreeMap<String, String>,
     metrics: BTreeMap<String, (f64, String)>,
+    /// scheduler-overlap setting the run used (1 = sequential rounds,
+    /// also the value for benches where the engine never runs)
+    engine_threads: usize,
 }
 
 impl BenchReport {
@@ -57,11 +83,17 @@ impl BenchReport {
             name: name.to_string(),
             config: BTreeMap::new(),
             metrics: BTreeMap::new(),
+            engine_threads: 1,
         }
     }
 
     pub fn config(&mut self, key: &str, value: impl ToString) -> &mut Self {
         self.config.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn engine_threads(&mut self, n: usize) -> &mut Self {
+        self.engine_threads = n;
         self
     }
 
@@ -89,6 +121,8 @@ impl BenchReport {
         obj(vec![
             ("bench", s(&self.name)),
             ("rev", s(&git_rev())),
+            ("timestamp", num(unix_now() as f64)),
+            ("engine_threads", num(self.engine_threads as f64)),
             ("config", config),
             ("metrics", metrics),
         ])
@@ -112,6 +146,12 @@ pub fn schema_problems(j: &Json) -> Vec<String> {
     }
     if j.get("rev").and_then(|v| v.as_str()).is_none() {
         out.push("missing 'rev'".into());
+    }
+    if j.get("timestamp").and_then(|v| v.as_f64()).is_none() {
+        out.push("missing numeric 'timestamp'".into());
+    }
+    if j.get("engine_threads").and_then(|v| v.as_f64()).is_none() {
+        out.push("missing numeric 'engine_threads'".into());
     }
     if j.get("config").and_then(|v| v.as_obj()).is_none() {
         out.push("missing 'config' object".into());
@@ -177,6 +217,14 @@ mod tests {
             j.path(&["config", "iters"]).and_then(|v| v.as_str()),
             Some("100")
         );
+        assert!(j.get("timestamp").and_then(|v| v.as_f64()).unwrap_or(-1.0) >= 0.0);
+        assert_eq!(j.get("engine_threads").and_then(|v| v.as_usize()), Some(1));
+        let mut r2 = BenchReport::new("unit_test");
+        r2.engine_threads(2).metric("x", 1.0, "n");
+        assert_eq!(
+            r2.to_json().get("engine_threads").and_then(|v| v.as_usize()),
+            Some(2)
+        );
     }
 
     #[test]
@@ -203,6 +251,8 @@ mod tests {
         let bad = Json::parse(r#"{"bench":"x","metrics":{"m":{"value":"nope"}}}"#).unwrap();
         let probs = schema_problems(&bad);
         assert!(probs.iter().any(|p| p.contains("rev")));
+        assert!(probs.iter().any(|p| p.contains("timestamp")));
+        assert!(probs.iter().any(|p| p.contains("engine_threads")));
         assert!(probs.iter().any(|p| p.contains("config")));
         assert!(probs.iter().any(|p| p.contains("numeric 'value'")));
         assert!(probs.iter().any(|p| p.contains("unit")));

@@ -14,14 +14,17 @@
 
 pub mod bench_report;
 pub mod hist;
+pub mod profile;
 pub mod prometheus;
 pub mod trace;
+pub mod trend;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 pub use bench_report::BenchReport;
 pub use hist::Histogram;
+pub use profile::ProfileSpans;
 pub use trace::{EvictKind, RetireReason, TraceEvent, TraceJournal, TraceRecord};
 
 use crate::util::json::{num, obj, Json};
@@ -46,6 +49,9 @@ pub struct ObsInner {
     pub retained_frac_text: Histogram,
     /// KV slots evicted per eviction decision (any mechanism).
     pub evicted_per_decision: Histogram,
+    /// Threaded-core contention/queue spans (pool mutex, device channel,
+    /// step phases) plus folded device-thread gauges.
+    pub profile: ProfileSpans,
 }
 
 impl ObsInner {
@@ -59,6 +65,7 @@ impl ObsInner {
             retained_frac_vision: Histogram::unit_fraction(),
             retained_frac_text: Histogram::unit_fraction(),
             evicted_per_decision: Histogram::count_scale(),
+            profile: ProfileSpans::new(),
         }
     }
 }
@@ -130,6 +137,12 @@ impl Obs {
         ])
     }
 
+    /// The span/gauge block of the `{"kind":"profile"}` wire reply
+    /// (`Scheduler::profile_json` wraps it with the reply envelope).
+    pub fn profile_json(&self) -> Json {
+        self.inner().profile.to_json()
+    }
+
     /// Answer `{"kind":"trace","id":N}` / `{"kind":"trace","last":K}`.
     /// With `id` present, returns that request's retained lifecycle; else
     /// the newest `last` events journal-wide (default 64).
@@ -164,6 +177,7 @@ impl Obs {
         prometheus::histogram(out, "hae_retained_frac_text", "fraction of text prompt tokens retained at prefill", &o.retained_frac_text);
         prometheus::histogram(out, "hae_evicted_slots_per_decision", "KV slots evicted per eviction decision", &o.evicted_per_decision);
         prometheus::counter(out, "hae_trace_events_total", "lifecycle trace events recorded", o.trace.total_recorded() as f64);
+        o.profile.prometheus_into(out);
     }
 }
 

@@ -1,0 +1,162 @@
+//! Serving profiler: contention and queue spans for the threaded core.
+//!
+//! PR 7 split the engine across threads (scheduler loop, dedicated device
+//! thread, connection threads) and left three seams where time can hide:
+//! the pool mutex, the bounded device channel (backpressure blocks the
+//! *sender*), and the per-step begin/overlap/finish pipeline. This module
+//! owns the span histograms for those seams. They live inside `ObsInner`
+//! behind the same `Obs::enabled` gate as the trace journal (disabled
+//! cost: one relaxed atomic load at the call site) and are recorded
+//! alloc-free — fixed-bucket histograms, no labels, no strings on the
+//! hot path.
+//!
+//! Sources:
+//! - pool-mutex acquire wait: `cache::paged::lock_profiled`, the timed
+//!   wrapper every engine pool-lock site goes through;
+//! - device-channel send wait: the engine brackets each device call with
+//!   `DeviceHandle::send_wait_us` deltas (the handle itself accumulates
+//!   raw always-on atomics — `device::ChannelStats`; the histogram lives
+//!   here where the gate is);
+//! - step phases: `Scheduler::begin_step`/`finish_step` self-time, the
+//!   server's pipelined loop times the overlap window it owns;
+//! - device queue depth: sampled once per step by `finish_step`.
+//!
+//! The raw device-thread *totals* (busy µs, send-wait µs, calls, depth)
+//! are deliberately not stored here: the scheduler folds them into its
+//! always-on `MetricsRegistry` each step, so `{"kind":"stats"}` and the
+//! Prometheus exposition report device health even with tracing off.
+
+use crate::obs::hist::Histogram;
+use crate::obs::prometheus;
+use crate::util::json::{obj, Json};
+
+/// Mutable profiler state; a field of `ObsInner`, guarded by its mutex.
+#[derive(Debug)]
+pub struct ProfileSpans {
+    /// Wait to acquire the shared page-pool mutex (ms per acquisition).
+    pub pool_lock_wait_ms: Histogram,
+    /// Wait in `DeviceHandle::send` — nonzero means the bounded device
+    /// channel is full and backpressure is blocking the host (ms per call).
+    pub device_send_wait_ms: Histogram,
+    /// Host time in `Scheduler::begin_step` (gather + submit) per step.
+    pub step_begin_ms: Histogram,
+    /// Host time spent in the overlap window (replies, ingest drain,
+    /// backfill admission) while the device computes, per step.
+    pub step_overlap_ms: Histogram,
+    /// Host time in `Scheduler::finish_step` (collect + retire) per step.
+    pub step_finish_ms: Histogram,
+    /// Device-channel depth sampled once per step (calls sent, not yet
+    /// completed by the device thread; bounded by `device::QUEUE_DEPTH`).
+    pub device_queue_depth: Histogram,
+}
+
+impl ProfileSpans {
+    pub fn new() -> Self {
+        ProfileSpans {
+            pool_lock_wait_ms: Histogram::latency_ms(),
+            device_send_wait_ms: Histogram::latency_ms(),
+            step_begin_ms: Histogram::latency_ms(),
+            step_overlap_ms: Histogram::latency_ms(),
+            step_finish_ms: Histogram::latency_ms(),
+            device_queue_depth: Histogram::linear(0.0, 16.0, 16),
+        }
+    }
+
+    /// The span block of the `{"kind":"profile"}` wire reply
+    /// (`Scheduler::profile_json` adds the envelope and the always-on
+    /// device gauges from its metrics registry).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("pool_lock_wait_ms", self.pool_lock_wait_ms.summary_json()),
+            ("device_send_wait_ms", self.device_send_wait_ms.summary_json()),
+            ("step_begin_ms", self.step_begin_ms.summary_json()),
+            ("step_overlap_ms", self.step_overlap_ms.summary_json()),
+            ("step_finish_ms", self.step_finish_ms.summary_json()),
+            ("device_queue_depth", self.device_queue_depth.summary_json()),
+        ])
+    }
+
+    /// Append the profiler's span histograms to the Prometheus
+    /// exposition. Series names are part of the wire contract
+    /// (docs/OBSERVABILITY.md); the device counters/gauges are emitted
+    /// by `MetricsRegistry::prometheus_into`, not here.
+    pub fn prometheus_into(&self, out: &mut String) {
+        prometheus::histogram(
+            out,
+            "hae_pool_lock_wait_ms",
+            "wait to acquire the shared page-pool mutex (ms)",
+            &self.pool_lock_wait_ms,
+        );
+        prometheus::histogram(
+            out,
+            "hae_device_send_wait_ms",
+            "device-channel send wait, backpressure on the host (ms)",
+            &self.device_send_wait_ms,
+        );
+        prometheus::histogram(out, "hae_step_begin_ms", "host time in begin_step per step (ms)", &self.step_begin_ms);
+        prometheus::histogram(
+            out,
+            "hae_step_overlap_ms",
+            "host time in the overlap window per step (ms)",
+            &self.step_overlap_ms,
+        );
+        prometheus::histogram(out, "hae_step_finish_ms", "host time in finish_step per step (ms)", &self.step_finish_ms);
+        prometheus::histogram(
+            out,
+            "hae_device_queue_depth_hist",
+            "device-channel depth sampled per step",
+            &self.device_queue_depth,
+        );
+    }
+}
+
+impl Default for ProfileSpans {
+    fn default() -> Self {
+        ProfileSpans::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_block_has_all_spans() {
+        let mut p = ProfileSpans::new();
+        p.pool_lock_wait_ms.record(0.25);
+        p.device_queue_depth.record(2.0);
+        let j = p.to_json();
+        for key in [
+            "pool_lock_wait_ms",
+            "device_send_wait_ms",
+            "step_begin_ms",
+            "step_overlap_ms",
+            "step_finish_ms",
+            "device_queue_depth",
+        ] {
+            assert!(j.get(key).is_some(), "missing {}", key);
+        }
+        assert_eq!(j.path(&["pool_lock_wait_ms", "count"]).and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(j.path(&["device_queue_depth", "count"]).and_then(|v| v.as_i64()), Some(1));
+    }
+
+    #[test]
+    fn prometheus_series_present_and_valid() {
+        let mut p = ProfileSpans::new();
+        p.pool_lock_wait_ms.record(1.5);
+        p.device_send_wait_ms.record(0.02);
+        let mut out = String::new();
+        p.prometheus_into(&mut out);
+        assert!(prometheus::parses_as_exposition(&out), "{}", out);
+        for series in [
+            "hae_pool_lock_wait_ms_bucket",
+            "hae_device_send_wait_ms_bucket",
+            "hae_step_begin_ms_bucket",
+            "hae_step_overlap_ms_bucket",
+            "hae_step_finish_ms_bucket",
+            "hae_device_queue_depth_hist_bucket",
+        ] {
+            assert!(out.contains(series), "missing {}", series);
+        }
+    }
+}

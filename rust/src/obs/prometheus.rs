@@ -32,6 +32,17 @@ pub fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
     out.push_str(&format!("# HELP {} {}\n# TYPE {} gauge\n{} {}\n", name, help, name, name, fmt_f64(v)));
 }
 
+/// `# TYPE name gauge` + one labeled sample per row
+/// (`name{label="key"} v`) — the per-class SLO series use this with
+/// `label = "class"`. Keys must need no escaping (they are the fixed
+/// `WorkloadKind::wire_name` strings).
+pub fn labeled_gauge(out: &mut String, name: &str, help: &str, label: &str, rows: &[(&str, f64)]) {
+    out.push_str(&format!("# HELP {} {}\n# TYPE {} gauge\n", name, help, name));
+    for (key, v) in rows {
+        out.push_str(&format!("{}{{{}=\"{}\"}} {}\n", name, label, key, fmt_f64(*v)));
+    }
+}
+
 /// Cumulative-bucket histogram exposition. Only buckets at or below the
 /// first empty tail are elided to keep the payload proportional to the data
 /// actually observed; the mandatory `+Inf` bucket, `_sum` and `_count` are

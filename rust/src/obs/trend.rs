@@ -1,0 +1,360 @@
+//! Bench trend history and the regression gate — the comparison logic
+//! behind `bin/bench_trend` (`make bench-trend`).
+//!
+//! Each bench run leaves `BENCH_<name>.json` reports (obs::bench_report).
+//! This module turns one run's reports into a trend *point* (flattened
+//! `bench/metric` values keyed by git rev + timestamp), appends it to a
+//! schema-stable history (`benches/trend/data.json`), and diffs the run
+//! against a committed baseline (`benches/baseline/`): a headline metric
+//! moving in its bad direction by more than the threshold is a
+//! regression, and the gate exits non-zero. Pure functions over
+//! [`Json`] — all file I/O lives in the binary, so every branch here is
+//! unit-testable without touching the filesystem.
+//!
+//! History schema (additive-only, like the stats snapshot):
+//!
+//! ```json
+//! {"schema": 1, "points": [
+//!   {"rev": "5c8b93f", "timestamp": 1754550000,
+//!    "metrics": {"serve_batch/decode_tok_s_pipelined": 512.0, ...}},
+//!   ...]}
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// A gated metric: its report, its key, and which direction is bad.
+#[derive(Debug, Clone, Copy)]
+pub struct Headline {
+    pub bench: &'static str,
+    pub metric: &'static str,
+    pub higher_is_better: bool,
+}
+
+/// The metrics the gate fails on. Everything else still lands in the
+/// trend history for inspection — gating on every noisy micro-metric
+/// would make the gate cry wolf; these are the serving headlines the
+/// paper's claims ride on.
+pub const HEADLINES: &[Headline] = &[
+    Headline { bench: "serve_batch", metric: "decode_tok_s_pipelined", higher_is_better: true },
+    Headline { bench: "serve_batch", metric: "decode_tok_s_single_thread", higher_is_better: true },
+    Headline { bench: "serve_batch", metric: "host_device_overlap_frac", higher_is_better: true },
+    Headline { bench: "serve_batch", metric: "ttft_p50_ms_pipelined", higher_is_better: false },
+    Headline { bench: "prefix_cache", metric: "warm_prefill_s", higher_is_better: false },
+];
+
+/// Default relative-change gate (`HAE_TREND_THRESHOLD` overrides): a
+/// headline may move up to 10% in its bad direction before failing.
+pub const DEFAULT_THRESHOLD: f64 = 0.10;
+
+/// Points retained in the trend history before the oldest fall off.
+pub const HISTORY_CAP: usize = 500;
+
+/// Pull one metric value out of a `BENCH_*.json` report object.
+pub fn metric_value(report: &Json, metric: &str) -> Option<f64> {
+    report.path(&["metrics", metric, "value"]).and_then(|v| v.as_f64())
+}
+
+/// One headline that moved beyond the threshold in its bad direction.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub bench: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// signed relative change, `(current - baseline) / baseline`
+    pub change_frac: f64,
+}
+
+impl Regression {
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{}: baseline {:.4} -> current {:.4} ({:+.1}%)",
+            self.bench,
+            self.metric,
+            self.baseline,
+            self.current,
+            100.0 * self.change_frac
+        )
+    }
+}
+
+/// Outcome of diffing one run against the baseline.
+#[derive(Debug, Default)]
+pub struct Comparison {
+    /// headlines present on both sides and within threshold
+    pub ok: Vec<String>,
+    /// headlines missing a side (report or metric absent) — reported,
+    /// never failed on: a baseline refresh must not brick the gate
+    pub skipped: Vec<String>,
+    pub regressions: Vec<Regression>,
+}
+
+/// Diff the current run's reports (bench name → report object) against
+/// the baseline's. Only [`HEADLINES`] are gated; a metric regresses when
+/// it moves more than `threshold` (relative) in its bad direction.
+pub fn compare(
+    current: &BTreeMap<String, Json>,
+    baseline: &BTreeMap<String, Json>,
+    threshold: f64,
+) -> Comparison {
+    let mut out = Comparison::default();
+    for h in HEADLINES {
+        let key = format!("{}/{}", h.bench, h.metric);
+        let cur = current.get(h.bench).and_then(|r| metric_value(r, h.metric));
+        let base = baseline.get(h.bench).and_then(|r| metric_value(r, h.metric));
+        let (cur, base) = match (cur, base) {
+            (Some(c), Some(b)) if b > 0.0 => (c, b),
+            // absent on either side, or a degenerate zero baseline the
+            // relative change is undefined against
+            _ => {
+                out.skipped.push(key);
+                continue;
+            }
+        };
+        let change_frac = (cur - base) / base;
+        let regressed = if h.higher_is_better {
+            change_frac < -threshold
+        } else {
+            change_frac > threshold
+        };
+        if regressed {
+            out.regressions.push(Regression {
+                bench: h.bench.to_string(),
+                metric: h.metric.to_string(),
+                baseline: base,
+                current: cur,
+                change_frac,
+            });
+        } else {
+            out.ok.push(key);
+        }
+    }
+    out
+}
+
+/// The process exit status the gate maps a comparison to.
+pub fn exit_code(cmp: &Comparison) -> i32 {
+    if cmp.regressions.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+/// Flatten one run's reports into a trend point: every metric of every
+/// report as `"bench/metric": value`, stamped with the run's rev and
+/// timestamp (taken from the first report that carries them — one run
+/// writes all its reports at the same rev).
+pub fn trend_point(reports: &BTreeMap<String, Json>) -> Json {
+    let rev = reports
+        .values()
+        .find_map(|r| r.get("rev").and_then(|v| v.as_str()).map(String::from))
+        .unwrap_or_else(|| "unknown".to_string());
+    let timestamp = reports
+        .values()
+        .find_map(|r| r.get("timestamp").and_then(|v| v.as_f64()))
+        .unwrap_or(0.0);
+    let mut metrics: Vec<(String, Json)> = Vec::new();
+    for (bench, report) in reports {
+        if let Some(m) = report.get("metrics").and_then(|v| v.as_obj()) {
+            for (name, entry) in m {
+                if let Some(v) = entry.get("value").and_then(|x| x.as_f64()) {
+                    metrics.push((format!("{}/{}", bench, name), num(v)));
+                }
+            }
+        }
+    }
+    obj(vec![
+        ("rev", s(&rev)),
+        ("timestamp", num(timestamp)),
+        ("metrics", Json::Obj(metrics.into_iter().collect())),
+    ])
+}
+
+/// Append a point to the history (creating it when `history` is None or
+/// malformed), dropping the oldest points past [`HISTORY_CAP`]. The
+/// schema marker stays 1 — additions to points are additive-only.
+pub fn append_point(history: Option<Json>, point: Json) -> Json {
+    let mut points: Vec<Json> = history
+        .as_ref()
+        .and_then(|h| h.get("points"))
+        .and_then(|p| p.as_arr())
+        .map(|p| p.to_vec())
+        .unwrap_or_default();
+    points.push(point);
+    if points.len() > HISTORY_CAP {
+        let drop = points.len() - HISTORY_CAP;
+        points.drain(..drop);
+    }
+    obj(vec![("schema", num(1.0)), ("points", Json::Arr(points))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal schema-shaped report: `{"rev","timestamp","metrics":{..}}`.
+    fn report(rev: &str, metrics: &[(&str, f64)]) -> Json {
+        let m: Vec<(String, Json)> = metrics
+            .iter()
+            .map(|(k, v)| {
+                (k.to_string(), obj(vec![("value", num(*v)), ("unit", s("x"))]))
+            })
+            .collect();
+        obj(vec![
+            ("bench", s("test")),
+            ("rev", s(rev)),
+            ("timestamp", num(1_754_550_000.0)),
+            ("engine_threads", num(2.0)),
+            ("metrics", Json::Obj(m.into_iter().collect())),
+        ])
+    }
+
+    fn run(serve_metrics: &[(&str, f64)], warm_prefill_s: f64) -> BTreeMap<String, Json> {
+        let mut out = BTreeMap::new();
+        out.insert("serve_batch".to_string(), report("abc1234", serve_metrics));
+        out.insert(
+            "prefix_cache".to_string(),
+            report("abc1234", &[("warm_prefill_s", warm_prefill_s)]),
+        );
+        out
+    }
+
+    const BASE_SERVE: &[(&str, f64)] = &[
+        ("decode_tok_s_pipelined", 500.0),
+        ("decode_tok_s_single_thread", 400.0),
+        ("host_device_overlap_frac", 0.5),
+        ("ttft_p50_ms_pipelined", 30.0),
+    ];
+
+    #[test]
+    fn identical_runs_pass_the_gate() {
+        let base = run(BASE_SERVE, 0.02);
+        let cmp = compare(&base, &base, DEFAULT_THRESHOLD);
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert_eq!(cmp.ok.len(), HEADLINES.len());
+        assert!(cmp.skipped.is_empty());
+        assert_eq!(exit_code(&cmp), 0);
+    }
+
+    #[test]
+    fn synthetic_decode_regression_fails_the_gate() {
+        let base = run(BASE_SERVE, 0.02);
+        // 15% decode-throughput drop against a 10% threshold
+        let cur = run(
+            &[
+                ("decode_tok_s_pipelined", 425.0),
+                ("decode_tok_s_single_thread", 400.0),
+                ("host_device_overlap_frac", 0.5),
+                ("ttft_p50_ms_pipelined", 30.0),
+            ],
+            0.02,
+        );
+        let cmp = compare(&cur, &base, DEFAULT_THRESHOLD);
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        let r = &cmp.regressions[0];
+        assert_eq!(r.metric, "decode_tok_s_pipelined");
+        assert!((r.change_frac + 0.15).abs() < 1e-9, "{}", r.change_frac);
+        assert_ne!(exit_code(&cmp), 0, "regressed run must exit non-zero");
+        assert!(r.describe().contains("decode_tok_s_pipelined"));
+    }
+
+    #[test]
+    fn lower_is_better_metrics_gate_on_increase() {
+        let base = run(BASE_SERVE, 0.02);
+        // warm prefill got 50% slower; TTFT improved (must not trip)
+        let cur = run(
+            &[
+                ("decode_tok_s_pipelined", 500.0),
+                ("decode_tok_s_single_thread", 400.0),
+                ("host_device_overlap_frac", 0.5),
+                ("ttft_p50_ms_pipelined", 20.0),
+            ],
+            0.03,
+        );
+        let cmp = compare(&cur, &base, DEFAULT_THRESHOLD);
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].metric, "warm_prefill_s");
+    }
+
+    #[test]
+    fn drift_within_threshold_passes() {
+        let base = run(BASE_SERVE, 0.02);
+        // every headline 8% worse — inside the 10% gate
+        let cur = run(
+            &[
+                ("decode_tok_s_pipelined", 460.0),
+                ("decode_tok_s_single_thread", 368.0),
+                ("host_device_overlap_frac", 0.46),
+                ("ttft_p50_ms_pipelined", 32.4),
+            ],
+            0.0216,
+        );
+        let cmp = compare(&cur, &base, DEFAULT_THRESHOLD);
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        // but a tighter threshold catches it
+        let tight = compare(&cur, &base, 0.05);
+        assert!(!tight.regressions.is_empty());
+    }
+
+    #[test]
+    fn missing_sides_skip_instead_of_failing() {
+        let base = run(BASE_SERVE, 0.02);
+        let mut cur = run(BASE_SERVE, 0.02);
+        cur.remove("prefix_cache");
+        let cmp = compare(&cur, &base, DEFAULT_THRESHOLD);
+        assert!(cmp.regressions.is_empty());
+        assert_eq!(cmp.skipped, vec!["prefix_cache/warm_prefill_s".to_string()]);
+        // empty baseline: everything skips, gate passes (first run ever)
+        let cmp = compare(&cur, &BTreeMap::new(), DEFAULT_THRESHOLD);
+        assert!(cmp.regressions.is_empty());
+        assert_eq!(cmp.ok.len(), 0);
+        assert_eq!(exit_code(&cmp), 0);
+    }
+
+    #[test]
+    fn trend_point_flattens_all_metrics() {
+        let reports = run(BASE_SERVE, 0.02);
+        let p = trend_point(&reports);
+        assert_eq!(p.get("rev").and_then(|v| v.as_str()), Some("abc1234"));
+        assert!(p.get("timestamp").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert_eq!(
+            p.path(&["metrics", "serve_batch/decode_tok_s_pipelined"])
+                .and_then(|v| v.as_f64()),
+            Some(500.0)
+        );
+        assert_eq!(
+            p.path(&["metrics", "prefix_cache/warm_prefill_s"]).and_then(|v| v.as_f64()),
+            Some(0.02)
+        );
+    }
+
+    #[test]
+    fn history_appends_and_caps() {
+        let reports = run(BASE_SERVE, 0.02);
+        let h = append_point(None, trend_point(&reports));
+        assert_eq!(h.get("schema").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(h.get("points").and_then(|v| v.as_arr()).unwrap().len(), 1);
+        // malformed prior history is replaced, not crashed on
+        let h2 = append_point(Some(s("garbage")), trend_point(&reports));
+        assert_eq!(h2.get("points").and_then(|v| v.as_arr()).unwrap().len(), 1);
+        // round-trips through the serializer
+        let h3 = append_point(
+            Some(Json::parse(&h.to_string_compact()).unwrap()),
+            trend_point(&reports),
+        );
+        assert_eq!(h3.get("points").and_then(|v| v.as_arr()).unwrap().len(), 2);
+        // the cap drops the oldest points
+        let mut h = None;
+        for _ in 0..(HISTORY_CAP + 3) {
+            h = Some(append_point(h, trend_point(&reports)));
+        }
+        let pts = h.unwrap();
+        assert_eq!(
+            pts.get("points").and_then(|v| v.as_arr()).unwrap().len(),
+            HISTORY_CAP
+        );
+    }
+}

@@ -19,6 +19,59 @@ use crate::cache::PoolStats;
 use crate::obs::{prometheus, Histogram};
 use crate::prefix::PrefixStats;
 use crate::util::json::{num, obj, s, Json};
+use crate::workload::WorkloadKind;
+
+/// Per-class latency SLO targets: `(ttft_ms, e2e_ms)` per
+/// [`WorkloadKind`], both optional. Attainment is counted at record
+/// time (a histogram cannot answer an arbitrary threshold after the
+/// fact): a TTFT/e2e sample within its class target counts as met.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SloTable {
+    targets: [Option<(f64, f64)>; 4],
+}
+
+impl SloTable {
+    /// Parse the CLI form `class=ttft_ms:e2e_ms[,class=...]`, e.g.
+    /// `qa=200:2000,story=500:30000`. Classes are the
+    /// [`WorkloadKind::wire_name`] strings (parse aliases accepted).
+    pub fn parse(spec: &str) -> Result<SloTable, String> {
+        let mut t = SloTable::default();
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (class, rest) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--slo entry '{}' is not class=ttft_ms:e2e_ms", part))?;
+            let kind = WorkloadKind::parse(class).ok_or_else(|| {
+                format!("--slo class '{}' unknown; accepted: {}", class, WorkloadKind::accepted())
+            })?;
+            let (ttft, e2e) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("--slo entry '{}' is not class=ttft_ms:e2e_ms", part))?;
+            let ttft_ms: f64 = ttft
+                .parse()
+                .map_err(|_| format!("--slo ttft_ms '{}' is not a number", ttft))?;
+            let e2e_ms: f64 = e2e
+                .parse()
+                .map_err(|_| format!("--slo e2e_ms '{}' is not a number", e2e))?;
+            if ttft_ms <= 0.0 || e2e_ms <= 0.0 {
+                return Err(format!("--slo targets must be positive in '{}'", part));
+            }
+            t.targets[kind.index()] = Some((ttft_ms, e2e_ms));
+        }
+        Ok(t)
+    }
+
+    pub fn set(&mut self, kind: WorkloadKind, ttft_ms: f64, e2e_ms: f64) {
+        self.targets[kind.index()] = Some((ttft_ms, e2e_ms));
+    }
+
+    pub fn target(&self, kind: WorkloadKind) -> Option<(f64, f64)> {
+        self.targets[kind.index()]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.iter().all(|t| t.is_none())
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct MetricsRegistry {
@@ -115,6 +168,33 @@ pub struct MetricsRegistry {
     ttft_ms: Histogram,
     /// enqueue → retirement
     e2e_ms: Histogram,
+    // --- per-class latency + SLO attainment --------------------------
+    /// per-[`WorkloadKind`] latency histograms, indexed by
+    /// `WorkloadKind::index()` (the aggregate histograms above stay the
+    /// wire-frozen legacy surface; these are additive)
+    class_queue_wait_ms: [Histogram; 4],
+    class_ttft_ms: [Histogram; 4],
+    class_e2e_ms: [Histogram; 4],
+    /// SLO targets; empty table = no attainment accounting (gauges read 1)
+    slo: SloTable,
+    /// per-class TTFT samples recorded / within the class TTFT target
+    class_ttft_total: [u64; 4],
+    class_ttft_ok: [u64; 4],
+    /// per-class e2e samples recorded / within the class e2e target
+    class_e2e_total: [u64; 4],
+    class_e2e_ok: [u64; 4],
+    // --- device-thread health (folded each finish_step, always on) ---
+    /// cumulative device-thread busy time (µs)
+    pub device_busy_us: u64,
+    /// cumulative host time blocked in the device-channel send (µs) —
+    /// the backpressure counter
+    pub device_send_wait_us: u64,
+    /// total calls sent to the device thread
+    pub device_calls: u64,
+    /// device-channel depth at the last fold (queued + executing)
+    pub device_queue_depth: u64,
+    /// high-water mark of the channel depth
+    pub peak_device_queue_depth: u64,
 }
 
 impl MetricsRegistry {
@@ -162,7 +242,41 @@ impl MetricsRegistry {
             queue_wait_ms: Histogram::latency_ms(),
             ttft_ms: Histogram::latency_ms(),
             e2e_ms: Histogram::latency_ms(),
+            class_queue_wait_ms: std::array::from_fn(|_| Histogram::latency_ms()),
+            class_ttft_ms: std::array::from_fn(|_| Histogram::latency_ms()),
+            class_e2e_ms: std::array::from_fn(|_| Histogram::latency_ms()),
+            slo: SloTable::default(),
+            class_ttft_total: [0; 4],
+            class_ttft_ok: [0; 4],
+            class_e2e_total: [0; 4],
+            class_e2e_ok: [0; 4],
+            device_busy_us: 0,
+            device_send_wait_us: 0,
+            device_calls: 0,
+            device_queue_depth: 0,
+            peak_device_queue_depth: 0,
         }
+    }
+
+    /// Install the per-class SLO target table (`SchedulerConfig::slo`,
+    /// CLI `--slo`). Attainment counting starts from the next sample.
+    pub fn set_slo(&mut self, slo: SloTable) {
+        self.slo = slo;
+    }
+
+    pub fn slo(&self) -> &SloTable {
+        &self.slo
+    }
+
+    /// Fold the device handle's always-on channel counters
+    /// (`device::ChannelStats`) into the registry; called once per
+    /// `finish_step` so device health is visible with tracing off.
+    pub fn record_device(&mut self, busy_us: u64, send_wait_us: u64, calls: u64, depth: u64) {
+        self.device_busy_us = busy_us;
+        self.device_send_wait_us = send_wait_us;
+        self.device_calls = calls;
+        self.device_queue_depth = depth;
+        self.peak_device_queue_depth = self.peak_device_queue_depth.max(depth);
     }
 
     /// Fold one tick's arena snapshot into the gauges. `live_slots` is
@@ -254,19 +368,76 @@ impl MetricsRegistry {
     }
 
     /// Queue wait: enqueue → the moment admission hands the request to
-    /// the engine.
-    pub fn record_queue_wait(&mut self, seconds: f64) {
-        self.queue_wait_ms.record(seconds * 1000.0);
+    /// the engine. Recorded into the aggregate histogram and the
+    /// request's class histogram.
+    pub fn record_queue_wait(&mut self, kind: WorkloadKind, seconds: f64) {
+        let ms = seconds * 1000.0;
+        self.queue_wait_ms.record(ms);
+        self.class_queue_wait_ms[kind.index()].record(ms);
     }
 
     /// Time-to-first-token: enqueue → prefill done (the first token
-    /// exists as soon as prefill logits are sampled).
-    pub fn record_ttft(&mut self, seconds: f64) {
-        self.ttft_ms.record(seconds * 1000.0);
+    /// exists as soon as prefill logits are sampled). Counts the class's
+    /// SLO attainment when a target is set.
+    pub fn record_ttft(&mut self, kind: WorkloadKind, seconds: f64) {
+        let ms = seconds * 1000.0;
+        self.ttft_ms.record(ms);
+        let i = kind.index();
+        self.class_ttft_ms[i].record(ms);
+        self.class_ttft_total[i] += 1;
+        match self.slo.target(kind) {
+            Some((ttft_target, _)) if ms > ttft_target => {}
+            _ => self.class_ttft_ok[i] += 1,
+        }
     }
 
-    pub fn record_e2e(&mut self, seconds: f64) {
-        self.e2e_ms.record(seconds * 1000.0);
+    pub fn record_e2e(&mut self, kind: WorkloadKind, seconds: f64) {
+        let ms = seconds * 1000.0;
+        self.e2e_ms.record(ms);
+        let i = kind.index();
+        self.class_e2e_ms[i].record(ms);
+        self.class_e2e_total[i] += 1;
+        match self.slo.target(kind) {
+            Some((_, e2e_target)) if ms > e2e_target => {}
+            _ => self.class_e2e_ok[i] += 1,
+        }
+    }
+
+    /// Fraction of a class's TTFT samples inside its target; 1.0 with no
+    /// samples (nothing violated) or no target (vacuously attained).
+    pub fn slo_ttft_attainment(&self, kind: WorkloadKind) -> f64 {
+        let i = kind.index();
+        if self.class_ttft_total[i] == 0 {
+            1.0
+        } else {
+            self.class_ttft_ok[i] as f64 / self.class_ttft_total[i] as f64
+        }
+    }
+
+    /// Fraction of a class's e2e samples inside its target; 1.0 with no
+    /// samples or no target.
+    pub fn slo_e2e_attainment(&self, kind: WorkloadKind) -> f64 {
+        let i = kind.index();
+        if self.class_e2e_total[i] == 0 {
+            1.0
+        } else {
+            self.class_e2e_ok[i] as f64 / self.class_e2e_total[i] as f64
+        }
+    }
+
+    /// Worst per-class per-phase attainment across classes that have a
+    /// target — the single "are we meeting our SLOs" gauge. 1.0 when no
+    /// targets are configured.
+    pub fn slo_attainment(&self) -> f64 {
+        let mut worst = 1.0f64;
+        for kind in WorkloadKind::ALL {
+            if self.slo.target(kind).is_some() {
+                worst = worst
+                    .min(self.slo_ttft_attainment(kind))
+                    .min(self.slo_e2e_attainment(kind));
+            }
+        }
+        worst
     }
 
     /// Widest batch any decode step actually ran at.
@@ -341,7 +512,45 @@ impl MetricsRegistry {
             // thread-parallel engine core (additive)
             ("prefix_dedup_pages", num(self.prefix_dedup_pages as f64)),
             ("host_device_overlap_frac", num(self.host_device_overlap_frac())),
+            // serving profiler (additive): device-thread health folded
+            // each finish_step, plus per-class latency + SLO attainment
+            ("device_busy_us", num(self.device_busy_us as f64)),
+            ("device_send_wait_us", num(self.device_send_wait_us as f64)),
+            ("device_calls", num(self.device_calls as f64)),
+            ("device_queue_depth", num(self.device_queue_depth as f64)),
+            ("peak_device_queue_depth", num(self.peak_device_queue_depth as f64)),
+            ("slo_attainment", num(self.slo_attainment())),
+            ("classes", self.classes_json()),
         ])
+    }
+
+    /// The nested per-class block of the stats snapshot: latency
+    /// percentiles, sample counts, the configured targets (absent when
+    /// none) and attainment per phase, keyed by
+    /// [`WorkloadKind::wire_name`].
+    fn classes_json(&self) -> Json {
+        let mut classes = Vec::new();
+        for kind in WorkloadKind::ALL {
+            let i = kind.index();
+            let mut pairs = vec![
+                ("queue_wait_p50_ms", num(self.class_queue_wait_ms[i].percentile(0.5))),
+                ("queue_wait_p95_ms", num(self.class_queue_wait_ms[i].percentile(0.95))),
+                ("ttft_p50_ms", num(self.class_ttft_ms[i].percentile(0.5))),
+                ("ttft_p95_ms", num(self.class_ttft_ms[i].percentile(0.95))),
+                ("e2e_p50_ms", num(self.class_e2e_ms[i].percentile(0.5))),
+                ("e2e_p95_ms", num(self.class_e2e_ms[i].percentile(0.95))),
+                ("ttft_count", num(self.class_ttft_total[i] as f64)),
+                ("e2e_count", num(self.class_e2e_total[i] as f64)),
+                ("slo_ttft_attainment", num(self.slo_ttft_attainment(kind))),
+                ("slo_e2e_attainment", num(self.slo_e2e_attainment(kind))),
+            ];
+            if let Some((ttft_target, e2e_target)) = self.slo.target(kind) {
+                pairs.push(("slo_ttft_ms", num(ttft_target)));
+                pairs.push(("slo_e2e_ms", num(e2e_target)));
+            }
+            classes.push((kind.wire_name(), obj(pairs)));
+        }
+        obj(classes)
     }
 
     /// Render every counter, gauge and latency histogram in Prometheus
@@ -393,6 +602,40 @@ impl MetricsRegistry {
         histogram(out, "hae_queue_wait_ms", "enqueue to admission (ms)", &self.queue_wait_ms);
         histogram(out, "hae_ttft_ms", "enqueue to first token (ms)", &self.ttft_ms);
         histogram(out, "hae_e2e_ms", "enqueue to retirement (ms)", &self.e2e_ms);
+        // device-thread health (always on — folded from the handle's
+        // channel counters each finish_step)
+        counter(out, "hae_device_busy_us_total", "cumulative device-thread busy time (us)", self.device_busy_us as f64);
+        counter(out, "hae_device_send_wait_us_total", "cumulative device-channel send wait (us)", self.device_send_wait_us as f64);
+        counter(out, "hae_device_calls_total", "device calls sent", self.device_calls as f64);
+        gauge(out, "hae_device_queue_depth", "device-channel depth at last step (calls in flight)", self.device_queue_depth as f64);
+        gauge(out, "hae_device_peak_queue_depth", "peak observed device-channel depth", self.peak_device_queue_depth as f64);
+        // per-class latency + SLO attainment
+        self.prometheus_classes(out);
+        gauge(out, "hae_slo_attainment", "worst per-class SLO attainment (1 = all met / no targets)", self.slo_attainment());
+    }
+
+    /// The per-class labeled series: one gauge family per statistic,
+    /// labeled `class="qa|story|video|mixed"`.
+    fn prometheus_classes(&self, out: &mut String) {
+        use prometheus::labeled_gauge;
+        let rows = |f: &dyn Fn(WorkloadKind) -> f64| -> Vec<(&'static str, f64)> {
+            WorkloadKind::ALL.iter().map(|&k| (k.wire_name(), f(k))).collect()
+        };
+        let p = |h: &[Histogram; 4], k: WorkloadKind, q: f64| h[k.index()].percentile(q);
+        labeled_gauge(out, "hae_class_queue_wait_p95_ms", "per-class enqueue to admission p95 (ms)", "class",
+            &rows(&|k| p(&self.class_queue_wait_ms, k, 0.95)));
+        labeled_gauge(out, "hae_class_ttft_p50_ms", "per-class enqueue to first token p50 (ms)", "class",
+            &rows(&|k| p(&self.class_ttft_ms, k, 0.5)));
+        labeled_gauge(out, "hae_class_ttft_p95_ms", "per-class enqueue to first token p95 (ms)", "class",
+            &rows(&|k| p(&self.class_ttft_ms, k, 0.95)));
+        labeled_gauge(out, "hae_class_e2e_p50_ms", "per-class enqueue to retirement p50 (ms)", "class",
+            &rows(&|k| p(&self.class_e2e_ms, k, 0.5)));
+        labeled_gauge(out, "hae_class_e2e_p95_ms", "per-class enqueue to retirement p95 (ms)", "class",
+            &rows(&|k| p(&self.class_e2e_ms, k, 0.95)));
+        labeled_gauge(out, "hae_slo_ttft_attainment", "fraction of TTFT samples inside the class target", "class",
+            &rows(&|k| self.slo_ttft_attainment(k)));
+        labeled_gauge(out, "hae_slo_e2e_attainment", "fraction of e2e samples inside the class target", "class",
+            &rows(&|k| self.slo_e2e_attainment(k)));
     }
 }
 
@@ -524,8 +767,8 @@ mod tests {
         m.submitted = 5;
         m.completed = 4;
         m.record_step(2, 2048);
-        m.record_ttft(0.010);
-        m.record_e2e(0.100);
+        m.record_ttft(WorkloadKind::Understanding, 0.010);
+        m.record_e2e(WorkloadKind::Understanding, 0.100);
         m.chunked_admits = 1;
         let j = m.snapshot(3, 1);
         let parsed = Json::parse(&j.to_string_compact()).unwrap();
@@ -550,10 +793,11 @@ mod tests {
         // check the tail is still visible
         let mut m = MetricsRegistry::new(2, 4096, 8, 16);
         for _ in 0..100 {
-            m.record_e2e(5.0); // 5s outliers, all in the first 100 samples
+            // 5s outliers, all in the first 100 samples
+            m.record_e2e(WorkloadKind::Story, 5.0);
         }
         for _ in 0..20_000 {
-            m.record_e2e(0.010);
+            m.record_e2e(WorkloadKind::Story, 0.010);
         }
         let j = m.snapshot(0, 0);
         let p99 = j.get("e2e_p99_ms").and_then(|v| v.as_f64()).unwrap();
@@ -590,6 +834,25 @@ mod tests {
         for key in FROZEN {
             assert!(parsed.get(key).is_some(), "snapshot lost frozen key '{}'", key);
         }
+        // additive keys frozen since: PR 6/7 tails + overlap, PR 8 device
+        // health, SLO attainment and the nested per-class block
+        const ADDITIVE: &[&str] = &[
+            "ttft_p99_ms", "e2e_p99_ms", "queue_wait_p50_ms",
+            "queue_wait_p95_ms", "queue_wait_p99_ms", "prefix_dedup_pages",
+            "host_device_overlap_frac", "device_busy_us",
+            "device_send_wait_us", "device_calls", "device_queue_depth",
+            "peak_device_queue_depth", "slo_attainment", "classes",
+        ];
+        for key in ADDITIVE {
+            assert!(parsed.get(key).is_some(), "snapshot lost additive key '{}'", key);
+        }
+        for class in ["qa", "story", "video", "mixed"] {
+            assert!(
+                parsed.path(&["classes", class, "ttft_p50_ms"]).is_some(),
+                "classes block lost '{}'",
+                class
+            );
+        }
         assert_eq!(parsed.get("kind").and_then(|v| v.as_str()), Some("stats"));
     }
 
@@ -597,9 +860,10 @@ mod tests {
     fn prometheus_rendering_is_valid_exposition() {
         let mut m = MetricsRegistry::new(2, 4096, 8, 16);
         m.submitted = 3;
-        m.record_queue_wait(0.002);
-        m.record_ttft(0.010);
-        m.record_e2e(0.100);
+        m.record_queue_wait(WorkloadKind::Understanding, 0.002);
+        m.record_ttft(WorkloadKind::Understanding, 0.010);
+        m.record_e2e(WorkloadKind::Understanding, 0.100);
+        m.record_device(1234, 56, 7, 2);
         let mut out = String::new();
         m.prometheus_into(&mut out, 1, 2);
         assert!(prometheus::parses_as_exposition(&out), "{}", out);
@@ -607,5 +871,80 @@ mod tests {
         assert!(out.contains("hae_queue_depth 1"));
         assert!(out.contains("hae_ttft_ms_bucket"));
         assert!(out.contains("hae_e2e_ms_count 1"));
+        // device-thread health + per-class SLO series are part of the
+        // exposition contract (docs/OBSERVABILITY.md)
+        assert!(out.contains("hae_device_busy_us_total 1234"));
+        assert!(out.contains("hae_device_queue_depth 2"));
+        assert!(out.contains("hae_class_ttft_p50_ms{class=\"qa\"}"));
+        assert!(out.contains("hae_slo_ttft_attainment{class=\"story\"} 1"));
+        assert!(out.contains("hae_slo_attainment 1"));
+    }
+
+    #[test]
+    fn slo_table_parses_and_rejects() {
+        let t = SloTable::parse("qa=200:2000,story=500.5:30000").unwrap();
+        assert_eq!(t.target(WorkloadKind::Understanding), Some((200.0, 2000.0)));
+        assert_eq!(t.target(WorkloadKind::Story), Some((500.5, 30000.0)));
+        assert_eq!(t.target(WorkloadKind::Video), None);
+        assert!(!t.is_empty());
+        assert!(SloTable::parse("").unwrap().is_empty());
+        // parse aliases work; malformed entries name the accepted classes
+        assert!(SloTable::parse("understanding=1:2").is_ok());
+        assert!(SloTable::parse("qa=200").unwrap_err().contains("class=ttft_ms:e2e_ms"));
+        assert!(SloTable::parse("nosuch=1:2").unwrap_err().contains("accepted"));
+        assert!(SloTable::parse("qa=0:5").unwrap_err().contains("positive"));
+        assert!(SloTable::parse("qa=a:5").unwrap_err().contains("not a number"));
+    }
+
+    #[test]
+    fn per_class_attainment_counts_against_targets() {
+        let mut m = MetricsRegistry::new(2, 4096, 8, 16);
+        let mut slo = SloTable::default();
+        slo.set(WorkloadKind::Understanding, 50.0, 500.0);
+        m.set_slo(slo);
+        // qa: 3 TTFT samples, one over the 50ms target
+        m.record_ttft(WorkloadKind::Understanding, 0.010);
+        m.record_ttft(WorkloadKind::Understanding, 0.020);
+        m.record_ttft(WorkloadKind::Understanding, 0.120);
+        // qa: 2 e2e samples, both inside 500ms
+        m.record_e2e(WorkloadKind::Understanding, 0.100);
+        m.record_e2e(WorkloadKind::Understanding, 0.400);
+        // story has no target: every sample vacuously attains
+        m.record_ttft(WorkloadKind::Story, 9.0);
+        let qa_ttft = m.slo_ttft_attainment(WorkloadKind::Understanding);
+        assert!((qa_ttft - 2.0 / 3.0).abs() < 1e-9, "{}", qa_ttft);
+        assert_eq!(m.slo_e2e_attainment(WorkloadKind::Understanding), 1.0);
+        assert_eq!(m.slo_ttft_attainment(WorkloadKind::Story), 1.0);
+        // the headline gauge is the worst targeted attainment
+        assert!((m.slo_attainment() - 2.0 / 3.0).abs() < 1e-9);
+        // classes block carries percentiles, counts, targets, attainment
+        let j = m.snapshot(0, 0);
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.path(&["classes", "qa", "ttft_count"]).and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(parsed.path(&["classes", "qa", "slo_ttft_ms"]).and_then(|v| v.as_f64()), Some(50.0));
+        let att = parsed
+            .path(&["classes", "qa", "slo_ttft_attainment"])
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!((att - 2.0 / 3.0).abs() < 1e-9);
+        assert!(parsed.path(&["classes", "story", "slo_ttft_ms"]).is_none(), "no target set");
+        assert!(parsed.path(&["classes", "video", "ttft_p50_ms"]).is_some());
+        let overall = parsed.get("slo_attainment").and_then(|v| v.as_f64()).unwrap();
+        assert!((overall - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn device_fold_tracks_peak_depth() {
+        let mut m = MetricsRegistry::new(2, 4096, 8, 16);
+        m.record_device(100, 3, 2, 2);
+        m.record_device(900, 8, 9, 4);
+        m.record_device(950, 8, 10, 1);
+        assert_eq!(m.device_busy_us, 950);
+        assert_eq!(m.device_queue_depth, 1);
+        assert_eq!(m.peak_device_queue_depth, 4);
+        let j = m.snapshot(0, 0);
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("device_busy_us").and_then(|v| v.as_usize()), Some(950));
+        assert_eq!(parsed.get("peak_device_queue_depth").and_then(|v| v.as_usize()), Some(4));
     }
 }

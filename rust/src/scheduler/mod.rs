@@ -70,7 +70,7 @@ pub mod metrics;
 pub mod queue;
 
 pub use admission::AdmissionController;
-pub use metrics::MetricsRegistry;
+pub use metrics::{MetricsRegistry, SloTable};
 pub use queue::{class_of, AdmissionQueue, QueuedJob, SchedPolicy};
 
 use std::time::Instant;
@@ -91,6 +91,9 @@ pub struct SchedulerConfig {
     pub queue_depth: usize,
     /// scheduler ticks per priority-class promotion (queue aging)
     pub aging_ticks: u64,
+    /// per-class latency SLO targets (`--slo`); empty = no attainment
+    /// accounting
+    pub slo: SloTable,
 }
 
 impl Default for SchedulerConfig {
@@ -100,6 +103,7 @@ impl Default for SchedulerConfig {
             policy: SchedPolicy::Fifo,
             queue_depth: 64,
             aging_ticks: 256,
+            slo: SloTable::default(),
         }
     }
 }
@@ -177,8 +181,9 @@ impl<T> Scheduler<T> {
             kv_bytes_per_token,
         );
         let queue = AdmissionQueue::new(cfg.policy, cfg.queue_depth, cfg.aging_ticks);
-        let metrics =
+        let mut metrics =
             MetricsRegistry::new(batch, cfg.kv_budget, pool_pages, page_slots);
+        metrics.set_slo(cfg.slo.clone());
         Scheduler {
             cfg,
             admission,
@@ -251,6 +256,31 @@ impl<T> Scheduler<T> {
         out
     }
 
+    /// Answer `{"kind":"profile"}`: the serving profiler's contention and
+    /// queue spans (gated histograms — all zero-count with tracing off)
+    /// plus the always-on device-thread totals folded each step.
+    pub fn profile_json(&self) -> Json {
+        use crate::util::json::{num, obj, s};
+        obj(vec![
+            ("kind", s("profile")),
+            ("tracing", Json::Bool(self.obs.enabled())),
+            ("spans", self.obs.profile_json()),
+            (
+                "device",
+                obj(vec![
+                    ("busy_us", num(self.metrics.device_busy_us as f64)),
+                    ("send_wait_us", num(self.metrics.device_send_wait_us as f64)),
+                    ("calls", num(self.metrics.device_calls as f64)),
+                    ("queue_depth", num(self.metrics.device_queue_depth as f64)),
+                    (
+                        "peak_queue_depth",
+                        num(self.metrics.peak_device_queue_depth as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
     /// Enqueue a request. `Err` hands the tag back with the reject reason
     /// so the caller can reply immediately; rejection (rather than
     /// blocking) keeps the engine thread responsive under overload.
@@ -292,18 +322,19 @@ impl<T> Scheduler<T> {
     fn admit_job(&mut self, engine: &mut Engine, lane: usize, job: QueuedJob<T>) {
         let QueuedJob { tag, req, enqueued_at, .. } = job;
         let rid = req.id;
+        let kind = req.kind;
         let waited = enqueued_at.elapsed().as_secs_f64();
-        self.metrics.record_queue_wait(waited);
+        self.metrics.record_queue_wait(kind, waited);
         let pages = self.admission.worst_case_pages(&req) as u32;
         self.obs.event(rid, TraceEvent::Admitted { pages });
         match engine.prefill(req) {
             Ok(mut ar) => {
                 ar.stats.queue_s = waited;
-                self.metrics.record_ttft(enqueued_at.elapsed().as_secs_f64());
+                self.metrics.record_ttft(kind, enqueued_at.elapsed().as_secs_f64());
                 if ar.done {
                     ar.slab.release_pages();
                     self.metrics.completed += 1;
-                    self.metrics.record_e2e(enqueued_at.elapsed().as_secs_f64());
+                    self.metrics.record_e2e(kind, enqueued_at.elapsed().as_secs_f64());
                     self.obs
                         .event(rid, TraceEvent::Retired { reason: RetireReason::Completed });
                     self.ready.push(SchedOutcome::Done { tag, ar: Box::new(ar) });
@@ -453,8 +484,16 @@ impl<T> Scheduler<T> {
     /// prefill — collect outcomes and call [`Self::finish_step`] anyway
     /// to advance accounting).
     pub fn begin_step(&mut self, engine: &mut Engine) -> Result<Option<PendingStep>> {
-        self.backfill(engine);
-        engine.step_submit(&mut self.lanes)
+        let t0 = self.obs.enabled().then(Instant::now);
+        let pending = {
+            self.backfill(engine);
+            engine.step_submit(&mut self.lanes)
+        };
+        if let Some(t0) = t0 {
+            self.obs
+                .record(|o| o.profile.step_begin_ms.record(t0.elapsed().as_secs_f64() * 1e3));
+        }
+        pending
     }
 
     /// Overlap-window work: run another backfill round while a submitted
@@ -475,6 +514,7 @@ impl<T> Scheduler<T> {
         engine: &mut Engine,
         pending: Option<PendingStep>,
     ) -> Result<StepReport> {
+        let t0 = self.obs.enabled().then(Instant::now);
         self.tick_no += 1;
         let (report, done) = match pending {
             Some(p) => engine.step_complete(p, &mut self.lanes)?,
@@ -546,10 +586,24 @@ impl<T> Scheduler<T> {
         for (idx, ar) in done {
             let lt = self.tags[idx].take().expect("finished lane carries a tag");
             self.metrics.completed += 1;
-            self.metrics.record_e2e(lt.enqueued_at.elapsed().as_secs_f64());
+            self.metrics
+                .record_e2e(ar.req.kind, lt.enqueued_at.elapsed().as_secs_f64());
             self.obs
                 .event(ar.req.id, TraceEvent::Retired { reason: RetireReason::Completed });
             self.ready.push(SchedOutcome::Done { tag: lt.tag, ar: Box::new(ar) });
+        }
+        // device-thread health: fold the handle's always-on channel
+        // counters into the registry (visible with tracing off), and
+        // sample the channel depth into the gated profiler histogram
+        let dev = engine.device();
+        let depth = dev.queue_depth();
+        self.metrics
+            .record_device(dev.busy_us(), dev.send_wait_us(), dev.calls(), depth);
+        if let Some(t0) = t0 {
+            self.obs.record(|o| {
+                o.profile.device_queue_depth.record(depth as f64);
+                o.profile.step_finish_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+            });
         }
         Ok(report)
     }
@@ -699,6 +753,40 @@ mod tests {
         assert!(crate::obs::prometheus::parses_as_exposition(&body), "{}", body);
         assert!(body.contains("hae_requests_submitted_total"));
         assert!(body.contains("hae_prefill_ms_bucket"));
+    }
+
+    #[test]
+    fn profile_json_has_spans_and_device_block() {
+        let sc = sched(100, 8);
+        let j = sc.profile_json();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("profile"));
+        assert_eq!(j.get("tracing").and_then(|v| v.as_bool()), Some(true));
+        for span in [
+            "pool_lock_wait_ms",
+            "device_send_wait_ms",
+            "step_begin_ms",
+            "step_overlap_ms",
+            "step_finish_ms",
+            "device_queue_depth",
+        ] {
+            assert!(j.path(&["spans", span, "count"]).is_some(), "missing span {}", span);
+        }
+        for key in ["busy_us", "send_wait_us", "calls", "queue_depth", "peak_queue_depth"] {
+            assert!(j.path(&["device", key]).is_some(), "missing device key {}", key);
+        }
+    }
+
+    #[test]
+    fn scheduler_config_slo_reaches_registry() {
+        let cfg = SchedulerConfig {
+            slo: SloTable::parse("qa=200:2000").unwrap(),
+            ..SchedulerConfig::default()
+        };
+        let sc: Scheduler<u32> = Scheduler::new(cfg, 4, 64, 100, 1, 1024);
+        assert_eq!(
+            sc.metrics.slo().target(WorkloadKind::Understanding),
+            Some((200.0, 2000.0))
+        );
     }
 
     #[test]

@@ -34,6 +34,14 @@
 //!             newest K events journal-wide (default 64). Reply:
 //!             {"kind":"trace","count":N,"dropped":N,"events":[
 //!               {"id":N,"at_us":T,"event":"enqueued"|...}, ...]}
+//!   profile:  {"kind": "profile"} → serving-profiler snapshot: span
+//!             histogram summaries for the threaded core's contention
+//!             seams (pool-mutex wait, device-channel send wait, step
+//!             begin/overlap/finish, sampled device queue depth) plus
+//!             the always-on device-thread totals. Reply:
+//!             {"kind":"profile","tracing":bool,"spans":{...},
+//!              "device":{"busy_us":...,"send_wait_us":...,"calls":...,
+//!              "queue_depth":...,"peak_queue_depth":...}}
 //!   response: {"id": 1, "tokens": [...], "text": "...",
 //!              "queue_ms": ..., "prefill_ms": ..., "extend_ms": ...,
 //!              "extend_calls": N, "decode_ms": ..., "steps": N,
@@ -77,7 +85,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::Engine;
 use crate::model::{vocab, ModelMeta};
-use crate::scheduler::{SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig};
+use crate::scheduler::{SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig, SloTable};
 use crate::util::json::{num, obj, s, Json};
 use crate::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
 
@@ -94,6 +102,9 @@ pub struct ServerConfig {
     /// one scheduler thread and one device thread; this selects the
     /// overlap discipline between them.
     pub engine_threads: usize,
+    /// per-class latency SLO targets (`--slo class=ttft_ms:e2e_ms,...`);
+    /// empty = no attainment accounting
+    pub slo: SloTable,
 }
 
 impl Default for ServerConfig {
@@ -104,6 +115,7 @@ impl Default for ServerConfig {
             kv_budget: None,
             sched_policy: SchedPolicy::Fifo,
             engine_threads: 2,
+            slo: SloTable::default(),
         }
     }
 }
@@ -261,6 +273,10 @@ fn ingest(
             let _ = job.reply.send(sched.trace_json(rid, last).to_string_compact());
             return Ingest::Continue;
         }
+        Some("profile") => {
+            let _ = job.reply.send(sched.profile_json().to_string_compact());
+            return Ingest::Continue;
+        }
         _ => {}
     }
     match synthesize(&parsed, meta, grammar, builder) {
@@ -357,6 +373,7 @@ pub fn serve_on(
         kv_budget: cfg.kv_budget.unwrap_or_else(|| engine.kv_budget_ceiling()),
         policy: cfg.sched_policy,
         queue_depth: cfg.queue_depth,
+        slo: cfg.slo.clone(),
         ..SchedulerConfig::default()
     };
     let mut sched: Scheduler<JobTag> = Scheduler::for_engine(sched_cfg, &engine);
@@ -395,6 +412,9 @@ pub fn serve_on(
                 Err(e) => Err(e),
                 Ok(pending) => {
                     if pending.is_some() {
+                        // the profiled overlap window: all host work done
+                        // while the submitted step computes on the device
+                        let t0 = sched.obs.enabled().then(std::time::Instant::now);
                         for outcome in sched.take_outcomes() {
                             deliver(outcome);
                         }
@@ -402,6 +422,13 @@ pub fn serve_on(
                             &rx, &meta, &grammar, &mut builder, &mut sched,
                         );
                         sched.overlap_backfill(&mut engine);
+                        if let Some(t0) = t0 {
+                            sched.obs.record(|o| {
+                                o.profile
+                                    .step_overlap_ms
+                                    .record(t0.elapsed().as_secs_f64() * 1e3);
+                            });
+                        }
                     }
                     // a shutdown seen mid-flight still collects the step:
                     // the in-flight lanes finish and reply before we drain
@@ -701,6 +728,18 @@ mod tests {
             assert!(j.get(key).is_some(), "missing {}", key);
         }
         assert!(j.path(&["phases", "prefill_ms", "count"]).is_some());
+        // serving-profiler additions ride along: device health, overall
+        // SLO attainment, and the nested per-class block
+        for key in ["device_busy_us", "device_queue_depth", "slo_attainment"] {
+            assert!(j.get(key).is_some(), "missing {}", key);
+        }
+        for class in ["qa", "story", "video", "mixed"] {
+            assert!(
+                j.path(&["classes", class, "ttft_p50_ms"]).is_some(),
+                "missing class {}",
+                class
+            );
+        }
     }
 
     #[test]
@@ -714,6 +753,33 @@ mod tests {
         assert!(crate::obs::prometheus::parses_as_exposition(body), "{}", body);
         assert!(body.contains("hae_requests_submitted_total"));
         assert!(body.contains("hae_ttft_ms_bucket"));
+        // device-thread health and the profiler spans are wired into the
+        // same exposition body (docs/OBSERVABILITY.md series table)
+        assert!(body.contains("hae_device_busy_us_total"));
+        assert!(body.contains("hae_device_queue_depth"));
+        assert!(body.contains("hae_pool_lock_wait_ms"));
+        assert!(body.contains("hae_class_ttft_p95_ms{class=\"video\"}"));
+        assert!(body.contains("hae_slo_attainment"));
+    }
+
+    #[test]
+    fn profile_reply_carries_spans_and_device_totals() {
+        let mut sc = test_sched();
+        let j = Json::parse(&ingest_line(r#"{"kind": "profile"}"#, &mut sc)).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("profile"));
+        for span in [
+            "pool_lock_wait_ms",
+            "device_send_wait_ms",
+            "step_begin_ms",
+            "step_overlap_ms",
+            "step_finish_ms",
+            "device_queue_depth",
+        ] {
+            assert!(j.path(&["spans", span, "p95"]).is_some(), "missing span {}", span);
+        }
+        for key in ["busy_us", "send_wait_us", "calls", "queue_depth", "peak_queue_depth"] {
+            assert!(j.path(&["device", key]).is_some(), "missing device key {}", key);
+        }
     }
 
     #[test]

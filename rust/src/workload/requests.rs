@@ -30,6 +30,36 @@ pub enum WorkloadKind {
 }
 
 impl WorkloadKind {
+    /// Every kind, in [`index`](Self::index) order — the per-class
+    /// metrics arrays (scheduler/metrics.rs) are indexed by this.
+    pub const ALL: [WorkloadKind; 4] = [
+        WorkloadKind::Understanding,
+        WorkloadKind::Story,
+        WorkloadKind::Video,
+        WorkloadKind::Mixed,
+    ];
+
+    /// Dense index into per-class arrays; inverse of `ALL[i]`.
+    pub fn index(self) -> usize {
+        match self {
+            WorkloadKind::Understanding => 0,
+            WorkloadKind::Story => 1,
+            WorkloadKind::Video => 2,
+            WorkloadKind::Mixed => 3,
+        }
+    }
+
+    /// Canonical wire/metric name (stats keys, Prometheus `class` label,
+    /// `--slo` CLI keys). Each is accepted back by [`parse`](Self::parse).
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            WorkloadKind::Understanding => "qa",
+            WorkloadKind::Story => "story",
+            WorkloadKind::Video => "video",
+            WorkloadKind::Mixed => "mixed",
+        }
+    }
+
     pub fn parse(s: &str) -> Option<WorkloadKind> {
         match s {
             "understanding" | "qa" => Some(WorkloadKind::Understanding),
