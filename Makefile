@@ -28,6 +28,10 @@
 #                        non-zero when one regresses beyond
 #                        HAE_TREND_THRESHOLD (default 0.10 relative).
 #                        Refresh procedure in docs/OBSERVABILITY.md.
+#   make lint-hae      — run the project invariant checker over the
+#                        tree: lock-order (R1), refcount pairing (R2),
+#                        forbidden APIs (R3) and metric/doc drift (R4).
+#                        Rule catalog in docs/STATIC_ANALYSIS.md.
 #   make stress        — repeat the threaded e2e suites (scheduler_e2e,
 #                        server_e2e) HAE_STRESS_N times (default 10)
 #                        with a high in-process test-thread count, to
@@ -40,7 +44,7 @@
 PYTHON ?= python3
 HAE_STRESS_N ?= 10
 
-.PHONY: artifacts check-extend test bench-smoke bench-verify bench-trend stress
+.PHONY: artifacts check-extend test bench-smoke bench-verify bench-trend lint-hae stress
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
@@ -71,3 +75,6 @@ bench-verify:
 
 bench-trend:
 	cargo run --release --bin bench_trend
+
+lint-hae:
+	cargo run --release --bin hae_lint

@@ -1,0 +1,136 @@
+//! Known-bad (and known-good) code fixtures for the linter's own tests.
+//!
+//! Each constant is a small Rust snippet, held as a string so the rules
+//! can be exercised without touching the real tree. The files under
+//! `rust/src/analysis/fixtures/` are excluded from `lint_tree`'s walk —
+//! deliberately broken code must not fail the real lint run.
+//!
+//! Line numbers in the rule tests index into these snippets, so keep
+//! the leading newline (line 1 is empty) when editing.
+
+/// R1: an `Obs` record while the pool guard is still live (line 4).
+pub const R1_OBS_UNDER_POOL_GUARD: &str = r#"
+fn bad(&self) {
+    let pool = lock_pool(&self.pool);
+    self.obs.record(|o| o.counters.page_allocs += 1);
+    drop(pool);
+}
+"#;
+
+/// R1: a device call crosses a live pool guard (line 4).
+pub const R1_GUARD_ACROSS_DEVICE: &str = r#"
+fn bad(&mut self) -> anyhow::Result<()> {
+    let pool = lock_profiled(&self.pool, &self.obs);
+    let out = self.dev.decode(&pool.pages)?;
+    drop(pool);
+    Ok(out)
+}
+"#;
+
+/// R1: locks taken in the inverted order — obs first, pool second
+/// (line 4). Seeding this shape into a scanned file must make the
+/// linter exit non-zero; the mod-level test proves `check_str` agrees.
+pub const R1_INVERSION: &str = r#"
+fn bad(&self) {
+    let mut o = self.obs.inner();
+    let pool = self.pool.lock().unwrap();
+    o.counters.page_allocs += 1;
+    drop(pool);
+}
+"#;
+
+/// R1: a channel send while the pool guard is live (line 4).
+pub const R1_SEND_UNDER_GUARD: &str = r#"
+fn bad(&self) {
+    let pool = lock_pool(&self.pool);
+    self.tx.send(pool.free_pages()).ok();
+    drop(pool);
+}
+"#;
+
+/// R2: a retain with no release path anywhere in the module (line 4).
+pub const R2_RETAIN_WITHOUT_RELEASE: &str = r#"
+fn fork(&mut self, pages: &[usize]) {
+    for &p in pages {
+        self.pool.retain_page(p);
+    }
+}
+"#;
+
+/// R2: the same retain, balanced by a typed release path — clean.
+pub const R2_PAIRED: &str = r#"
+fn fork(&mut self, pages: &[usize]) {
+    for &p in pages {
+        self.pool.retain_page(p);
+    }
+}
+
+fn drop_pages(&mut self, pages: &[usize]) {
+    self.pool.release_pages(pages);
+}
+"#;
+
+/// R3: forbidden APIs — `RefCell` import (line 3), `Rc` use (line 6),
+/// `partial_cmp(..).unwrap()` (line 7), `process::exit` (line 8).
+pub const R3_FORBIDDEN: &str = r#"
+use std::rc::Rc;
+use std::cell::RefCell;
+
+fn bad(xs: &mut [f32]) {
+    let shared = Rc::new(RefCell::new(0u32));
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    std::process::exit(2);
+}
+"#;
+
+/// R3: bare `unwrap()` (line 3) and `expect(` (line 7) in hot-path
+/// code; the copies inside `#[cfg(test)]` are exempt.
+pub const R3_HOTPATH_UNWRAP: &str = r#"
+fn hot(&mut self) -> usize {
+    self.queue.pop_front().unwrap()
+}
+
+fn hot2(&mut self) -> usize {
+    self.queue.front().copied().expect("non-empty")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let v = vec![1].pop().unwrap();
+        assert_eq!(v, 1);
+    }
+}
+"#;
+
+/// R3: a fixed port in test code (line 3); port 0 (line 4) is fine.
+pub const R3_FIXED_PORT: &str = r#"
+fn spawn() -> std::net::TcpListener {
+    let fixed = std::net::TcpListener::bind("127.0.0.1:8472").unwrap();
+    let ephemeral = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    fixed
+}
+"#;
+
+/// The R1 violation from `R1_OBS_UNDER_POOL_GUARD`, silenced by a
+/// reasoned suppression on the preceding line — lints clean.
+pub const SUPPRESSED_WITH_REASON: &str = r#"
+fn tuned(&self) {
+    let pool = lock_pool(&self.pool);
+    // hae-lint: allow(R1-lock-order) profiler records under the pool guard by design
+    self.obs.record(|o| o.counters.page_allocs += 1);
+    drop(pool);
+}
+"#;
+
+/// The same suppression without a reason — the suppression itself
+/// becomes the finding.
+pub const SUPPRESSED_NO_REASON: &str = r#"
+fn tuned(&self) {
+    let pool = lock_pool(&self.pool);
+    // hae-lint: allow(R1-lock-order)
+    self.obs.record(|o| o.counters.page_allocs += 1);
+    drop(pool);
+}
+"#;

@@ -1,0 +1,195 @@
+//! R3 — forbidden-API rule.
+//!
+//! Bans, with per-scope precision:
+//! - `Rc<…>` / `RefCell<…>` anywhere in `rust/src` — the engine is
+//!   thread-parallel (PR 7); single-thread interior mutability is a
+//!   data race waiting for a refactor. First occurrence per file is
+//!   reported (one fix usually removes them all).
+//! - `partial_cmp(..).unwrap()` on one line — panics on NaN; scores
+//!   and latencies are floats, use `total_cmp`.
+//! - `std::process::exit` outside `rust/src/bin/` — skips destructors,
+//!   so the device thread never joins and artifacts flush half-written.
+//! - fixed port literals in `rust/tests/` and `benches/` — parallel CI
+//!   shards collide; bind port 0 and read back the assigned address.
+//! - bare `unwrap()` / `expect(` in the engine hot path (`coordinator/`,
+//!   `cache/`, `scheduler/`, `device/`) outside `#[cfg(test)]` — a
+//!   panic there poisons the pool mutex for every in-flight request.
+
+use super::lexer::{prev_is_ident, SourceFile};
+use super::{Finding, R3};
+
+const HOT_DIRS: [&str; 4] = [
+    "rust/src/coordinator/",
+    "rust/src/cache/",
+    "rust/src/scheduler/",
+    "rust/src/device/",
+];
+
+const HOST_PREFIXES: [&str; 3] = ["127.0.0.1:", "0.0.0.0:", "localhost:"];
+
+/// First fixed (non-zero) port in a string literal, if any.
+fn fixed_port(s: &str) -> Option<u32> {
+    for pre in HOST_PREFIXES {
+        if let Some(p) = s.find(pre) {
+            let digits: String = s[p + pre.len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            if let Ok(port) = digits.parse::<u32>() {
+                if port > 0 {
+                    return Some(port);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// `Rc` as a standalone token followed by `<` or `::` — a use of the
+/// type, not the `use std::rc::Rc;` import or an `Rc`-prefixed ident.
+fn uses_rc(code: &str) -> bool {
+    code.match_indices("Rc").any(|(i, _)| {
+        let rest = &code[i + 2..];
+        !prev_is_ident(code, i) && (rest.starts_with('<') || rest.starts_with("::"))
+    })
+}
+
+fn uses_refcell(code: &str) -> bool {
+    code.match_indices("RefCell").any(|(i, _)| {
+        let next_ident = code[i + 7..]
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+        !prev_is_ident(code, i) && !next_ident
+    })
+}
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let path = file.path.as_str();
+    let hot = HOT_DIRS.iter().any(|d| path.starts_with(d));
+    let in_bin = path.starts_with("rust/src/bin/") || path == "rust/src/main.rs";
+    let port_scope = path.starts_with("rust/tests/") || path.starts_with("benches/");
+    let mut out = Vec::new();
+    let mut rc_seen = false;
+    let mut refcell_seen = false;
+    let mut push = |out: &mut Vec<Finding>, line: usize, message: String, hint: &'static str| {
+        out.push(Finding { file: path.to_string(), line, rule: R3, message, hint });
+    };
+    for (idx, line) in file.lines.iter().enumerate() {
+        let ln = idx + 1;
+        if port_scope {
+            // Applies to test code too — that is the whole point.
+            for s in &line.strings {
+                if let Some(port) = fixed_port(s) {
+                    push(
+                        &mut out,
+                        ln,
+                        format!("fixed port {port} in test/bench code"),
+                        "bind port 0 and read the assigned address back",
+                    );
+                }
+            }
+        }
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        if !rc_seen && uses_rc(code) {
+            rc_seen = true;
+            push(
+                &mut out,
+                ln,
+                "Rc<…> in library code".to_string(),
+                "use Arc — the engine core is thread-parallel (docs/CONCURRENCY.md)",
+            );
+        }
+        if !refcell_seen && uses_refcell(code) {
+            refcell_seen = true;
+            push(
+                &mut out,
+                ln,
+                "RefCell<…> in library code".to_string(),
+                "use Mutex/atomics, or confine to one thread with a reviewed suppression",
+            );
+        }
+        if code.contains("partial_cmp(") && code.contains(".unwrap()") {
+            push(
+                &mut out,
+                ln,
+                "partial_cmp(..).unwrap() panics on NaN".to_string(),
+                "use f32::total_cmp / f64::total_cmp",
+            );
+        }
+        if !in_bin && code.contains("process::exit") {
+            push(
+                &mut out,
+                ln,
+                "process::exit outside bin/ skips destructors".to_string(),
+                "return an error up to main() so device/obs threads shut down cleanly",
+            );
+        }
+        if hot {
+            if code.contains(".unwrap()") {
+                push(
+                    &mut out,
+                    ln,
+                    "bare unwrap() in the engine hot path".to_string(),
+                    "propagate with ?, restructure with let-else, or suppress with a reason",
+                );
+            }
+            if code.contains(".expect(") {
+                push(
+                    &mut out,
+                    ln,
+                    "expect() in the engine hot path".to_string(),
+                    "propagate with ?, restructure with let-else, or suppress with a reason",
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fixtures;
+    use super::super::lexer::parse;
+    use super::*;
+
+    #[test]
+    fn forbidden_types_and_calls_fire_once_each() {
+        let f = check(&parse("rust/src/server/fixture.rs", fixtures::R3_FORBIDDEN, false));
+        let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+        // RefCell on its import line, Rc at first use, partial_cmp and
+        // process::exit at their call sites.
+        assert_eq!(lines, vec![3, 6, 7, 8], "got: {f:?}");
+        assert!(f.iter().all(|x| x.rule == R3));
+    }
+
+    #[test]
+    fn hot_path_unwrap_and_expect_fire_outside_tests_only() {
+        let f = check(&parse("rust/src/cache/fixture.rs", fixtures::R3_HOTPATH_UNWRAP, false));
+        let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![3, 7], "got: {f:?}");
+    }
+
+    #[test]
+    fn hot_path_rule_is_scoped_to_hot_dirs() {
+        let f = check(&parse("rust/src/server/fixture.rs", fixtures::R3_HOTPATH_UNWRAP, false));
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn fixed_ports_fire_in_tests_but_port_zero_is_fine() {
+        let f = check(&parse("rust/tests/fixture.rs", fixtures::R3_FIXED_PORT, true));
+        assert_eq!(f.len(), 1, "got: {f:?}");
+        assert_eq!(f[0].line, 3);
+        assert!(f[0].message.contains("8472"));
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "fn hot(&self) -> usize {\n    self.depth.checked_sub(1).unwrap_or(0)\n}\n";
+        assert!(check(&parse("rust/src/cache/fixture.rs", src, false)).is_empty());
+    }
+}

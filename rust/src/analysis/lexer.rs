@@ -1,0 +1,376 @@
+//! A small line-oriented Rust lexer for `hae-lint`.
+//!
+//! Produces, per source line: the code text with comments stripped and
+//! literal payloads blanked, the comment text, the contents of string
+//! literals that close on the line, the brace depth at line start, and
+//! whether the line sits inside `#[cfg(test)]` code. Rule matchers run
+//! on `code`, so they can never fire on prose in a comment or on a
+//! pattern quoted inside a string literal.
+//!
+//! This is deliberately not a full parser. The rules it feeds are
+//! occurrence matchers over individual lines, and the tree is
+//! `cargo fmt`-normalised (CI runs `cargo fmt --check`), so line-level
+//! structure is stable enough to lean on.
+
+/// One lexed source line.
+#[derive(Debug, Clone, Default)]
+pub struct LineInfo {
+    /// Code with comments removed and string/char payloads blanked
+    /// (delimiters kept, so quotes still mark where a literal sat).
+    pub code: String,
+    /// Comment text on the line (`//…` and `/* … */` payloads).
+    pub comment: String,
+    /// Contents of string literals that close on this line.
+    pub strings: Vec<String>,
+    /// Brace depth at the start of the line.
+    pub depth: usize,
+    /// Line is inside `#[cfg(test)]` code (or the whole file is tests).
+    pub in_test: bool,
+}
+
+/// A lexed file: repo-relative path plus one [`LineInfo`] per line.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<LineInfo>,
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(usize),
+    Str,
+    RawStr(usize),
+}
+
+fn ends_in_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Lex `text` into per-line records. `assume_test` marks every line as
+/// test code — used for integration tests and benches, which are test
+/// targets in their entirety.
+pub fn parse(path: &str, text: &str, assume_test: bool) -> SourceFile {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<LineInfo> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut strings: Vec<String> = Vec::new();
+    let mut cur_str = String::new();
+    let mut depth: usize = 0;
+    let mut line_depth: usize = 0;
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    loop {
+        if i >= n || chars[i] == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            lines.push(LineInfo {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                strings: std::mem::take(&mut strings),
+                depth: line_depth,
+                in_test: false,
+            });
+            line_depth = depth;
+            if i >= n {
+                break;
+            }
+            i += 1;
+            continue;
+        }
+        let c = chars[i];
+        match mode {
+            Mode::Code => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    cur_str.clear();
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !ends_in_ident(&code) {
+                    // possible raw / byte string: r"…", r#"…"#, br"…", b"…"
+                    let mut j = i;
+                    if chars[j] == 'b'
+                        && j + 1 < n
+                        && (chars[j + 1] == 'r' || chars[j + 1] == '"')
+                    {
+                        j += 1;
+                    }
+                    if chars[j] == 'r' {
+                        let mut k = j + 1;
+                        let mut hashes = 0usize;
+                        while k < n && chars[k] == '#' {
+                            hashes += 1;
+                            k += 1;
+                        }
+                        if k < n && chars[k] == '"' {
+                            for &ch in &chars[i..=k] {
+                                code.push(ch);
+                            }
+                            cur_str.clear();
+                            mode = Mode::RawStr(hashes);
+                            i = k + 1;
+                            continue;
+                        }
+                    } else if chars[j] == '"' {
+                        code.push('b');
+                        code.push('"');
+                        cur_str.clear();
+                        mode = Mode::Str;
+                        i = j + 1;
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                } else if c == '\'' {
+                    if i + 1 < n && chars[i + 1] == '\\' {
+                        // escaped char literal: '\n', '\'', '\x41', '\u{…}'
+                        let mut j = (i + 3).min(n);
+                        while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        code.push('\'');
+                        code.push('\'');
+                        i = if j < n && chars[j] == '\'' { j + 1 } else { j };
+                    } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                        // plain char literal: blank the payload so a '{'
+                        // or '"' inside never confuses depth/strings
+                        code.push('\'');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        // lifetime (or a stray quote)
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    if c == '{' {
+                        depth += 1;
+                    } else if c == '}' {
+                        depth = depth.saturating_sub(1);
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(d) => {
+                if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    mode = if d <= 1 { Mode::Code } else { Mode::BlockComment(d - 1) };
+                    i += 2;
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    // block comments nest in Rust
+                    comment.push_str("/*");
+                    mode = Mode::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    if i + 1 < n && chars[i + 1] != '\n' {
+                        cur_str.push('\\');
+                        cur_str.push(chars[i + 1]);
+                        i += 2;
+                    } else {
+                        // line-continuation backslash; the newline is
+                        // handled by the line flush above
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    strings.push(std::mem::take(&mut cur_str));
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    cur_str.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(h) => {
+                if c == '"' {
+                    let mut k = i + 1;
+                    let mut cnt = 0usize;
+                    while cnt < h && k < n && chars[k] == '#' {
+                        cnt += 1;
+                        k += 1;
+                    }
+                    if cnt == h {
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        strings.push(std::mem::take(&mut cur_str));
+                        mode = Mode::Code;
+                        i = k;
+                    } else {
+                        cur_str.push('"');
+                        i += 1;
+                    }
+                } else {
+                    cur_str.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    let mut file = SourceFile { path: path.to_string(), lines };
+    mark_tests(&mut file.lines, assume_test);
+    file
+}
+
+/// Mark lines inside `#[cfg(test)]` items. A region starts at the line
+/// carrying the attribute, covers the braced item that follows, and ends
+/// when the brace depth returns to the opener's level.
+fn mark_tests(lines: &mut [LineInfo], assume_test: bool) {
+    if assume_test {
+        for l in lines.iter_mut() {
+            l.in_test = true;
+        }
+        return;
+    }
+    let mut pending = false;
+    let mut region: Option<usize> = None;
+    for line in lines.iter_mut() {
+        if let Some(d) = region {
+            if line.depth > d {
+                line.in_test = true;
+                continue;
+            }
+            region = None;
+        }
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        if pending {
+            line.in_test = true;
+            if line.code.contains('{') {
+                region = Some(line.depth);
+                pending = false;
+            } else if line.code.contains(';') {
+                // attribute on a brace-less item (`#[cfg(test)] use …;`)
+                pending = false;
+            }
+        }
+    }
+}
+
+/// True when the byte before index `i` is an identifier character —
+/// used to reject matches that are suffixes of longer identifiers.
+pub fn prev_is_ident(code: &str, i: usize) -> bool {
+    i > 0 && {
+        let b = code.as_bytes()[i - 1];
+        b.is_ascii_alphanumeric() || b == b'_'
+    }
+}
+
+/// True when `tok` occurs in `code` as a standalone token (no identifier
+/// character immediately before it), e.g. a call of that exact name.
+pub fn has_call_token(code: &str, tok: &str) -> bool {
+    code.match_indices(tok).any(|(i, _)| !prev_is_ident(code, i))
+}
+
+/// The dotted receiver chain ending just before byte `dot_idx`, e.g.
+/// `self.obs` for the `.record(` in `self.obs.record(f)`. Walking back
+/// over ASCII identifier bytes and dots is UTF-8 safe: multi-byte chars
+/// never contain those byte values, so the stop point is a boundary.
+pub fn chain_before(code: &str, dot_idx: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut start = dot_idx;
+    while start > 0 {
+        let b = bytes[start - 1];
+        if b.is_ascii_alphanumeric() || b == b'_' || b == b'.' {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    &code[start..dot_idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_matching_rejects_identifier_suffixes() {
+        assert!(has_call_token("let g = lock_pool(&self.pool);", "lock_pool("));
+        assert!(!has_call_token("let g = my_lock_pool(&self.pool);", "lock_pool("));
+    }
+
+    #[test]
+    fn chain_walks_back_over_dotted_path() {
+        let code = "self.obs.record(f);";
+        let dot = code.find(".record(").unwrap();
+        assert_eq!(chain_before(code, dot), "self.obs");
+        let code2 = "o.profile.pool_lock_wait_ms.record(w);";
+        let dot2 = code2.find(".record(").unwrap();
+        assert_eq!(chain_before(code2, dot2), "o.profile.pool_lock_wait_ms");
+    }
+
+    #[test]
+    fn comments_and_strings_are_separated() {
+        let src = "let x = \"a // not a comment\"; // real comment\n";
+        let f = parse("t.rs", src, false);
+        assert!(!f.lines[0].code.contains("not a comment"));
+        assert_eq!(f.lines[0].strings, vec!["a // not a comment".to_string()]);
+        assert!(f.lines[0].comment.contains("real comment"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"let g = pool.lock();\"#;\nlet y = 1;\n";
+        let f = parse("t.rs", src, false);
+        assert!(!f.lines[0].code.contains("pool.lock()"));
+        assert_eq!(f.lines[0].strings, vec!["let g = pool.lock();".to_string()]);
+        assert_eq!(f.lines[1].code, "let y = 1;");
+    }
+
+    #[test]
+    fn char_literals_do_not_confuse_depth() {
+        let src = "fn f() {\n    let open = '{';\n    let q = '\\'';\n}\nfn g() {}\n";
+        let f = parse("t.rs", src, false);
+        assert_eq!(f.lines[1].depth, 1);
+        assert_eq!(f.lines[3].depth, 1); // the closing `}` line starts at depth 1
+        assert_eq!(f.lines[4].depth, 0);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str {\n    x\n}\n";
+        let f = parse("t.rs", src, false);
+        assert_eq!(f.lines[1].depth, 1);
+        assert_eq!(f.lines[2].depth, 1);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        x();\n    }\n}\nfn live2() {}\n";
+        let f = parse("t.rs", src, false);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[7].in_test);
+    }
+
+    #[test]
+    fn assume_test_marks_everything() {
+        let f = parse("t.rs", "fn a() {}\nfn b() {}\n", true);
+        assert!(f.lines.iter().all(|l| l.in_test));
+    }
+}

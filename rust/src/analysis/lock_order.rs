@@ -1,0 +1,224 @@
+//! R1 — lock-order rule.
+//!
+//! Enforces the deadlock discipline from docs/CONCURRENCY.md: PagePool
+//! before Obs, never the reverse, and no guard of either held across a
+//! device call or a channel send. The checker tracks `let`-bound guards
+//! per line: a guard is born on the line that binds a pool/obs lock
+//! expression and dies when the brace depth falls back to (or below)
+//! its binding depth or an explicit `drop(name)` appears.
+//!
+//! Matching is lexical, tuned to this tree's idioms: pool locks go
+//! through `cache::paged::lock_pool` / `lock_profiled` or a `.lock()`
+//! whose receiver chain names a pool; obs access goes through
+//! `.record(…)` / `.event(…)` / `.inner()` on an `obs`-named chain.
+//! A `let` whose right-hand side spans lines is not tracked — `cargo
+//! fmt` keeps the call opener on the binding line everywhere we care.
+
+use super::lexer::{chain_before, has_call_token, SourceFile};
+use super::{Finding, R1};
+
+struct Guard {
+    /// Binding name, empty for patterns we cannot name (tuples etc.);
+    /// unnamed guards still expire by depth.
+    name: String,
+    /// true = PagePool guard, false = Obs guard.
+    pool: bool,
+    /// Brace depth at the start of the binding line.
+    depth: usize,
+}
+
+fn acquires_pool(code: &str) -> bool {
+    if has_call_token(code, "lock_profiled(") || has_call_token(code, "lock_pool(") {
+        return true;
+    }
+    code.match_indices(".lock()")
+        .any(|(i, _)| chain_before(code, i).to_ascii_lowercase().contains("pool"))
+}
+
+fn takes_obs(code: &str, in_obs_file: bool) -> bool {
+    for pat in [".record(", ".event(", ".inner()"] {
+        for (i, _) in code.match_indices(pat) {
+            let chain = chain_before(code, i).to_ascii_lowercase();
+            if chain.contains("obs") || (in_obs_file && pat == ".inner()" && chain == "self") {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn binds_obs_guard(rhs: &str, in_obs_file: bool) -> bool {
+    rhs.match_indices(".inner()").any(|(i, _)| {
+        let chain = chain_before(rhs, i).to_ascii_lowercase();
+        chain.contains("obs") || (in_obs_file && chain == "self")
+    })
+}
+
+fn touches_device(code: &str) -> bool {
+    code.contains(".dev.") || code.contains(".send(")
+}
+
+fn drops_name(code: &str, name: &str) -> bool {
+    if name.is_empty() {
+        return false;
+    }
+    for (i, _) in code.match_indices("drop(") {
+        if super::lexer::prev_is_ident(code, i) {
+            continue;
+        }
+        if let Some(rest) = code[i + 5..].strip_prefix(name) {
+            if rest.starts_with(')') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Extract `(binding_name, rhs)` from a `let name[: Ty] = rhs;` line.
+/// Destructuring patterns yield an empty name (depth-only expiry).
+fn guard_binding(code: &str) -> Option<(String, &str)> {
+    let rest = code.trim_start().strip_prefix("let ")?;
+    let eq = rest.find('=')?;
+    let (pat, rhs) = (rest[..eq].trim(), &rest[eq + 1..]);
+    let pat = pat.strip_prefix("mut ").unwrap_or(pat);
+    let name = pat.split(':').next().unwrap_or("").trim();
+    let named = !name.is_empty()
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_');
+    Some((if named { name.to_string() } else { String::new() }, rhs))
+}
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let in_obs_file = file.path.contains("/obs/");
+    let mut findings = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            guards.clear();
+            continue;
+        }
+        let code = line.code.as_str();
+        // Expire guards whose scope closed. A line that *starts* with a
+        // closing brace at the guard's own depth (`}`, `} else {`) ends
+        // that guard's block even though the depth momentarily matches.
+        let closes = code.trim_start().starts_with('}');
+        guards.retain(|g| line.depth > g.depth || (line.depth == g.depth && !closes));
+        guards.retain(|g| !drops_name(code, &g.name));
+
+        let pool_live = guards.iter().any(|g| g.pool);
+        let obs_live = guards.iter().any(|g| !g.pool);
+        let acq_pool = acquires_pool(code);
+        let obs_touch = takes_obs(code, in_obs_file);
+        let ln = idx + 1;
+        if (pool_live || acq_pool) && obs_touch {
+            findings.push(Finding {
+                file: file.path.clone(),
+                line: ln,
+                rule: R1,
+                message: "Obs lock taken while a PagePool guard is live".to_string(),
+                hint: "record after the pool guard drops, or use the atomic enabled() gate",
+            });
+        }
+        if obs_live && acq_pool {
+            findings.push(Finding {
+                file: file.path.clone(),
+                line: ln,
+                rule: R1,
+                message: "PagePool lock taken while an Obs lock is live — inverts the documented order"
+                    .to_string(),
+                hint: "acquire the pool first: the order is PagePool before Obs (docs/CONCURRENCY.md)",
+            });
+        }
+        if pool_live && acq_pool {
+            findings.push(Finding {
+                file: file.path.clone(),
+                line: ln,
+                rule: R1,
+                message: "second PagePool lock while a PagePool guard is live".to_string(),
+                hint: "reuse the live guard, or drop it before re-locking",
+            });
+        }
+        if (pool_live || obs_live) && touches_device(code) {
+            findings.push(Finding {
+                file: file.path.clone(),
+                line: ln,
+                rule: R1,
+                message: "device call or channel send while a lock guard is live".to_string(),
+                hint: "drop the guard before crossing the device channel (docs/CONCURRENCY.md)",
+            });
+        }
+        if let Some((name, rhs)) = guard_binding(code) {
+            if acquires_pool(rhs) {
+                guards.push(Guard { name, pool: true, depth: line.depth });
+            } else if binds_obs_guard(rhs, in_obs_file) {
+                guards.push(Guard { name, pool: false, depth: line.depth });
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fixtures;
+    use super::super::lexer::parse;
+    use super::*;
+
+    fn run(src: &str) -> Vec<Finding> {
+        check(&parse("rust/src/cache/fixture.rs", src, false))
+    }
+
+    #[test]
+    fn obs_under_pool_guard_fires_on_the_record_line() {
+        let f = run(fixtures::R1_OBS_UNDER_POOL_GUARD);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, R1);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("Obs lock"));
+    }
+
+    #[test]
+    fn guard_across_device_call_fires() {
+        let f = run(fixtures::R1_GUARD_ACROSS_DEVICE);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("device call"));
+    }
+
+    #[test]
+    fn inversion_fires() {
+        let f = run(fixtures::R1_INVERSION);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("inverts"));
+    }
+
+    #[test]
+    fn send_under_guard_fires() {
+        let f = run(fixtures::R1_SEND_UNDER_GUARD);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("send"));
+    }
+
+    #[test]
+    fn profiled_lock_helper_shape_is_clean() {
+        // The canonical lock_profiled body: the else-branch re-lock must
+        // not be seen as a second lock (the if-branch guard died at `}`).
+        let src = "fn lp(&self) -> G {\n    if self.obs.enabled() {\n        let guard = lock_pool(&self.pool);\n        guard\n    } else {\n        lock_pool(&self.pool)\n    }\n}\n";
+        let f = check(&parse("rust/src/cache/paged.rs", src, false));
+        assert!(f.is_empty(), "unexpected: {f:?}");
+    }
+
+    #[test]
+    fn drop_releases_the_guard() {
+        let src = "fn ok(&self) {\n    let pool = lock_pool(&self.pool);\n    drop(pool);\n    self.obs.record(|o| o.n += 1);\n}\n";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn guards_do_not_leak_across_test_code() {
+        let f = check(&parse("rust/src/cache/fixture.rs", fixtures::R1_OBS_UNDER_POOL_GUARD, true));
+        assert!(f.is_empty());
+    }
+}

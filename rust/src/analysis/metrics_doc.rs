@@ -1,0 +1,227 @@
+//! R4 — metric-registry drift rule.
+//!
+//! Two-way contract between code and docs/OBSERVABILITY.md:
+//! every `hae_*` series emitted through the `obs::prometheus` helpers
+//! must be documented, every documented series must still be emitted,
+//! and every flat stats key frozen in the `snapshot_keys_are_stable`
+//! test must actually be produced by the registry. Doc drift becomes a
+//! lint failure instead of a review nit.
+
+use std::collections::HashSet;
+
+use super::lexer::{has_call_token, prev_is_ident, SourceFile};
+use super::{Finding, R4};
+
+/// One `hae_*` series emission site.
+#[derive(Debug, Clone)]
+pub struct Emission {
+    pub file: String,
+    pub line: usize,
+    pub name: String,
+    /// Histograms additionally emit `_bucket` / `_sum` / `_count`.
+    pub histogram: bool,
+}
+
+/// Emission-helper call tokens, paired with whether they render a
+/// histogram family. `labeled_gauge(` is listed before `gauge(`; the
+/// token matcher already rejects the embedded `gauge(` (preceded by
+/// `_`), this just keeps intent obvious.
+const CALLS: [(&str, bool); 4] = [
+    ("histogram(", true),
+    ("counter(", false),
+    ("labeled_gauge(", false),
+    ("gauge(", false),
+];
+
+/// Find every emission in a file. `cargo fmt` may push the name
+/// argument below the call token, so the first `hae_*` string within
+/// two lines of the call names the series.
+pub fn collect_emissions(file: &SourceFile) -> Vec<Emission> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for (tok, histogram) in CALLS {
+            if !has_call_token(&line.code, tok) {
+                continue;
+            }
+            let window = &file.lines[idx..file.lines.len().min(idx + 3)];
+            if let Some(name) = window
+                .iter()
+                .flat_map(|l| l.strings.iter())
+                .find(|s| s.starts_with("hae_"))
+            {
+                out.push(Emission {
+                    file: file.path.clone(),
+                    line: idx + 1,
+                    name: name.clone(),
+                    histogram,
+                });
+            }
+            break;
+        }
+    }
+    out
+}
+
+/// `hae_*` tokens mentioned in the doc, with the first line each
+/// appears on. Tokens ending in `_` (wildcard prose) are skipped.
+pub fn doc_series(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut seen = HashSet::new();
+    for (idx, line) in text.lines().enumerate() {
+        for (i, _) in line.match_indices("hae_") {
+            if prev_is_ident(line, i) {
+                continue;
+            }
+            let ext: String = line[i + 4..]
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+                .collect();
+            if ext.is_empty() || ext.ends_with('_') {
+                continue;
+            }
+            let tok = format!("hae_{ext}");
+            if seen.insert(tok.clone()) {
+                out.push((idx + 1, tok));
+            }
+        }
+    }
+    out
+}
+
+/// Cross-check emissions against the doc, both directions.
+pub fn check_drift(emissions: &[Emission], doc_text: &str, doc_path: &str) -> Vec<Finding> {
+    let documented: HashSet<String> = doc_series(doc_text).into_iter().map(|(_, t)| t).collect();
+    let emitted: HashSet<&str> = emissions.iter().map(|e| e.name.as_str()).collect();
+    let hists: HashSet<&str> = emissions
+        .iter()
+        .filter(|e| e.histogram)
+        .map(|e| e.name.as_str())
+        .collect();
+    let mut out = Vec::new();
+    let mut reported: HashSet<&str> = HashSet::new();
+    for e in emissions {
+        if !documented.contains(&e.name) && reported.insert(e.name.as_str()) {
+            out.push(Finding {
+                file: e.file.clone(),
+                line: e.line,
+                rule: R4,
+                message: format!("series {} emitted but not documented", e.name),
+                hint: "add it to the series catalog in docs/OBSERVABILITY.md",
+            });
+        }
+    }
+    for (line, tok) in doc_series(doc_text) {
+        if emitted.contains(tok.as_str()) {
+            continue;
+        }
+        let base = tok
+            .strip_suffix("_bucket")
+            .or_else(|| tok.strip_suffix("_sum"))
+            .or_else(|| tok.strip_suffix("_count"));
+        if base.is_some_and(|b| hists.contains(b)) {
+            continue;
+        }
+        out.push(Finding {
+            file: doc_path.to_string(),
+            line,
+            rule: R4,
+            message: format!("series {tok} documented but never emitted"),
+            hint: "remove it from docs/OBSERVABILITY.md or restore the emission",
+        });
+    }
+    out
+}
+
+/// Every key frozen by the snapshot-stability test must be produced by
+/// non-test code in the same file (the registry's `snapshot()`).
+pub fn check_snapshot_keys(file: &SourceFile) -> Vec<Finding> {
+    let produced: HashSet<&str> = file
+        .lines
+        .iter()
+        .filter(|l| !l.in_test)
+        .flat_map(|l| l.strings.iter().map(|s| s.as_str()))
+        .collect();
+    let mut out = Vec::new();
+    let mut markers = 0usize;
+    for marker in ["const FROZEN", "const ADDITIVE"] {
+        let Some(start) = file.lines.iter().position(|l| l.code.contains(marker)) else {
+            continue;
+        };
+        markers += 1;
+        for (off, line) in file.lines[start..].iter().enumerate() {
+            for key in &line.strings {
+                if !produced.contains(key.as_str()) {
+                    out.push(Finding {
+                        file: file.path.clone(),
+                        line: start + off + 1,
+                        rule: R4,
+                        message: format!("snapshot key \"{key}\" frozen in the test but never produced"),
+                        hint: "produce it in MetricsRegistry::snapshot or drop it from the frozen list",
+                    });
+                }
+            }
+            if line.code.contains("];") {
+                break;
+            }
+        }
+    }
+    if markers < 2 {
+        out.push(Finding {
+            file: file.path.clone(),
+            line: 1,
+            rule: R4,
+            message: "frozen snapshot-key markers (FROZEN / ADDITIVE consts) not found".to_string(),
+            hint: "keep the snapshot_keys_are_stable test and its key lists intact",
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::parse;
+    use super::*;
+
+    #[test]
+    fn emissions_are_collected_across_wrapped_calls() {
+        let src = "fn p(out: &mut String) {\n    gauge(out, \"hae_queue_depth\", \"depth\", 1.0);\n    histogram(\n        out,\n        \"hae_ttft_ms\",\n        \"ttft\",\n    );\n}\n";
+        let e = collect_emissions(&parse("rust/src/obs/fixture.rs", src, false));
+        let names: Vec<&str> = e.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["hae_queue_depth", "hae_ttft_ms"]);
+        assert!(!e[0].histogram);
+        assert!(e[1].histogram);
+    }
+
+    #[test]
+    fn drift_fires_both_directions_and_accepts_histogram_suffixes() {
+        let src = "fn p(out: &mut String) {\n    gauge(out, \"hae_queue_depth\", \"d\", 1.0);\n    histogram(out, \"hae_ttft_ms\", \"t\", &h);\n    counter(out, \"hae_secret_total\", \"s\", 2.0);\n}\n";
+        let e = collect_emissions(&parse("rust/src/obs/fixture.rs", src, false));
+        let doc = "## Series\n- `hae_queue_depth` — depth\n- `hae_ttft_ms` (histogram; also `hae_ttft_ms_bucket`)\n- `hae_ghost_series` — documented only\n";
+        let f = check_drift(&e, doc, "docs/OBSERVABILITY.md");
+        assert_eq!(f.len(), 2, "got: {f:?}");
+        assert!(f[0].message.contains("hae_secret_total"));
+        assert_eq!(f[0].line, 4);
+        assert!(f[1].message.contains("hae_ghost_series"));
+        assert_eq!(f[1].file, "docs/OBSERVABILITY.md");
+        assert_eq!(f[1].line, 4);
+    }
+
+    #[test]
+    fn frozen_keys_must_be_produced() {
+        let src = "fn snapshot() {\n    out.push((\"queue_depth\", 1));\n}\n#[cfg(test)]\nmod tests {\n    const FROZEN: &[&str] = &[\n        \"queue_depth\", \"ghost_key\",\n    ];\n    const ADDITIVE: &[&str] = &[\n        \"queue_depth\",\n    ];\n}\n";
+        let f = check_snapshot_keys(&parse("rust/src/scheduler/metrics.rs", src, false));
+        assert_eq!(f.len(), 1, "got: {f:?}");
+        assert!(f[0].message.contains("ghost_key"));
+        assert_eq!(f[0].line, 7);
+    }
+
+    #[test]
+    fn missing_markers_are_a_finding() {
+        let f = check_snapshot_keys(&parse("rust/src/scheduler/metrics.rs", "fn a() {}\n", false));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("markers"));
+    }
+}

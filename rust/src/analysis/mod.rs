@@ -1,0 +1,245 @@
+//! `hae-lint` — project invariant checker.
+//!
+//! Turns the prose contracts in docs/CONCURRENCY.md and the page
+//! accounting discipline into machine-enforced rules, run by the
+//! `hae_lint` binary (`make lint-hae`) on every push:
+//!
+//! - **R1 lock-order** ([`lock_order`]) — PagePool before Obs, no guard
+//!   across a device call or channel send.
+//! - **R2 refcount pairing** ([`refcount`]) — retains live in modules
+//!   with typed release paths.
+//! - **R3 forbidden APIs** ([`forbidden`]) — `Rc`/`RefCell`, NaN-unsafe
+//!   comparisons, `process::exit`, fixed test ports, hot-path panics.
+//! - **R4 metric drift** ([`metrics_doc`]) — emitted `hae_*` series and
+//!   docs/OBSERVABILITY.md stay in lockstep; frozen snapshot keys stay
+//!   produced.
+//!
+//! Pure logic over source text — no artifacts, no network, unit-testable
+//! against the string fixtures in [`fixtures`]. The full rule catalog,
+//! including the suppression syntax and its cap, lives in
+//! docs/STATIC_ANALYSIS.md.
+
+pub mod fixtures;
+pub mod forbidden;
+pub mod lexer;
+pub mod lock_order;
+pub mod metrics_doc;
+pub mod refcount;
+pub mod suppress;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+pub const R1: &str = "R1-lock-order";
+pub const R2: &str = "R2-refcount-pairing";
+pub const R3: &str = "R3-forbidden-api";
+pub const R4: &str = "R4-metric-drift";
+/// Rule id for violations of the suppression mechanism itself
+/// (reason-less suppressions, cap overflow).
+pub const RULE_SUPPRESSION: &str = "suppression";
+/// Tree-wide cap on suppressions in active use. The current tree uses
+/// roughly half of this; hitting the cap means violations are being
+/// waved through instead of fixed.
+pub const MAX_SUPPRESSIONS: usize = 24;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    pub hint: &'static str,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {} (fix: {})",
+            self.file, self.line, self.rule, self.message, self.hint
+        )
+    }
+}
+
+/// Aggregate result of a tree walk.
+#[derive(Debug, Default)]
+pub struct TreeReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub suppressions_used: usize,
+    pub suppressions_unused: usize,
+}
+
+/// Lint a single source string through R1–R3 plus suppressions — the
+/// entry point fixture tests use. Paths under `rust/tests/` or
+/// `benches/` are treated as all-test code, as in the tree walk.
+pub fn check_str(path: &str, source: &str) -> Vec<Finding> {
+    let assume_test = path.starts_with("rust/tests/") || path.starts_with("benches/");
+    let file = lexer::parse(path, source, assume_test);
+    let mut findings = lock_order::check(&file);
+    findings.extend(refcount::check(&file));
+    findings.extend(forbidden::check(&file));
+    let mut sups = suppress::collect(&file);
+    let mut out = suppress::apply(&mut sups, path, findings);
+    out.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    out
+}
+
+/// Lint the whole repository rooted at `root`.
+pub fn lint_tree(root: &Path) -> anyhow::Result<TreeReport> {
+    let mut report = TreeReport::default();
+    let mut emissions: Vec<metrics_doc::Emission> = Vec::new();
+
+    let mut src_files = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut src_files)?;
+    src_files.sort();
+    for path in &src_files {
+        let rel = rel_path(root, path);
+        if rel.contains("analysis/fixtures") {
+            // deliberately-broken linter fixtures
+            continue;
+        }
+        let text =
+            fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        let file = lexer::parse(&rel, &text, false);
+        report.files_scanned += 1;
+        let mut findings = lock_order::check(&file);
+        findings.extend(refcount::check(&file));
+        findings.extend(forbidden::check(&file));
+        if rel.ends_with("scheduler/metrics.rs") {
+            findings.extend(metrics_doc::check_snapshot_keys(&file));
+        }
+        emissions.extend(metrics_doc::collect_emissions(&file));
+        apply_suppressions(&mut report, &file, &rel, findings);
+    }
+
+    // Tests and benches: whole-file test code; only the R3 scopes that
+    // target test code (fixed ports) apply there.
+    let mut test_files = Vec::new();
+    collect_rs(&root.join("rust/tests"), &mut test_files)?;
+    collect_rs(&root.join("benches"), &mut test_files)?;
+    test_files.sort();
+    for path in &test_files {
+        let rel = rel_path(root, path);
+        let text =
+            fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        let file = lexer::parse(&rel, &text, true);
+        report.files_scanned += 1;
+        let findings = forbidden::check(&file);
+        apply_suppressions(&mut report, &file, &rel, findings);
+    }
+
+    match fs::read_to_string(root.join("docs/OBSERVABILITY.md")) {
+        Ok(doc) => report
+            .findings
+            .extend(metrics_doc::check_drift(&emissions, &doc, "docs/OBSERVABILITY.md")),
+        Err(_) => report.findings.push(Finding {
+            file: "docs/OBSERVABILITY.md".to_string(),
+            line: 0,
+            rule: R4,
+            message: "docs/OBSERVABILITY.md is missing".to_string(),
+            hint: "restore the observability catalog; R4 checks emitted series against it",
+        }),
+    }
+
+    if report.suppressions_used > MAX_SUPPRESSIONS {
+        report.findings.push(Finding {
+            file: "(tree)".to_string(),
+            line: 0,
+            rule: RULE_SUPPRESSION,
+            message: format!(
+                "{} suppressions in use exceeds the cap of {MAX_SUPPRESSIONS}",
+                report.suppressions_used
+            ),
+            hint: "fix violations instead of suppressing them",
+        });
+    }
+
+    report
+        .findings
+        .sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule)));
+    Ok(report)
+}
+
+fn apply_suppressions(
+    report: &mut TreeReport,
+    file: &lexer::SourceFile,
+    rel: &str,
+    findings: Vec<Finding>,
+) {
+    let mut sups = suppress::collect(file);
+    report.findings.extend(suppress::apply(&mut sups, rel, findings));
+    report.suppressions_used += sups.iter().filter(|s| s.used).count();
+    report.suppressions_unused += sups.iter().filter(|s| !s.used).count();
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))? {
+        let p = entry.with_context(|| format!("read entry in {}", dir.display()))?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_seeded_lock_order_inversion_is_caught() {
+        // The acceptance scenario: drop an inverted-order snippet into a
+        // scanned (non-hot) module and the linter reports R1 — which
+        // makes the binary exit non-zero.
+        let f = check_str("rust/src/server/fixture.rs", fixtures::R1_INVERSION);
+        assert_eq!(f.len(), 1, "got: {f:?}");
+        assert_eq!(f[0].rule, R1);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn a_reasoned_suppression_lints_clean() {
+        let f = check_str("rust/src/server/fixture.rs", fixtures::SUPPRESSED_WITH_REASON);
+        assert!(f.is_empty(), "got: {f:?}");
+    }
+
+    #[test]
+    fn a_reasonless_suppression_is_itself_a_finding() {
+        let f = check_str("rust/src/server/fixture.rs", fixtures::SUPPRESSED_NO_REASON);
+        assert_eq!(f.len(), 1, "got: {f:?}");
+        assert_eq!(f[0].rule, RULE_SUPPRESSION);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn findings_render_as_file_line_rule_hint() {
+        let f = Finding {
+            file: "rust/src/cache/slab.rs".to_string(),
+            line: 7,
+            rule: R1,
+            message: "msg".to_string(),
+            hint: "do the thing",
+        };
+        assert_eq!(
+            f.to_string(),
+            "rust/src/cache/slab.rs:7: [R1-lock-order] msg (fix: do the thing)"
+        );
+    }
+}

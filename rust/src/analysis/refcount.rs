@@ -1,0 +1,74 @@
+//! R2 — refcount pairing rule.
+//!
+//! Page refcounts follow the accounting discipline from PR 4/5: every
+//! module that bumps a page's refcount (`retain_page` / `retain_all`)
+//! must also route frees through the typed release paths (`release`,
+//! `release_pages`) so the pair is reviewable in one place. A retain in
+//! a module with no release path is how leaked pages and
+//! `hae_refcount_errors_total` incidents start.
+//!
+//! CoW fork transfer points that intentionally hand the balancing
+//! release to another module carry a per-site suppression comment.
+
+use super::lexer::SourceFile;
+use super::{Finding, R2};
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let mut retains: Vec<usize> = Vec::new();
+    let mut has_release = false;
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        if code.contains(".release(") || code.contains(".release_pages(") || code.contains("fn release")
+        {
+            has_release = true;
+        }
+        if code.contains(".retain_page(") || code.contains(".retain_all(") {
+            retains.push(idx + 1);
+        }
+    }
+    if has_release {
+        return Vec::new();
+    }
+    retains
+        .into_iter()
+        .map(|line| Finding {
+            file: file.path.clone(),
+            line,
+            rule: R2,
+            message: "refcount retain in a module with no typed release path".to_string(),
+            hint: "route frees through release_pages()/release(), or suppress at a reviewed CoW transfer point",
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fixtures;
+    use super::super::lexer::parse;
+    use super::*;
+
+    #[test]
+    fn retain_without_release_fires_per_site() {
+        let f = check(&parse("rust/src/prefix/fixture.rs", fixtures::R2_RETAIN_WITHOUT_RELEASE, false));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, R2);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn paired_module_is_clean() {
+        let f = check(&parse("rust/src/prefix/fixture.rs", fixtures::R2_PAIRED, false));
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn associated_fn_call_is_not_a_retain_site() {
+        // PrefillDecision::retain_all(n) is a constructor, not a
+        // refcount bump; only dotted method calls count.
+        let src = "fn d(n: usize) -> PrefillDecision {\n    PrefillDecision::retain_all(n)\n}\n";
+        assert!(check(&parse("rust/src/cache/fixture.rs", src, false)).is_empty());
+    }
+}

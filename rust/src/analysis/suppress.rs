@@ -1,0 +1,158 @@
+//! Suppression comments for `hae-lint`.
+//!
+//! A suppression is a comment of the form documented in
+//! docs/STATIC_ANALYSIS.md: the literal marker (see `MARKER`), a rule id
+//! (or unambiguous prefix, e.g. `R1`) in parentheses, then a mandatory
+//! free-text reason. It silences matching findings on its own line and
+//! on the next line, so it works both as a trailing comment and as a
+//! standalone comment directly above the offending line.
+//!
+//! Suppressions are counted: a reason-less suppression is itself a
+//! finding, and the tree-wide count is capped in `analysis::lint_tree`.
+
+use super::lexer::SourceFile;
+use super::{Finding, RULE_SUPPRESSION};
+
+/// The comment marker, kept out of doc comments in this module so the
+/// linter never parses its own documentation as a suppression.
+const MARKER: &str = "hae-lint: allow(";
+
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// Rule id (or prefix) named in the parentheses.
+    pub rule: String,
+    /// Free text after the closing paren; must be non-empty.
+    pub reason: String,
+    /// Set by [`apply`] when the suppression silenced a finding.
+    pub used: bool,
+}
+
+/// Collect every suppression comment in the file.
+pub fn collect(file: &SourceFile) -> Vec<Suppression> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if let Some(p) = line.comment.find(MARKER) {
+            let rest = &line.comment[p + MARKER.len()..];
+            if let Some(close) = rest.find(')') {
+                out.push(Suppression {
+                    line: idx + 1,
+                    rule: rest[..close].trim().to_string(),
+                    reason: rest[close + 1..].trim().to_string(),
+                    used: false,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Filter `findings` through the suppressions, marking the ones that
+/// fired. A suppression on line N silences findings on lines N and N+1
+/// whose rule id starts with the named rule. A used suppression with an
+/// empty reason is converted into a finding of its own — silencing
+/// without saying why is exactly the review rot the linter exists to
+/// stop.
+pub fn apply(
+    sups: &mut [Suppression],
+    path: &str,
+    findings: Vec<Finding>,
+) -> Vec<Finding> {
+    let mut kept = Vec::new();
+    for f in findings {
+        let mut silenced = false;
+        for s in sups.iter_mut() {
+            if (f.line == s.line || f.line == s.line + 1)
+                && !s.rule.is_empty()
+                && f.rule.starts_with(s.rule.as_str())
+            {
+                s.used = true;
+                silenced = true;
+                break;
+            }
+        }
+        if !silenced {
+            kept.push(f);
+        }
+    }
+    for s in sups.iter().filter(|s| s.used && s.reason.is_empty()) {
+        kept.push(Finding {
+            file: path.to_string(),
+            line: s.line,
+            rule: RULE_SUPPRESSION,
+            message: "suppression without a reason".to_string(),
+            hint: "append a short justification after the closing paren",
+        });
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::parse;
+    use super::*;
+
+    fn finding(line: usize, rule: &'static str) -> Finding {
+        Finding {
+            file: "t.rs".into(),
+            line,
+            rule,
+            message: "m".into(),
+            hint: "h",
+        }
+    }
+
+    #[test]
+    fn collects_rule_and_reason() {
+        let src = format!("let x = 1; // {}R1-lock-order) profiler by design\n", MARKER);
+        let f = parse("t.rs", &src, false);
+        let sups = collect(&f);
+        assert_eq!(sups.len(), 1);
+        assert_eq!(sups[0].rule, "R1-lock-order");
+        assert_eq!(sups[0].reason, "profiler by design");
+    }
+
+    #[test]
+    fn silences_same_and_next_line_with_prefix_match() {
+        let src = format!("// {}R1) fine here\nbad();\nbad();\n", MARKER);
+        let f = parse("t.rs", &src, false);
+        let mut sups = collect(&f);
+        let out = apply(
+            &mut sups,
+            "t.rs",
+            vec![finding(2, "R1-lock-order"), finding(3, "R1-lock-order")],
+        );
+        // line 2 silenced (next line), line 3 survives
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 3);
+        assert!(sups[0].used);
+    }
+
+    #[test]
+    fn reasonless_suppression_becomes_a_finding() {
+        let src = format!("// {}R1)\nbad();\n", MARKER);
+        let f = parse("t.rs", &src, false);
+        let mut sups = collect(&f);
+        let out = apply(&mut sups, "t.rs", vec![finding(2, "R1-lock-order")]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RULE_SUPPRESSION);
+    }
+
+    #[test]
+    fn wrong_rule_does_not_silence() {
+        let src = format!("bad(); // {}R2) not the right rule\n", MARKER);
+        let f = parse("t.rs", &src, false);
+        let mut sups = collect(&f);
+        let out = apply(&mut sups, "t.rs", vec![finding(1, "R1-lock-order")]);
+        assert_eq!(out.len(), 1);
+        assert!(!sups[0].used);
+    }
+
+    #[test]
+    fn marker_inside_a_string_is_not_a_suppression() {
+        let src = format!("let s = \"{}R1) nope\";\n", MARKER);
+        let f = parse("t.rs", &src, false);
+        assert!(collect(&f).is_empty());
+    }
+}

@@ -1,0 +1,31 @@
+//! `hae-lint` — run the project invariant checker over the tree.
+//!
+//! Usage: `hae_lint [repo-root]` (default: current directory); wired as
+//! `make lint-hae`. Exit codes: 0 clean, 1 findings, 2 I/O failure.
+//! Rules and suppression syntax: docs/STATIC_ANALYSIS.md.
+
+use std::path::PathBuf;
+
+fn main() {
+    let root = std::env::args().nth(1).map_or_else(|| PathBuf::from("."), PathBuf::from);
+    let report = match hae_serve::analysis::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("hae-lint: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "hae-lint: {} file(s) scanned, {} finding(s), {} suppression(s) used ({} unused)",
+        report.files_scanned,
+        report.findings.len(),
+        report.suppressions_used,
+        report.suppressions_unused
+    );
+    if !report.findings.is_empty() {
+        std::process::exit(1);
+    }
+}

@@ -113,7 +113,10 @@ impl EvictionPolicy for SparseVlm {
         if !dropped.is_empty() {
             // recycle: average the dropped tokens' KV into the weakest kept
             // token (rank keep_n-1)
-            let sink = *kept.last().unwrap();
+            let Some(&sink) = kept.last() else {
+                // keep_n is clamped to ≥ 1, so kept is never empty
+                return PrefillDecision::retain_all(ctx.n_tokens);
+            };
             let row = ctx.meta.n_heads * ctx.meta.d_head;
             let w_old = 1.0 / (dropped.len() + 1) as f32;
             for l in 0..ctx.meta.n_layers {
@@ -206,8 +209,9 @@ impl EvictionPolicy for ToMe {
             }
             let (i, j, _) = best;
             let (keep_slot, drop_slot) = (alive[i], alive[j]);
-            let moved = members.remove(&drop_slot).unwrap();
-            members.get_mut(&keep_slot).unwrap().extend(moved);
+            if let Some(moved) = members.remove(&drop_slot) {
+                members.entry(keep_slot).or_default().extend(moved);
+            }
             alive.remove(j);
         }
 
@@ -546,6 +550,7 @@ impl EvictionPolicy for RandomEvict {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cache::slab::{KvSlab, Modality};

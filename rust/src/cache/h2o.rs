@@ -66,6 +66,7 @@ impl EvictionPolicy for H2o {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cache::slab::{KvSlab, Modality};

@@ -186,6 +186,7 @@ impl EvictionPolicy for Hae {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cache::slab::{KvSlab, Modality};

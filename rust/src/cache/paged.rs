@@ -107,13 +107,23 @@ pub fn lock_profiled<'a>(
 ) -> std::sync::MutexGuard<'a, PagePool> {
     if obs.enabled() {
         let t0 = std::time::Instant::now();
-        let guard = pool.lock().unwrap();
+        let guard = lock_pool(pool);
         let waited_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // hae-lint: allow(R1-lock-order) documented pool→obs direction: the profiler records under the pool guard
         obs.record(|o| o.profile.pool_lock_wait_ms.record(waited_ms));
         guard
     } else {
-        pool.lock().unwrap()
+        lock_pool(pool)
     }
+}
+
+/// Acquire the pool mutex without profiling — the slab-internal lock
+/// site. A free function (not a method) so callers can borrow just the
+/// pool field while mutating sibling fields under the guard.
+#[allow(clippy::unwrap_used)]
+pub fn lock_pool(pool: &SharedPagePool) -> std::sync::MutexGuard<'_, PagePool> {
+    // hae-lint: allow(R3-forbidden-api) a poisoned pool mutex is unrecoverable; propagate the panic
+    pool.lock().unwrap()
 }
 
 impl PagePool {
@@ -392,6 +402,7 @@ pub fn pages_for_slots(slots: usize, page_slots: usize) -> usize {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

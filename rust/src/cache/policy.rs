@@ -157,6 +157,7 @@ pub fn lowest_unmarked_slots(slab: &KvSlab, n: usize, protect: usize) -> Vec<usi
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cache::slab::Modality;

@@ -34,7 +34,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::model::ModelMeta;
 use crate::prefix::cow::PageTable;
 
-use super::paged::{pages_for_slots, PagePool, SharedPagePool, DEFAULT_PAGE_SLOTS};
+use super::paged::{lock_pool, pages_for_slots, PagePool, SharedPagePool, DEFAULT_PAGE_SLOTS};
 
 /// Process-wide slab identity: the engine tracks which slab last wrote
 /// each scratch lane region, and a fresh id per slab (never reused)
@@ -119,7 +119,7 @@ impl KvSlab {
     /// are allocated lazily on append and returned on eviction/drop.
     pub fn in_pool(pool: &SharedPagePool, cap: usize) -> Self {
         let (row, n_layers, page_slots) = {
-            let p = pool.lock().unwrap();
+            let p = lock_pool(pool);
             (p.row(), p.n_layers(), p.page_slots())
         };
         KvSlab {
@@ -283,12 +283,12 @@ impl KvSlab {
     }
 
     /// Make sure a page backs logical slot `slot` (== current len).
+    #[allow(clippy::expect_used)]
     fn ensure_page(&mut self, slot: usize) {
         if slot == self.table.len() * self.page_slots {
-            let page = self
-                .pool
-                .lock().unwrap()
+            let page = lock_pool(&self.pool)
                 .alloc()
+                // hae-lint: allow(R3-forbidden-api) pool exhaustion here is an admission-accounting bug; fail loud
                 .expect("page pool exhausted (admission must prevent this)");
             self.table.push_private(page);
         }
@@ -311,7 +311,7 @@ impl KvSlab {
         self.ensure_page(slot);
         let pi = slot / self.page_slots;
         {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_pool(&self.pool);
             // CoW barrier: appending into a shared (adopted) partial tail
             // page forks it first, so the prefix cache's image — and every
             // co-sharing request — never sees this request's generation.
@@ -320,6 +320,8 @@ impl KvSlab {
             // private page bound while the original is charged once
             // globally), so exhaustion here means broken accounting —
             // the same bug class as the ensure_page expect above.
+            #[allow(clippy::expect_used)]
+            // hae-lint: allow(R3-forbidden-api) fork-allowance exhaustion is an accounting bug; fail loud
             self.table.ensure_private(&mut pool, pi).expect(
                 "page pool exhausted forking the shared tail \
                  (the admission fork allowance must reserve it)",
@@ -360,7 +362,7 @@ impl KvSlab {
         for (dst_slot, &src_slot) in retain.iter().enumerate() {
             self.ensure_page(dst_slot);
             let (page, off) = self.page_of(dst_slot);
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_pool(&self.pool);
             for l in 0..self.n_layers {
                 let src = (l * bucket + src_slot) * self.row;
                 pool.write_layer_row(
@@ -400,7 +402,7 @@ impl KvSlab {
             pages_for_slots(meta.len(), self.page_slots),
             "adopted pages must cover exactly the cached slots"
         );
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_pool(&self.pool);
         if !self.table.adopt_shared(&mut pool, pages) {
             return false;
         }
@@ -454,7 +456,9 @@ impl KvSlab {
     /// of the standalone/private-pool callers, for whom a fork can never
     /// be needed. Serving paths, where divergence from a shared prefix
     /// under a tight budget is real, use [`Self::try_compact`] and defer.
+    #[allow(clippy::expect_used)]
     pub fn compact(&mut self, retain: &[usize]) -> usize {
+        // hae-lint: allow(R3-forbidden-api) documented panic contract for private-pool callers
         self.try_compact(retain).expect(
             "page pool exhausted during CoW compaction \
              (serving callers must use try_compact and defer)",
@@ -494,13 +498,13 @@ impl KvSlab {
             // equals what the not-yet-slid source reads expect — and it
             // makes exhaustion recoverable instead of corrupting state.
             let dst_pages = pages_for_slots(retain.len(), self.page_slots);
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_pool(&self.pool);
             for pi in (fm / self.page_slots)..dst_pages {
                 self.table.ensure_private(&mut pool, pi)?;
             }
         }
         {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_pool(&self.pool);
             for (dst_slot, &src_slot) in retain.iter().enumerate() {
                 if dst_slot == src_slot {
                     // unchanged prefix: no copy, page stays clean/shared
@@ -524,7 +528,7 @@ impl KvSlab {
         // just drops this slab's reference; the cache keeps its copy)
         let needed = pages_for_slots(self.meta.len(), self.page_slots);
         if self.table.len() > needed {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_pool(&self.pool);
             self.table.truncate_release(&mut pool, needed);
         }
         Some(evicted)
@@ -532,7 +536,9 @@ impl KvSlab {
 
     /// Evict the given slots (any order, deduped internally). Panics on
     /// CoW-fork exhaustion like [`Self::compact`].
+    #[allow(clippy::expect_used)]
     pub fn evict(&mut self, evict: &[usize]) -> usize {
+        // hae-lint: allow(R3-forbidden-api) documented panic contract for private-pool callers
         self.try_evict(evict).expect(
             "page pool exhausted during CoW eviction \
              (serving callers must use try_evict and defer)",
@@ -586,7 +592,7 @@ impl KvSlab {
         self.meta.truncate(keep);
         let needed = pages_for_slots(keep, self.page_slots);
         if self.table.len() > needed {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_pool(&self.pool);
             self.table.truncate_release(&mut pool, needed);
         }
         len - keep
@@ -613,7 +619,7 @@ impl KvSlab {
         assert!(len <= cap_c, "lane cache {} > bucket {}", len, cap_c);
         let here = LaneSync { lane, cap_c };
         let full = self.last_sync != Some(here);
-        let pool = self.pool.lock().unwrap();
+        let pool = lock_pool(&self.pool);
         let mut copied = 0;
         for pi in 0..self.table.len() {
             let base_slot = pi * self.page_slots;
@@ -641,12 +647,12 @@ impl KvSlab {
     /// Raw K row of one slot in one layer (test/diagnostic use).
     pub fn k_row(&self, layer: usize, slot: usize) -> Vec<f32> {
         let (page, off) = self.page_of(slot);
-        self.pool.lock().unwrap().read_row(page, off, layer, false)
+        lock_pool(&self.pool).read_row(page, off, layer, false)
     }
 
     pub fn v_row(&self, layer: usize, slot: usize) -> Vec<f32> {
         let (page, off) = self.page_of(slot);
-        self.pool.lock().unwrap().read_row(page, off, layer, true)
+        lock_pool(&self.pool).read_row(page, off, layer, true)
     }
 
     /// Retire hook: return every arena page to the pool *now*, instead
@@ -665,7 +671,7 @@ impl KvSlab {
         self.released_private = self.kv_bytes_private();
         self.released_shared = self.table.shared_page_ids();
         if !self.table.is_empty() {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = lock_pool(&self.pool);
             self.table.release_all(&mut pool);
         }
         self.last_sync = None;
@@ -690,7 +696,7 @@ impl KvSlab {
 
 impl Drop for KvSlab {
     fn drop(&mut self) {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_pool(&self.pool);
         self.table.release_all(&mut pool);
     }
 }
@@ -722,13 +728,14 @@ impl Clone for KvSlab {
             // the clone's private pool shares nothing with the arena
             released_shared: Vec::new(),
         };
-        let src = self.pool.lock().unwrap();
+        let src = lock_pool(&self.pool);
         let live_kv = if self.released { 0 } else { self.meta.len() };
         for slot in 0..live_kv {
             out.ensure_page(slot);
             let (dpage, doff) = out.page_of(slot);
             let (spage, soff) = self.page_of(slot);
-            let mut dst = out.pool.lock().unwrap();
+            // hae-lint: allow(R1-lock-order) clone targets its fresh private pool; the two mutexes are disjoint (docs/CONCURRENCY.md)
+            let mut dst = lock_pool(&out.pool);
             for l in 0..self.n_layers {
                 dst.write_layer_row(
                     dpage,
@@ -756,6 +763,7 @@ impl std::fmt::Debug for KvSlab {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::ModelMeta;

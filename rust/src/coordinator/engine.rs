@@ -334,6 +334,12 @@ impl Engine {
         lock_profiled(&self.pool, &self.obs).page_slots()
     }
 
+    /// Cumulative CoW fork count — one short pool lock, released before
+    /// the caller records anything (docs/CONCURRENCY.md lock order).
+    fn pool_forks(&self) -> u64 {
+        lock_profiled(&self.pool, &self.obs).stats().forks
+    }
+
     /// Admission controller over the engine's physical arena (budget =
     /// the whole pool): the one page-bound implementation, shared by
     /// engine-direct drivers (`run_batched`) and, with a tighter byte
@@ -782,7 +788,7 @@ impl Engine {
                 let s_bucket = self
                     .manifest()
                     .extend_bucket(step)
-                    .expect("effective chunk fits a compiled bucket");
+                    .ok_or_else(|| anyhow!("extend chunk {} exceeds all compiled chunk buckets", step))?;
                 let slab_n = m.n_layers * capacity * row; // one lane
                 slab.copy_into_lane(
                     &mut self.ext_k[..slab_n],
@@ -927,11 +933,11 @@ impl Engine {
         // deliberately not flushed for this up front); exhaustion falls
         // back to a cold prefill instead of panicking
         self.reclaim_pool_headroom(slab.shared_pages());
-        let forks_before = lock_profiled(&self.pool, &self.obs).stats().forks;
+        let forks_before = self.pool_forks();
         if slab.try_compact(&retain).is_none() {
             return Ok(Err(req));
         }
-        let forked = lock_profiled(&self.pool, &self.obs).stats().forks - forks_before;
+        let forked = self.pool_forks() - forks_before;
         if forked > 0 {
             self.obs.event(req.id, TraceEvent::CowFork { pages: forked as u32 });
         }
@@ -1335,8 +1341,7 @@ impl Engine {
         };
         let mut retired = Vec::new();
         for (i, lane) in lanes.iter_mut().enumerate() {
-            if lane.as_ref().map_or(false, |ar| ar.done) {
-                let mut ar = lane.take().unwrap();
+            if let Some(mut ar) = lane.take_if(|ar| ar.done) {
                 // retired lanes return their arena pages immediately —
                 // admission headroom must not wait for the caller to
                 // drop the finished request
@@ -1378,7 +1383,7 @@ impl Engine {
 
         // capacity bucket: smallest compiled C strictly above the longest
         // live cache in the batch
-        let max_len = live.iter().map(|(_, ar)| ar.slab.len()).max().unwrap();
+        let max_len = live.iter().map(|(_, ar)| ar.slab.len()).max().unwrap_or(0);
         let capacity = self
             .manifest()
             .capacity_bucket(max_len)
@@ -1394,7 +1399,10 @@ impl Engine {
             .scratch_k
             .take()
             .ok_or_else(|| anyhow!("decode step already in flight"))?;
-        let mut v = self.scratch_v.take().expect("scratch buffers travel together");
+        let mut v = self
+            .scratch_v
+            .take()
+            .ok_or_else(|| anyhow!("scratch buffers travel together"))?;
 
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
@@ -1575,14 +1583,14 @@ impl Engine {
                         })
                         .collect();
                     let forks_before = (obs_on && ar.slab.shared_pages() > 0)
-                        .then(|| lock_profiled(&self.pool, &self.obs).stats().forks);
+                        .then(|| self.pool_forks());
                     match ar.slab.try_evict(&decision.evict) {
                         Some(evicted) => {
                             ar.evictions.push(EvictionEvent { step, victims });
                             ar.stats.evicted_at_decode += evicted;
                             if obs_on {
                                 let forked = forks_before.map_or(0, |f0| {
-                                    lock_profiled(&self.pool, &self.obs).stats().forks - f0
+                                    self.pool_forks() - f0
                                 });
                                 let mut o = self.obs.inner();
                                 o.evicted_per_decision.record(evicted as f64);
@@ -1924,7 +1932,7 @@ impl Engine {
                     }
                     break; // headroom frees as live lanes evict/retire
                 }
-                let (req, _) = queue.pop_front().unwrap();
+                let Some((req, _)) = queue.pop_front() else { break };
                 let mut ar = self.prefill(req)?;
                 if ar.done {
                     ar.slab.release_pages();

@@ -8,6 +8,10 @@
 //! `scheduler::Scheduler`, which adds KV-budget admission control and
 //! priority queueing in front of the same lanes.
 
+// hot-path panic discipline (hae-lint R3): violations need an inline
+// #[allow] plus a reasoned suppression — see docs/STATIC_ANALYSIS.md
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod engine;
 pub mod request_state;
 

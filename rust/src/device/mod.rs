@@ -21,6 +21,10 @@
 //! it needs, and the reply returns the allocation for reuse — no
 //! per-step buffer churn on either side.
 
+// hot-path panic discipline (hae-lint R3): violations need an inline
+// #[allow] plus a reasoned suppression — see docs/STATIC_ANALYSIS.md
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -130,7 +134,10 @@ struct DeviceThread {
 
 impl Drop for DeviceThread {
     fn drop(&mut self) {
-        if let Some(h) = self.join.lock().unwrap().take() {
+        // a poisoned join mutex means a sibling drop panicked; skip the
+        // join rather than double-panic during unwind
+        let handle = self.join.lock().ok().and_then(|mut g| g.take());
+        if let Some(h) = handle {
             if h.join().is_err() {
                 eprintln!("device thread panicked during shutdown");
             }

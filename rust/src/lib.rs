@@ -6,6 +6,7 @@
 //! (2026). See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+pub mod analysis;
 pub mod attention;
 pub mod cache;
 pub mod coordinator;

@@ -11,7 +11,7 @@
 
 pub mod outputs;
 
-use std::cell::RefCell;
+use std::cell::RefCell; // hae-lint: allow(R3-forbidden-api) device-thread-confined executable caches (docs/CONCURRENCY.md)
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;

@@ -222,6 +222,7 @@ impl AdmissionController {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cache::{KvSlab, PolicyKind};

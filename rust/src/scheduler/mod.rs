@@ -65,6 +65,10 @@
 //! `metrics::MetricsRegistry` and are served by the `{"kind": "stats"}`
 //! request.
 
+// hot-path panic discipline (hae-lint R3): violations need an inline
+// #[allow] plus a reasoned suppression — see docs/STATIC_ANALYSIS.md
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod admission;
 pub mod metrics;
 pub mod queue;
@@ -373,7 +377,7 @@ impl<T> Scheduler<T> {
             loop {
                 let live = self.live_bound_pages();
                 let shared = engine.shared_charge_pages(&self.lanes);
-                let p = self.pending.as_mut().unwrap();
+                let Some(p) = self.pending.as_mut() else { break };
                 let grab =
                     self.admission.reservation_grab(live + shared, p.reserved, p.target);
                 if grab >= p.target - p.reserved || !engine.prefix_reclaim_one() {
@@ -390,9 +394,10 @@ impl<T> Scheduler<T> {
         // free — the reservation converts into the lane's live bound
         if self.pending.as_ref().is_some_and(|p| p.reserved >= p.target) {
             if let Some(free) = self.lanes.iter().position(|l| l.is_none()) {
-                let p = self.pending.take().unwrap();
-                self.metrics.chunked_admits += 1;
-                self.admit_job(engine, free, p.job);
+                if let Some(p) = self.pending.take() {
+                    self.metrics.chunked_admits += 1;
+                    self.admit_job(engine, free, p.job);
+                }
             }
         }
         // 3. regular admission against the surplus the reservation leaves
@@ -584,6 +589,8 @@ impl<T> Scheduler<T> {
             engine.extend_calls(),
         );
         for (idx, ar) in done {
+            #[allow(clippy::expect_used)]
+            // hae-lint: allow(R3-forbidden-api) a finished lane without a tag is scheduler-state corruption; fail loud
             let lt = self.tags[idx].take().expect("finished lane carries a tag");
             self.metrics.completed += 1;
             self.metrics
@@ -647,6 +654,7 @@ pub fn parse_kv_budget(spec: &str) -> Option<usize> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::workload::WorkloadKind;

@@ -134,7 +134,9 @@ impl<T> AdmissionQueue<T> {
         &self.jobs[idx]
     }
 
+    #[allow(clippy::expect_used)]
     pub fn remove(&mut self, idx: usize) -> QueuedJob<T> {
+        // hae-lint: allow(R3-forbidden-api) idx comes from select() on this same queue state; out-of-range is caller corruption
         self.jobs.remove(idx).expect("queue index in range")
     }
 
@@ -145,6 +147,7 @@ impl<T> AdmissionQueue<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

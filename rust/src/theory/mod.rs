@@ -58,7 +58,7 @@ pub fn realized_loss(events: &[EvictionEvent]) -> f64 {
 /// `d` lowest final scores available in `candidate_scores` (Low_d(S₁)).
 pub fn greedy_bound(candidate_scores: &[f32], d: usize) -> f64 {
     let mut v: Vec<f32> = candidate_scores.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     v.iter().take(d).map(|&s| s as f64).sum()
 }
 
