@@ -12,15 +12,16 @@
 #                        artifact-gated e2e suites run for real;
 #                        HAE_REQUIRE_ARTIFACTS=1 (CI) turns any
 #                        would-be skip into a failure.
-#   make bench-smoke   — the four assertion-bearing perf benches
+#   make bench-smoke   — the five assertion-bearing perf benches
 #                        (prefix cache byte-identity, page-pool ops,
 #                        decode primitives, serve-batch + tracing
-#                        overhead guardrail). HAE_BENCH_N scales
+#                        overhead guardrail, router affinity-vs-
+#                        round-robin routing). HAE_BENCH_N scales
 #                        samples. Each bench leaves a machine-readable
 #                        BENCH_<name>.json report (HAE_BENCH_DIR
 #                        overrides the destination).
 #   make bench-verify  — schema-check the BENCH_*.json reports and
-#                        require at least HAE_BENCH_MIN (default 4).
+#                        require at least HAE_BENCH_MIN (default 5).
 #   make bench-trend   — append the current BENCH_*.json run to the
 #                        trend history (benches/trend/data.json) and
 #                        gate headline metrics against the committed
@@ -33,7 +34,8 @@
 #                        forbidden APIs (R3) and metric/doc drift (R4).
 #                        Rule catalog in docs/STATIC_ANALYSIS.md.
 #   make stress        — repeat the threaded e2e suites (scheduler_e2e,
-#                        server_e2e) HAE_STRESS_N times (default 10)
+#                        server_e2e, router_e2e) HAE_STRESS_N times
+#                        (default 10)
 #                        with a high in-process test-thread count, to
 #                        shake out thread-interleaving bugs a single
 #                        green run can miss (docs/CONCURRENCY.md).
@@ -62,12 +64,13 @@ bench-smoke:
 	cargo bench --bench perf_page_pool
 	cargo bench --bench perf_decode
 	cargo bench --bench perf_serve_batch
+	cargo bench --bench perf_router
 
 stress:
 	@for i in $$(seq 1 $(HAE_STRESS_N)); do \
 		echo "=== stress round $$i/$(HAE_STRESS_N) ==="; \
 		cargo test -q --test scheduler_e2e --test server_e2e \
-			-- --test-threads 8 || exit 1; \
+			--test router_e2e -- --test-threads 8 || exit 1; \
 	done
 
 bench-verify:

@@ -1,0 +1,261 @@
+//! §Perf — prefix-affinity routing across engine replicas.
+//!
+//! Runtime-free **ring section** first: consistent-hash lookup rate and
+//! the remap fraction when one replica leaves a 4-ring (the
+//! consistent-hashing property: ~K/N of K keys move, not all of them).
+//!
+//! With artifacts, the **routing comparison**: a Zipfian shared-image QA
+//! mix (a few popular images dominate, a long tail of rare ones) driven
+//! at `--replicas 2` under the affinity router vs the round-robin
+//! control arm, plus a single-replica reference. Affinity sends every
+//! request naming one image to the replica whose prefix cache holds it,
+//! so the 2-replica hit rate should stay near the single-replica one;
+//! round-robin splits each image across both pools and pays the cold
+//! prefill once per (image, replica) pair.
+//!
+//! Acceptance (CI-gated here, trended by `make bench-trend`):
+//!   * affinity hit rate >= 0.9 x the single-replica hit rate
+//!   * affinity hit rate strictly above round-robin's
+//!
+//! Emits `BENCH_perf_router.json` with `prefix_hit_rate_affinity`,
+//! `prefix_hit_rate_round_robin`, `prefix_hit_rate_single` and
+//! `shed_total` (no shedding is configured, so a non-zero count here
+//! means the router shed traffic it was never asked to).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use hae_serve::harness::*;
+use hae_serve::obs::BenchReport;
+use hae_serve::router::{HashRing, RouterPolicy, DEFAULT_VNODES};
+use hae_serve::server::client_request;
+use hae_serve::util::json::Json;
+
+/// xorshift64* — deterministic request-stream randomness (no rand crate).
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Zipf(s) sampler over ranks `0..n` via the precomputed CDF — rank 0 is
+/// the most popular image.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let weights: Vec<f64> = (1..=n).map(|r| 1.0 / (r as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut XorShift) -> usize {
+        let u = rng.next_f64();
+        self.cdf.iter().position(|&c| u <= c).unwrap_or(self.cdf.len() - 1)
+    }
+}
+
+/// Ring microbench: lookup rate over a 4-replica ring and the fraction of
+/// keys that remap when one replica leaves. Runtime-free.
+fn ring_section(report: &mut BenchReport) {
+    let ring = HashRing::new(4, DEFAULT_VNODES);
+    let keys: Vec<u64> = (0..200_000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect();
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for &k in &keys {
+        acc = acc.wrapping_add(ring.primary(k).unwrap_or(0) as u64);
+    }
+    let lookup_mops = keys.len() as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    // keep `acc` observable so the loop cannot be optimised away
+    assert!(acc > 0, "degenerate ring ownership");
+
+    let mut less = ring.clone();
+    less.remove(2);
+    let moved = keys
+        .iter()
+        .filter(|&&k| ring.primary(k) != less.primary(k))
+        .count();
+    let remap_frac = moved as f64 / keys.len() as f64;
+
+    println!(
+        "## consistent-hash ring (4 replicas x {} vnodes)\n\
+         lookup: {:.1} Mops/s over {} keys\n\
+         removing 1 of 4 replicas remaps {:.1}% of keys (ideal 25%)",
+        DEFAULT_VNODES,
+        lookup_mops,
+        keys.len(),
+        remap_frac * 100.0
+    );
+    report.metric("ring_lookup_mops", lookup_mops, "Mops/s");
+    report.metric("ring_remap_frac", remap_frac, "frac");
+    assert!(
+        remap_frac < 0.5,
+        "removing 1 of 4 replicas remapped {:.0}% of keys — the ring lost \
+         the consistent-hashing property",
+        remap_frac * 100.0
+    );
+}
+
+/// Drive the Zipfian shared-image QA mix: `clients` connections, each
+/// sending `per_client` requests whose image is drawn Zipf(s) from
+/// `images` ranks. Deterministic per (client, i). Returns the number of
+/// failed requests.
+fn drive_zipf(addr: &str, clients: usize, per_client: usize, images: usize) -> usize {
+    let (tx, rx) = mpsc::channel();
+    for c in 0..clients {
+        let tx = tx.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let zipf = Zipf::new(images, 1.1);
+            let mut rng = XorShift(0xC0FFEE ^ ((c as u64 + 1) << 17));
+            for i in 0..per_client {
+                let image = zipf.sample(&mut rng);
+                let q = if (c + i) % 2 == 0 { "color" } else { "shape" };
+                let line = format!(
+                    r#"{{"id": {}, "kind": "qa", "image_seed": {}, "q": "{}"}}"#,
+                    c * 1000 + i,
+                    image + 1,
+                    q
+                );
+                let resp = client_request(&addr, &line).unwrap_or_default();
+                let ok = Json::parse(&resp)
+                    .map(|j| j.get("error").is_none())
+                    .unwrap_or(false);
+                tx.send(ok).unwrap();
+            }
+        });
+    }
+    drop(tx);
+    rx.iter().filter(|ok| !ok).count()
+}
+
+/// One routing arm: spawn the tier, drive the mix, read the (merged)
+/// stats snapshot back. Returns (prefix_hit_rate, shed_total).
+fn run_arm(
+    replicas: usize,
+    router_policy: RouterPolicy,
+    widest: usize,
+    clients: usize,
+    per_client: usize,
+    images: usize,
+) -> (f64, f64) {
+    let (handle, addr) = spawn_server_replicas(ServerRig {
+        batch: widest,
+        replicas,
+        router_policy,
+        ..ServerRig::default()
+    });
+    assert!(wait_listening(&addr), "server on {}", addr);
+    let errors = drive_zipf(&addr, clients, per_client, images);
+    let stats = client_request(&addr, r#"{"kind": "stats"}"#)
+        .ok()
+        .and_then(|r| Json::parse(&r).ok());
+    let _ = client_request(&addr, "shutdown");
+    let _ = handle.join();
+    assert_eq!(errors, 0, "routing arm saw failed requests");
+    let stats = stats.expect("stats snapshot");
+    let hit_rate = stats
+        .get("prefix_hit_rate")
+        .and_then(|v| v.as_f64())
+        .expect("stats carry prefix_hit_rate");
+    let shed = stats
+        .path(&["router", "shed_total"])
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    (hit_rate, shed)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::new("perf_router");
+    ring_section(&mut report);
+
+    if load_runtime().is_err() {
+        eprintln!(
+            "artifacts not built (run `make artifacts`) — skipping the\n\
+             routing comparison"
+        );
+        let path = report.write().expect("write BENCH_perf_router.json");
+        println!("\nbench report: {}", path.display());
+        return Ok(());
+    }
+
+    let widest = widest_batch();
+    let clients = 4usize;
+    let per_client = bench_n(6) * 2;
+    let images = 12usize;
+    report.engine_threads(2);
+    report.config("clients", clients);
+    report.config("per_client", per_client);
+    report.config("images", images);
+    report.config("zipf_s", "1.1");
+
+    let (single, _) = run_arm(1, RouterPolicy::Affinity, widest, clients, per_client, images);
+    let (affinity, shed) =
+        run_arm(2, RouterPolicy::Affinity, widest, clients, per_client, images);
+    let (round_robin, _) =
+        run_arm(2, RouterPolicy::RoundRobin, widest, clients, per_client, images);
+
+    let mut table = Table::new(
+        &format!(
+            "Zipfian shared-image routing: {} clients x {} requests, {} images",
+            clients, per_client, images
+        ),
+        &["arm", "replicas", "prefix hit rate"],
+    );
+    table.row(vec!["single".into(), "1".into(), pct(single)]);
+    table.row(vec!["affinity".into(), "2".into(), pct(affinity)]);
+    table.row(vec!["round_robin".into(), "2".into(), pct(round_robin)]);
+    table.print();
+    println!(
+        "\n(affinity pins each image to one replica's prefix cache, so the\n\
+         2-replica hit rate stays near the 1-replica reference; round-robin\n\
+         pays the cold prefill once per (image, replica) pair)"
+    );
+
+    report.config("routing_sections", "true");
+    report.metric("prefix_hit_rate_single", single, "frac");
+    report.metric("prefix_hit_rate_affinity", affinity, "frac");
+    report.metric("prefix_hit_rate_round_robin", round_robin, "frac");
+    report.metric("shed_total", shed, "count");
+
+    assert!(
+        affinity >= single * 0.9,
+        "2-replica affinity hit rate {:.3} fell below 0.9x the single-replica \
+         reference {:.3} — the ring is splitting images across replicas",
+        affinity,
+        single
+    );
+    assert!(
+        affinity > round_robin,
+        "affinity hit rate {:.3} is not above round-robin's {:.3} — the \
+         router's placement is not buying prefix locality",
+        affinity,
+        round_robin
+    );
+    assert_eq!(shed, 0.0, "router shed traffic with no shed bound configured");
+
+    let path = report.write().expect("write BENCH_perf_router.json");
+    println!("\nbench report: {}", path.display());
+    Ok(())
+}

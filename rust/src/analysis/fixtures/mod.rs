@@ -48,6 +48,18 @@ fn bad(&self) {
 }
 "#;
 
+/// R1: a router replica-state lock held across a dispatch into a
+/// replica's ingest channel (line 4). The routing tier keeps replica
+/// health in lock-free atomics so this guard shape must never exist;
+/// a full replica mailbox would block the send with the lock held.
+pub const R1_ROUTER_LOCK_ACROSS_DISPATCH: &str = r#"
+fn bad(&self) {
+    let state = self.replicas.lock().unwrap();
+    state.links[0].tx.send(job).unwrap();
+    drop(state);
+}
+"#;
+
 /// R2: a retain with no release path anywhere in the module (line 4).
 pub const R2_RETAIN_WITHOUT_RELEASE: &str = r#"
 fn fork(&mut self, pages: &[usize]) {

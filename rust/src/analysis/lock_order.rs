@@ -10,19 +10,31 @@
 //! Matching is lexical, tuned to this tree's idioms: pool locks go
 //! through `cache::paged::lock_pool` / `lock_profiled` or a `.lock()`
 //! whose receiver chain names a pool; obs access goes through
-//! `.record(…)` / `.event(…)` / `.inner()` on an `obs`-named chain.
+//! `.record(…)` / `.event(…)` / `.inner()` on an `obs`-named chain;
+//! router replica-state locks are a `.lock()` whose chain names a
+//! replica or the router (the serving tier keeps replica health in
+//! lock-free atomics precisely so no such guard exists — if one ever
+//! appears, it must not be held across a dispatch into a replica's
+//! ingest channel, where a full mailbox blocks the router).
 //! A `let` whose right-hand side spans lines is not tracked — `cargo
 //! fmt` keeps the call opener on the binding line everywhere we care.
 
 use super::lexer::{chain_before, has_call_token, SourceFile};
 use super::{Finding, R1};
 
+#[derive(PartialEq, Eq, Clone, Copy)]
+enum GuardKind {
+    Pool,
+    Obs,
+    /// Router replica-state lock (replica table, health map, …).
+    Router,
+}
+
 struct Guard {
     /// Binding name, empty for patterns we cannot name (tuples etc.);
     /// unnamed guards still expire by depth.
     name: String,
-    /// true = PagePool guard, false = Obs guard.
-    pool: bool,
+    kind: GuardKind,
     /// Brace depth at the start of the binding line.
     depth: usize,
 }
@@ -33,6 +45,13 @@ fn acquires_pool(code: &str) -> bool {
     }
     code.match_indices(".lock()")
         .any(|(i, _)| chain_before(code, i).to_ascii_lowercase().contains("pool"))
+}
+
+fn acquires_router(code: &str) -> bool {
+    code.match_indices(".lock()").any(|(i, _)| {
+        let chain = chain_before(code, i).to_ascii_lowercase();
+        !chain.contains("pool") && (chain.contains("replica") || chain.contains("router"))
+    })
 }
 
 fn takes_obs(code: &str, in_obs_file: bool) -> bool {
@@ -105,8 +124,9 @@ pub fn check(file: &SourceFile) -> Vec<Finding> {
         guards.retain(|g| line.depth > g.depth || (line.depth == g.depth && !closes));
         guards.retain(|g| !drops_name(code, &g.name));
 
-        let pool_live = guards.iter().any(|g| g.pool);
-        let obs_live = guards.iter().any(|g| !g.pool);
+        let pool_live = guards.iter().any(|g| g.kind == GuardKind::Pool);
+        let obs_live = guards.iter().any(|g| g.kind == GuardKind::Obs);
+        let router_live = guards.iter().any(|g| g.kind == GuardKind::Router);
         let acq_pool = acquires_pool(code);
         let obs_touch = takes_obs(code, in_obs_file);
         let ln = idx + 1;
@@ -147,11 +167,29 @@ pub fn check(file: &SourceFile) -> Vec<Finding> {
                 hint: "drop the guard before crossing the device channel (docs/CONCURRENCY.md)",
             });
         }
+        // The routing-tier discipline: a replica ingest channel's send
+        // blocks when that replica's mailbox is full, so holding any
+        // router replica-state lock across it stalls every other
+        // replica's traffic (and can deadlock against a replica that
+        // needs that lock to drain). docs/SERVING.md requires health to
+        // stay in atomics; this catches the lock that sneaks back in.
+        if router_live && code.contains(".send(") {
+            findings.push(Finding {
+                file: file.path.clone(),
+                line: ln,
+                rule: R1,
+                message: "router replica-state lock held across a dispatch into a replica ingest channel"
+                    .to_string(),
+                hint: "snapshot under the lock, drop it, then send (docs/SERVING.md)",
+            });
+        }
         if let Some((name, rhs)) = guard_binding(code) {
             if acquires_pool(rhs) {
-                guards.push(Guard { name, pool: true, depth: line.depth });
+                guards.push(Guard { name, kind: GuardKind::Pool, depth: line.depth });
             } else if binds_obs_guard(rhs, in_obs_file) {
-                guards.push(Guard { name, pool: false, depth: line.depth });
+                guards.push(Guard { name, kind: GuardKind::Obs, depth: line.depth });
+            } else if acquires_router(rhs) {
+                guards.push(Guard { name, kind: GuardKind::Router, depth: line.depth });
             }
         }
     }
@@ -199,6 +237,38 @@ mod tests {
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].line, 4);
         assert!(f[0].message.contains("send"));
+    }
+
+    #[test]
+    fn router_lock_across_dispatch_fires() {
+        let f = check(&parse(
+            "rust/src/router/fixture.rs",
+            fixtures::R1_ROUTER_LOCK_ACROSS_DISPATCH,
+            false,
+        ));
+        assert_eq!(f.len(), 1, "got: {f:?}");
+        assert_eq!(f[0].rule, R1);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("replica ingest channel"));
+    }
+
+    #[test]
+    fn snapshot_then_send_is_clean() {
+        // the sanctioned shape: copy what you need under the lock, drop
+        // it, then dispatch
+        let src = "fn ok(&self) {\n    let state = self.replicas.lock().unwrap();\n    let tx = state.links[0].tx.clone();\n    drop(state);\n    tx.send(job).unwrap();\n}\n";
+        let f = check(&parse("rust/src/router/fixture.rs", src, false));
+        assert!(f.is_empty(), "unexpected: {f:?}");
+    }
+
+    #[test]
+    fn pool_chain_lock_is_not_a_router_guard() {
+        // "replica_pool.lock()" is a pool lock; sending under it must
+        // report the device-channel message, not the router one
+        let src = "fn bad(&self) {\n    let pool = self.replica_pool.lock().unwrap();\n    self.tx.send(pool.free_pages()).ok();\n    drop(pool);\n}\n";
+        let f = check(&parse("rust/src/router/fixture.rs", src, false));
+        assert_eq!(f.len(), 1, "got: {f:?}");
+        assert!(f[0].message.contains("device call or channel send"));
     }
 
     #[test]

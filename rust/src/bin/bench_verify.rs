@@ -2,7 +2,7 @@
 //!
 //! `make bench-verify` (and the CI bench-smoke job) runs this after
 //! `make bench-smoke`: every report must match the schema in
-//! `obs::bench_report`, and at least `HAE_BENCH_MIN` (default 4 — one per
+//! `obs::bench_report`, and at least `HAE_BENCH_MIN` (default 5 — one per
 //! perf bench) must exist. Exit status is the whole interface so the
 //! Makefile/CI can gate on it; the listing doubles as a human summary.
 
@@ -13,7 +13,7 @@ fn main() {
     let min: usize = std::env::var("HAE_BENCH_MIN")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(4);
+        .unwrap_or(5);
     let dir = bench_dir();
     let mut names: Vec<_> = match std::fs::read_dir(&dir) {
         Ok(rd) => rd

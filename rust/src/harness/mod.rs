@@ -15,7 +15,8 @@ use crate::coordinator::{ActiveRequest, Engine, EngineConfig};
 use crate::eval::{fidelity, Fidelity};
 use crate::runtime::Runtime;
 use crate::scheduler::SchedPolicy;
-use crate::server::{serve_on, ServerConfig};
+use crate::router::RouterPolicy;
+use crate::server::{serve_replicas_on, ServerConfig};
 use crate::workload::{Request, StoryGrammar};
 
 /// Artifact directory: $HAE_ARTIFACTS or ./artifacts.
@@ -109,6 +110,58 @@ pub fn spawn_server(
     prefix_cache: bool,
     engine_threads: usize,
 ) -> (std::thread::JoinHandle<()>, String) {
+    spawn_server_replicas(ServerRig {
+        policy,
+        batch,
+        kv_budget,
+        sched_policy,
+        prefix_cache,
+        engine_threads,
+        ..ServerRig::default()
+    })
+}
+
+/// Knobs for [`spawn_server_replicas`] — `spawn_server`'s parameter list
+/// plus the routing tier's, with defaults matching the single-replica
+/// harness so call sites only name what they exercise.
+pub struct ServerRig {
+    pub policy: PolicyKind,
+    pub batch: usize,
+    pub kv_budget: Option<usize>,
+    pub sched_policy: SchedPolicy,
+    pub prefix_cache: bool,
+    pub engine_threads: usize,
+    pub replicas: usize,
+    pub queue_depth: usize,
+    pub router_policy: RouterPolicy,
+    pub shed_queue: Option<usize>,
+    pub spill_occupancy: Option<f64>,
+}
+
+impl Default for ServerRig {
+    fn default() -> Self {
+        ServerRig {
+            policy: PolicyKind::hae_default(),
+            batch: 1,
+            kv_budget: None,
+            sched_policy: SchedPolicy::Fifo,
+            prefix_cache: true,
+            engine_threads: 2,
+            replicas: 1,
+            queue_depth: 64,
+            router_policy: RouterPolicy::Affinity,
+            shed_queue: None,
+            spill_occupancy: None,
+        }
+    }
+}
+
+/// [`spawn_server`] generalized to N replicas behind one listener — the
+/// same ephemeral-port scheme, one engine (and device thread) per
+/// replica, all built from the same artifact dir. Shutdown drains every
+/// replica scheduler thread before `serve_replicas_on` returns, so a
+/// `join()` on the returned handle proves the whole tier exited.
+pub fn spawn_server_replicas(rig: ServerRig) -> (std::thread::JoinHandle<()>, String) {
     let listener =
         std::net::TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral port");
     let addr = listener
@@ -117,25 +170,39 @@ pub fn spawn_server(
         .to_string();
     let cfg_addr = addr.clone();
     let handle = std::thread::spawn(move || {
-        // the engine spawns its own device thread; the PJRT client lives
-        // there (it is not Send), so construction can happen anywhere
-        let engine = Engine::from_artifact_dir(
-            &artifact_dir(),
-            EngineConfig { policy, batch, prefix_cache, ..EngineConfig::default() },
-        )
-        .expect("engine for compiled batch");
+        // each engine spawns its own device thread; the PJRT client
+        // lives there (it is not Send), so construction can happen
+        // anywhere
+        let engines: Vec<Engine> = (0..rig.replicas.max(1))
+            .map(|_| {
+                Engine::from_artifact_dir(
+                    &artifact_dir(),
+                    EngineConfig {
+                        policy: rig.policy.clone(),
+                        batch: rig.batch,
+                        prefix_cache: rig.prefix_cache,
+                        ..EngineConfig::default()
+                    },
+                )
+                .expect("engine for compiled batch")
+            })
+            .collect();
         let grammar = load_grammar(&artifact_dir());
         let cfg = ServerConfig {
             addr: cfg_addr,
-            queue_depth: 64,
-            kv_budget,
-            sched_policy,
-            engine_threads,
+            queue_depth: rig.queue_depth,
+            kv_budget: rig.kv_budget,
+            sched_policy: rig.sched_policy,
+            engine_threads: rig.engine_threads,
+            router_policy: rig.router_policy,
+            shed_queue: rig.shed_queue,
+            spill_occupancy: rig.spill_occupancy,
             ..ServerConfig::default()
         };
         // surface engine errors as a thread panic so callers see the
         // root cause on join() instead of a silent dead server
-        serve_on(engine, listener, cfg, grammar).expect("serve exited with error");
+        serve_replicas_on(engines, listener, cfg, grammar)
+            .expect("serve exited with error");
     });
     (handle, addr)
 }

@@ -16,6 +16,7 @@ pub mod harness;
 pub mod model;
 pub mod obs;
 pub mod prefix;
+pub mod router;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

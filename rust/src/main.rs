@@ -19,7 +19,8 @@ use hae_serve::harness;
 use hae_serve::model::vocab;
 use hae_serve::runtime::Runtime;
 use hae_serve::scheduler::{parse_kv_budget, SchedPolicy, SloTable};
-use hae_serve::server::{serve, ServerConfig};
+use hae_serve::router::RouterPolicy;
+use hae_serve::server::{serve_replicas, ServerConfig};
 use hae_serve::util::args::Args;
 use hae_serve::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
 
@@ -58,6 +59,19 @@ const USAGE: &str = "usage: hae-serve <info|generate|serve|analyze> [options]
                     >=2 = pipelined rounds overlapping host work (reply
                     delivery, ingest, lane backfill) with the device
                     window (default 2)
+  --replicas N      serve: engine replicas behind one listener, each with
+                    its own page pool, prefix cache and device thread;
+                    the router places requests by vision-segment content
+                    hash on a consistent-hash ring (default 1)
+  --router P        serve: affinity | round_robin — placement policy for
+                    workload lines (round_robin is the bench control arm;
+                    default affinity)
+  --shed-queue N    serve: shed with a typed {\"kind\":\"error\",
+                    \"reason\":\"shed\"} reply when the target replica's
+                    admission depth reaches N (default: never shed)
+  --spill-occupancy F serve: spill affinity traffic to the ring's second
+                    choice when the primary's pool occupancy >= F
+                    (a fraction in 0..=1; default: never spill)
   --verbose         generate: print full token streams";
 
 fn main() -> Result<()> {
@@ -252,7 +266,17 @@ fn generate(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
 }
 
 fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
-    let (engine, grammar) = build_engine(artifact_dir, args)?;
+    let replicas = args.usize("replicas", 1);
+    if replicas == 0 {
+        return Err(anyhow!("bad --replicas 0 (accepted: an integer ≥ 1)"));
+    }
+    // one engine per replica — each owns its own page pool, prefix cache
+    // and device thread; the grammar is shared (read-only)
+    let (first, grammar) = build_engine(artifact_dir, args)?;
+    let mut engines = vec![first];
+    for _ in 1..replicas {
+        engines.push(build_engine(artifact_dir, args)?.0);
+    }
     let sched_policy = SchedPolicy::parse(args.get_or("sched-policy", "fifo"))
         .ok_or_else(|| anyhow!("unknown --sched-policy (fifo|priority)"))?;
     let kv_budget = kv_budget_arg(args)?;
@@ -264,6 +288,31 @@ fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
         Some(spec) => SloTable::parse(spec).map_err(|e| anyhow!(e))?,
         None => SloTable::default(),
     };
+    let router_policy = {
+        let spec = args.get_or("router", "affinity");
+        RouterPolicy::parse(spec).ok_or_else(|| {
+            anyhow!("bad --router '{}' (accepted: {})", spec, RouterPolicy::accepted())
+        })?
+    };
+    let shed_queue = args.get("shed-queue").map(|spec| {
+        spec.parse::<usize>()
+            .map_err(|_| anyhow!("bad --shed-queue '{}' (accepted: an integer ≥ 0)", spec))
+    });
+    let shed_queue = shed_queue.transpose()?;
+    let spill_occupancy = args
+        .get("spill-occupancy")
+        .map(|spec| {
+            spec.parse::<f64>()
+                .ok()
+                .filter(|f| (0.0..=1.0).contains(f))
+                .ok_or_else(|| {
+                    anyhow!(
+                        "bad --spill-occupancy '{}' (accepted: a fraction in 0..=1)",
+                        spec
+                    )
+                })
+        })
+        .transpose()?;
     let cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
         queue_depth: args.usize("queue", 64),
@@ -271,8 +320,11 @@ fn run_server(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {
         sched_policy,
         engine_threads,
         slo,
+        router_policy,
+        shed_queue,
+        spill_occupancy,
     };
-    serve(engine, cfg, grammar)
+    serve_replicas(engines, cfg, grammar)
 }
 
 fn analyze(artifact_dir: &std::path::Path, args: &Args) -> Result<()> {

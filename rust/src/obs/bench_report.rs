@@ -193,6 +193,30 @@ pub fn schema_problems(j: &Json) -> Vec<String> {
                     }
                 }
             }
+            // same contract for the routing bench: once the Zipfian
+            // comparison ran (config.routing_sections), its headline
+            // keys must all be present
+            let routing_sections = j
+                .path(&["config", "routing_sections"])
+                .and_then(|v| v.as_str())
+                == Some("true");
+            if j.get("bench").and_then(|v| v.as_str()) == Some("perf_router")
+                && routing_sections
+            {
+                for key in [
+                    "prefix_hit_rate_affinity",
+                    "prefix_hit_rate_round_robin",
+                    "prefix_hit_rate_single",
+                    "shed_total",
+                ] {
+                    if !m.contains_key(key) {
+                        out.push(format!(
+                            "perf_router with routing_sections misses metric '{}'",
+                            key
+                        ));
+                    }
+                }
+            }
         }
     }
     out
@@ -243,6 +267,25 @@ mod tests {
         // without the flag (artifacts absent) the keys are optional
         let mut bare = BenchReport::new("serve_batch");
         bare.metric("lane_sync_full_us_per_step", 1.0, "us");
+        assert!(schema_problems(&bare.to_json()).is_empty());
+    }
+
+    #[test]
+    fn perf_router_routing_sections_requires_headline_keys() {
+        let mut r = BenchReport::new("perf_router");
+        r.config("routing_sections", "true");
+        r.metric("ring_lookup_mops", 5.0, "Mops/s");
+        let probs = schema_problems(&r.to_json());
+        assert_eq!(probs.len(), 4, "one problem per missing key: {:?}", probs);
+        r.metric("prefix_hit_rate_affinity", 0.8, "frac")
+            .metric("prefix_hit_rate_round_robin", 0.5, "frac")
+            .metric("prefix_hit_rate_single", 0.85, "frac")
+            .metric("shed_total", 0.0, "count");
+        assert!(schema_problems(&r.to_json()).is_empty());
+        // without the flag (artifacts absent, ring section only) the
+        // routing keys are optional
+        let mut bare = BenchReport::new("perf_router");
+        bare.metric("ring_lookup_mops", 5.0, "Mops/s");
         assert!(schema_problems(&bare.to_json()).is_empty());
     }
 

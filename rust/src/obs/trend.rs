@@ -42,6 +42,7 @@ pub const HEADLINES: &[Headline] = &[
     Headline { bench: "serve_batch", metric: "host_device_overlap_frac", higher_is_better: true },
     Headline { bench: "serve_batch", metric: "ttft_p50_ms_pipelined", higher_is_better: false },
     Headline { bench: "prefix_cache", metric: "warm_prefill_s", higher_is_better: false },
+    Headline { bench: "perf_router", metric: "prefix_hit_rate_affinity", higher_is_better: true },
 ];
 
 /// Default relative-change gate (`HAE_TREND_THRESHOLD` overrides): a

@@ -117,6 +117,20 @@ pub fn request_key(req: &Request) -> Vec<KeySym> {
     key
 }
 
+/// The routing tier's affinity key: the content hash of the request's
+/// *first* vision segment, extracted through [`request_key`] so "same
+/// image" means exactly the same thing to the router as to the prefix
+/// cache — a router placement decision and a prefix-cache hit can never
+/// disagree about identity. `None` for text-only prompts, which have no
+/// stable affinity worth routing on (the router falls back to
+/// least-loaded placement).
+pub fn vision_affinity_hash(req: &Request) -> Option<u64> {
+    request_key(req).into_iter().find_map(|sym| match sym {
+        KeySym::Vision(h) => Some(h),
+        KeySym::Text(_) => None,
+    })
+}
+
 /// Seed of the fingerprint stream — distinct from the radix-key hash so
 /// a collision must happen in two independent 64-bit hashes at once.
 const FP_SEED: u64 = FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15;

@@ -1,0 +1,1003 @@
+//! Prefix-affinity routing tier: N in-process engine replicas behind one
+//! listener.
+//!
+//! The router owns the serve loop's front half. Connection threads feed
+//! the one shared mailbox exactly as before; the router thread consumes
+//! it, classifies each raw line, and forwards the line — unmodified —
+//! into the chosen replica's own ingest channel, where the existing
+//! per-replica serve loop (`server::replica_loop`) parses and schedules
+//! it exactly as the single-engine server always has.
+//!
+//! # Placement
+//!
+//! * **Affinity** (default): requests carrying an `image_seed` (or a
+//!   `seed`, which makes the whole prompt deterministic) are synthesized
+//!   once at the router and keyed by the prompt's first vision-segment
+//!   content hash ([`crate::prefix::vision_affinity_hash`] — the same
+//!   extraction the prefix cache uses, so the router and the cache can
+//!   never disagree about image identity). The hash is looked up on a
+//!   consistent [`HashRing`], so every question about one image lands on
+//!   the replica whose prefix cache already holds that image's unpruned
+//!   visual prefix. Text-only / non-deterministic requests fall back to
+//!   least-loaded placement (router backlog + scheduler queue + live
+//!   lanes).
+//! * **Round-robin** (`--router round_robin`): the control arm for the
+//!   routing bench — placement ignores content, so the shared-image
+//!   workload's prefix hit rate dilutes across replicas.
+//!
+//! # Robustness
+//!
+//! * **Load shedding** (`--shed-queue N`): when the target replica's
+//!   admission depth (router backlog + scheduler queue) is at the bound,
+//!   the router answers `{"kind":"error","reason":"shed"}` immediately
+//!   instead of queueing — the client hears "back off" in microseconds
+//!   rather than timing out behind a deep queue.
+//! * **Spill** (`--spill-occupancy F`): when the primary's page-pool
+//!   occupancy is at or above `F`, affinity traffic routes to the ring's
+//!   second choice — a *stable* alternate per image, so spilled traffic
+//!   builds a warm prefix on exactly one other replica instead of
+//!   spraying cold prefills everywhere.
+//!
+//! Both are counted and exposed as `hae_router_*` Prometheus series
+//! (docs/OBSERVABILITY.md), and `{"kind":"stats"}` at N>1 returns a
+//! merged view that sums replica counters, recomputes the aggregate
+//! prefix hit rate, and carries every replica's full snapshot under
+//! `per_replica` (docs/SERVING.md).
+//!
+//! # Threading (docs/CONCURRENCY.md)
+//!
+//! The router runs on the serve thread and owns nothing but the ring,
+//! its counters and the replica senders; per-replica health is published
+//! by replica threads through lock-free atomics ([`ReplicaHealth`]).
+//! The router holds **no lock across a send into a replica channel** —
+//! there is no lock to hold — and hae-lint R1 enforces that shape for
+//! future edits (docs/STATIC_ANALYSIS.md).
+
+pub mod ring;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::model::ModelMeta;
+use crate::obs::prometheus::{counter, gauge, labeled_gauge};
+use crate::server::{error_reply, synthesize, Job};
+use crate::util::json::{num, obj, s, Json};
+use crate::workload::{RequestBuilder, StoryGrammar};
+
+pub use ring::{HashRing, DEFAULT_VNODES};
+
+/// How long a control fan-out waits for one replica's reply before the
+/// merged view proceeds without it (a replica deep in a decode step
+/// answers at its next ingest drain, normally well under this).
+const CONTROL_REPLY_TIMEOUT: Duration = Duration::from_secs(5);
+
+const SHUTDOWN_OK: &str = "{\"ok\":true,\"shutdown\":true}";
+
+/// Placement policy for workload lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Consistent-hash on the vision-segment content hash; least-loaded
+    /// for text-only requests.
+    Affinity,
+    /// Ignore content entirely — the bench control arm.
+    RoundRobin,
+}
+
+impl RouterPolicy {
+    pub fn parse(sp: &str) -> Option<RouterPolicy> {
+        match sp {
+            "affinity" => Some(RouterPolicy::Affinity),
+            "round_robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn accepted() -> &'static str {
+        "affinity, round_robin"
+    }
+}
+
+/// Router knobs (`--router`, `--shed-queue`, `--spill-occupancy`).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub policy: RouterPolicy,
+    /// shed when the target replica's admission depth reaches this
+    /// (None = never shed; a full replica channel then blocks instead)
+    pub shed_queue: Option<usize>,
+    /// spill affinity traffic to the ring's second choice when the
+    /// primary's pool occupancy is at or above this fraction (None =
+    /// never spill)
+    pub spill_occupancy: Option<f64>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { policy: RouterPolicy::Affinity, shed_queue: None, spill_occupancy: None }
+    }
+}
+
+/// Per-replica health, published by the replica's scheduler thread once
+/// per round and read lock-free by the router for shed / spill /
+/// least-loaded decisions. Atomics, not a mutex: the router must never
+/// hold a replica-state lock across a dispatch into a replica channel
+/// (hae-lint R1), and with atomics there is no lock to misuse.
+#[derive(Debug, Default)]
+pub struct ReplicaHealth {
+    /// jobs forwarded by the router, not yet received by the replica loop
+    backlog: AtomicUsize,
+    /// scheduler admission-queue depth at last publish
+    queued: AtomicUsize,
+    /// live decode lanes at last publish
+    active: AtomicUsize,
+    pool_in_use: AtomicUsize,
+    pool_pages: AtomicUsize,
+    /// worst per-class SLO attainment × 1000 (1000 = all met / no targets)
+    slo_milli: AtomicU64,
+}
+
+impl ReplicaHealth {
+    pub fn new() -> ReplicaHealth {
+        let h = ReplicaHealth::default();
+        h.slo_milli.store(1000, Ordering::Relaxed);
+        h
+    }
+
+    /// Router side: one job handed to this replica's channel.
+    pub fn enqueue(&self) {
+        self.backlog.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Replica side: one job received off the channel. Saturating — a
+    /// stray decrement must never wrap the gauge to usize::MAX.
+    pub fn dequeue(&self) {
+        let _ = self
+            .backlog
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    /// Replica side: publish one round's scheduler/pool snapshot.
+    pub fn publish(
+        &self,
+        queued: usize,
+        active: usize,
+        pool_in_use: usize,
+        pool_pages: usize,
+        slo_attainment: f64,
+    ) {
+        self.queued.store(queued, Ordering::Relaxed);
+        self.active.store(active, Ordering::Relaxed);
+        self.pool_in_use.store(pool_in_use, Ordering::Relaxed);
+        self.pool_pages.store(pool_pages, Ordering::Relaxed);
+        self.slo_milli.store((slo_attainment.clamp(0.0, 1.0) * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Requests between this replica and admission: router backlog plus
+    /// the scheduler queue — the quantity the shed bound is tested
+    /// against.
+    pub fn admission_depth(&self) -> usize {
+        self.backlog.load(Ordering::Relaxed) + self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Least-loaded score: everything queued or running.
+    pub fn load_score(&self) -> usize {
+        self.admission_depth() + self.active.load(Ordering::Relaxed)
+    }
+
+    /// Pool occupancy in [0,1]; 0 before the replica's first publish.
+    pub fn pool_occupancy(&self) -> f64 {
+        let pages = self.pool_pages.load(Ordering::Relaxed);
+        if pages == 0 {
+            return 0.0;
+        }
+        self.pool_in_use.load(Ordering::Relaxed) as f64 / pages as f64
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        self.slo_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+}
+
+/// The router's handle to one replica: its ingest channel plus its
+/// health block.
+pub struct ReplicaLink {
+    pub tx: mpsc::SyncSender<Job>,
+    pub health: Arc<ReplicaHealth>,
+}
+
+/// Routing-decision counters, owned by the router loop (single-threaded
+/// — plain integers, surfaced through merged stats and `hae_router_*`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RouterCounters {
+    pub shed_total: u64,
+    pub spill_total: u64,
+    pub routed_affinity: u64,
+    pub routed_least_loaded: u64,
+    pub routed_round_robin: u64,
+}
+
+impl RouterCounters {
+    /// The `"router"` block of the merged stats reply.
+    fn json(&self, replicas: usize) -> Json {
+        obj(vec![
+            ("replicas", num(replicas as f64)),
+            ("shed_total", num(self.shed_total as f64)),
+            ("spill_total", num(self.spill_total as f64)),
+            ("routed_affinity", num(self.routed_affinity as f64)),
+            ("routed_least_loaded", num(self.routed_least_loaded as f64)),
+            ("routed_round_robin", num(self.routed_round_robin as f64)),
+        ])
+    }
+}
+
+/// The typed shed reply — distinguishable from engine errors by
+/// `kind == "error"` + `reason == "shed"` so clients can back off
+/// instead of treating it as a request bug.
+fn shed_reply(id: Option<i64>) -> String {
+    let mut fields = vec![("kind", s("error")), ("reason", s("shed"))];
+    if let Some(id) = id {
+        fields.push(("id", num(id as f64)));
+    }
+    obj(fields).to_string_compact()
+}
+
+/// Replica flat-snapshot keys whose merged value is the sum across
+/// replicas (counters, and gauges with additive semantics — pages and
+/// bytes across N disjoint arenas add). Percentiles and rates are NOT
+/// summable; the hit rate is recomputed from the summed counts and
+/// everything else lives in `per_replica`.
+const SUM_KEYS: &[&str] = &[
+    "queue_depth",
+    "lanes_occupied",
+    "submitted",
+    "completed",
+    "failed",
+    "rejected_queue_full",
+    "rejected_kv_budget",
+    "decode_steps",
+    "extend_calls",
+    "live_kv_bytes",
+    "pool_pages",
+    "live_pages",
+    "free_pages",
+    "refcount_errors",
+    "prefix_hits",
+    "prefix_partial_hits",
+    "prefix_misses",
+    "prefix_entries",
+    "pages_shared",
+    "prefill_tokens_skipped",
+];
+
+/// (series, flat key, is_counter): the aggregate Prometheus series the
+/// merged exposition re-emits under the canonical names — summed across
+/// replicas, each name exactly once. Histogram and percentile families
+/// are per-replica quantities; scrape them from the `per_replica` stats
+/// block instead (docs/SERVING.md).
+const MERGED_SERIES: &[(&str, &str, bool)] = &[
+    ("hae_queue_depth", "queue_depth", false),
+    ("hae_lanes_occupied", "lanes_occupied", false),
+    ("hae_requests_submitted_total", "submitted", true),
+    ("hae_requests_completed_total", "completed", true),
+    ("hae_requests_failed_total", "failed", true),
+    ("hae_rejected_queue_full_total", "rejected_queue_full", true),
+    ("hae_rejected_kv_budget_total", "rejected_kv_budget", true),
+    ("hae_decode_steps_total", "decode_steps", true),
+    ("hae_live_kv_bytes", "live_kv_bytes", false),
+    ("hae_pool_pages", "pool_pages", false),
+    ("hae_live_pages", "live_pages", false),
+    ("hae_free_pages", "free_pages", false),
+    ("hae_refcount_errors_total", "refcount_errors", true),
+    ("hae_prefix_hits_total", "prefix_hits", true),
+    ("hae_prefix_partial_hits_total", "prefix_partial_hits", true),
+    ("hae_prefix_misses_total", "prefix_misses", true),
+    ("hae_prefix_entries", "prefix_entries", false),
+    ("hae_pages_shared", "pages_shared", false),
+    ("hae_prefill_tokens_skipped_total", "prefill_tokens_skipped", true),
+];
+
+fn sum_key(snaps: &[Json], key: &str) -> f64 {
+    snaps.iter().filter_map(|j| j.get(key).and_then(|v| v.as_f64())).sum()
+}
+
+/// Aggregate warm fraction, recomputed from the summed counts with the
+/// registry's own definition ((hits + partial) / consulting admissions).
+fn merged_hit_rate(snaps: &[Json]) -> f64 {
+    let warm = sum_key(snaps, "prefix_hits") + sum_key(snaps, "prefix_partial_hits");
+    let total = warm + sum_key(snaps, "prefix_misses");
+    if total == 0.0 {
+        0.0
+    } else {
+        warm / total
+    }
+}
+
+/// Send `line` to every replica on a private reply channel, collect the
+/// parsed replies (None for a replica that died or timed out — the
+/// merged view degrades instead of wedging the router).
+fn fan_out(links: &[ReplicaLink], line: &str) -> Vec<Option<Json>> {
+    let mut waits = Vec::with_capacity(links.len());
+    for link in links {
+        let (rtx, rrx) = mpsc::channel::<String>();
+        link.health.enqueue();
+        if link.tx.send(Job { line: line.to_string(), reply: rtx }).is_err() {
+            link.health.dequeue();
+        }
+        // a failed send dropped rtx, so the recv below errors immediately
+        waits.push(rrx);
+    }
+    waits
+        .into_iter()
+        .map(|rrx| {
+            rrx.recv_timeout(CONTROL_REPLY_TIMEOUT).ok().and_then(|l| Json::parse(&l).ok())
+        })
+        .collect()
+}
+
+/// Merged `{"kind":"stats"}` reply: summed flat counters, recomputed hit
+/// rate, the router block, and every replica's full snapshot.
+fn merged_stats_json(snaps: Vec<Json>, counters: &RouterCounters, replicas: usize) -> Json {
+    let mut fields: Vec<(&str, Json)> =
+        vec![("kind", s("stats")), ("replicas", num(replicas as f64))];
+    for &key in SUM_KEYS {
+        fields.push((key, num(sum_key(&snaps, key))));
+    }
+    fields.push(("prefix_hit_rate", num(merged_hit_rate(&snaps))));
+    fields.push(("router", counters.json(replicas)));
+    fields.push(("per_replica", Json::Arr(snaps)));
+    obj(fields)
+}
+
+/// Append the `hae_router_*` series: decision counters plus per-replica
+/// labeled health gauges. Emitted through the shared obs helpers so the
+/// exposition shape — and the R4 metric/doc diff — stay uniform.
+fn router_series(out: &mut String, c: &RouterCounters, links: &[ReplicaLink]) {
+    gauge(out, "hae_router_replicas", "engine replicas behind the router", links.len() as f64);
+    counter(out, "hae_router_shed_total", "requests answered with the typed shed reply", c.shed_total as f64);
+    counter(out, "hae_router_spill_total", "affinity requests spilled to the second ring choice", c.spill_total as f64);
+    counter(out, "hae_router_routed_affinity_total", "requests placed by consistent-hash affinity", c.routed_affinity as f64);
+    counter(out, "hae_router_routed_least_loaded_total", "requests placed least-loaded (no stable affinity key)", c.routed_least_loaded as f64);
+    counter(out, "hae_router_routed_round_robin_total", "requests placed round-robin (bench control arm)", c.routed_round_robin as f64);
+    let labels: Vec<String> = (0..links.len()).map(|i| i.to_string()).collect();
+    let depth_rows: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(links)
+        .map(|(l, link)| (l.as_str(), link.health.admission_depth() as f64))
+        .collect();
+    labeled_gauge(out, "hae_router_replica_queue_depth", "admission depth per replica (router backlog + scheduler queue)", "replica", &depth_rows);
+    let occ_rows: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(links)
+        .map(|(l, link)| (l.as_str(), link.health.pool_occupancy()))
+        .collect();
+    labeled_gauge(out, "hae_router_replica_pool_occupancy", "arena occupancy fraction per replica", "replica", &occ_rows);
+}
+
+/// Merged Prometheus body at N>1: the summable canonical series (each
+/// name once — scrapers must never see a duplicate family) plus the
+/// router series.
+fn merged_prometheus(snaps: &[Json], c: &RouterCounters, links: &[ReplicaLink]) -> String {
+    let mut body = String::new();
+    for &(series, key, is_counter) in MERGED_SERIES {
+        let v = sum_key(snaps, key);
+        if is_counter {
+            counter(&mut body, series, "summed across replicas", v);
+        } else {
+            gauge(&mut body, series, "summed across replicas", v);
+        }
+    }
+    gauge(&mut body, "hae_prefix_hit_rate", "warm fraction of cache-consulting admissions, all replicas", merged_hit_rate(snaps));
+    router_series(&mut body, c, links);
+    body
+}
+
+fn prometheus_reply(body: &str) -> String {
+    obj(vec![("kind", s("stats")), ("format", s("prometheus")), ("body", s(body))])
+        .to_string_compact()
+}
+
+/// Merged `{"kind":"trace"}` reply: concatenate every replica's retained
+/// events (each request's events live wholly on the replica that served
+/// it), re-sorted by timestamp; counts sum.
+fn merged_trace(replies: Vec<Option<Json>>) -> Json {
+    let mut count = 0.0;
+    let mut dropped = 0.0;
+    let mut events: Vec<Json> = Vec::new();
+    for r in replies.into_iter().flatten() {
+        count += r.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        dropped += r.get("dropped").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if let Json::Obj(mut m) = r {
+            if let Some(Json::Arr(ev)) = m.remove("events") {
+                events.extend(ev);
+            }
+        }
+    }
+    events.sort_by(|a, b| {
+        let ta = a.get("at_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let tb = b.get("at_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    obj(vec![
+        ("kind", s("trace")),
+        ("count", num(count)),
+        ("dropped", num(dropped)),
+        ("events", Json::Arr(events)),
+    ])
+}
+
+fn least_loaded(links: &[ReplicaLink]) -> usize {
+    links
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, l)| l.health.load_score())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// The router loop: consume the shared connection mailbox until a
+/// shutdown line, forwarding raw lines into replica ingest channels.
+/// Returns the decision counters (tests read them; the serve path reads
+/// them through merged stats before this returns).
+///
+/// At N == 1 every control verb is forwarded raw to the only replica, so
+/// the single-replica server's wire behavior is byte-identical to the
+/// pre-router server (the one addition: the Prometheus body grows the
+/// `hae_router_*` series).
+pub(crate) fn router_loop(
+    rx: mpsc::Receiver<Job>,
+    meta: &ModelMeta,
+    grammar: &StoryGrammar,
+    links: &[ReplicaLink],
+    cfg: &RouterConfig,
+) -> RouterCounters {
+    let n = links.len();
+    let ring = HashRing::new(n as u32, DEFAULT_VNODES);
+    // affinity synthesis only runs for lines carrying image_seed/seed,
+    // whose prompts do not depend on builder state — any seed works here
+    let mut builder = RequestBuilder::new(meta, grammar, 0xAFF1);
+    let mut counters = RouterCounters::default();
+    let mut rr_next = 0usize;
+
+    while let Ok(job) = rx.recv() {
+        if job.line.trim() == "shutdown" {
+            // broadcast so every replica drains; their acks go to dummy
+            // channels (the client hears ONE ok, from the router)
+            for link in links {
+                let (dtx, _drx) = mpsc::channel::<String>();
+                link.health.enqueue();
+                if link.tx.send(Job { line: "shutdown".into(), reply: dtx }).is_err() {
+                    link.health.dequeue();
+                }
+            }
+            let _ = job.reply.send(SHUTDOWN_OK.into());
+            break;
+        }
+        let parsed = Json::parse(&job.line).ok();
+        let kind = parsed.as_ref().and_then(|j| j.get("kind")).and_then(|v| v.as_str());
+        match kind {
+            Some("stats") => {
+                let prom = parsed.as_ref().and_then(|j| j.get("format")).and_then(|v| v.as_str())
+                    == Some("prometheus");
+                if n == 1 && !prom {
+                    forward(&links[0], job, cfg.shed_queue.is_some(), &mut counters);
+                } else if n == 1 {
+                    // unwrap the replica body and append the router series
+                    match fan_out(links, &job.line).pop().flatten() {
+                        Some(j) => {
+                            let mut body = j
+                                .get("body")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or("")
+                                .to_string();
+                            router_series(&mut body, &counters, links);
+                            let _ = job.reply.send(prometheus_reply(&body));
+                        }
+                        None => {
+                            let _ = job
+                                .reply
+                                .send(error_reply(None, "replica stats unavailable"));
+                        }
+                    }
+                } else {
+                    let snaps: Vec<Json> =
+                        fan_out(links, "{\"kind\":\"stats\"}").into_iter().flatten().collect();
+                    let reply = if prom {
+                        prometheus_reply(&merged_prometheus(&snaps, &counters, links))
+                    } else {
+                        merged_stats_json(snaps, &counters, n).to_string_compact()
+                    };
+                    let _ = job.reply.send(reply);
+                }
+                continue;
+            }
+            Some("trace") if n > 1 => {
+                let replies = fan_out(links, &job.line);
+                let _ = job.reply.send(merged_trace(replies).to_string_compact());
+                continue;
+            }
+            Some("profile") if n > 1 => {
+                let bodies: Vec<Json> =
+                    fan_out(links, &job.line).into_iter().flatten().collect();
+                let reply = obj(vec![
+                    ("kind", s("profile")),
+                    ("replicas", num(n as f64)),
+                    ("per_replica", Json::Arr(bodies)),
+                ]);
+                let _ = job.reply.send(reply.to_string_compact());
+                continue;
+            }
+            Some("trace") | Some("profile") => {
+                forward(&links[0], job, cfg.shed_queue.is_some(), &mut counters);
+                continue;
+            }
+            _ => {}
+        }
+
+        // workload line (or unparseable — the replica's ingest answers
+        // with the same bad-json error the single-engine server sends)
+        let id = parsed.as_ref().and_then(|j| j.get("id")).and_then(|v| v.as_i64());
+        let affinity = match (cfg.policy, parsed.as_ref()) {
+            (RouterPolicy::Affinity, Some(j))
+                if j.get("image_seed").is_some() || j.get("seed").is_some() =>
+            {
+                synthesize(j, meta, grammar, &mut builder)
+                    .ok()
+                    .and_then(|(_, req)| crate::prefix::vision_affinity_hash(&req))
+            }
+            _ => None,
+        };
+        let mut target = match cfg.policy {
+            RouterPolicy::RoundRobin => {
+                counters.routed_round_robin += 1;
+                let t = rr_next % n;
+                rr_next += 1;
+                t
+            }
+            RouterPolicy::Affinity => match affinity {
+                Some(h) => {
+                    counters.routed_affinity += 1;
+                    ring.primary(h).unwrap_or(0) as usize
+                }
+                None => {
+                    counters.routed_least_loaded += 1;
+                    least_loaded(links)
+                }
+            },
+        };
+        // spill: primary pool hot → the stable second choice per image
+        if let (Some(frac), Some(h)) = (cfg.spill_occupancy, affinity) {
+            if links[target].health.pool_occupancy() >= frac {
+                if let Some(second) = ring.second(h) {
+                    counters.spill_total += 1;
+                    target = second as usize;
+                }
+            }
+        }
+        // shed: answer immediately instead of queueing behind the bound
+        if let Some(bound) = cfg.shed_queue {
+            if links[target].health.admission_depth() >= bound {
+                counters.shed_total += 1;
+                let _ = job.reply.send(shed_reply(id));
+                continue;
+            }
+        }
+        // a false return means the job was shed at the full channel (the
+        // bound check races with the replica's drain; the channel is the
+        // backstop) or the replica is gone — both already answered
+        let _ = forward(&links[target], job, cfg.shed_queue.is_some(), &mut counters);
+    }
+    counters
+}
+
+/// Hand one job to a replica channel. With shedding armed a full channel
+/// sheds (the bound check races with the replica's drain, so the channel
+/// is the backstop); without it the router blocks — the single-replica
+/// default, matching the pre-router server's backpressure. Returns false
+/// when the job was shed or the replica is gone.
+fn forward(link: &ReplicaLink, job: Job, shed_on_full: bool, counters: &mut RouterCounters) -> bool {
+    link.health.enqueue();
+    match link.tx.try_send(job) {
+        Ok(()) => true,
+        Err(mpsc::TrySendError::Full(job)) => {
+            link.health.dequeue();
+            if shed_on_full {
+                counters.shed_total += 1;
+                let id = Json::parse(&job.line).ok().and_then(|j| {
+                    j.get("id").and_then(|v| v.as_i64())
+                });
+                let _ = job.reply.send(shed_reply(id));
+                false
+            } else {
+                link.health.enqueue();
+                if link.tx.send(job).is_err() {
+                    link.health.dequeue();
+                    false
+                } else {
+                    true
+                }
+            }
+        }
+        Err(mpsc::TrySendError::Disconnected(job)) => {
+            link.health.dequeue();
+            let _ = job.reply.send(error_reply(None, "replica unavailable"));
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+    use crate::obs::prometheus::parses_as_exposition;
+    use std::sync::Mutex;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            d_mlp: 256,
+            patch_dim: 32,
+            n_patches: 16,
+            max_pos: 640,
+            dap_layer: 1,
+        }
+    }
+
+    type Seen = Arc<Mutex<Vec<String>>>;
+
+    /// A fake replica: drains its channel, acks shutdown, answers stats
+    /// with a canned snapshot, records workload lines.
+    struct FakeReplica {
+        link: ReplicaLink,
+        seen: Seen,
+        handle: std::thread::JoinHandle<()>,
+    }
+
+    fn fake_replica(stats: &str) -> FakeReplica {
+        let (tx, rx) = mpsc::sync_channel::<Job>(64);
+        let health = Arc::new(ReplicaHealth::new());
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let stats = stats.to_string();
+        let handle = {
+            let seen = seen.clone();
+            let health = health.clone();
+            std::thread::spawn(move || {
+                for job in rx {
+                    health.dequeue();
+                    if job.line.trim() == "shutdown" {
+                        let _ = job.reply.send(SHUTDOWN_OK.into());
+                        break;
+                    }
+                    let parsed = Json::parse(&job.line).ok();
+                    let kind = parsed
+                        .as_ref()
+                        .and_then(|j| j.get("kind"))
+                        .and_then(|v| v.as_str())
+                        .map(|v| v.to_string());
+                    match kind.as_deref() {
+                        Some("stats") => {
+                            let prom = parsed
+                                .as_ref()
+                                .and_then(|j| j.get("format"))
+                                .and_then(|v| v.as_str())
+                                == Some("prometheus");
+                            let reply = if prom {
+                                prometheus_reply(
+                                    "# HELP hae_fake one\n# TYPE hae_fake gauge\nhae_fake 1\n",
+                                )
+                            } else {
+                                stats.clone()
+                            };
+                            let _ = job.reply.send(reply);
+                        }
+                        _ => {
+                            seen.lock().unwrap().push(job.line.clone());
+                            let _ = job.reply.send("{\"id\":0,\"tokens\":[]}".into());
+                        }
+                    }
+                }
+            })
+        };
+        FakeReplica { link: ReplicaLink { tx, health }, seen, handle }
+    }
+
+    struct Rig {
+        tx: mpsc::SyncSender<Job>,
+        router: std::thread::JoinHandle<RouterCounters>,
+        fakes: Vec<(Seen, std::thread::JoinHandle<()>)>,
+        links: Vec<ReplicaLink>,
+    }
+
+    /// Spin up `n` fakes plus a router thread over them.
+    fn rig(n: usize, cfg: RouterConfig, stats: &str) -> Rig {
+        let mut links = Vec::new();
+        let mut links_for_router = Vec::new();
+        let mut fakes = Vec::new();
+        for _ in 0..n {
+            let f = fake_replica(stats);
+            links.push(ReplicaLink { tx: f.link.tx.clone(), health: f.link.health.clone() });
+            links_for_router.push(f.link);
+            fakes.push((f.seen, f.handle));
+        }
+        let (tx, rx) = mpsc::sync_channel::<Job>(64);
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let router = std::thread::spawn(move || {
+            router_loop(rx, &m, &g, &links_for_router, &cfg)
+        });
+        Rig { tx, router, fakes, links }
+    }
+
+    impl Rig {
+        /// One request/reply round trip through the router.
+        fn ask(&self, line: &str) -> String {
+            let (rtx, rrx) = mpsc::channel::<String>();
+            self.tx.send(Job { line: line.into(), reply: rtx }).unwrap();
+            rrx.recv_timeout(Duration::from_secs(10)).expect("router replied")
+        }
+
+        fn shutdown(self) -> (RouterCounters, Vec<Vec<String>>) {
+            let ok = self.ask("shutdown");
+            assert_eq!(ok, SHUTDOWN_OK);
+            let counters = self.router.join().unwrap();
+            let mut seen = Vec::new();
+            for (s, h) in self.fakes {
+                h.join().unwrap();
+                seen.push(s.lock().unwrap().clone());
+            }
+            (counters, seen)
+        }
+    }
+
+    const CANNED: &str = r#"{"kind":"stats","submitted":3,"completed":2,"failed":0,"queue_depth":1,"refcount_errors":0,"prefix_hits":1,"prefix_partial_hits":1,"prefix_misses":2,"live_pages":5,"pool_pages":10}"#;
+
+    fn wait_until_drained(r: &Rig) {
+        // workload replies arrive per line, so asks are already synchronous
+        for link in &r.links {
+            for _ in 0..200 {
+                if link.health.admission_depth() == 0 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_routes_one_image_to_one_replica() {
+        let r = rig(2, RouterConfig::default(), CANNED);
+        for (i, line) in [
+            r#"{"id":1,"kind":"qa","image_seed":7,"q":"color"}"#,
+            r#"{"id":2,"kind":"qa","image_seed":7,"q":"shape"}"#,
+            r#"{"id":3,"kind":"qa","image_seed":7,"turn":0}"#,
+            r#"{"id":4,"kind":"qa","image_seed":7,"turn":3}"#,
+        ]
+        .iter()
+        .enumerate()
+        {
+            let reply = r.ask(line);
+            assert!(reply.contains("tokens"), "line {} got {}", i, reply);
+        }
+        let (counters, seen) = r.shutdown();
+        assert_eq!(counters.routed_affinity, 4);
+        assert_eq!(counters.routed_least_loaded, 0);
+        let (a, b) = (seen[0].len(), seen[1].len());
+        assert_eq!(a + b, 4);
+        assert!(
+            a == 4 || b == 4,
+            "same image split across replicas: {} / {}",
+            a,
+            b
+        );
+    }
+
+    #[test]
+    fn seeded_story_requests_also_route_by_affinity() {
+        // "seed" makes the whole prompt (vision segments included)
+        // deterministic, so the hash is stable across repeats
+        let r = rig(2, RouterConfig::default(), CANNED);
+        for _ in 0..3 {
+            r.ask(r#"{"id":1,"kind":"qa","seed":42}"#);
+        }
+        let (counters, seen) = r.shutdown();
+        assert_eq!(counters.routed_affinity, 3);
+        assert!(seen[0].len() == 3 || seen[1].len() == 3, "seeded repeats split");
+    }
+
+    #[test]
+    fn text_only_requests_go_least_loaded() {
+        let r = rig(2, RouterConfig::default(), CANNED);
+        // pin replica 0 as "busy": deep fake backlog
+        for _ in 0..50 {
+            r.links[0].health.enqueue();
+        }
+        for _ in 0..3 {
+            let reply = r.ask(r#"{"id":5,"kind":"story"}"#);
+            assert!(reply.contains("tokens"), "{}", reply);
+        }
+        for _ in 0..50 {
+            r.links[0].health.dequeue();
+        }
+        let (counters, seen) = r.shutdown();
+        assert_eq!(counters.routed_least_loaded, 3);
+        assert_eq!(seen[1].len(), 3, "all text-only lines avoided the busy replica");
+    }
+
+    #[test]
+    fn round_robin_ignores_content() {
+        let cfg = RouterConfig { policy: RouterPolicy::RoundRobin, ..Default::default() };
+        let r = rig(2, cfg, CANNED);
+        for _ in 0..6 {
+            r.ask(r#"{"id":1,"kind":"qa","image_seed":7}"#);
+        }
+        let (counters, seen) = r.shutdown();
+        assert_eq!(counters.routed_round_robin, 6);
+        assert_eq!(seen[0].len(), 3);
+        assert_eq!(seen[1].len(), 3);
+    }
+
+    #[test]
+    fn shed_reply_is_typed_and_echoes_id() {
+        let cfg = RouterConfig { shed_queue: Some(0), ..Default::default() };
+        let r = rig(2, cfg, CANNED);
+        let reply = r.ask(r#"{"id":9,"kind":"qa","image_seed":7}"#);
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("error"));
+        assert_eq!(j.get("reason").and_then(|v| v.as_str()), Some("shed"));
+        assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(9));
+        let (counters, seen) = r.shutdown();
+        assert_eq!(counters.shed_total, 1);
+        assert!(seen[0].is_empty() && seen[1].is_empty(), "shed line must not reach a replica");
+    }
+
+    #[test]
+    fn control_verbs_are_never_shed() {
+        let cfg = RouterConfig { shed_queue: Some(0), ..Default::default() };
+        let r = rig(2, cfg, CANNED);
+        let j = Json::parse(&r.ask(r#"{"kind":"stats"}"#)).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("stats"));
+        r.shutdown();
+    }
+
+    #[test]
+    fn spill_moves_hot_primary_traffic_to_stable_second_choice() {
+        let cfg = RouterConfig { spill_occupancy: Some(0.9), ..Default::default() };
+        let r = rig(2, cfg, CANNED);
+        // find the primary the ring picks for this image, then mark it hot
+        let m = meta();
+        let g = StoryGrammar::uniform();
+        let mut b = RequestBuilder::new(&m, &g, 1);
+        let line = r#"{"id":1,"kind":"qa","image_seed":7}"#;
+        let (_, req) = synthesize(&Json::parse(line).unwrap(), &m, &g, &mut b).unwrap();
+        let h = crate::prefix::vision_affinity_hash(&req).unwrap();
+        let ring = HashRing::new(2, DEFAULT_VNODES);
+        let primary = ring.primary(h).unwrap() as usize;
+        let second = ring.second(h).unwrap() as usize;
+        r.links[primary].health.publish(0, 0, 95, 100, 1.0); // 95% occupancy
+        for _ in 0..3 {
+            r.ask(line);
+        }
+        wait_until_drained(&r);
+        let (counters, seen) = r.shutdown();
+        assert_eq!(counters.spill_total, 3);
+        assert_eq!(seen[second].len(), 3, "spilled to the ring's second choice");
+        assert!(seen[primary].is_empty());
+    }
+
+    #[test]
+    fn cold_pool_never_spills() {
+        let cfg = RouterConfig { spill_occupancy: Some(0.9), ..Default::default() };
+        let r = rig(2, cfg, CANNED);
+        r.ask(r#"{"id":1,"kind":"qa","image_seed":7}"#);
+        let (counters, _) = r.shutdown();
+        assert_eq!(counters.spill_total, 0, "unpublished health must read as cold");
+    }
+
+    #[test]
+    fn merged_stats_sums_replica_counters() {
+        let r = rig(2, RouterConfig::default(), CANNED);
+        let j = Json::parse(&r.ask(r#"{"kind":"stats"}"#)).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("stats"));
+        assert_eq!(j.get("replicas").and_then(|v| v.as_usize()), Some(2));
+        // each canned replica reports submitted=3 → aggregate 6
+        assert_eq!(j.get("submitted").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(j.get("live_pages").and_then(|v| v.as_usize()), Some(10));
+        assert_eq!(j.get("refcount_errors").and_then(|v| v.as_usize()), Some(0));
+        // rate recomputed from summed counts: (2+2)/(2+2+4)
+        let rate = j.get("prefix_hit_rate").and_then(|v| v.as_f64()).unwrap();
+        assert!((rate - 0.5).abs() < 1e-9, "{}", rate);
+        let per = j.get("per_replica").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].get("submitted").and_then(|v| v.as_usize()), Some(3));
+        assert!(j.path(&["router", "shed_total"]).is_some());
+        r.shutdown();
+    }
+
+    #[test]
+    fn merged_prometheus_has_each_series_once() {
+        let r = rig(2, RouterConfig::default(), CANNED);
+        r.ask(r#"{"id":1,"kind":"qa","image_seed":7}"#);
+        wait_until_drained(&r);
+        let j = Json::parse(&r.ask(r#"{"kind":"stats","format":"prometheus"}"#)).unwrap();
+        let body = j.get("body").and_then(|v| v.as_str()).unwrap();
+        assert!(parses_as_exposition(body), "{}", body);
+        assert!(body.contains("hae_router_shed_total 0"));
+        assert!(body.contains("hae_router_routed_affinity_total 1"));
+        assert!(body.contains("hae_requests_submitted_total 6"));
+        assert!(body.contains("hae_router_replica_queue_depth{replica=\"1\"}"));
+        // series (name + labels) must be unique — a scraper seeing the
+        // same sample twice rejects the whole scrape
+        let mut ids: Vec<&str> = body
+            .lines()
+            .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+            .map(|l| l.rsplit_once(' ').map(|(id, _)| id).unwrap_or(l))
+            .collect();
+        let total = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), total, "duplicate series in merged exposition");
+        r.shutdown();
+    }
+
+    #[test]
+    fn single_replica_prometheus_appends_router_series() {
+        let r = rig(1, RouterConfig::default(), CANNED);
+        let j = Json::parse(&r.ask(r#"{"kind":"stats","format":"prometheus"}"#)).unwrap();
+        let body = j.get("body").and_then(|v| v.as_str()).unwrap();
+        assert!(body.contains("hae_fake 1"), "replica body preserved: {}", body);
+        assert!(body.contains("hae_router_replicas 1"));
+        assert!(parses_as_exposition(body), "{}", body);
+        r.shutdown();
+    }
+
+    #[test]
+    fn single_replica_stats_pass_through_untouched() {
+        let r = rig(1, RouterConfig::default(), CANNED);
+        // byte-identical passthrough: the replica's reply IS the reply
+        assert_eq!(r.ask(r#"{"kind":"stats"}"#), CANNED);
+        r.shutdown();
+    }
+
+    #[test]
+    fn merged_trace_concatenates_and_sorts_events() {
+        let a = r#"{"kind":"trace","count":1,"dropped":0,"events":[{"id":1,"at_us":50,"event":"enqueued"}]}"#;
+        let b = r#"{"kind":"trace","count":1,"dropped":2,"events":[{"id":2,"at_us":10,"event":"enqueued"}]}"#;
+        let merged = merged_trace(vec![
+            Some(Json::parse(a).unwrap()),
+            Some(Json::parse(b).unwrap()),
+            None,
+        ]);
+        assert_eq!(merged.get("count").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(merged.get("dropped").and_then(|v| v.as_usize()), Some(2));
+        let ev = merged.get("events").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].get("id").and_then(|v| v.as_i64()), Some(2), "sorted by at_us");
+    }
+
+    #[test]
+    fn router_policy_parses() {
+        assert_eq!(RouterPolicy::parse("affinity"), Some(RouterPolicy::Affinity));
+        assert_eq!(RouterPolicy::parse("round_robin"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(RouterPolicy::parse("rr"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(RouterPolicy::parse("nope"), None);
+        assert!(RouterPolicy::accepted().contains("affinity"));
+    }
+
+    #[test]
+    fn health_saturates_and_scores() {
+        let h = ReplicaHealth::new();
+        h.dequeue(); // must not wrap
+        assert_eq!(h.admission_depth(), 0);
+        h.enqueue();
+        h.enqueue();
+        h.publish(3, 2, 8, 10, 0.5);
+        assert_eq!(h.admission_depth(), 5);
+        assert_eq!(h.load_score(), 7);
+        assert!((h.pool_occupancy() - 0.8).abs() < 1e-9);
+        assert!((h.slo_attainment() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,234 @@
+//! Consistent hash ring with virtual nodes.
+//!
+//! The routing tier's placement function: a request's vision-segment
+//! content hash (`prefix::vision_affinity_hash`, the same 64-bit FNV the
+//! prefix cache keys on) is looked up on the ring, and the owning
+//! replica is the one whose prefix cache already holds that image. The
+//! consistent-hashing property is what makes replica membership changes
+//! cheap: adding or removing one replica remaps only ~K/N of K keys (the
+//! keys the ring assigned to the changed replica), so the other
+//! replicas' warm prefix caches stay warm.
+//!
+//! Virtual nodes (default [`DEFAULT_VNODES`] points per replica) smooth
+//! the ownership split: with a single point per replica the arc lengths
+//! — and therefore the load split — would be wildly uneven.
+
+/// Points each replica contributes to the ring. 64 keeps the max/min
+/// ownership ratio near 1 for small N while the ring stays a few KiB.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// splitmix64 — the point hash. Deterministic in (replica, vnode), so
+/// two rings built from the same membership are identical, which is what
+/// makes "add the replica back" restore the original placement exactly.
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Hash ring: sorted (point, replica) pairs; a key is owned by the first
+/// point clockwise from its hash.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// sorted by point; ties broken by replica id (points are 64-bit
+    /// splitmix outputs, so ties are astronomically unlikely, but the
+    /// order must still be deterministic)
+    points: Vec<(u64, u32)>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    /// Ring over replicas `0..n` with `vnodes` points each.
+    pub fn new(n: u32, vnodes: usize) -> HashRing {
+        let mut ring = HashRing { points: Vec::new(), vnodes: vnodes.max(1) };
+        for r in 0..n {
+            ring.add(r);
+        }
+        ring
+    }
+
+    /// Add one replica's points (no-op if already present).
+    pub fn add(&mut self, replica: u32) {
+        if self.points.iter().any(|&(_, r)| r == replica) {
+            return;
+        }
+        for v in 0..self.vnodes {
+            let p = splitmix64(((replica as u64) << 32) ^ v as u64);
+            self.points.push((p, replica));
+        }
+        self.points.sort_unstable();
+    }
+
+    /// Remove one replica's points (no-op if absent).
+    pub fn remove(&mut self, replica: u32) {
+        self.points.retain(|&(_, r)| r != replica);
+    }
+
+    /// Live replica count (not point count).
+    pub fn replicas(&self) -> usize {
+        let mut seen: Vec<u32> = self.points.iter().map(|&(_, r)| r).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Index of the first point clockwise from `key` (wrapping).
+    fn first_at_or_after(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let i = self.points.partition_point(|&(p, _)| p < key);
+        Some(if i == self.points.len() { 0 } else { i })
+    }
+
+    /// Owning replica of `key`: first point clockwise from its position.
+    pub fn primary(&self, key: u64) -> Option<u32> {
+        self.first_at_or_after(key).map(|i| self.points[i].1)
+    }
+
+    /// Second choice: the first point clockwise owned by a *different*
+    /// replica than the primary — the spill target when the primary's
+    /// pool is hot. None when the ring has fewer than two replicas.
+    pub fn second(&self, key: u64) -> Option<u32> {
+        let start = self.first_at_or_after(key)?;
+        let primary = self.points[start].1;
+        for off in 1..self.points.len() {
+            let (_, r) = self.points[(start + off) % self.points.len()];
+            if r != primary {
+                return Some(r);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<u64> {
+        // deterministic key stream, disjoint from the point-hash inputs
+        (0..n).map(|i| splitmix64(0xFEED_0000 ^ ((i as u64) << 7))).collect()
+    }
+
+    #[test]
+    fn same_key_same_replica_deterministically() {
+        let a = HashRing::new(4, DEFAULT_VNODES);
+        let b = HashRing::new(4, DEFAULT_VNODES);
+        for k in keys(1000) {
+            assert_eq!(a.primary(k), b.primary(k));
+            assert_eq!(a.primary(k), a.primary(k));
+        }
+    }
+
+    #[test]
+    fn ownership_is_roughly_balanced() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        let mut owned = [0usize; 4];
+        let ks = keys(10_000);
+        for &k in &ks {
+            owned[ring.primary(k).unwrap() as usize] += 1;
+        }
+        // loose bound: every replica owns a real share (perfect = 2500)
+        for (r, &n) in owned.iter().enumerate() {
+            assert!(n > 1000, "replica {} owns only {} of 10k keys", r, n);
+        }
+    }
+
+    #[test]
+    fn removing_a_replica_remaps_only_its_own_keys() {
+        let full = HashRing::new(4, DEFAULT_VNODES);
+        let mut less = full.clone();
+        less.remove(2);
+        let ks = keys(10_000);
+        let mut moved = 0usize;
+        for &k in &ks {
+            let before = full.primary(k).unwrap();
+            let after = less.primary(k).unwrap();
+            assert_ne!(after, 2, "removed replica still owns a key");
+            if before != after {
+                // the consistent-hashing property: only keys the removed
+                // replica owned may move
+                assert_eq!(before, 2, "key moved off a surviving replica");
+                moved += 1;
+            }
+        }
+        // ~K/N keys move (the removed replica's share); 2x slack for
+        // vnode arc-length variance
+        assert!(moved > 0, "removal remapped nothing");
+        assert!(
+            moved < ks.len() / 4 * 2,
+            "removal remapped {} of {} keys (> 2x K/N)",
+            moved,
+            ks.len()
+        );
+    }
+
+    #[test]
+    fn adding_a_replica_back_restores_placement() {
+        let full = HashRing::new(4, DEFAULT_VNODES);
+        let mut churn = full.clone();
+        churn.remove(2);
+        churn.add(2);
+        for k in keys(2000) {
+            assert_eq!(full.primary(k), churn.primary(k));
+        }
+        assert_eq!(churn.replicas(), 4);
+    }
+
+    #[test]
+    fn adding_a_replica_remaps_at_most_its_share() {
+        let small = HashRing::new(3, DEFAULT_VNODES);
+        let mut grown = small.clone();
+        grown.add(3);
+        let ks = keys(10_000);
+        let mut moved = 0usize;
+        for &k in &ks {
+            let before = small.primary(k).unwrap();
+            let after = grown.primary(k).unwrap();
+            if before != after {
+                // a key only moves by landing on the new replica
+                assert_eq!(after, 3, "growth moved a key between old replicas");
+                moved += 1;
+            }
+        }
+        assert!(moved > 0);
+        assert!(moved < ks.len() / 4 * 2, "growth remapped {} keys", moved);
+    }
+
+    #[test]
+    fn second_choice_differs_from_primary() {
+        let ring = HashRing::new(2, DEFAULT_VNODES);
+        for k in keys(1000) {
+            let p = ring.primary(k).unwrap();
+            let s = ring.second(k).unwrap();
+            assert_ne!(p, s);
+        }
+        // deterministic as well — the spill target is stable per image
+        let again = HashRing::new(2, DEFAULT_VNODES);
+        for k in keys(200) {
+            assert_eq!(ring.second(k), again.second(k));
+        }
+    }
+
+    #[test]
+    fn degenerate_rings() {
+        let empty = HashRing::new(0, DEFAULT_VNODES);
+        assert!(empty.is_empty());
+        assert_eq!(empty.primary(123), None);
+        assert_eq!(empty.second(123), None);
+        let one = HashRing::new(1, DEFAULT_VNODES);
+        assert_eq!(one.primary(123), Some(0));
+        assert_eq!(one.second(123), None, "no distinct second on a 1-ring");
+        assert_eq!(one.replicas(), 1);
+    }
+}

@@ -53,27 +53,36 @@
 //!             line carried one)
 //!
 //! Architecture: acceptor + per-connection reader/writer threads feed a
-//! channel into the scheduler loop on the caller's thread. Device work
-//! runs on the engine's dedicated device thread (the PJRT client is
-//! `!Send` — see `device::spawn` and docs/CONCURRENCY.md), which is what
-//! lets the scheduler loop pipeline: with `engine_threads > 1` each
-//! round submits the decode batch, then spends the device window
-//! delivering finished replies, draining the ingest channel and
-//! backfilling free lanes (admission + prefill of the next candidates)
-//! before collecting the step. `engine_threads == 1` keeps the strictly
-//! sequential round — the measured baseline in
+//! channel into the *router loop* on the caller's thread
+//! (`router::router_loop` — consistent-hash placement on the request's
+//! vision-segment content hash, plus shed/spill; see docs/SERVING.md).
+//! The router forwards each line to one of N replica threads
+//! (`hae-replica-<i>`), and each replica runs the scheduler loop over
+//! its own engine, `PagePool`, prefix cache and ingest mailbox. With
+//! `--replicas 1` (the default) the router is a transparent passthrough
+//! and the wire behavior is the single-engine server's.
+//!
+//! Device work runs on each engine's dedicated device thread (the PJRT
+//! client is `!Send` — see `device::spawn` and docs/CONCURRENCY.md),
+//! which is what lets the scheduler loop pipeline: with
+//! `engine_threads > 1` each round submits the decode batch, then spends
+//! the device window delivering finished replies, draining the ingest
+//! mailbox and backfilling free lanes (admission + prefill of the next
+//! candidates) before collecting the step. `engine_threads == 1` keeps
+//! the strictly sequential round — the measured baseline in
 //! `benches/perf_serve_batch.rs`. Either way, requests join free decode
 //! lanes mid-flight under KV-budget admission control, and each response
 //! flows back through its connection's channel the moment that request
 //! finishes — short requests are never serialized behind long
 //! generations admitted earlier.
 //!
-//! Shutdown is a drain, not an abort: the flag flips, connection readers
-//! notice within one read-timeout, the acceptor is popped out of
-//! `accept` by a self-connection and *joins* every connection thread,
-//! and `serve_on` joins the acceptor — so when it returns, no server
-//! thread is left running and the device thread has been joined by the
-//! engine drop.
+//! Shutdown is a drain, not an abort: the router broadcasts the shutdown
+//! line to every replica, the flag flips, connection readers notice
+//! within one read-timeout, the acceptor is popped out of `accept` by a
+//! self-connection and *joins* every connection thread, and
+//! `serve_replicas_on` joins the acceptor and every replica thread — so
+//! when it returns, no server thread is left running and every device
+//! thread has been joined by its engine's drop at replica exit.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -85,6 +94,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::Engine;
 use crate::model::{vocab, ModelMeta};
+use crate::router::{router_loop, ReplicaHealth, ReplicaLink, RouterConfig, RouterPolicy};
 use crate::scheduler::{SchedOutcome, SchedPolicy, Scheduler, SchedulerConfig, SloTable};
 use crate::util::json::{num, obj, s, Json};
 use crate::workload::{RequestBuilder, StoryGrammar, WorkloadKind};
@@ -93,18 +103,31 @@ pub struct ServerConfig {
     pub addr: String,
     /// max requests waiting for admission before graceful rejection
     pub queue_depth: usize,
-    /// aggregate live-KV budget in bytes (None → engine ceiling)
+    /// aggregate live-KV budget in bytes (None → engine ceiling),
+    /// applied per replica
     pub kv_budget: Option<usize>,
     pub sched_policy: SchedPolicy,
     /// 1 = strictly sequential scheduler rounds (submit and collect
     /// back-to-back — the measured baseline); ≥2 = pipelined rounds that
-    /// overlap host work with the device window. There is always exactly
-    /// one scheduler thread and one device thread; this selects the
-    /// overlap discipline between them.
+    /// overlap host work with the device window. Per replica there is
+    /// always exactly one scheduler thread and one device thread; this
+    /// selects the overlap discipline between them.
     pub engine_threads: usize,
     /// per-class latency SLO targets (`--slo class=ttft_ms:e2e_ms,...`);
     /// empty = no attainment accounting
     pub slo: SloTable,
+    /// how the router places workload lines across replicas
+    /// (`--router affinity|round_robin`; round_robin is the bench
+    /// control arm)
+    pub router_policy: RouterPolicy,
+    /// shed with the typed `{"kind":"error","reason":"shed"}` reply when
+    /// the target replica's admission depth reaches this bound
+    /// (`--shed-queue N`; None = never shed)
+    pub shed_queue: Option<usize>,
+    /// spill affinity traffic to the ring's second choice when the
+    /// primary's pool occupancy is at or above this fraction
+    /// (`--spill-occupancy F`; None = never spill)
+    pub spill_occupancy: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -116,13 +139,19 @@ impl Default for ServerConfig {
             sched_policy: SchedPolicy::Fifo,
             engine_threads: 2,
             slo: SloTable::default(),
+            router_policy: RouterPolicy::Affinity,
+            shed_queue: None,
+            spill_occupancy: None,
         }
     }
 }
 
-struct Job {
-    line: String,
-    reply: mpsc::Sender<String>,
+/// One raw request line plus the channel its reply goes back on — the
+/// unit of work between connection threads, the router, and each
+/// replica's scheduler loop.
+pub(crate) struct Job {
+    pub(crate) line: String,
+    pub(crate) reply: mpsc::Sender<String>,
 }
 
 /// Scheduler tag: everything needed to answer a request later.
@@ -135,7 +164,7 @@ struct JobTag {
 /// A "seed" field draws the prompt from a fresh builder at that seed so
 /// identical request lines produce identical prompts on any connection;
 /// without it the connection-shared builder stream is used.
-fn synthesize(
+pub(crate) fn synthesize(
     j: &Json,
     meta: &ModelMeta,
     grammar: &StoryGrammar,
@@ -213,7 +242,7 @@ fn respond(id: i64, ar: &crate::coordinator::ActiveRequest) -> String {
 
 /// JSON error object, escaped through the serializer and echoing the
 /// request id when one is known.
-fn error_reply(id: Option<i64>, err: &str) -> String {
+pub(crate) fn error_reply(id: Option<i64>, err: &str) -> String {
     let mut fields = vec![("error", s(err))];
     if let Some(id) = id {
         fields.push(("id", num(id as f64)));
@@ -305,15 +334,29 @@ fn deliver(outcome: SchedOutcome<JobTag>) {
 }
 
 /// Run the server until `shutdown` (a line "shutdown" on any connection).
-/// Blocks the calling thread with the engine/scheduler loop. Binds
-/// `cfg.addr` (port 0 picks a free port) and delegates to [`serve_on`];
-/// callers that need the chosen port bind their own listener and call
-/// `serve_on` directly (`harness::spawn_server` does — a fixed test
-/// port is a collision flake waiting for parallel CI binaries).
+/// Blocks the calling thread with the router loop; the engine's
+/// scheduler loop runs on its own replica thread. Binds `cfg.addr`
+/// (port 0 picks a free port); callers that need the chosen port bind
+/// their own listener and call [`serve_on`] / [`serve_replicas_on`]
+/// directly (`harness::spawn_server` does — a fixed test port is a
+/// collision flake waiting for parallel CI binaries).
 pub fn serve(engine: Engine, cfg: ServerConfig, grammar: StoryGrammar) -> Result<()> {
+    serve_replicas(vec![engine], cfg, grammar)
+}
+
+/// [`serve`] over N engine replicas behind one listener — the in-process
+/// half of prefix-affinity sharded serving (ROADMAP item 2). Engines are
+/// constructed by the caller (`--replicas N` builds N from one artifact
+/// dir); each owns its own `PagePool`, prefix cache and device thread,
+/// and runs its own scheduler loop on its own thread behind the router.
+pub fn serve_replicas(
+    engines: Vec<Engine>,
+    cfg: ServerConfig,
+    grammar: StoryGrammar,
+) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
-    serve_on(engine, listener, cfg, grammar)
+    serve_replicas_on(engines, listener, cfg, grammar)
 }
 
 /// [`serve`] on an already-bound listener (the engine is constructed by
@@ -321,21 +364,41 @@ pub fn serve(engine: Engine, cfg: ServerConfig, grammar: StoryGrammar) -> Result
 /// listener is — so tests bind port 0, read the port back, and hand the
 /// listener in).
 pub fn serve_on(
-    mut engine: Engine,
+    engine: Engine,
     listener: TcpListener,
     cfg: ServerConfig,
     grammar: StoryGrammar,
 ) -> Result<()> {
+    serve_replicas_on(vec![engine], listener, cfg, grammar)
+}
+
+/// [`serve_replicas`] on an already-bound listener. The calling thread
+/// runs the router loop; each replica's scheduler loop runs on a
+/// `hae-replica-<i>` thread over its own ingest mailbox. Shutdown is a
+/// full drain: the router broadcasts the shutdown line to every replica,
+/// the acceptor joins its connection threads, and this function joins
+/// the acceptor AND every replica thread — so when it returns, no server
+/// thread is left running and every device thread has been joined by its
+/// engine's drop at replica exit.
+pub fn serve_replicas_on(
+    engines: Vec<Engine>,
+    listener: TcpListener,
+    cfg: ServerConfig,
+    grammar: StoryGrammar,
+) -> Result<()> {
+    if engines.is_empty() {
+        bail!("serve_replicas_on needs at least one engine");
+    }
     let local_addr = listener.local_addr()?;
-    eprintln!("hae-serve listening on {}", local_addr);
-    // mailbox between connection threads and the engine thread; the
-    // scheduler's admission queue is the real (rejecting) queue, so this
-    // only needs enough slack that ingest drains stay cheap
+    eprintln!("hae-serve listening on {} ({} replicas)", local_addr, engines.len());
+    // mailbox between connection threads and the router; each replica's
+    // scheduler admission queue is the real (rejecting) queue, so this
+    // only needs enough slack that router classification stays cheap
     let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1) * 4);
     let shutdown = Arc::new(AtomicBool::new(false));
 
     // acceptor thread — unblocked at shutdown by a self-connection from
-    // the scheduler loop (listener.incoming() cannot time out). It keeps
+    // the router loop (listener.incoming() cannot time out). It keeps
     // every connection thread's handle and joins them on exit, so joining
     // the acceptor proves the whole listener side has terminated.
     let acceptor = {
@@ -364,11 +427,101 @@ pub fn serve_on(
             })?
     };
 
-    // scheduler loop on this thread; device calls run on the engine's
-    // dedicated device thread behind `engine.device()`
+    let meta = engines[0].meta().clone();
+    let grammar = Arc::new(grammar);
+    let mut links: Vec<ReplicaLink> = Vec::new();
+    let mut replicas: Vec<std::thread::JoinHandle<Result<()>>> = Vec::new();
+    for (i, engine) in engines.into_iter().enumerate() {
+        // per-replica ingest mailbox, sized like the shared one so a
+        // burst at one replica backpressures (or sheds) at the same
+        // depth the single-engine server always has
+        let (rtx, rrx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1) * 4);
+        let health = Arc::new(ReplicaHealth::new());
+        links.push(ReplicaLink { tx: rtx, health: health.clone() });
+        let rcfg = ReplicaCfg {
+            queue_depth: cfg.queue_depth,
+            kv_budget: cfg.kv_budget,
+            sched_policy: cfg.sched_policy,
+            engine_threads: cfg.engine_threads,
+            slo: cfg.slo.clone(),
+        };
+        let grammar = grammar.clone();
+        let main_tx = tx.clone();
+        replicas.push(
+            std::thread::Builder::new()
+                .name(format!("hae-replica-{}", i))
+                .spawn(move || replica_loop(engine, rrx, grammar, rcfg, health, main_tx))?,
+        );
+    }
+
+    // router loop on this thread until a shutdown line (or a replica's
+    // fatal error, surfaced as a synthetic shutdown). It consumes and
+    // drops rx, so connection threads blocked in a full mailbox send
+    // error out instead of deadlocking the acceptor join below.
+    let router_cfg = RouterConfig {
+        policy: cfg.router_policy,
+        shed_queue: cfg.shed_queue,
+        spill_occupancy: cfg.spill_occupancy,
+    };
+    router_loop(rx, &meta, &grammar, &links, &router_cfg);
+    // dropping the links closes every replica mailbox: a replica that
+    // somehow missed the shutdown broadcast still exits on disconnect
+    drop(links);
+
+    // prompt shutdown: flag first, then self-connect to pop the acceptor
+    // out of listener.incoming()
+    shutdown.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(local_addr);
+    let _ = acceptor.join();
+    let mut fatal: Option<anyhow::Error> = None;
+    for r in replicas {
+        match r.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => fatal = fatal.or(Some(e)),
+            Err(_) => {
+                fatal = fatal.or_else(|| Some(anyhow!("replica scheduler thread panicked")))
+            }
+        }
+    }
+    match fatal {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Per-replica slice of [`ServerConfig`]: what one scheduler thread
+/// needs.
+struct ReplicaCfg {
+    queue_depth: usize,
+    kv_budget: Option<usize>,
+    sched_policy: SchedPolicy,
+    engine_threads: usize,
+    slo: SloTable,
+}
+
+/// One replica's scheduler loop — the single-engine serve loop, fed by
+/// the replica's own ingest mailbox instead of the listener's. Device
+/// calls run on this engine's dedicated device thread. The loop
+/// publishes health once per round (lock-free atomics; the router reads
+/// them for shed/spill/least-loaded placement).
+///
+/// A fatal engine error drains all in-flight work with error replies and
+/// then injects a synthetic shutdown line into the shared mailbox, so
+/// the router winds the WHOLE server down — a dead replica must not
+/// leave the survivors serving a listener whose operator believes the
+/// deployment is healthy (the pre-router server died whole; N replicas
+/// keep that contract).
+fn replica_loop(
+    mut engine: Engine,
+    rx: mpsc::Receiver<Job>,
+    grammar: Arc<StoryGrammar>,
+    cfg: ReplicaCfg,
+    health: Arc<ReplicaHealth>,
+    main_tx: mpsc::SyncSender<Job>,
+) -> Result<()> {
     let meta = engine.meta().clone();
     let mut builder = RequestBuilder::new(&meta, &grammar, 0xBEEF);
-    engine.warmup()?;
+    let mut fatal: Option<anyhow::Error> = engine.warmup().err();
     let sched_cfg = SchedulerConfig {
         kv_budget: cfg.kv_budget.unwrap_or_else(|| engine.kv_budget_ceiling()),
         policy: cfg.sched_policy,
@@ -377,82 +530,85 @@ pub fn serve_on(
         ..SchedulerConfig::default()
     };
     let mut sched: Scheduler<JobTag> = Scheduler::for_engine(sched_cfg, &engine);
-    let mut fatal: Option<anyhow::Error> = None;
     let pipelined = cfg.engine_threads > 1;
 
-    'serve: loop {
-        // ingest: block only when idle, otherwise drain opportunistically
-        // between decode steps so new requests join the batch mid-flight
-        if !sched.has_work() {
-            match rx.recv() {
-                Ok(job) => {
-                    if ingest(job, &meta, &grammar, &mut builder, &mut sched)
-                        == Ingest::Shutdown
-                    {
-                        break 'serve;
-                    }
-                }
-                Err(_) => break 'serve,
-            }
-        }
-        let mut stop = drain_ingest(&rx, &meta, &grammar, &mut builder, &mut sched);
-        if stop {
-            break 'serve;
-        }
-        // one scheduling round: backfill free lanes, decode, retire. A
-        // decode error is runtime-fatal (the whole batched step failed),
-        // but outcomes are delivered first and cleanup still runs below,
-        // so every in-flight client hears why instead of an abrupt EOF
-        let tick_result = if pipelined {
-            // pipelined round: submit the decode batch, then spend the
-            // device window on host work — delivering finished replies,
-            // draining new ingest, and backfilling freed lanes — before
-            // blocking on the device reply in finish_step
-            match sched.begin_step(&mut engine) {
-                Err(e) => Err(e),
-                Ok(pending) => {
-                    if pending.is_some() {
-                        // the profiled overlap window: all host work done
-                        // while the submitted step computes on the device
-                        let t0 = sched.obs.enabled().then(std::time::Instant::now);
-                        for outcome in sched.take_outcomes() {
-                            deliver(outcome);
-                        }
-                        stop = drain_ingest(
-                            &rx, &meta, &grammar, &mut builder, &mut sched,
-                        );
-                        sched.overlap_backfill(&mut engine);
-                        if let Some(t0) = t0 {
-                            sched.obs.record(|o| {
-                                o.profile
-                                    .step_overlap_ms
-                                    .record(t0.elapsed().as_secs_f64() * 1e3);
-                            });
+    if fatal.is_none() {
+        'serve: loop {
+            // ingest: block only when idle, otherwise drain
+            // opportunistically between decode steps so new requests
+            // join the batch mid-flight
+            if !sched.has_work() {
+                match rx.recv() {
+                    Ok(job) => {
+                        health.dequeue();
+                        if ingest(job, &meta, &grammar, &mut builder, &mut sched)
+                            == Ingest::Shutdown
+                        {
+                            break 'serve;
                         }
                     }
-                    // a shutdown seen mid-flight still collects the step:
-                    // the in-flight lanes finish and reply before we drain
-                    sched.finish_step(&mut engine, pending)
+                    Err(_) => break 'serve,
                 }
             }
-        } else {
-            sched.tick(&mut engine)
-        };
-        for outcome in sched.take_outcomes() {
-            deliver(outcome);
-        }
-        if let Err(e) = tick_result {
-            fatal = Some(e);
-            break 'serve;
-        }
-        if stop {
-            break 'serve;
+            let mut stop =
+                drain_ingest(&rx, &meta, &grammar, &mut builder, &mut sched, &health);
+            publish_health(&health, &sched, &engine);
+            if stop {
+                break 'serve;
+            }
+            // one scheduling round: backfill free lanes, decode, retire. A
+            // decode error is runtime-fatal (the whole batched step failed),
+            // but outcomes are delivered first and cleanup still runs below,
+            // so every in-flight client hears why instead of an abrupt EOF
+            let tick_result = if pipelined {
+                // pipelined round: submit the decode batch, then spend the
+                // device window on host work — delivering finished replies,
+                // draining new ingest, and backfilling freed lanes — before
+                // blocking on the device reply in finish_step
+                match sched.begin_step(&mut engine) {
+                    Err(e) => Err(e),
+                    Ok(pending) => {
+                        if pending.is_some() {
+                            // the profiled overlap window: all host work done
+                            // while the submitted step computes on the device
+                            let t0 = sched.obs.enabled().then(std::time::Instant::now);
+                            for outcome in sched.take_outcomes() {
+                                deliver(outcome);
+                            }
+                            stop = drain_ingest(
+                                &rx, &meta, &grammar, &mut builder, &mut sched, &health,
+                            );
+                            sched.overlap_backfill(&mut engine);
+                            if let Some(t0) = t0 {
+                                sched.obs.record(|o| {
+                                    o.profile
+                                        .step_overlap_ms
+                                        .record(t0.elapsed().as_secs_f64() * 1e3);
+                                });
+                            }
+                        }
+                        // a shutdown seen mid-flight still collects the step:
+                        // the in-flight lanes finish and reply before we drain
+                        sched.finish_step(&mut engine, pending)
+                    }
+                }
+            } else {
+                sched.tick(&mut engine)
+            };
+            for outcome in sched.take_outcomes() {
+                deliver(outcome);
+            }
+            if let Err(e) = tick_result {
+                fatal = Some(e);
+                break 'serve;
+            }
+            if stop {
+                break 'serve;
+            }
         }
     }
 
-    // prompt shutdown: flag first, then self-connect to pop the acceptor
-    // out of listener.incoming(); in-flight work gets an error reply
-    shutdown.store(true, Ordering::SeqCst);
+    // drain: in-flight work answers, queued work hears why
     for outcome in sched.take_outcomes() {
         deliver(outcome);
     }
@@ -463,32 +619,50 @@ pub fn serve_on(
     for tag in sched.drain_tags() {
         let _ = tag.reply.send(error_reply(Some(tag.id), &reason));
     }
-    // drop our receiver so any connection thread blocked in a full
-    // mailbox send errors out instead of deadlocking the acceptor join
+    // disconnect our mailbox BEFORE the synthetic shutdown below: the
+    // router may be blocked sending into it, and that send must error
+    // out rather than deadlock against our own send into the shared
+    // mailbox it is no longer draining
     drop(rx);
-    let _ = TcpStream::connect(local_addr);
-    let _ = acceptor.join();
+    if let Some(e) = fatal {
+        let (dtx, _drx) = mpsc::channel::<String>();
+        let _ = main_tx.send(Job { line: "shutdown".into(), reply: dtx });
+        return Err(e);
+    }
+    Ok(())
     // `engine` drops here, joining the device thread (DeviceHandle drop
     // closes the request channel first, so the join cannot hang)
-    match fatal {
-        Some(e) => Err(e),
-        None => Ok(()),
-    }
 }
 
-/// Pull every queued job off the ingest mailbox without blocking.
-/// Returns `true` when a shutdown line was seen (the caller breaks its
-/// serve loop after finishing any in-flight step).
+/// Publish one round's scheduler/pool snapshot for the router. The pool
+/// lock is taken and released inside `pool_stats` — never held across
+/// anything (docs/CONCURRENCY.md lock order).
+fn publish_health(health: &ReplicaHealth, sched: &Scheduler<JobTag>, engine: &Engine) {
+    let pool = engine.pool_stats();
+    health.publish(
+        sched.queue_len(),
+        sched.lanes_occupied(),
+        pool.in_use,
+        pool.pages,
+        sched.metrics.slo_attainment(),
+    );
+}
+
+/// Pull every queued job off the replica's ingest mailbox without
+/// blocking. Returns `true` when a shutdown line was seen (the caller
+/// breaks its serve loop after finishing any in-flight step).
 fn drain_ingest(
     rx: &mpsc::Receiver<Job>,
     meta: &ModelMeta,
     grammar: &StoryGrammar,
     builder: &mut RequestBuilder,
     sched: &mut Scheduler<JobTag>,
+    health: &ReplicaHealth,
 ) -> bool {
     loop {
         match rx.try_recv() {
             Ok(job) => {
+                health.dequeue();
                 if ingest(job, meta, grammar, builder, sched) == Ingest::Shutdown {
                     return true;
                 }

@@ -1,0 +1,276 @@
+//! Router integration: real TCP round trips against the N-replica tier —
+//! merged stats, typed load shedding, occupancy spill, and the replicas=2
+//! extension of the shutdown-drain guarantee. Skipped when artifacts are
+//! absent. Unit coverage of placement/merging lives in `router::tests`;
+//! these suites prove the wire behavior end to end.
+
+use hae_serve::harness::{
+    artifact_dir, skip_or_fail, spawn_server_replicas, wait_listening, widest_batch,
+    ServerRig,
+};
+use hae_serve::router::RouterPolicy;
+use hae_serve::runtime::Runtime;
+use hae_serve::server::client_request;
+use hae_serve::util::json::Json;
+
+fn rig(replicas: usize) -> ServerRig {
+    ServerRig { batch: widest_batch(), replicas, ..ServerRig::default() }
+}
+
+/// Two replicas behind one listener: a shared-image mix round-trips, and
+/// the `{"kind":"stats"}` reply is the MERGED view — per-replica counts
+/// sum to the aggregate, both replicas appear, zero refcount errors.
+#[test]
+fn two_replica_round_trip_and_merged_stats() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) = spawn_server_replicas(rig(2));
+    assert!(wait_listening(&addr), "server came up");
+
+    // two distinct images (likely distinct ring owners) + a text story
+    let mut sent = 0i64;
+    for (i, line) in [
+        r#"{"id": 1, "kind": "qa", "image_seed": 7, "q": "color"}"#,
+        r#"{"id": 2, "kind": "qa", "image_seed": 7, "q": "shape"}"#,
+        r#"{"id": 3, "kind": "qa", "image_seed": 11, "q": "color"}"#,
+        r#"{"id": 4, "kind": "qa", "image_seed": 11, "q": "shape"}"#,
+        r#"{"id": 5, "kind": "story", "max_new": 8}"#,
+    ]
+    .iter()
+    .enumerate()
+    {
+        let resp = client_request(&addr, line).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert!(j.get("error").is_none(), "unexpected error: {}", resp);
+        assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(i as i64 + 1));
+        assert!(j.get("tokens").and_then(|v| v.as_arr()).map_or(0, |a| a.len()) > 0);
+        sent += 1;
+    }
+
+    let stats =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let _ = client_request(&addr, "shutdown");
+    handle.join().unwrap();
+
+    let get = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert_eq!(get("replicas") as i64, 2, "stats: {}", stats.to_string_compact());
+    assert_eq!(get("completed") as i64, sent);
+    assert_eq!(get("refcount_errors") as i64, 0);
+    assert_eq!(get("failed") as i64, 0);
+    let per = stats
+        .get("per_replica")
+        .and_then(|v| v.as_arr())
+        .expect("merged stats carry per_replica");
+    assert_eq!(per.len(), 2);
+    let per_sum: f64 = per
+        .iter()
+        .map(|r| r.get("completed").and_then(|v| v.as_f64()).unwrap_or(0.0))
+        .sum();
+    assert_eq!(per_sum as i64, sent, "replica counts must sum to the aggregate");
+    // the router block is present even when nothing shed or spilled
+    assert_eq!(
+        stats.path(&["router", "shed_total"]).and_then(|v| v.as_f64()),
+        Some(0.0)
+    );
+    // the affinity router actually routed by content hash
+    assert!(
+        stats
+            .path(&["router", "routed_affinity"])
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            >= 4.0,
+        "stats: {}",
+        stats.to_string_compact()
+    );
+}
+
+/// The merged Prometheus exposition at replicas=2: router series present,
+/// canonical engine series aggregated (present exactly once).
+#[test]
+fn two_replica_prometheus_is_merged() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) = spawn_server_replicas(rig(2));
+    assert!(wait_listening(&addr), "server came up");
+    let resp = client_request(&addr, r#"{"id": 1, "kind": "qa", "image_seed": 3}"#).unwrap();
+    assert!(Json::parse(&resp).unwrap().get("error").is_none(), "{}", resp);
+    let prom =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats", "format": "prometheus"}"#).unwrap())
+            .unwrap();
+    let _ = client_request(&addr, "shutdown");
+    handle.join().unwrap();
+
+    let body = prom.get("body").and_then(|v| v.as_str()).expect("prometheus body").to_string();
+    assert!(body.contains("hae_router_replicas 2"), "{}", body);
+    assert!(body.contains("hae_router_shed_total 0"), "{}", body);
+    assert!(body.contains("hae_requests_submitted_total"), "{}", body);
+    // one aggregated sample per canonical series, not one per replica
+    assert_eq!(
+        body.lines().filter(|l| l.starts_with("hae_requests_submitted_total")).count(),
+        1,
+        "{}",
+        body
+    );
+}
+
+/// A zero admission bound sheds every workload line with the typed reply
+/// — `{"kind":"error","reason":"shed"}`, id echoed — while control verbs
+/// (stats, shutdown) still pass, and shed traffic never touches a
+/// replica's pool (zero refcount errors, nothing submitted).
+#[test]
+fn bounded_queue_sheds_with_typed_reply() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) =
+        spawn_server_replicas(ServerRig { shed_queue: Some(0), ..rig(2) });
+    assert!(wait_listening(&addr), "server came up");
+
+    let burst = 6i64;
+    for i in 0..burst {
+        let line = format!(r#"{{"id": {}, "kind": "qa", "image_seed": 5}}"#, 100 + i);
+        let j = Json::parse(&client_request(&addr, &line).unwrap()).unwrap();
+        assert_eq!(j.path(&["kind"]).and_then(|v| v.as_str()), Some("error"));
+        assert_eq!(j.get("reason").and_then(|v| v.as_str()), Some("shed"));
+        assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(100 + i));
+    }
+
+    let stats =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let _ = client_request(&addr, "shutdown");
+    handle.join().unwrap();
+
+    let shed = stats.path(&["router", "shed_total"]).and_then(|v| v.as_f64());
+    assert_eq!(shed, Some(burst as f64), "stats: {}", stats.to_string_compact());
+    let get = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert_eq!(get("submitted") as i64, 0, "shed lines must never reach a scheduler");
+    assert_eq!(get("refcount_errors") as i64, 0);
+}
+
+/// A zero spill threshold marks every primary hot, so affinity traffic
+/// lands on the ring's second choice — counted by the router, still
+/// served correctly (same reply as un-spilled traffic).
+#[test]
+fn hot_pool_spills_to_second_choice() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) =
+        spawn_server_replicas(ServerRig { spill_occupancy: Some(0.0), ..rig(2) });
+    assert!(wait_listening(&addr), "server came up");
+
+    let n = 4i64;
+    for i in 0..n {
+        let line = format!(r#"{{"id": {}, "kind": "qa", "image_seed": 7, "q": "color"}}"#, i);
+        let j = Json::parse(&client_request(&addr, &line).unwrap()).unwrap();
+        assert!(j.get("error").is_none());
+        assert!(j.get("tokens").and_then(|v| v.as_arr()).map_or(0, |a| a.len()) > 0);
+    }
+
+    let stats =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let _ = client_request(&addr, "shutdown");
+    handle.join().unwrap();
+
+    assert_eq!(
+        stats.path(&["router", "spill_total"]).and_then(|v| v.as_f64()),
+        Some(n as f64),
+        "stats: {}",
+        stats.to_string_compact()
+    );
+    let get = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert_eq!(get("completed") as i64, n);
+    assert_eq!(get("refcount_errors") as i64, 0);
+    assert_eq!(get("failed") as i64, 0);
+}
+
+/// The PR 7 shutdown-drain guarantee at `--replicas 2`: `serve_replicas_on`
+/// returns only after the acceptor has joined every connection thread AND
+/// both replica scheduler threads have drained — even with an idle client
+/// connected that never sends a byte.
+#[test]
+fn shutdown_terminates_listener_and_replica_threads() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) = spawn_server_replicas(ServerRig {
+        // sequential mode must drain identically to pipelined
+        engine_threads: 1,
+        ..rig(2)
+    });
+    assert!(wait_listening(&addr), "server came up");
+
+    // an idle connection that never sends anything must not pin the
+    // server past shutdown
+    let idle = std::net::TcpStream::connect(&addr).unwrap();
+
+    // one request per likely owner so both replicas have seen work
+    for line in [
+        r#"{"id": 1, "kind": "qa", "image_seed": 7, "max_new": 4}"#,
+        r#"{"id": 2, "kind": "qa", "image_seed": 11, "max_new": 4}"#,
+    ] {
+        let j = Json::parse(&client_request(&addr, line).unwrap()).unwrap();
+        assert!(j.get("error").is_none());
+    }
+
+    let resp = client_request(&addr, "shutdown").unwrap();
+    assert!(resp.contains("shutdown"));
+    // joins acceptor + connection threads + BOTH replica threads inside
+    // serve_replicas_on; a hang here fails via the test timeout
+    handle.join().unwrap();
+    drop(idle);
+
+    // the listener socket is closed once serve_replicas_on returns: new
+    // connections are refused (or reset immediately, never serviced)
+    match std::net::TcpStream::connect(&addr) {
+        Err(_) => {}
+        Ok(mut stream) => {
+            use std::io::{Read, Write};
+            let _ = stream.write_all(b"{\"id\": 9, \"kind\": \"qa\"}\n");
+            let mut buf = Vec::new();
+            let n = stream.read_to_end(&mut buf).unwrap_or(0);
+            assert_eq!(n, 0, "dead server answered: {:?}", String::from_utf8_lossy(&buf));
+        }
+    }
+}
+
+/// Round-robin control arm round-trips too (the bench's comparison arm
+/// must not only work under the affinity policy).
+#[test]
+fn round_robin_policy_serves() {
+    if Runtime::load(&artifact_dir()).is_err() {
+        skip_or_fail("artifacts not built");
+        return;
+    }
+    let (handle, addr) = spawn_server_replicas(ServerRig {
+        router_policy: RouterPolicy::RoundRobin,
+        ..rig(2)
+    });
+    assert!(wait_listening(&addr), "server came up");
+    for i in 0..4i64 {
+        let line = format!(r#"{{"id": {}, "kind": "qa", "image_seed": 2}}"#, i);
+        let j = Json::parse(&client_request(&addr, &line).unwrap()).unwrap();
+        assert!(j.get("error").is_none());
+    }
+    let stats =
+        Json::parse(&client_request(&addr, r#"{"kind": "stats"}"#).unwrap()).unwrap();
+    let _ = client_request(&addr, "shutdown");
+    handle.join().unwrap();
+    assert_eq!(
+        stats.path(&["router", "routed_round_robin"]).and_then(|v| v.as_f64()),
+        Some(4.0),
+        "stats: {}",
+        stats.to_string_compact()
+    );
+    assert_eq!(
+        stats.get("completed").and_then(|v| v.as_f64()),
+        Some(4.0)
+    );
+}
